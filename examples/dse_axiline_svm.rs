@@ -1,0 +1,16 @@
+//! Paper §8.4 / Fig. 11: MOTPE design-space exploration of an
+//! Axiline-SVM (55 features) accelerator on NanGate45 — architectural
+//! knobs (dimension, num_cycles) and backend knobs (f_target, util),
+//! objective alpha*E + beta*A with alpha=1, beta=0.001, then the top-3
+//! winners ground-truthed against the full SP&R oracle.
+//!
+//! Run: `cargo run --release --example dse_axiline_svm [-- --quick]`
+
+use fso::coordinator::experiments::{dse, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, ..Default::default() };
+    opts.ensure_out_dir()?;
+    dse::fig11_axiline_svm(&opts)
+}

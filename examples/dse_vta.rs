@@ -1,0 +1,14 @@
+//! Paper §8.4 / Fig. 12: backend-knob DSE (f_target, util) of a fixed
+//! VTA design on GF12 with alpha=beta=1; top-3 winners checked against
+//! post-SP&R ground truth.
+//!
+//! Run: `cargo run --release --example dse_vta [-- --quick]`
+
+use fso::coordinator::experiments::{dse, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, ..Default::default() };
+    opts.ensure_out_dir()?;
+    dse::fig12_vta(&opts)
+}

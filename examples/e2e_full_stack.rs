@@ -1,0 +1,131 @@
+//! End-to-end validation driver (DESIGN.md §End-to-end validation):
+//! exercises every layer of the stack on a real small workload —
+//!
+//!   1. generators -> LHG -> backend SP&R oracle -> system simulators
+//!      produce a labelled dataset (Axiline running SVM training);
+//!   2. all five predictor families train, the ANN and GCN through the
+//!      AOT JAX/Pallas artifacts on the PJRT runtime (python is not
+//!      running — the artifacts were compiled by `make artifacts`);
+//!   3. the dynamic-batching predict server serves concurrent traffic;
+//!   4. MOTPE DSE + Eq. 3 picks a design, ground-truthed by the oracle.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example e2e_full_stack`
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use fso::backend::Enablement;
+use fso::coordinator::dse_driver::{axiline_svm_problem, DseDriver, SurrogateBundle};
+use fso::coordinator::{datagen, DatagenConfig, ModelMenu, PredictServer, TrainOptions, Trainer};
+use fso::data::Metric;
+use fso::dse::MotpeConfig;
+use fso::generators::Platform;
+use fso::models::ann::glorot_init;
+use fso::runtime::Engine;
+use fso::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let t_start = Instant::now();
+    let artifacts = fso::test_support::artifacts_dir()
+        .expect("artifacts not built — run `make artifacts`");
+
+    // ---- 1. data generation through the full substrate stack --------
+    println!("[1/4] datagen: Axiline/GF12, SVM-55 workload");
+    let cfg = DatagenConfig::small(Platform::Axiline, Enablement::Gf12);
+    let t0 = Instant::now();
+    let g = datagen::generate(&cfg)?;
+    println!(
+        "      {} rows in {:.2}s ({} ROI)",
+        g.dataset.len(),
+        t0.elapsed().as_secs_f64(),
+        g.dataset.rows.iter().filter(|r| r.in_roi).count()
+    );
+
+    // ---- 2. all five model families --------------------------------
+    println!("[2/4] training all five model families (power metric)");
+    let engine = Rc::new(Engine::load(&artifacts)?);
+    let trainer = Trainer::new(Some(engine.clone()));
+    let opts = TrainOptions { menu: ModelMenu::default(), ..Default::default() };
+    let t0 = Instant::now();
+    let report = trainer.run(&g.dataset, &g.backend_split, Metric::Power, &opts)?;
+    for (model, stats) in &report.models {
+        println!(
+            "      {model:9} muAPE {:5.2}%  MAPE {:6.2}%",
+            stats.mu_ape, stats.max_ape
+        );
+    }
+    println!(
+        "      ROI classifier acc {:.3} / F1 {:.3}; trained in {:.1}s",
+        report.roi.accuracy,
+        report.roi.f1,
+        t0.elapsed().as_secs_f64()
+    );
+    let best = report
+        .models
+        .values()
+        .map(|s| s.mu_ape)
+        .fold(f64::INFINITY, f64::min);
+    assert!(best < 10.0, "best model should be < 10% muAPE, got {best}");
+
+    // ---- 3. dynamic-batching predict server -------------------------
+    println!("[3/4] predict server: 8 concurrent clients");
+    let server = PredictServer::start(artifacts.clone())?;
+    let variant = engine.manifest.variant("ann32x4_relu")?.clone();
+    let theta: Vec<f32> = glorot_init(&variant, &mut Rng::new(7)).data().to_vec();
+    let feat = engine.manifest.feat;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..8 {
+            let client = server.client();
+            let theta = theta.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(c);
+                let rows: Vec<Vec<f32>> =
+                    (0..200).map(|_| (0..feat).map(|_| rng.f32()).collect()).collect();
+                client.predict("ann32x4_relu", &theta, rows).expect("predict");
+            });
+        }
+    });
+    let stats = server.stats()?;
+    println!(
+        "      {} rows / {} batches (occupancy {:.1}/32) in {:.3}s",
+        stats.rows,
+        stats.batches,
+        stats.mean_occupancy,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 4. MOTPE DSE + ground truth --------------------------------
+    println!("[4/4] MOTPE DSE of Axiline-SVM, 200 iterations");
+    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7)?;
+    let driver =
+        DseDriver { enablement: Enablement::Gf12, surrogate, flow_seed: cfg.seed };
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let problem = axiline_svm_problem(
+        g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max),
+        runtimes[runtimes.len() / 2],
+    );
+    let outcome = driver.run(&problem, 200, 3, MotpeConfig::default())?;
+    let feasible = outcome.points.iter().filter(|p| p.feasible).count();
+    println!("      {feasible}/200 feasible points");
+    let mut worst = 0.0f64;
+    for (rank, errs) in outcome.ground_truth_errors.iter().enumerate() {
+        let e_energy = errs[&Metric::Energy] * 100.0;
+        let e_area = errs[&Metric::Area] * 100.0;
+        println!("      top-{}: energy err {e_energy:.1}%, area err {e_area:.1}%", rank + 1);
+        for m in Metric::ALL {
+            worst = worst.max(errs[&m]);
+        }
+    }
+    println!(
+        "\nE2E OK in {:.1}s — worst top-3 prediction error {:.1}% (paper: <= 7%)",
+        t_start.elapsed().as_secs_f64(),
+        worst * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: generate a PPA + system-metric dataset for one platform,
+//! train the two-stage model (ROI classifier + GBDT regressor), and
+//! predict an unseen configuration — the framework's minimal loop.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use fso::backend::Enablement;
+use fso::coordinator::dse_driver::SurrogateBundle;
+use fso::coordinator::{datagen, DatagenConfig};
+use fso::data::Metric;
+use fso::generators::Platform;
+use fso::metrics::mape_stats;
+
+fn main() -> Result<()> {
+    // 1. Sample architectures + backend knobs and run the SP&R oracle +
+    //    system simulator over the cartesian product (paper §7.1).
+    let cfg = DatagenConfig::small(Platform::Axiline, Enablement::Gf12);
+    println!("generating dataset ({} architectures)...", cfg.n_arch);
+    let g = datagen::generate(&cfg)?;
+    println!(
+        "  {} rows, {} in ROI",
+        g.dataset.len(),
+        g.dataset.rows.iter().filter(|r| r.in_roi).count()
+    );
+
+    // 2. Fit the two-stage surrogate (ROI classifier + per-metric GBDT).
+    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7)?;
+
+    // 3. Evaluate on the held-out backend points (unseen-backend
+    //    protocol, paper Table 4).
+    let eval: Vec<usize> = g
+        .backend_split
+        .test
+        .iter()
+        .copied()
+        .filter(|&i| g.dataset.rows[i].in_roi)
+        .collect();
+    for metric in Metric::ALL {
+        let y: Vec<f64> = eval.iter().map(|&i| g.dataset.rows[i].target(metric)).collect();
+        let pred: Vec<f64> = eval
+            .iter()
+            .map(|&i| {
+                surrogate.regressors[&metric].predict_one(&g.dataset.rows[i].features_vec())
+            })
+            .collect();
+        let stats = mape_stats(&y, &pred);
+        println!(
+            "{:8} muAPE {:5.2}%  MAPE {:5.2}%",
+            metric.name(),
+            stats.mu_ape,
+            stats.max_ape
+        );
+    }
+
+    // 4. Predict one new configuration end to end.
+    let row = &g.dataset.rows[0];
+    let (in_roi, pred) = surrogate.predict(&row.features_vec());
+    println!(
+        "\nsample config -> roi={in_roi} predicted power {:.3} W (truth {:.3} W)",
+        pred[&Metric::Power], row.power_w
+    );
+    Ok(())
+}

@@ -1,0 +1,260 @@
+"""AOT pipeline: lower every predictor graph to HLO *text* + manifest.
+
+This is the only place python touches the system. `make artifacts` runs it
+once; the rust coordinator then loads `artifacts/*.hlo.txt` through the
+PJRT C API and python never appears on the train/predict path again.
+
+Interchange format is HLO text, NOT `lowered.compile()`/`.serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs under --out-dir:
+  <variant>_<kind>.hlo.txt   one per (model variant, entrypoint)
+  manifest.json              shapes, argument order, flat param layouts
+  fixtures/*.npy             golden inputs/outputs for the rust round-trip
+                             integration tests
+"""
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_VERSION = 3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def shapes_of(args):
+    return [list(a.shape) for a in args]
+
+
+def lower_and_write(fn, args, path: pathlib.Path) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    path.write_text(text)
+    return len(text)
+
+
+EPOCH_STEPS = 8  # minibatches folded into one ann train_epoch call
+
+
+def build_ann(out: pathlib.Path, cfg) -> dict:
+    layout, predict, train_step, train_epoch = M.make_ann_fns(cfg)
+    P = layout.total
+    theta, m, v = sds(P), sds(P), sds(P)
+    t, lr = sds(), sds()
+    x, y, w = sds(M.BATCH, M.FEAT), sds(M.BATCH), sds(M.BATCH)
+    xs = sds(EPOCH_STEPS, M.BATCH, M.FEAT)
+    ys = sds(EPOCH_STEPS, M.BATCH)
+    ws = sds(EPOCH_STEPS, M.BATCH)
+
+    files = {}
+    n = lower_and_write(predict, (theta, x), out / f"{cfg.name}_predict.hlo.txt")
+    files["predict"] = {
+        "file": f"{cfg.name}_predict.hlo.txt",
+        "inputs": shapes_of((theta, x)),
+        "outputs": [[M.BATCH]],
+        "bytes": n,
+    }
+    args = (theta, m, v, t, lr, x, y, w)
+    n = lower_and_write(train_step, args, out / f"{cfg.name}_train_step.hlo.txt")
+    files["train_step"] = {
+        "file": f"{cfg.name}_train_step.hlo.txt",
+        "inputs": shapes_of(args),
+        "outputs": [[P], [P], [P], []],
+        "bytes": n,
+    }
+    args = (theta, m, v, t, lr, xs, ys, ws)
+    n = lower_and_write(train_epoch, args, out / f"{cfg.name}_train_epoch.hlo.txt")
+    files["train_epoch"] = {
+        "file": f"{cfg.name}_train_epoch.hlo.txt",
+        "inputs": shapes_of(args),
+        "outputs": [[P], [P], [P], []],
+        "bytes": n,
+        "steps_per_call": EPOCH_STEPS,
+    }
+    return {
+        "kind": "ann",
+        "hidden": cfg.hidden,
+        "act": cfg.act,
+        "params": layout.to_json(),
+        "entrypoints": files,
+    }
+
+
+def build_gcn(out: pathlib.Path, cfg) -> dict:
+    layout, predict, embed, train_step = M.make_gcn_fns(cfg)
+    P = layout.total
+    theta, m, v = sds(P), sds(P), sds(P)
+    t, lr = sds(), sds()
+    nodes = sds(M.BATCH, M.NODES, M.NODE_FEAT)
+    adj = sds(M.BATCH, M.NODES, M.NODES)
+    mask = sds(M.BATCH, M.NODES)
+    gfeat = sds(M.BATCH, M.FEAT)
+    y, w = sds(M.BATCH), sds(M.BATCH)
+
+    files = {}
+    args = (theta, nodes, adj, mask, gfeat)
+    n = lower_and_write(predict, args, out / f"{cfg.name}_predict.hlo.txt")
+    files["predict"] = {
+        "file": f"{cfg.name}_predict.hlo.txt",
+        "inputs": shapes_of(args),
+        "outputs": [[M.BATCH]],
+        "bytes": n,
+    }
+    args = (theta, nodes, adj, mask)
+    n = lower_and_write(embed, args, out / f"{cfg.name}_embed.hlo.txt")
+    files["embed"] = {
+        "file": f"{cfg.name}_embed.hlo.txt",
+        "inputs": shapes_of(args),
+        "outputs": [[M.BATCH, cfg.embed_dim]],
+        "bytes": n,
+    }
+    args = (theta, m, v, t, lr, nodes, adj, mask, gfeat, y, w)
+    n = lower_and_write(train_step, args, out / f"{cfg.name}_train_step.hlo.txt")
+    files["train_step"] = {
+        "file": f"{cfg.name}_train_step.hlo.txt",
+        "inputs": shapes_of(args),
+        "outputs": [[P], [P], [P], []],
+        "bytes": n,
+    }
+    return {
+        "kind": "gcn",
+        "conv_kind": cfg.conv_kind,
+        "conv_dims": cfg.conv_dims,
+        "fc_hidden": cfg.fc_hidden,
+        "embed_dim": cfg.embed_dim,
+        "params": layout.to_json(),
+        "entrypoints": files,
+    }
+
+
+def write_fixtures(out: pathlib.Path) -> None:
+    """Golden input/output tensors for the rust round-trip tests."""
+    fx = out / "fixtures"
+    fx.mkdir(parents=True, exist_ok=True)
+
+    def save(name, arr):
+        np.save(fx / f"{name}.npy", np.asarray(arr, dtype=np.float32))
+
+    # --- ANN fixture (default variant) -------------------------------
+    cfg = M.ann_variants()[0]
+    layout, predict, train_step, _ = M.make_ann_fns(cfg)
+    key = jax.random.PRNGKey(42)
+    theta = M.glorot_init(key, layout)
+    x = jax.random.normal(jax.random.PRNGKey(7), (M.BATCH, M.FEAT))
+    y = jnp.abs(jax.random.normal(jax.random.PRNGKey(8), (M.BATCH,))) + 0.5
+    w = jnp.ones((M.BATCH,))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    pred = predict(theta, x)[0]
+    th2, m2, v2, loss = train_step(
+        theta, m, v, jnp.float32(1.0), jnp.float32(1e-3), x, y, w
+    )
+    save("ann_theta", theta)
+    save("ann_x", x)
+    save("ann_y", y)
+    save("ann_w", w)
+    save("ann_pred", pred)
+    save("ann_theta2", th2)
+    save("ann_m2", m2)
+    save("ann_v2", v2)
+    save("ann_loss", jnp.reshape(loss, (1,)))
+
+    # --- GCN fixture (default variant) -------------------------------
+    gcfg = M.gcn_variants()[0]
+    glayout, gpredict, gembed, gtrain = M.make_gcn_fns(gcfg)
+    gtheta = M.glorot_init(jax.random.PRNGKey(43), glayout)
+    nodes = jax.random.normal(jax.random.PRNGKey(9), (M.BATCH, M.NODES, M.NODE_FEAT))
+    # A plausible normalized adjacency: identity + a ring, row-normalized.
+    eye = jnp.eye(M.NODES)
+    ring = jnp.roll(eye, 1, axis=1) + jnp.roll(eye, -1, axis=1)
+    adj_1 = (eye + ring) / 3.0
+    adj = jnp.broadcast_to(adj_1, (M.BATCH, M.NODES, M.NODES))
+    mask = jnp.ones((M.BATCH, M.NODES))
+    gfeat = jax.random.normal(jax.random.PRNGKey(10), (M.BATCH, M.FEAT))
+    gpred = gpredict(gtheta, nodes, adj, mask, gfeat)[0]
+    gemb = gembed(gtheta, nodes, adj, mask)[0]
+    gth2, gm2, gv2, gloss = gtrain(
+        gtheta,
+        jnp.zeros_like(gtheta),
+        jnp.zeros_like(gtheta),
+        jnp.float32(1.0),
+        jnp.float32(1e-3),
+        nodes,
+        adj,
+        mask,
+        gfeat,
+        jnp.abs(gfeat[:, 0]) + 0.5,
+        jnp.ones((M.BATCH,)),
+    )
+    save("gcn_theta", gtheta)
+    save("gcn_nodes", nodes)
+    save("gcn_adj", adj)
+    save("gcn_mask", mask)
+    save("gcn_gfeat", gfeat)
+    save("gcn_y", jnp.abs(gfeat[:, 0]) + 0.5)
+    save("gcn_pred", gpred)
+    save("gcn_emb", gemb)
+    save("gcn_theta2", gth2)
+    save("gcn_loss", jnp.reshape(gloss, (1,)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-fixtures", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "batch": M.BATCH,
+        "feat": M.FEAT,
+        "nodes": M.NODES,
+        "node_feat": M.NODE_FEAT,
+        "epoch_steps": EPOCH_STEPS,
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        "variants": {},
+    }
+    for cfg in M.ann_variants():
+        print(f"[aot] lowering ANN variant {cfg.name} (hidden={cfg.hidden})")
+        manifest["variants"][cfg.name] = build_ann(out, cfg)
+    for cfg in M.gcn_variants():
+        print(f"[aot] lowering GCN variant {cfg.name} ({cfg.conv_kind} x{len(cfg.conv_dims)})")
+        manifest["variants"][cfg.name] = build_gcn(out, cfg)
+
+    if not args.skip_fixtures:
+        print("[aot] writing golden fixtures")
+        write_fixtures(out)
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    total = sum(
+        ep["bytes"]
+        for var in manifest["variants"].values()
+        for ep in var["entrypoints"].values()
+    )
+    print(f"[aot] wrote {len(manifest['variants'])} variants, {total/1e6:.1f} MB HLO text -> {out}")
+
+
+if __name__ == "__main__":
+    main()

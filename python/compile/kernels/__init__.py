@@ -1,0 +1,14 @@
+# L1: Pallas kernels for the predictor stack's compute hot-spots.
+from .dense import dense
+from .gcn_conv import gcn_conv, graph_conv
+from .matmul import batched_matmul, matmul
+from .pooling import masked_mean_pool
+
+__all__ = [
+    "dense",
+    "gcn_conv",
+    "graph_conv",
+    "matmul",
+    "batched_matmul",
+    "masked_mean_pool",
+]

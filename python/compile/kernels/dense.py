@@ -1,0 +1,67 @@
+"""Fused dense layer as a Pallas kernel, with a custom VJP whose backward
+pass is itself built from Pallas matmuls.
+
+`pallas_call` has no automatic differentiation rule, so the ANN/GCN
+`train_step` graphs (L2) differentiate through these layers via the
+`jax.custom_vjp` below: forward saves the pre-activation, backward
+re-expresses the three gradients as tiled matmuls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .matmul import INTERPRET, matmul
+
+
+def _dense_kernel(act, x_ref, w_ref, b_ref, z_ref, h_ref):
+    z = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    z_ref[...] = z
+    h_ref[...] = ref.apply_act(z, act)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def _dense_fwd_kernel(x, w, b, act):
+    """Returns (h, z): activated output and saved pre-activation."""
+    m, k = x.shape
+    n = w.shape[1]
+    out_shapes = (
+        jax.ShapeDtypeStruct((m, n), jnp.float32),  # z
+        jax.ShapeDtypeStruct((m, n), jnp.float32),  # h
+    )
+    z, h = pl.pallas_call(
+        functools.partial(_dense_kernel, act),
+        out_shape=out_shapes,
+        interpret=INTERPRET,
+    )(x, w, b)
+    return h, z
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, act="relu"):
+    """act(x @ w + b), x:[M,K] w:[K,N] b:[N]."""
+    h, _ = _dense_fwd_kernel(x, w, b, act)
+    return h
+
+
+def _dense_vjp_fwd(x, w, b, act):
+    h, z = _dense_fwd_kernel(x, w, b, act)
+    return h, (x, w, z)
+
+
+def _dense_vjp_bwd(act, res, g):
+    x, w, z = res
+    dz = g * ref.act_grad(z, act)
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)

@@ -1,0 +1,151 @@
+"""Graph convolution layers (GCNConv / GraphConv) as Pallas kernels over
+batched dense graphs, with custom VJPs built on Pallas matmuls.
+
+The logical hierarchy graphs (LHGs, paper §6) are tiny — a few hundred
+nodes, |E| = |V|-1 — so the adjacency is kept dense ([B, N, N]) and each
+grid program owns one whole graph: the fused chain
+    act( adj @ (nodes @ w) + b )
+is a single VMEM-resident block per graph (N<=128, F<=32 here; <=256 KiB
+of operands — see DESIGN.md §9 for the MXU/VMEM projection).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .matmul import INTERPRET, batched_matmul
+
+
+def _gcn_kernel(act, x_ref, a_ref, w_ref, b_ref, z_ref, h_ref):
+    xw = jnp.dot(x_ref[0], w_ref[...], preferred_element_type=jnp.float32)
+    z = jnp.dot(a_ref[0], xw, preferred_element_type=jnp.float32) + b_ref[...]
+    z_ref[0] = z
+    h_ref[0] = ref.apply_act(z, act)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def _gcn_fwd_kernel(nodes, adj, w, b, act):
+    bsz, n, f = nodes.shape
+    g = w.shape[1]
+    out_shapes = (
+        jax.ShapeDtypeStruct((bsz, n, g), jnp.float32),  # z
+        jax.ShapeDtypeStruct((bsz, n, g), jnp.float32),  # h
+    )
+    z, h = pl.pallas_call(
+        functools.partial(_gcn_kernel, act),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((f, g), lambda i: (0, 0)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, n, g), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, g), lambda i: (i, 0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=INTERPRET,
+    )(nodes, adj, w, b)
+    return h, z
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def gcn_conv(nodes, adj, w, b, act="relu"):
+    """GCNConv: act(adj @ (nodes @ w) + b).
+
+    nodes: [B,N,F], adj: [B,N,N] (normalized, symmetric), w: [F,G], b: [G].
+    adj is treated as a constant of the graph (no gradient).
+    """
+    h, _ = _gcn_fwd_kernel(nodes, adj, w, b, act)
+    return h
+
+
+def _gcn_vjp_fwd(nodes, adj, w, b, act):
+    h, z = _gcn_fwd_kernel(nodes, adj, w, b, act)
+    return h, (nodes, adj, w, z)
+
+
+def _gcn_vjp_bwd(act, res, g_out):
+    nodes, adj, w, z = res
+    dz = g_out * ref.act_grad(z, act)  # [B,N,G]
+    # z = A @ X @ W + b; A symmetric (normalized undirected adjacency).
+    at_dz = batched_matmul(adj, dz)  # A^T @ dz == A @ dz
+    # dW = sum_b X_b^T @ (A_b^T dz_b)
+    dw = jnp.einsum("bnf,bng->fg", nodes, at_dz)
+    dx = batched_matmul(at_dz, jnp.broadcast_to(w.T, (nodes.shape[0],) + w.T.shape))
+    db = jnp.sum(dz, axis=(0, 1))
+    return dx, None, dw, db
+
+
+gcn_conv.defvjp(_gcn_vjp_fwd, _gcn_vjp_bwd)
+
+
+def _graph_kernel(act, x_ref, a_ref, ws_ref, wn_ref, b_ref, z_ref, h_ref):
+    x = x_ref[0]
+    self_term = jnp.dot(x, ws_ref[...], preferred_element_type=jnp.float32)
+    ax = jnp.dot(a_ref[0], x, preferred_element_type=jnp.float32)
+    nbr_term = jnp.dot(ax, wn_ref[...], preferred_element_type=jnp.float32)
+    z = self_term + nbr_term + b_ref[...]
+    z_ref[0] = z
+    h_ref[0] = ref.apply_act(z, act)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def _graph_fwd_kernel(nodes, adj, w_self, w_nbr, b, act):
+    bsz, n, f = nodes.shape
+    g = w_self.shape[1]
+    out_shapes = (
+        jax.ShapeDtypeStruct((bsz, n, g), jnp.float32),
+        jax.ShapeDtypeStruct((bsz, n, g), jnp.float32),
+    )
+    z, h = pl.pallas_call(
+        functools.partial(_graph_kernel, act),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((f, g), lambda i: (0, 0)),
+            pl.BlockSpec((f, g), lambda i: (0, 0)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, n, g), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, g), lambda i: (i, 0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=INTERPRET,
+    )(nodes, adj, w_self, w_nbr, b)
+    return h, z
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def graph_conv(nodes, adj, w_self, w_nbr, b, act="relu"):
+    """GraphConv: act(nodes @ w_self + (adj @ nodes) @ w_nbr + b)."""
+    h, _ = _graph_fwd_kernel(nodes, adj, w_self, w_nbr, b, act)
+    return h
+
+
+def _graph_vjp_fwd(nodes, adj, w_self, w_nbr, b, act):
+    h, z = _graph_fwd_kernel(nodes, adj, w_self, w_nbr, b, act)
+    return h, (nodes, adj, w_self, w_nbr, z)
+
+
+def _graph_vjp_bwd(act, res, g_out):
+    nodes, adj, w_self, w_nbr, z = res
+    bsz = nodes.shape[0]
+    dz = g_out * ref.act_grad(z, act)  # [B,N,G]
+    ax = batched_matmul(adj, nodes)  # recompute A@X (cheap, saves memory)
+    dw_self = jnp.einsum("bnf,bng->fg", nodes, dz)
+    dw_nbr = jnp.einsum("bnf,bng->fg", ax, dz)
+    dz_wnT = batched_matmul(dz, jnp.broadcast_to(w_nbr.T, (bsz,) + w_nbr.T.shape))
+    dx = batched_matmul(dz, jnp.broadcast_to(w_self.T, (bsz,) + w_self.T.shape))
+    dx = dx + batched_matmul(adj, dz_wnT)  # A^T == A
+    db = jnp.sum(dz, axis=(0, 1))
+    return dx, None, dw_self, dw_nbr, db
+
+
+graph_conv.defvjp(_graph_vjp_fwd, _graph_vjp_bwd)

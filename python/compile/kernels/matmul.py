@@ -1,0 +1,88 @@
+"""Tiled Pallas matmul — the primitive every other kernel's backward pass
+builds on.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's compute
+is ASIC PPA modelling, not GPU kernels; the hot loop we kernelize is the
+predictor stack (GCN/ANN train + batched inference). On a real TPU the
+tiles below are MXU-shaped (multiples of 8x128 lanes); operands at our
+model sizes (<=256x256 f32) are single-block VMEM-resident so the
+HBM<->VMEM schedule is trivial (one fetch, no re-streaming). We run
+`interpret=True` everywhere: CPU PJRT cannot execute Mosaic custom-calls,
+and interpret-mode lowers to plain HLO the rust client runs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (>=1)."""
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    # One (TM, TN) output tile; K is kept whole in-block: at our model sizes
+    # (K <= 256) the operands fit VMEM, so no K-loop / accumulator needed.
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def matmul(a, b, tm: int = 128, tn: int = 128):
+    """a[M,K] @ b[K,N] -> [M,N] with a grid of (M/TM, N/TN) tile programs."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    tm = _pick_tile(m, tm)
+    tn = _pick_tile(n, tn)
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _bmm_kernel(a_ref, b_ref, o_ref):
+    o_ref[0] = jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def batched_matmul(a, b):
+    """a[B,M,K] @ b[B,K,N] -> [B,M,N]; grid over the batch dimension.
+
+    Each grid program owns one graph/sample — the batch axis is the
+    natural parallel axis for the predictor's dynamic batching (L3 pads
+    requests to B and issues one call).
+    """
+    bsz, m, k = a.shape
+    bsz2, k2, n = b.shape
+    assert bsz == bsz2 and k == k2, f"bmm mismatch {a.shape} @ {b.shape}"
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)

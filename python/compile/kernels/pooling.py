@@ -1,0 +1,55 @@
+"""Masked global mean pool (paper Eq. 6) as a Pallas kernel + custom VJP.
+
+Padded node rows (mask == 0) contribute nothing; the divisor is the real
+node count, so the pooled embedding is invariant to the padding amount —
+a property the hypothesis tests pin down.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import INTERPRET
+
+
+def _pool_kernel(h_ref, m_ref, o_ref):
+    h = h_ref[0]  # [N, F]
+    m = m_ref[0]  # [N]
+    s = jnp.sum(h * m[:, None], axis=0)
+    cnt = jnp.maximum(jnp.sum(m), 1.0)
+    o_ref[0] = s / cnt
+
+
+@jax.jit
+def _pool_fwd_kernel(h, mask):
+    bsz, n, f = h.shape
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, f), jnp.float32),
+        interpret=INTERPRET,
+    )(h, mask)
+
+
+@jax.custom_vjp
+def masked_mean_pool(h, mask):
+    """h: [B,N,F], mask: [B,N] -> [B,F] mean over valid nodes."""
+    return _pool_fwd_kernel(h, mask)
+
+
+def _pool_vjp_fwd(h, mask):
+    return _pool_fwd_kernel(h, mask), mask
+
+
+def _pool_vjp_bwd(mask, g):
+    cnt = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # [B,1]
+    dh = mask[:, :, None] * (g / cnt)[:, None, :]
+    return dh, None
+
+
+masked_mean_pool.defvjp(_pool_vjp_fwd, _pool_vjp_bwd)

@@ -1,0 +1,297 @@
+"""L2: JAX compute graphs for the paper's learned predictors (ANN + GCN),
+built on the L1 Pallas kernels, with Adam and the muAPE loss (paper Eq. 7).
+
+Everything here is build-time: `aot.py` lowers `predict` / `embed` /
+`train_step` closures once to HLO text; the rust coordinator owns the
+training loop, batching, early stopping, LR decay and hyperparameter
+search (paper §7.3), and only ever calls the compiled artifacts.
+
+Fixed AOT shapes (see DESIGN.md §3): B=32 rows per batch, F=16 unified
+architectural+backend features, N=128 LHG nodes, NF=9 node features
+(Fig. 5c features + fold multiplicity).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense, gcn_conv, graph_conv, masked_mean_pool
+
+# ---------------------------------------------------------------------------
+# Fixed interchange dimensions (must match rust/src/runtime/artifacts.rs).
+# ---------------------------------------------------------------------------
+BATCH = 32  # rows per predict/train call (L3 pads to this)
+FEAT = 16  # unified arch+backend feature vector length
+NODES = 128  # max LHG nodes (generators fold to stay under this)
+NODE_FEAT = 9  # Fig. 5c structural features + multiplicity
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+APE_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 (paper): hidden layer configuration generator.
+# ---------------------------------------------------------------------------
+def get_node_config(node_count: int, h_layer_count: int, min_p: int = 2, max_p: int = 7) -> List[int]:
+    """Paper Algorithm 2: power-of-two hidden layer sizes that rise to an
+    expected maximum then decay. Mirrored bit-for-bit by
+    rust/src/models/tuning.rs (tested for equality on the full Table 2 grid).
+    """
+    p = (node_count - 1).bit_length()  # ceil(log2(node_count))
+    exp_max_p = min((h_layer_count + min_p + p) // 2, max_p)
+    if exp_max_p <= p:
+        exp_max_p = p + 1
+    incr_p = exp_max_p - p
+    decr_p = min(exp_max_p - min_p + 1, h_layer_count - incr_p)
+    same_p = 0
+    if h_layer_count > incr_p + decr_p:
+        same_p = h_layer_count - incr_p - decr_p
+    layer = []
+    q = p
+    for _ in range(incr_p):
+        layer.append(2**q)
+        q += 1
+    for _ in range(same_p):
+        layer.append(2**q)
+    for _ in range(decr_p):
+        layer.append(2**q)
+        q -= 1
+    return layer
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout: rust holds ONE theta vector (plus Adam m, v).
+# ---------------------------------------------------------------------------
+@dataclass
+class ParamLayout:
+    entries: List[Tuple[str, int, Tuple[int, ...]]] = field(default_factory=list)
+    total: int = 0
+
+    def add(self, name: str, shape: Tuple[int, ...]) -> None:
+        size = 1
+        for d in shape:
+            size *= d
+        self.entries.append((name, self.total, shape))
+        self.total += size
+
+    def slices(self, theta):
+        out = {}
+        for name, off, shape in self.entries:
+            size = 1
+            for d in shape:
+                size *= d
+            out[name] = jax.lax.dynamic_slice(theta, (off,), (size,)).reshape(shape)
+        return out
+
+    def to_json(self):
+        return {
+            "total": self.total,
+            "entries": [
+                {"name": n, "offset": o, "shape": list(s)} for n, o, s in self.entries
+            ],
+        }
+
+
+def glorot_init(key, layout: ParamLayout) -> jnp.ndarray:
+    """Glorot-uniform init of the flat parameter vector (fixtures/tests;
+    rust re-implements the same scheme with its own RNG)."""
+    theta = jnp.zeros((layout.total,), jnp.float32)
+    for name, off, shape in layout.entries:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            limit = (6.0 / (shape[0] + shape[1])) ** 0.5
+            vals = jax.random.uniform(sub, shape, jnp.float32, -limit, limit)
+        else:
+            vals = jnp.zeros(shape, jnp.float32)
+        theta = jax.lax.dynamic_update_slice(theta, vals.reshape(-1), (off,))
+    return theta
+
+
+# ---------------------------------------------------------------------------
+# ANN (paper §5.3 / §7.3): MLP with Algorithm-2 hidden configuration.
+# ---------------------------------------------------------------------------
+@dataclass
+class AnnConfig:
+    name: str
+    hidden: List[int]
+    act: str = "relu"
+    in_dim: int = FEAT
+
+    def layout(self) -> ParamLayout:
+        lay = ParamLayout()
+        dims = [self.in_dim] + list(self.hidden) + [1]
+        for i in range(len(dims) - 1):
+            lay.add(f"w{i}", (dims[i], dims[i + 1]))
+            lay.add(f"b{i}", (dims[i + 1],))
+        return lay
+
+
+def ann_apply(cfg: AnnConfig, layout: ParamLayout, theta, x):
+    """x: [B, F] -> prediction [B]."""
+    p = layout.slices(theta)
+    h = x
+    n_hidden = len(cfg.hidden)
+    for i in range(n_hidden):
+        h = dense(h, p[f"w{i}"], p[f"b{i}"], cfg.act)
+    out = dense(h, p[f"w{n_hidden}"], p[f"b{n_hidden}"], "linear")
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# GCN (paper Fig. 7): conv stack -> GlobalMeanPool -> concat(global feats)
+# -> FC stack (Algorithm 2) -> scalar.
+# ---------------------------------------------------------------------------
+@dataclass
+class GcnConfig:
+    name: str
+    conv_dims: List[int]
+    fc_hidden: List[int]
+    conv_kind: str = "gcn"  # "gcn" (GCNConv) | "graph" (GraphConv)
+    act: str = "relu"
+    node_feat: int = NODE_FEAT
+    gfeat_dim: int = FEAT
+
+    def layout(self) -> ParamLayout:
+        lay = ParamLayout()
+        d = self.node_feat
+        for i, g in enumerate(self.conv_dims):
+            if self.conv_kind == "gcn":
+                lay.add(f"cw{i}", (d, g))
+            else:
+                lay.add(f"cws{i}", (d, g))
+                lay.add(f"cwn{i}", (d, g))
+            lay.add(f"cb{i}", (g,))
+            d = g
+        dims = [d + self.gfeat_dim] + list(self.fc_hidden) + [1]
+        for i in range(len(dims) - 1):
+            lay.add(f"fw{i}", (dims[i], dims[i + 1]))
+            lay.add(f"fb{i}", (dims[i + 1],))
+        return lay
+
+    @property
+    def embed_dim(self) -> int:
+        return self.conv_dims[-1]
+
+
+def gcn_embed(cfg: GcnConfig, layout: ParamLayout, theta, nodes, adj, mask):
+    """Conv stack + masked mean pool -> graph embedding [B, E] (Fig. 8)."""
+    p = layout.slices(theta)
+    h = nodes
+    for i in range(len(cfg.conv_dims)):
+        if cfg.conv_kind == "gcn":
+            h = gcn_conv(h, adj, p[f"cw{i}"], p[f"cb{i}"], cfg.act)
+        else:
+            h = graph_conv(h, adj, p[f"cws{i}"], p[f"cwn{i}"], p[f"cb{i}"], cfg.act)
+    return masked_mean_pool(h, mask)
+
+
+def gcn_apply(cfg: GcnConfig, layout: ParamLayout, theta, nodes, adj, mask, gfeat):
+    """Full GCN predictor: [B] prediction."""
+    emb = gcn_embed(cfg, layout, theta, nodes, adj, mask)
+    p = layout.slices(theta)
+    h = jnp.concatenate([emb, gfeat], axis=1)
+    n_hidden = len(cfg.fc_hidden)
+    for i in range(n_hidden):
+        h = dense(h, p[f"fw{i}"], p[f"fb{i}"], "relu")
+    out = dense(h, p[f"fw{n_hidden}"], p[f"fb{n_hidden}"], "linear")
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# muAPE loss (paper Eq. 7) with per-row weights (padding rows get w=0).
+# ---------------------------------------------------------------------------
+def mape_loss(pred, y, w):
+    ape = jnp.abs(pred - y) / (jnp.abs(y) + APE_EPS)
+    return jnp.sum(w * ape) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Adam (paper §7.3: Adam + decaying LR; the decay/patience logic lives in
+# the rust trainer, which passes `lr` per call).
+# ---------------------------------------------------------------------------
+def adam_update(theta, m, v, grad, t, lr):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    mhat = m / (1.0 - jnp.power(ADAM_B1, t))
+    vhat = v / (1.0 - jnp.power(ADAM_B2, t))
+    theta = theta - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return theta, m, v
+
+
+# ---------------------------------------------------------------------------
+# Jit-able closures for AOT lowering.
+# ---------------------------------------------------------------------------
+def make_ann_fns(cfg: AnnConfig):
+    layout = cfg.layout()
+
+    def predict(theta, x):
+        return (ann_apply(cfg, layout, theta, x),)
+
+    def train_step(theta, m, v, t, lr, x, y, w):
+        def loss_fn(th):
+            return mape_loss(ann_apply(cfg, layout, th, x), y, w)
+
+        loss, grad = jax.value_and_grad(loss_fn)(theta)
+        theta2, m2, v2 = adam_update(theta, m, v, grad, t, lr)
+        return theta2, m2, v2, loss
+
+    def train_epoch(theta, m, v, t, lr, xs, ys, ws):
+        """S minibatches per PJRT call (perf: amortizes the FFI boundary)."""
+
+        def body(carry, batch):
+            th, mm, vv, tt = carry
+            x, y, w = batch
+            th, mm, vv, loss = train_step(th, mm, vv, tt, lr, x, y, w)
+            return (th, mm, vv, tt + 1.0), loss
+
+        (theta2, m2, v2, _), losses = jax.lax.scan(
+            body, (theta, m, v, t), (xs, ys, ws)
+        )
+        return theta2, m2, v2, jnp.mean(losses)
+
+    return layout, predict, train_step, train_epoch
+
+
+def make_gcn_fns(cfg: GcnConfig):
+    layout = cfg.layout()
+
+    def predict(theta, nodes, adj, mask, gfeat):
+        return (gcn_apply(cfg, layout, theta, nodes, adj, mask, gfeat),)
+
+    def embed(theta, nodes, adj, mask):
+        return (gcn_embed(cfg, layout, theta, nodes, adj, mask),)
+
+    def train_step(theta, m, v, t, lr, nodes, adj, mask, gfeat, y, w):
+        def loss_fn(th):
+            return mape_loss(gcn_apply(cfg, layout, th, nodes, adj, mask, gfeat), y, w)
+
+        loss, grad = jax.value_and_grad(loss_fn)(theta)
+        theta2, m2, v2 = adam_update(theta, m, v, grad, t, lr)
+        return theta2, m2, v2, loss
+
+    return layout, predict, embed, train_step
+
+
+# ---------------------------------------------------------------------------
+# The variant menu the rust hyperparameter search draws from (Table 2,
+# reduced to a discrete grid that is AOT-compiled once).
+# ---------------------------------------------------------------------------
+def ann_variants() -> List[AnnConfig]:
+    return [
+        AnnConfig("ann32x4_relu", get_node_config(32, 4), "relu"),
+        AnnConfig("ann32x4_tanh", get_node_config(32, 4), "tanh"),
+        AnnConfig("ann16x3_relu", get_node_config(16, 3), "relu"),
+        AnnConfig("ann64x5_tanh", get_node_config(64, 5), "tanh"),
+    ]
+
+
+def gcn_variants() -> List[GcnConfig]:
+    return [
+        GcnConfig("gcn3", [16, 16, 16], get_node_config(16, 3), "gcn"),
+        GcnConfig("gcn2", [16, 16], get_node_config(16, 2), "gcn"),
+        GcnConfig("graph2", [16, 16], get_node_config(16, 3), "graph"),
+    ]

@@ -1,0 +1,7 @@
+"""pytest path setup: make `compile.*` importable when the suite is run
+from the repository root (`pytest python/tests/`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

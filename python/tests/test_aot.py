@@ -1,0 +1,85 @@
+"""AOT pipeline checks: manifest consistency, HLO text validity, fixture
+self-consistency. Skipped when `make artifacts` has not run yet."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_manifest_constants_match_model(manifest):
+    assert manifest["batch"] == M.BATCH
+    assert manifest["feat"] == M.FEAT
+    assert manifest["nodes"] == M.NODES
+    assert manifest["node_feat"] == M.NODE_FEAT
+
+
+def test_every_listed_artifact_exists_and_is_hlo(manifest):
+    for vname, var in manifest["variants"].items():
+        for ep, info in var["entrypoints"].items():
+            path = ART / info["file"]
+            assert path.exists(), path
+            head = path.read_text()[:200]
+            assert "HloModule" in head, f"{path} does not look like HLO text"
+
+
+def test_param_layouts_match_model(manifest):
+    for cfg in M.ann_variants():
+        lay = cfg.layout()
+        got = manifest["variants"][cfg.name]["params"]
+        assert got["total"] == lay.total
+        assert len(got["entries"]) == len(lay.entries)
+    for cfg in M.gcn_variants():
+        lay = cfg.layout()
+        got = manifest["variants"][cfg.name]["params"]
+        assert got["total"] == lay.total
+
+
+def test_entrypoint_input_shapes(manifest):
+    var = manifest["variants"]["ann32x4_relu"]
+    P = var["params"]["total"]
+    pred = var["entrypoints"]["predict"]
+    assert pred["inputs"] == [[P], [M.BATCH, M.FEAT]]
+    ts = var["entrypoints"]["train_step"]
+    assert ts["inputs"][0] == [P] and ts["inputs"][5] == [M.BATCH, M.FEAT]
+
+
+def test_fixture_predict_consistency():
+    """Recompute the golden ANN prediction from the fixture inputs."""
+    fx = ART / "fixtures"
+    theta = np.load(fx / "ann_theta.npy")
+    x = np.load(fx / "ann_x.npy")
+    want = np.load(fx / "ann_pred.npy")
+    cfg = M.ann_variants()[0]
+    lay, predict, _, _ = M.make_ann_fns(cfg)
+    got = predict(theta, x)[0]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_fixture_gcn_consistency():
+    fx = ART / "fixtures"
+    theta = np.load(fx / "gcn_theta.npy")
+    nodes = np.load(fx / "gcn_nodes.npy")
+    adj = np.load(fx / "gcn_adj.npy")
+    mask = np.load(fx / "gcn_mask.npy")
+    gfeat = np.load(fx / "gcn_gfeat.npy")
+    want = np.load(fx / "gcn_pred.npy")
+    cfg = M.gcn_variants()[0]
+    lay, predict, _, _ = M.make_gcn_fns(cfg)
+    got = predict(theta, nodes, adj, mask, gfeat)[0]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

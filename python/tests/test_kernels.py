@@ -1,0 +1,249 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+hypothesis sweeps shapes (and activation choices); assert_allclose is the
+core correctness signal gating `make artifacts`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    batched_matmul,
+    dense,
+    gcn_conv,
+    graph_conv,
+    masked_mean_pool,
+    matmul,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+ACTS = ["relu", "tanh", "linear"]
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, m, k)
+    b = rand(seed + 1, k, n)
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bsz=st.integers(1, 8),
+    m=st.integers(1, 32),
+    k=st.integers(1, 32),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_batched_matmul_matches_ref(bsz, m, k, n, seed):
+    a = rand(seed, bsz, m, k)
+    b = rand(seed + 1, bsz, k, n)
+    want = jnp.einsum("bmk,bkn->bmn", a, b)
+    np.testing.assert_allclose(batched_matmul(a, b), want, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_tile_boundaries():
+    # Exercise non-trivial grids: 128-divisible and prime sizes.
+    for m, k, n in [(128, 128, 128), (256, 64, 128), (37, 13, 53), (1, 1, 1)]:
+        a = rand(m, m, k)
+        b = rand(n, k, n)
+        np.testing.assert_allclose(
+            matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    x, w, b = rand(seed, m, k), rand(seed + 1, k, n), rand(seed + 2, n)
+    np.testing.assert_allclose(
+        dense(x, w, b, act), ref.dense_ref(x, w, b, act), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_dense_grads_match_ref(act):
+    x, w, b = rand(1, 16, 8), rand(2, 8, 4), rand(3, 4)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(dense(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.dense_ref(x, w, b, act) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# graph convolutions
+# ---------------------------------------------------------------------------
+def norm_adj(key, bsz, n):
+    """Random symmetric normalized adjacency with self loops."""
+    a = (jax.random.uniform(jax.random.PRNGKey(key), (bsz, n, n)) > 0.7).astype(
+        jnp.float32
+    )
+    a = jnp.maximum(a, a.transpose(0, 2, 1))
+    a = a + jnp.eye(n)[None]
+    a = jnp.minimum(a, 1.0)
+    d = jnp.sum(a, axis=2)
+    dinv = 1.0 / jnp.sqrt(jnp.maximum(d, 1.0))
+    return a * dinv[:, :, None] * dinv[:, None, :]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bsz=st.integers(1, 6),
+    n=st.integers(2, 24),
+    f=st.integers(1, 12),
+    g=st.integers(1, 12),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**16),
+)
+def test_gcn_conv_matches_ref(bsz, n, f, g, act, seed):
+    nodes = rand(seed, bsz, n, f)
+    adj = norm_adj(seed + 1, bsz, n)
+    w, b = rand(seed + 2, f, g), rand(seed + 3, g)
+    np.testing.assert_allclose(
+        gcn_conv(nodes, adj, w, b, act),
+        ref.gcn_conv_ref(nodes, adj, w, b, act),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bsz=st.integers(1, 4),
+    n=st.integers(2, 20),
+    f=st.integers(1, 10),
+    g=st.integers(1, 10),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**16),
+)
+def test_graph_conv_matches_ref(bsz, n, f, g, act, seed):
+    nodes = rand(seed, bsz, n, f)
+    adj = norm_adj(seed + 1, bsz, n)
+    ws, wn, b = rand(seed + 2, f, g), rand(seed + 3, f, g), rand(seed + 4, g)
+    np.testing.assert_allclose(
+        graph_conv(nodes, adj, ws, wn, b, act),
+        ref.graph_conv_ref(nodes, adj, ws, wn, b, act),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_gcn_conv_grads_match_ref(act):
+    nodes = rand(1, 3, 12, 5)
+    adj = norm_adj(2, 3, 12)
+    w, b = rand(3, 5, 7), rand(4, 7)
+
+    def f_kernel(nodes, w, b):
+        return jnp.sum(gcn_conv(nodes, adj, w, b, act) ** 2)
+
+    def f_ref(nodes, w, b):
+        return jnp.sum(ref.gcn_conv_ref(nodes, adj, w, b, act) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(nodes, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(nodes, w, b)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_graph_conv_grads_match_ref(act):
+    nodes = rand(1, 2, 10, 4)
+    adj = norm_adj(2, 2, 10)
+    ws, wn, b = rand(3, 4, 6), rand(4, 4, 6), rand(5, 6)
+
+    def f_kernel(nodes, ws, wn, b):
+        return jnp.sum(graph_conv(nodes, adj, ws, wn, b, act) ** 2)
+
+    def f_ref(nodes, ws, wn, b):
+        return jnp.sum(ref.graph_conv_ref(nodes, adj, ws, wn, b, act) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(nodes, ws, wn, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(nodes, ws, wn, b)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pooling
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    bsz=st.integers(1, 6),
+    n=st.integers(1, 32),
+    f=st.integers(1, 16),
+    valid=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_masked_mean_pool_matches_ref(bsz, n, f, valid, seed):
+    h = rand(seed, bsz, n, f)
+    valid = min(valid, n)
+    mask = jnp.concatenate(
+        [jnp.ones((bsz, valid)), jnp.zeros((bsz, n - valid))], axis=1
+    )
+    np.testing.assert_allclose(
+        masked_mean_pool(h, mask),
+        ref.masked_mean_pool_ref(h, mask),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_pool_padding_invariance():
+    """Adding zero-masked padding rows must not change the pooled value."""
+    h = rand(0, 2, 8, 4)
+    mask = jnp.ones((2, 8))
+    base = masked_mean_pool(h, mask)
+    h_pad = jnp.concatenate([h, rand(1, 2, 5, 4)], axis=1)
+    mask_pad = jnp.concatenate([mask, jnp.zeros((2, 5))], axis=1)
+    np.testing.assert_allclose(base, masked_mean_pool(h_pad, mask_pad), rtol=1e-6)
+
+
+def test_pool_all_masked_is_zero_safe():
+    h = rand(0, 1, 4, 3)
+    mask = jnp.zeros((1, 4))
+    out = masked_mean_pool(h, mask)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, jnp.zeros((1, 3)), atol=1e-6)
+
+
+def test_pool_grads_match_ref():
+    h = rand(0, 2, 6, 3)
+    mask = jnp.concatenate([jnp.ones((2, 4)), jnp.zeros((2, 2))], axis=1)
+    gk = jax.grad(lambda h: jnp.sum(masked_mean_pool(h, mask) ** 2))(h)
+    gr = jax.grad(lambda h: jnp.sum(ref.masked_mean_pool_ref(h, mask) ** 2))(h)
+    np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,195 @@
+"""L2 correctness: Algorithm 2, flat-param layout, ANN/GCN graphs, muAPE
+loss, Adam — against pure-jnp re-derivations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+def test_get_node_config_paper_shape():
+    # nodeCount=32, hLayerCount=4: P=5, expMaxP=(4+2+5)//2=5 <= P -> 6,
+    # incr=1, decr=min(5,3)=3 -> [32, 64, 32, 16]
+    assert M.get_node_config(32, 4) == [32, 64, 32, 16]
+    assert M.get_node_config(16, 3) == [16, 32, 16]
+    assert M.get_node_config(64, 5) == [64, 128, 64, 32, 16]
+
+
+def test_get_node_config_invariants():
+    for node_count in [4, 8, 16, 32, 64, 128]:
+        for layers in range(3, 10):
+            cfg = M.get_node_config(node_count, layers)
+            assert len(cfg) == layers
+            # Algorithm 2's `expMaxP = P + 1` escape hatch may exceed maxP
+            # by one doubling when nodeCount is already 2^maxP.
+            assert all(4 <= c <= 256 for c in cfg), (node_count, layers, cfg)
+            assert all(c & (c - 1) == 0 for c in cfg)  # powers of two
+            # rises then falls (unimodal in exponent)
+            peak = cfg.index(max(cfg))
+            assert all(cfg[i] <= cfg[i + 1] for i in range(peak))
+            assert all(cfg[i] >= cfg[i + 1] for i in range(peak, layers - 1))
+
+
+# ---------------------------------------------------------------------------
+# flat parameter layout
+# ---------------------------------------------------------------------------
+def test_layout_is_contiguous_and_disjoint():
+    cfg = M.ann_variants()[0]
+    lay = cfg.layout()
+    expect_off = 0
+    for name, off, shape in lay.entries:
+        assert off == expect_off
+        size = int(np.prod(shape))
+        expect_off += size
+    assert lay.total == expect_off
+
+
+def test_layout_slices_roundtrip():
+    cfg = M.ann_variants()[0]
+    lay = cfg.layout()
+    theta = jnp.arange(lay.total, dtype=jnp.float32)
+    sl = lay.slices(theta)
+    for name, off, shape in lay.entries:
+        size = int(np.prod(shape))
+        want = jnp.arange(off, off + size, dtype=jnp.float32).reshape(shape)
+        np.testing.assert_array_equal(sl[name], want)
+
+
+# ---------------------------------------------------------------------------
+# ANN graph vs pure-jnp
+# ---------------------------------------------------------------------------
+def ann_ref(cfg, layout, theta, x):
+    p = layout.slices(theta)
+    h = x
+    nh = len(cfg.hidden)
+    for i in range(nh):
+        h = ref.dense_ref(h, p[f"w{i}"], p[f"b{i}"], cfg.act)
+    return ref.dense_ref(h, p[f"w{nh}"], p[f"b{nh}"], "linear")[:, 0]
+
+
+@pytest.mark.parametrize("vi", range(4))
+def test_ann_apply_matches_pure_jnp(vi):
+    cfg = M.ann_variants()[vi]
+    lay, predict, _, _ = M.make_ann_fns(cfg)
+    theta = M.glorot_init(jax.random.PRNGKey(0), lay)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M.BATCH, M.FEAT))
+    np.testing.assert_allclose(
+        predict(theta, x)[0], ann_ref(cfg, lay, theta, x), rtol=1e-4, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# GCN graph vs pure-jnp
+# ---------------------------------------------------------------------------
+def gcn_ref(cfg, layout, theta, nodes, adj, mask, gfeat):
+    p = layout.slices(theta)
+    h = nodes
+    for i in range(len(cfg.conv_dims)):
+        if cfg.conv_kind == "gcn":
+            h = ref.gcn_conv_ref(h, adj, p[f"cw{i}"], p[f"cb{i}"], cfg.act)
+        else:
+            h = ref.graph_conv_ref(
+                h, adj, p[f"cws{i}"], p[f"cwn{i}"], p[f"cb{i}"], cfg.act
+            )
+    emb = ref.masked_mean_pool_ref(h, mask)
+    h = jnp.concatenate([emb, gfeat], axis=1)
+    nh = len(cfg.fc_hidden)
+    for i in range(nh):
+        h = ref.dense_ref(h, p[f"fw{i}"], p[f"fb{i}"], "relu")
+    return ref.dense_ref(h, p[f"fw{nh}"], p[f"fb{nh}"], "linear")[:, 0]
+
+
+@pytest.mark.parametrize("vi", range(3))
+def test_gcn_apply_matches_pure_jnp(vi):
+    cfg = M.gcn_variants()[vi]
+    lay, predict, embed, _ = M.make_gcn_fns(cfg)
+    theta = M.glorot_init(jax.random.PRNGKey(0), lay)
+    nodes = jax.random.normal(jax.random.PRNGKey(1), (M.BATCH, M.NODES, M.NODE_FEAT))
+    eye = jnp.eye(M.NODES)
+    adj = jnp.broadcast_to(eye, (M.BATCH, M.NODES, M.NODES))
+    mask = jnp.ones((M.BATCH, M.NODES))
+    gfeat = jax.random.normal(jax.random.PRNGKey(2), (M.BATCH, M.FEAT))
+    np.testing.assert_allclose(
+        predict(theta, nodes, adj, mask, gfeat)[0],
+        gcn_ref(cfg, lay, theta, nodes, adj, mask, gfeat),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# loss + optimizer
+# ---------------------------------------------------------------------------
+def test_mape_loss_hand_computed():
+    pred = jnp.array([1.0, 2.0, 4.0, 100.0])
+    y = jnp.array([1.0, 4.0, 2.0, 1.0])
+    w = jnp.array([1.0, 1.0, 1.0, 0.0])  # last row is padding
+    # APEs: 0, 0.5, 1.0 -> mean = 0.5
+    np.testing.assert_allclose(M.mape_loss(pred, y, w), 0.5, rtol=1e-5)
+
+
+def test_mape_loss_ignores_padding():
+    pred = jnp.array([2.0, 123.0])
+    y = jnp.array([1.0, 1.0])
+    w = jnp.array([1.0, 0.0])
+    np.testing.assert_allclose(M.mape_loss(pred, y, w), 1.0, rtol=1e-5)
+
+
+def test_adam_first_step_direction():
+    theta = jnp.zeros(4)
+    g = jnp.array([1.0, -2.0, 0.5, 0.0])
+    m = jnp.zeros(4)
+    v = jnp.zeros(4)
+    th2, m2, v2 = M.adam_update(theta, m, v, g, jnp.float32(1.0), jnp.float32(0.01))
+    # after bias correction, step ~= -lr * sign(g)
+    np.testing.assert_allclose(th2[:3], -0.01 * jnp.sign(g[:3]), rtol=1e-3)
+    assert th2[3] == 0.0
+
+
+def test_ann_training_reduces_loss():
+    cfg = M.ann_variants()[0]
+    lay, predict, train_step, _ = M.make_ann_fns(cfg)
+    key = jax.random.PRNGKey(5)
+    theta = M.glorot_init(key, lay)
+    x = jax.random.normal(jax.random.PRNGKey(6), (M.BATCH, M.FEAT))
+    y = jnp.abs(x[:, 0] * 2.0 + x[:, 1]) + 1.0
+    w = jnp.ones((M.BATCH,))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    jit_step = jax.jit(train_step)
+    losses = []
+    for t in range(1, 61):
+        theta, m, v, loss = jit_step(
+            theta, m, v, jnp.float32(t), jnp.float32(3e-3), x, y, w
+        )
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses[::10]
+
+
+def test_train_epoch_equals_unrolled_steps():
+    cfg = M.ann_variants()[2]  # small variant for speed
+    lay, _, train_step, train_epoch = M.make_ann_fns(cfg)
+    S = 3
+    theta = M.glorot_init(jax.random.PRNGKey(0), lay)
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (S, M.BATCH, M.FEAT))
+    ys = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (S, M.BATCH))) + 0.5
+    ws = jnp.ones((S, M.BATCH))
+    te_theta, te_m, te_v, _ = train_epoch(
+        theta, m, v, jnp.float32(1.0), jnp.float32(1e-3), xs, ys, ws
+    )
+    th, mm, vv = theta, m, v
+    for t in range(S):
+        th, mm, vv, _ = train_step(
+            th, mm, vv, jnp.float32(t + 1.0), jnp.float32(1e-3), xs[t], ys[t], ws[t]
+        )
+    np.testing.assert_allclose(te_theta, th, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(te_m, mm, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(te_v, vv, rtol=1e-5, atol=1e-7)

@@ -1,0 +1,229 @@
+//! Benchmark harness (criterion is unavailable offline — this is a
+//! self-contained timer harness with warmup, repetition, and median/MAD
+//! reporting; `cargo bench` runs it).
+//!
+//! Two groups:
+//!   * microbenches on the hot paths (backend oracle, simulators,
+//!     samplers, tree models, MOTPE, batched HLO predict) — the §Perf
+//!     targets in EXPERIMENTS.md;
+//!   * one end-to-end row per paper table/figure family (datagen +
+//!     two-stage train + DSE iteration costs), mirroring DESIGN.md §5.
+//!
+//! Filter: `cargo bench -- <substring>`; quick mode: `cargo bench -- --quick`.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use fso::backend::{BackendConfig, Enablement, SpnrFlow};
+use fso::coordinator::dse_driver::SurrogateBundle;
+use fso::coordinator::{datagen, DatagenConfig};
+use fso::data::Metric;
+use fso::dse::{Motpe, MotpeConfig};
+use fso::generators::{ArchConfig, Lhg, ParamKind, ParamSpec, Platform};
+use fso::models::{Gbdt, GbdtParams, RandomForest, RfParams};
+use fso::runtime::Engine;
+use fso::sampling::{Sampler, SamplerKind};
+use fso::simulators::simulate;
+use fso::util::rng::Rng;
+use fso::util::tensor::Tensor;
+
+struct Bench {
+    filter: Option<String>,
+    quick: bool,
+}
+
+impl Bench {
+    fn run<F: FnMut() -> R, R>(&self, name: &str, mut f: F) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        let (warmup, reps) = if self.quick { (1, 5) } else { (3, 15) };
+        for _ in 0..warmup {
+            std::hint::black_box(f());
+        }
+        let mut times: Vec<f64> = (0..reps)
+            .map(|_| {
+                let t0 = Instant::now();
+                std::hint::black_box(f());
+                t0.elapsed().as_secs_f64() * 1e3
+            })
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mad = {
+            let mut d: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            d[d.len() / 2]
+        };
+        println!("{name:<46} {median:10.3} ms  (+-{mad:.3})");
+    }
+}
+
+fn mid_arch(p: Platform) -> ArchConfig {
+    ArchConfig::new(
+        p,
+        p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+    )
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let filter = args.into_iter().find(|a| !a.starts_with("--"));
+    let b = Bench { filter, quick };
+    println!("{:<46} {:>10}", "benchmark", "median");
+    println!("{}", "-".repeat(70));
+
+    // ---- substrates -------------------------------------------------
+    let flow = SpnrFlow::new(Enablement::Gf12, 1);
+    for p in Platform::ALL {
+        let arch = mid_arch(p);
+        let tree = p.generate(&arch).unwrap();
+        let agg = tree.aggregates();
+        let id = arch.id_hash();
+        b.run(&format!("backend_flow/{p}"), || {
+            flow.run_on_aggregates(&agg, id, p.macro_heavy(), BackendConfig::new(0.9, 0.45))
+        });
+    }
+    for p in Platform::ALL {
+        let arch = mid_arch(p);
+        let fr = flow.run(&arch, BackendConfig::new(0.9, 0.45)).unwrap();
+        b.run(&format!("simulator/{p}"), || {
+            simulate(&arch, &fr.backend, Enablement::Gf12).unwrap()
+        });
+    }
+    {
+        let p = Platform::GeneSys;
+        let arch = mid_arch(p);
+        b.run("generator+lhg/genesys", || {
+            let tree = p.generate(&arch).unwrap();
+            Lhg::from_tree(&tree)
+        });
+    }
+
+    // ---- sampling ----------------------------------------------------
+    for kind in SamplerKind::ALL {
+        b.run(&format!("sampler/{}/64x8d", kind.name()), || {
+            Sampler::new(kind, 8, 42).sample(64)
+        });
+    }
+
+    // ---- models -------------------------------------------------------
+    let (x, y) = {
+        let mut rng = Rng::new(3);
+        let x: Vec<Vec<f64>> =
+            (0..600).map(|_| (0..16).map(|_| rng.f64()).collect()).collect();
+        let y: Vec<f64> = x.iter().map(|v| v[0] * 3.0 + v[1] * v[2] + v[12]).collect();
+        (x, y)
+    };
+    b.run("gbdt/fit_600x16", || Gbdt::fit(&x, &y, GbdtParams::default(), 0));
+    let gbdt = Gbdt::fit(&x, &y, GbdtParams::default(), 0);
+    b.run("gbdt/predict_600", || gbdt.predict(&x));
+    b.run("rf/fit_600x16", || {
+        RandomForest::fit(&x, &y, RfParams { n_estimators: 60, ..Default::default() }, 0)
+    });
+
+    // ---- MOTPE ---------------------------------------------------------
+    {
+        let space = vec![
+            ParamSpec { name: "a", kind: ParamKind::Int { lo: 1, hi: 50 } },
+            ParamSpec { name: "b", kind: ParamKind::Float { lo: 0.0, hi: 1.0 } },
+            ParamSpec { name: "c", kind: ParamKind::Float { lo: 0.0, hi: 1.0 } },
+        ];
+        b.run("motpe/ask+tell_x50_at_200_trials", || {
+            let mut m = Motpe::new(space.clone(), MotpeConfig::default());
+            let mut rng = Rng::new(1);
+            for _ in 0..200 {
+                let x = m.ask();
+                let o = vec![x[1], 1.0 - x[1] + rng.f64() * 0.1];
+                m.tell(x, o, true);
+            }
+        });
+    }
+
+    // ---- datagen / train / DSE end-to-end rows (per table family) -----
+    b.run("e2e/datagen_axiline_24x40 (tab3-5 input)", || {
+        datagen::generate(&DatagenConfig::small(Platform::Axiline, Enablement::Gf12))
+            .unwrap()
+    });
+    {
+        let g = datagen::generate(&DatagenConfig::small(Platform::Axiline, Enablement::Gf12))
+            .unwrap();
+        b.run("e2e/two_stage_fit_5metrics (tab4/5 cell)", || {
+            SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap()
+        });
+        let s = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap();
+        b.run("e2e/surrogate_predict_x960 (fig11/12 inner loop)", || {
+            for r in &g.dataset.rows {
+                std::hint::black_box(s.predict(&r.features_vec()));
+            }
+        });
+    }
+
+    // ---- PJRT hot path -------------------------------------------------
+    if let Some(dir) = fso::test_support::artifacts_dir() {
+        let engine = Rc::new(Engine::load(&dir).unwrap());
+        let v = engine.manifest.variant("ann32x4_relu").unwrap().clone();
+        let theta = fso::models::ann::glorot_init(&v, &mut Rng::new(1));
+        let xb = Tensor::zeros(&[engine.manifest.batch, engine.manifest.feat]);
+        let file = v.entrypoint("predict").unwrap().file.clone();
+        // warm compile outside timing
+        engine.run(&file, &[theta.clone(), xb.clone()]).unwrap();
+        b.run("pjrt/ann_predict_batch32", || {
+            engine.run(&file, &[theta.clone(), xb.clone()]).unwrap()
+        });
+
+        let ts = v.entrypoint("train_step").unwrap().file.clone();
+        let p = v.param_total;
+        let args = vec![
+            theta.clone(),
+            Tensor::zeros(&[p]),
+            Tensor::zeros(&[p]),
+            Tensor::scalar(1.0),
+            Tensor::scalar(1e-3),
+            xb.clone(),
+            Tensor::zeros(&[32]),
+            Tensor::zeros(&[32]),
+        ];
+        engine.run(&ts, &args).unwrap();
+        b.run("pjrt/ann_train_step", || engine.run(&ts, &args).unwrap());
+
+        let gv = engine.manifest.variant("gcn3").unwrap().clone();
+        let gtheta = fso::models::ann::glorot_init(&gv, &mut Rng::new(2));
+        let n = engine.manifest.nodes;
+        let nf = engine.manifest.node_feat;
+        let nodes = Tensor::zeros(&[32, n, nf]);
+        let adj = Tensor::zeros(&[32, n, n]);
+        let mask = Tensor::zeros(&[32, n]);
+        let gfeat = Tensor::zeros(&[32, engine.manifest.feat]);
+        let gp = gv.entrypoint("predict").unwrap().file.clone();
+        let gargs = vec![gtheta.clone(), nodes.clone(), adj.clone(), mask.clone(), gfeat.clone()];
+        engine.run(&gp, &gargs).unwrap();
+        b.run("pjrt/gcn_predict_batch32", || engine.run(&gp, &gargs).unwrap());
+
+        let gts = gv.entrypoint("train_step").unwrap().file.clone();
+        let gp_total = gv.param_total;
+        let gtargs = vec![
+            gtheta,
+            Tensor::zeros(&[gp_total]),
+            Tensor::zeros(&[gp_total]),
+            Tensor::scalar(1.0),
+            Tensor::scalar(1e-3),
+            nodes,
+            adj,
+            mask,
+            gfeat,
+            Tensor::zeros(&[32]),
+            Tensor::zeros(&[32]),
+        ];
+        engine.run(&gts, &gtargs).unwrap();
+        b.run("pjrt/gcn_train_step_batch32", || engine.run(&gts, &gtargs).unwrap());
+    } else {
+        println!("(artifacts not built: skipping PJRT benches)");
+    }
+
+    println!("{}", "-".repeat(70));
+    println!("done");
+}

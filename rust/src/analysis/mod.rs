@@ -1,0 +1,7 @@
+//! Analysis utilities: t-SNE (Fig. 8) and small statistics helpers.
+
+pub mod stats;
+pub mod tsne;
+
+pub use stats::{mean, percentile, std_dev};
+pub use tsne::{tsne, TsneConfig};

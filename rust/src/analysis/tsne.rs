@@ -1,0 +1,182 @@
+//! Exact t-SNE (Fig. 8: 2-D visualization of GCN graph embeddings).
+//! O(n^2) gradient descent with early exaggeration — fine at our scale
+//! (hundreds of embeddings).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iterations: usize,
+    pub learning_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig { perplexity: 12.0, iterations: 400, learning_rate: 80.0, seed: 4 }
+    }
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Binary-search the Gaussian bandwidth for one row to hit the target
+/// perplexity; returns the row of conditional probabilities.
+fn p_row(dists: &[f64], i: usize, perplexity: f64) -> Vec<f64> {
+    let n = dists.len();
+    let target = perplexity.ln();
+    let (mut lo, mut hi) = (1e-10f64, 1e10f64);
+    let mut beta = 1.0;
+    let mut row = vec![0.0; n];
+    for _ in 0..60 {
+        let mut sum = 0.0;
+        for (j, &d) in dists.iter().enumerate() {
+            row[j] = if j == i { 0.0 } else { (-d * beta).exp() };
+            sum += row[j];
+        }
+        let sum = sum.max(1e-300);
+        let mut entropy = 0.0;
+        for &p in row.iter() {
+            let p = p / sum;
+            if p > 1e-12 {
+                entropy -= p * p.ln();
+            }
+        }
+        if (entropy - target).abs() < 1e-5 {
+            break;
+        }
+        if entropy > target {
+            lo = beta;
+            beta = if hi >= 1e10 { beta * 2.0 } else { 0.5 * (beta + hi) };
+        } else {
+            hi = beta;
+            beta = 0.5 * (beta + lo);
+        }
+    }
+    let sum: f64 = row.iter().sum::<f64>().max(1e-300);
+    row.iter().map(|&p| p / sum).collect()
+}
+
+/// Run t-SNE; returns n x 2 coordinates.
+pub fn tsne(data: &[Vec<f64>], cfg: TsneConfig) -> Vec<[f64; 2]> {
+    let n = data.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![[0.0, 0.0]];
+    }
+    // symmetrized affinities
+    let mut p = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        let dists: Vec<f64> = (0..n).map(|j| sq_dist(&data[i], &data[j])).collect();
+        let row = p_row(&dists, i, cfg.perplexity.min((n as f64 - 1.0) / 3.0));
+        for j in 0..n {
+            p[i][j] = row[j];
+        }
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = ((p[i][j] + p[j][i]) / (2.0 * n as f64)).max(1e-12);
+            p[i][j] = v;
+            p[j][i] = v;
+        }
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut y: Vec<[f64; 2]> = (0..n).map(|_| [rng.normal() * 1e-2, rng.normal() * 1e-2]).collect();
+    let mut vel = vec![[0.0f64; 2]; n];
+
+    for it in 0..cfg.iterations {
+        let exaggeration = if it < cfg.iterations / 4 { 6.0 } else { 1.0 };
+        let momentum = if it < cfg.iterations / 4 { 0.5 } else { 0.8 };
+        // q distribution (student-t)
+        let mut q_num = vec![vec![0.0; n]; n];
+        let mut q_sum = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 1.0 / (1.0 + sq_dist(&y[i], &y[j]));
+                q_num[i][j] = v;
+                q_num[j][i] = v;
+                q_sum += 2.0 * v;
+            }
+        }
+        let q_sum = q_sum.max(1e-300);
+        for i in 0..n {
+            let mut grad = [0.0f64; 2];
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let q = (q_num[i][j] / q_sum).max(1e-12);
+                let mult = (exaggeration * p[i][j] - q) * q_num[i][j];
+                grad[0] += 4.0 * mult * (y[i][0] - y[j][0]);
+                grad[1] += 4.0 * mult * (y[i][1] - y[j][1]);
+            }
+            for d in 0..2 {
+                vel[i][d] = momentum * vel[i][d] - cfg.learning_rate * grad[d];
+            }
+        }
+        for i in 0..n {
+            y[i][0] += vel[i][0];
+            y[i][1] += vel[i][1];
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated Gaussian blobs in 8-D must stay separated in
+    /// the 2-D embedding (cluster preservation, the Fig. 8 property).
+    #[test]
+    fn preserves_cluster_structure() {
+        let mut rng = Rng::new(1);
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..3 {
+            for _ in 0..15 {
+                let center = c as f64 * 20.0;
+                data.push((0..8).map(|_| center + rng.normal()).collect::<Vec<f64>>());
+                labels.push(c);
+            }
+        }
+        let emb = tsne(&data, TsneConfig { iterations: 250, ..Default::default() });
+        // mean intra-cluster distance must be well below inter-cluster
+        let mut intra = (0.0, 0);
+        let mut inter = (0.0, 0);
+        for i in 0..emb.len() {
+            for j in (i + 1)..emb.len() {
+                let d = ((emb[i][0] - emb[j][0]).powi(2) + (emb[i][1] - emb[j][1]).powi(2)).sqrt();
+                if labels[i] == labels[j] {
+                    intra = (intra.0 + d, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + d, inter.1 + 1);
+                }
+            }
+        }
+        let intra = intra.0 / intra.1 as f64;
+        let inter = inter.0 / inter.1 as f64;
+        assert!(inter > 2.0 * intra, "inter {inter} vs intra {intra}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(tsne(&[], TsneConfig::default()).is_empty());
+        assert_eq!(tsne(&[vec![1.0, 2.0]], TsneConfig::default()), vec![[0.0, 0.0]]);
+    }
+
+    #[test]
+    fn output_is_finite() {
+        let data: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![i as f64, (i * i) as f64 * 0.01])
+            .collect();
+        for p in tsne(&data, TsneConfig { iterations: 100, ..Default::default() }) {
+            assert!(p[0].is_finite() && p[1].is_finite());
+        }
+    }
+}

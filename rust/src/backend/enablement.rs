@@ -1,0 +1,136 @@
+//! Process enablements: technology coefficients for the two nodes the
+//! paper implements on — GLOBALFOUNDRIES 12LP ("GF12", commercial 12 nm)
+//! and NanGate45 ("NG45", open research 45 nm PDK).
+//!
+//! Absolute values are representative, not foundry data (the real decks
+//! are license-gated); what matters for the reproduction is the *relative*
+//! structure — NG45 is ~3x slower, ~8x larger per cell, and an order of
+//! magnitude more energy per op — which drives the same Fig. 4 / Table 4-5
+//! shapes the paper reports per enablement.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Enablement {
+    Gf12,
+    Ng45,
+}
+
+impl Enablement {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Enablement::Gf12 => "gf12",
+            Enablement::Ng45 => "ng45",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Enablement> {
+        match s.to_ascii_lowercase().as_str() {
+            "gf12" => Ok(Enablement::Gf12),
+            "ng45" => Ok(Enablement::Ng45),
+            other => bail!("unknown enablement {other:?} (gf12|ng45)"),
+        }
+    }
+
+    pub fn coeffs(&self) -> &'static TechCoeffs {
+        match self {
+            Enablement::Gf12 => &GF12,
+            Enablement::Ng45 => &NG45,
+        }
+    }
+}
+
+impl std::fmt::Display for Enablement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Technology coefficients consumed by the synthesis + P&R models.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TechCoeffs {
+    /// FO4-ish gate delay, picoseconds.
+    pub gate_delay_ps: f64,
+    /// Wire delay per micron of routed length (buffered), ps/um.
+    pub wire_ps_per_um: f64,
+    /// Average std-cell area, um^2 (2-input NAND-equivalent).
+    pub cell_area_um2: f64,
+    /// Flip-flop area, um^2.
+    pub ff_area_um2: f64,
+    /// SRAM macro density, um^2 per bit.
+    pub sram_um2_per_bit: f64,
+    /// Switching energy per cell toggle, femtojoules.
+    pub cell_sw_fj: f64,
+    /// Flip-flop internal (clock) energy per cycle, femtojoules.
+    pub ff_int_fj: f64,
+    /// SRAM read/write energy, femtojoules per bit accessed.
+    pub sram_fj_per_bit: f64,
+    /// Leakage power density, nanowatts per std cell.
+    pub leak_nw_per_cell: f64,
+    /// SRAM leakage, nanowatts per kilobit.
+    pub sram_leak_nw_per_kb: f64,
+    /// Clock-tree energy overhead as a fraction of FF internal energy.
+    pub cts_overhead: f64,
+    /// Maximum practical clock frequency (GHz) for mid-size blocks —
+    /// used only to shape the f_eff saturation curve.
+    pub f_ceiling_ghz: f64,
+    /// Off-chip interface energy, picojoules per byte (system
+    /// simulators; IO pads/PHY only — DRAM device energy is outside the
+    /// accelerator energy the paper's simulators report).
+    pub dram_pj_per_byte: f64,
+}
+
+/// GLOBALFOUNDRIES 12LP-class coefficients.
+pub static GF12: TechCoeffs = TechCoeffs {
+    gate_delay_ps: 14.0,
+    wire_ps_per_um: 0.09,
+    cell_area_um2: 0.45,
+    ff_area_um2: 1.9,
+    sram_um2_per_bit: 0.035,
+    cell_sw_fj: 0.55,
+    ff_int_fj: 3.0,
+    sram_fj_per_bit: 9.0,
+    leak_nw_per_cell: 22.0,
+    sram_leak_nw_per_kb: 45.0,
+    cts_overhead: 0.35,
+    f_ceiling_ghz: 2.6,
+    dram_pj_per_byte: 4.0,
+};
+
+/// NanGate45-class coefficients (open PDK; slower, larger, hungrier).
+pub static NG45: TechCoeffs = TechCoeffs {
+    gate_delay_ps: 42.0,
+    wire_ps_per_um: 0.22,
+    cell_area_um2: 3.2,
+    ff_area_um2: 13.0,
+    sram_um2_per_bit: 0.28,
+    cell_sw_fj: 3.8,
+    ff_int_fj: 18.0,
+    sram_fj_per_bit: 48.0,
+    leak_nw_per_cell: 95.0,
+    sram_leak_nw_per_kb: 260.0,
+    cts_overhead: 0.40,
+    f_ceiling_ghz: 1.1,
+    dram_pj_per_byte: 7.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ng45_is_slower_and_bigger() {
+        assert!(NG45.gate_delay_ps > 2.0 * GF12.gate_delay_ps);
+        assert!(NG45.cell_area_um2 > 5.0 * GF12.cell_area_um2);
+        assert!(NG45.cell_sw_fj > 3.0 * GF12.cell_sw_fj);
+        assert!(NG45.f_ceiling_ghz < GF12.f_ceiling_ghz);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for e in [Enablement::Gf12, Enablement::Ng45] {
+            assert_eq!(Enablement::from_name(e.name()).unwrap(), e);
+        }
+        assert!(Enablement::from_name("tsmc5").is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! The full SP&R flow: generator output -> synthesis -> P&R -> post-route
+//! PPA. One call here replaces the paper's hours-long Design Compiler +
+//! Innovus run for one (architecture, f_target, util) point; everything
+//! downstream (dataset generation, DSE ground truth) goes through it.
+
+use anyhow::Result;
+
+use crate::generators::{ArchConfig, DesignAggregates};
+
+use super::enablement::Enablement;
+use super::noise::{knob_bits, NoiseModel};
+use super::pnr::{place_and_route, BackendResult, PnrInput};
+use super::synthesis::{synthesize, SynthResult};
+
+/// Backend knobs sampled per paper §7.1 (target clock + floorplan util).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackendConfig {
+    pub f_target_ghz: f64,
+    pub util: f64,
+}
+
+impl BackendConfig {
+    pub fn new(f_target_ghz: f64, util: f64) -> Self {
+        BackendConfig { f_target_ghz, util }
+    }
+}
+
+/// ROI epsilon (paper §5.4): 0.1 for small std-cell designs (Axiline),
+/// 0.3 for the larger macro-heavy platforms.
+pub fn roi_epsilon(platform: crate::generators::Platform) -> f64 {
+    if platform.macro_heavy() {
+        0.3
+    } else {
+        0.1
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SpnrFlow {
+    pub enablement: Enablement,
+    pub noise: NoiseModel,
+}
+
+/// Full flow output: both stages, so experiments can correlate
+/// post-synthesis vs post-route (Fig. 1b).
+#[derive(Debug, Clone, Copy)]
+pub struct FlowResult {
+    pub synth: SynthResult,
+    pub backend: BackendResult,
+}
+
+impl SpnrFlow {
+    pub fn new(enablement: Enablement, seed: u64) -> Self {
+        SpnrFlow { enablement, noise: NoiseModel::new(seed) }
+    }
+
+    /// Run synthesis + P&R on a generated design.
+    pub fn run_on_aggregates(
+        &self,
+        agg: &DesignAggregates,
+        design_id: u64,
+        macro_heavy: bool,
+        cfg: BackendConfig,
+    ) -> FlowResult {
+        let tech = self.enablement.coeffs();
+        let kb = knob_bits(cfg.f_target_ghz, cfg.util);
+        let synth = synthesize(agg, cfg.f_target_ghz, tech, &self.noise, design_id, kb);
+        let inp = PnrInput {
+            synth: &synth,
+            f_target_ghz: cfg.f_target_ghz,
+            util: cfg.util,
+            macro_heavy,
+            macro_bits: agg.macro_bits,
+            macro_port_bits: agg.macro_port_bits,
+            ff_count: agg.ff_count,
+            comb_cells: agg.comb_cells,
+        };
+        let backend = place_and_route(&inp, tech, &self.noise, design_id, kb);
+        FlowResult { synth, backend }
+    }
+
+    /// Convenience: generate the design for an architectural config and
+    /// push it through the flow.
+    pub fn run(&self, arch: &ArchConfig, cfg: BackendConfig) -> Result<FlowResult> {
+        let tree = arch.platform.generate(arch)?;
+        let agg = tree.aggregates();
+        Ok(self.run_on_aggregates(&agg, arch.id_hash(), arch.platform.macro_heavy(), cfg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::Platform;
+
+    fn mid_config(p: Platform) -> ArchConfig {
+        ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+        )
+    }
+
+    #[test]
+    fn flow_runs_for_all_platforms_and_enablements() {
+        for p in Platform::ALL {
+            for e in [Enablement::Gf12, Enablement::Ng45] {
+                let flow = SpnrFlow::new(e, 1);
+                let r = flow.run(&mid_config(p), BackendConfig::new(0.8, 0.45)).unwrap();
+                assert!(r.backend.f_effective_ghz > 0.0, "{p}/{e}");
+                assert!(r.backend.total_power_w() > 0.0, "{p}/{e}");
+                assert!(r.backend.chip_area_mm2 > 0.0, "{p}/{e}");
+            }
+        }
+    }
+
+    #[test]
+    fn ng45_is_slower_bigger_hungrier() {
+        let p = Platform::Axiline;
+        let arch = mid_config(p);
+        let cfg = BackendConfig::new(0.8, 0.6);
+        let g = SpnrFlow::new(Enablement::Gf12, 1).run(&arch, cfg).unwrap().backend;
+        let n = SpnrFlow::new(Enablement::Ng45, 1).run(&arch, cfg).unwrap().backend;
+        assert!(n.f_max_ghz < g.f_max_ghz);
+        assert!(n.chip_area_mm2 > 3.0 * g.chip_area_mm2);
+        assert!(n.total_power_w() > g.total_power_w());
+    }
+
+    #[test]
+    fn deterministic_end_to_end() {
+        let flow = SpnrFlow::new(Enablement::Gf12, 99);
+        let arch = mid_config(Platform::GeneSys);
+        let cfg = BackendConfig::new(1.1, 0.4);
+        let a = flow.run(&arch, cfg).unwrap();
+        let b = flow.run(&arch, cfg).unwrap();
+        assert_eq!(a.backend, b.backend);
+        assert_eq!(a.synth, b.synth);
+    }
+
+    #[test]
+    fn seed_changes_outcomes_slightly() {
+        let arch = mid_config(Platform::Vta);
+        let cfg = BackendConfig::new(0.9, 0.4);
+        let a = SpnrFlow::new(Enablement::Gf12, 1).run(&arch, cfg).unwrap().backend;
+        let b = SpnrFlow::new(Enablement::Gf12, 2).run(&arch, cfg).unwrap().backend;
+        assert_ne!(a.f_effective_ghz, b.f_effective_ghz);
+        let rel = (a.f_effective_ghz - b.f_effective_ghz).abs() / a.f_effective_ghz;
+        assert!(rel < 0.25, "noise should be a perturbation, not chaos: {rel}");
+    }
+
+    #[test]
+    fn roi_epsilon_per_platform() {
+        assert_eq!(roi_epsilon(Platform::Axiline), 0.1);
+        assert_eq!(roi_epsilon(Platform::Vta), 0.3);
+    }
+}

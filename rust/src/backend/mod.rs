@@ -1,0 +1,20 @@
+//! Backend SP&R oracle (paper's Synopsys DC + Cadence Innovus flow on
+//! GF12 / NanGate45): analytic synthesis + place-and-route models that
+//! reproduce the *behavioural shapes* the paper's evaluation depends on —
+//! the ROI f_effective response (Fig. 3c/4), utilization congestion
+//! cliffs, macro-heavy floorplan penalties, post-synthesis vs post-route
+//! miscorrelation (Fig. 1b), and deterministic per-design tool noise.
+//!
+//! See DESIGN.md §2 (substitution table) and §6 (model equations).
+
+pub mod enablement;
+pub mod flow;
+pub mod noise;
+pub mod pnr;
+pub mod synthesis;
+
+pub use enablement::{Enablement, TechCoeffs};
+pub use flow::{roi_epsilon, BackendConfig, FlowResult, SpnrFlow};
+pub use noise::NoiseModel;
+pub use pnr::{BackendResult, PowerBreakdown};
+pub use synthesis::SynthResult;

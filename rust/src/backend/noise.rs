@@ -1,0 +1,93 @@
+//! Deterministic "tool noise": commercial SP&R flows are not smooth
+//! functions of their inputs — small input changes move heuristic
+//! decisions (placement seeds, buffer trees, congestion ripups) and the
+//! paper leans on this (Fig. 1b miscorrelation; larger outcome variance
+//! outside the ROI). We model it as config-hashed lognormal-ish
+//! multipliers: fully deterministic given (seed, design, knobs, stage),
+//! uncorrelated across stages, larger outside well-behaved regions.
+
+use crate::util::rng::{hash_bytes, splitmix64};
+
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseModel {
+    pub seed: u64,
+}
+
+impl NoiseModel {
+    pub fn new(seed: u64) -> Self {
+        NoiseModel { seed }
+    }
+
+    /// A standard-normal draw keyed by (seed, design id, knob bits, stage).
+    pub fn gauss(&self, design_id: u64, knob_bits: u64, stage: &str) -> f64 {
+        let mut bytes = Vec::with_capacity(32 + stage.len());
+        bytes.extend_from_slice(&self.seed.to_le_bytes());
+        bytes.extend_from_slice(&design_id.to_le_bytes());
+        bytes.extend_from_slice(&knob_bits.to_le_bytes());
+        bytes.extend_from_slice(stage.as_bytes());
+        let mut s = hash_bytes(&bytes);
+        let u1 = (splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64;
+        let u2 = (splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64;
+        (-2.0 * u1.max(1e-12).ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Multiplicative noise: exp(sigma * z), clamped to +-3 sigma.
+    pub fn factor(&self, design_id: u64, knob_bits: u64, stage: &str, sigma: f64) -> f64 {
+        let z = self.gauss(design_id, knob_bits, stage).clamp(-3.0, 3.0);
+        (sigma * z).exp()
+    }
+}
+
+/// Pack backend knobs into hashable bits (quantized so that float jitter
+/// below the tools' own granularity maps to the same noise draw).
+pub fn knob_bits(f_target_ghz: f64, util: f64) -> u64 {
+    let f_q = (f_target_ghz * 1000.0).round() as u64; // MHz granularity
+    let u_q = (util * 1000.0).round() as u64;
+    (f_q << 20) | u_q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let n = NoiseModel::new(42);
+        assert_eq!(n.gauss(1, 2, "syn"), n.gauss(1, 2, "syn"));
+        assert_eq!(n.factor(1, 2, "pnr", 0.03), n.factor(1, 2, "pnr", 0.03));
+    }
+
+    #[test]
+    fn stages_are_uncorrelated() {
+        let n = NoiseModel::new(42);
+        let m = 2000;
+        let mut dot = 0.0;
+        for i in 0..m {
+            dot += n.gauss(i, 0, "syn") * n.gauss(i, 0, "pnr");
+        }
+        let corr = dot / m as f64;
+        assert!(corr.abs() < 0.05, "corr={corr}");
+    }
+
+    #[test]
+    fn factor_centered_near_one() {
+        let n = NoiseModel::new(7);
+        let m = 4000;
+        let mean: f64 = (0..m).map(|i| n.factor(i, 3, "syn", 0.02)).sum::<f64>() / m as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn knob_quantization_groups_close_values() {
+        assert_eq!(knob_bits(1.00001, 0.70001), knob_bits(1.0, 0.7));
+        assert_ne!(knob_bits(1.1, 0.7), knob_bits(1.0, 0.7));
+    }
+
+    #[test]
+    fn different_seeds_different_noise() {
+        assert_ne!(
+            NoiseModel::new(1).gauss(5, 5, "syn"),
+            NoiseModel::new(2).gauss(5, 5, "syn")
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Logic synthesis stage (the paper runs Synopsys DC R-2020.09).
+//!
+//! Technology mapping of the generated design's aggregates under a target
+//! clock: area/power grow with timing pressure (cell upsizing), and the
+//! stage's *reported* power/fmax use no wire or congestion information —
+//! which is exactly why post-synthesis numbers miscorrelate with
+//! post-route reality (paper Fig. 1b); the P&R stage adds those effects
+//! with independent noise.
+
+use crate::generators::DesignAggregates;
+
+use super::enablement::TechCoeffs;
+use super::noise::NoiseModel;
+
+/// Average switching activity factor assumed by the power model.
+pub const ACTIVITY: f64 = 0.18;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynthResult {
+    /// Std-cell area after mapping/upsizing, um^2.
+    pub cell_area_um2: f64,
+    /// SRAM macro area, um^2.
+    pub macro_area_um2: f64,
+    /// Cell upsizing factor applied to meet timing (>= 1).
+    pub upsize: f64,
+    /// Post-synthesis *estimated* total power (W) — optimistic, no wires.
+    pub syn_power_w: f64,
+    /// Post-synthesis *estimated* max frequency (GHz) — optimistic.
+    pub syn_fmax_ghz: f64,
+    /// Intrinsic logic-path delay after upsizing, ps (pre-wire).
+    pub logic_delay_ps: f64,
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Run the synthesis model.
+///
+/// `design_id` keys the deterministic tool noise (paper: run-to-run and
+/// design-to-design heuristic variation).
+pub fn synthesize(
+    agg: &DesignAggregates,
+    f_target_ghz: f64,
+    tech: &TechCoeffs,
+    noise: &NoiseModel,
+    design_id: u64,
+    knob_bits: u64,
+) -> SynthResult {
+    let p_target_ps = 1000.0 / f_target_ghz.max(1e-3);
+    let logic_delay_raw = agg.logic_depth * tech.gate_delay_ps;
+
+    // Timing pressure -> upsizing. Pressure ~1 means the intrinsic path
+    // barely fits the target period; DC upsizes (area+power) and buys
+    // back ~12% delay at full effort.
+    let pressure = logic_delay_raw / p_target_ps;
+    let effort = sigmoid((pressure - 0.75) * 6.0);
+    let upsize = 1.0 + 0.30 * effort;
+    let logic_delay_ps = logic_delay_raw * (1.0 - 0.12 * effort);
+
+    let cell_area = (agg.comb_cells * tech.cell_area_um2 * agg.avg_fanin.max(1.0) / 2.6
+        + agg.ff_count * tech.ff_area_um2)
+        * upsize
+        * noise.factor(design_id, knob_bits, "syn_area", 0.015);
+    let macro_area = agg.macro_bits * tech.sram_um2_per_bit;
+
+    // Post-synthesis power estimate: zero-wire-load, independent noise.
+    let sw = agg.comb_cells * tech.cell_sw_fj * ACTIVITY * f_target_ghz * 1e-6 * upsize;
+    let int = agg.ff_count * tech.ff_int_fj * f_target_ghz * 1e-6;
+    let leak = (agg.comb_cells * tech.leak_nw_per_cell
+        + agg.macro_bits / 1024.0 * tech.sram_leak_nw_per_kb)
+        * 1e-9
+        * upsize.powf(1.5);
+    let syn_power_w =
+        (sw + int + leak) * noise.factor(design_id, knob_bits, "syn_power", 0.06);
+
+    // Optimistic fmax: logic only, no routing detour, no CTS skew.
+    let syn_fmax_ghz = (1000.0 / logic_delay_ps)
+        .min(tech.f_ceiling_ghz * 1.3)
+        * noise.factor(design_id, knob_bits, "syn_fmax", 0.05);
+
+    SynthResult {
+        cell_area_um2: cell_area,
+        macro_area_um2: macro_area,
+        upsize,
+        syn_power_w,
+        syn_fmax_ghz,
+        logic_delay_ps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::enablement::GF12;
+    use crate::generators::{ArchConfig, Platform};
+
+    fn agg() -> DesignAggregates {
+        let p = Platform::Vta;
+        let cfg = ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+        );
+        p.generate(&cfg).unwrap().aggregates()
+    }
+
+    #[test]
+    fn tighter_clock_costs_area_and_power() {
+        let a = agg();
+        let n = NoiseModel::new(0);
+        let relaxed = synthesize(&a, 0.3, &GF12, &n, 1, 1);
+        let tight = synthesize(&a, 2.2, &GF12, &n, 1, 1);
+        assert!(tight.cell_area_um2 > relaxed.cell_area_um2);
+        assert!(tight.upsize > relaxed.upsize);
+        // dynamic power scales with both f and upsizing
+        assert!(tight.syn_power_w > 3.0 * relaxed.syn_power_w);
+    }
+
+    #[test]
+    fn upsizing_buys_back_delay() {
+        let a = agg();
+        let n = NoiseModel::new(0);
+        let relaxed = synthesize(&a, 0.3, &GF12, &n, 1, 1);
+        let tight = synthesize(&a, 2.2, &GF12, &n, 1, 1);
+        assert!(tight.logic_delay_ps < relaxed.logic_delay_ps);
+    }
+
+    #[test]
+    fn macro_area_independent_of_clock() {
+        let a = agg();
+        let n = NoiseModel::new(0);
+        let x = synthesize(&a, 0.5, &GF12, &n, 1, 1);
+        let y = synthesize(&a, 1.5, &GF12, &n, 1, 1);
+        assert_eq!(x.macro_area_um2, y.macro_area_um2);
+        assert!(x.macro_area_um2 > 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_design_and_knobs() {
+        let a = agg();
+        let n = NoiseModel::new(3);
+        let x = synthesize(&a, 1.0, &GF12, &n, 7, 9);
+        let y = synthesize(&a, 1.0, &GF12, &n, 7, 9);
+        assert_eq!(x, y);
+        let z = synthesize(&a, 1.0, &GF12, &n, 8, 9);
+        assert_ne!(x.cell_area_um2, z.cell_area_um2);
+    }
+}

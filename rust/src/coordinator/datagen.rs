@@ -1,0 +1,271 @@
+//! Dataset generation (paper §7.1): sample architectural configurations
+//! per platform strategy, sample backend configurations with LHS over
+//! the platform's (f_target, util) window (Fig. 6), run every
+//! (architecture x backend) point through the SP&R oracle + system
+//! simulator in parallel, and label ROI membership (Eq. 4).
+
+use anyhow::Result;
+
+use crate::backend::{roi_epsilon, BackendConfig, Enablement, SpnrFlow};
+use crate::data::{Dataset, Row, Split};
+use crate::generators::{unified_features, ArchConfig, Lhg, Platform};
+use crate::sampling::{quantize, Sampler, SamplerKind};
+use crate::simulators::simulate;
+use crate::util::pool::{default_workers, par_map};
+
+#[derive(Debug, Clone)]
+pub struct DatagenConfig {
+    pub platform: Platform,
+    pub enablement: Enablement,
+    /// Architectural configurations to sample.
+    pub n_arch: usize,
+    /// Backend points for the training pool and the held-out test pool
+    /// (sampled separately — paper §7.2/Fig. 6).
+    pub n_backend_train: usize,
+    pub n_backend_test: usize,
+    pub arch_sampler: SamplerKind,
+    pub seed: u64,
+}
+
+impl DatagenConfig {
+    pub fn small(platform: Platform, enablement: Enablement) -> DatagenConfig {
+        DatagenConfig {
+            platform,
+            enablement,
+            n_arch: match platform {
+                Platform::Axiline => 24,
+                Platform::Tabla => 12,
+                _ => 14,
+            },
+            n_backend_train: 30,
+            n_backend_test: 10,
+            arch_sampler: SamplerKind::Lhs,
+            seed: 2023,
+        }
+    }
+}
+
+/// Backend sampling windows (paper Fig. 6): std-cell Axiline gets the
+/// wide window; macro-heavy platforms the conservative one. The
+/// frequency window scales with the enablement's speed (the paper's
+/// NG45 runs target proportionally lower clocks than GF12).
+pub fn backend_window(
+    platform: Platform,
+    enablement: Enablement,
+) -> ((f64, f64), (f64, f64)) {
+    let f_scale = enablement.coeffs().f_ceiling_ghz
+        / Enablement::Gf12.coeffs().f_ceiling_ghz;
+    let ((f_lo, f_hi), util) = if platform.macro_heavy() {
+        ((0.2, 1.5), (0.2, 0.6)) // (f_target GHz range, util range)
+    } else {
+        ((0.4, 2.2), (0.4, 0.9))
+    };
+    ((f_lo * f_scale, f_hi * f_scale), util)
+}
+
+/// Sample `n` backend configurations with LHS.
+pub fn sample_backend(
+    platform: Platform,
+    enablement: Enablement,
+    n: usize,
+    seed: u64,
+) -> Vec<BackendConfig> {
+    let ((f_lo, f_hi), (u_lo, u_hi)) = backend_window(platform, enablement);
+    let mut sampler = Sampler::new(SamplerKind::Lhs, 2, seed);
+    sampler
+        .sample(n)
+        .into_iter()
+        .map(|p| BackendConfig::new(f_lo + p[0] * (f_hi - f_lo), u_lo + p[1] * (u_hi - u_lo)))
+        .collect()
+}
+
+/// Sample architectural configurations (paper §7.1 strategies, unified
+/// through the configured sampler + per-platform quantization grids).
+pub fn sample_archs(
+    platform: Platform,
+    n: usize,
+    kind: SamplerKind,
+    seed: u64,
+) -> Vec<ArchConfig> {
+    let space = platform.param_space();
+    let mut sampler = Sampler::new(kind, space.len(), seed);
+    let mut out = Vec::with_capacity(n);
+    let mut seen = std::collections::BTreeSet::new();
+    // oversample: quantization can collide on coarse grids
+    let points = sampler.sample(n * 8);
+    for vals in quantize(&points, &space) {
+        let cfg = ArchConfig::new(platform, vals);
+        if seen.insert(cfg.id_hash()) {
+            out.push(cfg);
+            if out.len() == n {
+                break;
+            }
+        }
+    }
+    out
+}
+
+pub struct GeneratedData {
+    pub dataset: Dataset,
+    /// Row split induced by the separately-sampled backend pools
+    /// (unseen-backend protocol).
+    pub backend_split: Split,
+}
+
+/// Run the full datagen pipeline.
+pub fn generate(cfg: &DatagenConfig) -> Result<GeneratedData> {
+    let archs = sample_archs(cfg.platform, cfg.n_arch, cfg.arch_sampler, cfg.seed);
+    let backends_train = sample_backend(cfg.platform, cfg.enablement, cfg.n_backend_train, cfg.seed ^ 0xB1);
+    let backends_test = sample_backend(cfg.platform, cfg.enablement, cfg.n_backend_test, cfg.seed ^ 0xB2);
+    build_rows(cfg, archs, &backends_train, &backends_test)
+}
+
+/// Core row construction over explicit arch/backend sets (experiments
+/// that control sampling — Table 3, Fig. 10 — call this directly).
+pub fn build_rows(
+    cfg: &DatagenConfig,
+    archs: Vec<ArchConfig>,
+    backends_train: &[BackendConfig],
+    backends_test: &[BackendConfig],
+) -> Result<GeneratedData> {
+    let flow = SpnrFlow::new(cfg.enablement, cfg.seed);
+    let eps = roi_epsilon(cfg.platform);
+
+    // precompute trees/aggregates once per arch
+    let prep: Vec<_> = archs
+        .iter()
+        .map(|a| {
+            let tree = a.platform.generate(a)?;
+            let agg = tree.aggregates();
+            let lhg = Lhg::from_tree(&tree);
+            Ok((agg, lhg, a.id_hash()))
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut jobs = Vec::new();
+    for (ai, _) in archs.iter().enumerate() {
+        for (bi, b) in backends_train.iter().enumerate() {
+            jobs.push((ai, *b, true, bi));
+        }
+        for (bi, b) in backends_test.iter().enumerate() {
+            jobs.push((ai, *b, false, bi));
+        }
+    }
+
+    let rows: Vec<Row> = par_map(jobs.len(), default_workers(), |j| {
+        let (ai, bcfg, _, _) = jobs[j];
+        let arch = &archs[ai];
+        let (agg, _, design_id) = &prep[ai];
+        let fr = flow.run_on_aggregates(agg, *design_id, arch.platform.macro_heavy(), bcfg);
+        let sys = simulate(arch, &fr.backend, cfg.enablement).expect("simulate");
+        let feats = unified_features(
+            arch,
+            bcfg.f_target_ghz,
+            bcfg.util,
+            agg.comb_cells,
+            agg.macro_bits,
+        );
+        Row {
+            arch_idx: ai,
+            features: feats,
+            f_target_ghz: bcfg.f_target_ghz,
+            util: bcfg.util,
+            power_w: fr.backend.total_power_w(),
+            f_effective_ghz: fr.backend.f_effective_ghz,
+            area_mm2: fr.backend.chip_area_mm2,
+            energy_j: sys.energy_j,
+            runtime_s: sys.runtime_s,
+            in_roi: fr.backend.in_roi(bcfg.f_target_ghz, eps),
+        }
+    });
+
+    let mut split = Split::default();
+    for (i, (_, _, is_train, _)) in jobs.iter().enumerate() {
+        if *is_train {
+            split.train.push(i);
+        } else {
+            split.test.push(i);
+        }
+    }
+
+    let lhgs = prep.into_iter().map(|(_, l, _)| l).collect();
+    Ok(GeneratedData {
+        dataset: Dataset {
+            platform: cfg.platform,
+            enablement: cfg.enablement,
+            archs,
+            lhgs,
+            rows,
+        },
+        backend_split: split,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_full_cartesian_with_split() {
+        let mut cfg = DatagenConfig::small(Platform::Axiline, Enablement::Gf12);
+        cfg.n_arch = 4;
+        cfg.n_backend_train = 5;
+        cfg.n_backend_test = 2;
+        let g = generate(&cfg).unwrap();
+        assert_eq!(g.dataset.len(), 4 * 7);
+        assert_eq!(g.backend_split.train.len(), 4 * 5);
+        assert_eq!(g.backend_split.test.len(), 4 * 2);
+        g.backend_split.validate(g.dataset.len()).unwrap();
+        assert_eq!(g.dataset.archs.len(), 4);
+        assert_eq!(g.dataset.lhgs.len(), 4);
+    }
+
+    #[test]
+    fn sampled_archs_are_unique_and_legal() {
+        for p in Platform::ALL {
+            let archs = sample_archs(p, 10, SamplerKind::Sobol, 3);
+            assert!(archs.len() >= 8, "{p}: only {} unique", archs.len());
+            let mut ids = std::collections::BTreeSet::new();
+            for a in &archs {
+                a.validate().unwrap();
+                assert!(ids.insert(a.id_hash()));
+            }
+        }
+    }
+
+    #[test]
+    fn backend_windows_respected() {
+        for p in Platform::ALL {
+            let ((f_lo, f_hi), (u_lo, u_hi)) = backend_window(p, Enablement::Gf12);
+            for b in sample_backend(p, Enablement::Gf12, 20, 1) {
+                assert!((f_lo..=f_hi).contains(&b.f_target_ghz), "{p}");
+                assert!((u_lo..=u_hi).contains(&b.util), "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn some_rows_in_roi_some_out() {
+        let mut cfg = DatagenConfig::small(Platform::Axiline, Enablement::Gf12);
+        cfg.n_arch = 6;
+        cfg.n_backend_train = 12;
+        cfg.n_backend_test = 4;
+        let g = generate(&cfg).unwrap();
+        let in_roi = g.dataset.rows.iter().filter(|r| r.in_roi).count();
+        assert!(in_roi > 0, "no ROI rows at all");
+        assert!(in_roi < g.dataset.len(), "everything in ROI — Eq. 4 gate inert");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = DatagenConfig {
+            n_arch: 3,
+            n_backend_train: 4,
+            n_backend_test: 2,
+            ..DatagenConfig::small(Platform::Vta, Enablement::Gf12)
+        };
+        let a = generate(&cfg).unwrap();
+        let b = generate(&cfg).unwrap();
+        assert_eq!(a.dataset.rows, b.dataset.rows);
+    }
+}

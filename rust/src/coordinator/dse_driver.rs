@@ -1,0 +1,254 @@
+//! DSE driver (paper §8.4): MOTPE proposes (architecture, backend)
+//! knobs; trained two-stage models predict the five metrics; ROI +
+//! power/runtime constraints gate feasibility; the Pareto front of
+//! (energy, area) accumulates; the Eq. 3 cost picks the winners; and
+//! the ground-truth oracle (full flow + simulator) scores the top-k —
+//! the paper's "within 6-7% of post-SP&R" check.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::backend::{roi_epsilon, BackendConfig, Enablement, SpnrFlow};
+use crate::data::{Dataset, Metric, Split};
+use crate::dse::{select_best, Candidate, CostSpec, Motpe, MotpeConfig};
+use crate::generators::{unified_features, ArchConfig, ParamKind, ParamSpec, Platform};
+use crate::models::{Gbdt, GbdtParams, RoiClassifier};
+use crate::simulators::{simulate, simulate_nondnn};
+use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
+
+/// The trained predictor bundle the DSE consults (two-stage: ROI
+/// classifier + per-metric GBDT regressors — the fastest family at
+/// equal accuracy on our data, exactly the surrogate role MOTPE needs).
+pub struct SurrogateBundle {
+    pub classifier: RoiClassifier,
+    pub regressors: BTreeMap<Metric, Gbdt>,
+}
+
+impl SurrogateBundle {
+    /// Fit on a generated dataset's training rows.
+    pub fn fit(ds: &Dataset, split: &Split, seed: u64) -> Result<SurrogateBundle> {
+        let x_all = ds.features(&split.train);
+        let roi = ds.roi_labels(&split.train);
+        let classifier = RoiClassifier::fit(&x_all, &roi, seed);
+        let train_roi = ds.roi_subset(&split.train);
+        anyhow::ensure!(!train_roi.is_empty(), "no ROI rows to fit on");
+        let x = ds.features(&train_roi);
+        let mut regressors = BTreeMap::new();
+        for m in Metric::ALL {
+            // all five metrics are positive with wide dynamic range across
+            // the design space: fit in log space so small designs are not
+            // swamped by large ones (relative accuracy is what the DSE
+            // ground-truth check measures)
+            let y: Vec<f64> = ds
+                .targets(&train_roi, m)
+                .iter()
+                .map(|v| v.max(1e-30).ln())
+                .collect();
+            let model = Gbdt::fit(&x, &y, GbdtParams::default(), seed ^ m.name().len() as u64);
+            regressors.insert(m, model);
+        }
+        Ok(SurrogateBundle { classifier, regressors })
+    }
+
+    pub fn predict(&self, feats: &[f64]) -> (bool, BTreeMap<Metric, f64>) {
+        let in_roi = self.classifier.prob(feats) >= 0.5;
+        let mut out = BTreeMap::new();
+        for (m, model) in &self.regressors {
+            out.insert(*m, model.predict_one(feats).exp());
+        }
+        (in_roi, out)
+    }
+}
+
+/// What the DSE explores: a subset of architectural knobs (the rest
+/// frozen at `base_arch`) plus the two backend knobs.
+pub struct DseProblem {
+    pub base_arch: ArchConfig,
+    /// Names of architectural parameters to expose to MOTPE (with
+    /// optional narrowed ranges); empty = backend-only DSE (Fig. 12).
+    pub arch_knobs: Vec<ParamSpec>,
+    pub f_target_range: (f64, f64),
+    pub util_range: (f64, f64),
+    pub cost: CostSpec,
+    /// Explicit workload override for non-DNN platforms (e.g. the
+    /// paper's SVM-55 for Axiline).
+    pub workload: Option<NonDnnWorkload>,
+}
+
+impl DseProblem {
+    fn space(&self) -> Vec<ParamSpec> {
+        let mut space = self.arch_knobs.clone();
+        space.push(ParamSpec {
+            name: "f_target",
+            kind: ParamKind::Float { lo: self.f_target_range.0, hi: self.f_target_range.1 },
+        });
+        space.push(ParamSpec {
+            name: "util",
+            kind: ParamKind::Float { lo: self.util_range.0, hi: self.util_range.1 },
+        });
+        space
+    }
+
+    /// Materialize a proposal into (arch config, backend config).
+    fn decode(&self, x: &[f64]) -> (ArchConfig, BackendConfig) {
+        let mut arch = self.base_arch.clone();
+        let arch_space = arch.platform.param_space();
+        for (k, spec) in self.arch_knobs.iter().enumerate() {
+            let idx = arch_space
+                .iter()
+                .position(|s| s.name == spec.name)
+                .unwrap_or_else(|| panic!("unknown arch knob {}", spec.name));
+            arch.values[idx] = x[k];
+        }
+        let n = self.arch_knobs.len();
+        (arch, BackendConfig::new(x[n], x[n + 1]))
+    }
+}
+
+/// One explored DSE point, predicted and (optionally) ground-truthed.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub x: Vec<f64>,
+    pub predicted: BTreeMap<Metric, f64>,
+    pub feasible: bool,
+}
+
+pub struct DseOutcome {
+    pub points: Vec<DsePoint>,
+    /// Indices of the Eq.-3 winners (into `points`).
+    pub best: Vec<usize>,
+    /// Per-winner, per-metric relative error |pred - truth| / truth.
+    pub ground_truth_errors: Vec<BTreeMap<Metric, f64>>,
+}
+
+pub struct DseDriver {
+    pub enablement: Enablement,
+    pub surrogate: SurrogateBundle,
+    pub flow_seed: u64,
+}
+
+impl DseDriver {
+    /// Run MOTPE for `iterations`, then ground-truth the top-k winners.
+    pub fn run(
+        &self,
+        problem: &DseProblem,
+        iterations: usize,
+        top_k: usize,
+        motpe_cfg: MotpeConfig,
+    ) -> Result<DseOutcome> {
+        let mut motpe = Motpe::new(problem.space(), motpe_cfg);
+        let mut points = Vec::with_capacity(iterations);
+
+        for _ in 0..iterations {
+            let x = motpe.ask();
+            let (arch, bcfg) = problem.decode(&x);
+            let tree = arch.platform.generate(&arch)?;
+            let agg = tree.aggregates();
+            let feats = unified_features(
+                &arch,
+                bcfg.f_target_ghz,
+                bcfg.util,
+                agg.comb_cells,
+                agg.macro_bits,
+            );
+            let (in_roi, pred) = self.surrogate.predict(&feats);
+            let feasible = in_roi
+                && problem.cost.feasible(pred[&Metric::Power], pred[&Metric::Runtime]);
+            let objectives = vec![pred[&Metric::Energy], pred[&Metric::Area]];
+            motpe.tell(x.clone(), objectives, feasible);
+            points.push(DsePoint { x, predicted: pred, feasible });
+        }
+
+        // Eq. 3 selection over the feasible Pareto set. MOTPE converges
+        // onto good configurations and proposes them repeatedly — dedup
+        // by knob vector so top-k names k *distinct* designs.
+        let mut seen = std::collections::BTreeSet::new();
+        let mut candidates: Vec<Candidate> = Vec::new();
+        let mut cand_to_point = Vec::new();
+        for (i, p) in points.iter().enumerate() {
+            let key: Vec<u64> = p.x.iter().map(|v| v.to_bits()).collect();
+            if !seen.insert(key) {
+                continue;
+            }
+            candidates.push(Candidate {
+                x: p.x.clone(),
+                energy_j: p.predicted[&Metric::Energy],
+                runtime_s: p.predicted[&Metric::Runtime],
+                power_w: p.predicted[&Metric::Power],
+                area_mm2: p.predicted[&Metric::Area],
+                in_roi: p.feasible,
+            });
+            cand_to_point.push(i);
+        }
+        let best: Vec<usize> = select_best(&candidates, &problem.cost, top_k)
+            .into_iter()
+            .map(|c| cand_to_point[c])
+            .collect();
+
+        // ground truth: full SP&R oracle + simulator on the winners
+        let flow = SpnrFlow::new(self.enablement, self.flow_seed);
+        let mut ground_truth_errors = Vec::new();
+        for &bi in &best {
+            let (arch, bcfg) = problem.decode(&points[bi].x);
+            let fr = flow.run(&arch, bcfg)?;
+            let sys = match problem.workload {
+                Some(wl) => simulate_nondnn(&arch, &fr.backend, self.enablement, &wl)?,
+                None => simulate(&arch, &fr.backend, self.enablement)?,
+            };
+            let truth: BTreeMap<Metric, f64> = BTreeMap::from([
+                (Metric::Power, fr.backend.total_power_w()),
+                (Metric::Performance, fr.backend.f_effective_ghz),
+                (Metric::Area, fr.backend.chip_area_mm2),
+                (Metric::Energy, sys.energy_j),
+                (Metric::Runtime, sys.runtime_s),
+            ]);
+            let mut errs = BTreeMap::new();
+            for m in Metric::ALL {
+                let p = points[bi].predicted[&m];
+                errs.insert(m, (p - truth[&m]).abs() / truth[&m].abs().max(1e-12));
+            }
+            ground_truth_errors.push(errs);
+        }
+
+        Ok(DseOutcome { points, best, ground_truth_errors })
+    }
+}
+
+/// The paper's Axiline-SVM-55 DSE problem (§8.4): size 10-51, cycles
+/// 5-21, f_target 0.3-1.3 GHz, util 0.4-0.8, alpha=1, beta=0.001.
+pub fn axiline_svm_problem(p_max: f64, r_max: f64) -> DseProblem {
+    let platform = Platform::Axiline;
+    let space = platform.param_space();
+    let mut base = ArchConfig::new(
+        platform,
+        space.iter().map(|s| s.kind.from_unit(0.5)).collect(),
+    );
+    // benchmark = svm
+    let bidx = space.iter().position(|s| s.name == "benchmark").unwrap();
+    base.values[bidx] = 0.0;
+    DseProblem {
+        base_arch: base,
+        arch_knobs: vec![
+            ParamSpec { name: "dimension", kind: ParamKind::Int { lo: 10, hi: 51 } },
+            ParamSpec { name: "num_cycles", kind: ParamKind::Int { lo: 5, hi: 21 } },
+        ],
+        f_target_range: (0.3, 1.3),
+        util_range: (0.4, 0.8),
+        cost: CostSpec { alpha: 1.0, beta: 0.001, p_max, r_max },
+        workload: Some(NonDnnWorkload::standard(NonDnnAlgo::Svm, 55)),
+    }
+}
+
+/// The paper's VTA backend-only DSE (§8.4): f_target 0.3-1.3 GHz, util
+/// 0.25-0.55, alpha=beta=1.
+pub fn vta_backend_problem(base: ArchConfig, p_max: f64, r_max: f64) -> DseProblem {
+    DseProblem {
+        base_arch: base,
+        arch_knobs: vec![],
+        f_target_range: (0.3, 1.3),
+        util_range: (0.25, 0.55),
+        cost: CostSpec { alpha: 1.0, beta: 1.0, p_max, r_max },
+        workload: None,
+    }
+}

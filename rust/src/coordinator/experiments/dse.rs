@@ -1,0 +1,156 @@
+//! DSE experiments (paper §8.4 / Figs. 11-12): MOTPE + trained two-stage
+//! surrogates explore the space; the Eq. 3 winners are ground-truthed
+//! against the full SP&R oracle + simulator. The paper's check: top-3
+//! predictions within 7% (Axiline-SVM/NG45) and 6% (VTA/GF12).
+
+use anyhow::Result;
+
+use crate::backend::Enablement;
+use crate::coordinator::datagen::{self, DatagenConfig};
+use crate::coordinator::dse_driver::{
+    axiline_svm_problem, vta_backend_problem, DseDriver, SurrogateBundle,
+};
+use crate::data::Metric;
+use crate::dse::MotpeConfig;
+use crate::generators::{ArchConfig, Platform};
+
+use super::{write_csv, ExpOptions};
+
+fn report(
+    opts: &ExpOptions,
+    name: &str,
+    outcome: &crate::coordinator::dse_driver::DseOutcome,
+) -> Result<f64> {
+    let feasible = outcome.points.iter().filter(|p| p.feasible).count();
+    println!(
+        "explored {} points ({} feasible/green, {} rejected/red)",
+        outcome.points.len(),
+        feasible,
+        outcome.points.len() - feasible
+    );
+    let mut rows = Vec::new();
+    for p in &outcome.points {
+        rows.push(format!(
+            "{},{},{},{},{}",
+            p.feasible,
+            p.predicted[&Metric::Energy],
+            p.predicted[&Metric::Runtime],
+            p.predicted[&Metric::Area],
+            p.predicted[&Metric::Power],
+        ));
+    }
+    write_csv(
+        &opts.csv_path(name),
+        "feasible,energy_j,runtime_s,area_mm2,power_w",
+        &rows,
+    )?;
+
+    let mut worst = 0.0f64;
+    for (rank, errs) in outcome.ground_truth_errors.iter().enumerate() {
+        let line: Vec<String> = Metric::ALL
+            .iter()
+            .map(|m| format!("{}={:.1}%", m.name(), errs[m] * 100.0))
+            .collect();
+        println!("top-{} prediction vs post-SP&R truth: {}", rank + 1, line.join(" "));
+        for m in Metric::ALL {
+            worst = worst.max(errs[&m]);
+        }
+    }
+    println!("worst top-k error: {:.1}%", worst * 100.0);
+    Ok(worst)
+}
+
+/// Fig. 11: DSE of Axiline-SVM (55 features) on NG45; size 10-51,
+/// num_cycles 5-21, f_target 0.3-1.3 GHz, util 0.4-0.8; alpha=1,
+/// beta=0.001.
+pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
+    let enablement = Enablement::Ng45;
+    let mut cfg = DatagenConfig::small(Platform::Axiline, enablement);
+    cfg.n_arch = 60; // datagen is cheap; dense coverage sharpens the surrogate
+    if opts.quick {
+        cfg.n_arch = 10;
+        cfg.n_backend_train = 12;
+        cfg.n_backend_test = 4;
+    }
+    println!("[fig11] generating Axiline/NG45 training data ({} archs)...", cfg.n_arch);
+    let g = datagen::generate(&cfg)?;
+    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, opts.seed)?;
+    let driver = DseDriver { enablement, surrogate, flow_seed: cfg.seed };
+
+    // constraints: generous power cap, runtime cap from the dataset's
+    // median (forces the search away from the slow tail)
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r_max = runtimes[runtimes.len() / 2];
+    let p_max = g
+        .dataset
+        .rows
+        .iter()
+        .map(|r| r.power_w)
+        .fold(0.0f64, f64::max);
+    let problem = axiline_svm_problem(p_max, r_max);
+
+    let iters = if opts.quick { 120 } else { 400 };
+    println!("[fig11] MOTPE x {iters} over (dimension, num_cycles, f_target, util)");
+    let outcome = driver.run(
+        &problem,
+        iters,
+        3,
+        MotpeConfig { seed: opts.seed, ..Default::default() },
+    )?;
+    let worst = report(opts, "fig11", &outcome)?;
+    println!(
+        "paper claim: top-3 within 7% of post-SP&R  |  measured worst: {:.1}%",
+        worst * 100.0
+    );
+    Ok(())
+}
+
+/// Fig. 12: backend-only DSE of a fixed VTA design on GF12; f_target
+/// 0.3-1.3 GHz, util 0.25-0.55; alpha=beta=1.
+pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
+    let enablement = Enablement::Gf12;
+    let mut cfg = DatagenConfig::small(Platform::Vta, enablement);
+    cfg.n_arch = 24;
+    cfg.n_backend_train = 60; // backend-only DSE: densify the knob plane
+    if opts.quick {
+        cfg.n_arch = 8;
+        cfg.n_backend_train = 12;
+        cfg.n_backend_test = 4;
+    }
+    println!("[fig12] generating VTA/GF12 training data ({} archs)...", cfg.n_arch);
+    let g = datagen::generate(&cfg)?;
+    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, opts.seed)?;
+    let driver = DseDriver { enablement, surrogate, flow_seed: cfg.seed };
+
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r_max = runtimes[runtimes.len() / 2];
+    let p_max = g.dataset.rows.iter().map(|r| r.power_w).fold(0.0f64, f64::max);
+
+    // the fixed VTA architecture under backend DSE: mid-grid
+    let base = ArchConfig::new(
+        Platform::Vta,
+        Platform::Vta
+            .param_space()
+            .iter()
+            .map(|s| s.kind.from_unit(0.5))
+            .collect(),
+    );
+    let problem = vta_backend_problem(base, p_max, r_max);
+
+    let iters = if opts.quick { 100 } else { 300 };
+    println!("[fig12] MOTPE x {iters} over (f_target, util)");
+    let outcome = driver.run(
+        &problem,
+        iters,
+        3,
+        MotpeConfig { seed: opts.seed, ..Default::default() },
+    )?;
+    let worst = report(opts, "fig12", &outcome)?;
+    println!(
+        "paper claim: top-3 within 6% of post-SP&R  |  measured worst: {:.1}%",
+        worst * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Fig. 8: t-SNE of trained GCN graph embeddings for TABLA, VTA and
+//! Axiline — distinct architectural configurations must form distinct
+//! clusters (same-config points across backend knobs share an LHG, so
+//! the check is inter- vs intra-config separation of the learned
+//! embedding + global-feature space).
+
+use anyhow::Result;
+
+use crate::analysis::{tsne, TsneConfig};
+use crate::backend::Enablement;
+use crate::coordinator::datagen::{self, DatagenConfig};
+use crate::coordinator::trainer::Trainer;
+use crate::data::Metric;
+use crate::models::{GcnModel, GraphCache, TrainConfig};
+use crate::generators::Platform;
+
+use super::{write_csv, ExpOptions};
+
+pub fn fig8_tsne(opts: &ExpOptions) -> Result<()> {
+    let trainer = Trainer::from_artifacts()?;
+    let engine = trainer.engine.as_ref().unwrap().clone();
+    let platforms = if opts.quick {
+        vec![Platform::Axiline]
+    } else {
+        vec![Platform::Tabla, Platform::Vta, Platform::Axiline]
+    };
+    let mut rows = Vec::new();
+    for platform in platforms {
+        let mut cfg = DatagenConfig::small(platform, Enablement::Gf12);
+        cfg.n_arch = 8;
+        cfg.n_backend_train = 12;
+        cfg.n_backend_test = 4;
+        let g = datagen::generate(&cfg)?;
+        let ds = &g.dataset;
+        let cache = GraphCache::build(&ds.lhgs, engine.manifest.nodes)?;
+        let mut split = g.backend_split.clone();
+        ds.carve_validation(&mut split, 0.2, opts.seed);
+        let train_roi = ds.roi_subset(&split.train);
+        let val_roi = ds.roi_subset(&split.val);
+        let mut gcn = GcnModel::new(
+            engine.clone(),
+            "gcn3",
+            TrainConfig { max_epochs: 15, early_stop: 6, ..Default::default() },
+        )?;
+        let targets: Vec<f64> = ds.rows.iter().map(|r| r.target(Metric::Power)).collect();
+        gcn.fit(ds, &cache, &train_roi, &val_roi, &targets)?;
+
+        let idx: Vec<usize> = (0..ds.len()).collect();
+        let mut emb = gcn.embed_rows(ds, &cache, &idx)?;
+        // The pooled graph embedding is identical across backend knobs of
+        // one architecture (the LHG does not depend on them); append the
+        // backend features, as the full model's FC stage sees them, so
+        // each configuration forms a tight — not degenerate — cluster.
+        for (e, &i) in emb.iter_mut().zip(idx.iter()) {
+            e.push(ds.rows[i].features[12] * 0.3);
+            e.push(ds.rows[i].features[13] * 0.3);
+        }
+        let coords = tsne(&emb, TsneConfig { iterations: 250, ..Default::default() });
+
+        // separation: mean inter-config / intra-config distance
+        let (mut intra, mut ni) = (0.0, 0usize);
+        let (mut inter, mut nx) = (0.0, 0usize);
+        for i in 0..coords.len() {
+            for j in (i + 1)..coords.len() {
+                let d = ((coords[i][0] - coords[j][0]).powi(2)
+                    + (coords[i][1] - coords[j][1]).powi(2))
+                .sqrt();
+                if ds.rows[i].arch_idx == ds.rows[j].arch_idx {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    nx += 1;
+                }
+            }
+        }
+        let intra = intra / ni.max(1) as f64;
+        let inter = inter / nx.max(1) as f64;
+        println!(
+            "{platform}: t-SNE inter/intra config separation = {:.2} (want >> 1)",
+            inter / intra.max(1e-12)
+        );
+        for (i, c) in coords.iter().enumerate() {
+            rows.push(format!(
+                "{platform},{},{},{}",
+                ds.rows[i].arch_idx, c[0], c[1]
+            ));
+        }
+    }
+    write_csv(&opts.csv_path("fig8"), "platform,arch_idx,x,y", &rows)?;
+    println!("wrote {}", opts.csv_path("fig8").display());
+    Ok(())
+}

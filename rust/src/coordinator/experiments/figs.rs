@@ -1,0 +1,249 @@
+//! Figure experiments: 1b (synthesis/route miscorrelation), 3 (ROI
+//! regions), 4 (f_eff curves), 6 (backend samples), 9 (arch samples),
+//! 10 (extrapolation).
+
+use anyhow::Result;
+
+use crate::backend::{BackendConfig, Enablement, SpnrFlow};
+use crate::coordinator::datagen::{self, backend_window, DatagenConfig};
+use crate::data::Metric;
+use crate::generators::{ArchConfig, ParamKind, Platform};
+use crate::metrics::{kendall_tau, mape_stats};
+use crate::models::{Gbdt, GbdtParams};
+use crate::sampling::{quantize, Sampler, SamplerKind};
+use crate::simulators::{simulate_nondnn, EnergyModel};
+use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
+
+use super::{write_csv, ExpOptions};
+
+fn axiline_cfg(bench: f64, bits: f64, in_bits: f64, dim: f64, cyc: f64) -> ArchConfig {
+    ArchConfig::new(Platform::Axiline, vec![bench, bits, in_bits, dim, cyc])
+}
+
+/// Fig. 1b: Kendall tau between post-synthesis and post-route power /
+/// effective frequency for four TABLA designs over a backend sweep.
+/// Paper reports poor, inconsistent correlation (power tau: 0.61, -0.20,
+/// 0.07, 0.47; f_eff tau: 0.45, -0.20, -0.16, 0.10).
+pub fn fig1b_miscorrelation(opts: &ExpOptions) -> Result<()> {
+    let flow = SpnrFlow::new(Enablement::Gf12, opts.seed);
+    let designs = [
+        ArchConfig::new(Platform::Tabla, vec![4.0, 8.0, 8.0, 16.0, 0.0]),
+        ArchConfig::new(Platform::Tabla, vec![8.0, 8.0, 16.0, 16.0, 1.0]),
+        ArchConfig::new(Platform::Tabla, vec![4.0, 16.0, 16.0, 32.0, 0.0]),
+        ArchConfig::new(Platform::Tabla, vec![8.0, 16.0, 8.0, 32.0, 1.0]),
+    ];
+    // Sweep utilization at a per-design fixed target clock: a shared
+    // f_target sweep would trivially correlate both stages (power scales
+    // with f in both); the paper's miscorrelation is about what synthesis
+    // CANNOT see — floorplan/congestion/routing effects and tool noise.
+    let n_pts = if opts.quick { 12 } else { 40 };
+    let mut rows = Vec::new();
+    println!("design | tau(power syn,route) | tau(fmax syn, f_eff route)");
+    for (di, d) in designs.iter().enumerate() {
+        let f_target = 0.7 + 0.1 * di as f64;
+        let mut syn_p = Vec::new();
+        let mut pnr_p = Vec::new();
+        let mut syn_f = Vec::new();
+        let mut pnr_f = Vec::new();
+        for k in 0..n_pts {
+            let util = 0.2 + 0.4 * k as f64 / (n_pts - 1) as f64;
+            let fr = flow.run(d, BackendConfig::new(f_target, util))?;
+            syn_p.push(fr.synth.syn_power_w);
+            pnr_p.push(fr.backend.total_power_w());
+            syn_f.push(fr.synth.syn_fmax_ghz);
+            pnr_f.push(fr.backend.f_effective_ghz);
+        }
+        let tau_p = kendall_tau(&syn_p, &pnr_p);
+        let tau_f = kendall_tau(&syn_f, &pnr_f);
+        println!("TABLA-{} | {tau_p:+.2} | {tau_f:+.2}", di + 1);
+        rows.push(format!("tabla{},{tau_p},{tau_f}", di + 1));
+    }
+    write_csv(&opts.csv_path("fig1b"), "design,tau_power,tau_feff", &rows)?;
+    Ok(())
+}
+
+/// Fig. 3: energy-vs-runtime / runtime-vs-f_target / f_eff-vs-f_target
+/// for two Axiline recsys designs over 21 target clocks — exhibits the
+/// three regions (runtime / balance / energy) that define the ROI.
+pub fn fig3_roi_regions(opts: &ExpOptions) -> Result<()> {
+    let flow = SpnrFlow::new(Enablement::Gf12, opts.seed);
+    // Design-I: wide+slow; Design-II: narrow+fast (same algorithm)
+    let designs = [
+        ("Design-I", axiline_cfg(3.0, 16.0, 8.0, 40.0, 16.0)),
+        ("Design-II", axiline_cfg(3.0, 16.0, 8.0, 20.0, 4.0)),
+    ];
+    let wl = NonDnnWorkload::standard(NonDnnAlgo::Recsys, 55);
+    let mut rows = Vec::new();
+    println!("design | f_target | f_eff | runtime_ms | energy_mJ");
+    for (name, d) in &designs {
+        for i in 0..21 {
+            let ft = 0.2 + 0.1 * i as f64; // 0.2 .. 2.2 GHz
+            let fr = flow.run(d, BackendConfig::new(ft, 0.6))?;
+            let e = EnergyModel::new(&fr.backend, Enablement::Gf12);
+            let sys = simulate_nondnn(d, &fr.backend, Enablement::Gf12, &wl)?;
+            let _ = e;
+            println!(
+                "{name} | {ft:.2} | {:.3} | {:.3} | {:.3}",
+                fr.backend.f_effective_ghz,
+                sys.runtime_s * 1e3,
+                sys.energy_j * 1e3
+            );
+            rows.push(format!(
+                "{name},{ft},{},{},{}",
+                fr.backend.f_effective_ghz, sys.runtime_s, sys.energy_j
+            ));
+        }
+    }
+    write_csv(&opts.csv_path("fig3"), "design,f_target,f_eff,runtime_s,energy_j", &rows)?;
+    println!("(region of balance = band where f_eff tracks f_target; see fig3.csv)");
+    Ok(())
+}
+
+/// Fig. 4: f_eff vs f_target for Axiline / VTA / TABLA on GF12, with
+/// utilization varying over the Fig. 6 window.
+pub fn fig4_feff_curves(opts: &ExpOptions) -> Result<()> {
+    let flow = SpnrFlow::new(Enablement::Gf12, opts.seed);
+    let mut rows = Vec::new();
+    for p in [Platform::Axiline, Platform::Vta, Platform::Tabla] {
+        let arch = ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+        );
+        let ((f_lo, f_hi), (u_lo, u_hi)) = backend_window(p, Enablement::Gf12);
+        println!("--- {p} ---");
+        println!("f_target | util | f_eff");
+        let n = if opts.quick { 8 } else { 21 };
+        for i in 0..n {
+            let t = i as f64 / (n - 1) as f64;
+            let ft = f_lo + t * (f_hi - f_lo);
+            let util = u_lo + t * (u_hi - u_lo); // util varies with f (paper Fig. 6)
+            let fr = flow.run(&arch, BackendConfig::new(ft, util))?;
+            println!("{ft:.2} | {util:.2} | {:.3}", fr.backend.f_effective_ghz);
+            rows.push(format!("{p},{ft},{util},{}", fr.backend.f_effective_ghz));
+        }
+    }
+    write_csv(&opts.csv_path("fig4"), "platform,f_target,util,f_eff", &rows)?;
+    Ok(())
+}
+
+/// Fig. 6: LHS-sampled backend configurations (train/test pools).
+pub fn fig6_backend_samples(opts: &ExpOptions) -> Result<()> {
+    let mut rows = Vec::new();
+    for p in Platform::ALL {
+        let train = datagen::sample_backend(p, Enablement::Gf12, 30, opts.seed ^ 0xB1);
+        let test = datagen::sample_backend(p, Enablement::Gf12, 10, opts.seed ^ 0xB2);
+        println!("{p}: {} train + {} test backend points", train.len(), test.len());
+        for b in &train {
+            rows.push(format!("{p},train,{},{}", b.f_target_ghz, b.util));
+        }
+        for b in &test {
+            rows.push(format!("{p},test,{},{}", b.f_target_ghz, b.util));
+        }
+    }
+    write_csv(&opts.csv_path("fig6"), "platform,pool,f_target,util", &rows)?;
+    println!("wrote {}", opts.csv_path("fig6").display());
+    Ok(())
+}
+
+/// Fig. 9: Axiline architectural configurations sampled by LHS / Sobol /
+/// Halton (train+val+test pools).
+pub fn fig9_arch_samples(opts: &ExpOptions) -> Result<()> {
+    let space = Platform::Axiline.param_space();
+    let mut rows = Vec::new();
+    for kind in SamplerKind::ALL {
+        for (pool, n, seed) in [("train", 24, 0u64), ("val", 10, 1), ("test", 10, 2)] {
+            let mut s = Sampler::new(kind, space.len(), opts.seed ^ seed ^ kind.name().len() as u64);
+            let pts = quantize(&s.sample(n), &space);
+            for p in pts {
+                rows.push(format!(
+                    "{},{pool},{},{},{},{},{}",
+                    kind.name(),
+                    p[0],
+                    p[1],
+                    p[2],
+                    p[3],
+                    p[4]
+                ));
+            }
+        }
+        println!("{}: sampled 24 train + 10 val + 10 test architectures", kind.name());
+    }
+    write_csv(
+        &opts.csv_path("fig9"),
+        "sampler,pool,benchmark,bitwidth,input_bitwidth,dimension,num_cycles",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Fig. 10 / §8.3: extrapolation study — train on small Axiline
+/// dimensions, test beyond the training range; the model must degrade
+/// vs the in-range protocol (the paper's argument for covering the
+/// whole space with the training set).
+pub fn fig10_extrapolation(opts: &ExpOptions) -> Result<()> {
+    let platform = Platform::Axiline;
+    let enablement = Enablement::Gf12;
+    let base = DatagenConfig::small(platform, enablement);
+    let backends_train = datagen::sample_backend(platform, enablement, 30, opts.seed ^ 0xB1);
+    let backends_test = datagen::sample_backend(platform, enablement, 10, opts.seed ^ 0xB2);
+
+    // in-range: dims sampled over the full [5, 60]
+    let archs_full = datagen::sample_archs(platform, 24, SamplerKind::Lhs, opts.seed);
+    // extrapolation: train dims in [5, 30], test dims in [40, 60]
+    let clamp_dim = |a: &ArchConfig, lo: f64, hi: f64| {
+        let mut c = a.clone();
+        let di = platform
+            .param_space()
+            .iter()
+            .position(|s| s.name == "dimension")
+            .unwrap();
+        c.values[di] = lo + (c.values[di] - 5.0) / 55.0 * (hi - lo);
+        c.values[di] = c.values[di].round();
+        c
+    };
+    let archs_low: Vec<ArchConfig> =
+        archs_full.iter().map(|a| clamp_dim(a, 5.0, 30.0)).collect();
+    let archs_high: Vec<ArchConfig> =
+        archs_full.iter().take(10).map(|a| clamp_dim(a, 40.0, 60.0)).collect();
+
+    let eval = |train_archs: Vec<ArchConfig>, test_archs: Vec<ArchConfig>| -> Result<f64> {
+        let mut all = train_archs.clone();
+        let n_train_archs = all.len();
+        all.extend(test_archs);
+        let g = datagen::build_rows(&base, all, &backends_train, &backends_test)?;
+        let ds = &g.dataset;
+        let train_idx: Vec<usize> = (0..ds.len())
+            .filter(|&i| ds.rows[i].arch_idx < n_train_archs && ds.rows[i].in_roi)
+            .collect();
+        let test_idx: Vec<usize> = (0..ds.len())
+            .filter(|&i| ds.rows[i].arch_idx >= n_train_archs && ds.rows[i].in_roi)
+            .collect();
+        let x = ds.features(&train_idx);
+        let y = ds.targets(&train_idx, Metric::Power);
+        let model = Gbdt::fit(&x, &y, GbdtParams::default(), opts.seed);
+        let pred = model.predict(&ds.features(&test_idx));
+        Ok(mape_stats(&ds.targets(&test_idx, Metric::Power), &pred).mu_ape)
+    };
+
+    let in_range = eval(archs_full.clone(), archs_full[..10].to_vec())?;
+    let extrapolated = eval(archs_low, archs_high)?;
+    println!("backend power muAPE, in-range test:      {in_range:.2}%");
+    println!("backend power muAPE, extrapolated test:  {extrapolated:.2}%");
+    println!(
+        "degradation: {:.1}x (paper: extrapolation \"performs poorly\")",
+        extrapolated / in_range.max(1e-9)
+    );
+    write_csv(
+        &opts.csv_path("fig10"),
+        "protocol,mu_ape_power",
+        &[
+            format!("in_range,{in_range}"),
+            format!("extrapolated,{extrapolated}"),
+        ],
+    )?;
+    anyhow::ensure!(
+        extrapolated > in_range,
+        "extrapolation should be harder than interpolation"
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Experiment drivers, one per paper table/figure (DESIGN.md §5).
+//! Every driver prints the paper's rows/series to stdout and writes CSV
+//! under `results/`; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod dse;
+pub mod embed;
+pub mod figs;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Common experiment options from the CLI.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub seed: u64,
+    pub out_dir: PathBuf,
+    /// Reduced sizes for smoke runs / CI.
+    pub quick: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { seed: 2023, out_dir: PathBuf::from("results"), quick: false }
+    }
+}
+
+impl ExpOptions {
+    pub fn ensure_out_dir(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        Ok(())
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.out_dir.join(format!("{name}.csv"))
+    }
+}
+
+/// Dispatch by experiment id (table/figure number).
+pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
+    opts.ensure_out_dir()?;
+    match id {
+        "fig1b" => figs::fig1b_miscorrelation(opts),
+        "fig3" => figs::fig3_roi_regions(opts),
+        "fig4" => figs::fig4_feff_curves(opts),
+        "fig6" => figs::fig6_backend_samples(opts),
+        "fig8" => embed::fig8_tsne(opts),
+        "fig9" => figs::fig9_arch_samples(opts),
+        "fig10" => figs::fig10_extrapolation(opts),
+        "fig11" => dse::fig11_axiline_svm(opts),
+        "fig12" => dse::fig12_vta(opts),
+        "tab3" => tables::tab3_sampling_study(opts),
+        "tab4" => tables::tab4_unseen_backend(opts),
+        "tab5" => tables::tab5_unseen_arch(opts),
+        "all" => {
+            for id in [
+                "fig1b", "fig3", "fig4", "fig6", "fig9", "tab3", "tab4", "tab5", "fig10",
+                "fig8", "fig11", "fig12",
+            ] {
+                println!("\n================ experiment {id} ================");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?} (fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all)"),
+    }
+}
+
+pub(crate) fn write_csv(path: &std::path::Path, header: &str, rows: &[String]) -> Result<()> {
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}

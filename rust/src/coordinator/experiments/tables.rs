@@ -1,0 +1,235 @@
+//! Table experiments: Table 3 (sampling methods x sizes x models),
+//! Table 4 (unseen backend configurations), Table 5 (unseen
+//! architectural configurations).
+
+use anyhow::Result;
+
+use crate::backend::Enablement;
+use crate::coordinator::datagen::{self, DatagenConfig};
+use crate::coordinator::trainer::{ModelMenu, TrainOptions, Trainer};
+use crate::data::{Metric, Split};
+use crate::generators::Platform;
+use crate::sampling::SamplerKind;
+
+use super::{write_csv, ExpOptions};
+
+fn fmt(v: f64) -> String {
+    format!("{v:6.2}")
+}
+
+/// Table 3: Axiline-SVM, training architectures sampled by LHS / Sobol /
+/// Halton at sizes 16/24/32; unseen-architecture evaluation of backend
+/// power and system energy (muAPE / STD APE / MAPE) per model.
+pub fn tab3_sampling_study(opts: &ExpOptions) -> Result<()> {
+    let platform = Platform::Axiline;
+    let base = DatagenConfig::small(platform, Enablement::Gf12);
+    let trainer = Trainer::from_artifacts()?;
+    let sizes: &[usize] = if opts.quick { &[16] } else { &[16, 24, 32] };
+    let menu = if opts.quick {
+        ModelMenu::trees_only()
+    } else {
+        ModelMenu { ensemble: false, ..ModelMenu::default() }
+    };
+    let t_opts = TrainOptions {
+        menu,
+        seed: opts.seed,
+        ann_cfg: crate::models::TrainConfig { max_epochs: 60, early_stop: 12, ..Default::default() },
+        gcn_cfg: crate::models::TrainConfig {
+            max_epochs: 12,
+            early_stop: 5,
+            patience: 3,
+            lr0: 1e-2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    // fixed, separately-sampled val/test architectures (paper §7.2)
+    let val_archs = datagen::sample_archs(platform, 10, SamplerKind::Lhs, opts.seed ^ 0x7A1);
+    let test_archs = datagen::sample_archs(platform, 10, SamplerKind::Lhs, opts.seed ^ 0x7E5);
+    let backends_train = datagen::sample_backend(platform, Enablement::Gf12, 30, opts.seed ^ 0xB1);
+    let backends_test = datagen::sample_backend(platform, Enablement::Gf12, 10, opts.seed ^ 0xB2);
+
+    let mut rows = Vec::new();
+    println!("sampler | size | model | power muAPE/STD/MAPE | energy muAPE/STD/MAPE");
+    for kind in SamplerKind::ALL {
+        for &size in sizes {
+            let train_archs =
+                datagen::sample_archs(platform, size, kind, opts.seed ^ kind.name().len() as u64);
+            let n_train = train_archs.len();
+            let n_val = val_archs.len();
+            let mut all = train_archs;
+            all.extend(val_archs.clone());
+            all.extend(test_archs.clone());
+            let g = datagen::build_rows(&base, all, &backends_train, &backends_test)?;
+            let ds = &g.dataset;
+            // unseen-architecture split by arch pools
+            let mut split = Split::default();
+            for (i, r) in ds.rows.iter().enumerate() {
+                if r.arch_idx < n_train {
+                    split.train.push(i);
+                } else if r.arch_idx < n_train + n_val {
+                    split.val.push(i);
+                } else {
+                    split.test.push(i);
+                }
+            }
+            for metric in [Metric::Power, Metric::Energy] {
+                let report = trainer.run(ds, &split, metric, &t_opts)?;
+                for (model, stats) in &report.models {
+                    rows.push(format!(
+                        "{},{size},{model},{},{},{},{}",
+                        kind.name(),
+                        metric.name(),
+                        stats.mu_ape,
+                        stats.std_ape,
+                        stats.max_ape
+                    ));
+                }
+            }
+            // print the power+energy rows side by side per model
+            let power_rows: Vec<&String> = rows
+                .iter()
+                .filter(|r| r.starts_with(&format!("{},{size}", kind.name())) && r.contains(",power,"))
+                .collect();
+            for pr in power_rows {
+                let parts: Vec<&str> = pr.split(',').collect();
+                let model = parts[2];
+                let er = rows.iter().find(|r| {
+                    r.starts_with(&format!("{},{size},{model},energy", kind.name()))
+                });
+                let e = er.map(|r| {
+                    let p: Vec<&str> = r.split(',').collect();
+                    (p[4].parse::<f64>().unwrap(), p[5].parse::<f64>().unwrap(), p[6].parse::<f64>().unwrap())
+                });
+                let (pm, ps, px) = (
+                    parts[4].parse::<f64>().unwrap(),
+                    parts[5].parse::<f64>().unwrap(),
+                    parts[6].parse::<f64>().unwrap(),
+                );
+                if let Some((em, es, ex)) = e {
+                    println!(
+                        "{:6} | {size:2} | {model:8} | {}/{}/{} | {}/{}/{}",
+                        kind.name(),
+                        fmt(pm),
+                        fmt(ps),
+                        fmt(px),
+                        fmt(em),
+                        fmt(es),
+                        fmt(ex)
+                    );
+                }
+            }
+        }
+    }
+    write_csv(
+        &opts.csv_path("tab3"),
+        "sampler,size,model,metric,mu_ape,std_ape,max_ape",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Shared implementation for Tables 4 and 5.
+fn unseen_table(
+    opts: &ExpOptions,
+    unseen_backend: bool,
+    csv_name: &str,
+) -> Result<()> {
+    let trainer = Trainer::from_artifacts()?;
+    let designs: Vec<(Platform, Enablement)> = if opts.quick {
+        vec![(Platform::Axiline, Enablement::Gf12)]
+    } else {
+        vec![
+            (Platform::Tabla, Enablement::Gf12),
+            (Platform::GeneSys, Enablement::Gf12),
+            (Platform::Vta, Enablement::Gf12),
+            (Platform::Axiline, Enablement::Gf12),
+            (Platform::Axiline, Enablement::Ng45),
+        ]
+    };
+    let menu = if opts.quick {
+        ModelMenu::trees_only()
+    } else {
+        ModelMenu::default()
+    };
+    let t_opts = TrainOptions {
+        menu,
+        seed: opts.seed,
+        // table sweeps fit 25 (design, metric) cells: trim the ANN/GCN
+        // budgets (the curves plateau well before the defaults)
+        ann_cfg: crate::models::TrainConfig { max_epochs: 60, early_stop: 12, ..Default::default() },
+        gcn_cfg: crate::models::TrainConfig {
+            max_epochs: 12,
+            early_stop: 5,
+            patience: 3,
+            lr0: 1e-2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let mut rows = Vec::new();
+    for (platform, enablement) in designs {
+        let cfg = DatagenConfig::small(platform, enablement);
+        let g = datagen::generate(&cfg)?;
+        let ds = &g.dataset;
+        let split = if unseen_backend {
+            // the separately-sampled backend pools from datagen
+            g.backend_split.clone()
+        } else {
+            ds.split_unseen_arch(0.2, opts.seed)
+        };
+        println!("--- {platform} / {enablement} ({} rows) ---", ds.len());
+        println!("model | perf muAPE/MAPE | power | area | energy | runtime | ROI acc/F1");
+        let mut per_model: std::collections::BTreeMap<String, Vec<(f64, f64)>> =
+            Default::default();
+        let mut roi = None;
+        for metric in Metric::ALL {
+            let report = trainer.run(ds, &split, metric, &t_opts)?;
+            roi = Some(report.roi);
+            for (model, stats) in &report.models {
+                per_model
+                    .entry(model.clone())
+                    .or_default()
+                    .push((stats.mu_ape, stats.max_ape));
+                rows.push(format!(
+                    "{platform},{enablement},{model},{},{},{},{}",
+                    metric.name(),
+                    stats.mu_ape,
+                    stats.std_ape,
+                    stats.max_ape
+                ));
+            }
+        }
+        let roi = roi.unwrap();
+        for (model, stats) in &per_model {
+            let cells: Vec<String> = stats
+                .iter()
+                .map(|(mu, mx)| format!("{mu:5.1}/{mx:5.1}"))
+                .collect();
+            println!(
+                "{model:8} | {} | acc={:.2} f1={:.2}",
+                cells.join(" | "),
+                roi.accuracy,
+                roi.f1
+            );
+        }
+    }
+    write_csv(
+        &opts.csv_path(csv_name),
+        "platform,enablement,model,metric,mu_ape,std_ape,max_ape",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Table 4: unseen backend configurations.
+pub fn tab4_unseen_backend(opts: &ExpOptions) -> Result<()> {
+    unseen_table(opts, true, "tab4")
+}
+
+/// Table 5: unseen architectural configurations.
+pub fn tab5_unseen_arch(opts: &ExpOptions) -> Result<()> {
+    unseen_table(opts, false, "tab5")
+}

@@ -1,0 +1,212 @@
+//! Dynamic-batching prediction server: the PJRT engine is Rc-based and
+//! thread-bound, so it lives on a dedicated service thread; clients
+//! submit rows over a channel and the server coalesces whatever is
+//! queued into padded fixed-B batches (one PJRT call per batch) before
+//! replying. This is the vLLM-router-shaped L3 piece: DSE workers fan
+//! requests in concurrently and batching amortizes the FFI boundary.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Batcher, Engine};
+use crate::util::tensor::Tensor;
+
+enum Msg {
+    Predict {
+        /// ANN variant name.
+        variant: String,
+        /// Fitted flat parameters.
+        theta: Vec<f32>,
+        /// Feature rows (already scaled/encoded).
+        rows: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Stats(mpsc::Sender<ServerStats>),
+    Shutdown,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub rows: usize,
+    pub batches: usize,
+    /// Mean rows per issued batch (batching efficiency).
+    pub mean_occupancy: f64,
+}
+
+pub struct PredictServer {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Cheap cloneable submit handle.
+#[derive(Clone)]
+pub struct PredictClient {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl PredictServer {
+    /// Boot the service thread with its own Engine.
+    pub fn start(artifacts_dir: std::path::PathBuf) -> Result<PredictServer> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::spawn(move || {
+            let engine = match Engine::load(&artifacts_dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let mut stats = ServerStats::default();
+            serve(engine, rx, &mut stats);
+        });
+        ready_rx
+            .recv()
+            .context("predict server died at startup")??;
+        Ok(PredictServer { tx, handle: Some(handle) })
+    }
+
+    pub fn client(&self) -> PredictClient {
+        PredictClient { tx: self.tx.clone() }
+    }
+
+    pub fn stats(&self) -> Result<ServerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Stats(tx)).context("server gone")?;
+        rx.recv().context("server gone")
+    }
+}
+
+impl Drop for PredictServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PredictClient {
+    /// Synchronous predict (the server batches across concurrent
+    /// clients; a single client's rows are also internally chunked).
+    pub fn predict(
+        &self,
+        variant: &str,
+        theta: &[f32],
+        rows: Vec<Vec<f32>>,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Predict {
+                variant: variant.to_string(),
+                theta: theta.to_vec(),
+                rows,
+                reply,
+            })
+            .context("predict server gone")?;
+        rx.recv().context("predict server dropped the request")?
+    }
+}
+
+fn serve(engine: Engine, rx: mpsc::Receiver<Msg>, stats: &mut ServerStats) {
+    while let Ok(msg) = rx.recv() {
+        // Drain whatever else is queued: coalescing window.
+        let mut pending = vec![msg];
+        while let Ok(m) = rx.try_recv() {
+            pending.push(m);
+        }
+        // group Predict requests by (variant, theta) so they can share
+        // batches; reply to everything else inline
+        let mut groups: Vec<(String, Vec<f32>, Vec<(Vec<Vec<f32>>, mpsc::Sender<Result<Vec<f32>>>)>)> =
+            Vec::new();
+        for m in pending {
+            match m {
+                Msg::Shutdown => return,
+                Msg::Stats(tx) => {
+                    let mut s = stats.clone();
+                    s.mean_occupancy = if s.batches > 0 {
+                        s.rows as f64 / s.batches as f64
+                    } else {
+                        0.0
+                    };
+                    let _ = tx.send(s);
+                }
+                Msg::Predict { variant, theta, rows, reply } => {
+                    stats.requests += 1;
+                    stats.rows += rows.len();
+                    if let Some(g) = groups
+                        .iter_mut()
+                        .find(|(v, t, _)| *v == variant && *t == theta)
+                    {
+                        g.2.push((rows, reply));
+                    } else {
+                        groups.push((variant, theta, vec![(rows, reply)]));
+                    }
+                }
+            }
+        }
+        for (variant, theta, requests) in groups {
+            run_group(&engine, &variant, &theta, requests, stats);
+        }
+    }
+}
+
+fn run_group(
+    engine: &Engine,
+    variant: &str,
+    theta: &[f32],
+    requests: Vec<(Vec<Vec<f32>>, mpsc::Sender<Result<Vec<f32>>>)>,
+    stats: &mut ServerStats,
+) {
+    let mut run = || -> Result<Vec<Vec<f32>>> {
+        let v = engine.manifest.variant(variant)?;
+        let file = v.entrypoint("predict")?.file.clone();
+        let b = engine.manifest.batch;
+        let f = engine.manifest.feat;
+        let theta_t = Tensor::from_vec(&[v.param_total], theta.to_vec())?;
+        // flatten all requests into one row stream
+        let all_rows: Vec<&Vec<f32>> =
+            requests.iter().flat_map(|(rows, _)| rows.iter()).collect();
+        let batcher = Batcher::new(b);
+        let mut flat_out = vec![0.0f32; all_rows.len()];
+        for plan in batcher.plan(all_rows.len()) {
+            let mut packed = vec![0.0f32; b * f];
+            for (slot, &src) in plan.rows.iter().enumerate() {
+                let row = all_rows[src];
+                packed[slot * f..slot * f + row.len().min(f)]
+                    .copy_from_slice(&row[..row.len().min(f)]);
+            }
+            let x = Tensor::from_vec(&[b, f], packed)?;
+            let out = engine.run(&file, &[theta_t.clone(), x])?;
+            batcher.unpack(&plan, out[0].data(), &mut flat_out);
+            stats.batches += 1;
+        }
+        // split back per request
+        let mut result = Vec::with_capacity(requests.len());
+        let mut off = 0;
+        for (rows, _) in &requests {
+            result.push(flat_out[off..off + rows.len()].to_vec());
+            off += rows.len();
+        }
+        Ok(result)
+    };
+    match run() {
+        Ok(outputs) => {
+            for ((_, reply), out) in requests.into_iter().zip(outputs) {
+                let _ = reply.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (_, reply) in requests {
+                let _ = reply.send(Err(anyhow::anyhow!("{msg}")));
+            }
+        }
+    }
+}

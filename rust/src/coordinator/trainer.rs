@@ -1,0 +1,204 @@
+//! Model training orchestration (paper §7.3): for a (dataset, split,
+//! metric), fit the two-stage ROI classifier plus all five regressor
+//! families — GBDT / RF (tuned by random discrete search), ANN / GCN
+//! (AOT artifacts through the PJRT engine), and the stacked ensemble —
+//! and evaluate muAPE / MAPE / STD APE on the test rows the ROI gate
+//! accepts.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Dataset, Metric, Split};
+use crate::metrics::{mape_stats, ClassifyStats, MapeStats};
+use crate::models::{
+    tune_gbdt, tune_rf, AnnModel, BasePredictions, GcnModel, GraphCache, RoiClassifier,
+    SearchBudget, StackedEnsemble, TrainConfig,
+};
+use crate::runtime::Engine;
+
+/// Which model families to run (GCN/ANN dominate wall-clock; experiments
+/// can trim).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelMenu {
+    pub gbdt: bool,
+    pub rf: bool,
+    pub ann: bool,
+    pub ensemble: bool,
+    pub gcn: bool,
+}
+
+impl Default for ModelMenu {
+    fn default() -> Self {
+        ModelMenu { gbdt: true, rf: true, ann: true, ensemble: true, gcn: true }
+    }
+}
+
+impl ModelMenu {
+    pub fn trees_only() -> Self {
+        ModelMenu { gbdt: true, rf: true, ann: false, ensemble: false, gcn: false }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub menu: ModelMenu,
+    pub search: SearchBudget,
+    pub ann_cfg: TrainConfig,
+    pub gcn_cfg: TrainConfig,
+    pub ann_variant: String,
+    pub gcn_variant: String,
+    pub seed: u64,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            menu: ModelMenu::default(),
+            search: SearchBudget::default(),
+            ann_cfg: TrainConfig::default(),
+            gcn_cfg: TrainConfig {
+                max_epochs: 40,
+                lr0: 8e-3,
+                early_stop: 10,
+                patience: 4,
+                ..Default::default()
+            },
+            ann_variant: "ann32x4_relu".to_string(),
+            gcn_variant: "gcn3".to_string(),
+            seed: 7,
+        }
+    }
+}
+
+/// Per-model evaluation on the ROI-gated test set.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub metric: Metric,
+    pub roi: ClassifyStats,
+    /// model name -> stats on accepted test rows
+    pub models: BTreeMap<String, MapeStats>,
+    /// test rows accepted by the ROI gate (and actually in ROI)
+    pub eval_rows: usize,
+}
+
+pub struct Trainer {
+    pub engine: Option<Rc<Engine>>,
+}
+
+impl Trainer {
+    /// `engine` is optional: tree-only menus never touch PJRT.
+    pub fn new(engine: Option<Rc<Engine>>) -> Trainer {
+        Trainer { engine }
+    }
+
+    pub fn from_artifacts() -> Result<Trainer> {
+        let dir = crate::test_support::artifacts_dir()
+            .context("artifacts not found (run `make artifacts`)")?;
+        Ok(Trainer { engine: Some(Rc::new(Engine::load(&dir)?)) })
+    }
+
+    /// Train + evaluate every family in the menu for one metric.
+    ///
+    /// Protocol (paper §5.4, §7.2/7.3): ROI classifier fits on all
+    /// training rows; regressors fit on ROI training rows only; a
+    /// validation subset of the training rows drives tuning/early-stop;
+    /// evaluation uses test rows that the classifier accepts and that
+    /// are truly in the ROI (discarded rows are dropped, as the paper
+    /// does).
+    pub fn run(
+        &self,
+        ds: &Dataset,
+        split: &Split,
+        metric: Metric,
+        opts: &TrainOptions,
+    ) -> Result<EvalReport> {
+        let mut split = split.clone();
+        if split.val.is_empty() {
+            ds.carve_validation(&mut split, 0.2, opts.seed);
+        }
+
+        // ---- stage 1: ROI classifier on all training rows ----
+        let x_all_train = ds.features(&split.train);
+        let roi_train = ds.roi_labels(&split.train);
+        let classifier = RoiClassifier::fit(&x_all_train, &roi_train, opts.seed);
+        let x_test = ds.features(&split.test);
+        let roi_test = ds.roi_labels(&split.test);
+        let roi_stats = classifier.evaluate(&x_test, &roi_test);
+
+        // accepted = classifier-accepted AND truly in ROI
+        let accept = classifier.predict(&x_test);
+        let eval_idx: Vec<usize> = split
+            .test
+            .iter()
+            .enumerate()
+            .filter(|(k, &i)| accept[*k] && ds.rows[i].in_roi)
+            .map(|(_, &i)| i)
+            .collect();
+
+        // ---- stage 2: regressors on ROI training rows ----
+        let train_roi = ds.roi_subset(&split.train);
+        let val_roi = ds.roi_subset(&split.val);
+        anyhow::ensure!(!train_roi.is_empty(), "no ROI training rows");
+        anyhow::ensure!(!val_roi.is_empty(), "no ROI validation rows");
+        let x_train = ds.features(&train_roi);
+        let y_train = ds.targets(&train_roi, metric);
+        let x_val = ds.features(&val_roi);
+        let y_val = ds.targets(&val_roi, metric);
+        let x_eval = ds.features(&eval_idx);
+        let y_eval = ds.targets(&eval_idx, metric);
+
+        let mut models = BTreeMap::new();
+        let mut bases: Vec<BasePredictions> = Vec::new();
+
+        if opts.menu.gbdt {
+            let tuned = tune_gbdt(&x_train, &y_train, &x_val, &y_val, opts.search);
+            let pred = tuned.model.predict(&x_eval);
+            models.insert("GBDT".to_string(), mape_stats(&y_eval, &pred));
+            bases.push(BasePredictions {
+                name: "GBDT".into(),
+                val: tuned.model.predict(&x_val),
+                test: pred,
+            });
+        }
+        if opts.menu.rf {
+            let tuned = tune_rf(&x_train, &y_train, &x_val, &y_val, opts.search);
+            let pred = tuned.model.predict(&x_eval);
+            models.insert("RF".to_string(), mape_stats(&y_eval, &pred));
+            bases.push(BasePredictions {
+                name: "RF".into(),
+                val: tuned.model.predict(&x_val),
+                test: pred,
+            });
+        }
+        if opts.menu.ann {
+            let engine = self.engine.as_ref().context("ANN needs the PJRT engine")?;
+            let mut ann = AnnModel::new(engine.clone(), &opts.ann_variant, opts.ann_cfg)?;
+            ann.fit(&x_train, &y_train, &x_val, &y_val)?;
+            let pred = ann.predict(&x_eval)?;
+            models.insert("ANN".to_string(), mape_stats(&y_eval, &pred));
+            bases.push(BasePredictions {
+                name: "ANN".into(),
+                val: ann.predict(&x_val)?,
+                test: pred,
+            });
+        }
+        if opts.menu.ensemble && bases.len() >= 2 {
+            let ens = StackedEnsemble::fit(&bases, &y_val)?;
+            let pred = ens.predict(&bases);
+            models.insert("Ensemble".to_string(), mape_stats(&y_eval, &pred));
+        }
+        if opts.menu.gcn {
+            let engine = self.engine.as_ref().context("GCN needs the PJRT engine")?;
+            let cache = GraphCache::build(&ds.lhgs, engine.manifest.nodes)?;
+            let mut gcn = GcnModel::new(engine.clone(), &opts.gcn_variant, opts.gcn_cfg)?;
+            let targets: Vec<f64> = ds.rows.iter().map(|r| r.target(metric)).collect();
+            gcn.fit(ds, &cache, &train_roi, &val_roi, &targets)?;
+            let pred = gcn.predict_rows(ds, &cache, &eval_idx)?;
+            models.insert("GCN".to_string(), mape_stats(&y_eval, &pred));
+        }
+
+        Ok(EvalReport { metric, roi: roi_stats, models, eval_rows: eval_idx.len() })
+    }
+}

@@ -1,0 +1,285 @@
+//! Dataset container + split discipline + persistence.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::generators::{ArchConfig, Lhg, Platform, FEAT_DIM};
+use crate::util::rng::Rng;
+
+use super::row::{Metric, Row};
+
+/// Train/validation/test split (paper §7.2: separately-sampled sets, no
+/// overlap, each covering the design space).
+#[derive(Debug, Clone, Default)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub val: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+impl Split {
+    pub fn validate(&self, n: usize) -> Result<()> {
+        let mut seen = BTreeSet::new();
+        for (name, part) in
+            [("train", &self.train), ("val", &self.val), ("test", &self.test)]
+        {
+            for &i in part {
+                if i >= n {
+                    bail!("{name} index {i} out of range {n}");
+                }
+                if !seen.insert(i) {
+                    bail!("{name} index {i} appears in two parts");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A generated dataset for one (platform, enablement) pair.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub platform: Platform,
+    pub enablement: crate::backend::Enablement,
+    /// Distinct architectural configurations.
+    pub archs: Vec<ArchConfig>,
+    /// Logical hierarchy graph per architecture (same index).
+    pub lhgs: Vec<Lhg>,
+    pub rows: Vec<Row>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn features(&self, idx: &[usize]) -> Vec<Vec<f64>> {
+        idx.iter().map(|&i| self.rows[i].features_vec()).collect()
+    }
+
+    pub fn targets(&self, idx: &[usize], m: Metric) -> Vec<f64> {
+        idx.iter().map(|&i| self.rows[i].target(m)).collect()
+    }
+
+    pub fn roi_labels(&self, idx: &[usize]) -> Vec<bool> {
+        idx.iter().map(|&i| self.rows[i].in_roi).collect()
+    }
+
+    /// Indices of ROI rows only (stage-2 regressors train on these).
+    pub fn roi_subset(&self, idx: &[usize]) -> Vec<usize> {
+        idx.iter().copied().filter(|&i| self.rows[i].in_roi).collect()
+    }
+
+    /// Unseen-backend split (paper §7.2): the same architectures appear
+    /// in train and test, but backend (f_target, util) points are
+    /// disjoint sets. `test_backends` distinct backend points are held
+    /// out by their quantized knob identity.
+    pub fn split_unseen_backend(&self, test_frac: f64, seed: u64) -> Split {
+        let mut knobs: Vec<(u64, u64)> = self
+            .rows
+            .iter()
+            .map(|r| ((r.f_target_ghz * 1e4) as u64, (r.util * 1e4) as u64))
+            .collect::<BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        let mut rng = Rng::new(seed ^ 0xBAC4E2D);
+        rng.shuffle(&mut knobs);
+        let n_test = ((knobs.len() as f64 * test_frac).round() as usize).max(1);
+        let test_knobs: BTreeSet<(u64, u64)> = knobs.into_iter().take(n_test).collect();
+        let mut split = Split::default();
+        for (i, r) in self.rows.iter().enumerate() {
+            let key = ((r.f_target_ghz * 1e4) as u64, (r.util * 1e4) as u64);
+            if test_knobs.contains(&key) {
+                split.test.push(i);
+            } else {
+                split.train.push(i);
+            }
+        }
+        split
+    }
+
+    /// Unseen-architecture split (paper §7.2): architectures are
+    /// disjoint between train and test; backend points shared.
+    pub fn split_unseen_arch(&self, test_frac: f64, seed: u64) -> Split {
+        let mut archs: Vec<usize> = (0..self.archs.len()).collect();
+        let mut rng = Rng::new(seed ^ 0xA2C4);
+        rng.shuffle(&mut archs);
+        let n_test = ((archs.len() as f64 * test_frac).round() as usize).max(1);
+        let test_archs: BTreeSet<usize> = archs.into_iter().take(n_test).collect();
+        let mut split = Split::default();
+        for (i, r) in self.rows.iter().enumerate() {
+            if test_archs.contains(&r.arch_idx) {
+                split.test.push(i);
+            } else {
+                split.train.push(i);
+            }
+        }
+        split
+    }
+
+    /// Carve a validation set out of a split's training part (used for
+    /// early stopping / hyperparameter selection, paper §7.3).
+    pub fn carve_validation(&self, split: &mut Split, val_frac: f64, seed: u64) {
+        let mut idx = std::mem::take(&mut split.train);
+        let mut rng = Rng::new(seed ^ 0x7A11);
+        rng.shuffle(&mut idx);
+        let n_val = ((idx.len() as f64 * val_frac).round() as usize).max(1);
+        split.val = idx.split_off(idx.len() - n_val);
+        split.train = idx;
+    }
+
+    /// CSV persistence (features + targets; LHGs are regenerated from
+    /// the stored architectural configs on load).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::new();
+        out.push_str("arch_idx,f_target,util");
+        for i in 0..FEAT_DIM {
+            out.push_str(&format!(",x{i}"));
+        }
+        out.push_str(",power,perf,area,energy,runtime,in_roi\n");
+        for r in &self.rows {
+            out.push_str(&format!("{},{},{}", r.arch_idx, r.f_target_ghz, r.util));
+            for v in r.features {
+                out.push_str(&format!(",{v}"));
+            }
+            out.push_str(&format!(
+                ",{},{},{},{},{},{}\n",
+                r.power_w,
+                r.f_effective_ghz,
+                r.area_mm2,
+                r.energy_j,
+                r.runtime_s,
+                r.in_roi as u8
+            ));
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_fixtures {
+    use super::*;
+    use crate::backend::Enablement;
+
+    /// A tiny synthetic dataset: 4 archs x 6 backend points.
+    pub fn tiny() -> Dataset {
+        let p = Platform::Axiline;
+        let space = p.param_space();
+        let archs: Vec<ArchConfig> = (0..4)
+            .map(|i| {
+                ArchConfig::new(
+                    p,
+                    space
+                        .iter()
+                        .map(|s| s.kind.from_unit(0.2 + 0.2 * i as f64))
+                        .collect(),
+                )
+            })
+            .collect();
+        let lhgs = archs
+            .iter()
+            .map(|a| Lhg::from_tree(&p.generate(a).unwrap()))
+            .collect();
+        let mut rows = Vec::new();
+        for (ai, _) in archs.iter().enumerate() {
+            for bi in 0..6 {
+                let ft = 0.4 + 0.3 * bi as f64;
+                let util = 0.4 + 0.05 * bi as f64;
+                let mut features = [0.0; FEAT_DIM];
+                features[0] = ai as f64 / 4.0;
+                features[12] = ft;
+                features[13] = util;
+                rows.push(Row {
+                    arch_idx: ai,
+                    features,
+                    f_target_ghz: ft,
+                    util,
+                    power_w: 1.0 + ai as f64 + ft,
+                    f_effective_ghz: ft * 0.95,
+                    area_mm2: 0.5 + 0.1 * ai as f64,
+                    energy_j: 0.01 * (1.0 + ai as f64),
+                    runtime_s: 0.001 / ft,
+                    in_roi: bi % 5 != 0,
+                });
+            }
+        }
+        Dataset { platform: p, enablement: Enablement::Gf12, archs, lhgs, rows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_fixtures::tiny;
+    use super::*;
+
+    #[test]
+    fn unseen_backend_split_separates_knobs() {
+        let d = tiny();
+        let s = d.split_unseen_backend(0.3, 1);
+        s.validate(d.len()).unwrap();
+        assert_eq!(s.train.len() + s.test.len(), d.len());
+        let train_knobs: BTreeSet<u64> =
+            s.train.iter().map(|&i| (d.rows[i].f_target_ghz * 1e4) as u64).collect();
+        for &i in &s.test {
+            let k = (d.rows[i].f_target_ghz * 1e4) as u64;
+            assert!(!train_knobs.contains(&k), "knob leak {k}");
+        }
+    }
+
+    #[test]
+    fn unseen_arch_split_separates_archs() {
+        let d = tiny();
+        let s = d.split_unseen_arch(0.25, 2);
+        s.validate(d.len()).unwrap();
+        let train_archs: BTreeSet<usize> =
+            s.train.iter().map(|&i| d.rows[i].arch_idx).collect();
+        let test_archs: BTreeSet<usize> =
+            s.test.iter().map(|&i| d.rows[i].arch_idx).collect();
+        assert!(train_archs.is_disjoint(&test_archs));
+        assert!(!test_archs.is_empty());
+    }
+
+    #[test]
+    fn carve_validation_is_disjoint_and_complete() {
+        let d = tiny();
+        let mut s = d.split_unseen_arch(0.25, 2);
+        let before = s.train.len();
+        d.carve_validation(&mut s, 0.2, 3);
+        s.validate(d.len()).unwrap();
+        assert_eq!(s.train.len() + s.val.len(), before);
+        assert!(!s.val.is_empty());
+    }
+
+    #[test]
+    fn roi_subset_filters() {
+        let d = tiny();
+        let all: Vec<usize> = (0..d.len()).collect();
+        let roi = d.roi_subset(&all);
+        assert!(roi.len() < d.len());
+        assert!(roi.iter().all(|&i| d.rows[i].in_roi));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let d = tiny();
+        let tmp = std::env::temp_dir().join("fso_test_dataset.csv");
+        d.write_csv(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(text.lines().count(), d.len() + 1);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn split_validate_catches_overlap() {
+        let s = Split { train: vec![0, 1], val: vec![1], test: vec![2] };
+        assert!(s.validate(3).is_err());
+        let s2 = Split { train: vec![0], val: vec![], test: vec![5] };
+        assert!(s2.validate(3).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Dataset layer: rows of (features, targets, ROI flag) produced by the
+//! datagen pipeline, with the paper's §7.2 split discipline (separately
+//! sampled train/validation/test sets for unseen-backend and
+//! unseen-architecture studies) and CSV/JSON persistence.
+
+pub mod dataset;
+pub mod row;
+
+pub use dataset::{Dataset, Split};
+pub use row::{Metric, Row};

@@ -1,0 +1,123 @@
+//! One dataset row: a fully-characterized (architecture, backend knobs)
+//! point. `features` is the unified 16-dim vector of Eq. 1/2; the five
+//! targets are the paper's metrics (backend power/performance/area,
+//! system energy/runtime).
+
+use crate::generators::FEAT_DIM;
+
+/// The five predicted metrics (paper §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Metric {
+    /// Total post-route power, W.
+    Power,
+    /// Effective clock frequency, GHz.
+    Performance,
+    /// Chip area, mm^2.
+    Area,
+    /// Workload energy, J.
+    Energy,
+    /// Workload runtime, s.
+    Runtime,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 5] = [
+        Metric::Performance,
+        Metric::Power,
+        Metric::Area,
+        Metric::Energy,
+        Metric::Runtime,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Power => "power",
+            Metric::Performance => "perf",
+            Metric::Area => "area",
+            Metric::Energy => "energy",
+            Metric::Runtime => "runtime",
+        }
+    }
+
+    pub fn is_backend(&self) -> bool {
+        matches!(self, Metric::Power | Metric::Performance | Metric::Area)
+    }
+}
+
+impl std::fmt::Display for Metric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    /// Index of the architectural configuration (keys the LHG cache).
+    pub arch_idx: usize,
+    /// Unified feature vector (Eq. 1/2 inputs).
+    pub features: [f64; FEAT_DIM],
+    /// Backend knobs (also in features[12..14]; kept raw for plots).
+    pub f_target_ghz: f64,
+    pub util: f64,
+    /// Targets.
+    pub power_w: f64,
+    pub f_effective_ghz: f64,
+    pub area_mm2: f64,
+    pub energy_j: f64,
+    pub runtime_s: f64,
+    /// Ground-truth ROI membership (Eq. 4).
+    pub in_roi: bool,
+}
+
+impl Row {
+    pub fn target(&self, m: Metric) -> f64 {
+        match m {
+            Metric::Power => self.power_w,
+            Metric::Performance => self.f_effective_ghz,
+            Metric::Area => self.area_mm2,
+            Metric::Energy => self.energy_j,
+            Metric::Runtime => self.runtime_s,
+        }
+    }
+
+    pub fn features_vec(&self) -> Vec<f64> {
+        self.features.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> Row {
+        Row {
+            arch_idx: 3,
+            features: [0.5; FEAT_DIM],
+            f_target_ghz: 1.0,
+            util: 0.5,
+            power_w: 2.0,
+            f_effective_ghz: 0.9,
+            area_mm2: 1.5,
+            energy_j: 0.1,
+            runtime_s: 0.01,
+            in_roi: true,
+        }
+    }
+
+    #[test]
+    fn target_accessor_matches_fields() {
+        let r = row();
+        assert_eq!(r.target(Metric::Power), 2.0);
+        assert_eq!(r.target(Metric::Performance), 0.9);
+        assert_eq!(r.target(Metric::Area), 1.5);
+        assert_eq!(r.target(Metric::Energy), 0.1);
+        assert_eq!(r.target(Metric::Runtime), 0.01);
+    }
+
+    #[test]
+    fn metric_classification() {
+        assert!(Metric::Power.is_backend());
+        assert!(!Metric::Energy.is_backend());
+        assert_eq!(Metric::ALL.len(), 5);
+    }
+}

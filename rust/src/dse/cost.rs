@@ -1,0 +1,112 @@
+//! Final configuration selection (paper Eq. 3): minimize
+//! alpha * Energy + beta * Area over the feasible Pareto front, subject
+//! to P < P_max and T < R_max.
+
+#[derive(Debug, Clone, Copy)]
+pub struct CostSpec {
+    /// Energy weight (chip lifespan proxy).
+    pub alpha: f64,
+    /// Area weight (fabrication cost proxy).
+    pub beta: f64,
+    /// Power constraint, W.
+    pub p_max: f64,
+    /// Runtime constraint, s.
+    pub r_max: f64,
+}
+
+impl CostSpec {
+    pub fn cost(&self, energy_j: f64, area_mm2: f64) -> f64 {
+        self.alpha * energy_j + self.beta * area_mm2
+    }
+
+    pub fn feasible(&self, power_w: f64, runtime_s: f64) -> bool {
+        power_w < self.p_max && runtime_s < self.r_max
+    }
+}
+
+/// A fully-evaluated DSE candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub x: Vec<f64>,
+    pub energy_j: f64,
+    pub runtime_s: f64,
+    pub power_w: f64,
+    pub area_mm2: f64,
+    /// Within the predicted ROI (two-stage gate).
+    pub in_roi: bool,
+}
+
+impl Candidate {
+    pub fn meets(&self, spec: &CostSpec) -> bool {
+        self.in_roi && spec.feasible(self.power_w, self.runtime_s)
+    }
+}
+
+/// Rank feasible, Pareto-optimal candidates by Eq. 3; returns indices
+/// into `candidates`, best first.
+pub fn select_best(candidates: &[Candidate], spec: &CostSpec, top_k: usize) -> Vec<usize> {
+    let feasible: Vec<usize> = (0..candidates.len())
+        .filter(|&i| candidates[i].meets(spec))
+        .collect();
+    // Pareto filter on (E, A) per the paper's constraint set
+    let objs: Vec<Vec<f64>> = feasible
+        .iter()
+        .map(|&i| vec![candidates[i].energy_j, candidates[i].area_mm2])
+        .collect();
+    let front = super::pareto::pareto_front(&objs);
+    let mut chosen: Vec<usize> = front.into_iter().map(|k| feasible[k]).collect();
+    chosen.sort_by(|&a, &b| {
+        let ca = spec.cost(candidates[a].energy_j, candidates[a].area_mm2);
+        let cb = spec.cost(candidates[b].energy_j, candidates[b].area_mm2);
+        ca.partial_cmp(&cb).unwrap()
+    });
+    chosen.truncate(top_k);
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(e: f64, a: f64, p: f64, t: f64, roi: bool) -> Candidate {
+        Candidate { x: vec![], energy_j: e, runtime_s: t, power_w: p, area_mm2: a, in_roi: roi }
+    }
+
+    #[test]
+    fn constraints_filter() {
+        let spec = CostSpec { alpha: 1.0, beta: 1.0, p_max: 2.0, r_max: 0.1 };
+        let cands = vec![
+            cand(1.0, 1.0, 1.0, 0.05, true),  // ok
+            cand(0.5, 0.5, 5.0, 0.05, true),  // power violation
+            cand(0.5, 0.5, 1.0, 0.50, true),  // runtime violation
+            cand(0.4, 0.4, 1.0, 0.05, false), // out of ROI
+        ];
+        let best = select_best(&cands, &spec, 3);
+        assert_eq!(best, vec![0]);
+    }
+
+    #[test]
+    fn cost_orders_front_members() {
+        let spec = CostSpec { alpha: 1.0, beta: 0.001, p_max: 10.0, r_max: 10.0 };
+        let cands = vec![
+            cand(2.0, 100.0, 1.0, 0.1, true), // cost 2.1
+            cand(1.0, 800.0, 1.0, 0.1, true), // cost 1.8 <- best (alpha-dominant)
+            cand(3.0, 10.0, 1.0, 0.1, true),  // cost 3.01
+        ];
+        let best = select_best(&cands, &spec, 3);
+        assert_eq!(best[0], 1);
+    }
+
+    #[test]
+    fn dominated_candidates_excluded() {
+        let spec = CostSpec { alpha: 1.0, beta: 1.0, p_max: 10.0, r_max: 10.0 };
+        let cands = vec![
+            cand(1.0, 2.0, 1.0, 0.1, true),
+            cand(2.0, 3.0, 1.0, 0.1, true), // dominated by 0
+            cand(2.0, 1.0, 1.0, 0.1, true),
+        ];
+        let best = select_best(&cands, &spec, 5);
+        assert!(!best.contains(&1));
+        assert_eq!(best.len(), 2);
+    }
+}

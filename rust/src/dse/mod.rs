@@ -1,0 +1,20 @@
+//! Design space exploration (paper §5.5, §8.4): MOTPE over architectural
+//! + backend knobs, Pareto-front maintenance, Eq. 3 cost selection with
+//! power/runtime/ROI constraint flags.
+
+pub mod cost;
+pub mod motpe;
+pub mod pareto;
+
+pub use cost::{select_best, Candidate, CostSpec};
+pub use motpe::{Motpe, MotpeConfig, Trial};
+pub use pareto::{dominates, nondominated_rank, pareto_front, ParetoFront};
+
+/// Knobs of a DSE run (which dimensions are explored and their ranges
+/// are carried by the ParamSpec space handed to Motpe).
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub iterations: usize,
+    pub motpe: MotpeConfig,
+    pub cost: CostSpec,
+}

@@ -1,0 +1,171 @@
+//! Pareto dominance utilities (minimization convention throughout).
+
+/// True iff `a` dominates `b`: no worse in every objective, strictly
+/// better in at least one.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the non-dominated subset.
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && dominates(p, &points[i]))
+        })
+        .collect()
+}
+
+/// Fast non-dominated sorting (NSGA-II style): rank 0 = the front.
+pub fn nondominated_rank(points: &[Vec<f64>]) -> Vec<usize> {
+    let n = points.len();
+    let mut dominated_by = vec![0usize; n]; // count of dominators
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&points[i], &points[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            } else if dominates(&points[j], &points[i]) {
+                dominates_list[j].push(i);
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut rank = vec![usize::MAX; n];
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut r = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            rank[i] = r;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        r += 1;
+    }
+    rank
+}
+
+/// A maintained Pareto front of (point, payload) pairs.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront {
+    pub objectives: Vec<Vec<f64>>,
+    pub payload: Vec<usize>,
+}
+
+impl ParetoFront {
+    pub fn insert(&mut self, obj: Vec<f64>, payload: usize) -> bool {
+        if self
+            .objectives
+            .iter()
+            .any(|p| dominates(p, &obj) || p == &obj)
+        {
+            return false;
+        }
+        let keep: Vec<bool> =
+            self.objectives.iter().map(|p| !dominates(&obj, p)).collect();
+        let mut k = keep.iter();
+        self.objectives.retain(|_| *k.next().unwrap());
+        let mut k = keep.iter();
+        self.payload.retain(|_| *k.next().unwrap());
+        self.objectives.push(obj);
+        self.payload.push(payload);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.objectives.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objectives.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basic() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn front_extraction() {
+        let pts = vec![
+            vec![1.0, 4.0],
+            vec![2.0, 2.0],
+            vec![4.0, 1.0],
+            vec![3.0, 3.0], // dominated by (2,2)
+            vec![5.0, 5.0], // dominated
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ranks_are_layered() {
+        let pts = vec![
+            vec![1.0, 1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 3.0],
+        ];
+        assert_eq!(nondominated_rank(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn maintained_front_invariant() {
+        let mut front = ParetoFront::default();
+        let pts = vec![
+            vec![3.0, 3.0],
+            vec![1.0, 4.0],
+            vec![2.0, 2.0], // kills (3,3)
+            vec![4.0, 1.0],
+            vec![2.5, 2.5], // dominated by (2,2)
+        ];
+        for (i, p) in pts.iter().enumerate() {
+            front.insert(p.clone(), i);
+        }
+        assert_eq!(front.len(), 3);
+        // no member dominates another
+        for i in 0..front.len() {
+            for j in 0..front.len() {
+                if i != j {
+                    assert!(!dominates(&front.objectives[i], &front.objectives[j]));
+                }
+            }
+        }
+        assert!(!front.payload.contains(&0));
+        assert!(!front.payload.contains(&4));
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let mut front = ParetoFront::default();
+        assert!(front.insert(vec![1.0, 1.0], 0));
+        assert!(!front.insert(vec![1.0, 1.0], 1));
+    }
+}

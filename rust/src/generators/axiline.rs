@@ -1,0 +1,147 @@
+//! Axiline generator (paper §5.1, Table 1): hard-coded 3-stage pipelined
+//! implementations of small ML training algorithms (SVM, linear/logistic
+//! regression, recommender systems).
+//!
+//! Architectural parameters (Table 1):
+//!   benchmark       ∈ {svm, linear_regression, logistic_regression, recsys}
+//!   bitwidth        ∈ {8, 16}      computation unit width
+//!   input bitwidth  ∈ {4, 8}       initial input width
+//!   dimension       ∈ [5, 60]      stage-1/3 dimension
+//!   num of cycles   ∈ [1, 25]      cycles per input vector in stage 1/3
+
+use super::features as f;
+use super::{ArchConfig, ModuleNode, ModuleTree, ParamKind, ParamSpec, Platform};
+
+pub const BENCHMARKS: [&str; 4] =
+    ["svm", "linear_regression", "logistic_regression", "recsys"];
+
+pub fn param_space() -> Vec<ParamSpec> {
+    vec![
+        ParamSpec { name: "benchmark", kind: ParamKind::Cat(BENCHMARKS.to_vec()) },
+        ParamSpec { name: "bitwidth", kind: ParamKind::Choice(vec![8.0, 16.0]) },
+        ParamSpec { name: "input_bitwidth", kind: ParamKind::Choice(vec![4.0, 8.0]) },
+        ParamSpec { name: "dimension", kind: ParamKind::Int { lo: 5, hi: 60 } },
+        ParamSpec { name: "num_cycles", kind: ParamKind::Int { lo: 1, hi: 25 } },
+    ]
+}
+
+pub fn generate(cfg: &ArchConfig) -> ModuleTree {
+    let bits = cfg.get("bitwidth");
+    let in_bits = cfg.get("input_bitwidth");
+    let dim = cfg.get("dimension");
+    let cycles = cfg.get("num_cycles");
+    // Stage 1/3 process `dim` lanes over `num_cycles` cycles: fewer cycles
+    // means more parallel MACs.
+    let lanes = (dim / cycles).ceil().max(1.0);
+    let is_logistic = cfg.benchmark() == Some("logistic_regression");
+    let is_recsys = cfg.benchmark() == Some("recsys");
+
+    // Stage 1: dot-product / feature-gather array.
+    let mut mac = f::mac_unit(bits, 2.0 * bits + 8.0);
+    mac.multiplicity = lanes;
+    let stage1 = ModuleNode::with_children(
+        "stage1_dot",
+        f::comb_block(3.0, 1.0, bits, 40.0 * lanes, 8.0 * lanes, 2.8),
+        vec![
+            ModuleNode::leaf("mac_lane", mac),
+            ModuleNode::leaf(
+                "reduce_tree",
+                f::comb_block(lanes, 1.0, 2.0 * bits, 12.0 * lanes * bits / 4.0, 2.0 * bits, 2.0),
+            ),
+        ],
+    );
+
+    // Stage 2: scalar nonlinearity / update rule.
+    let nl_cells = if is_logistic {
+        // piecewise sigmoid LUT + interpolation
+        420.0 + 30.0 * bits
+    } else {
+        160.0 + 12.0 * bits
+    };
+    let stage2 = ModuleNode::with_children(
+        "stage2_update",
+        f::comb_block(2.0, 2.0, bits, nl_cells, 6.0 * bits, 3.1),
+        vec![ModuleNode::leaf("alu", f::alu_lane(bits))],
+    );
+
+    // Stage 3: gradient apply / weight writeback array.
+    let mut wmac = f::mac_unit(bits, 2.0 * bits);
+    wmac.multiplicity = lanes;
+    let mut stage3_children = vec![ModuleNode::leaf("update_lane", wmac)];
+    if is_recsys {
+        // recommender system keeps two factor vectors in flight
+        let mut extra = f::alu_lane(bits);
+        extra.multiplicity = lanes;
+        stage3_children.push(ModuleNode::leaf("factor_lane", extra));
+    }
+    let stage3 = ModuleNode::with_children(
+        "stage3_apply",
+        f::comb_block(3.0, 1.0, bits, 30.0 * lanes, 4.0 * lanes, 2.7),
+        stage3_children,
+    );
+
+    // Weight/input registers: register-file based (Axiline is std-cell
+    // only — no SRAM macros: paper samples util up to 90% for it).
+    let regs = ModuleNode::leaf(
+        "weight_regfile",
+        f::comb_block(2.0, 2.0, bits, 6.0 * dim * bits / 4.0, dim * bits, 2.2),
+    );
+    let input_regs = ModuleNode::leaf(
+        "input_regfile",
+        f::comb_block(2.0, 2.0, in_bits, 4.0 * dim * in_bits / 4.0, dim * in_bits, 2.2),
+    );
+
+    let top = ModuleNode::with_children(
+        "axiline_top",
+        f::comb_block(6.0, 4.0, in_bits, 90.0, 40.0, 2.5),
+        vec![
+            stage1,
+            stage2,
+            stage3,
+            regs,
+            input_regs,
+            ModuleNode::leaf("sequencer", f::controller(10.0 + cycles, bits)),
+            ModuleNode::leaf("io_shim", f::axi_iface(in_bits * 4.0)),
+        ],
+    );
+    ModuleTree { platform: Platform::Axiline, top }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(bench: f64, bits: f64, in_bits: f64, dim: f64, cycles: f64) -> ArchConfig {
+        ArchConfig::new(Platform::Axiline, vec![bench, bits, in_bits, dim, cycles])
+    }
+
+    #[test]
+    fn more_lanes_more_cells() {
+        let fast = Platform::Axiline.generate(&cfg(0.0, 16.0, 8.0, 60.0, 2.0)).unwrap();
+        let slow = Platform::Axiline.generate(&cfg(0.0, 16.0, 8.0, 60.0, 25.0)).unwrap();
+        assert!(fast.aggregates().comb_cells > 2.0 * slow.aggregates().comb_cells);
+    }
+
+    #[test]
+    fn logistic_has_nonlinearity_overhead() {
+        let svm = Platform::Axiline.generate(&cfg(0.0, 8.0, 4.0, 20.0, 5.0)).unwrap();
+        let log = Platform::Axiline.generate(&cfg(2.0, 8.0, 4.0, 20.0, 5.0)).unwrap();
+        assert!(log.aggregates().comb_cells > svm.aggregates().comb_cells);
+    }
+
+    #[test]
+    fn no_macros() {
+        let t = Platform::Axiline.generate(&cfg(1.0, 16.0, 8.0, 30.0, 10.0)).unwrap();
+        assert_eq!(t.aggregates().macro_bits, 0.0);
+    }
+
+    #[test]
+    fn node_budget() {
+        for d in [5.0, 33.0, 60.0] {
+            for c in [1.0, 13.0, 25.0] {
+                let t = Platform::Axiline.generate(&cfg(3.0, 16.0, 8.0, d, c)).unwrap();
+                assert!(t.node_count() <= 32, "{d}/{c}: {}", t.node_count());
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Node-feature construction helpers shared by the four generators, plus
+//! the unified 16-dim feature vector fed to the learned predictors.
+
+use super::{ArchConfig, NodeFeatures, ParamKind};
+
+/// Unified model feature vector length (must match python model.FEAT).
+pub const FEAT_DIM: usize = 16;
+
+/// A combinational block: `cells` gates with average fan-in `fanin`,
+/// `bits`-wide datapath, `ffs` pipeline registers.
+pub fn comb_block(
+    in_signals: f64,
+    out_signals: f64,
+    bits: f64,
+    cells: f64,
+    ffs: f64,
+    fanin: f64,
+) -> NodeFeatures {
+    NodeFeatures {
+        in_signals,
+        out_signals,
+        avg_in_bits: bits,
+        avg_out_bits: bits,
+        comb_cells: cells,
+        ff_count: ffs,
+        macro_count: 0.0,
+        avg_comb_inputs: fanin,
+        multiplicity: 1.0,
+    }
+}
+
+/// An SRAM buffer: `banks` macros of `kbits_per_bank` kilobits each,
+/// plus a small amount of glue logic. Convention: bits-per-bank ride in
+/// `avg_out_bits` (in kilobits) so ModuleTree::macro_bits can recover the
+/// total capacity (see generators/mod.rs).
+pub fn sram_macro(kbits_per_bank: f64, banks: f64, port_bits: f64) -> NodeFeatures {
+    NodeFeatures {
+        in_signals: 4.0,
+        out_signals: 2.0,
+        avg_in_bits: port_bits,
+        avg_out_bits: kbits_per_bank,
+        comb_cells: 120.0 + 4.0 * port_bits, // address decode + mux glue
+        ff_count: 32.0 + port_bits,          // output registers
+        macro_count: banks,
+        avg_comb_inputs: 2.6,
+        multiplicity: 1.0,
+    }
+}
+
+/// A `bits x bits` multiply-accumulate unit: cells scale quadratically
+/// with operand width (array multiplier), depth logarithmically.
+pub fn mac_unit(bits: f64, acc_bits: f64) -> NodeFeatures {
+    let cells = 9.0 * bits * bits + 4.0 * acc_bits;
+    NodeFeatures {
+        in_signals: 3.0,
+        out_signals: 1.0,
+        avg_in_bits: bits,
+        avg_out_bits: acc_bits,
+        comb_cells: cells,
+        ff_count: acc_bits + 2.0 * bits,
+        macro_count: 0.0,
+        avg_comb_inputs: 3.2,
+        multiplicity: 1.0,
+    }
+}
+
+/// A `bits`-wide ALU lane (add/sub/compare/shift + small LUT ops).
+pub fn alu_lane(bits: f64) -> NodeFeatures {
+    NodeFeatures {
+        in_signals: 3.0,
+        out_signals: 1.0,
+        avg_in_bits: bits,
+        avg_out_bits: bits,
+        comb_cells: 38.0 * bits,
+        ff_count: 3.0 * bits,
+        macro_count: 0.0,
+        avg_comb_inputs: 2.9,
+        multiplicity: 1.0,
+    }
+}
+
+/// Control FSM / sequencer of `states` states over `bits`-wide datapaths.
+pub fn controller(states: f64, bits: f64) -> NodeFeatures {
+    NodeFeatures {
+        in_signals: 8.0,
+        out_signals: 12.0,
+        avg_in_bits: bits / 2.0,
+        avg_out_bits: 4.0,
+        comb_cells: 60.0 * states,
+        ff_count: 12.0 * states,
+        macro_count: 0.0,
+        avg_comb_inputs: 3.4,
+        multiplicity: 1.0,
+    }
+}
+
+/// Bus / interconnect fabric joining `ports` agents at `bits` width.
+pub fn interconnect(ports: f64, bits: f64) -> NodeFeatures {
+    NodeFeatures {
+        in_signals: ports,
+        out_signals: ports,
+        avg_in_bits: bits,
+        avg_out_bits: bits,
+        comb_cells: 22.0 * ports * bits.sqrt() * 4.0,
+        ff_count: 2.0 * ports * bits.sqrt(),
+        macro_count: 0.0,
+        avg_comb_inputs: 2.4,
+        multiplicity: 1.0,
+    }
+}
+
+/// AXI/DMA interface at `bits` data width.
+pub fn axi_iface(bits: f64) -> NodeFeatures {
+    NodeFeatures {
+        in_signals: 9.0,
+        out_signals: 9.0,
+        avg_in_bits: bits,
+        avg_out_bits: bits,
+        comb_cells: 30.0 * bits,
+        ff_count: 6.0 * bits,
+        macro_count: 0.0,
+        avg_comb_inputs: 2.7,
+        multiplicity: 1.0,
+    }
+}
+
+/// The unified 16-dim feature vector (paper Eq. 1/2 inputs):
+/// [0..12)  architectural parameters, unit-normalized, zero-padded
+/// [12]     f_target (GHz)
+/// [13]     floorplan utilization
+/// [14]     log-scaled total cell count of the generated design
+/// [15]     log-scaled total SRAM macro bits
+pub fn unified_features(
+    cfg: &ArchConfig,
+    f_target_ghz: f64,
+    util: f64,
+    total_cells: f64,
+    macro_bits: f64,
+) -> [f64; FEAT_DIM] {
+    let mut out = [0.0; FEAT_DIM];
+    let space = cfg.platform.param_space();
+    for (i, (spec, v)) in space.iter().zip(cfg.values.iter()).enumerate().take(12) {
+        out[i] = match &spec.kind {
+            ParamKind::Cat(_) => spec.kind.to_unit(*v),
+            kind => kind.to_unit(*v),
+        };
+    }
+    out[12] = f_target_ghz;
+    out[13] = util;
+    out[14] = (total_cells.max(1.0)).ln() / 20.0;
+    out[15] = (macro_bits + 1.0).ln() / 25.0;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::Platform;
+
+    #[test]
+    fn unified_features_are_bounded() {
+        for p in Platform::ALL {
+            let space = p.param_space();
+            assert!(space.len() <= 12, "{p}: too many params for the feature layout");
+            let cfg = ArchConfig::new(
+                p,
+                space.iter().map(|s| s.kind.from_unit(0.99)).collect(),
+            );
+            let tree = p.generate(&cfg).unwrap();
+            let agg = tree.aggregates();
+            let f = unified_features(&cfg, 1.5, 0.6, agg.comb_cells, agg.macro_bits);
+            for (i, v) in f.iter().enumerate() {
+                assert!(v.is_finite() && *v >= 0.0 && *v <= 2.5, "{p} feat[{i}]={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn feature_vector_distinguishes_backend_knobs() {
+        let p = Platform::Axiline;
+        let cfg = ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+        );
+        let a = unified_features(&cfg, 0.5, 0.4, 1e5, 0.0);
+        let b = unified_features(&cfg, 1.5, 0.8, 1e5, 0.0);
+        assert_ne!(a[12], b[12]);
+        assert_ne!(a[13], b[13]);
+        assert_eq!(a[..12], b[..12]);
+    }
+
+    #[test]
+    fn mac_scales_quadratically() {
+        let small = mac_unit(4.0, 32.0);
+        let big = mac_unit(8.0, 32.0);
+        // array multiplier dominates: ratio approaches 4x as the
+        // accumulator term amortizes
+        let ratio = big.comb_cells / small.comb_cells;
+        assert!(ratio > 2.0 && ratio < 4.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn sram_macro_encodes_capacity() {
+        let n = sram_macro(64.0, 4.0, 128.0);
+        assert_eq!(n.macro_count, 4.0);
+        assert_eq!(n.avg_out_bits, 64.0); // kilobits per bank
+    }
+}

@@ -1,0 +1,137 @@
+//! GeneSys generator (paper §5.1, Table 1): an M x N systolic array for
+//! GEMM/convolution plus an N x 1 SIMD array for vector ops, fed by four
+//! SRAM buffers (WBUF/IBUF/OBUF/VMEM) over AXI.
+//!
+//! Following the paper's data-generation strategy (§7.1), buffer sizes
+//! and AXI widths are sampled around array-dimension-proportional
+//! baselines to exercise weight-reuse vs. partial-sum-reuse tradeoffs.
+
+use super::features as f;
+use super::{ArchConfig, ModuleNode, ModuleTree, ParamKind, ParamSpec, Platform};
+
+pub fn param_space() -> Vec<ParamSpec> {
+    vec![
+        ParamSpec { name: "array_dim", kind: ParamKind::Choice(vec![8.0, 16.0, 32.0]) },
+        ParamSpec { name: "weight_bits", kind: ParamKind::Int { lo: 4, hi: 8 } },
+        ParamSpec { name: "act_bits", kind: ParamKind::Int { lo: 4, hi: 8 } },
+        ParamSpec { name: "wbuf_kb", kind: ParamKind::Int { lo: 16, hi: 256 } },
+        ParamSpec { name: "ibuf_kb", kind: ParamKind::Int { lo: 16, hi: 128 } },
+        ParamSpec { name: "obuf_kb", kind: ParamKind::Int { lo: 128, hi: 1024 } },
+        ParamSpec { name: "vmem_kb", kind: ParamKind::Int { lo: 128, hi: 1024 } },
+        ParamSpec { name: "wbuf_axi_bits", kind: ParamKind::Int { lo: 64, hi: 256 } },
+        ParamSpec { name: "ibuf_axi_bits", kind: ParamKind::Int { lo: 128, hi: 256 } },
+        ParamSpec { name: "obuf_axi_bits", kind: ParamKind::Int { lo: 128, hi: 256 } },
+        ParamSpec { name: "simd_axi_bits", kind: ParamKind::Int { lo: 128, hi: 256 } },
+    ]
+}
+
+pub const ACC_BITS: f64 = 32.0;
+
+pub fn generate(cfg: &ArchConfig) -> ModuleTree {
+    let m = cfg.get("array_dim"); // systolic M == N
+    let wbits = cfg.get("weight_bits");
+    let abits = cfg.get("act_bits");
+    let avg_bits = 0.5 * (wbits + abits);
+
+    // Systolic array: fold one PE row (N PEs) x M rows.
+    let mut pe = f::mac_unit(avg_bits, ACC_BITS);
+    pe.multiplicity = m; // N PEs per row
+    let mut row = f::comb_block(3.0, 3.0, avg_bits, 25.0 * m, 10.0 * m, 2.5);
+    row.multiplicity = m; // M rows
+    let systolic = ModuleNode::with_children(
+        "systolic_array",
+        f::comb_block(4.0, 2.0, avg_bits, 200.0, 80.0, 2.6),
+        vec![ModuleNode::with_children(
+            "pe_row",
+            row,
+            vec![ModuleNode::leaf("pe", pe)],
+        )],
+    );
+
+    // SIMD array: N lanes of 32-bit vector ALUs (relu/pool/softmax).
+    let mut lane = f::alu_lane(ACC_BITS);
+    lane.multiplicity = m;
+    let simd = ModuleNode::with_children(
+        "simd_array",
+        f::comb_block(4.0, 2.0, ACC_BITS, 150.0, 60.0, 2.8),
+        vec![
+            ModuleNode::leaf("vector_lane", lane),
+            ModuleNode::leaf("special_fn", f::comb_block(2.0, 1.0, ACC_BITS, 900.0, 64.0, 3.3)),
+        ],
+    );
+
+    // Buffers: bank count grows with capacity (64-kbit banks).
+    let buffers = ModuleNode::with_children(
+        "buffer_subsystem",
+        f::comb_block(8.0, 8.0, 64.0, 300.0, 120.0, 2.4),
+        vec![
+            ModuleNode::leaf("wbuf", f::sram_macro(64.0, (cfg.get("wbuf_kb") * 8.0 / 64.0).ceil(), cfg.get("wbuf_axi_bits"))),
+            ModuleNode::leaf("ibuf", f::sram_macro(64.0, (cfg.get("ibuf_kb") * 8.0 / 64.0).ceil(), cfg.get("ibuf_axi_bits"))),
+            ModuleNode::leaf("obuf", f::sram_macro(64.0, (cfg.get("obuf_kb") * 8.0 / 64.0).ceil(), cfg.get("obuf_axi_bits"))),
+            ModuleNode::leaf("vmem", f::sram_macro(64.0, (cfg.get("vmem_kb") * 8.0 / 64.0).ceil(), cfg.get("simd_axi_bits"))),
+        ],
+    );
+
+    let dma = ModuleNode::with_children(
+        "axi_subsystem",
+        f::comb_block(8.0, 8.0, 128.0, 250.0, 100.0, 2.5),
+        vec![
+            ModuleNode::leaf("wbuf_axi", f::axi_iface(cfg.get("wbuf_axi_bits"))),
+            ModuleNode::leaf("ibuf_axi", f::axi_iface(cfg.get("ibuf_axi_bits"))),
+            ModuleNode::leaf("obuf_axi", f::axi_iface(cfg.get("obuf_axi_bits"))),
+            ModuleNode::leaf("simd_axi", f::axi_iface(cfg.get("simd_axi_bits"))),
+        ],
+    );
+
+    let top = ModuleNode::with_children(
+        "genesys_top",
+        f::comb_block(12.0, 10.0, 32.0, 400.0, 180.0, 2.6),
+        vec![
+            systolic,
+            simd,
+            buffers,
+            dma,
+            ModuleNode::leaf("instruction_ctrl", f::controller(48.0, 32.0)),
+            ModuleNode::leaf("tile_walker", f::controller(24.0, 16.0)),
+            ModuleNode::leaf("noc_fabric", f::interconnect(6.0, 128.0)),
+        ],
+    );
+    ModuleTree { platform: Platform::GeneSys, top }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(array: f64, wkb: f64) -> ArchConfig {
+        ArchConfig::new(
+            Platform::GeneSys,
+            vec![array, 8.0, 8.0, wkb, 64.0, 256.0, 256.0, 128.0, 128.0, 128.0, 128.0],
+        )
+    }
+
+    #[test]
+    fn array_dim_scales_quadratically_via_fold() {
+        let small = Platform::GeneSys.generate(&cfg(8.0, 64.0)).unwrap().aggregates();
+        let big = Platform::GeneSys.generate(&cfg(32.0, 64.0)).unwrap().aggregates();
+        // PEs: row multiplicity m times per-row PE multiplicity m
+        let ratio = big.comb_cells / small.comb_cells;
+        assert!(ratio > 6.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn buffer_capacity_becomes_macro_bits() {
+        let a = Platform::GeneSys.generate(&cfg(16.0, 16.0)).unwrap().aggregates();
+        let b = Platform::GeneSys.generate(&cfg(16.0, 256.0)).unwrap().aggregates();
+        assert!(b.macro_bits > a.macro_bits);
+        // wbuf went from 16KB to 256KB = +240KB = +1.97 Mbit
+        let delta = b.macro_bits - a.macro_bits;
+        assert!((delta - 240.0 * 8.0 * 1024.0).abs() < 70_000.0, "delta={delta}");
+    }
+
+    #[test]
+    fn node_budget() {
+        let t = Platform::GeneSys.generate(&cfg(32.0, 256.0)).unwrap();
+        assert!(t.node_count() <= 32, "{}", t.node_count());
+    }
+}

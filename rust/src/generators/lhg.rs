@@ -1,0 +1,219 @@
+//! Logical Hierarchy Graph (paper §6, Algorithm 1).
+//!
+//! The LHG is the hierarchy tree of the generated design: one node per
+//! module instantiation, one undirected edge per parent→submodule
+//! relation (so |E| = |V| - 1), node features per Fig. 5c. The paper
+//! extracts it from a Genus "generic netlist" via a Pyverilog AST walk;
+//! our generators' ModuleTree *is* that AST, and `from_tree` implements
+//! Algorithm 1's depth-first AddNodeToGraph procedure verbatim.
+//!
+//! `to_gcn_inputs` converts the LHG into the padded dense tensors the
+//! AOT-compiled GCN consumes: node feature matrix [N, 9] (log-scaled),
+//! symmetric normalized adjacency D^-1/2 (A + I) D^-1/2 [N, N], and a
+//! validity mask [N].
+
+use anyhow::{ensure, Result};
+
+use super::{ModuleNode, ModuleTree, NodeFeatures};
+
+/// Per-node feature dimension (Fig. 5c features + fold multiplicity) —
+/// must match python model.NODE_FEAT.
+pub const NODE_FEAT_DIM: usize = 9;
+
+/// Max nodes the AOT GCN accepts — must match python model.NODES.
+pub const MAX_NODES: usize = 128;
+
+#[derive(Debug, Clone)]
+pub struct Lhg {
+    /// Node features in Algorithm-1 DFS order (node 0 = top module).
+    pub nodes: Vec<NodeFeatures>,
+    /// Node names (diagnostics / t-SNE labelling).
+    pub names: Vec<String>,
+    /// Undirected edges (parent, child); len == nodes.len() - 1.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl Lhg {
+    /// Algorithm 1: AddNodeToGraph(top, G, -1, 0) by depth-first search.
+    pub fn from_tree(tree: &ModuleTree) -> Lhg {
+        let mut g = Lhg { nodes: Vec::new(), names: Vec::new(), edges: Vec::new() };
+        fn add_node(n: &ModuleNode, g: &mut Lhg, pid: Option<usize>) {
+            let id = g.nodes.len();
+            g.nodes.push(n.feats);
+            g.names.push(n.name.clone());
+            if let Some(p) = pid {
+                g.edges.push((p, id));
+            }
+            for c in &n.children {
+                add_node(c, g, Some(id));
+            }
+        }
+        add_node(&tree.top, &mut g, None);
+        g
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Tree invariant check: |E| = |V|-1, every non-root has exactly one
+    /// parent, parents precede children (DFS order).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.nodes.is_empty(), "empty LHG");
+        ensure!(
+            self.edges.len() == self.nodes.len() - 1,
+            "LHG must be a tree: |E|={} |V|={}",
+            self.edges.len(),
+            self.nodes.len()
+        );
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for &(p, c) in &self.edges {
+            ensure!(p < c, "parent {p} must precede child {c} (DFS order)");
+            ensure!(c < self.nodes.len(), "edge out of range");
+            indeg[c] += 1;
+        }
+        ensure!(indeg[0] == 0, "root has a parent");
+        for (i, d) in indeg.iter().enumerate().skip(1) {
+            ensure!(*d == 1, "node {i} has {d} parents");
+        }
+        Ok(())
+    }
+
+    /// Dense GCN inputs, padded to `max_nodes`:
+    /// (node_feats [max,NODE_FEAT_DIM], adj [max,max], mask [max]).
+    /// Counts are log1p-scaled so the GCN sees O(1) magnitudes.
+    pub fn to_gcn_inputs(
+        &self,
+        max_nodes: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        ensure!(
+            self.nodes.len() <= max_nodes,
+            "LHG has {} nodes > budget {max_nodes}",
+            self.nodes.len()
+        );
+        let n = self.nodes.len();
+        let mut feats = vec![0.0f32; max_nodes * NODE_FEAT_DIM];
+        for (i, nf) in self.nodes.iter().enumerate() {
+            let raw = nf.to_vec();
+            for (j, v) in raw.iter().enumerate() {
+                // signals/bits/cells/ffs/macros/fanin/multiplicity are all
+                // nonneg counts: log1p compresses the dynamic range.
+                feats[i * NODE_FEAT_DIM + j] = (v.max(0.0)).ln_1p() as f32;
+            }
+        }
+        // adjacency with self loops
+        let mut deg = vec![1.0f64; n];
+        for &(p, c) in &self.edges {
+            deg[p] += 1.0;
+            deg[c] += 1.0;
+        }
+        let mut adj = vec![0.0f32; max_nodes * max_nodes];
+        for i in 0..n {
+            adj[i * max_nodes + i] = (1.0 / deg[i]) as f32;
+        }
+        for &(p, c) in &self.edges {
+            let w = (1.0 / (deg[p] * deg[c]).sqrt()) as f32;
+            adj[p * max_nodes + c] = w;
+            adj[c * max_nodes + p] = w;
+        }
+        let mut mask = vec![0.0f32; max_nodes];
+        for m in mask.iter_mut().take(n) {
+            *m = 1.0;
+        }
+        Ok((feats, adj, mask))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::{ArchConfig, Platform};
+
+    fn lhg_for(p: Platform, u: f64) -> Lhg {
+        let cfg = ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(u)).collect(),
+        );
+        Lhg::from_tree(&p.generate(&cfg).unwrap())
+    }
+
+    #[test]
+    fn lhg_is_a_valid_tree_for_all_platforms() {
+        for p in Platform::ALL {
+            for u in [0.0, 0.3, 0.7, 0.99] {
+                let g = lhg_for(p, u);
+                g.validate().unwrap();
+                assert!(g.len() <= MAX_NODES, "{p}: {}", g.len());
+            }
+        }
+    }
+
+    #[test]
+    fn edge_count_is_v_minus_one() {
+        let g = lhg_for(Platform::GeneSys, 0.5);
+        assert_eq!(g.edges.len(), g.len() - 1);
+    }
+
+    #[test]
+    fn root_is_top_module() {
+        let g = lhg_for(Platform::Vta, 0.5);
+        assert_eq!(g.names[0], "vta_top");
+    }
+
+    #[test]
+    fn gcn_inputs_shapes_and_mask() {
+        let g = lhg_for(Platform::Tabla, 0.5);
+        let (feats, adj, mask) = g.to_gcn_inputs(MAX_NODES).unwrap();
+        assert_eq!(feats.len(), MAX_NODES * NODE_FEAT_DIM);
+        assert_eq!(adj.len(), MAX_NODES * MAX_NODES);
+        assert_eq!(mask.len(), MAX_NODES);
+        let valid: f32 = mask.iter().sum();
+        assert_eq!(valid as usize, g.len());
+        // padded region must be all-zero
+        for i in g.len()..MAX_NODES {
+            assert_eq!(mask[i], 0.0);
+            for j in 0..MAX_NODES {
+                assert_eq!(adj[i * MAX_NODES + j], 0.0);
+                assert_eq!(adj[j * MAX_NODES + i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn adjacency_is_symmetric_normalized() {
+        let g = lhg_for(Platform::Axiline, 0.2);
+        let n = g.len();
+        let (_, adj, _) = g.to_gcn_inputs(MAX_NODES).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let a = adj[i * MAX_NODES + j];
+                let b = adj[j * MAX_NODES + i];
+                assert!((a - b).abs() < 1e-6);
+            }
+            assert!(adj[i * MAX_NODES + i] > 0.0, "self loop missing at {i}");
+        }
+        // every entry of D^-1/2 (A+I) D^-1/2 lies in [0, 1]
+        for v in adj.iter() {
+            assert!((0.0..=1.0).contains(v), "entry {v} out of range");
+        }
+    }
+
+    #[test]
+    fn different_configs_different_graphs() {
+        let a = lhg_for(Platform::Axiline, 0.1);
+        let b = lhg_for(Platform::Axiline, 0.9);
+        let fa = a.nodes.iter().map(|n| n.comb_cells).sum::<f64>();
+        let fb = b.nodes.iter().map(|n| n.comb_cells).sum::<f64>();
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn rejects_overflow() {
+        let g = lhg_for(Platform::GeneSys, 0.5);
+        assert!(g.to_gcn_inputs(4).is_err());
+    }
+}

@@ -1,0 +1,486 @@
+//! Parameterizable ML accelerator generators (paper §5.1, Table 1).
+//!
+//! The paper drives four RTL generators — TABLA, GeneSys, VTA, Axiline —
+//! through commercial synthesis. We reproduce their *structural* output:
+//! each generator maps an architectural configuration one-to-one to a
+//! hierarchical module tree whose per-module features are exactly the
+//! Fig. 5c node features (I/O signal counts, average bit widths,
+//! combinational cell count, flip-flop count, macro count, average
+//! combinational fan-in) plus a fold multiplicity. The tree doubles as
+//! the AST from which Algorithm 1 extracts the logical hierarchy graph
+//! (`lhg.rs`), and its aggregates feed the backend SP&R oracle.
+
+pub mod axiline;
+pub mod features;
+pub mod genesys;
+pub mod lhg;
+pub mod tabla;
+pub mod vta;
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+pub use features::{unified_features, FEAT_DIM};
+pub use lhg::{Lhg, NODE_FEAT_DIM};
+
+/// The four demonstration platforms (paper §5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Platform {
+    Tabla,
+    GeneSys,
+    Vta,
+    Axiline,
+}
+
+impl Platform {
+    pub const ALL: [Platform; 4] = [
+        Platform::Tabla,
+        Platform::GeneSys,
+        Platform::Vta,
+        Platform::Axiline,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Platform::Tabla => "tabla",
+            Platform::GeneSys => "genesys",
+            Platform::Vta => "vta",
+            Platform::Axiline => "axiline",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Platform> {
+        match s.to_ascii_lowercase().as_str() {
+            "tabla" => Ok(Platform::Tabla),
+            "genesys" => Ok(Platform::GeneSys),
+            "vta" => Ok(Platform::Vta),
+            "axiline" => Ok(Platform::Axiline),
+            other => bail!("unknown platform {other:?}"),
+        }
+    }
+
+    /// Architectural parameter space (Table 1).
+    pub fn param_space(&self) -> Vec<ParamSpec> {
+        match self {
+            Platform::Tabla => tabla::param_space(),
+            Platform::GeneSys => genesys::param_space(),
+            Platform::Vta => vta::param_space(),
+            Platform::Axiline => axiline::param_space(),
+        }
+    }
+
+    /// Generate the module tree for a configuration (the "RTL netlist").
+    pub fn generate(&self, cfg: &ArchConfig) -> Result<ModuleTree> {
+        cfg.validate()?;
+        Ok(match self {
+            Platform::Tabla => tabla::generate(cfg),
+            Platform::GeneSys => genesys::generate(cfg),
+            Platform::Vta => vta::generate(cfg),
+            Platform::Axiline => axiline::generate(cfg),
+        })
+    }
+
+    /// Whether the platform's designs are macro-heavy (large SRAM buffers)
+    /// — macro-heavy designs get the lower utilization sampling window
+    /// (paper Fig. 6) and the lower congestion cliff.
+    pub fn macro_heavy(&self) -> bool {
+        !matches!(self, Platform::Axiline)
+    }
+}
+
+impl fmt::Display for Platform {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One tunable architectural parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub kind: ParamKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamKind {
+    /// Integer in [lo, hi].
+    Int { lo: i64, hi: i64 },
+    /// Continuous in [lo, hi].
+    Float { lo: f64, hi: f64 },
+    /// One of an explicit numeric set (e.g. PU in {4, 8}).
+    Choice(Vec<f64>),
+    /// One of a set of named benchmarks/algorithms.
+    Cat(Vec<&'static str>),
+}
+
+impl ParamKind {
+    /// Map a unit-interval sample u in [0,1) to a legal value (used by all
+    /// samplers so LHS/Sobol/Halton share one quantization rule).
+    pub fn from_unit(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0 - 1e-12);
+        match self {
+            ParamKind::Int { lo, hi } => {
+                let n = (hi - lo + 1) as f64;
+                lo.wrapping_add((u * n) as i64) as f64
+            }
+            ParamKind::Float { lo, hi } => lo + u * (hi - lo),
+            ParamKind::Choice(vals) => vals[(u * vals.len() as f64) as usize],
+            ParamKind::Cat(names) => (u * names.len() as f64).floor(),
+        }
+    }
+
+    /// Normalize a legal value back to [0,1] (feature encoding).
+    pub fn to_unit(&self, v: f64) -> f64 {
+        match self {
+            ParamKind::Int { lo, hi } => {
+                if hi == lo {
+                    0.5
+                } else {
+                    (v - *lo as f64) / (*hi - *lo) as f64
+                }
+            }
+            ParamKind::Float { lo, hi } => {
+                if hi == lo {
+                    0.5
+                } else {
+                    (v - lo) / (hi - lo)
+                }
+            }
+            ParamKind::Choice(vals) => {
+                let pos = vals.iter().position(|x| (x - v).abs() < 1e-9).unwrap_or(0);
+                if vals.len() <= 1 {
+                    0.5
+                } else {
+                    pos as f64 / (vals.len() - 1) as f64
+                }
+            }
+            ParamKind::Cat(names) => {
+                if names.len() <= 1 {
+                    0.5
+                } else {
+                    v / (names.len() - 1) as f64
+                }
+            }
+        }
+    }
+
+    pub fn is_discrete(&self) -> bool {
+        !matches!(self, ParamKind::Float { .. })
+    }
+}
+
+/// A point in a platform's architectural space. `values` aligns with
+/// `platform.param_space()` order; categorical parameters store the
+/// category index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    pub platform: Platform,
+    pub values: Vec<f64>,
+}
+
+impl ArchConfig {
+    pub fn new(platform: Platform, values: Vec<f64>) -> ArchConfig {
+        ArchConfig { platform, values }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let space = self.platform.param_space();
+        if self.values.len() != space.len() {
+            bail!(
+                "{}: config has {} values, space has {} params",
+                self.platform,
+                self.values.len(),
+                space.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Look up a parameter value by Table-1 name.
+    pub fn get(&self, name: &str) -> f64 {
+        let space = self.platform.param_space();
+        let idx = space
+            .iter()
+            .position(|p| p.name == name)
+            .unwrap_or_else(|| panic!("{}: no parameter named {name}", self.platform));
+        self.values[idx]
+    }
+
+    /// Benchmark/workload name for platforms with a `benchmark` parameter.
+    pub fn benchmark(&self) -> Option<&'static str> {
+        let space = self.platform.param_space();
+        let idx = space.iter().position(|p| p.name == "benchmark")?;
+        match &space[idx].kind {
+            ParamKind::Cat(names) => names.get(self.values[idx] as usize).copied(),
+            _ => None,
+        }
+    }
+
+    /// Stable identity hash (used for noise seeding and graph caching).
+    pub fn id_hash(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(8 + self.values.len() * 8);
+        bytes.extend_from_slice(self.platform.name().as_bytes());
+        for v in &self.values {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        crate::util::rng::hash_bytes(&bytes)
+    }
+}
+
+/// Fig. 5c node features (+ fold multiplicity), one per module.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct NodeFeatures {
+    pub in_signals: f64,
+    pub out_signals: f64,
+    pub avg_in_bits: f64,
+    pub avg_out_bits: f64,
+    pub comb_cells: f64,
+    pub ff_count: f64,
+    pub macro_count: f64,
+    pub avg_comb_inputs: f64,
+    /// Number of identical sibling instances folded into this node
+    /// (keeps LHGs under the AOT node budget; aggregates multiply by it).
+    pub multiplicity: f64,
+}
+
+impl NodeFeatures {
+    pub fn to_vec(&self) -> [f64; lhg::NODE_FEAT_DIM] {
+        [
+            self.in_signals,
+            self.out_signals,
+            self.avg_in_bits,
+            self.avg_out_bits,
+            self.comb_cells,
+            self.ff_count,
+            self.macro_count,
+            self.avg_comb_inputs,
+            self.multiplicity,
+        ]
+    }
+}
+
+/// One module instantiation in the generated design.
+#[derive(Debug, Clone)]
+pub struct ModuleNode {
+    pub name: String,
+    pub feats: NodeFeatures,
+    pub children: Vec<ModuleNode>,
+}
+
+impl ModuleNode {
+    pub fn leaf(name: &str, feats: NodeFeatures) -> ModuleNode {
+        ModuleNode { name: name.to_string(), feats, children: Vec::new() }
+    }
+
+    pub fn with_children(name: &str, feats: NodeFeatures, children: Vec<ModuleNode>) -> ModuleNode {
+        ModuleNode { name: name.to_string(), feats, children }
+    }
+
+    pub fn count(&self) -> usize {
+        1 + self.children.iter().map(|c| c.count()).sum::<usize>()
+    }
+}
+
+/// The generated design: module hierarchy + workload hint.
+#[derive(Debug, Clone)]
+pub struct ModuleTree {
+    pub platform: Platform,
+    pub top: ModuleNode,
+}
+
+/// Whole-design aggregates consumed by the backend SP&R oracle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignAggregates {
+    /// Total combinational cell count (fold multiplicities applied).
+    pub comb_cells: f64,
+    /// Total flip-flop count.
+    pub ff_count: f64,
+    /// Total SRAM macro bits.
+    pub macro_bits: f64,
+    /// Number of SRAM macro instances.
+    pub macro_count: f64,
+    /// Total SRAM port width (bits accessible per cycle across buffers).
+    pub macro_port_bits: f64,
+    /// Logic depth estimate of the critical path (gate stages).
+    pub logic_depth: f64,
+    /// Average combinational fan-in (cell complexity proxy).
+    pub avg_fanin: f64,
+}
+
+impl ModuleTree {
+    pub fn node_count(&self) -> usize {
+        self.top.count()
+    }
+
+    /// Roll the hierarchy up into backend-oracle aggregates. Multiplicity
+    /// folds expand here and **compose down the tree**: a node with
+    /// multiplicity m inside a parent of multiplicity p contributes
+    /// p*m x its cell/FF counts (e.g. GeneSys' PE inside a folded PE row
+    /// expands to m^2 PEs).
+    pub fn aggregates(&self) -> DesignAggregates {
+        fn walk(n: &ModuleNode, parent_m: f64, acc: &mut DesignAggregates, fanin_w: &mut f64) {
+            let m = parent_m * n.feats.multiplicity.max(1.0);
+            acc.comb_cells += n.feats.comb_cells * m;
+            acc.ff_count += n.feats.ff_count * m;
+            acc.macro_count += n.feats.macro_count * m;
+            if n.feats.macro_count > 0.0 {
+                // sram_macro stores its port width in avg_in_bits
+                acc.macro_port_bits += n.feats.avg_in_bits * m;
+            }
+            acc.avg_fanin += n.feats.avg_comb_inputs * n.feats.comb_cells * m;
+            *fanin_w += n.feats.comb_cells * m;
+            for c in &n.children {
+                walk(c, m, acc, fanin_w);
+            }
+        }
+        let mut acc = DesignAggregates {
+            comb_cells: 0.0,
+            ff_count: 0.0,
+            macro_bits: 0.0,
+            macro_count: 0.0,
+            macro_port_bits: 0.0,
+            logic_depth: self.logic_depth(),
+            avg_fanin: 0.0,
+        };
+        let mut fanin_w = 0.0;
+        walk(&self.top, 1.0, &mut acc, &mut fanin_w);
+        if fanin_w > 0.0 {
+            acc.avg_fanin /= fanin_w;
+        }
+        acc.macro_bits = self.macro_bits();
+        acc
+    }
+
+    /// Critical-path logic depth (gate stages) — platform- and
+    /// bitwidth-dependent (multiplier arrays dominate).
+    pub fn logic_depth(&self) -> f64 {
+        fn max_depth(n: &ModuleNode) -> f64 {
+            // stage count grows with cell-cloud size (carry/multiplier
+            // arrays) and average fan-in; ~30-45 stages for MAC-class
+            // blocks, which puts GF12 f_max in the 1.5-2.5 GHz band the
+            // paper's designs occupy.
+            let own = 6.0 + n.feats.avg_comb_inputs * (n.feats.comb_cells.max(2.0)).log2() * 0.9;
+            n.children.iter().map(max_depth).fold(own, f64::max)
+        }
+        max_depth(&self.top)
+    }
+
+    fn macro_bits(&self) -> f64 {
+        // Convention (features.rs::sram_macro): a macro node stores its
+        // kilobits-per-bank in avg_out_bits and its bank count in
+        // macro_count, so total bits = macro_count * avg_out_bits * 1024.
+        fn walk(n: &ModuleNode, parent_m: f64) -> f64 {
+            let m = parent_m * n.feats.multiplicity.max(1.0);
+            let mut bits = if n.feats.macro_count > 0.0 {
+                n.feats.macro_count * n.feats.avg_out_bits * 1024.0 * m
+            } else {
+                0.0
+            };
+            for c in &n.children {
+                bits += walk(c, m);
+            }
+            bits
+        }
+        walk(&self.top, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_config(p: Platform) -> ArchConfig {
+        let values: Vec<f64> = p
+            .param_space()
+            .iter()
+            .map(|s| s.kind.from_unit(0.5))
+            .collect();
+        ArchConfig::new(p, values)
+    }
+
+    #[test]
+    fn every_platform_generates() {
+        for p in Platform::ALL {
+            let cfg = default_config(p);
+            let tree = p.generate(&cfg).unwrap();
+            assert!(tree.node_count() >= 5, "{p}: too few modules");
+            assert!(tree.node_count() <= 128, "{p}: exceeds LHG budget");
+            let agg = tree.aggregates();
+            assert!(agg.comb_cells > 0.0);
+            assert!(agg.ff_count > 0.0);
+            assert!(agg.logic_depth > 1.0);
+        }
+    }
+
+    #[test]
+    fn config_to_design_is_deterministic() {
+        let cfg = default_config(Platform::GeneSys);
+        let a = Platform::GeneSys.generate(&cfg).unwrap().aggregates();
+        let b = Platform::GeneSys.generate(&cfg).unwrap().aggregates();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bigger_configs_make_bigger_designs() {
+        let p = Platform::GeneSys;
+        let lo: Vec<f64> = p.param_space().iter().map(|s| s.kind.from_unit(0.05)).collect();
+        let hi: Vec<f64> = p.param_space().iter().map(|s| s.kind.from_unit(0.95)).collect();
+        let small = p.generate(&ArchConfig::new(p, lo)).unwrap().aggregates();
+        let large = p.generate(&ArchConfig::new(p, hi)).unwrap().aggregates();
+        assert!(large.comb_cells > small.comb_cells);
+        assert!(large.macro_bits > small.macro_bits);
+    }
+
+    #[test]
+    fn macro_heavy_platforms_have_macros() {
+        for p in Platform::ALL {
+            let agg = p.generate(&default_config(p)).unwrap().aggregates();
+            if p.macro_heavy() {
+                assert!(agg.macro_bits > 0.0, "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn unit_mapping_roundtrip() {
+        let kinds = [
+            ParamKind::Int { lo: 4, hi: 60 },
+            ParamKind::Float { lo: 0.2, hi: 0.9 },
+            ParamKind::Choice(vec![4.0, 8.0, 16.0]),
+            ParamKind::Cat(vec!["a", "b", "c"]),
+        ];
+        for kind in &kinds {
+            for i in 0..50 {
+                let u = i as f64 / 50.0;
+                let v = kind.from_unit(u);
+                let un = kind.to_unit(v);
+                assert!((0.0..=1.0).contains(&un), "{kind:?} u={u} v={v} un={un}");
+                // re-quantizing a legal value must be idempotent
+                let v2 = kind.from_unit(un.min(1.0 - 1e-9));
+                if let ParamKind::Float { .. } = kind {
+                    assert!((v - v2).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn id_hash_distinguishes_configs() {
+        let a = default_config(Platform::Vta);
+        let mut b = a.clone();
+        b.values[0] += 1.0;
+        assert_ne!(a.id_hash(), b.id_hash());
+        assert_eq!(a.id_hash(), default_config(Platform::Vta).id_hash());
+    }
+
+    #[test]
+    fn benchmark_lookup() {
+        let p = Platform::Axiline;
+        let mut cfg = default_config(p);
+        let space = p.param_space();
+        let bidx = space.iter().position(|s| s.name == "benchmark").unwrap();
+        cfg.values[bidx] = 0.0;
+        assert!(cfg.benchmark().is_some());
+    }
+}

@@ -1,0 +1,107 @@
+//! TABLA generator (paper §5.1, Table 1): a template-based accelerator
+//! for non-DNN statistical ML training — PUs (processing units), each
+//! holding a ring of PEs (processing engines) with ALUs and register
+//! files, a global bus, and on-chip model/data memories (SRAM macros).
+
+use super::features as f;
+use super::{ArchConfig, ModuleNode, ModuleTree, ParamKind, ParamSpec, Platform};
+
+pub const BENCHMARKS: [&str; 2] = ["recsys", "backprop"];
+
+pub fn param_space() -> Vec<ParamSpec> {
+    vec![
+        ParamSpec { name: "pu", kind: ParamKind::Choice(vec![4.0, 8.0]) },
+        ParamSpec { name: "pe", kind: ParamKind::Choice(vec![8.0, 16.0]) },
+        ParamSpec { name: "bitwidth", kind: ParamKind::Choice(vec![8.0, 16.0]) },
+        ParamSpec { name: "input_bitwidth", kind: ParamKind::Choice(vec![16.0, 32.0]) },
+        ParamSpec { name: "benchmark", kind: ParamKind::Cat(BENCHMARKS.to_vec()) },
+    ]
+}
+
+pub fn generate(cfg: &ArchConfig) -> ModuleTree {
+    let pu = cfg.get("pu");
+    let pe = cfg.get("pe");
+    let bits = cfg.get("bitwidth");
+    let in_bits = cfg.get("input_bitwidth");
+    let is_backprop = cfg.benchmark() == Some("backprop");
+
+    // One PE: ALU + small multiplier + register file + neighbour links.
+    let mut pe_node = f::comb_block(4.0, 4.0, bits, 0.0, 0.0, 0.0);
+    {
+        let mac = f::mac_unit(bits, 2.0 * bits);
+        let alu = f::alu_lane(bits);
+        pe_node.comb_cells = mac.comb_cells + alu.comb_cells + 10.0 * bits /* regfile mux */;
+        pe_node.ff_count = mac.ff_count + alu.ff_count + 16.0 * bits /* 16-entry RF */;
+        pe_node.avg_comb_inputs = 3.0;
+        pe_node.multiplicity = pe;
+    }
+
+    // One PU: PE ring + intra-PU bus + PU controller (folded x pu).
+    let mut pu_shell = f::comb_block(6.0, 6.0, bits, 180.0 + 14.0 * pe, 60.0 + 6.0 * pe, 2.6);
+    pu_shell.multiplicity = pu;
+    let pu_node = ModuleNode::with_children(
+        "pu",
+        pu_shell,
+        vec![
+            ModuleNode::leaf("pe", pe_node),
+            ModuleNode::leaf("pe_ring_bus", f::interconnect(pe, bits)),
+            ModuleNode::leaf("pu_ctrl", f::controller(16.0, bits)),
+        ],
+    );
+
+    // Model/data buffers: backprop needs a bigger model memory (layers).
+    let model_kb = if is_backprop { 128.0 } else { 64.0 } * (bits / 8.0);
+    let data_kb = 32.0 * (in_bits / 16.0);
+    let mem = ModuleNode::with_children(
+        "memory_subsystem",
+        f::comb_block(6.0, 6.0, in_bits, 250.0, 90.0, 2.4),
+        vec![
+            ModuleNode::leaf("model_mem", f::sram_macro(64.0, (model_kb * 8.0 / 64.0).ceil(), bits * pe)),
+            ModuleNode::leaf("data_mem", f::sram_macro(64.0, (data_kb * 8.0 / 64.0).ceil(), in_bits * 4.0)),
+        ],
+    );
+
+    let top = ModuleNode::with_children(
+        "tabla_top",
+        f::comb_block(10.0, 8.0, in_bits, 320.0, 140.0, 2.6),
+        vec![
+            pu_node,
+            mem,
+            ModuleNode::leaf("global_bus", f::interconnect(pu + 2.0, bits * 2.0)),
+            ModuleNode::leaf("scheduler", f::controller(40.0, 16.0)),
+            ModuleNode::leaf("axi_shim", f::axi_iface(in_bits * 2.0)),
+        ],
+    );
+    ModuleTree { platform: Platform::Tabla, top }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pu: f64, pe: f64, bits: f64, bench: f64) -> ArchConfig {
+        ArchConfig::new(Platform::Tabla, vec![pu, pe, bits, 16.0, bench])
+    }
+
+    #[test]
+    fn pe_count_folds_multiply() {
+        let small = Platform::Tabla.generate(&cfg(4.0, 8.0, 8.0, 0.0)).unwrap().aggregates();
+        let big = Platform::Tabla.generate(&cfg(8.0, 16.0, 8.0, 0.0)).unwrap().aggregates();
+        // 4x the PEs (32 -> 128)
+        let ratio = big.comb_cells / small.comb_cells;
+        assert!(ratio > 2.5 && ratio < 5.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn backprop_needs_more_model_memory() {
+        let rec = Platform::Tabla.generate(&cfg(4.0, 8.0, 16.0, 0.0)).unwrap().aggregates();
+        let bp = Platform::Tabla.generate(&cfg(4.0, 8.0, 16.0, 1.0)).unwrap().aggregates();
+        assert!(bp.macro_bits > rec.macro_bits);
+    }
+
+    #[test]
+    fn node_budget() {
+        let t = Platform::Tabla.generate(&cfg(8.0, 16.0, 16.0, 1.0)).unwrap();
+        assert!(t.node_count() <= 16, "{}", t.node_count());
+    }
+}

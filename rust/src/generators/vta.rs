@@ -1,0 +1,106 @@
+//! VTA generator (paper §5.1, Table 1): the TVM hardware backend — a
+//! GEMM core (16x16 int8 by default), a vector ALU, fetch/load/compute/
+//! store command modules, and weight/input/output SRAM buffers sharing
+//! one off-chip bus.
+
+use super::features as f;
+use super::{ArchConfig, ModuleNode, ModuleTree, ParamKind, ParamSpec, Platform};
+
+pub fn param_space() -> Vec<ParamSpec> {
+    vec![
+        // VTA fixes data widths (Table 1: weight/act 8b, acc 32b); the
+        // tunables are buffer capacities and off-chip bandwidth.
+        ParamSpec { name: "gemm_dim", kind: ParamKind::Choice(vec![8.0, 16.0, 32.0]) },
+        ParamSpec { name: "wbuf_kb", kind: ParamKind::Int { lo: 16, hi: 256 } },
+        ParamSpec { name: "ibuf_kb", kind: ParamKind::Int { lo: 16, hi: 128 } },
+        ParamSpec { name: "obuf_kb", kind: ParamKind::Int { lo: 32, hi: 512 } },
+        ParamSpec { name: "offchip_bits", kind: ParamKind::Int { lo: 64, hi: 512 } },
+    ]
+}
+
+pub const WEIGHT_BITS: f64 = 8.0;
+pub const ACC_BITS: f64 = 32.0;
+
+pub fn generate(cfg: &ArchConfig) -> ModuleTree {
+    let dim = cfg.get("gemm_dim");
+
+    // GEMM core: dim x dim int8 MACs, folded as row x lane.
+    let mut mac = f::mac_unit(WEIGHT_BITS, ACC_BITS);
+    mac.multiplicity = dim;
+    let mut row = f::comb_block(3.0, 3.0, WEIGHT_BITS, 20.0 * dim, 8.0 * dim, 2.5);
+    row.multiplicity = dim;
+    let gemm = ModuleNode::with_children(
+        "gemm_core",
+        f::comb_block(4.0, 2.0, WEIGHT_BITS, 260.0, 120.0, 2.7),
+        vec![ModuleNode::with_children(
+            "gemm_row",
+            row,
+            vec![ModuleNode::leaf("mac", mac)],
+        )],
+    );
+
+    // Tensor ALU: dim lanes of 32-bit ops (used for depthwise/pool/relu).
+    let mut lane = f::alu_lane(ACC_BITS);
+    lane.multiplicity = dim;
+    let alu = ModuleNode::with_children(
+        "tensor_alu",
+        f::comb_block(4.0, 2.0, ACC_BITS, 130.0, 60.0, 2.8),
+        vec![ModuleNode::leaf("alu_lane", lane)],
+    );
+
+    let buffers = ModuleNode::with_children(
+        "buffer_subsystem",
+        f::comb_block(6.0, 6.0, 64.0, 260.0, 110.0, 2.4),
+        vec![
+            ModuleNode::leaf("wgt_buf", f::sram_macro(64.0, (cfg.get("wbuf_kb") * 8.0 / 64.0).ceil(), dim * WEIGHT_BITS)),
+            ModuleNode::leaf("inp_buf", f::sram_macro(64.0, (cfg.get("ibuf_kb") * 8.0 / 64.0).ceil(), dim * WEIGHT_BITS)),
+            ModuleNode::leaf("out_buf", f::sram_macro(64.0, (cfg.get("obuf_kb") * 8.0 / 64.0).ceil(), dim * ACC_BITS / 2.0)),
+            ModuleNode::leaf("uop_cache", f::sram_macro(32.0, 2.0, 32.0)),
+        ],
+    );
+
+    let top = ModuleNode::with_children(
+        "vta_top",
+        f::comb_block(10.0, 8.0, 32.0, 380.0, 160.0, 2.6),
+        vec![
+            gemm,
+            alu,
+            buffers,
+            ModuleNode::leaf("fetch_module", f::controller(20.0, 32.0)),
+            ModuleNode::leaf("load_module", f::controller(28.0, 32.0)),
+            ModuleNode::leaf("store_module", f::controller(24.0, 32.0)),
+            ModuleNode::leaf("offchip_bus", f::axi_iface(cfg.get("offchip_bits"))),
+        ],
+    );
+    ModuleTree { platform: Platform::Vta, top }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(dim: f64, off: f64) -> ArchConfig {
+        ArchConfig::new(Platform::Vta, vec![dim, 128.0, 64.0, 256.0, off])
+    }
+
+    #[test]
+    fn gemm_scales_with_dim_squared() {
+        let a = Platform::Vta.generate(&cfg(8.0, 256.0)).unwrap().aggregates();
+        let b = Platform::Vta.generate(&cfg(32.0, 256.0)).unwrap().aggregates();
+        assert!(b.comb_cells / a.comb_cells > 5.0);
+    }
+
+    #[test]
+    fn offchip_width_affects_cells_not_macros() {
+        let a = Platform::Vta.generate(&cfg(16.0, 64.0)).unwrap().aggregates();
+        let b = Platform::Vta.generate(&cfg(16.0, 512.0)).unwrap().aggregates();
+        assert!(b.comb_cells > a.comb_cells);
+        assert_eq!(a.macro_bits, b.macro_bits);
+    }
+
+    #[test]
+    fn node_budget() {
+        let t = Platform::Vta.generate(&cfg(32.0, 512.0)).unwrap();
+        assert!(t.node_count() <= 24, "{}", t.node_count());
+    }
+}

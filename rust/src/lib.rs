@@ -1,0 +1,73 @@
+//! # fso — ML-based full-stack optimization framework for ML accelerators
+//!
+//! Reproduction of "An Open-Source ML-Based Full-Stack Optimization
+//! Framework for Machine Learning Accelerators" (Esmaeilzadeh, Ghodrati,
+//! Kahng et al., 2023) as a three-layer rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: accelerator generators, logical hierarchy
+//!   graphs, the backend SP&R oracle, system-level performance/energy
+//!   simulators, sampling, tree-ensemble predictors, the two-stage ROI
+//!   model, MOTPE design-space exploration, and the coordinator that
+//!   batches prediction traffic onto AOT-compiled executables.
+//! - **L2 (python/compile/model.py, build time only)**: ANN + GCN
+//!   predictor graphs with Adam, lowered once to HLO text.
+//! - **L1 (python/compile/kernels/, build time only)**: Pallas kernels
+//!   (fused dense, graph conv, masked pooling) behind custom VJPs.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+
+pub mod analysis;
+pub mod backend;
+pub mod coordinator;
+pub mod data;
+pub mod dse;
+pub mod generators;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod sampling;
+pub mod simulators;
+pub mod util;
+pub mod workloads;
+
+/// Shared helpers for unit/integration tests (artifact discovery).
+pub mod test_support {
+    use std::path::PathBuf;
+
+    /// Locate the artifacts directory from a test/bench context: honours
+    /// $FSO_ARTIFACTS, then looks for ./artifacts upward from CWD.
+    /// Returns None when artifacts have not been built (tests that need
+    /// them skip themselves).
+    pub fn artifacts_dir() -> Option<PathBuf> {
+        if let Some(dir) = std::env::var_os("FSO_ARTIFACTS") {
+            let p = PathBuf::from(dir);
+            return p.join("manifest.json").exists().then_some(p);
+        }
+        let mut cur = std::env::current_dir().ok()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Some(cand);
+            }
+            if !cur.pop() {
+                return None;
+            }
+        }
+    }
+}
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::backend::{BackendConfig, BackendResult, Enablement, SpnrFlow};
+    pub use crate::coordinator::predict_server::PredictServer;
+    pub use crate::data::{Dataset, Row, Split};
+    pub use crate::dse::{CostSpec, DseConfig, Motpe, ParetoFront};
+    pub use crate::generators::{ArchConfig, Platform};
+    pub use crate::metrics::{kendall_tau, mape_stats, MapeStats};
+    pub use crate::models::{Predictor, TwoStageModel};
+    pub use crate::runtime::{Batcher, Engine, Manifest};
+    pub use crate::sampling::{Sampler, SamplerKind};
+    pub use crate::simulators::SystemMetrics;
+    pub use crate::util::rng::Rng;
+    pub use crate::util::tensor::Tensor;
+}

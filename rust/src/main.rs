@@ -1,0 +1,210 @@
+//! `fso` — launcher for the full-stack ML-accelerator optimization
+//! framework (paper reproduction). Subcommands:
+//!
+//!   fso datagen   --platform axiline --enablement gf12 [--out data.csv]
+//!   fso train     --platform vta [--metric power] [--trees-only]
+//!   fso dse       --target axiline-svm|vta [--iters N]
+//!   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
+//!   fso serve     --demo      (dynamic-batching predict server demo)
+//!
+//! Global: --seed N, --quick, --out-dir DIR, --artifacts DIR
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use fso::backend::Enablement;
+use fso::coordinator::experiments::{self, ExpOptions};
+use fso::coordinator::{datagen, DatagenConfig, PredictServer, TrainOptions, Trainer};
+use fso::data::Metric;
+use fso::generators::Platform;
+use fso::models::ann::glorot_init;
+use fso::runtime::Engine;
+use fso::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .or_else(fso::test_support::artifacts_dir)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "datagen" => cmd_datagen(args),
+        "train" => cmd_train(args),
+        "dse" => cmd_dse(args),
+        "experiment" => cmd_experiment(args),
+        "serve" => cmd_serve(args),
+        _ => {
+            println!("{}", HELP.trim());
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"
+fso — ML-based full-stack optimization framework for ML accelerators
+
+USAGE:
+  fso datagen --platform <tabla|genesys|vta|axiline> [--enablement gf12|ng45]
+              [--archs N] [--out data.csv] [--seed N]
+  fso train --platform <...> [--metric power|perf|area|energy|runtime]
+            [--trees-only] [--seed N]
+  fso dse --target <axiline-svm|vta> [--quick]
+  fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
+                 [--quick] [--out-dir results] [--seed N]
+  fso serve [--clients N] [--rows N]
+"#;
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let platform = Platform::from_name(args.get_or("platform", "axiline"))?;
+    let enablement = Enablement::from_name(args.get_or("enablement", "gf12"))?;
+    let mut cfg = DatagenConfig::small(platform, enablement);
+    cfg.n_arch = args.usize_or("archs", cfg.n_arch)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    let t0 = std::time::Instant::now();
+    let g = datagen::generate(&cfg)?;
+    println!(
+        "generated {} rows ({} archs x {} backend points) in {:.2}s",
+        g.dataset.len(),
+        g.dataset.archs.len(),
+        cfg.n_backend_train + cfg.n_backend_test,
+        t0.elapsed().as_secs_f64()
+    );
+    let in_roi = g.dataset.rows.iter().filter(|r| r.in_roi).count();
+    println!("ROI rows: {in_roi}/{}", g.dataset.len());
+    if let Some(out) = args.get("out") {
+        g.dataset.write_csv(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let platform = Platform::from_name(args.get_or("platform", "axiline"))?;
+    let enablement = Enablement::from_name(args.get_or("enablement", "gf12"))?;
+    let seed = args.u64_or("seed", 2023)?;
+    let cfg = DatagenConfig { seed, ..DatagenConfig::small(platform, enablement) };
+    println!("generating dataset...");
+    let g = datagen::generate(&cfg)?;
+    let trainer = if args.flag("trees-only") {
+        Trainer::new(None)
+    } else {
+        Trainer::new(Some(Rc::new(Engine::load(&artifacts_dir(args))?)))
+    };
+    let mut opts = TrainOptions { seed, ..Default::default() };
+    if args.flag("trees-only") {
+        opts.menu = fso::coordinator::ModelMenu::trees_only();
+    }
+    let metrics: Vec<Metric> = match args.get("metric") {
+        Some(name) => vec![Metric::ALL
+            .into_iter()
+            .find(|m| m.name() == name)
+            .with_context(|| format!("unknown metric {name}"))?],
+        None => Metric::ALL.to_vec(),
+    };
+    for metric in metrics {
+        let report = trainer.run(&g.dataset, &g.backend_split, metric, &opts)?;
+        println!(
+            "--- {metric} (ROI acc {:.2} / F1 {:.2}, {} eval rows) ---",
+            report.roi.accuracy, report.roi.f1, report.eval_rows
+        );
+        for (model, stats) in &report.models {
+            println!(
+                "{model:9} muAPE {:6.2}%  STD {:6.2}  MAPE {:6.2}%",
+                stats.mu_ape, stats.std_ape, stats.max_ape
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let opts = exp_options(args)?;
+    opts.ensure_out_dir()?;
+    match args.get_or("target", "axiline-svm") {
+        "axiline-svm" => experiments::dse::fig11_axiline_svm(&opts),
+        "vta" => experiments::dse::fig12_vta(&opts),
+        other => bail!("unknown DSE target {other:?}"),
+    }
+}
+
+fn exp_options(args: &Args) -> Result<ExpOptions> {
+    Ok(ExpOptions {
+        seed: args.u64_or("seed", 2023)?,
+        out_dir: PathBuf::from(args.get_or("out-dir", "results")),
+        quick: args.flag("quick"),
+    })
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .context("experiment id required (e.g. `fso experiment tab4`)")?;
+    let opts = exp_options(args)?;
+    let t0 = std::time::Instant::now();
+    experiments::run(id, &opts)?;
+    println!("[{id}] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // Demo: boot the dynamic-batching predict server, fan requests in
+    // from several client threads, report batching efficiency.
+    let dir = artifacts_dir(args);
+    let server = PredictServer::start(dir.clone())?;
+    let engine = Engine::load(&dir)?;
+    let variant = engine.manifest.variant("ann32x4_relu")?.clone();
+    let mut rng = fso::util::rng::Rng::new(7);
+    let theta = glorot_init(&variant, &mut rng);
+    let theta_vec: Vec<f32> = theta.data().to_vec();
+    let feat = engine.manifest.feat;
+
+    let n_clients = args.usize_or("clients", 8)?;
+    let rows_per_client = args.usize_or("rows", 100)?;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let client = server.client();
+            let theta_vec = theta_vec.clone();
+            scope.spawn(move || {
+                let mut rng = fso::util::rng::Rng::new(c as u64);
+                let rows: Vec<Vec<f32>> = (0..rows_per_client)
+                    .map(|_| (0..feat).map(|_| rng.f32()).collect())
+                    .collect();
+                let out = client
+                    .predict("ann32x4_relu", &theta_vec, rows)
+                    .expect("predict");
+                assert_eq!(out.len(), rows_per_client);
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let stats = server.stats()?;
+    println!(
+        "served {} rows across {} requests in {:.3}s ({:.0} rows/s)",
+        stats.rows,
+        stats.requests,
+        dt,
+        stats.rows as f64 / dt
+    );
+    println!(
+        "batches issued: {} (mean occupancy {:.1}/{})",
+        stats.batches,
+        stats.mean_occupancy,
+        engine.manifest.batch
+    );
+    Ok(())
+}

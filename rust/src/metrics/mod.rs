@@ -1,0 +1,174 @@
+//! Evaluation metrics (paper §7.3/§8): muAPE, MAPE (max APE), STD APE,
+//! RMSE, Kendall rank correlation (Fig. 1b), and binary classification
+//! accuracy/F1 for the ROI classifier.
+
+/// Absolute percentage errors, in percent.
+pub fn ape(actual: &[f64], pred: &[f64]) -> Vec<f64> {
+    actual
+        .iter()
+        .zip(pred.iter())
+        .map(|(a, p)| (a - p).abs() / a.abs().max(1e-12) * 100.0)
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MapeStats {
+    /// Mean absolute percentage error (paper Eq. 7), %.
+    pub mu_ape: f64,
+    /// Maximum absolute percentage error, %.
+    pub max_ape: f64,
+    /// Standard deviation of APE, %.
+    pub std_ape: f64,
+}
+
+pub fn mape_stats(actual: &[f64], pred: &[f64]) -> MapeStats {
+    assert_eq!(actual.len(), pred.len());
+    if actual.is_empty() {
+        return MapeStats { mu_ape: f64::NAN, max_ape: f64::NAN, std_ape: f64::NAN };
+    }
+    let apes = ape(actual, pred);
+    let n = apes.len() as f64;
+    let mu = apes.iter().sum::<f64>() / n;
+    let max = apes.iter().fold(0.0f64, |a, &b| a.max(b));
+    let var = apes.iter().map(|a| (a - mu) * (a - mu)).sum::<f64>() / n;
+    MapeStats { mu_ape: mu, max_ape: max, std_ape: var.sqrt() }
+}
+
+pub fn rmse(actual: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(actual.len(), pred.len());
+    let n = actual.len().max(1) as f64;
+    (actual
+        .iter()
+        .zip(pred.iter())
+        .map(|(a, p)| (a - p) * (a - p))
+        .sum::<f64>()
+        / n)
+        .sqrt()
+}
+
+/// Kendall rank correlation coefficient tau-a (paper Fig. 1b): fraction
+/// of concordant minus discordant pairs.
+pub fn kendall_tau(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let sx = (x[i] - x[j]).signum();
+            let sy = (y[i] - y[j]).signum();
+            let s = sx * sy;
+            if s > 0.0 {
+                concordant += 1;
+            } else if s < 0.0 {
+                discordant += 1;
+            }
+        }
+    }
+    let pairs = (n * (n - 1) / 2) as f64;
+    (concordant - discordant) as f64 / pairs
+}
+
+/// Binary classification report for the ROI classifier (§8.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassifyStats {
+    pub accuracy: f64,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+pub fn classify_stats(actual: &[bool], pred: &[bool]) -> ClassifyStats {
+    assert_eq!(actual.len(), pred.len());
+    let (mut tp, mut tn, mut fp, mut fne) = (0.0, 0.0, 0.0, 0.0);
+    for (&a, &p) in actual.iter().zip(pred.iter()) {
+        match (a, p) {
+            (true, true) => tp += 1.0,
+            (false, false) => tn += 1.0,
+            (false, true) => fp += 1.0,
+            (true, false) => fne += 1.0,
+        }
+    }
+    let n = actual.len().max(1) as f64;
+    let accuracy = (tp + tn) / n;
+    let precision = if tp + fp > 0.0 { tp / (tp + fp) } else { 1.0 };
+    let recall = if tp + fne > 0.0 { tp / (tp + fne) } else { 1.0 };
+    let f1 = if precision + recall > 0.0 {
+        2.0 * precision * recall / (precision + recall)
+    } else {
+        0.0
+    };
+    ClassifyStats { accuracy, precision, recall, f1 }
+}
+
+/// R^2 coefficient of determination (used by related-work comparisons).
+pub fn r_squared(actual: &[f64], pred: &[f64]) -> f64 {
+    let n = actual.len() as f64;
+    let mean = actual.iter().sum::<f64>() / n;
+    let ss_tot: f64 = actual.iter().map(|a| (a - mean) * (a - mean)).sum();
+    let ss_res: f64 = actual
+        .iter()
+        .zip(pred.iter())
+        .map(|(a, p)| (a - p) * (a - p))
+        .sum();
+    1.0 - ss_res / ss_tot.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_hand_computed() {
+        let s = mape_stats(&[100.0, 200.0, 50.0], &[110.0, 180.0, 50.0]);
+        assert!((s.mu_ape - (10.0 + 10.0 + 0.0) / 3.0).abs() < 1e-9);
+        assert!((s.max_ape - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_prediction_is_zero_error() {
+        let y = [1.0, 2.0, 3.0];
+        let s = mape_stats(&y, &y);
+        assert_eq!(s.mu_ape, 0.0);
+        assert_eq!(s.max_ape, 0.0);
+        assert_eq!(s.std_ape, 0.0);
+        assert_eq!(rmse(&y, &y), 0.0);
+        assert!((r_squared(&y, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_extremes() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let up = [10.0, 20.0, 30.0, 40.0];
+        let down = [4.0, 3.0, 2.0, 1.0];
+        assert_eq!(kendall_tau(&x, &up), 1.0);
+        assert_eq!(kendall_tau(&x, &down), -1.0);
+    }
+
+    #[test]
+    fn kendall_mixed() {
+        // one discordant pair out of three: tau = (2-1)/3
+        let x = [1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 2.0];
+        assert!((kendall_tau(&x, &y) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn classify_hand_computed() {
+        let actual = [true, true, false, false, true];
+        let pred = [true, false, false, true, true];
+        let s = classify_stats(&actual, &pred);
+        assert!((s.accuracy - 0.6).abs() < 1e-12);
+        assert!((s.precision - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.recall - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_hand_computed() {
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,226 @@
+//! ANN predictor backed by the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Training runs entirely in rust: the `train_epoch` executable folds
+//! `EPOCH_STEPS` Adam steps into one PJRT call (L2's lax.scan), and the
+//! rust side owns shuffling, batching/padding, the decaying-LR +
+//! patience schedule and early stopping (paper §7.3), and best-theta
+//! checkpointing by validation muAPE.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Batcher, Engine, ModelArch, Variant};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    pub max_epochs: usize,
+    pub lr0: f32,
+    /// LR decay factor on validation plateau (paper: 0.7).
+    pub decay: f32,
+    /// Plateau patience in epochs before decaying (paper: 5).
+    pub patience: usize,
+    /// Early stop after this many epochs without improvement (paper: 20).
+    pub early_stop: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            max_epochs: 160,
+            lr0: 6e-3,
+            decay: 0.7,
+            patience: 5,
+            early_stop: 20,
+            seed: 17,
+        }
+    }
+}
+
+/// Glorot-uniform init of the flat parameter vector, mirroring
+/// python model.glorot_init's scheme (weights U(+-sqrt(6/(fi+fo))),
+/// biases zero).
+pub fn glorot_init(variant: &Variant, rng: &mut Rng) -> Tensor {
+    let mut theta = vec![0.0f32; variant.param_total];
+    for e in &variant.param_layout {
+        if e.shape.len() == 2 {
+            let limit = (6.0 / (e.shape[0] + e.shape[1]) as f64).sqrt();
+            let size = e.shape[0] * e.shape[1];
+            for i in 0..size {
+                theta[e.offset + i] = rng.range(-limit, limit) as f32;
+            }
+        }
+    }
+    Tensor::from_vec(&[variant.param_total], theta).unwrap()
+}
+
+pub struct AnnModel {
+    engine: Rc<Engine>,
+    pub variant: String,
+    pub cfg: TrainConfig,
+    theta: Option<Tensor>,
+    y_scale: f64,
+    pub history: Vec<f64>,
+    pub best_val_mu_ape: f64,
+}
+
+impl AnnModel {
+    pub fn new(engine: Rc<Engine>, variant: &str, cfg: TrainConfig) -> Result<AnnModel> {
+        let v = engine.manifest.variant(variant)?;
+        anyhow::ensure!(matches!(v.arch, ModelArch::Ann { .. }), "{variant} is not an ANN");
+        Ok(AnnModel {
+            engine,
+            variant: variant.to_string(),
+            cfg,
+            theta: None,
+            y_scale: 1.0,
+            history: Vec::new(),
+            best_val_mu_ape: f64::INFINITY,
+        })
+    }
+
+    fn dims(&self) -> (usize, usize, usize) {
+        let m = &self.engine.manifest;
+        (m.batch, m.feat, m.epoch_steps)
+    }
+
+    /// Pack `idx` rows into [S, B, F] + [S, B] + [S, B] tensors, padding
+    /// incomplete batches with weight-0 rows.
+    fn pack_epoch_chunk(
+        &self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &[usize],
+    ) -> (Tensor, Tensor, Tensor) {
+        let (b, f, s) = self.dims();
+        let mut xs = vec![0.0f32; s * b * f];
+        let mut ys = vec![0.0f32; s * b];
+        let mut ws = vec![0.0f32; s * b];
+        for (slot, &i) in idx.iter().enumerate() {
+            debug_assert!(slot < s * b);
+            for (j, &v) in x[i].iter().enumerate().take(f) {
+                xs[slot * f + j] = v as f32;
+            }
+            ys[slot] = (y[i] / self.y_scale) as f32;
+            ws[slot] = 1.0;
+        }
+        (
+            Tensor::from_vec(&[s, b, f], xs).unwrap(),
+            Tensor::from_vec(&[s, b], ys).unwrap(),
+            Tensor::from_vec(&[s, b], ws).unwrap(),
+        )
+    }
+
+    /// Train on (x, y); validation drives LR decay + early stopping.
+    pub fn fit(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        x_val: &[Vec<f64>],
+        y_val: &[f64],
+    ) -> Result<()> {
+        anyhow::ensure!(!x.is_empty() && x.len() == y.len(), "bad training set");
+        let (b, _, s) = self.dims();
+        let chunk_rows = s * b;
+        self.y_scale = (y.iter().map(|v| v.abs()).sum::<f64>() / y.len() as f64).max(1e-12);
+
+        let v = self.engine.manifest.variant(&self.variant)?.clone();
+        let epoch_file = v.entrypoint("train_epoch")?.file.clone();
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut theta = glorot_init(&v, &mut rng);
+        let p = v.param_total;
+        let mut m = Tensor::zeros(&[p]);
+        let mut vv = Tensor::zeros(&[p]);
+        let mut t_step = 0f32;
+        let mut lr = self.cfg.lr0;
+
+        let mut best_theta = theta.clone();
+        let mut best_val = f64::INFINITY;
+        let mut since_improve = 0usize;
+        let mut since_decay = 0usize;
+        self.history.clear();
+
+        let mut order: Vec<usize> = (0..x.len()).collect();
+        for _epoch in 0..self.cfg.max_epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(chunk_rows) {
+                let (xs, ys, ws) = self.pack_epoch_chunk(x, y, chunk);
+                let out = self.engine.run(
+                    &epoch_file,
+                    &[
+                        theta,
+                        m,
+                        vv,
+                        Tensor::scalar(t_step + 1.0),
+                        Tensor::scalar(lr),
+                        xs,
+                        ys,
+                        ws,
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                theta = it.next().context("theta out")?;
+                m = it.next().context("m out")?;
+                vv = it.next().context("v out")?;
+                t_step += s as f32;
+            }
+
+            // validation muAPE with the current theta
+            self.theta = Some(theta.clone());
+            let val_pred = self.predict(x_val)?;
+            let val = crate::metrics::mape_stats(y_val, &val_pred).mu_ape;
+            self.history.push(val);
+            if val < best_val - 1e-9 {
+                best_val = val;
+                best_theta = theta.clone();
+                since_improve = 0;
+                since_decay = 0;
+            } else {
+                since_improve += 1;
+                since_decay += 1;
+                if since_decay >= self.cfg.patience {
+                    lr *= self.cfg.decay;
+                    since_decay = 0;
+                }
+                if since_improve >= self.cfg.early_stop {
+                    break;
+                }
+            }
+        }
+        self.theta = Some(best_theta);
+        self.best_val_mu_ape = best_val;
+        Ok(())
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let theta = self.theta.as_ref().context("model not fitted")?;
+        let (b, f, _) = self.dims();
+        let v = self.engine.manifest.variant(&self.variant)?;
+        let file = &v.entrypoint("predict")?.file;
+        let batcher = Batcher::new(b);
+        let rows: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|r| {
+                let mut out = vec![0.0f32; f];
+                for (j, &val) in r.iter().enumerate().take(f) {
+                    out[j] = val as f32;
+                }
+                out
+            })
+            .collect();
+        let mut result = vec![0.0f32; xs.len()];
+        for plan in batcher.plan(xs.len()) {
+            let mut packed = vec![0.0f32; b * f];
+            for (slot, &src) in plan.rows.iter().enumerate() {
+                packed[slot * f..(slot + 1) * f].copy_from_slice(&rows[src]);
+            }
+            let x_t = Tensor::from_vec(&[b, f], packed).unwrap();
+            let out = self.engine.run(file, &[theta.clone(), x_t])?;
+            batcher.unpack(&plan, out[0].data(), &mut result);
+        }
+        Ok(result.into_iter().map(|p| p as f64 * self.y_scale).collect())
+    }
+}

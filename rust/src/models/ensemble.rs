@@ -1,0 +1,130 @@
+//! Stacked ensemble (paper §5.3): base learners (GBDT/RF/ANN survivors
+//! of the hyperparameter search) combined by a linear-regression meta
+//! learner fitted on held-out validation predictions.
+
+use anyhow::Result;
+
+use super::linear::Ridge;
+
+/// A fitted base learner as the ensemble sees it: its validation and
+/// test predictions (the ensemble never refits bases — it only learns
+/// the combination, mirroring H2O's stacked ensemble over trained
+/// models).
+pub struct BasePredictions {
+    pub name: String,
+    pub val: Vec<f64>,
+    pub test: Vec<f64>,
+}
+
+pub struct StackedEnsemble {
+    pub base_names: Vec<String>,
+    meta: Ridge,
+}
+
+impl StackedEnsemble {
+    /// Fit the meta-learner on base predictions over the validation set.
+    pub fn fit(bases: &[BasePredictions], y_val: &[f64]) -> Result<StackedEnsemble> {
+        anyhow::ensure!(!bases.is_empty(), "no base learners");
+        for b in bases {
+            anyhow::ensure!(
+                b.val.len() == y_val.len(),
+                "{}: val size mismatch",
+                b.name
+            );
+        }
+        let x: Vec<Vec<f64>> = (0..y_val.len())
+            .map(|i| bases.iter().map(|b| b.val[i]).collect())
+            .collect();
+        // Base predictions are highly correlated (they approximate the
+        // same target), so a weak ridge yields huge +/- weight pairs that
+        // amplify base disagreement on test data. Regularize relative to
+        // the Gram scale.
+        let scale: f64 = x
+            .iter()
+            .flat_map(|r| r.iter())
+            .map(|v| v * v)
+            .sum::<f64>()
+            / x.len().max(1) as f64;
+        let meta = Ridge::fit(&x, y_val, 0.05 * scale.max(1e-12));
+        Ok(StackedEnsemble {
+            base_names: bases.iter().map(|b| b.name.clone()).collect(),
+            meta,
+        })
+    }
+
+    /// Combine base test predictions.
+    pub fn predict(&self, bases: &[BasePredictions]) -> Vec<f64> {
+        let n = bases[0].test.len();
+        (0..n)
+            .map(|i| {
+                let feats: Vec<f64> = bases.iter().map(|b| b.test[i]).collect();
+                self.meta.predict_one(&feats)
+            })
+            .collect()
+    }
+
+    pub fn weights(&self) -> (&[f64], f64) {
+        (&self.meta.weights, self.meta.intercept)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::rmse;
+    use crate::util::rng::Rng;
+
+    /// Two complementary noisy bases: the ensemble should beat both.
+    #[test]
+    fn ensemble_beats_each_base() {
+        let mut rng = Rng::new(1);
+        let n_val = 200;
+        let n_test = 100;
+        let y_val: Vec<f64> = (0..n_val).map(|_| rng.range(1.0, 10.0)).collect();
+        let y_test: Vec<f64> = (0..n_test).map(|_| rng.range(1.0, 10.0)).collect();
+        // base A: unbiased but noisy; base B: biased but precise
+        let make = |y: &[f64], rng: &mut Rng| {
+            let a: Vec<f64> = y.iter().map(|v| v + rng.normal()).collect();
+            let b: Vec<f64> = y.iter().map(|v| 0.8 * v + 0.1 * rng.normal()).collect();
+            (a, b)
+        };
+        let (av, bv) = make(&y_val, &mut rng);
+        let (at, bt) = make(&y_test, &mut rng);
+        let bases = vec![
+            BasePredictions { name: "noisy".into(), val: av, test: at },
+            BasePredictions { name: "biased".into(), val: bv, test: bt },
+        ];
+        let ens = StackedEnsemble::fit(&bases, &y_val).unwrap();
+        let pred = ens.predict(&bases);
+        let e_ens = rmse(&y_test, &pred);
+        let e_a = rmse(&y_test, &bases[0].test);
+        let e_b = rmse(&y_test, &bases[1].test);
+        assert!(e_ens < e_a, "{e_ens} !< noisy {e_a}");
+        assert!(e_ens < e_b, "{e_ens} !< biased {e_b}");
+    }
+
+    #[test]
+    fn single_perfect_base_gets_weight_one() {
+        let y: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let bases = vec![BasePredictions {
+            name: "oracle".into(),
+            val: y.clone(),
+            test: y.clone(),
+        }];
+        let ens = StackedEnsemble::fit(&bases, &y).unwrap();
+        let (w, b) = ens.weights();
+        // ridge shrinks slightly below 1; intercept compensates
+        assert!((w[0] - 1.0).abs() < 0.02, "{w:?}");
+        assert!(b.abs() < 0.2, "{b}");
+    }
+
+    #[test]
+    fn rejects_mismatched_sizes() {
+        let bases = vec![BasePredictions {
+            name: "bad".into(),
+            val: vec![1.0; 3],
+            test: vec![],
+        }];
+        assert!(StackedEnsemble::fit(&bases, &[1.0, 2.0]).is_err());
+    }
+}

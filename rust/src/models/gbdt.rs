@@ -1,0 +1,223 @@
+//! Gradient-boosted decision trees (paper §5.3): least-squares boosting
+//! for regression, logistic-loss boosting for the ROI classifier.
+
+use crate::util::rng::Rng;
+
+use super::tree::{RegTree, TreeParams};
+
+#[derive(Debug, Clone, Copy)]
+pub struct GbdtParams {
+    pub n_estimators: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Row subsample fraction per tree (stochastic gradient boosting).
+    pub subsample: f64,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            n_estimators: 120,
+            learning_rate: 0.08,
+            max_depth: 4,
+            min_samples_leaf: 2,
+            subsample: 0.9,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Gbdt {
+    pub params: GbdtParams,
+    base: f64,
+    trees: Vec<RegTree>,
+}
+
+impl Gbdt {
+    pub fn fit(x: &[Vec<f64>], y: &[f64], params: GbdtParams, seed: u64) -> Gbdt {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let mut rng = Rng::new(seed ^ 0x6BD7);
+        let n = x.len();
+        let base = y.iter().sum::<f64>() / n as f64;
+        let mut pred = vec![base; n];
+        let mut trees = Vec::with_capacity(params.n_estimators);
+        let tp = TreeParams {
+            max_depth: params.max_depth,
+            min_samples_leaf: params.min_samples_leaf,
+            mtries: None,
+        };
+        let m = ((n as f64) * params.subsample).ceil() as usize;
+        for _ in 0..params.n_estimators {
+            let resid: Vec<f64> = y.iter().zip(pred.iter()).map(|(a, p)| a - p).collect();
+            let idx = if m >= n {
+                (0..n).collect::<Vec<_>>()
+            } else {
+                rng.choose_k(n, m)
+            };
+            let tree = RegTree::fit(x, &resid, &idx, tp, &mut rng);
+            for (i, p) in pred.iter_mut().enumerate() {
+                *p += params.learning_rate * tree.predict(&x[i]);
+            }
+            trees.push(tree);
+        }
+        Gbdt { params, base, trees }
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        self.base
+            + self.params.learning_rate
+                * self.trees.iter().map(|t| t.predict(x)).sum::<f64>()
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+/// Binary classifier via logistic-loss gradient boosting.
+#[derive(Debug, Clone)]
+pub struct GbdtClassifier {
+    params: GbdtParams,
+    base: f64, // log-odds
+    trees: Vec<RegTree>,
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl GbdtClassifier {
+    pub fn fit(x: &[Vec<f64>], y: &[bool], params: GbdtParams, seed: u64) -> GbdtClassifier {
+        assert_eq!(x.len(), y.len());
+        let mut rng = Rng::new(seed ^ 0xC1A5);
+        let n = x.len();
+        let pos = y.iter().filter(|&&b| b).count() as f64;
+        let p0 = (pos / n as f64).clamp(1e-4, 1.0 - 1e-4);
+        let base = (p0 / (1.0 - p0)).ln();
+        let mut raw = vec![base; n];
+        let mut trees = Vec::with_capacity(params.n_estimators);
+        let tp = TreeParams {
+            max_depth: params.max_depth,
+            min_samples_leaf: params.min_samples_leaf,
+            mtries: None,
+        };
+        let m = ((n as f64) * params.subsample).ceil() as usize;
+        for _ in 0..params.n_estimators {
+            // negative gradient of logloss: y - p
+            let grad: Vec<f64> = y
+                .iter()
+                .zip(raw.iter())
+                .map(|(&yi, &r)| (yi as u8 as f64) - sigmoid(r))
+                .collect();
+            let idx = if m >= n {
+                (0..n).collect::<Vec<_>>()
+            } else {
+                rng.choose_k(n, m)
+            };
+            let tree = RegTree::fit(x, &grad, &idx, tp, &mut rng);
+            for (i, r) in raw.iter_mut().enumerate() {
+                *r += params.learning_rate * 4.0 * tree.predict(&x[i]);
+            }
+            trees.push(tree);
+        }
+        GbdtClassifier { params, base, trees }
+    }
+
+    pub fn prob_one(&self, x: &[f64]) -> f64 {
+        let raw = self.base
+            + self.params.learning_rate
+                * 4.0
+                * self.trees.iter().map(|t| t.predict(x)).sum::<f64>();
+        sigmoid(raw)
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> bool {
+        self.prob_one(x) >= 0.5
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<bool> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::rmse;
+
+    fn friedman_like(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let v: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+            let t = 10.0 * (std::f64::consts::PI * v[0] * v[1]).sin()
+                + 20.0 * (v[2] - 0.5) * (v[2] - 0.5)
+                + 10.0 * v[3]
+                + 5.0 * v[4];
+            x.push(v);
+            y.push(t);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn boosting_reduces_training_error_monotonically_ish() {
+        let (x, y) = friedman_like(200, 1);
+        let few = Gbdt::fit(&x, &y, GbdtParams { n_estimators: 5, ..Default::default() }, 0);
+        let many =
+            Gbdt::fit(&x, &y, GbdtParams { n_estimators: 120, ..Default::default() }, 0);
+        let e_few = rmse(&y, &few.predict(&x));
+        let e_many = rmse(&y, &many.predict(&x));
+        assert!(e_many < 0.5 * e_few, "{e_many} !< {e_few}/2");
+    }
+
+    #[test]
+    fn generalizes_on_smooth_function() {
+        let (x, y) = friedman_like(400, 2);
+        let (xt, yt) = friedman_like(100, 3);
+        let m = Gbdt::fit(&x, &y, GbdtParams::default(), 0);
+        let e = rmse(&yt, &m.predict(&xt));
+        let spread = {
+            let mean = yt.iter().sum::<f64>() / yt.len() as f64;
+            (yt.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / yt.len() as f64).sqrt()
+        };
+        assert!(e < 0.45 * spread, "test rmse {e} vs target std {spread}");
+    }
+
+    #[test]
+    fn classifier_learns_separable_boundary() {
+        let mut rng = Rng::new(5);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..300 {
+            let a = rng.f64();
+            let b = rng.f64();
+            x.push(vec![a, b]);
+            y.push(a + b > 1.0);
+        }
+        let m = GbdtClassifier::fit(&x, &y, GbdtParams::default(), 0);
+        let acc = x
+            .iter()
+            .zip(y.iter())
+            .filter(|(xi, yi)| m.predict_one(xi) == **yi)
+            .count() as f64
+            / x.len() as f64;
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn classifier_probabilities_are_calibrated_at_extremes() {
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 100.0]).collect();
+        let y: Vec<bool> = (0..100).map(|i| i >= 50).collect();
+        let m = GbdtClassifier::fit(&x, &y, GbdtParams::default(), 0);
+        assert!(m.prob_one(&[0.05]) < 0.2);
+        assert!(m.prob_one(&[0.95]) > 0.8);
+    }
+}

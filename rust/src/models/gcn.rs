@@ -1,0 +1,256 @@
+//! GCN predictor over logical hierarchy graphs, backed by the AOT GCN
+//! artifacts (paper §6 / Fig. 7): conv stack -> GlobalMeanPool ->
+//! concat(global features) -> FC stack, trained with Adam + muAPE loss.
+//!
+//! Graph tensors are cached per *architecture* (the LHG does not depend
+//! on backend knobs — paper §6), so a batch gathers cached rows rather
+//! than re-normalizing adjacencies.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::generators::Lhg;
+use crate::runtime::{Batcher, Engine, ModelArch};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use super::ann::{glorot_init, TrainConfig};
+
+/// Per-architecture GCN input tensors (flattened, f32).
+pub struct GraphCache {
+    pub n: usize,
+    pub nf: usize,
+    pub feats: Vec<Vec<f32>>, // [arch][N*NF]
+    pub adjs: Vec<Vec<f32>>,  // [arch][N*N]
+    pub masks: Vec<Vec<f32>>, // [arch][N]
+}
+
+impl GraphCache {
+    pub fn build(lhgs: &[Lhg], max_nodes: usize) -> Result<GraphCache> {
+        let nf = crate::generators::NODE_FEAT_DIM;
+        let mut feats = Vec::with_capacity(lhgs.len());
+        let mut adjs = Vec::with_capacity(lhgs.len());
+        let mut masks = Vec::with_capacity(lhgs.len());
+        for g in lhgs {
+            let (f, a, m) = g.to_gcn_inputs(max_nodes)?;
+            feats.push(f);
+            adjs.push(a);
+            masks.push(m);
+        }
+        Ok(GraphCache { n: max_nodes, nf, feats, adjs, masks })
+    }
+}
+
+pub struct GcnModel {
+    engine: Rc<Engine>,
+    pub variant: String,
+    pub cfg: TrainConfig,
+    theta: Option<Tensor>,
+    y_scale: f64,
+    pub history: Vec<f64>,
+    pub best_val_mu_ape: f64,
+}
+
+impl GcnModel {
+    pub fn new(engine: Rc<Engine>, variant: &str, cfg: TrainConfig) -> Result<GcnModel> {
+        let v = engine.manifest.variant(variant)?;
+        anyhow::ensure!(matches!(v.arch, ModelArch::Gcn { .. }), "{variant} is not a GCN");
+        Ok(GcnModel {
+            engine,
+            variant: variant.to_string(),
+            cfg,
+            theta: None,
+            y_scale: 1.0,
+            history: Vec::new(),
+            best_val_mu_ape: f64::INFINITY,
+        })
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize) {
+        let m = &self.engine.manifest;
+        (m.batch, m.feat, m.nodes, m.node_feat)
+    }
+
+    /// Assemble one [B]-batch of graph tensors for dataset rows `chunk`.
+    #[allow(clippy::type_complexity)]
+    fn pack_batch(
+        &self,
+        ds: &Dataset,
+        cache: &GraphCache,
+        chunk: &[usize],
+        y_scaled: Option<&[f64]>,
+    ) -> (Tensor, Tensor, Tensor, Tensor, Tensor, Tensor) {
+        let (b, f, n, nf) = self.dims();
+        let mut nodes = vec![0.0f32; b * n * nf];
+        let mut adj = vec![0.0f32; b * n * n];
+        let mut mask = vec![0.0f32; b * n];
+        let mut gfeat = vec![0.0f32; b * f];
+        let mut ys = vec![0.0f32; b];
+        let mut ws = vec![0.0f32; b];
+        for (slot, &row_idx) in chunk.iter().enumerate() {
+            let row = &ds.rows[row_idx];
+            let a = row.arch_idx;
+            nodes[slot * n * nf..(slot + 1) * n * nf].copy_from_slice(&cache.feats[a]);
+            adj[slot * n * n..(slot + 1) * n * n].copy_from_slice(&cache.adjs[a]);
+            mask[slot * n..(slot + 1) * n].copy_from_slice(&cache.masks[a]);
+            for (j, &v) in row.features.iter().enumerate().take(f) {
+                gfeat[slot * f + j] = v as f32;
+            }
+            if let Some(y) = y_scaled {
+                ys[slot] = y[row_idx] as f32;
+            }
+            ws[slot] = 1.0;
+        }
+        (
+            Tensor::from_vec(&[b, n, nf], nodes).unwrap(),
+            Tensor::from_vec(&[b, n, n], adj).unwrap(),
+            Tensor::from_vec(&[b, n], mask).unwrap(),
+            Tensor::from_vec(&[b, f], gfeat).unwrap(),
+            Tensor::from_vec(&[b], ys).unwrap(),
+            Tensor::from_vec(&[b], ws).unwrap(),
+        )
+    }
+
+    /// Train on dataset rows `train_idx` for `target`; `val_idx` drives
+    /// the LR schedule and early stopping.
+    pub fn fit(
+        &mut self,
+        ds: &Dataset,
+        cache: &GraphCache,
+        train_idx: &[usize],
+        val_idx: &[usize],
+        targets: &[f64],
+    ) -> Result<()> {
+        anyhow::ensure!(!train_idx.is_empty(), "empty training set");
+        let (b, ..) = self.dims();
+        let v = self.engine.manifest.variant(&self.variant)?.clone();
+        let step_file = v.entrypoint("train_step")?.file.clone();
+
+        let mean_abs = train_idx
+            .iter()
+            .map(|&i| targets[i].abs())
+            .sum::<f64>()
+            / train_idx.len() as f64;
+        self.y_scale = mean_abs.max(1e-12);
+        let y_scaled: Vec<f64> = targets.iter().map(|t| t / self.y_scale).collect();
+        let y_val: Vec<f64> = val_idx.iter().map(|&i| targets[i]).collect();
+
+        let mut rng = Rng::new(self.cfg.seed ^ 0x6C9);
+        let mut theta = glorot_init(&v, &mut rng);
+        let p = v.param_total;
+        let mut m = Tensor::zeros(&[p]);
+        let mut vv = Tensor::zeros(&[p]);
+        let mut t_step = 0f32;
+        let mut lr = self.cfg.lr0;
+        let mut best_theta = theta.clone();
+        let mut best_val = f64::INFINITY;
+        let (mut since_improve, mut since_decay) = (0usize, 0usize);
+        self.history.clear();
+
+        let mut order = train_idx.to_vec();
+        for _epoch in 0..self.cfg.max_epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(b) {
+                let (nodes, adj, mask, gfeat, ys, ws) =
+                    self.pack_batch(ds, cache, chunk, Some(&y_scaled));
+                t_step += 1.0;
+                let out = self.engine.run(
+                    &step_file,
+                    &[
+                        theta,
+                        m,
+                        vv,
+                        Tensor::scalar(t_step),
+                        Tensor::scalar(lr),
+                        nodes,
+                        adj,
+                        mask,
+                        gfeat,
+                        ys,
+                        ws,
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                theta = it.next().context("theta")?;
+                m = it.next().context("m")?;
+                vv = it.next().context("v")?;
+            }
+
+            self.theta = Some(theta.clone());
+            let val_pred = self.predict_rows(ds, cache, val_idx)?;
+            let val = crate::metrics::mape_stats(&y_val, &val_pred).mu_ape;
+            self.history.push(val);
+            if val < best_val - 1e-9 {
+                best_val = val;
+                best_theta = theta.clone();
+                since_improve = 0;
+                since_decay = 0;
+            } else {
+                since_improve += 1;
+                since_decay += 1;
+                if since_decay >= self.cfg.patience {
+                    lr *= self.cfg.decay;
+                    since_decay = 0;
+                }
+                if since_improve >= self.cfg.early_stop {
+                    break;
+                }
+            }
+        }
+        self.theta = Some(best_theta);
+        self.best_val_mu_ape = best_val;
+        Ok(())
+    }
+
+    pub fn predict_rows(
+        &self,
+        ds: &Dataset,
+        cache: &GraphCache,
+        idx: &[usize],
+    ) -> Result<Vec<f64>> {
+        let theta = self.theta.as_ref().context("model not fitted")?;
+        let (b, ..) = self.dims();
+        let v = self.engine.manifest.variant(&self.variant)?;
+        let file = &v.entrypoint("predict")?.file;
+        let batcher = Batcher::new(b);
+        let mut result = vec![0.0f32; idx.len()];
+        for plan in batcher.plan(idx.len()) {
+            let chunk: Vec<usize> = plan.rows.iter().map(|&r| idx[r]).collect();
+            let (nodes, adj, mask, gfeat, _, _) = self.pack_batch(ds, cache, &chunk, None);
+            let out =
+                self.engine.run(file, &[theta.clone(), nodes, adj, mask, gfeat])?;
+            batcher.unpack(&plan, out[0].data(), &mut result);
+        }
+        Ok(result.into_iter().map(|p| p as f64 * self.y_scale).collect())
+    }
+
+    /// Graph embeddings (Fig. 8 t-SNE input).
+    pub fn embed_rows(
+        &self,
+        ds: &Dataset,
+        cache: &GraphCache,
+        idx: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        let theta = self.theta.as_ref().context("model not fitted")?;
+        let (b, ..) = self.dims();
+        let v = self.engine.manifest.variant(&self.variant)?;
+        let ModelArch::Gcn { embed_dim, .. } = v.arch else { unreachable!() };
+        let file = &v.entrypoint("embed")?.file;
+        let batcher = Batcher::new(b);
+        let mut result = vec![vec![0.0f64; embed_dim]; idx.len()];
+        for plan in batcher.plan(idx.len()) {
+            let chunk: Vec<usize> = plan.rows.iter().map(|&r| idx[r]).collect();
+            let (nodes, adj, mask, _, _, _) = self.pack_batch(ds, cache, &chunk, None);
+            let out = self.engine.run(file, &[theta.clone(), nodes, adj, mask])?;
+            let emb = &out[0];
+            for (slot, &src) in plan.rows.iter().enumerate() {
+                for d in 0..embed_dim {
+                    result[src][d] = emb.data()[slot * embed_dim + d] as f64;
+                }
+            }
+        }
+        Ok(result)
+    }
+}

@@ -1,0 +1,137 @@
+//! Ridge regression (normal equations + Gaussian elimination with
+//! partial pivoting). Serves as the stacked ensemble's meta-learner
+//! (paper §5.3: "linear regression acting as meta learner").
+
+#[derive(Debug, Clone)]
+pub struct Ridge {
+    /// weights[0..d], intercept last.
+    pub weights: Vec<f64>,
+    pub intercept: f64,
+    pub lambda: f64,
+}
+
+/// Solve A w = b in place (A is n x n row-major), partial pivoting.
+pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        // eliminate
+        for r in (col + 1)..n {
+            let f = a[r][col] / a[col][col];
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut w = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in (col + 1)..n {
+            acc -= a[col][c] * w[c];
+        }
+        w[col] = acc / a[col][col];
+    }
+    Some(w)
+}
+
+impl Ridge {
+    pub fn fit(x: &[Vec<f64>], y: &[f64], lambda: f64) -> Ridge {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let d = x[0].len();
+        // augmented design: [x, 1]
+        let m = d + 1;
+        let mut xtx = vec![vec![0.0; m]; m];
+        let mut xty = vec![0.0; m];
+        for (xi, &yi) in x.iter().zip(y.iter()) {
+            for a in 0..m {
+                let va = if a < d { xi[a] } else { 1.0 };
+                xty[a] += va * yi;
+                for b in a..m {
+                    let vb = if b < d { xi[b] } else { 1.0 };
+                    xtx[a][b] += va * vb;
+                }
+            }
+        }
+        for a in 0..m {
+            for b in 0..a {
+                xtx[a][b] = xtx[b][a];
+            }
+        }
+        // ridge on weights only (not the intercept)
+        for (i, row) in xtx.iter_mut().enumerate().take(d) {
+            row[i] += lambda;
+        }
+        let w = solve(xtx, xty).unwrap_or_else(|| vec![0.0; m]);
+        Ridge { weights: w[..d].to_vec(), intercept: w[d], lambda }
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        self.intercept
+            + self
+                .weights
+                .iter()
+                .zip(x.iter())
+                .map(|(w, v)| w * v)
+                .sum::<f64>()
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_linear_function() {
+        let x: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![i as f64 / 10.0, (i * i) as f64 / 100.0])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|v| 2.0 * v[0] - 3.0 * v[1] + 1.0).collect();
+        let m = Ridge::fit(&x, &y, 1e-9);
+        assert!((m.weights[0] - 2.0).abs() < 1e-6);
+        assert!((m.weights[1] + 3.0).abs() < 1e-6);
+        assert!((m.intercept - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_shrinks_weights() {
+        let x: Vec<Vec<f64>> = (0..30).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = x.iter().map(|v| 5.0 * v[0]).collect();
+        let loose = Ridge::fit(&x, &y, 1e-9);
+        let tight = Ridge::fit(&x, &y, 1e6);
+        assert!(tight.weights[0].abs() < loose.weights[0].abs());
+    }
+
+    #[test]
+    fn solver_on_known_system() {
+        // 2x + y = 5; x - y = 1  -> x = 2, y = 1
+        let a = vec![vec![2.0, 1.0], vec![1.0, -1.0]];
+        let b = vec![5.0, 1.0];
+        let w = solve(a, b).unwrap();
+        assert!((w[0] - 2.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_rejects_singular() {
+        let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        assert!(solve(a, vec![1.0, 2.0]).is_none());
+    }
+}

@@ -1,0 +1,68 @@
+//! Learned predictors (paper §5.3): GBDT, Random Forest, ANN, Stacked
+//! Ensemble, GCN — plus the two-stage ROI model (§5.4) and the random
+//! discrete hyperparameter search (§7.3). ANN/GCN execute on the AOT
+//! JAX/Pallas artifacts through the PJRT runtime; the tree family is
+//! implemented natively.
+
+pub mod ann;
+pub mod ensemble;
+pub mod gbdt;
+pub mod gcn;
+pub mod linear;
+pub mod rf;
+pub mod tree;
+pub mod tuning;
+pub mod two_stage;
+
+pub use ann::{AnnModel, TrainConfig};
+pub use ensemble::{BasePredictions, StackedEnsemble};
+pub use gbdt::{Gbdt, GbdtClassifier, GbdtParams};
+pub use gcn::{GcnModel, GraphCache};
+pub use linear::Ridge;
+pub use rf::{RandomForest, RfParams};
+pub use tree::{RegTree, TreeParams};
+pub use tuning::{get_node_config, tune_gbdt, tune_rf, SearchBudget};
+pub use two_stage::{RoiClassifier, TwoStageModel};
+
+/// Uniform interface over feature-based regressors (the GCN, which needs
+/// graph inputs, has its own `predict_rows` API on `GcnModel`).
+pub trait Predictor {
+    fn model_name(&self) -> &'static str;
+    fn predict_xs(&self, xs: &[Vec<f64>]) -> anyhow::Result<Vec<f64>>;
+}
+
+impl Predictor for Gbdt {
+    fn model_name(&self) -> &'static str {
+        "GBDT"
+    }
+    fn predict_xs(&self, xs: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        Ok(self.predict(xs))
+    }
+}
+
+impl Predictor for RandomForest {
+    fn model_name(&self) -> &'static str {
+        "RF"
+    }
+    fn predict_xs(&self, xs: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        Ok(self.predict(xs))
+    }
+}
+
+impl Predictor for AnnModel {
+    fn model_name(&self) -> &'static str {
+        "ANN"
+    }
+    fn predict_xs(&self, xs: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        self.predict(xs)
+    }
+}
+
+impl Predictor for Ridge {
+    fn model_name(&self) -> &'static str {
+        "Ridge"
+    }
+    fn predict_xs(&self, xs: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        Ok(self.predict(xs))
+    }
+}

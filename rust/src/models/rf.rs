@@ -1,0 +1,121 @@
+//! Random forest regressor (paper §5.3): bootstrap-bagged CART trees
+//! with per-split feature subsampling (`mtries`), predictions averaged.
+
+use crate::util::rng::Rng;
+
+use super::tree::{RegTree, TreeParams};
+
+#[derive(Debug, Clone, Copy)]
+pub struct RfParams {
+    pub n_estimators: usize,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Features per split (None = sqrt(n_features)).
+    pub mtries: Option<usize>,
+}
+
+impl Default for RfParams {
+    fn default() -> Self {
+        RfParams { n_estimators: 150, max_depth: 16, min_samples_leaf: 1, mtries: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    trees: Vec<RegTree>,
+}
+
+impl RandomForest {
+    pub fn fit(x: &[Vec<f64>], y: &[f64], params: RfParams, seed: u64) -> RandomForest {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let n = x.len();
+        let n_feat = x[0].len();
+        let mtries = params
+            .mtries
+            .unwrap_or_else(|| (n_feat as f64).sqrt().round() as usize)
+            .clamp(1, n_feat);
+        let tp = TreeParams {
+            max_depth: params.max_depth,
+            min_samples_leaf: params.min_samples_leaf,
+            mtries: Some(mtries),
+        };
+        let mut rng = Rng::new(seed ^ 0x2F05E57);
+        let trees = (0..params.n_estimators)
+            .map(|_| {
+                // bootstrap sample (with replacement)
+                let idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+                RegTree::fit(x, y, &idx, tp, &mut rng)
+            })
+            .collect();
+        RandomForest { trees }
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        self.trees.iter().map(|t| t.predict(x)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::rmse;
+    use crate::util::rng::Rng;
+
+    fn noisy_plane(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let v: Vec<f64> = (0..4).map(|_| rng.f64()).collect();
+            y.push(3.0 * v[0] - 2.0 * v[1] + 0.05 * rng.normal());
+            x.push(v);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn forest_beats_single_deep_tree_on_noise() {
+        let (x, y) = noisy_plane(300, 1);
+        let (xt, yt) = noisy_plane(100, 2);
+        let forest = RandomForest::fit(&x, &y, RfParams::default(), 0);
+        let mut rng = Rng::new(0);
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let single = RegTree::fit(
+            &x,
+            &y,
+            &idx,
+            TreeParams { max_depth: 16, min_samples_leaf: 1, mtries: None },
+            &mut rng,
+        );
+        let e_forest = rmse(&yt, &forest.predict(&xt));
+        let single_pred: Vec<f64> = xt.iter().map(|v| single.predict(v)).collect();
+        let e_single = rmse(&yt, &single_pred);
+        assert!(e_forest < e_single, "{e_forest} !< {e_single}");
+    }
+
+    #[test]
+    fn averaging_smooths_predictions() {
+        let (x, y) = noisy_plane(200, 3);
+        let m = RandomForest::fit(&x, &y, RfParams::default(), 0);
+        // prediction at a midpoint should be near the plane value
+        let p = m.predict_one(&[0.5, 0.5, 0.5, 0.5]);
+        assert!((p - 0.5).abs() < 0.4, "p={p}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (x, y) = noisy_plane(100, 4);
+        let a = RandomForest::fit(&x, &y, RfParams::default(), 9).predict_one(&x[0]);
+        let b = RandomForest::fit(&x, &y, RfParams::default(), 9).predict_one(&x[0]);
+        assert_eq!(a, b);
+    }
+}

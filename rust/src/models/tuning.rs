@@ -1,0 +1,220 @@
+//! Hyperparameter tuning (paper §7.3, Table 2): random discrete search
+//! with the two-stage max_depth narrowing protocol for GBDT/RF, model
+//! selection by validation RMSE, and the rust mirror of Algorithm 2
+//! (hidden-layer configuration) used to pick ANN variants.
+
+use crate::metrics::rmse;
+use crate::util::rng::Rng;
+
+use super::gbdt::{Gbdt, GbdtParams};
+use super::rf::{RandomForest, RfParams};
+
+/// Algorithm 2 (paper): must agree exactly with python
+/// `model.get_node_config` — test below pins the published examples.
+pub fn get_node_config(node_count: usize, h_layer_count: usize) -> Vec<usize> {
+    let (min_p, max_p) = (2usize, 7usize);
+    let p = (usize::BITS - (node_count.max(1) - 1).leading_zeros()) as usize; // ceil(log2)
+    let mut exp_max_p = ((h_layer_count + min_p + p) / 2).min(max_p);
+    if exp_max_p <= p {
+        exp_max_p = p + 1;
+    }
+    let incr_p = exp_max_p - p;
+    let decr_p = (exp_max_p - min_p + 1).min(h_layer_count.saturating_sub(incr_p));
+    let same_p = h_layer_count.saturating_sub(incr_p + decr_p);
+    let mut layer = Vec::with_capacity(h_layer_count);
+    let mut q = p;
+    for _ in 0..incr_p {
+        layer.push(1usize << q);
+        q += 1;
+    }
+    for _ in 0..same_p {
+        layer.push(1usize << q);
+    }
+    for _ in 0..decr_p {
+        layer.push(1usize << q);
+        q = q.saturating_sub(1);
+    }
+    layer
+}
+
+/// Search-budget knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchBudget {
+    /// Random draws in stage 1 (broad) and stage 2 (narrowed).
+    pub stage1: usize,
+    pub stage2: usize,
+    pub seed: u64,
+}
+
+impl Default for SearchBudget {
+    fn default() -> Self {
+        SearchBudget { stage1: 10, stage2: 6, seed: 23 }
+    }
+}
+
+pub struct TunedGbdt {
+    pub params: GbdtParams,
+    pub model: Gbdt,
+    pub val_rmse: f64,
+}
+
+/// Two-stage random discrete search for GBDT (paper §7.3): stage 1 fixes
+/// a large n_estimators and samples the rest; stage 2 narrows max_depth
+/// to best +- 3 and re-samples.
+pub fn tune_gbdt(
+    x: &[Vec<f64>],
+    y: &[f64],
+    x_val: &[Vec<f64>],
+    y_val: &[f64],
+    budget: SearchBudget,
+) -> TunedGbdt {
+    let mut rng = Rng::new(budget.seed ^ 0x6BD7_5EA6);
+    let mut eval = |params: GbdtParams, seed: u64| -> (f64, Gbdt) {
+        let m = Gbdt::fit(x, y, params, seed);
+        let e = rmse(y_val, &m.predict(x_val));
+        (e, m)
+    };
+
+    // stage 1: n_estimators fixed high (paper: 300 for XGB)
+    let mut best: Option<(f64, GbdtParams, Gbdt)> = None;
+    for i in 0..budget.stage1 {
+        let params = GbdtParams {
+            n_estimators: 300,
+            learning_rate: [0.03, 0.05, 0.08, 0.12][rng.below(4)],
+            max_depth: rng.int_range(2, 20) as usize,
+            min_samples_leaf: [1, 2, 4][rng.below(3)],
+            subsample: [0.7, 0.85, 1.0][rng.below(3)],
+        };
+        let (e, m) = eval(params, i as u64);
+        if best.as_ref().map(|(b, _, _)| e < *b).unwrap_or(true) {
+            best = Some((e, params, m));
+        }
+    }
+    let (_, stage1_params, _) = best.as_ref().unwrap();
+    let center = stage1_params.max_depth as i64;
+
+    // stage 2: narrow max_depth to best +- 3, tune n_estimators too
+    for i in 0..budget.stage2 {
+        let params = GbdtParams {
+            n_estimators: [60, 120, 200, 300][rng.below(4)],
+            learning_rate: [0.03, 0.05, 0.08, 0.12][rng.below(4)],
+            max_depth: rng.int_range((center - 3).max(2), center + 3) as usize,
+            min_samples_leaf: [1, 2, 4][rng.below(3)],
+            subsample: [0.7, 0.85, 1.0][rng.below(3)],
+        };
+        let (e, m) = eval(params, 100 + i as u64);
+        if best.as_ref().map(|(b, _, _)| e < *b).unwrap_or(true) {
+            best = Some((e, params, m));
+        }
+    }
+    let (val_rmse, params, model) = best.unwrap();
+    TunedGbdt { params, model, val_rmse }
+}
+
+pub struct TunedRf {
+    pub params: RfParams,
+    pub model: RandomForest,
+    pub val_rmse: f64,
+}
+
+pub fn tune_rf(
+    x: &[Vec<f64>],
+    y: &[f64],
+    x_val: &[Vec<f64>],
+    y_val: &[f64],
+    budget: SearchBudget,
+) -> TunedRf {
+    let n_feat = x[0].len();
+    let mut rng = Rng::new(budget.seed ^ 0x2F);
+    let mut best: Option<(f64, RfParams, RandomForest)> = None;
+    let mut try_params = |params: RfParams, seed: u64, best: &mut Option<(f64, RfParams, RandomForest)>| {
+        let m = RandomForest::fit(x, y, params, seed);
+        let e = rmse(y_val, &m.predict(x_val));
+        if best.as_ref().map(|(b, _, _)| e < *b).unwrap_or(true) {
+            *best = Some((e, params, m));
+        }
+    };
+    // stage 1: trees fixed high (paper: 500), sample mtries/depth
+    for i in 0..budget.stage1 {
+        let params = RfParams {
+            n_estimators: 300,
+            max_depth: rng.int_range(5, 40) as usize,
+            min_samples_leaf: [1, 2][rng.below(2)],
+            mtries: Some(rng.int_range(1, n_feat as i64) as usize),
+        };
+        try_params(params, i as u64, &mut best);
+    }
+    let (_, s1, _) = best.as_ref().unwrap();
+    let (center, mtries) = (s1.max_depth as i64, s1.mtries);
+    // stage 2: depth narrowed, mtries retained (paper protocol)
+    for i in 0..budget.stage2 {
+        let params = RfParams {
+            n_estimators: [100, 200, 300][rng.below(3)],
+            max_depth: rng.int_range((center - 3).max(3), center + 3) as usize,
+            min_samples_leaf: [1, 2][rng.below(2)],
+            mtries,
+        };
+        try_params(params, 100 + i as u64, &mut best);
+    }
+    let (val_rmse, params, model) = best.unwrap();
+    TunedRf { params, model, val_rmse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm2_matches_python_reference() {
+        // pinned against python model.get_node_config (test_model.py)
+        assert_eq!(get_node_config(32, 4), vec![32, 64, 32, 16]);
+        assert_eq!(get_node_config(16, 3), vec![16, 32, 16]);
+        assert_eq!(get_node_config(64, 5), vec![64, 128, 64, 32, 16]);
+    }
+
+    #[test]
+    fn algorithm2_length_always_matches() {
+        for nodes in [8, 16, 32, 64] {
+            for layers in 3..=9 {
+                assert_eq!(get_node_config(nodes, layers).len(), layers);
+            }
+        }
+    }
+
+    fn toy() -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(3);
+        let gen = |n: usize, rng: &mut Rng| {
+            let x: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..4).map(|_| rng.f64()).collect()).collect();
+            let y: Vec<f64> =
+                x.iter().map(|v| 5.0 * v[0] * v[1] + v[2]).collect();
+            (x, y)
+        };
+        let (x, y) = gen(150, &mut rng);
+        let (xv, yv) = gen(60, &mut rng);
+        (x, y, xv, yv)
+    }
+
+    #[test]
+    fn tuned_gbdt_beats_default_or_close() {
+        let (x, y, xv, yv) = toy();
+        let budget = SearchBudget { stage1: 4, stage2: 3, seed: 1 };
+        let tuned = tune_gbdt(&x, &y, &xv, &yv, budget);
+        let default = Gbdt::fit(&x, &y, GbdtParams::default(), 0);
+        let e_def = rmse(&yv, &default.predict(&xv));
+        assert!(tuned.val_rmse <= e_def * 1.02, "{} vs {}", tuned.val_rmse, e_def);
+    }
+
+    #[test]
+    fn tuned_rf_is_sane() {
+        let (x, y, xv, yv) = toy();
+        let budget = SearchBudget { stage1: 3, stage2: 2, seed: 1 };
+        let tuned = tune_rf(&x, &y, &xv, &yv, budget);
+        let spread = {
+            let mean = yv.iter().sum::<f64>() / yv.len() as f64;
+            (yv.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / yv.len() as f64)
+                .sqrt()
+        };
+        assert!(tuned.val_rmse < spread, "{} vs {}", tuned.val_rmse, spread);
+    }
+}

@@ -1,0 +1,117 @@
+//! The two-stage model (paper §5.4): stage 1 classifies whether a
+//! configuration lands in the region of interest (Eq. 4); stage 2
+//! regressors — trained only on ROI points — predict PPA/system metrics
+//! for points the classifier accepts. Out-of-ROI points are discarded,
+//! which is what keeps the noisy flow extremes from poisoning the
+//! regressors.
+
+use anyhow::Result;
+
+use crate::metrics::{classify_stats, ClassifyStats};
+
+use super::gbdt::{GbdtClassifier, GbdtParams};
+
+pub struct RoiClassifier {
+    model: GbdtClassifier,
+}
+
+impl RoiClassifier {
+    pub fn fit(x: &[Vec<f64>], in_roi: &[bool], seed: u64) -> RoiClassifier {
+        let params = GbdtParams {
+            n_estimators: 150,
+            learning_rate: 0.1,
+            max_depth: 4,
+            min_samples_leaf: 2,
+            subsample: 0.9,
+        };
+        RoiClassifier { model: GbdtClassifier::fit(x, in_roi, params, seed) }
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<bool> {
+        self.model.predict(xs)
+    }
+
+    pub fn prob(&self, x: &[f64]) -> f64 {
+        self.model.prob_one(x)
+    }
+
+    pub fn evaluate(&self, xs: &[Vec<f64>], actual: &[bool]) -> ClassifyStats {
+        classify_stats(actual, &self.predict(xs))
+    }
+}
+
+/// Stage-1 + stage-2 bundle for one metric; generic over the regressor
+/// (the experiments instantiate it with each of the five model kinds).
+pub struct TwoStageModel<R> {
+    pub classifier: RoiClassifier,
+    pub regressor: R,
+}
+
+pub struct TwoStagePrediction {
+    /// Predicted value for rows the classifier accepted; None = discarded.
+    pub values: Vec<Option<f64>>,
+    pub accepted: usize,
+}
+
+impl<R> TwoStageModel<R> {
+    /// Predict with the ROI gate: classifier-rejected rows get None.
+    pub fn predict_gated(
+        &self,
+        xs: &[Vec<f64>],
+        predict: impl Fn(&R, &[Vec<f64>]) -> Result<Vec<f64>>,
+    ) -> Result<TwoStagePrediction> {
+        let gate = self.classifier.predict(xs);
+        let kept: Vec<usize> =
+            gate.iter().enumerate().filter(|(_, &g)| g).map(|(i, _)| i).collect();
+        let kept_x: Vec<Vec<f64>> = kept.iter().map(|&i| xs[i].clone()).collect();
+        let preds = if kept_x.is_empty() {
+            Vec::new()
+        } else {
+            predict(&self.regressor, &kept_x)?
+        };
+        let mut values = vec![None; xs.len()];
+        for (j, &i) in kept.iter().enumerate() {
+            values[i] = Some(preds[j]);
+        }
+        Ok(TwoStagePrediction { accepted: kept.len(), values })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// ROI = band 0.3 <= x0 <= 0.7 (like f_target within the ROI band).
+    fn band_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<bool>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let y = x.iter().map(|v| (0.3..=0.7).contains(&v[0])).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn classifier_learns_roi_band() {
+        let (x, y) = band_data(400, 1);
+        let (xt, yt) = band_data(200, 2);
+        let c = RoiClassifier::fit(&x, &y, 0);
+        let stats = c.evaluate(&xt, &yt);
+        assert!(stats.accuracy > 0.93, "{stats:?}");
+        assert!(stats.f1 > 0.9, "{stats:?}");
+    }
+
+    #[test]
+    fn gated_prediction_discards_rejects() {
+        let (x, y) = band_data(300, 3);
+        let c = RoiClassifier::fit(&x, &y, 0);
+        let model = TwoStageModel { classifier: c, regressor: () };
+        let (xt, _) = band_data(50, 4);
+        let out = model
+            .predict_gated(&xt, |_, rows| Ok(vec![1.0; rows.len()]))
+            .unwrap();
+        assert_eq!(out.values.len(), 50);
+        let some = out.values.iter().filter(|v| v.is_some()).count();
+        assert_eq!(some, out.accepted);
+        assert!(some > 5 && some < 45, "gate should be selective: {some}");
+    }
+}

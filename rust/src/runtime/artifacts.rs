@@ -1,0 +1,230 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (build time) and the rust hot path. Parses `artifacts/manifest.json`
+//! and exposes typed shape/layout information for every compiled
+//! entrypoint.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Manifest version this crate understands (bump with aot.py).
+pub const MANIFEST_VERSION: usize = 3;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub feat: usize,
+    pub nodes: usize,
+    pub node_feat: usize,
+    pub epoch_steps: usize,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+#[derive(Debug, Clone)]
+pub enum ModelArch {
+    Ann { hidden: Vec<usize>, act: String },
+    Gcn { conv_kind: String, conv_dims: Vec<usize>, fc_hidden: Vec<usize>, embed_dim: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Entrypoint {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub arch: ModelArch,
+    pub param_total: usize,
+    pub param_layout: Vec<ParamEntry>,
+    pub entrypoints: BTreeMap<String, Entrypoint>,
+}
+
+fn shapes(j: &Json) -> Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .context("expected shape list")?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .context("expected shape")?
+                .iter()
+                .map(|d| d.as_usize().context("expected dim"))
+                .collect()
+        })
+        .collect()
+}
+
+fn usizes(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("expected int list")?
+        .iter()
+        .map(|d| d.as_usize().context("expected int"))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.get("version").as_usize().context("manifest version")?;
+        if version != MANIFEST_VERSION {
+            bail!("manifest version {version} != expected {MANIFEST_VERSION}; re-run `make artifacts`");
+        }
+
+        let mut variants = BTreeMap::new();
+        let vobj = j.get("variants").as_obj().context("variants")?;
+        for (name, v) in vobj {
+            let kind = v.get("kind").as_str().context("variant kind")?;
+            let arch = match kind {
+                "ann" => ModelArch::Ann {
+                    hidden: usizes(v.get("hidden"))?,
+                    act: v.get("act").as_str().unwrap_or("relu").to_string(),
+                },
+                "gcn" => ModelArch::Gcn {
+                    conv_kind: v.get("conv_kind").as_str().unwrap_or("gcn").to_string(),
+                    conv_dims: usizes(v.get("conv_dims"))?,
+                    fc_hidden: usizes(v.get("fc_hidden"))?,
+                    embed_dim: v.get("embed_dim").as_usize().context("embed_dim")?,
+                },
+                other => bail!("unknown variant kind {other}"),
+            };
+            let params = v.get("params");
+            let param_total = params.get("total").as_usize().context("params.total")?;
+            let mut param_layout = Vec::new();
+            for e in params.get("entries").as_arr().context("params.entries")? {
+                param_layout.push(ParamEntry {
+                    name: e.get("name").as_str().context("entry name")?.to_string(),
+                    offset: e.get("offset").as_usize().context("entry offset")?,
+                    shape: usizes(e.get("shape"))?,
+                });
+            }
+            let mut entrypoints = BTreeMap::new();
+            for (ep_name, ep) in v.get("entrypoints").as_obj().context("entrypoints")? {
+                entrypoints.insert(
+                    ep_name.clone(),
+                    Entrypoint {
+                        file: ep.get("file").as_str().context("ep file")?.to_string(),
+                        inputs: shapes(ep.get("inputs"))?,
+                        outputs: shapes(ep.get("outputs"))?,
+                    },
+                );
+            }
+            variants.insert(
+                name.clone(),
+                Variant { name: name.clone(), arch, param_total, param_layout, entrypoints },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch: j.get("batch").as_usize().context("batch")?,
+            feat: j.get("feat").as_usize().context("feat")?,
+            nodes: j.get("nodes").as_usize().context("nodes")?,
+            node_feat: j.get("node_feat").as_usize().context("node_feat")?,
+            epoch_steps: j.get("epoch_steps").as_usize().unwrap_or(8),
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant {name} not in manifest ({:?})", self.variant_names()))
+    }
+
+    pub fn variant_names(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn ann_variants(&self) -> Vec<&Variant> {
+        self.variants
+            .values()
+            .filter(|v| matches!(v.arch, ModelArch::Ann { .. }))
+            .collect()
+    }
+
+    pub fn gcn_variants(&self) -> Vec<&Variant> {
+        self.variants
+            .values()
+            .filter(|v| matches!(v.arch, ModelArch::Gcn { .. }))
+            .collect()
+    }
+
+    /// Default artifacts directory: $FSO_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FSO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+impl Variant {
+    pub fn entrypoint(&self, name: &str) -> Result<&Entrypoint> {
+        self.entrypoints
+            .get(name)
+            .with_context(|| format!("variant {} has no entrypoint {name}", self.name))
+    }
+
+    pub fn is_gcn(&self) -> bool {
+        matches!(self.arch, ModelArch::Gcn { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = crate::test_support::artifacts_dir()?;
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_has_expected_constants() {
+        let Some(m) = repo_artifacts() else { return };
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.feat, 16);
+        assert_eq!(m.nodes, 128);
+        assert_eq!(m.node_feat, 9);
+        assert!(!m.ann_variants().is_empty());
+        assert!(!m.gcn_variants().is_empty());
+    }
+
+    #[test]
+    fn param_layout_is_contiguous() {
+        let Some(m) = repo_artifacts() else { return };
+        for v in m.variants.values() {
+            let mut expect = 0usize;
+            for e in &v.param_layout {
+                assert_eq!(e.offset, expect, "{}/{}", v.name, e.name);
+                expect += e.shape.iter().product::<usize>();
+            }
+            assert_eq!(expect, v.param_total, "{}", v.name);
+        }
+    }
+
+    #[test]
+    fn every_entrypoint_file_exists() {
+        let Some(m) = repo_artifacts() else { return };
+        for v in m.variants.values() {
+            for ep in v.entrypoints.values() {
+                assert!(m.dir.join(&ep.file).exists(), "{}", ep.file);
+            }
+        }
+    }
+}

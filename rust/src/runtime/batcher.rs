@@ -1,0 +1,140 @@
+//! Dynamic batching: the AOT artifacts are compiled for a fixed batch size
+//! B, but callers (model evaluation, MOTPE DSE, the predict server) arrive
+//! with arbitrary numbers of rows. The `Batcher` plans how a stream of
+//! requests is packed into full B-row calls — padding the tail batch and
+//! guaranteeing that every request is answered exactly once, in order.
+//!
+//! This is the vLLM-router-shaped piece of L3: requests are coalesced to
+//! amortize the PJRT call overhead, and padding rows are masked out with
+//! zero loss-weights / ignored outputs.
+
+/// A planned batch: `rows` source indices, padded to `batch_size` rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Source row indices occupying the first `rows.len()` slots.
+    pub rows: Vec<usize>,
+    /// Fixed AOT batch size (slots `rows.len()..batch_size` are padding).
+    pub batch_size: usize,
+}
+
+impl BatchPlan {
+    pub fn valid_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn padding(&self) -> usize {
+        self.batch_size - self.rows.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    batch_size: usize,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize) -> Self {
+        assert!(batch_size > 0);
+        Batcher { batch_size }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Split `n` requests into ceil(n / B) plans covering 0..n in order.
+    pub fn plan(&self, n: usize) -> Vec<BatchPlan> {
+        let mut plans = Vec::with_capacity(n.div_ceil(self.batch_size));
+        let mut start = 0;
+        while start < n {
+            let end = (start + self.batch_size).min(n);
+            plans.push(BatchPlan {
+                rows: (start..end).collect(),
+                batch_size: self.batch_size,
+            });
+            start = end;
+        }
+        plans
+    }
+
+    /// Pack a feature matrix (`rows` of length `width` each) according to
+    /// a plan: returns a dense [B, width] buffer, padding rows zeroed.
+    pub fn pack(&self, plan: &BatchPlan, rows: &[Vec<f32>], width: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.batch_size * width];
+        for (slot, &src) in plan.rows.iter().enumerate() {
+            debug_assert_eq!(rows[src].len(), width);
+            out[slot * width..(slot + 1) * width].copy_from_slice(&rows[src]);
+        }
+        out
+    }
+
+    /// Per-row validity weights for a plan ([B], 1.0 = real, 0.0 = pad).
+    pub fn weights(&self, plan: &BatchPlan) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.batch_size];
+        for slot in 0..plan.rows.len() {
+            w[slot] = 1.0;
+        }
+        w
+    }
+
+    /// Scatter a batched output [B] back into a caller-sized buffer.
+    pub fn unpack(&self, plan: &BatchPlan, batch_out: &[f32], out: &mut [f32]) {
+        debug_assert!(batch_out.len() >= plan.rows.len());
+        for (slot, &src) in plan.rows.iter().enumerate() {
+            out[src] = batch_out[slot];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_covers_all_rows_once_in_order() {
+        let b = Batcher::new(8);
+        for n in [0usize, 1, 7, 8, 9, 16, 100] {
+            let plans = b.plan(n);
+            let mut seen = Vec::new();
+            for p in &plans {
+                assert!(p.rows.len() <= 8);
+                assert_eq!(p.batch_size, 8);
+                seen.extend_from_slice(&p.rows);
+            }
+            assert_eq!(seen, (0..n).collect::<Vec<_>>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn only_tail_batch_is_partial() {
+        let b = Batcher::new(4);
+        let plans = b.plan(10);
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0].valid_rows(), 4);
+        assert_eq!(plans[1].valid_rows(), 4);
+        assert_eq!(plans[2].valid_rows(), 2);
+        assert_eq!(plans[2].padding(), 2);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let b = Batcher::new(4);
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32, i as f32 + 0.5]).collect();
+        let plans = b.plan(rows.len());
+        let mut out = vec![0.0f32; rows.len()];
+        for p in &plans {
+            let packed = b.pack(p, &rows, 2);
+            // emulate identity model on column 0
+            let batch_out: Vec<f32> = (0..4).map(|s| packed[s * 2]).collect();
+            b.unpack(p, &batch_out, &mut out);
+        }
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn weights_mark_padding() {
+        let b = Batcher::new(4);
+        let plans = b.plan(5);
+        assert_eq!(b.weights(&plans[1]), vec![1.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, caches the executables, and runs them with
+//! host-side `Tensor` inputs.
+//!
+//! The engine is deliberately **not** Send (PjRtClient is Rc-based); the
+//! coordinator gives it a dedicated service thread and talks to it over
+//! channels (see coordinator::predict_server).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::Manifest;
+use crate::util::tensor::Tensor;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RefCell<EngineStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_ms: f64,
+    pub executions: usize,
+    pub execute_ms: f64,
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact file.
+    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact: tensors in, tensors out. All our AOT
+    /// entrypoints are lowered with `return_tuple=True`, so the single
+    /// result literal is a tuple that we decompose.
+    pub fn run(&self, file: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.executable(file)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let out_lit = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        let parts = out_lit.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute with shape validation against the manifest entrypoint —
+    /// used by tests and the predict server's debug mode.
+    pub fn run_checked(
+        &self,
+        variant: &str,
+        entrypoint: &str,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let var = self.manifest.variant(variant)?;
+        let ep = var.entrypoint(entrypoint)?;
+        if inputs.len() != ep.inputs.len() {
+            bail!(
+                "{variant}/{entrypoint}: expected {} inputs, got {}",
+                ep.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(ep.inputs.iter()).enumerate() {
+            if t.shape() != want.as_slice() {
+                bail!(
+                    "{variant}/{entrypoint} input {i}: shape {:?} != manifest {:?}",
+                    t.shape(),
+                    want
+                );
+            }
+        }
+        let outs = self.run(&ep.file, inputs)?;
+        if outs.len() != ep.outputs.len() {
+            bail!(
+                "{variant}/{entrypoint}: got {} outputs, manifest says {}",
+                outs.len(),
+                ep.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+}
+
+/// Load a fixture tensor written by aot.py (`.npy`, f32).
+pub fn load_fixture(dir: &Path, name: &str) -> Result<Tensor> {
+    use xla::FromRawBytes;
+    let path = dir.join("fixtures").join(format!("{name}.npy"));
+    let lit = xla::Literal::read_npy(&path, &())
+        .map_err(|e| anyhow::anyhow!("reading {}: {e:?}", path.display()))?;
+    Tensor::from_literal(&lit)
+}

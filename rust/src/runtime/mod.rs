@@ -1,0 +1,14 @@
+//! Runtime layer: load AOT artifacts (HLO text) produced by
+//! `python/compile/aot.py`, compile them on the PJRT CPU client via the
+//! `xla` crate, and execute them from the coordinator hot path.
+//!
+//! Python never runs at serving/training time: `make artifacts` is the
+//! only python invocation, and the rust binary is self-contained after it.
+
+pub mod artifacts;
+pub mod batcher;
+pub mod executor;
+
+pub use artifacts::{Entrypoint, Manifest, ModelArch, ParamEntry, Variant};
+pub use batcher::{BatchPlan, Batcher};
+pub use executor::{load_fixture, Engine, EngineStats};

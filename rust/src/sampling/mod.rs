@@ -1,0 +1,190 @@
+//! Sampling methods for dataset generation and DSE seeding (paper §5.2):
+//! Latin Hypercube sampling with maximin improvement, and two
+//! low-discrepancy sequences (Sobol, Halton). All three emit points in
+//! the unit hypercube; `ParamKind::from_unit` quantizes them onto each
+//! platform's architectural/backend grids so every sampler shares one
+//! discretization rule.
+
+pub mod halton;
+pub mod lhs;
+pub mod sobol;
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SamplerKind {
+    Lhs,
+    Sobol,
+    Halton,
+}
+
+impl SamplerKind {
+    pub const ALL: [SamplerKind; 3] = [SamplerKind::Lhs, SamplerKind::Sobol, SamplerKind::Halton];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Lhs => "lhs",
+            SamplerKind::Sobol => "sobol",
+            SamplerKind::Halton => "halton",
+        }
+    }
+}
+
+/// A unit-hypercube sampler.
+pub enum Sampler {
+    Lhs(lhs::Lhs),
+    Sobol(sobol::Sobol),
+    Halton(halton::Halton),
+}
+
+impl Sampler {
+    pub fn new(kind: SamplerKind, dim: usize, seed: u64) -> Sampler {
+        match kind {
+            SamplerKind::Lhs => Sampler::Lhs(lhs::Lhs::new(dim, seed)),
+            SamplerKind::Sobol => Sampler::Sobol(sobol::Sobol::new(dim, seed)),
+            SamplerKind::Halton => Sampler::Halton(halton::Halton::new(dim, seed)),
+        }
+    }
+
+    /// Draw `n` points. NB: LHS regenerates the whole set for a given n
+    /// (adding points would break the stratification — paper §5.2
+    /// discusses exactly this LHS-vs-LDS tradeoff), while Sobol/Halton
+    /// extend their sequences.
+    pub fn sample(&mut self, n: usize) -> Vec<Vec<f64>> {
+        match self {
+            Sampler::Lhs(s) => s.sample(n),
+            Sampler::Sobol(s) => (0..n).map(|_| s.next_point()).collect(),
+            Sampler::Halton(s) => (0..n).map(|_| s.next_point()).collect(),
+        }
+    }
+}
+
+/// Map unit-cube points onto a parameter space.
+pub fn quantize(points: &[Vec<f64>], space: &[crate::generators::ParamSpec]) -> Vec<Vec<f64>> {
+    points
+        .iter()
+        .map(|p| {
+            space
+                .iter()
+                .zip(p.iter())
+                .map(|(s, &u)| s.kind.from_unit(u))
+                .collect()
+        })
+        .collect()
+}
+
+/// Minimum pairwise L2 distance (maximin criterion diagnostic).
+pub fn min_pairwise_distance(points: &[Vec<f64>]) -> f64 {
+    let mut best = f64::INFINITY;
+    for i in 0..points.len() {
+        for j in (i + 1)..points.len() {
+            let d: f64 = points[i]
+                .iter()
+                .zip(points[j].iter())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            best = best.min(d.sqrt());
+        }
+    }
+    best
+}
+
+/// Centred L2 star discrepancy proxy: mean absolute deviation of box
+/// counts from volume over random axis-aligned boxes (cheap uniformity
+/// diagnostic used by tests and the Table-3 experiment).
+pub fn uniformity_deficit(points: &[Vec<f64>], probes: usize, seed: u64) -> f64 {
+    if points.is_empty() {
+        return 1.0;
+    }
+    let dim = points[0].len();
+    let mut rng = Rng::new(seed);
+    let mut acc = 0.0;
+    for _ in 0..probes {
+        let corner: Vec<f64> = (0..dim).map(|_| rng.f64()).collect();
+        let vol: f64 = corner.iter().product();
+        let inside = points
+            .iter()
+            .filter(|p| p.iter().zip(corner.iter()).all(|(x, c)| x <= c))
+            .count() as f64
+            / points.len() as f64;
+        acc += (inside - vol).abs();
+    }
+    acc / probes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_samplers_in_unit_cube() {
+        for kind in SamplerKind::ALL {
+            let mut s = Sampler::new(kind, 5, 42);
+            for p in s.sample(64) {
+                assert_eq!(p.len(), 5);
+                for x in p {
+                    assert!((0.0..1.0).contains(&x), "{kind:?}: {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn samplers_beat_random_uniformity_on_average() {
+        // averaged over seeds: LHS optimizes stratification + maximin
+        // (not star discrepancy), so require parity there and strict
+        // dominance for the LDS methods.
+        let dim = 4;
+        let n = 64;
+        let seeds = [3u64, 7, 11, 19];
+        let avg = |kind: Option<SamplerKind>| -> f64 {
+            seeds
+                .iter()
+                .map(|&seed| {
+                    let pts = match kind {
+                        Some(k) => Sampler::new(k, dim, seed).sample(n),
+                        None => {
+                            let mut rng = Rng::new(seed);
+                            (0..n).map(|_| (0..dim).map(|_| rng.f64()).collect()).collect()
+                        }
+                    };
+                    uniformity_deficit(&pts, 512, 1)
+                })
+                .sum::<f64>()
+                / seeds.len() as f64
+        };
+        let rand_deficit = avg(None);
+        for kind in [SamplerKind::Sobol, SamplerKind::Halton] {
+            let d = avg(Some(kind));
+            assert!(d < rand_deficit, "{kind:?}: {d} !< random {rand_deficit}");
+        }
+        let lhs = avg(Some(SamplerKind::Lhs));
+        assert!(lhs < rand_deficit * 1.15, "lhs {lhs} vs random {rand_deficit}");
+    }
+
+    #[test]
+    fn quantize_respects_grids() {
+        use crate::generators::Platform;
+        let space = Platform::Axiline.param_space();
+        let mut s = Sampler::new(SamplerKind::Lhs, space.len(), 3);
+        let pts = quantize(&s.sample(32), &space);
+        for p in &pts {
+            assert!(p[1] == 8.0 || p[1] == 16.0, "bitwidth grid: {}", p[1]);
+            assert!((5.0..=60.0).contains(&p[3]), "dimension range");
+            assert_eq!(p[3].fract(), 0.0, "integer param");
+        }
+    }
+
+    #[test]
+    fn lds_extension_reuses_prefix() {
+        // the LDS property the paper highlights: extending the sequence
+        // keeps previous points
+        for kind in [SamplerKind::Sobol, SamplerKind::Halton] {
+            let mut a = Sampler::new(kind, 3, 42);
+            let first = a.sample(8);
+            let mut b = Sampler::new(kind, 3, 42);
+            let longer = b.sample(16);
+            assert_eq!(&longer[..8], &first[..], "{kind:?}");
+        }
+    }
+}

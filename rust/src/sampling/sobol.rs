@@ -1,0 +1,163 @@
+//! Sobol low-discrepancy sequence (paper §5.2): gray-code construction
+//! over per-dimension direction numbers (Joe–Kuo primitive polynomials,
+//! first 16 dimensions), with a seed-keyed digital XOR scramble.
+
+use crate::util::rng::Rng;
+
+/// (degree, coefficient a, initial m values) for dims 2..=16; dim 1 is
+/// the van der Corput base-2 sequence. From Joe & Kuo's table.
+const JOE_KUO: [(u32, u32, [u32; 8]); 15] = [
+    (1, 0, [1, 0, 0, 0, 0, 0, 0, 0]),
+    (2, 1, [1, 3, 0, 0, 0, 0, 0, 0]),
+    (3, 1, [1, 3, 1, 0, 0, 0, 0, 0]),
+    (3, 2, [1, 1, 1, 0, 0, 0, 0, 0]),
+    (4, 1, [1, 1, 3, 3, 0, 0, 0, 0]),
+    (4, 4, [1, 3, 5, 13, 0, 0, 0, 0]),
+    (5, 2, [1, 1, 5, 5, 17, 0, 0, 0]),
+    (5, 4, [1, 1, 5, 5, 5, 0, 0, 0]),
+    (5, 7, [1, 1, 7, 11, 19, 0, 0, 0]),
+    (5, 11, [1, 1, 5, 1, 1, 0, 0, 0]),
+    (5, 13, [1, 1, 1, 3, 11, 0, 0, 0]),
+    (5, 14, [1, 3, 5, 5, 31, 0, 0, 0]),
+    (6, 1, [1, 3, 3, 9, 7, 49, 0, 0]),
+    (6, 13, [1, 1, 1, 15, 21, 21, 0, 0]),
+    (6, 16, [1, 3, 1, 13, 27, 49, 0, 0]),
+];
+
+const BITS: u32 = 30;
+
+pub struct Sobol {
+    dim: usize,
+    index: u64,
+    /// current XOR state per dimension (gray-code update)
+    state: Vec<u32>,
+    /// direction numbers: dir[d][bit]
+    dir: Vec<[u32; BITS as usize]>,
+    /// seed-keyed digital scramble
+    scramble: Vec<u32>,
+}
+
+impl Sobol {
+    pub fn new(dim: usize, seed: u64) -> Sobol {
+        assert!(dim <= 16, "sobol table covers 16 dims");
+        let mut dir = Vec::with_capacity(dim);
+        // dim 0: van der Corput
+        let mut v0 = [0u32; BITS as usize];
+        for (i, v) in v0.iter_mut().enumerate() {
+            *v = 1 << (BITS - 1 - i as u32);
+        }
+        dir.push(v0);
+        for d in 1..dim {
+            let (s, a, m_init) = JOE_KUO[d - 1];
+            let s = s as usize;
+            let mut m = [0u64; BITS as usize];
+            for i in 0..s {
+                m[i] = m_init[i] as u64;
+            }
+            for i in s..BITS as usize {
+                let mut val = m[i - s] ^ (m[i - s] << s);
+                for k in 1..s {
+                    let bit = (a >> (s - 1 - k)) & 1;
+                    if bit == 1 {
+                        val ^= m[i - k] << k;
+                    }
+                }
+                m[i] = val;
+            }
+            let mut v = [0u32; BITS as usize];
+            for i in 0..BITS as usize {
+                v[i] = (m[i] << (BITS - 1 - i as u32)) as u32;
+            }
+            dir.push(v);
+        }
+        let mut rng = Rng::new(seed ^ 0x50B0_15E9_u64);
+        let scramble = (0..dim).map(|_| (rng.next_u64() as u32) & ((1 << BITS) - 1)).collect();
+        Sobol { dim, index: 0, state: vec![0; dim], dir, scramble }
+    }
+
+    pub fn next_point(&mut self) -> Vec<f64> {
+        // Emit x_index, then advance the gray-code state: x_{i+1} =
+        // x_i ^ v_{c(i)} with c(i) the lowest zero bit of i; x_0 = 0.
+        // Emitting x_0 keeps the exact (t,m)-net balance over any 2^m
+        // prefix (the digital scramble preserves it).
+        let scale = 1.0 / (1u64 << BITS) as f64;
+        let out = (0..self.dim)
+            .map(|d| ((self.state[d] ^ self.scramble[d]) as f64) * scale)
+            .collect();
+        let c = (!self.index).trailing_zeros().min(BITS - 1);
+        self.index += 1;
+        for d in 0..self.dim {
+            self.state[d] ^= self.dir[d][c as usize];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unscrambled_prefix_matches_canonical() {
+        // canonical unscrambled Sobol dim-2 prefix: (0.5,0.5), (0.75,0.25),
+        // (0.25,0.75), ...
+        let mut s = Sobol::new(2, 0);
+        s.scramble = vec![0, 0];
+        assert_eq!(s.next_point(), vec![0.0, 0.0]);
+        assert_eq!(s.next_point(), vec![0.5, 0.5]);
+        assert_eq!(s.next_point(), vec![0.75, 0.25]);
+        assert_eq!(s.next_point(), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn balanced_in_every_dyadic_half() {
+        let mut s = Sobol::new(8, 42);
+        let n = 256;
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| s.next_point()).collect();
+        for d in 0..8 {
+            let below = pts.iter().filter(|p| p[d] < 0.5).count();
+            assert_eq!(below, n / 2, "dim {d}: {below}/{n} below 0.5");
+        }
+    }
+
+    #[test]
+    fn pairwise_2d_projections_spread() {
+        let mut s = Sobol::new(6, 1);
+        let n = 64;
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| s.next_point()).collect();
+        // each quadrant of each (i,j) projection gets n/4 +- 4 points
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                let mut q = [0usize; 4];
+                for p in &pts {
+                    let qi = (p[i] >= 0.5) as usize * 2 + (p[j] >= 0.5) as usize;
+                    q[qi] += 1;
+                }
+                for (k, &c) in q.iter().enumerate() {
+                    assert!(
+                        (c as i64 - (n / 4) as i64).abs() <= 4,
+                        "proj ({i},{j}) quadrant {k}: {c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_distinct_across_seeds() {
+        let a: Vec<_> = {
+            let mut s = Sobol::new(3, 9);
+            (0..8).map(|_| s.next_point()).collect()
+        };
+        let b: Vec<_> = {
+            let mut s = Sobol::new(3, 9);
+            (0..8).map(|_| s.next_point()).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<_> = {
+            let mut s = Sobol::new(3, 10);
+            (0..8).map(|_| s.next_point()).collect()
+        };
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,98 @@
+//! Energy accounting shared by the platform simulators (paper §5.1:
+//! "the PPA characteristics feed the simulator with data such as the
+//! clock frequency, energy per access for each of the on-chip buffers,
+//! and dynamic and leakage power of [the] hardware components").
+
+use crate::backend::{BackendResult, Enablement};
+
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// Compute + register dynamic power when busy, W.
+    pub dyn_w: f64,
+    /// SRAM dynamic power at full access rate, W.
+    pub sram_w: f64,
+    /// Leakage power (always on), W.
+    pub leak_w: f64,
+    /// Effective clock, GHz.
+    pub f_ghz: f64,
+    /// DRAM energy per byte, J.
+    pub dram_j_per_byte: f64,
+}
+
+impl EnergyModel {
+    pub fn new(backend: &BackendResult, enablement: Enablement) -> EnergyModel {
+        let tech = enablement.coeffs();
+        EnergyModel {
+            dyn_w: backend.power.internal_w + backend.power.switching_w,
+            sram_w: backend.power.sram_w,
+            leak_w: backend.power.leakage_w,
+            f_ghz: backend.f_effective_ghz,
+            dram_j_per_byte: tech.dram_pj_per_byte * 1e-12,
+        }
+    }
+
+    /// Seconds for `cycles` at the effective clock.
+    pub fn seconds(&self, cycles: f64) -> f64 {
+        cycles / (self.f_ghz * 1e9)
+    }
+
+    /// Total energy for a run: busy-gated dynamic power, access-gated
+    /// SRAM power, always-on leakage, explicit DRAM traffic.
+    pub fn total(
+        &self,
+        total_cycles: f64,
+        busy_cycles: f64,
+        sram_active_cycles: f64,
+        dram_bytes: f64,
+    ) -> f64 {
+        let t_total = self.seconds(total_cycles);
+        let t_busy = self.seconds(busy_cycles);
+        let t_sram = self.seconds(sram_active_cycles);
+        self.dyn_w * t_busy + self.sram_w * t_sram + self.leak_w * t_total
+            + self.dram_j_per_byte * dram_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendConfig, SpnrFlow};
+    use crate::generators::{ArchConfig, Platform};
+
+    fn model() -> EnergyModel {
+        let p = Platform::Vta;
+        let arch = ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+        );
+        let r = SpnrFlow::new(Enablement::Gf12, 0)
+            .run(&arch, BackendConfig::new(0.9, 0.4))
+            .unwrap();
+        EnergyModel::new(&r.backend, Enablement::Gf12)
+    }
+
+    #[test]
+    fn idle_cycles_cost_only_leakage() {
+        let m = model();
+        let active = m.total(1e6, 1e6, 1e6, 0.0);
+        let idle = m.total(1e6, 0.0, 0.0, 0.0);
+        assert!(active > idle);
+        let t = m.seconds(1e6);
+        assert!((idle - m.leak_w * t).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dram_traffic_adds_energy() {
+        let m = model();
+        let without = m.total(1e6, 5e5, 5e5, 0.0);
+        let with = m.total(1e6, 5e5, 5e5, 1e6);
+        assert!((with - without - m.dram_j_per_byte * 1e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seconds_inverse_of_frequency() {
+        let m = model();
+        let t = m.seconds(m.f_ghz * 1e9);
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! System-level performance/energy simulators (paper §5.1): given a
+//! hardware configuration's post-SP&R PPA characteristics and a workload,
+//! compute end-to-end runtime and energy. Integration follows the paper:
+//! the simulators take the backend flow's clock frequency, per-buffer
+//! access energies and dynamic/leakage power as inputs — system metrics
+//! are *tied to* backend PPA, which is the paper's core modelling point.
+
+pub mod axiline_sim;
+pub mod energy;
+pub mod systolic;
+pub mod tabla_sim;
+pub mod vta_sim;
+
+use anyhow::{bail, Result};
+
+use crate::backend::{BackendResult, Enablement};
+use crate::generators::{ArchConfig, Platform};
+use crate::workloads::{mobilenet_v1, resnet50, NonDnnAlgo, NonDnnWorkload};
+
+pub use energy::EnergyModel;
+
+/// End-to-end system metrics for one workload execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemMetrics {
+    /// Wall-clock runtime, seconds.
+    pub runtime_s: f64,
+    /// Total energy, joules.
+    pub energy_j: f64,
+    /// Total cycles (diagnostic).
+    pub cycles: f64,
+    /// Compute-busy cycle fraction (diagnostic).
+    pub busy_frac: f64,
+    /// Off-chip traffic, bytes (diagnostic).
+    pub dram_bytes: f64,
+}
+
+/// Default per-platform workload binding (paper §7.1: ResNet-50 on
+/// GeneSys, MobileNet-v1 on VTA, the benchmark parameter for
+/// TABLA/Axiline).
+pub fn default_workload_features(platform: Platform) -> usize {
+    match platform {
+        Platform::Tabla => 64,
+        Platform::Axiline => 55, // the paper's DSE example: SVM w/ 55 features
+        _ => 0,
+    }
+}
+
+/// Run the platform-appropriate simulator.
+pub fn simulate(
+    arch: &ArchConfig,
+    backend: &BackendResult,
+    enablement: Enablement,
+) -> Result<SystemMetrics> {
+    let energy = EnergyModel::new(backend, enablement);
+    match arch.platform {
+        Platform::GeneSys => {
+            let net = resnet50();
+            Ok(systolic::simulate_genesys(arch, backend, &energy, &net))
+        }
+        Platform::Vta => {
+            let net = mobilenet_v1();
+            Ok(vta_sim::simulate_vta(arch, backend, &energy, &net))
+        }
+        Platform::Tabla => {
+            let Some(name) = arch.benchmark() else {
+                bail!("tabla config without benchmark")
+            };
+            let algo = NonDnnAlgo::from_name(name).expect("tabla benchmark");
+            let wl = NonDnnWorkload::standard(algo, default_workload_features(Platform::Tabla));
+            Ok(tabla_sim::simulate_tabla(arch, backend, &energy, &wl))
+        }
+        Platform::Axiline => {
+            let Some(name) = arch.benchmark() else {
+                bail!("axiline config without benchmark")
+            };
+            let algo = NonDnnAlgo::from_name(name).expect("axiline benchmark");
+            let wl = NonDnnWorkload::standard(algo, default_workload_features(Platform::Axiline));
+            Ok(axiline_sim::simulate_axiline(arch, backend, &energy, &wl))
+        }
+    }
+}
+
+/// Simulate with an explicit non-DNN workload (DSE drives this: e.g.
+/// Axiline-SVM with a specific feature count).
+pub fn simulate_nondnn(
+    arch: &ArchConfig,
+    backend: &BackendResult,
+    enablement: Enablement,
+    wl: &NonDnnWorkload,
+) -> Result<SystemMetrics> {
+    let energy = EnergyModel::new(backend, enablement);
+    match arch.platform {
+        Platform::Tabla => Ok(tabla_sim::simulate_tabla(arch, backend, &energy, wl)),
+        Platform::Axiline => Ok(axiline_sim::simulate_axiline(arch, backend, &energy, wl)),
+        p => bail!("{p} is not a non-DNN platform"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendConfig, SpnrFlow};
+
+    fn mid(p: Platform) -> ArchConfig {
+        ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+        )
+    }
+
+    #[test]
+    fn all_platforms_simulate() {
+        for p in Platform::ALL {
+            let arch = mid(p);
+            let flow = SpnrFlow::new(Enablement::Gf12, 0);
+            let r = flow.run(&arch, BackendConfig::new(0.8, 0.45)).unwrap();
+            let m = simulate(&arch, &r.backend, Enablement::Gf12).unwrap();
+            assert!(m.runtime_s > 0.0 && m.runtime_s.is_finite(), "{p}: {m:?}");
+            assert!(m.energy_j > 0.0 && m.energy_j.is_finite(), "{p}: {m:?}");
+            assert!(m.cycles > 0.0);
+            assert!((0.0..=1.0).contains(&m.busy_frac), "{p}: busy={}", m.busy_frac);
+        }
+    }
+
+    #[test]
+    fn faster_clock_shorter_runtime() {
+        let p = Platform::GeneSys;
+        let arch = mid(p);
+        let flow = SpnrFlow::new(Enablement::Gf12, 0);
+        let slow = flow.run(&arch, BackendConfig::new(0.3, 0.4)).unwrap().backend;
+        let fast = flow.run(&arch, BackendConfig::new(1.2, 0.4)).unwrap().backend;
+        let ms = simulate(&arch, &slow, Enablement::Gf12).unwrap();
+        let mf = simulate(&arch, &fast, Enablement::Gf12).unwrap();
+        assert!(mf.runtime_s < ms.runtime_s);
+    }
+
+    #[test]
+    fn energy_runtime_tradeoff_exists() {
+        // Fig. 3(a): pushing frequency up must eventually cost energy.
+        let p = Platform::Axiline;
+        let arch = mid(p);
+        let flow = SpnrFlow::new(Enablement::Gf12, 0);
+        let lo = flow.run(&arch, BackendConfig::new(0.5, 0.6)).unwrap().backend;
+        let hi = flow.run(&arch, BackendConfig::new(2.2, 0.6)).unwrap().backend;
+        let ml = simulate(&arch, &lo, Enablement::Gf12).unwrap();
+        let mh = simulate(&arch, &hi, Enablement::Gf12).unwrap();
+        assert!(mh.runtime_s < ml.runtime_s, "higher clock must be faster");
+        let e_per_t_lo = ml.energy_j / ml.runtime_s;
+        let e_per_t_hi = mh.energy_j / mh.runtime_s;
+        assert!(e_per_t_hi > e_per_t_lo, "higher clock must burn more power");
+    }
+}

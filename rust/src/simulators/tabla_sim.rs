@@ -1,0 +1,116 @@
+//! TABLA performance simulator: PU/PE dataflow execution of statistical
+//! ML training. Operations schedule onto PU x PE engines; the global bus
+//! serializes cross-PU reductions, and each epoch pays a synchronization
+//! barrier (paper's TABLA template: compute engines + global bus +
+//! scheduler).
+
+use crate::backend::BackendResult;
+use crate::generators::ArchConfig;
+use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
+
+use super::energy::EnergyModel;
+use super::SystemMetrics;
+
+pub fn simulate_tabla(
+    arch: &ArchConfig,
+    _backend: &BackendResult,
+    energy: &EnergyModel,
+    wl: &NonDnnWorkload,
+) -> SystemMetrics {
+    let pu = arch.get("pu");
+    let pe = arch.get("pe");
+    let engines = pu * pe;
+
+    // Dataflow efficiency: dependency chains limit ILP per algorithm
+    // (backprop's layer sequence parallelizes well; recsys's scattered
+    // factor updates contend on the bus).
+    let ilp_eff = match wl.algo {
+        NonDnnAlgo::Backprop => 0.80,
+        NonDnnAlgo::Recsys => 0.55,
+        _ => 0.70,
+    };
+    // Bus contention grows with PU count (more cross-PU reduction hops).
+    let bus_eff = 1.0 / (1.0 + 0.04 * pu);
+
+    let macs = wl.total_macs() as f64;
+    let compute_cycles = macs / (engines * ilp_eff * bus_eff);
+
+    // Cross-PU reduction per sample: log2(pu) bus beats.
+    let reduce_cycles = (wl.samples * wl.epochs) as f64 * (pu.log2().ceil() + 2.0);
+    // Epoch barrier + model broadcast.
+    let sync_cycles = wl.epochs as f64 * (500.0 + wl.features as f64);
+
+    // Training data streams from DRAM once per epoch (bits per feature
+    // from the IO bus width).
+    let in_bits = arch.get("input_bitwidth");
+    let dram_bytes =
+        (wl.samples * wl.epochs * wl.features) as f64 * in_bits / 8.0;
+    let dram_cycles = dram_bytes * 8.0 / (in_bits * 4.0); // AXI shim width
+
+    let total_cycles = compute_cycles.max(dram_cycles) + reduce_cycles + sync_cycles;
+    let busy = compute_cycles;
+    let sram_active = compute_cycles * 0.8;
+
+    let runtime_s = energy.seconds(total_cycles);
+    let energy_j = energy.total(total_cycles, busy, sram_active, dram_bytes);
+    SystemMetrics {
+        runtime_s,
+        energy_j,
+        cycles: total_cycles,
+        busy_frac: (busy / total_cycles).min(1.0),
+        dram_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendConfig, Enablement, SpnrFlow};
+    use crate::generators::Platform;
+
+    fn run_with(pu: f64, pe: f64, wl: &NonDnnWorkload) -> SystemMetrics {
+        let arch = ArchConfig::new(Platform::Tabla, vec![pu, pe, 16.0, 16.0, 0.0]);
+        let r = SpnrFlow::new(Enablement::Gf12, 0)
+            .run(&arch, BackendConfig::new(0.8, 0.4))
+            .unwrap();
+        let e = EnergyModel::new(&r.backend, Enablement::Gf12);
+        simulate_tabla(&arch, &r.backend, &e, wl)
+    }
+
+    #[test]
+    fn more_engines_fewer_cycles() {
+        let wl = NonDnnWorkload::standard(NonDnnAlgo::Backprop, 64);
+        let small = run_with(4.0, 8.0, &wl);
+        let big = run_with(8.0, 16.0, &wl);
+        assert!(big.cycles < small.cycles);
+    }
+
+    #[test]
+    fn scaling_is_sublinear_due_to_bus() {
+        // compute-bound workload: backprop (recsys is DRAM-bound, where
+        // engine scaling correctly does ~nothing)
+        let wl = NonDnnWorkload::standard(NonDnnAlgo::Backprop, 64);
+        let small = run_with(4.0, 8.0, &wl);
+        let big = run_with(8.0, 16.0, &wl);
+        let speedup = small.cycles / big.cycles;
+        assert!(speedup < 4.0, "4x engines cannot give {speedup}x");
+        assert!(speedup > 1.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn recsys_is_memory_bound() {
+        let wl = NonDnnWorkload::standard(NonDnnAlgo::Recsys, 64);
+        let small = run_with(4.0, 8.0, &wl);
+        let big = run_with(8.0, 16.0, &wl);
+        let speedup = small.cycles / big.cycles;
+        assert!(speedup < 1.6, "DRAM-bound workload should not scale: {speedup}");
+    }
+
+    #[test]
+    fn backprop_heavier_than_svm() {
+        let svm = run_with(8.0, 8.0, &NonDnnWorkload::standard(NonDnnAlgo::Svm, 64));
+        let bp = run_with(8.0, 8.0, &NonDnnWorkload::standard(NonDnnAlgo::Backprop, 64));
+        assert!(bp.runtime_s > svm.runtime_s);
+        assert!(bp.energy_j > svm.energy_j);
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-contained utility substrates (the offline registry only carries
+//! the `xla` closure, so JSON / CLI / RNG / thread-pool / property-testing
+//! helpers are implemented here rather than pulled from crates.io).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod tensor;

@@ -1,0 +1,84 @@
+//! Scoped parallel map over a fixed worker count (rayon/tokio are
+//! unavailable offline; dataset generation and benchmark sweeps use this).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Parallel map: applies `f` to 0..n across `workers` threads, preserving
+/// index order in the output. `f` must be Sync; results are collected
+/// into a Vec<T>.
+pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|x| x.expect("worker skipped an index"))
+        .collect()
+}
+
+/// Default worker count: available parallelism minus one, at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map(100, 4, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        assert!(par_map(0, 4, |i| i).is_empty());
+        assert_eq!(par_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn workers_more_than_items() {
+        assert_eq!(par_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn actually_runs_concurrently_when_asked() {
+        use std::sync::atomic::AtomicUsize;
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static CUR: AtomicUsize = AtomicUsize::new(0);
+        par_map(8, 4, |i| {
+            let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(c, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            CUR.fetch_sub(1, Ordering::SeqCst);
+            i
+        });
+        assert!(PEAK.load(Ordering::SeqCst) >= 2);
+    }
+}

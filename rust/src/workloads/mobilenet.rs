@@ -1,0 +1,58 @@
+//! MobileNet-v1 layer table (ImageNet 224x224, width 1.0), the VTA
+//! workload in the paper's system-level experiments (§7.1). Its
+//! depthwise-separable structure is the interesting case for VTA: the
+//! GEMM core handles pointwise convs well but depthwise convs fall to
+//! the tensor ALU.
+
+use super::{DnnWorkload, Layer};
+
+fn dw_sep(layers: &mut Vec<Layer>, h: usize, w: usize, cin: usize, cout: usize, stride: usize) {
+    layers.push(Layer::DwConv { h, w, c: cin, k: 3, stride });
+    let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+    layers.push(Layer::Conv { h: oh, w: ow, cin, cout, k: 1, stride: 1 });
+    layers.push(Layer::Act { n: oh * ow * cout });
+}
+
+pub fn mobilenet_v1() -> DnnWorkload {
+    let mut layers = Vec::new();
+    layers.push(Layer::Conv { h: 224, w: 224, cin: 3, cout: 32, k: 3, stride: 2 });
+    dw_sep(&mut layers, 112, 112, 32, 64, 1);
+    dw_sep(&mut layers, 112, 112, 64, 128, 2);
+    dw_sep(&mut layers, 56, 56, 128, 128, 1);
+    dw_sep(&mut layers, 56, 56, 128, 256, 2);
+    dw_sep(&mut layers, 28, 28, 256, 256, 1);
+    dw_sep(&mut layers, 28, 28, 256, 512, 2);
+    for _ in 0..5 {
+        dw_sep(&mut layers, 14, 14, 512, 512, 1);
+    }
+    dw_sep(&mut layers, 14, 14, 512, 1024, 2);
+    dw_sep(&mut layers, 7, 7, 1024, 1024, 1);
+    layers.push(Layer::Pool { h: 7, w: 7, c: 1024, k: 7, stride: 7 });
+    layers.push(Layer::Dense { cin: 1024, cout: 1000 });
+    DnnWorkload { name: "mobilenet_v1", layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_separable_blocks() {
+        let net = mobilenet_v1();
+        let dw = net.layers.iter().filter(|l| matches!(l, Layer::DwConv { .. })).count();
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn pointwise_convs_dominate_macs() {
+        let net = mobilenet_v1();
+        let dw_macs: u64 = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::DwConv { .. }))
+            .map(|l| l.macs())
+            .sum();
+        let total = net.total_macs();
+        assert!((dw_macs as f64) < 0.1 * total as f64);
+    }
+}

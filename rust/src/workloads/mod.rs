@@ -1,0 +1,263 @@
+//! Workload descriptions (paper §3: cost metrics depend on network
+//! topology, not input data). ResNet-50 and MobileNet-v1 layer tables
+//! drive the DNN simulators (GeneSys, VTA); the non-DNN algorithm specs
+//! drive TABLA and Axiline.
+
+pub mod mobilenet;
+pub mod resnet50;
+
+pub use mobilenet::mobilenet_v1;
+pub use resnet50::resnet50;
+
+/// One DNN layer as the simulators see it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Layer {
+    /// Convolution: input H x W x Cin, K x K kernel, Cout filters.
+    Conv { h: usize, w: usize, cin: usize, cout: usize, k: usize, stride: usize },
+    /// Depthwise convolution (per-channel K x K).
+    DwConv { h: usize, w: usize, c: usize, k: usize, stride: usize },
+    /// Fully connected.
+    Dense { cin: usize, cout: usize },
+    /// Global/strided pooling over H x W x C.
+    Pool { h: usize, w: usize, c: usize, k: usize, stride: usize },
+    /// Elementwise activation over N values (ReLU etc.).
+    Act { n: usize },
+}
+
+impl Layer {
+    /// Output spatial size of a conv-like layer (same padding).
+    fn out_hw(h: usize, w: usize, stride: usize) -> (usize, usize) {
+        (h.div_ceil(stride), w.div_ceil(stride))
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        match *self {
+            Layer::Conv { h, w, cin, cout, k, stride } => {
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                (oh * ow) as u64 * (k * k * cin) as u64 * cout as u64
+            }
+            Layer::DwConv { h, w, c, k, stride } => {
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                (oh * ow) as u64 * (k * k) as u64 * c as u64
+            }
+            Layer::Dense { cin, cout } => (cin * cout) as u64,
+            Layer::Pool { .. } | Layer::Act { .. } => 0,
+        }
+    }
+
+    /// Vector (non-MAC) op count: pooling reads + activations.
+    pub fn vector_ops(&self) -> u64 {
+        match *self {
+            Layer::Pool { h, w, c, k, stride } => {
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                (oh * ow * c) as u64 * (k * k) as u64
+            }
+            Layer::Act { n } => n as u64,
+            Layer::Conv { h, w, cout, stride, .. } => {
+                // fused bias+ReLU on outputs
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                (oh * ow * cout) as u64
+            }
+            Layer::DwConv { h, w, c, stride, .. } => {
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                (oh * ow * c) as u64
+            }
+            Layer::Dense { cout, .. } => cout as u64,
+        }
+    }
+
+    /// Weight parameter count.
+    pub fn weights(&self) -> u64 {
+        match *self {
+            Layer::Conv { cin, cout, k, .. } => (k * k * cin * cout) as u64,
+            Layer::DwConv { c, k, .. } => (k * k * c) as u64,
+            Layer::Dense { cin, cout } => (cin * cout) as u64,
+            Layer::Pool { .. } | Layer::Act { .. } => 0,
+        }
+    }
+
+    /// Input activation element count.
+    pub fn input_elems(&self) -> u64 {
+        match *self {
+            Layer::Conv { h, w, cin, .. } => (h * w * cin) as u64,
+            Layer::DwConv { h, w, c, .. } => (h * w * c) as u64,
+            Layer::Dense { cin, .. } => cin as u64,
+            Layer::Pool { h, w, c, .. } => (h * w * c) as u64,
+            Layer::Act { n } => n as u64,
+        }
+    }
+
+    /// Output activation element count.
+    pub fn output_elems(&self) -> u64 {
+        match *self {
+            Layer::Conv { h, w, cout, stride, .. } => {
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                (oh * ow * cout) as u64
+            }
+            Layer::DwConv { h, w, c, stride, .. } => {
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                (oh * ow * c) as u64
+            }
+            Layer::Dense { cout, .. } => cout as u64,
+            Layer::Pool { h, w, c, k: _, stride } => {
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                (oh * ow * c) as u64
+            }
+            Layer::Act { n } => n as u64,
+        }
+    }
+
+    /// As a GEMM (M, K, N): output-pixels x reduction x filters.
+    pub fn as_gemm(&self) -> Option<(u64, u64, u64)> {
+        match *self {
+            Layer::Conv { h, w, cin, cout, k, stride } => {
+                let (oh, ow) = Self::out_hw(h, w, stride);
+                Some(((oh * ow) as u64, (k * k * cin) as u64, cout as u64))
+            }
+            Layer::Dense { cin, cout } => Some((1, cin as u64, cout as u64)),
+            _ => None,
+        }
+    }
+}
+
+/// A named DNN workload.
+#[derive(Debug, Clone)]
+pub struct DnnWorkload {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl DnnWorkload {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+}
+
+/// Non-DNN statistical ML algorithms (paper Table 1 benchmarks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NonDnnAlgo {
+    Svm,
+    LinearRegression,
+    LogisticRegression,
+    Recsys,
+    Backprop,
+}
+
+impl NonDnnAlgo {
+    pub fn from_name(s: &str) -> Option<NonDnnAlgo> {
+        Some(match s {
+            "svm" => NonDnnAlgo::Svm,
+            "linear_regression" => NonDnnAlgo::LinearRegression,
+            "logistic_regression" => NonDnnAlgo::LogisticRegression,
+            "recsys" => NonDnnAlgo::Recsys,
+            "backprop" => NonDnnAlgo::Backprop,
+            _ => return None,
+        })
+    }
+}
+
+/// A training workload for TABLA / Axiline.
+#[derive(Debug, Clone, Copy)]
+pub struct NonDnnWorkload {
+    pub algo: NonDnnAlgo,
+    /// Model dimension (features; recsys: latent factors x users proxy).
+    pub features: usize,
+    /// Training vectors per epoch.
+    pub samples: usize,
+    /// Training epochs.
+    pub epochs: usize,
+}
+
+impl NonDnnWorkload {
+    /// Default sizing per algorithm (paper's benchmark suite scale).
+    pub fn standard(algo: NonDnnAlgo, features: usize) -> NonDnnWorkload {
+        let (samples, epochs) = match algo {
+            NonDnnAlgo::Svm => (4096, 10),
+            NonDnnAlgo::LinearRegression => (4096, 10),
+            NonDnnAlgo::LogisticRegression => (4096, 12),
+            NonDnnAlgo::Recsys => (8192, 8),
+            NonDnnAlgo::Backprop => (2048, 15),
+        };
+        NonDnnWorkload { algo, features, samples, epochs }
+    }
+
+    /// MAC operations per training sample.
+    pub fn macs_per_sample(&self) -> u64 {
+        let d = self.features as u64;
+        match self.algo {
+            // dot + gradient update
+            NonDnnAlgo::Svm | NonDnnAlgo::LinearRegression => 2 * d,
+            // dot + sigmoid (LUT) + update
+            NonDnnAlgo::LogisticRegression => 2 * d + 8,
+            // two factor vectors: predict + two updates
+            NonDnnAlgo::Recsys => 3 * d,
+            // 2-layer MLP fwd + bwd: ~4 * d * hidden(16)
+            NonDnnAlgo::Backprop => 4 * d * 16,
+        }
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.macs_per_sample() * (self.samples * self.epochs) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_scale_is_right() {
+        let net = resnet50();
+        let gmacs = net.total_macs() as f64 / 1e9;
+        // canonical ResNet-50: ~4.1 GMACs, ~25.5M params
+        assert!((3.0..5.5).contains(&gmacs), "GMACs={gmacs}");
+        let mparams = net.total_weights() as f64 / 1e6;
+        assert!((20.0..30.0).contains(&mparams), "Mparams={mparams}");
+    }
+
+    #[test]
+    fn mobilenet_scale_is_right() {
+        let net = mobilenet_v1();
+        let gmacs = net.total_macs() as f64 / 1e9;
+        // canonical MobileNet-v1: ~0.57 GMACs, ~4.2M params
+        assert!((0.4..0.8).contains(&gmacs), "GMACs={gmacs}");
+        let mparams = net.total_weights() as f64 / 1e6;
+        assert!((3.0..6.0).contains(&mparams), "Mparams={mparams}");
+    }
+
+    #[test]
+    fn mobilenet_is_depthwise_heavy() {
+        let net = mobilenet_v1();
+        let dw = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::DwConv { .. }))
+            .count();
+        assert!(dw >= 13, "dw layers = {dw}");
+    }
+
+    #[test]
+    fn gemm_view_consistent_with_macs() {
+        let l = Layer::Conv { h: 56, w: 56, cin: 64, cout: 64, k: 3, stride: 1 };
+        let (m, k, n) = l.as_gemm().unwrap();
+        assert_eq!(m * k * n, l.macs());
+    }
+
+    #[test]
+    fn nondnn_backprop_dominates() {
+        let svm = NonDnnWorkload::standard(NonDnnAlgo::Svm, 55);
+        let bp = NonDnnWorkload::standard(NonDnnAlgo::Backprop, 55);
+        assert!(bp.total_macs() > 10 * svm.total_macs());
+    }
+
+    #[test]
+    fn conv_shapes_track_stride() {
+        let l = Layer::Conv { h: 224, w: 224, cin: 3, cout: 64, k: 7, stride: 2 };
+        assert_eq!(l.output_elems(), 112 * 112 * 64);
+    }
+}

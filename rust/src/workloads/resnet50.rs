@@ -1,0 +1,81 @@
+//! ResNet-50 layer table (ImageNet 224x224), the GeneSys workload in the
+//! paper's system-level experiments (§7.1).
+
+use super::{DnnWorkload, Layer};
+
+/// Bottleneck block: 1x1 reduce, 3x3, 1x1 expand (+ optional downsample).
+fn bottleneck(
+    layers: &mut Vec<Layer>,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cmid: usize,
+    cout: usize,
+    stride: usize,
+    downsample: bool,
+) {
+    layers.push(Layer::Conv { h, w, cin, cout: cmid, k: 1, stride: 1 });
+    layers.push(Layer::Conv { h, w, cin: cmid, cout: cmid, k: 3, stride });
+    let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+    layers.push(Layer::Conv { h: oh, w: ow, cin: cmid, cout, k: 1, stride: 1 });
+    if downsample {
+        layers.push(Layer::Conv { h, w, cin, cout, k: 1, stride });
+    }
+    layers.push(Layer::Act { n: oh * ow * cout });
+}
+
+/// Full ResNet-50: conv1 + 4 stages (3,4,6,3 bottlenecks) + fc.
+pub fn resnet50() -> DnnWorkload {
+    let mut layers = Vec::new();
+    layers.push(Layer::Conv { h: 224, w: 224, cin: 3, cout: 64, k: 7, stride: 2 });
+    layers.push(Layer::Pool { h: 112, w: 112, c: 64, k: 3, stride: 2 });
+
+    // stage 1: 56x56, 64 -> 256
+    bottleneck(&mut layers, 56, 56, 64, 64, 256, 1, true);
+    for _ in 0..2 {
+        bottleneck(&mut layers, 56, 56, 256, 64, 256, 1, false);
+    }
+    // stage 2: 56 -> 28, 256 -> 512
+    bottleneck(&mut layers, 56, 56, 256, 128, 512, 2, true);
+    for _ in 0..3 {
+        bottleneck(&mut layers, 28, 28, 512, 128, 512, 1, false);
+    }
+    // stage 3: 28 -> 14, 512 -> 1024
+    bottleneck(&mut layers, 28, 28, 512, 256, 1024, 2, true);
+    for _ in 0..5 {
+        bottleneck(&mut layers, 14, 14, 1024, 256, 1024, 1, false);
+    }
+    // stage 4: 14 -> 7, 1024 -> 2048
+    bottleneck(&mut layers, 14, 14, 1024, 512, 2048, 2, true);
+    for _ in 0..2 {
+        bottleneck(&mut layers, 7, 7, 2048, 512, 2048, 1, false);
+    }
+
+    layers.push(Layer::Pool { h: 7, w: 7, c: 2048, k: 7, stride: 7 });
+    layers.push(Layer::Dense { cin: 2048, cout: 1000 });
+
+    DnnWorkload { name: "resnet50", layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_53_convs_and_one_fc() {
+        let net = resnet50();
+        let convs = net.layers.iter().filter(|l| matches!(l, Layer::Conv { .. })).count();
+        let fcs = net.layers.iter().filter(|l| matches!(l, Layer::Dense { .. })).count();
+        assert_eq!(convs, 53);
+        assert_eq!(fcs, 1);
+    }
+
+    #[test]
+    fn first_stage_is_the_published_shape() {
+        let net = resnet50();
+        assert_eq!(
+            net.layers[0],
+            Layer::Conv { h: 224, w: 224, cin: 3, cout: 64, k: 7, stride: 2 }
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Integration: datagen -> two-stage training -> prediction -> DSE on
+//! small sizes, plus the predict server under concurrent clients.
+
+use fso::backend::Enablement;
+use fso::coordinator::dse_driver::{axiline_svm_problem, DseDriver, SurrogateBundle};
+use fso::coordinator::{datagen, DatagenConfig, ModelMenu, PredictServer, TrainOptions, Trainer};
+use fso::data::Metric;
+use fso::dse::MotpeConfig;
+use fso::generators::Platform;
+
+fn small_dataset(platform: Platform) -> fso::coordinator::GeneratedData {
+    let mut cfg = DatagenConfig::small(platform, Enablement::Gf12);
+    cfg.n_arch = 8;
+    cfg.n_backend_train = 12;
+    cfg.n_backend_test = 4;
+    datagen::generate(&cfg).expect("datagen")
+}
+
+#[test]
+fn trees_pipeline_all_platforms() {
+    for platform in Platform::ALL {
+        let g = small_dataset(platform);
+        let trainer = Trainer::new(None);
+        let opts = TrainOptions {
+            menu: ModelMenu::trees_only(),
+            ..Default::default()
+        };
+        let report = trainer
+            .run(&g.dataset, &g.backend_split, Metric::Power, &opts)
+            .expect("train");
+        let gbdt = &report.models["GBDT"];
+        assert!(
+            gbdt.mu_ape < 25.0,
+            "{platform}: GBDT muAPE {:.1}% way off",
+            gbdt.mu_ape
+        );
+        assert!(report.roi.accuracy > 0.7, "{platform}: ROI acc {}", report.roi.accuracy);
+    }
+}
+
+#[test]
+fn surrogate_bundle_predicts_all_metrics() {
+    let g = small_dataset(Platform::Vta);
+    let s = SurrogateBundle::fit(&g.dataset, &g.backend_split, 1).unwrap();
+    let (in_roi, pred) = s.predict(&g.dataset.rows[0].features_vec());
+    let _ = in_roi;
+    for m in Metric::ALL {
+        assert!(pred[&m].is_finite());
+        assert!(pred[&m] > 0.0, "{m}: {}", pred[&m]);
+    }
+}
+
+#[test]
+fn dse_end_to_end_small() {
+    let g = small_dataset(Platform::Axiline);
+    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 1).unwrap();
+    let driver = DseDriver {
+        enablement: Enablement::Gf12,
+        surrogate,
+        flow_seed: 2023,
+    };
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let problem = axiline_svm_problem(
+        g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max) * 2.0,
+        runtimes[runtimes.len() * 3 / 4],
+    );
+    let outcome = driver
+        .run(&problem, 80, 2, MotpeConfig { n_startup: 16, ..Default::default() })
+        .unwrap();
+    assert_eq!(outcome.points.len(), 80);
+    assert!(!outcome.best.is_empty(), "no feasible winner found");
+    for errs in &outcome.ground_truth_errors {
+        for m in Metric::ALL {
+            assert!(errs[&m].is_finite());
+            assert!(errs[&m] < 1.0, "{m} error {:.2} out of band", errs[&m]);
+        }
+    }
+}
+
+#[test]
+fn predict_server_concurrent_clients() {
+    let Some(artifacts) = fso::test_support::artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let server = PredictServer::start(artifacts.clone()).unwrap();
+    let engine = fso::runtime::Engine::load(&artifacts).unwrap();
+    let variant = engine.manifest.variant("ann16x3_relu").unwrap().clone();
+    let theta: Vec<f32> =
+        fso::models::ann::glorot_init(&variant, &mut fso::util::rng::Rng::new(3))
+            .data()
+            .to_vec();
+    let feat = engine.manifest.feat;
+
+    std::thread::scope(|scope| {
+        for c in 0..6 {
+            let client = server.client();
+            let theta = theta.clone();
+            scope.spawn(move || {
+                let mut rng = fso::util::rng::Rng::new(c);
+                let rows: Vec<Vec<f32>> =
+                    (0..50).map(|_| (0..feat).map(|_| rng.f32()).collect()).collect();
+                let out = client.predict("ann16x3_relu", &theta, rows.clone()).unwrap();
+                assert_eq!(out.len(), 50);
+                // same rows again must give identical answers (stateless)
+                let out2 = client.predict("ann16x3_relu", &theta, rows).unwrap();
+                assert_eq!(out, out2);
+            });
+        }
+    });
+    let stats = server.stats().unwrap();
+    assert_eq!(stats.rows, 6 * 50 * 2);
+    assert!(stats.batches >= stats.rows / 32);
+}
+
+#[test]
+fn ann_gcn_learn_on_real_data() {
+    let Some(artifacts) = fso::test_support::artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let g = small_dataset(Platform::Axiline);
+    let engine = std::rc::Rc::new(fso::runtime::Engine::load(&artifacts).unwrap());
+    let trainer = Trainer::new(Some(engine));
+    let opts = TrainOptions {
+        menu: ModelMenu { gbdt: false, rf: false, ann: true, ensemble: false, gcn: true },
+        ann_cfg: fso::models::TrainConfig { max_epochs: 30, early_stop: 10, ..Default::default() },
+        gcn_cfg: fso::models::TrainConfig {
+            max_epochs: 10,
+            early_stop: 5,
+            lr0: 8e-3,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let report = trainer
+        .run(&g.dataset, &g.backend_split, Metric::Performance, &opts)
+        .expect("train");
+    let ann = &report.models["ANN"];
+    let gcn = &report.models["GCN"];
+    // both must clearly beat a 100%-off baseline; ANN should be decent
+    assert!(ann.mu_ape < 30.0, "ANN muAPE {:.1}%", ann.mu_ape);
+    assert!(gcn.mu_ape < 60.0, "GCN muAPE {:.1}%", gcn.mu_ape);
+}

@@ -1,0 +1,205 @@
+//! Property-based invariants over the coordinator substrates (DESIGN.md
+//! §7), via the in-repo mini property harness (proptest is unavailable
+//! offline). Each property runs across many seeded random cases and
+//! reports a replayable (seed, fork) pair on failure.
+
+use fso::backend::{BackendConfig, Enablement, SpnrFlow};
+use fso::data::dataset::Dataset;
+use fso::dse::{dominates, ParetoFront};
+use fso::generators::{ArchConfig, Lhg, Platform};
+use fso::runtime::Batcher;
+use fso::sampling::{Sampler, SamplerKind};
+use fso::util::prop::check;
+use fso::util::rng::Rng;
+
+fn random_platform(rng: &mut Rng) -> Platform {
+    Platform::ALL[rng.below(4)]
+}
+
+fn random_arch(rng: &mut Rng, p: Platform) -> ArchConfig {
+    let vals = p
+        .param_space()
+        .iter()
+        .map(|s| s.kind.from_unit(rng.f64()))
+        .collect();
+    ArchConfig::new(p, vals)
+}
+
+#[test]
+fn prop_batcher_covers_every_request_exactly_once_in_order() {
+    check(200, 0xBA7C, |rng| {
+        let b = Batcher::new(1 + rng.below(64));
+        let n = rng.below(500);
+        let plans = b.plan(n);
+        let mut seen = Vec::new();
+        for p in &plans {
+            assert!(p.rows.len() <= p.batch_size);
+            seen.extend_from_slice(&p.rows);
+        }
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        // only the final plan may be partial
+        for p in plans.iter().rev().skip(1) {
+            assert_eq!(p.padding(), 0);
+        }
+    });
+}
+
+#[test]
+fn prop_lhg_is_always_a_tree_within_budget() {
+    check(120, 0x16C, |rng| {
+        let p = random_platform(rng);
+        let arch = random_arch(rng, p);
+        let tree = p.generate(&arch).unwrap();
+        let lhg = Lhg::from_tree(&tree);
+        lhg.validate().unwrap();
+        assert!(lhg.len() <= fso::generators::lhg::MAX_NODES);
+        let (_, adj, mask) = lhg.to_gcn_inputs(fso::generators::lhg::MAX_NODES).unwrap();
+        // mask count equals node count; adjacency entries in [0,1]
+        assert_eq!(mask.iter().sum::<f32>() as usize, lhg.len());
+        assert!(adj.iter().all(|v| (0.0..=1.0).contains(v)));
+    });
+}
+
+#[test]
+fn prop_backend_oracle_outputs_are_physical() {
+    check(150, 0xBACE, |rng| {
+        let p = random_platform(rng);
+        let arch = random_arch(rng, p);
+        let e = if rng.bool(0.5) { Enablement::Gf12 } else { Enablement::Ng45 };
+        let flow = SpnrFlow::new(e, rng.next_u64());
+        let cfg = BackendConfig::new(rng.range(0.1, 3.0), rng.range(0.15, 0.95));
+        let r = flow.run(&arch, cfg).unwrap();
+        assert!(r.backend.f_effective_ghz > 0.0 && r.backend.f_effective_ghz < 5.0);
+        assert!(r.backend.f_effective_ghz <= r.backend.f_max_ghz + 1e-9);
+        assert!(r.backend.total_power_w() > 0.0 && r.backend.total_power_w() < 1e3);
+        assert!(r.backend.chip_area_mm2 > 0.0 && r.backend.chip_area_mm2 < 1e4);
+        assert!(r.backend.power.leakage_w < r.backend.total_power_w());
+        assert!(r.synth.cell_area_um2 > 0.0);
+    });
+}
+
+#[test]
+fn prop_samplers_stay_in_bounds_and_quantize_legally() {
+    check(100, 0x5A3, |rng| {
+        let p = random_platform(rng);
+        let space = p.param_space();
+        let kind = SamplerKind::ALL[rng.below(3)];
+        let mut s = Sampler::new(kind, space.len(), rng.next_u64());
+        let n = 1 + rng.below(40);
+        let pts = s.sample(n);
+        assert_eq!(pts.len(), n);
+        for vals in fso::sampling::quantize(&pts, &space) {
+            let cfg = ArchConfig::new(p, vals);
+            cfg.validate().unwrap();
+            // every quantized value must be reachable from its own unit pos
+            for (spec, v) in space.iter().zip(cfg.values.iter()) {
+                let u = spec.kind.to_unit(*v);
+                assert!((0.0..=1.0).contains(&u), "{p} {}: {v} -> {u}", spec.name);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pareto_front_never_contains_dominated_members() {
+    check(200, 0xFA27, |rng| {
+        let mut front = ParetoFront::default();
+        let n = 2 + rng.below(60);
+        let dims = 2 + rng.below(3);
+        for i in 0..n {
+            let obj: Vec<f64> = (0..dims).map(|_| rng.range(0.0, 10.0)).collect();
+            front.insert(obj, i);
+        }
+        for i in 0..front.len() {
+            for j in 0..front.len() {
+                if i != j {
+                    assert!(
+                        !dominates(&front.objectives[i], &front.objectives[j]),
+                        "front member {j} dominated by {i}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_splits_are_disjoint_and_complete() {
+    use fso::data::Row;
+    check(80, 0xD5, |rng| {
+        // synthetic dataset with n archs x m backend points
+        let n_arch = 2 + rng.below(6);
+        let m = 2 + rng.below(8);
+        let p = Platform::Axiline;
+        let archs: Vec<ArchConfig> = (0..n_arch).map(|_| random_arch(rng, p)).collect();
+        let lhgs = archs
+            .iter()
+            .map(|a| Lhg::from_tree(&p.generate(a).unwrap()))
+            .collect();
+        let mut rows = Vec::new();
+        for ai in 0..n_arch {
+            for bi in 0..m {
+                let ft = 0.3 + 0.17 * bi as f64;
+                rows.push(Row {
+                    arch_idx: ai,
+                    features: [0.1; fso::generators::FEAT_DIM],
+                    f_target_ghz: ft,
+                    util: 0.5,
+                    power_w: 1.0,
+                    f_effective_ghz: ft,
+                    area_mm2: 1.0,
+                    energy_j: 1.0,
+                    runtime_s: 1.0,
+                    in_roi: rng.bool(0.7),
+                });
+            }
+        }
+        let ds = Dataset {
+            platform: p,
+            enablement: Enablement::Gf12,
+            archs,
+            lhgs,
+            rows,
+        };
+        let mut s1 = ds.split_unseen_backend(0.3, rng.next_u64());
+        s1.validate(ds.len()).unwrap();
+        assert_eq!(s1.train.len() + s1.test.len(), ds.len());
+        ds.carve_validation(&mut s1, 0.25, rng.next_u64());
+        s1.validate(ds.len()).unwrap();
+        assert_eq!(s1.train.len() + s1.val.len() + s1.test.len(), ds.len());
+
+        let s2 = ds.split_unseen_arch(0.3, rng.next_u64());
+        s2.validate(ds.len()).unwrap();
+        // no arch crosses the train/test boundary
+        let train_archs: std::collections::BTreeSet<usize> =
+            s2.train.iter().map(|&i| ds.rows[i].arch_idx).collect();
+        for &i in &s2.test {
+            assert!(!train_archs.contains(&ds.rows[i].arch_idx));
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_metrics_scale_with_clock() {
+    check(60, 0x51E, |rng| {
+        let p = random_platform(rng);
+        let arch = random_arch(rng, p);
+        let flow = SpnrFlow::new(Enablement::Gf12, 1);
+        let f1 = rng.range(0.2, 0.7);
+        let f2 = f1 * rng.range(1.6, 2.4);
+        let u = rng.range(0.25, 0.55);
+        let r1 = flow.run(&arch, BackendConfig::new(f1, u)).unwrap();
+        let r2 = flow.run(&arch, BackendConfig::new(f2, u)).unwrap();
+        let m1 = fso::simulators::simulate(&arch, &r1.backend, Enablement::Gf12).unwrap();
+        let m2 = fso::simulators::simulate(&arch, &r2.backend, Enablement::Gf12).unwrap();
+        // strictly higher effective clock must not be slower
+        if r2.backend.f_effective_ghz > r1.backend.f_effective_ghz * 1.05 {
+            assert!(
+                m2.runtime_s < m1.runtime_s * 1.001,
+                "{p}: runtime must drop with clock ({} -> {})",
+                m1.runtime_s,
+                m2.runtime_s
+            );
+        }
+    });
+}

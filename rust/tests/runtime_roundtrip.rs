@@ -1,0 +1,163 @@
+//! Integration test: the rust PJRT runtime must reproduce, bit-for-bit
+//! (to f32 tolerance), the outputs python recorded for the AOT artifacts.
+//! This is the contract that lets python leave the request path.
+
+use fso::runtime::{load_fixture, Engine};
+use fso::util::tensor::Tensor;
+
+fn engine() -> Option<Engine> {
+    let dir = fso::test_support::artifacts_dir()?;
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+fn assert_close(got: &Tensor, want: &Tensor, tol: f32, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape");
+    let d = got.max_abs_diff(want);
+    assert!(d <= tol, "{what}: max abs diff {d} > {tol}");
+}
+
+#[test]
+fn ann_predict_matches_python_golden() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let dir = eng.manifest.dir.clone();
+    let theta = load_fixture(&dir, "ann_theta").unwrap();
+    let x = load_fixture(&dir, "ann_x").unwrap();
+    let want = load_fixture(&dir, "ann_pred").unwrap();
+    let out = eng.run_checked("ann32x4_relu", "predict", &[theta, x]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_close(&out[0], &want, 1e-4, "ann predict");
+}
+
+#[test]
+fn ann_train_step_matches_python_golden() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let dir = eng.manifest.dir.clone();
+    let theta = load_fixture(&dir, "ann_theta").unwrap();
+    let x = load_fixture(&dir, "ann_x").unwrap();
+    let y = load_fixture(&dir, "ann_y").unwrap();
+    let w = load_fixture(&dir, "ann_w").unwrap();
+    let p = theta.len();
+    let m = Tensor::zeros(&[p]);
+    let v = Tensor::zeros(&[p]);
+    let t = Tensor::scalar(1.0);
+    let lr = Tensor::scalar(1e-3);
+    let out = eng
+        .run_checked("ann32x4_relu", "train_step", &[theta, m, v, t, lr, x, y, w])
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    assert_close(&out[0], &load_fixture(&dir, "ann_theta2").unwrap(), 1e-5, "theta'");
+    assert_close(&out[1], &load_fixture(&dir, "ann_m2").unwrap(), 1e-5, "m'");
+    assert_close(&out[2], &load_fixture(&dir, "ann_v2").unwrap(), 1e-6, "v'");
+    assert_close(&out[3], &load_fixture(&dir, "ann_loss").unwrap().reshaped_scalar(), 1e-5, "loss");
+}
+
+#[test]
+fn gcn_predict_and_embed_match_python_golden() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let dir = eng.manifest.dir.clone();
+    let theta = load_fixture(&dir, "gcn_theta").unwrap();
+    let nodes = load_fixture(&dir, "gcn_nodes").unwrap();
+    let adj = load_fixture(&dir, "gcn_adj").unwrap();
+    let mask = load_fixture(&dir, "gcn_mask").unwrap();
+    let gfeat = load_fixture(&dir, "gcn_gfeat").unwrap();
+
+    let out = eng
+        .run_checked(
+            "gcn3",
+            "predict",
+            &[theta.clone(), nodes.clone(), adj.clone(), mask.clone(), gfeat],
+        )
+        .unwrap();
+    assert_close(&out[0], &load_fixture(&dir, "gcn_pred").unwrap(), 1e-3, "gcn predict");
+
+    let emb = eng.run_checked("gcn3", "embed", &[theta, nodes, adj, mask]).unwrap();
+    assert_close(&emb[0], &load_fixture(&dir, "gcn_emb").unwrap(), 1e-3, "gcn embed");
+}
+
+#[test]
+fn gcn_train_step_matches_python_golden() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let dir = eng.manifest.dir.clone();
+    let theta = load_fixture(&dir, "gcn_theta").unwrap();
+    let nodes = load_fixture(&dir, "gcn_nodes").unwrap();
+    let adj = load_fixture(&dir, "gcn_adj").unwrap();
+    let mask = load_fixture(&dir, "gcn_mask").unwrap();
+    let gfeat = load_fixture(&dir, "gcn_gfeat").unwrap();
+    let y = load_fixture(&dir, "gcn_y").unwrap();
+    let p = theta.len();
+    let w = Tensor::from_vec(&[32], vec![1.0; 32]).unwrap();
+    let out = eng
+        .run_checked(
+            "gcn3",
+            "train_step",
+            &[
+                theta,
+                Tensor::zeros(&[p]),
+                Tensor::zeros(&[p]),
+                Tensor::scalar(1.0),
+                Tensor::scalar(1e-3),
+                nodes,
+                adj,
+                mask,
+                gfeat,
+                y,
+                w,
+            ],
+        )
+        .unwrap();
+    assert_close(&out[0], &load_fixture(&dir, "gcn_theta2").unwrap(), 1e-4, "gcn theta'");
+    assert_close(&out[3], &load_fixture(&dir, "gcn_loss").unwrap().reshaped_scalar(), 1e-4, "gcn loss");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let dir = eng.manifest.dir.clone();
+    let theta = load_fixture(&dir, "ann_theta").unwrap();
+    let x = load_fixture(&dir, "ann_x").unwrap();
+    for _ in 0..3 {
+        eng.run_checked("ann32x4_relu", "predict", &[theta.clone(), x.clone()]).unwrap();
+    }
+    let st = eng.stats();
+    assert_eq!(st.compiles, 1, "must compile once, cache after");
+    assert_eq!(st.executions, 3);
+}
+
+#[test]
+fn run_checked_rejects_bad_shapes() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let bad = Tensor::zeros(&[3]);
+    let x = Tensor::zeros(&[32, 16]);
+    assert!(eng.run_checked("ann32x4_relu", "predict", &[bad, x]).is_err());
+    assert!(eng.run_checked("ann32x4_relu", "nope", &[]).is_err());
+    assert!(eng.run_checked("missing_variant", "predict", &[]).is_err());
+}
+
+/// Helper: fixtures store scalars as [1] arrays; train_step outputs them
+/// as rank-0.
+trait ReshapedScalar {
+    fn reshaped_scalar(self) -> Tensor;
+}
+impl ReshapedScalar for Tensor {
+    fn reshaped_scalar(self) -> Tensor {
+        Tensor::from_vec(&[], self.into_vec()).unwrap()
+    }
+}
