@@ -20,7 +20,9 @@ use anyhow::Result;
 
 use fso::backend::Enablement;
 use fso::coordinator::dse_driver::{axiline_svm_problem, DseDriver, SurrogateBundle};
-use fso::coordinator::{datagen, DatagenConfig, ModelMenu, PredictServer, TrainOptions, Trainer};
+use fso::coordinator::{
+    datagen, DatagenConfig, EvalService, ModelMenu, PredictServer, TrainOptions, Trainer,
+};
 use fso::data::Metric;
 use fso::dse::MotpeConfig;
 use fso::generators::Platform;
@@ -99,18 +101,31 @@ fn main() -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
 
+    // the same server reached through the EvalService's batched ANN path
+    let mut ann_service = EvalService::new(Enablement::Gf12, 7);
+    ann_service.attach_predict_client(server.client(), "ann32x4_relu", theta.clone());
+    let demo_rows: Vec<Vec<f64>> = {
+        let mut rng = Rng::new(99);
+        (0..64).map(|_| (0..feat).map(|_| rng.f64()).collect()).collect()
+    };
+    let ann_out = ann_service.predict_ann_batch(&demo_rows)?;
+    println!(
+        "      EvalService ANN path: {} rows in one coalesced request",
+        ann_out.len()
+    );
+
     // ---- 4. MOTPE DSE + ground truth --------------------------------
-    println!("[4/4] MOTPE DSE of Axiline-SVM, 200 iterations");
+    println!("[4/4] MOTPE DSE of Axiline-SVM, 200 iterations (batches of 16)");
     let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7)?;
-    let driver =
-        DseDriver { enablement: Enablement::Gf12, surrogate, flow_seed: cfg.seed };
+    let driver = DseDriver::new(Enablement::Gf12, surrogate, cfg.seed).with_workers(4);
     let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
     runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let problem = axiline_svm_problem(
         g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max),
         runtimes[runtimes.len() / 2],
     );
-    let outcome = driver.run(&problem, 200, 3, MotpeConfig::default())?;
+    let outcome = driver.run_batched(&problem, 200, 3, MotpeConfig::default(), 16)?;
+    println!("      eval service: {}", driver.stats());
     let feasible = outcome.points.iter().filter(|p| p.feasible).count();
     println!("      {feasible}/200 feasible points");
     let mut worst = 0.0f64;

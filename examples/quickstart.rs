@@ -1,6 +1,7 @@
 //! Quickstart: generate a PPA + system-metric dataset for one platform,
 //! train the two-stage model (ROI classifier + GBDT regressor), and
-//! predict an unseen configuration — the framework's minimal loop.
+//! score unseen configurations through the batched `EvalService` path —
+//! the framework's minimal loop.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -8,14 +9,16 @@ use anyhow::Result;
 
 use fso::backend::Enablement;
 use fso::coordinator::dse_driver::SurrogateBundle;
-use fso::coordinator::{datagen, DatagenConfig};
+use fso::coordinator::{datagen, DatagenConfig, EvalService};
 use fso::data::Metric;
 use fso::generators::Platform;
 use fso::metrics::mape_stats;
 
 fn main() -> Result<()> {
     // 1. Sample architectures + backend knobs and run the SP&R oracle +
-    //    system simulator over the cartesian product (paper §7.1).
+    //    system simulator over the cartesian product (paper §7.1). The
+    //    sweep fans out over the EvalService worker pool and memoizes
+    //    per-design work.
     let cfg = DatagenConfig::small(Platform::Axiline, Enablement::Gf12);
     println!("generating dataset ({} architectures)...", cfg.n_arch);
     let g = datagen::generate(&cfg)?;
@@ -24,12 +27,18 @@ fn main() -> Result<()> {
         g.dataset.len(),
         g.dataset.rows.iter().filter(|r| r.in_roi).count()
     );
+    println!("  datagen eval service: {}", g.stats);
 
-    // 2. Fit the two-stage surrogate (ROI classifier + per-metric GBDT).
+    // 2. Fit the two-stage surrogate (ROI classifier + per-metric GBDT)
+    //    and attach it to a service for batched scoring.
     let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7)?;
+    let service = EvalService::new(cfg.enablement, cfg.seed)
+        .with_surrogate(surrogate)
+        .with_workers(2);
 
     // 3. Evaluate on the held-out backend points (unseen-backend
-    //    protocol, paper Table 4).
+    //    protocol, paper Table 4) — one batched pass instead of
+    //    per-row predict_one calls.
     let eval: Vec<usize> = g
         .backend_split
         .test
@@ -37,14 +46,12 @@ fn main() -> Result<()> {
         .copied()
         .filter(|&i| g.dataset.rows[i].in_roi)
         .collect();
+    let feats: Vec<Vec<f64>> =
+        eval.iter().map(|&i| g.dataset.rows[i].features_vec()).collect();
+    let scored = service.predict_batch(&feats)?;
     for metric in Metric::ALL {
         let y: Vec<f64> = eval.iter().map(|&i| g.dataset.rows[i].target(metric)).collect();
-        let pred: Vec<f64> = eval
-            .iter()
-            .map(|&i| {
-                surrogate.regressors[&metric].predict_one(&g.dataset.rows[i].features_vec())
-            })
-            .collect();
+        let pred: Vec<f64> = scored.iter().map(|p| p.predicted[&metric]).collect();
         let stats = mape_stats(&y, &pred);
         println!(
             "{:8} muAPE {:5.2}%  MAPE {:5.2}%",
@@ -56,10 +63,13 @@ fn main() -> Result<()> {
 
     // 4. Predict one new configuration end to end.
     let row = &g.dataset.rows[0];
-    let (in_roi, pred) = surrogate.predict(&row.features_vec());
+    let one = service.predict_batch(&[row.features_vec()])?;
     println!(
-        "\nsample config -> roi={in_roi} predicted power {:.3} W (truth {:.3} W)",
-        pred[&Metric::Power], row.power_w
+        "\nsample config -> roi={} predicted power {:.3} W (truth {:.3} W)",
+        one[0].in_roi,
+        one[0].predicted[&Metric::Power],
+        row.power_w
     );
+    println!("surrogate service: {}", service.stats());
     Ok(())
 }

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use fso::backend::{BackendConfig, Enablement, SpnrFlow};
 use fso::coordinator::dse_driver::SurrogateBundle;
-use fso::coordinator::{datagen, DatagenConfig};
+use fso::coordinator::{datagen, DatagenConfig, EvalService};
 use fso::data::Metric;
 use fso::dse::{Motpe, MotpeConfig};
 use fso::generators::{ArchConfig, Lhg, ParamKind, ParamSpec, Platform};
@@ -143,6 +143,35 @@ fn main() {
         });
     }
 
+    // ---- eval service: parallel memoized ground-truth scoring ---------
+    // the ISSUE-1 acceptance row: a 4-worker sweep must beat the serial
+    // sweep by >= 2x, and the warm-cache row reports a nonzero oracle
+    // cache hit-rate in the printed stats line.
+    {
+        let p = Platform::Axiline;
+        let archs = datagen::sample_archs(p, 16, SamplerKind::Lhs, 11);
+        let backends = datagen::sample_backend(p, Enablement::Gf12, 8, 12);
+        let jobs: Vec<(ArchConfig, BackendConfig)> = archs
+            .iter()
+            .flat_map(|a| backends.iter().map(move |bk| (a.clone(), *bk)))
+            .collect();
+        for workers in [1usize, 4] {
+            b.run(
+                &format!("eval_service/ground_truth_{}pts_w{workers}", jobs.len()),
+                || {
+                    let svc = EvalService::new(Enablement::Gf12, 7).with_workers(workers);
+                    svc.evaluate_many(&jobs, None).unwrap()
+                },
+            );
+        }
+        let warm = EvalService::new(Enablement::Gf12, 7).with_workers(4);
+        b.run(
+            &format!("eval_service/ground_truth_{}pts_warm_cache", jobs.len()),
+            || warm.evaluate_many(&jobs, None).unwrap(),
+        );
+        println!("    eval_service stats: {}", warm.stats());
+    }
+
     // ---- datagen / train / DSE end-to-end rows (per table family) -----
     b.run("e2e/datagen_axiline_24x40 (tab3-5 input)", || {
         datagen::generate(&DatagenConfig::small(Platform::Axiline, Enablement::Gf12))
@@ -160,6 +189,16 @@ fn main() {
                 std::hint::black_box(s.predict(&r.features_vec()));
             }
         });
+        // same 960 rows through the service's batched surrogate path
+        let feats: Vec<Vec<f64>> =
+            g.dataset.rows.iter().map(|r| r.features_vec()).collect();
+        let svc = EvalService::new(Enablement::Gf12, 2023)
+            .with_surrogate(SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap())
+            .with_workers(4);
+        b.run("e2e/surrogate_predict_batched_x960 (EvalService)", || {
+            svc.predict_batch(&feats).unwrap()
+        });
+        println!("    surrogate batching: {}", svc.stats());
     }
 
     // ---- PJRT hot path -------------------------------------------------

@@ -1,17 +1,18 @@
 //! Dataset generation (paper §7.1): sample architectural configurations
 //! per platform strategy, sample backend configurations with LHS over
 //! the platform's (f_target, util) window (Fig. 6), run every
-//! (architecture x backend) point through the SP&R oracle + system
-//! simulator in parallel, and label ROI membership (Eq. 4).
+//! (architecture x backend) point through the `EvalService` — which
+//! memoizes the SP&R oracle + system simulator and fans the sweep out
+//! over the worker pool — and label ROI membership (Eq. 4).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::backend::{roi_epsilon, BackendConfig, Enablement, SpnrFlow};
+use crate::backend::{roi_epsilon, BackendConfig, Enablement};
 use crate::data::{Dataset, Row, Split};
 use crate::generators::{unified_features, ArchConfig, Lhg, Platform};
 use crate::sampling::{quantize, Sampler, SamplerKind};
-use crate::simulators::simulate;
-use crate::util::pool::{default_workers, par_map};
+
+use super::eval_service::{EvalService, EvalStats};
 
 #[derive(Debug, Clone)]
 pub struct DatagenConfig {
@@ -25,6 +26,9 @@ pub struct DatagenConfig {
     pub n_backend_test: usize,
     pub arch_sampler: SamplerKind,
     pub seed: u64,
+    /// Ground-truth fan-out width; 0 = one per available core. Never
+    /// changes the generated rows, only wall-clock.
+    pub workers: usize,
 }
 
 impl DatagenConfig {
@@ -41,6 +45,7 @@ impl DatagenConfig {
             n_backend_test: 10,
             arch_sampler: SamplerKind::Lhs,
             seed: 2023,
+            workers: 0,
         }
     }
 }
@@ -110,14 +115,26 @@ pub struct GeneratedData {
     /// Row split induced by the separately-sampled backend pools
     /// (unseen-backend protocol).
     pub backend_split: Split,
+    /// Evaluation-service counters for the run (cache hit rates).
+    pub stats: EvalStats,
 }
 
-/// Run the full datagen pipeline.
+/// Run the full datagen pipeline on a fresh service.
 pub fn generate(cfg: &DatagenConfig) -> Result<GeneratedData> {
+    let service =
+        EvalService::new(cfg.enablement, cfg.seed).with_workers(cfg.workers);
+    generate_with(&service, cfg)
+}
+
+/// Run the full datagen pipeline through an existing service (shares
+/// its oracle/aggregate caches with other phases, e.g. a DSE run).
+pub fn generate_with(service: &EvalService, cfg: &DatagenConfig) -> Result<GeneratedData> {
     let archs = sample_archs(cfg.platform, cfg.n_arch, cfg.arch_sampler, cfg.seed);
-    let backends_train = sample_backend(cfg.platform, cfg.enablement, cfg.n_backend_train, cfg.seed ^ 0xB1);
-    let backends_test = sample_backend(cfg.platform, cfg.enablement, cfg.n_backend_test, cfg.seed ^ 0xB2);
-    build_rows(cfg, archs, &backends_train, &backends_test)
+    let backends_train =
+        sample_backend(cfg.platform, cfg.enablement, cfg.n_backend_train, cfg.seed ^ 0xB1);
+    let backends_test =
+        sample_backend(cfg.platform, cfg.enablement, cfg.n_backend_test, cfg.seed ^ 0xB2);
+    build_rows_with(service, cfg, archs, &backends_train, &backends_test)
 }
 
 /// Core row construction over explicit arch/backend sets (experiments
@@ -128,17 +145,36 @@ pub fn build_rows(
     backends_train: &[BackendConfig],
     backends_test: &[BackendConfig],
 ) -> Result<GeneratedData> {
-    let flow = SpnrFlow::new(cfg.enablement, cfg.seed);
+    let service =
+        EvalService::new(cfg.enablement, cfg.seed).with_workers(cfg.workers);
+    build_rows_with(&service, cfg, archs, backends_train, backends_test)
+}
+
+/// Row construction through an explicit service.
+pub fn build_rows_with(
+    service: &EvalService,
+    cfg: &DatagenConfig,
+    archs: Vec<ArchConfig>,
+    backends_train: &[BackendConfig],
+    backends_test: &[BackendConfig],
+) -> Result<GeneratedData> {
+    ensure!(
+        service.enablement() == cfg.enablement && service.seed() == cfg.seed,
+        "eval service (enablement, seed) must match the datagen config"
+    );
     let eps = roi_epsilon(cfg.platform);
 
-    // precompute trees/aggregates once per arch
+    // precompute trees/aggregates once per arch (the LHG is part of the
+    // dataset; the aggregates feed the feature vectors) and prime the
+    // service's aggregate cache so the sweep never regenerates trees
     let prep: Vec<_> = archs
         .iter()
         .map(|a| {
             let tree = a.platform.generate(a)?;
             let agg = tree.aggregates();
             let lhg = Lhg::from_tree(&tree);
-            Ok((agg, lhg, a.id_hash()))
+            service.prime_aggregates(a, agg);
+            Ok((agg, lhg))
         })
         .collect::<Result<Vec<_>>>()?;
 
@@ -152,32 +188,39 @@ pub fn build_rows(
         }
     }
 
-    let rows: Vec<Row> = par_map(jobs.len(), default_workers(), |j| {
-        let (ai, bcfg, _, _) = jobs[j];
-        let arch = &archs[ai];
-        let (agg, _, design_id) = &prep[ai];
-        let fr = flow.run_on_aggregates(agg, *design_id, arch.platform.macro_heavy(), bcfg);
-        let sys = simulate(arch, &fr.backend, cfg.enablement).expect("simulate");
-        let feats = unified_features(
-            arch,
-            bcfg.f_target_ghz,
-            bcfg.util,
-            agg.comb_cells,
-            agg.macro_bits,
-        );
-        Row {
-            arch_idx: ai,
-            features: feats,
-            f_target_ghz: bcfg.f_target_ghz,
-            util: bcfg.util,
-            power_w: fr.backend.total_power_w(),
-            f_effective_ghz: fr.backend.f_effective_ghz,
-            area_mm2: fr.backend.chip_area_mm2,
-            energy_j: sys.energy_j,
-            runtime_s: sys.runtime_s,
-            in_roi: fr.backend.in_roi(bcfg.f_target_ghz, eps),
-        }
-    });
+    // the whole cartesian sweep goes through the service: memoized SP&R
+    // oracle + simulator, fanned out over the worker pool, order kept
+    let pairs: Vec<(ArchConfig, BackendConfig)> =
+        jobs.iter().map(|&(ai, b, _, _)| (archs[ai].clone(), b)).collect();
+    let evals = service.evaluate_many(&pairs, None)?;
+
+    let rows: Vec<Row> = jobs
+        .iter()
+        .zip(&evals)
+        .map(|(&(ai, bcfg, _, _), ev)| {
+            let arch = &archs[ai];
+            let (agg, _) = &prep[ai];
+            let feats = unified_features(
+                arch,
+                bcfg.f_target_ghz,
+                bcfg.util,
+                agg.comb_cells,
+                agg.macro_bits,
+            );
+            Row {
+                arch_idx: ai,
+                features: feats,
+                f_target_ghz: bcfg.f_target_ghz,
+                util: bcfg.util,
+                power_w: ev.flow.backend.total_power_w(),
+                f_effective_ghz: ev.flow.backend.f_effective_ghz,
+                area_mm2: ev.flow.backend.chip_area_mm2,
+                energy_j: ev.system.energy_j,
+                runtime_s: ev.system.runtime_s,
+                in_roi: ev.flow.backend.in_roi(bcfg.f_target_ghz, eps),
+            }
+        })
+        .collect();
 
     let mut split = Split::default();
     for (i, (_, _, is_train, _)) in jobs.iter().enumerate() {
@@ -188,7 +231,7 @@ pub fn build_rows(
         }
     }
 
-    let lhgs = prep.into_iter().map(|(_, l, _)| l).collect();
+    let lhgs = prep.into_iter().map(|(_, l)| l).collect();
     Ok(GeneratedData {
         dataset: Dataset {
             platform: cfg.platform,
@@ -198,6 +241,7 @@ pub fn build_rows(
             rows,
         },
         backend_split: split,
+        stats: service.stats(),
     })
 }
 
@@ -218,6 +262,12 @@ mod tests {
         g.backend_split.validate(g.dataset.len()).unwrap();
         assert_eq!(g.dataset.archs.len(), 4);
         assert_eq!(g.dataset.lhgs.len(), 4);
+        // every (arch, backend) point is distinct, so the oracle ran
+        // once per row; the per-arch aggregate cache must have hit
+        assert_eq!(g.stats.oracle_misses, 4 * 7);
+        assert_eq!(g.stats.oracle_hits, 0);
+        assert!(g.stats.agg_hits > 0);
+        assert!(g.stats.cache_hit_rate() > 0.0);
     }
 
     #[test]

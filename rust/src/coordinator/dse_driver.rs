@@ -1,21 +1,30 @@
 //! DSE driver (paper §8.4): MOTPE proposes (architecture, backend)
-//! knobs; trained two-stage models predict the five metrics; ROI +
+//! knobs in batches; the trained two-stage models predict the five
+//! metrics through the `EvalService`'s batched surrogate path; ROI +
 //! power/runtime constraints gate feasibility; the Pareto front of
 //! (energy, area) accumulates; the Eq. 3 cost picks the winners; and
-//! the ground-truth oracle (full flow + simulator) scores the top-k —
-//! the paper's "within 6-7% of post-SP&R" check.
+//! the ground-truth oracle (full flow + simulator) scores the top-k
+//! through the same service — memoized and fanned out over the worker
+//! pool — the paper's "within 6-7% of post-SP&R" check.
+//!
+//! Determinism contract: the MOTPE trajectory depends only on the seed
+//! and the batch size (`run_batched`'s `batch`), never on the worker
+//! count. `run` uses batch 1, which reproduces the historical serial
+//! ask/tell loop exactly.
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::backend::{roi_epsilon, BackendConfig, Enablement, SpnrFlow};
+use crate::backend::{BackendConfig, Enablement};
 use crate::data::{Dataset, Metric, Split};
 use crate::dse::{select_best, Candidate, CostSpec, Motpe, MotpeConfig};
-use crate::generators::{unified_features, ArchConfig, ParamKind, ParamSpec, Platform};
+use crate::generators::{ArchConfig, ParamKind, ParamSpec, Platform};
 use crate::models::{Gbdt, GbdtParams, RoiClassifier};
-use crate::simulators::{simulate, simulate_nondnn};
+use crate::util::pool::{default_workers, par_map};
 use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
+
+use super::eval_service::{EvalService, EvalStats};
 
 /// The trained predictor bundle the DSE consults (two-stage: ROI
 /// classifier + per-metric GBDT regressors — the fastest family at
@@ -26,7 +35,10 @@ pub struct SurrogateBundle {
 }
 
 impl SurrogateBundle {
-    /// Fit on a generated dataset's training rows.
+    /// Fit on a generated dataset's training rows. The five per-metric
+    /// regressors are independent, so they fit across the worker pool;
+    /// each keeps its historical seed, so the models are byte-identical
+    /// to a serial fit.
     pub fn fit(ds: &Dataset, split: &Split, seed: u64) -> Result<SurrogateBundle> {
         let x_all = ds.features(&split.train);
         let roi = ds.roi_labels(&split.train);
@@ -34,30 +46,63 @@ impl SurrogateBundle {
         let train_roi = ds.roi_subset(&split.train);
         anyhow::ensure!(!train_roi.is_empty(), "no ROI rows to fit on");
         let x = ds.features(&train_roi);
-        let mut regressors = BTreeMap::new();
-        for m in Metric::ALL {
-            // all five metrics are positive with wide dynamic range across
-            // the design space: fit in log space so small designs are not
-            // swamped by large ones (relative accuracy is what the DSE
-            // ground-truth check measures)
+        // all five metrics are positive with wide dynamic range across
+        // the design space: fit in log space so small designs are not
+        // swamped by large ones (relative accuracy is what the DSE
+        // ground-truth check measures)
+        let models: Vec<Gbdt> = par_map(Metric::ALL.len(), default_workers(), |k| {
+            let m = Metric::ALL[k];
             let y: Vec<f64> = ds
                 .targets(&train_roi, m)
                 .iter()
                 .map(|v| v.max(1e-30).ln())
                 .collect();
-            let model = Gbdt::fit(&x, &y, GbdtParams::default(), seed ^ m.name().len() as u64);
+            Gbdt::fit(&x, &y, GbdtParams::default(), seed ^ m.name().len() as u64)
+        });
+        let mut regressors = BTreeMap::new();
+        for (m, model) in Metric::ALL.into_iter().zip(models) {
             regressors.insert(m, model);
         }
         Ok(SurrogateBundle { classifier, regressors })
     }
 
-    pub fn predict(&self, feats: &[f64]) -> (bool, BTreeMap<Metric, f64>) {
-        let in_roi = self.classifier.prob(feats) >= 0.5;
-        let mut out = BTreeMap::new();
-        for (m, model) in &self.regressors {
-            out.insert(*m, model.predict_one(feats).exp());
+    /// Batched two-stage scoring — the single home of the 0.5 ROI
+    /// threshold and the log-space `.exp()` inverse. Row-parallel
+    /// classifier probabilities, one regressor pass per metric.
+    /// Parallelism never changes values (`par_map` preserves order).
+    pub fn predict_batch(
+        &self,
+        feats: &[Vec<f64>],
+        workers: usize,
+    ) -> Vec<(bool, BTreeMap<Metric, f64>)> {
+        let n = feats.len();
+        if n == 0 {
+            return Vec::new();
         }
-        (in_roi, out)
+        let probs: Vec<f64> = par_map(n, workers, |i| self.classifier.prob(&feats[i]));
+        let metric_preds: Vec<Vec<f64>> = par_map(Metric::ALL.len(), workers, |k| {
+            let m = Metric::ALL[k];
+            self.regressors[&m]
+                .predict(feats)
+                .into_iter()
+                .map(|v| v.exp())
+                .collect()
+        });
+        (0..n)
+            .map(|i| {
+                let mut out = BTreeMap::new();
+                for (k, m) in Metric::ALL.into_iter().enumerate() {
+                    out.insert(m, metric_preds[k][i]);
+                }
+                (probs[i] >= 0.5, out)
+            })
+            .collect()
+    }
+
+    pub fn predict(&self, feats: &[f64]) -> (bool, BTreeMap<Metric, f64>) {
+        self.predict_batch(&[feats.to_vec()], 1)
+            .pop()
+            .expect("one row in, one prediction out")
     }
 }
 
@@ -107,7 +152,7 @@ impl DseProblem {
 }
 
 /// One explored DSE point, predicted and (optionally) ground-truthed.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DsePoint {
     pub x: Vec<f64>,
     pub predicted: BTreeMap<Metric, f64>,
@@ -122,14 +167,54 @@ pub struct DseOutcome {
     pub ground_truth_errors: Vec<BTreeMap<Metric, f64>>,
 }
 
+impl DseOutcome {
+    /// Indices (into `points`) of the feasible predicted-(energy, area)
+    /// Pareto front — the determinism regression target.
+    pub fn pareto_front(&self) -> Vec<usize> {
+        let feasible: Vec<usize> =
+            (0..self.points.len()).filter(|&i| self.points[i].feasible).collect();
+        let objs: Vec<Vec<f64>> = feasible
+            .iter()
+            .map(|&i| {
+                vec![
+                    self.points[i].predicted[&Metric::Energy],
+                    self.points[i].predicted[&Metric::Area],
+                ]
+            })
+            .collect();
+        crate::dse::pareto_front(&objs)
+            .into_iter()
+            .map(|k| feasible[k])
+            .collect()
+    }
+}
+
+/// MOTPE + surrogate + oracle, glued together by the `EvalService`.
 pub struct DseDriver {
-    pub enablement: Enablement,
-    pub surrogate: SurrogateBundle,
-    pub flow_seed: u64,
+    pub service: EvalService,
 }
 
 impl DseDriver {
-    /// Run MOTPE for `iterations`, then ground-truth the top-k winners.
+    /// Build a driver whose service owns the surrogate and a flow
+    /// seeded with `flow_seed` (serial until `with_workers`).
+    pub fn new(enablement: Enablement, surrogate: SurrogateBundle, flow_seed: u64) -> DseDriver {
+        DseDriver {
+            service: EvalService::new(enablement, flow_seed).with_surrogate(surrogate),
+        }
+    }
+
+    /// Parallel ground-truth / surrogate fan-out (results unchanged).
+    pub fn with_workers(mut self, workers: usize) -> DseDriver {
+        self.service = self.service.with_workers(workers);
+        self
+    }
+
+    pub fn stats(&self) -> EvalStats {
+        self.service.stats()
+    }
+
+    /// Run MOTPE for `iterations` with the historical serial ask/tell
+    /// cadence (batch 1), then ground-truth the top-k winners.
     pub fn run(
         &self,
         problem: &DseProblem,
@@ -137,27 +222,46 @@ impl DseDriver {
         top_k: usize,
         motpe_cfg: MotpeConfig,
     ) -> Result<DseOutcome> {
+        self.run_batched(problem, iterations, top_k, motpe_cfg, 1)
+    }
+
+    /// Run MOTPE for `iterations`, requesting suggestions in batches of
+    /// `batch` and scoring each batch through the service's batched
+    /// surrogate path, then ground-truth the top-k winners through the
+    /// memoized parallel oracle.
+    pub fn run_batched(
+        &self,
+        problem: &DseProblem,
+        iterations: usize,
+        top_k: usize,
+        motpe_cfg: MotpeConfig,
+        batch: usize,
+    ) -> Result<DseOutcome> {
+        let batch = batch.max(1);
         let mut motpe = Motpe::new(problem.space(), motpe_cfg);
         let mut points = Vec::with_capacity(iterations);
 
-        for _ in 0..iterations {
-            let x = motpe.ask();
-            let (arch, bcfg) = problem.decode(&x);
-            let tree = arch.platform.generate(&arch)?;
-            let agg = tree.aggregates();
-            let feats = unified_features(
-                &arch,
-                bcfg.f_target_ghz,
-                bcfg.util,
-                agg.comb_cells,
-                agg.macro_bits,
-            );
-            let (in_roi, pred) = self.surrogate.predict(&feats);
-            let feasible = in_roi
-                && problem.cost.feasible(pred[&Metric::Power], pred[&Metric::Runtime]);
-            let objectives = vec![pred[&Metric::Energy], pred[&Metric::Area]];
-            motpe.tell(x.clone(), objectives, feasible);
-            points.push(DsePoint { x, predicted: pred, feasible });
+        let mut remaining = iterations;
+        while remaining > 0 {
+            let b = batch.min(remaining);
+            let xs = motpe.ask_batch(b);
+            let mut feats = Vec::with_capacity(b);
+            for x in &xs {
+                let (arch, bcfg) = problem.decode(x);
+                feats.push(self.service.features(&arch, bcfg)?.to_vec());
+            }
+            let scored = self.service.predict_batch(&feats)?;
+            for (x, sp) in xs.into_iter().zip(scored) {
+                let feasible = sp.in_roi
+                    && problem
+                        .cost
+                        .feasible(sp.predicted[&Metric::Power], sp.predicted[&Metric::Runtime]);
+                let objectives =
+                    vec![sp.predicted[&Metric::Energy], sp.predicted[&Metric::Area]];
+                motpe.tell(x.clone(), objectives, feasible);
+                points.push(DsePoint { x, predicted: sp.predicted, feasible });
+            }
+            remaining -= b;
         }
 
         // Eq. 3 selection over the feasible Pareto set. MOTPE converges
@@ -186,23 +290,14 @@ impl DseDriver {
             .map(|c| cand_to_point[c])
             .collect();
 
-        // ground truth: full SP&R oracle + simulator on the winners
-        let flow = SpnrFlow::new(self.enablement, self.flow_seed);
+        // ground truth: memoized SP&R oracle + simulator on the winners,
+        // fanned out across the service's worker pool
+        let gt_jobs: Vec<(ArchConfig, BackendConfig)> =
+            best.iter().map(|&bi| problem.decode(&points[bi].x)).collect();
+        let evals = self.service.evaluate_many(&gt_jobs, problem.workload.as_ref())?;
         let mut ground_truth_errors = Vec::new();
-        for &bi in &best {
-            let (arch, bcfg) = problem.decode(&points[bi].x);
-            let fr = flow.run(&arch, bcfg)?;
-            let sys = match problem.workload {
-                Some(wl) => simulate_nondnn(&arch, &fr.backend, self.enablement, &wl)?,
-                None => simulate(&arch, &fr.backend, self.enablement)?,
-            };
-            let truth: BTreeMap<Metric, f64> = BTreeMap::from([
-                (Metric::Power, fr.backend.total_power_w()),
-                (Metric::Performance, fr.backend.f_effective_ghz),
-                (Metric::Area, fr.backend.chip_area_mm2),
-                (Metric::Energy, sys.energy_j),
-                (Metric::Runtime, sys.runtime_s),
-            ]);
+        for (ev, &bi) in evals.iter().zip(&best) {
+            let truth = ev.metrics();
             let mut errs = BTreeMap::new();
             for m in Metric::ALL {
                 let p = points[bi].predicted[&m];

@@ -1,0 +1,587 @@
+//! EvalService — the single entry point for scoring an (architecture,
+//! backend) point (ROADMAP "scale the search" seam; paper §7.1/§8.4).
+//!
+//! Both expensive oracles — the SP&R flow and the system simulators —
+//! sit behind this service:
+//!
+//! - **Memoization**: ground-truth results are cached behind a seeded
+//!   content-hash key (platform + arch values + backend knobs +
+//!   enablement + seed + workload + trial), so repeated evaluations of
+//!   the same point (MOTPE revisits, datagen/DSE overlap, benchmark
+//!   sweeps) cost one oracle call. The workload-independent SP&R flow
+//!   result is additionally cached under a workload-free key, so the
+//!   expensive flow is shared across workloads (datagen's default
+//!   binding vs. a DSE problem's explicit one). Design aggregates are
+//!   cached per architecture the same way.
+//! - **Parallel fan-out**: `evaluate_many` spreads ground-truth
+//!   evaluations over `util::pool::par_map` with a configurable worker
+//!   count. Order is preserved and every evaluation is deterministic
+//!   given the service seed, so the worker count never changes results
+//!   — serial and parallel runs are byte-identical.
+//! - **Per-trial RNG streams**: `evaluate_trial` derives independent
+//!   flow-noise seeds per trial through `util::rng::Rng::fork`, stable
+//!   under call reordering. Trial 0 is the base seed (compatible with
+//!   the historical single-flow path).
+//! - **Batched surrogate scoring**: `predict_batch` scores candidate
+//!   batches metric-major through the two-stage `SurrogateBundle`
+//!   (one regressor pass per metric instead of per-row `predict_one`
+//!   calls), and `predict_ann_batch` routes feature rows through the
+//!   dynamic-batching `PredictServer` when a client is attached.
+//! - **Stats**: `ServerStats`-style counters (cache hit rates, batch
+//!   occupancy) surfaced via [`EvalService::stats`] for benches,
+//!   examples, and tests.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::backend::{BackendConfig, Enablement, FlowResult, SpnrFlow};
+use crate::coordinator::dse_driver::SurrogateBundle;
+use crate::coordinator::predict_server::PredictClient;
+use crate::data::Metric;
+use crate::generators::{unified_features, ArchConfig, DesignAggregates, FEAT_DIM};
+use crate::simulators::{simulate, simulate_nondnn, SystemMetrics};
+use crate::util::pool::par_map;
+use crate::util::rng::{hash_bytes, Rng};
+use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
+
+/// One fully ground-truthed point: SP&R flow output + system metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct Evaluation {
+    pub flow: FlowResult,
+    pub system: SystemMetrics,
+}
+
+impl Evaluation {
+    /// The five paper metrics as a map (ground-truth side of the DSE
+    /// "within 6-7% of post-SP&R" check).
+    pub fn metrics(&self) -> BTreeMap<Metric, f64> {
+        BTreeMap::from([
+            (Metric::Power, self.flow.backend.total_power_w()),
+            (Metric::Performance, self.flow.backend.f_effective_ghz),
+            (Metric::Area, self.flow.backend.chip_area_mm2),
+            (Metric::Energy, self.system.energy_j),
+            (Metric::Runtime, self.system.runtime_s),
+        ])
+    }
+}
+
+/// One surrogate-scored point (two-stage: ROI gate + per-metric value).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SurrogatePoint {
+    pub in_roi: bool,
+    pub predicted: BTreeMap<Metric, f64>,
+}
+
+/// Snapshot of the service counters (`ServerStats` analogue).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EvalStats {
+    /// Ground-truth oracle calls answered from the memo cache.
+    pub oracle_hits: usize,
+    /// Ground-truth oracle calls that ran the flow + simulator.
+    pub oracle_misses: usize,
+    /// Design-aggregate lookups answered from the per-arch cache.
+    pub agg_hits: usize,
+    /// Design-aggregate lookups that generated the module tree.
+    pub agg_misses: usize,
+    /// Feature rows scored through `predict_batch`.
+    pub surrogate_rows: usize,
+    /// `predict_batch` invocations (batching efficiency denominator).
+    pub surrogate_batches: usize,
+    /// Feature rows routed through the attached `PredictServer`.
+    pub ann_rows: usize,
+    /// `predict_ann_batch` invocations.
+    pub ann_batches: usize,
+}
+
+impl EvalStats {
+    /// Fraction of ground-truth oracle calls served from cache.
+    pub fn oracle_hit_rate(&self) -> f64 {
+        let total = self.oracle_hits + self.oracle_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.oracle_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of all cached-oracle lookups (flow results + design
+    /// aggregates) served from cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = self.oracle_hits + self.agg_hits;
+        let total = hits + self.oracle_misses + self.agg_misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Mean rows per surrogate batch (batching efficiency).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.surrogate_batches == 0 {
+            0.0
+        } else {
+            self.surrogate_rows as f64 / self.surrogate_batches as f64
+        }
+    }
+}
+
+impl std::fmt::Display for EvalStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "oracle {} calls ({:.1}% cached) | aggregates {} lookups ({:.1}% cached) | \
+             surrogate {} rows / {} batches ({:.1}/batch)",
+            self.oracle_hits + self.oracle_misses,
+            self.oracle_hit_rate() * 100.0,
+            self.agg_hits + self.agg_misses,
+            {
+                let t = self.agg_hits + self.agg_misses;
+                if t == 0 { 0.0 } else { self.agg_hits as f64 / t as f64 * 100.0 }
+            },
+            self.surrogate_rows,
+            self.surrogate_batches,
+            self.mean_batch_occupancy(),
+        )
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    oracle_hits: AtomicUsize,
+    oracle_misses: AtomicUsize,
+    agg_hits: AtomicUsize,
+    agg_misses: AtomicUsize,
+    surrogate_rows: AtomicUsize,
+    surrogate_batches: AtomicUsize,
+    ann_rows: AtomicUsize,
+    ann_batches: AtomicUsize,
+}
+
+/// Optional PJRT path: a `PredictServer` client plus the (variant,
+/// theta) identity its batches are keyed by.
+#[derive(Clone)]
+struct AnnClient {
+    client: PredictClient,
+    variant: String,
+    theta: Vec<f32>,
+}
+
+/// The parallel, cached evaluation service (see module docs).
+pub struct EvalService {
+    enablement: Enablement,
+    seed: u64,
+    flow: SpnrFlow,
+    workers: usize,
+    surrogate: Option<SurrogateBundle>,
+    ann: Mutex<Option<AnnClient>>,
+    oracle_cache: Mutex<HashMap<u64, Evaluation>>,
+    /// SP&R results keyed without the workload: the flow depends only
+    /// on (design, knobs, enablement, seed, trial), so datagen rows
+    /// (default workload) and DSE ground truth (explicit workload)
+    /// share one flow computation per point.
+    flow_cache: Mutex<HashMap<u64, FlowResult>>,
+    agg_cache: Mutex<HashMap<u64, DesignAggregates>>,
+    counters: Counters,
+}
+
+impl EvalService {
+    /// A serial service. Chain `with_workers` / `with_surrogate` to
+    /// configure; `seed` keys the SP&R flow's deterministic tool noise.
+    pub fn new(enablement: Enablement, seed: u64) -> EvalService {
+        EvalService {
+            enablement,
+            seed,
+            flow: SpnrFlow::new(enablement, seed),
+            workers: 1,
+            surrogate: None,
+            ann: Mutex::new(None),
+            oracle_cache: Mutex::new(HashMap::new()),
+            flow_cache: Mutex::new(HashMap::new()),
+            agg_cache: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        }
+    }
+
+    /// Worker threads for `evaluate_many` / `predict_batch` fan-out;
+    /// 0 = auto (`util::pool::default_workers`, the convention
+    /// `DatagenConfig` and `TrainOptions` share). Never changes
+    /// results — only wall-clock.
+    pub fn with_workers(mut self, workers: usize) -> EvalService {
+        self.workers = if workers == 0 {
+            crate::util::pool::default_workers()
+        } else {
+            workers
+        };
+        self
+    }
+
+    /// Attach the two-stage surrogate used by `predict_batch`.
+    pub fn with_surrogate(mut self, surrogate: SurrogateBundle) -> EvalService {
+        self.surrogate = Some(surrogate);
+        self
+    }
+
+    pub fn enablement(&self) -> Enablement {
+        self.enablement
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn surrogate(&self) -> Option<&SurrogateBundle> {
+        self.surrogate.as_ref()
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> EvalStats {
+        EvalStats {
+            oracle_hits: self.counters.oracle_hits.load(Ordering::Relaxed),
+            oracle_misses: self.counters.oracle_misses.load(Ordering::Relaxed),
+            agg_hits: self.counters.agg_hits.load(Ordering::Relaxed),
+            agg_misses: self.counters.agg_misses.load(Ordering::Relaxed),
+            surrogate_rows: self.counters.surrogate_rows.load(Ordering::Relaxed),
+            surrogate_batches: self.counters.surrogate_batches.load(Ordering::Relaxed),
+            ann_rows: self.counters.ann_rows.load(Ordering::Relaxed),
+            ann_batches: self.counters.ann_batches.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Content-hash key for the workload-independent SP&R flow result:
+    /// design identity, backend knobs, enablement, seed, trial stream.
+    fn flow_key(&self, arch: &ArchConfig, bcfg: BackendConfig, trial: u64) -> u64 {
+        let mut bytes = Vec::with_capacity(48);
+        bytes.extend_from_slice(&arch.id_hash().to_le_bytes());
+        bytes.extend_from_slice(&bcfg.f_target_ghz.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&bcfg.util.to_bits().to_le_bytes());
+        bytes.push(match self.enablement {
+            Enablement::Gf12 => 0,
+            Enablement::Ng45 => 1,
+        });
+        bytes.extend_from_slice(&self.seed.to_le_bytes());
+        bytes.extend_from_slice(&trial.to_le_bytes());
+        hash_bytes(&bytes)
+    }
+
+    /// Content-hash key for a full ground-truth evaluation: the flow
+    /// key extended with the workload the simulator ran.
+    fn oracle_key(&self, flow_key: u64, wl: Option<&NonDnnWorkload>) -> u64 {
+        let mut bytes = Vec::with_capacity(40);
+        bytes.extend_from_slice(&flow_key.to_le_bytes());
+        match wl {
+            None => bytes.push(0),
+            Some(w) => {
+                bytes.push(match w.algo {
+                    NonDnnAlgo::Svm => 1,
+                    NonDnnAlgo::LinearRegression => 2,
+                    NonDnnAlgo::LogisticRegression => 3,
+                    NonDnnAlgo::Recsys => 4,
+                    NonDnnAlgo::Backprop => 5,
+                });
+                bytes.extend_from_slice(&(w.features as u64).to_le_bytes());
+                bytes.extend_from_slice(&(w.samples as u64).to_le_bytes());
+                bytes.extend_from_slice(&(w.epochs as u64).to_le_bytes());
+            }
+        }
+        hash_bytes(&bytes)
+    }
+
+    /// Design aggregates for an architecture, cached by identity hash.
+    /// The miss path generates outside the lock (concurrent first
+    /// touches of the same arch may generate twice and one result is
+    /// discarded — generation is deterministic, so values never
+    /// differ); the double-checked insert keeps hit/miss totals
+    /// deterministic: exactly one miss per unique key.
+    pub fn aggregates(&self, arch: &ArchConfig) -> Result<DesignAggregates> {
+        let key = arch.id_hash();
+        if let Some(agg) = self.agg_cache.lock().unwrap().get(&key) {
+            self.counters.agg_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(*agg);
+        }
+        // generate outside the lock (first touches of distinct archs
+        // proceed in parallel), double-check on insert so exactly one
+        // miss is recorded per unique key
+        let tree = arch.platform.generate(arch)?;
+        let agg = tree.aggregates();
+        let mut cache = self.agg_cache.lock().unwrap();
+        if cache.contains_key(&key) {
+            self.counters.agg_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.agg_misses.fetch_add(1, Ordering::Relaxed);
+            cache.insert(key, agg);
+        }
+        Ok(agg)
+    }
+
+    /// Seed the aggregate cache with a value computed elsewhere
+    /// (datagen builds each arch's module tree for its LHG anyway —
+    /// priming avoids regenerating it on the first evaluation).
+    /// Counted as neither hit nor miss.
+    pub fn prime_aggregates(&self, arch: &ArchConfig, agg: DesignAggregates) {
+        self.agg_cache.lock().unwrap().entry(arch.id_hash()).or_insert(agg);
+    }
+
+    /// Unified Eq. 1/2 feature vector for an (arch, backend) point.
+    pub fn features(&self, arch: &ArchConfig, bcfg: BackendConfig) -> Result<[f64; FEAT_DIM]> {
+        let agg = self.aggregates(arch)?;
+        Ok(unified_features(
+            arch,
+            bcfg.f_target_ghz,
+            bcfg.util,
+            agg.comb_cells,
+            agg.macro_bits,
+        ))
+    }
+
+    /// Ground-truth one point (SP&R flow + system simulator), memoized.
+    /// `wl = None` uses the platform's default workload binding.
+    pub fn evaluate(
+        &self,
+        arch: &ArchConfig,
+        bcfg: BackendConfig,
+        wl: Option<&NonDnnWorkload>,
+    ) -> Result<Evaluation> {
+        self.evaluate_trial(arch, bcfg, wl, 0)
+    }
+
+    /// Ground-truth one point under an independent per-trial noise
+    /// stream. Trial 0 runs the base-seed flow; trial t > 0 forks a
+    /// deterministic seed via `Rng::fork(t)`, stable under reordering
+    /// of calls (repeated-trial studies of the oracle's tool noise).
+    pub fn evaluate_trial(
+        &self,
+        arch: &ArchConfig,
+        bcfg: BackendConfig,
+        wl: Option<&NonDnnWorkload>,
+        trial: u64,
+    ) -> Result<Evaluation> {
+        let flow_key = self.flow_key(arch, bcfg, trial);
+        let key = self.oracle_key(flow_key, wl);
+        if let Some(ev) = self.oracle_cache.lock().unwrap().get(&key) {
+            self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(*ev);
+        }
+        // the flow is workload-independent: reuse it across workloads
+        // (datagen's default binding vs. a DSE problem's explicit one)
+        let cached_flow = self.flow_cache.lock().unwrap().get(&flow_key).copied();
+        let fr = match cached_flow {
+            Some(f) => f,
+            None => {
+                let agg = self.aggregates(arch)?;
+                let f = if trial == 0 {
+                    self.flow.run_on_aggregates(
+                        &agg,
+                        arch.id_hash(),
+                        arch.platform.macro_heavy(),
+                        bcfg,
+                    )
+                } else {
+                    let trial_seed = Rng::new(self.seed).fork(trial).next_u64();
+                    let flow = SpnrFlow::new(self.enablement, trial_seed);
+                    flow.run_on_aggregates(
+                        &agg,
+                        arch.id_hash(),
+                        arch.platform.macro_heavy(),
+                        bcfg,
+                    )
+                };
+                self.flow_cache.lock().unwrap().insert(flow_key, f);
+                f
+            }
+        };
+        let system = match wl {
+            Some(w) => simulate_nondnn(arch, &fr.backend, self.enablement, w)?,
+            None => simulate(arch, &fr.backend, self.enablement)?,
+        };
+        let ev = Evaluation { flow: fr, system };
+        // double-check under the lock: when two workers race on the same
+        // fresh key, exactly one records the miss and inserts — totals
+        // stay deterministic (the recomputed value is identical anyway)
+        let mut cache = self.oracle_cache.lock().unwrap();
+        if cache.contains_key(&key) {
+            self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.oracle_misses.fetch_add(1, Ordering::Relaxed);
+            cache.insert(key, ev);
+        }
+        Ok(ev)
+    }
+
+    /// Ground-truth a batch of points across the worker pool. Output
+    /// order matches input order, and results are independent of the
+    /// worker count (each evaluation is deterministic given the seed).
+    pub fn evaluate_many(
+        &self,
+        jobs: &[(ArchConfig, BackendConfig)],
+        wl: Option<&NonDnnWorkload>,
+    ) -> Result<Vec<Evaluation>> {
+        let results: Vec<Result<Evaluation>> = par_map(jobs.len(), self.workers, |i| {
+            let (arch, bcfg) = &jobs[i];
+            self.evaluate(arch, *bcfg, wl)
+        });
+        results.into_iter().collect()
+    }
+
+    /// Score a batch of feature rows through the two-stage surrogate:
+    /// row-parallel ROI probabilities, then one batched regressor pass
+    /// per metric (value-identical to per-row `predict_one` + `exp`).
+    pub fn predict_batch(&self, feats: &[Vec<f64>]) -> Result<Vec<SurrogatePoint>> {
+        let bundle = self
+            .surrogate
+            .as_ref()
+            .context("EvalService has no surrogate attached (with_surrogate)")?;
+        let n = feats.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        self.counters.surrogate_rows.fetch_add(n, Ordering::Relaxed);
+        self.counters.surrogate_batches.fetch_add(1, Ordering::Relaxed);
+        Ok(bundle
+            .predict_batch(feats, self.workers)
+            .into_iter()
+            .map(|(in_roi, predicted)| SurrogatePoint { in_roi, predicted })
+            .collect())
+    }
+
+    /// Route ANN surrogate traffic through the dynamic-batching
+    /// `PredictServer` (one coalesced request per batch instead of
+    /// per-row calls). Requires `attach_predict_client`.
+    pub fn attach_predict_client(
+        &mut self,
+        client: PredictClient,
+        variant: &str,
+        theta: Vec<f32>,
+    ) {
+        *self.ann.lock().unwrap() =
+            Some(AnnClient { client, variant: variant.to_string(), theta });
+    }
+
+    /// Batched ANN prediction via the attached `PredictServer` client.
+    pub fn predict_ann_batch(&self, rows: &[Vec<f64>]) -> Result<Vec<f32>> {
+        let ann = self
+            .ann
+            .lock()
+            .unwrap()
+            .clone()
+            .context("no PredictServer client attached (attach_predict_client)")?;
+        let rows32: Vec<Vec<f32>> = rows
+            .iter()
+            .map(|r| r.iter().map(|&v| v as f32).collect())
+            .collect();
+        self.counters.ann_rows.fetch_add(rows.len(), Ordering::Relaxed);
+        self.counters.ann_batches.fetch_add(1, Ordering::Relaxed);
+        ann.client.predict(&ann.variant, &ann.theta, rows32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::Platform;
+
+    fn mid_arch(p: Platform) -> ArchConfig {
+        ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+        )
+    }
+
+    #[test]
+    fn evaluate_matches_direct_flow_plus_simulator() {
+        let arch = mid_arch(Platform::Axiline);
+        let bcfg = BackendConfig::new(0.8, 0.5);
+        let svc = EvalService::new(Enablement::Gf12, 7);
+        let ev = svc.evaluate(&arch, bcfg, None).unwrap();
+
+        let flow = SpnrFlow::new(Enablement::Gf12, 7);
+        let fr = flow.run(&arch, bcfg).unwrap();
+        let sys = simulate(&arch, &fr.backend, Enablement::Gf12).unwrap();
+        assert_eq!(ev.flow.backend, fr.backend);
+        assert_eq!(ev.flow.synth, fr.synth);
+        assert_eq!(ev.system, sys);
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_and_results_are_identical() {
+        let arch = mid_arch(Platform::Vta);
+        let bcfg = BackendConfig::new(1.0, 0.4);
+        let svc = EvalService::new(Enablement::Gf12, 1);
+        let a = svc.evaluate(&arch, bcfg, None).unwrap();
+        let b = svc.evaluate(&arch, bcfg, None).unwrap();
+        assert_eq!(a.flow.backend, b.flow.backend);
+        assert_eq!(a.system, b.system);
+        let s = svc.stats();
+        assert_eq!(s.oracle_misses, 1);
+        assert_eq!(s.oracle_hits, 1);
+        assert!(s.oracle_hit_rate() > 0.0);
+        assert!(s.cache_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn distinct_knobs_and_workloads_do_not_collide() {
+        let arch = mid_arch(Platform::Axiline);
+        let svc = EvalService::new(Enablement::Gf12, 1);
+        let a = svc.evaluate(&arch, BackendConfig::new(0.8, 0.5), None).unwrap();
+        let b = svc.evaluate(&arch, BackendConfig::new(0.9, 0.5), None).unwrap();
+        assert_ne!(a.flow.backend.f_effective_ghz, b.flow.backend.f_effective_ghz);
+        let wl = NonDnnWorkload::standard(NonDnnAlgo::Svm, 55);
+        let c = svc.evaluate(&arch, BackendConfig::new(0.8, 0.5), Some(&wl)).unwrap();
+        // same flow result, workload-specific system metrics allowed to
+        // differ; the cache must treat them as distinct entries
+        assert_eq!(svc.stats().oracle_misses, 3);
+        assert_eq!(a.flow.backend, c.flow.backend);
+    }
+
+    #[test]
+    fn evaluate_many_preserves_order_any_worker_count() {
+        let archs: Vec<ArchConfig> = [0.2, 0.5, 0.8]
+            .iter()
+            .map(|&u| {
+                ArchConfig::new(
+                    Platform::Axiline,
+                    Platform::Axiline
+                        .param_space()
+                        .iter()
+                        .map(|s| s.kind.from_unit(u))
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut jobs = Vec::new();
+        for a in &archs {
+            for f in [0.5, 0.9, 1.3] {
+                jobs.push((a.clone(), BackendConfig::new(f, 0.5)));
+            }
+        }
+        let serial = EvalService::new(Enablement::Gf12, 3);
+        let parallel = EvalService::new(Enablement::Gf12, 3).with_workers(4);
+        let a = serial.evaluate_many(&jobs, None).unwrap();
+        let b = parallel.evaluate_many(&jobs, None).unwrap();
+        assert_eq!(a.len(), jobs.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.flow.backend, y.flow.backend);
+            assert_eq!(x.system, y.system);
+        }
+    }
+
+    #[test]
+    fn trial_streams_are_deterministic_and_distinct() {
+        let arch = mid_arch(Platform::GeneSys);
+        let bcfg = BackendConfig::new(0.9, 0.4);
+        let s1 = EvalService::new(Enablement::Gf12, 11);
+        let s2 = EvalService::new(Enablement::Gf12, 11);
+        let a = s1.evaluate_trial(&arch, bcfg, None, 1).unwrap();
+        let b = s2.evaluate_trial(&arch, bcfg, None, 1).unwrap();
+        assert_eq!(a.flow.backend, b.flow.backend);
+        let base = s1.evaluate_trial(&arch, bcfg, None, 0).unwrap();
+        assert_ne!(a.flow.backend.f_effective_ghz, base.flow.backend.f_effective_ghz);
+    }
+}

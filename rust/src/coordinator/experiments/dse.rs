@@ -75,7 +75,8 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
     println!("[fig11] generating Axiline/NG45 training data ({} archs)...", cfg.n_arch);
     let g = datagen::generate(&cfg)?;
     let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, opts.seed)?;
-    let driver = DseDriver { enablement, surrogate, flow_seed: cfg.seed };
+    let driver = DseDriver::new(enablement, surrogate, cfg.seed)
+        .with_workers(crate::util::pool::default_workers());
 
     // constraints: generous power cap, runtime cap from the dataset's
     // median (forces the search away from the slow tail)
@@ -92,12 +93,14 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
 
     let iters = if opts.quick { 120 } else { 400 };
     println!("[fig11] MOTPE x {iters} over (dimension, num_cycles, f_target, util)");
-    let outcome = driver.run(
+    let outcome = driver.run_batched(
         &problem,
         iters,
         3,
         MotpeConfig { seed: opts.seed, ..Default::default() },
+        16,
     )?;
+    println!("[fig11] eval service: {}", driver.stats());
     let worst = report(opts, "fig11", &outcome)?;
     println!(
         "paper claim: top-3 within 7% of post-SP&R  |  measured worst: {:.1}%",
@@ -121,7 +124,8 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
     println!("[fig12] generating VTA/GF12 training data ({} archs)...", cfg.n_arch);
     let g = datagen::generate(&cfg)?;
     let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, opts.seed)?;
-    let driver = DseDriver { enablement, surrogate, flow_seed: cfg.seed };
+    let driver = DseDriver::new(enablement, surrogate, cfg.seed)
+        .with_workers(crate::util::pool::default_workers());
 
     let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
     runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -141,12 +145,14 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
 
     let iters = if opts.quick { 100 } else { 300 };
     println!("[fig12] MOTPE x {iters} over (f_target, util)");
-    let outcome = driver.run(
+    let outcome = driver.run_batched(
         &problem,
         iters,
         3,
         MotpeConfig { seed: opts.seed, ..Default::default() },
+        16,
     )?;
+    println!("[fig12] eval service: {}", driver.stats());
     let worst = report(opts, "fig12", &outcome)?;
     println!(
         "paper claim: top-3 within 6% of post-SP&R  |  measured worst: {:.1}%",

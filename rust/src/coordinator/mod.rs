@@ -1,14 +1,17 @@
 //! L3 coordinator: dataset generation, model-training orchestration,
-//! the dynamic-batching prediction server, the MOTPE DSE driver, and
-//! the per-table/figure experiment drivers (DESIGN.md §5).
+//! the parallel memoizing evaluation service, the dynamic-batching
+//! prediction server, the MOTPE DSE driver, and the per-table/figure
+//! experiment drivers (DESIGN.md §5).
 
 pub mod datagen;
 pub mod dse_driver;
+pub mod eval_service;
 pub mod experiments;
 pub mod predict_server;
 pub mod trainer;
 
-pub use datagen::{generate, DatagenConfig, GeneratedData};
+pub use datagen::{generate, generate_with, DatagenConfig, GeneratedData};
 pub use dse_driver::{DseDriver, DseProblem, SurrogateBundle};
+pub use eval_service::{EvalService, EvalStats, Evaluation, SurrogatePoint};
 pub use predict_server::{PredictClient, PredictServer, ServerStats};
 pub use trainer::{EvalReport, ModelMenu, TrainOptions, Trainer};

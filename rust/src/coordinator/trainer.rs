@@ -50,6 +50,12 @@ pub struct TrainOptions {
     pub ann_variant: String,
     pub gcn_variant: String,
     pub seed: u64,
+    /// Parallelism switch for the tree-family tuners: any value > 1
+    /// (or 0 = auto, when more than one core is available) runs the
+    /// GBDT and RF searches concurrently; 1 forces the serial order.
+    /// Results are seed-determined and identical either way — only
+    /// wall-clock changes.
+    pub workers: usize,
 }
 
 impl Default for TrainOptions {
@@ -68,6 +74,17 @@ impl Default for TrainOptions {
             ann_variant: "ann32x4_relu".to_string(),
             gcn_variant: "gcn3".to_string(),
             seed: 7,
+            workers: 0,
+        }
+    }
+}
+
+impl TrainOptions {
+    fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::util::pool::default_workers()
+        } else {
+            self.workers
         }
     }
 }
@@ -152,8 +169,33 @@ impl Trainer {
         let mut models = BTreeMap::new();
         let mut bases: Vec<BasePredictions> = Vec::new();
 
-        if opts.menu.gbdt {
-            let tuned = tune_gbdt(&x_train, &y_train, &x_val, &y_val, opts.search);
+        // the GBDT and RF tuners are independent seeded searches: run
+        // them concurrently on the shared pool (same EvalService
+        // discipline — parallelism never changes seeded results)
+        let (tuned_gbdt, tuned_rf) =
+            if opts.menu.gbdt && opts.menu.rf && opts.effective_workers() > 1 {
+                std::thread::scope(|scope| {
+                    let g = scope
+                        .spawn(|| tune_gbdt(&x_train, &y_train, &x_val, &y_val, opts.search));
+                    let r = scope
+                        .spawn(|| tune_rf(&x_train, &y_train, &x_val, &y_val, opts.search));
+                    (
+                        Some(g.join().expect("gbdt tuner panicked")),
+                        Some(r.join().expect("rf tuner panicked")),
+                    )
+                })
+            } else {
+                (
+                    opts.menu
+                        .gbdt
+                        .then(|| tune_gbdt(&x_train, &y_train, &x_val, &y_val, opts.search)),
+                    opts.menu
+                        .rf
+                        .then(|| tune_rf(&x_train, &y_train, &x_val, &y_val, opts.search)),
+                )
+            };
+
+        if let Some(tuned) = tuned_gbdt {
             let pred = tuned.model.predict(&x_eval);
             models.insert("GBDT".to_string(), mape_stats(&y_eval, &pred));
             bases.push(BasePredictions {
@@ -162,8 +204,7 @@ impl Trainer {
                 test: pred,
             });
         }
-        if opts.menu.rf {
-            let tuned = tune_rf(&x_train, &y_train, &x_val, &y_val, opts.search);
+        if let Some(tuned) = tuned_rf {
             let pred = tuned.model.predict(&x_eval);
             models.insert("RF".to_string(), mape_stats(&y_eval, &pred));
             bases.push(BasePredictions {

@@ -200,6 +200,15 @@ impl Motpe {
         best.unwrap().1
     }
 
+    /// Propose `n` configurations without intermediate observations
+    /// (synchronous batched DSE: the caller scores the whole batch
+    /// through the evaluation service, then `tell`s every result).
+    /// `ask_batch(1)` is exactly one `ask`, so batch size 1 reproduces
+    /// the serial ask/tell trajectory.
+    pub fn ask_batch(&mut self, n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| self.ask()).collect()
+    }
+
     /// Current feasible Pareto front as (trial index, objectives).
     pub fn pareto_trials(&self) -> Vec<usize> {
         let feasible: Vec<usize> = (0..self.trials.len())
@@ -311,6 +320,15 @@ mod tests {
         let tail = &m.trials[90..];
         let hits = tail.iter().filter(|t| t.x[1] == 8.0).count();
         assert!(hits > tail.len() / 2, "{hits}/{}", tail.len());
+    }
+
+    #[test]
+    fn ask_batch_matches_sequential_asks() {
+        let mut a = Motpe::new(space2d(), MotpeConfig { seed: 9, ..Default::default() });
+        let mut b = Motpe::new(space2d(), MotpeConfig { seed: 9, ..Default::default() });
+        let batch = a.ask_batch(5);
+        let singles: Vec<Vec<f64>> = (0..5).map(|_| b.ask()).collect();
+        assert_eq!(batch, singles);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Determinism regression tests (ISSUE 1): at a fixed seed the whole
+//! stack must be bit-reproducible, and the `EvalService`'s parallelism
+//! must never change results — serial and parallel runs of datagen and
+//! DSE produce byte-identical rows / Pareto fronts.
+
+use fso::backend::{BackendConfig, Enablement, SpnrFlow};
+use fso::coordinator::dse_driver::{axiline_svm_problem, DseDriver, DseOutcome, SurrogateBundle};
+use fso::coordinator::{datagen, DatagenConfig, EvalService, GeneratedData};
+use fso::dse::MotpeConfig;
+use fso::generators::{ArchConfig, Platform};
+
+fn mid_arch(p: Platform) -> ArchConfig {
+    ArchConfig::new(
+        p,
+        p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+    )
+}
+
+#[test]
+fn spnr_flow_ppa_identical_across_instances() {
+    for p in Platform::ALL {
+        let arch = mid_arch(p);
+        for cfg in [BackendConfig::new(0.6, 0.35), BackendConfig::new(1.1, 0.5)] {
+            let a = SpnrFlow::new(Enablement::Gf12, 42).run(&arch, cfg).unwrap();
+            let b = SpnrFlow::new(Enablement::Gf12, 42).run(&arch, cfg).unwrap();
+            assert_eq!(a.backend, b.backend, "{p}: P&R PPA must be seed-determined");
+            assert_eq!(a.synth, b.synth, "{p}: synthesis must be seed-determined");
+        }
+    }
+}
+
+#[test]
+fn eval_service_matches_bare_flow_and_is_worker_invariant() {
+    let arch = mid_arch(Platform::Vta);
+    let cfg = BackendConfig::new(0.9, 0.45);
+    let bare = SpnrFlow::new(Enablement::Gf12, 5).run(&arch, cfg).unwrap();
+    for workers in [1, 4] {
+        let svc = EvalService::new(Enablement::Gf12, 5).with_workers(workers);
+        let ev = svc.evaluate(&arch, cfg, None).unwrap();
+        assert_eq!(ev.flow.backend, bare.backend);
+    }
+}
+
+fn small_cfg(workers: usize) -> DatagenConfig {
+    DatagenConfig {
+        n_arch: 4,
+        n_backend_train: 6,
+        n_backend_test: 2,
+        workers,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    }
+}
+
+#[test]
+fn datagen_rows_identical_serial_vs_parallel() {
+    let serial = datagen::generate(&small_cfg(1)).unwrap();
+    let parallel = datagen::generate(&small_cfg(4)).unwrap();
+    assert_eq!(serial.dataset.rows, parallel.dataset.rows);
+    assert_eq!(serial.backend_split.train, parallel.backend_split.train);
+    assert_eq!(serial.backend_split.test, parallel.backend_split.test);
+    // and repeat runs at the same seed reproduce exactly
+    let again = datagen::generate(&small_cfg(4)).unwrap();
+    assert_eq!(parallel.dataset.rows, again.dataset.rows);
+}
+
+fn run_dse(g: &GeneratedData, workers: usize, batch: usize) -> DseOutcome {
+    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 1).unwrap();
+    let driver = DseDriver::new(Enablement::Gf12, surrogate, 2023).with_workers(workers);
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let problem = axiline_svm_problem(
+        g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max) * 2.0,
+        runtimes[runtimes.len() * 3 / 4],
+    );
+    driver
+        .run_batched(
+            &problem,
+            48,
+            2,
+            MotpeConfig { n_startup: 16, seed: 3, ..Default::default() },
+            batch,
+        )
+        .unwrap()
+}
+
+#[test]
+fn dse_pareto_front_identical_serial_vs_parallel() {
+    let mut cfg = DatagenConfig::small(Platform::Axiline, Enablement::Gf12);
+    cfg.n_arch = 8;
+    cfg.n_backend_train = 12;
+    cfg.n_backend_test = 4;
+    let g = datagen::generate(&cfg).unwrap();
+
+    let serial = run_dse(&g, 1, 8);
+    let parallel = run_dse(&g, 4, 8);
+
+    // byte-identical trajectory, winners, ground truth, and front
+    assert_eq!(serial.points, parallel.points);
+    assert_eq!(serial.best, parallel.best);
+    assert_eq!(serial.ground_truth_errors, parallel.ground_truth_errors);
+    assert_eq!(serial.pareto_front(), parallel.pareto_front());
+    // the front is exactly reproducible across repeat runs too
+    let again = run_dse(&g, 4, 8);
+    assert_eq!(parallel.pareto_front(), again.pareto_front());
+}
+
+#[test]
+fn surrogate_fit_is_deterministic() {
+    let cfg = DatagenConfig {
+        n_arch: 8,
+        n_backend_train: 12,
+        n_backend_test: 4,
+        ..DatagenConfig::small(Platform::Vta, Enablement::Gf12)
+    };
+    let g = datagen::generate(&cfg).unwrap();
+    let a = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap();
+    let b = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap();
+    for row in &g.dataset.rows {
+        let (ra, pa) = a.predict(&row.features_vec());
+        let (rb, pb) = b.predict(&row.features_vec());
+        assert_eq!(ra, rb);
+        assert_eq!(pa, pb);
+    }
+}
+
+#[test]
+fn trial_streams_reproducible_and_independent() {
+    let arch = mid_arch(Platform::GeneSys);
+    let cfg = BackendConfig::new(0.8, 0.4);
+    let s1 = EvalService::new(Enablement::Gf12, 99);
+    let s2 = EvalService::new(Enablement::Gf12, 99);
+    for trial in 0..3u64 {
+        let a = s1.evaluate_trial(&arch, cfg, None, trial).unwrap();
+        let b = s2.evaluate_trial(&arch, cfg, None, trial).unwrap();
+        assert_eq!(a.flow.backend, b.flow.backend, "trial {trial} must replay");
+    }
+    let t0 = s1.evaluate_trial(&arch, cfg, None, 0).unwrap();
+    let t1 = s1.evaluate_trial(&arch, cfg, None, 1).unwrap();
+    assert_ne!(
+        t0.flow.backend.f_effective_ghz, t1.flow.backend.f_effective_ghz,
+        "distinct trials must draw independent tool noise"
+    );
+}

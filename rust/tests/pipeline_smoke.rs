@@ -54,11 +54,7 @@ fn surrogate_bundle_predicts_all_metrics() {
 fn dse_end_to_end_small() {
     let g = small_dataset(Platform::Axiline);
     let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 1).unwrap();
-    let driver = DseDriver {
-        enablement: Enablement::Gf12,
-        surrogate,
-        flow_seed: 2023,
-    };
+    let driver = DseDriver::new(Enablement::Gf12, surrogate, 2023);
     let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
     runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let problem = axiline_svm_problem(

@@ -1,0 +1,125 @@
+//! Property-based invariants for the evaluation-service PR (ISSUE 1),
+//! via the in-repo mini property harness (`util::prop`): Pareto
+//! non-domination, sampler output ranges/dimensionality, `par_map`
+//! order preservation, and eval-service cache consistency.
+
+use fso::backend::{BackendConfig, Enablement};
+use fso::coordinator::EvalService;
+use fso::dse::{dominates, nondominated_rank, pareto_front};
+use fso::generators::{ArchConfig, Platform};
+use fso::sampling::{Sampler, SamplerKind};
+use fso::util::pool::par_map;
+use fso::util::prop::check;
+
+#[test]
+fn prop_pareto_front_nondominated_and_consistent_with_rank0() {
+    check(200, 0xFA57, |rng| {
+        let n = 1 + rng.below(60);
+        let dims = 2 + rng.below(3);
+        // mix continuous values with a coarse grid so exact ties and
+        // duplicated points are exercised too
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                (0..dims)
+                    .map(|_| {
+                        if rng.bool(0.3) {
+                            rng.below(4) as f64
+                        } else {
+                            rng.range(0.0, 4.0)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty(), "a non-empty set always has a front");
+        // no front member dominates another, and nothing dominates a member
+        for &i in &front {
+            for (j, p) in pts.iter().enumerate() {
+                if j != i {
+                    assert!(!dominates(p, &pts[i]), "front member {i} dominated by {j}");
+                }
+            }
+        }
+        // rank 0 of the non-dominated sort is exactly the front
+        let ranks = nondominated_rank(&pts);
+        let rank0: Vec<usize> = (0..n).filter(|&i| ranks[i] == 0).collect();
+        assert_eq!(front, rank0, "pareto_front and nondominated_rank disagree");
+    });
+}
+
+#[test]
+fn prop_sampler_outputs_unit_interval_with_correct_dimensionality() {
+    check(120, 0x5A11, |rng| {
+        let dim = 1 + rng.below(10);
+        let n = 1 + rng.below(48);
+        let kind = SamplerKind::ALL[rng.below(3)];
+        let mut s = Sampler::new(kind, dim, rng.next_u64());
+        let pts = s.sample(n);
+        assert_eq!(pts.len(), n, "{kind:?}: wrong point count");
+        for p in &pts {
+            assert_eq!(p.len(), dim, "{kind:?}: wrong dimensionality");
+            for &x in p {
+                assert!((0.0..1.0).contains(&x), "{kind:?}: {x} outside [0,1)");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_par_map_preserves_order_for_any_worker_count() {
+    check(150, 0x9A9, |rng| {
+        let n = rng.below(200);
+        let workers = 1 + rng.below(8);
+        let k = rng.next_u64();
+        let out = par_map(n, workers, |i| i as u64 * 31 + k);
+        let expect: Vec<u64> = (0..n).map(|i| i as u64 * 31 + k).collect();
+        assert_eq!(out, expect);
+    });
+}
+
+#[test]
+fn prop_eval_service_cache_is_transparent() {
+    check(24, 0xCAC4E, |rng| {
+        let p = Platform::ALL[rng.below(4)];
+        let arch = ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(rng.f64())).collect(),
+        );
+        let bcfg = BackendConfig::new(rng.range(0.3, 1.8), rng.range(0.25, 0.7));
+        let svc = EvalService::new(Enablement::Gf12, rng.next_u64());
+        let first = svc.evaluate(&arch, bcfg, None).unwrap();
+        let second = svc.evaluate(&arch, bcfg, None).unwrap();
+        assert_eq!(first.flow.backend, second.flow.backend);
+        assert_eq!(first.system, second.system);
+        let stats = svc.stats();
+        assert_eq!(stats.oracle_misses, 1, "cache missed twice");
+        assert_eq!(stats.oracle_hits, 1, "repeat not served from cache");
+    });
+}
+
+#[test]
+fn prop_evaluate_many_equals_pointwise_evaluate() {
+    check(16, 0xEBA1, |rng| {
+        let p = Platform::Axiline;
+        let jobs: Vec<(ArchConfig, BackendConfig)> = (0..1 + rng.below(8))
+            .map(|_| {
+                let arch = ArchConfig::new(
+                    p,
+                    p.param_space().iter().map(|s| s.kind.from_unit(rng.f64())).collect(),
+                );
+                (arch, BackendConfig::new(rng.range(0.4, 2.0), rng.range(0.4, 0.85)))
+            })
+            .collect();
+        let seed = rng.next_u64();
+        let pooled = EvalService::new(Enablement::Gf12, seed).with_workers(4);
+        let solo = EvalService::new(Enablement::Gf12, seed);
+        let batch = pooled.evaluate_many(&jobs, None).unwrap();
+        assert_eq!(batch.len(), jobs.len());
+        for ((arch, bcfg), ev) in jobs.iter().zip(&batch) {
+            let one = solo.evaluate(arch, *bcfg, None).unwrap();
+            assert_eq!(one.flow.backend, ev.flow.backend);
+            assert_eq!(one.system, ev.system);
+        }
+    });
+}

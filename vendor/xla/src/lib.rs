@@ -1,0 +1,220 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The build environment carries no XLA/PJRT native libraries, so this
+//! workspace vendors the API surface the framework uses:
+//!
+//! - host-side `Literal` construction/reshaping/readback **works** (it
+//!   is plain Vec<f32> bookkeeping), so `Tensor` conversion round-trips
+//!   and unit tests of the host side pass;
+//! - device-side entry points (`PjRtClient::cpu`, `compile`, `execute`,
+//!   `.npy` fixture loading) return a descriptive `Error`. Everything
+//!   PJRT-dependent in the framework already gates on the presence of
+//!   built artifacts and skips cleanly when they are absent.
+//!
+//! Swap this path dependency for the real `xla` crate (plus its native
+//! library closure) to run the AOT ANN/GCN artifacts.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries the failed operation's name.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: the XLA/PJRT runtime is not available in this offline build \
+         (vendor/xla is a stub; link the real xla crate to run AOT artifacts)"
+    )))
+}
+
+/// Host-side array shape (dims only — f32 everywhere in this stack).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Conversion out of a literal's f32 storage.
+pub trait NativeFromF32: Sized {
+    fn native_from_f32(v: f32) -> Self;
+}
+
+impl NativeFromF32 for f32 {
+    fn native_from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// Host-side literal: flat f32 storage + dims. Construction, reshape,
+/// and readback are real; tuple decomposition only exists on device
+/// results, so it errors here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let want = if dims.is_empty() { 1 } else { n };
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeFromF32>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::native_from_f32(v)).collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Raw-bytes readers (`.npy` fixtures) — device-independent in the real
+/// crate, but unimplemented in the stub.
+pub trait FromRawBytes: Sized {
+    type Context;
+    fn read_npy<P: AsRef<Path>>(path: P, ctx: &Self::Context) -> Result<Self>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+    fn read_npy<P: AsRef<Path>>(path: P, _ctx: &()) -> Result<Literal> {
+        unavailable(&format!("Literal::read_npy({})", path.as_ref().display()))
+    }
+}
+
+/// Parsed HLO module (stub: never constructed).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        ))
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle returned by `execute` (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Loaded executable (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub: `cpu()` reports the missing runtime).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_vec1_reshape_readback() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        let back: Vec<f32> = r.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_reshape_allowed() {
+        let lit = Literal::vec1(&[7.0]);
+        let s = lit.reshape(&[]).unwrap();
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_count() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn device_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        let e = HloModuleProto::from_text_file("x.hlo").unwrap_err();
+        assert!(format!("{e}").contains("offline"));
+    }
+}
