@@ -4,13 +4,20 @@
 //! objective alpha*E + beta*A with alpha=1, beta=0.001, then the top-3
 //! winners ground-truthed against the full SP&R oracle.
 //!
-//! Run: `cargo run --release --example dse_axiline_svm [-- --quick]`
+//! Run: `cargo run --release --example dse_axiline_svm [-- --quick] [-- --cache-dir DIR]`
+//! With `--cache-dir`, the SP&R oracle results persist between runs —
+//! a second invocation warm-starts from disk and reports the hits.
 
 use fso::coordinator::experiments::{dse, ExpOptions};
+use fso::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let opts = ExpOptions { quick, ..Default::default() };
+    let args = Args::from_env();
+    let opts = ExpOptions {
+        quick: args.flag("quick"),
+        cache_dir: args.path("cache-dir"),
+        ..Default::default()
+    };
     opts.ensure_out_dir()?;
     dse::fig11_axiline_svm(&opts)
 }

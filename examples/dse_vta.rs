@@ -2,13 +2,20 @@
 //! VTA design on GF12 with alpha=beta=1; top-3 winners checked against
 //! post-SP&R ground truth.
 //!
-//! Run: `cargo run --release --example dse_vta [-- --quick]`
+//! Run: `cargo run --release --example dse_vta [-- --quick] [-- --cache-dir DIR]`
+//! With `--cache-dir`, the SP&R oracle results persist between runs —
+//! a second invocation warm-starts from disk and reports the hits.
 
 use fso::coordinator::experiments::{dse, ExpOptions};
+use fso::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let opts = ExpOptions { quick, ..Default::default() };
+    let args = Args::from_env();
+    let opts = ExpOptions {
+        quick: args.flag("quick"),
+        cache_dir: args.path("cache-dir"),
+        ..Default::default()
+    };
     opts.ensure_out_dir()?;
     dse::fig12_vta(&opts)
 }

@@ -3,25 +3,43 @@
 //! score unseen configurations through the batched `EvalService` path —
 //! the framework's minimal loop.
 //!
-//! Run: `cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart [-- --cache-dir DIR]`
+//! With `--cache-dir`, the SP&R oracle results persist: a second run
+//! warm-starts from disk (watch the "persistent … disk hits" stats).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use fso::backend::Enablement;
 use fso::coordinator::dse_driver::SurrogateBundle;
-use fso::coordinator::{datagen, DatagenConfig, EvalService};
+use fso::coordinator::{datagen, CacheStore, DatagenConfig, EvalService};
 use fso::data::Metric;
 use fso::generators::Platform;
 use fso::metrics::mape_stats;
+use fso::util::cli::Args;
 
 fn main() -> Result<()> {
+    let args = Args::from_env();
     // 1. Sample architectures + backend knobs and run the SP&R oracle +
     //    system simulator over the cartesian product (paper §7.1). The
     //    sweep fans out over the EvalService worker pool and memoizes
-    //    per-design work.
+    //    per-design work; an optional persistent store carries the
+    //    oracle cache across runs.
     let cfg = DatagenConfig::small(Platform::Axiline, Enablement::Gf12);
     println!("generating dataset ({} architectures)...", cfg.n_arch);
-    let g = datagen::generate(&cfg)?;
+    let store = match args.path("cache-dir") {
+        Some(dir) => Some(Arc::new(CacheStore::open(dir)?)),
+        None => None,
+    };
+    let oracle = EvalService::new(cfg.enablement, cfg.seed)
+        .with_workers(cfg.workers)
+        .with_cache_store_opt(store.clone());
+    let g = datagen::generate_with(&oracle, &cfg)?;
+    if let Some(store) = &store {
+        store.flush()?;
+        println!("  cache store: {}", store.stats());
+    }
     println!(
         "  {} rows, {} in ROI",
         g.dataset.len(),

@@ -170,6 +170,55 @@ fn main() {
             || warm.evaluate_many(&jobs, None).unwrap(),
         );
         println!("    eval_service stats: {}", warm.stats());
+
+        // ---- persistent cache store: cold vs warm start (ISSUE 2) ----
+        // cold: empty dir, full oracle sweep + flush; warm: reopen the
+        // flushed store with a fresh service — disk hits replace flow runs
+        use fso::coordinator::CacheStore;
+        use std::sync::Arc;
+        let dir =
+            std::env::temp_dir().join(format!("fso-bench-cache-{}", std::process::id()));
+        b.run(
+            &format!("cache_store/cold_{}pts_flush", jobs.len()),
+            || {
+                let _ = std::fs::remove_dir_all(&dir);
+                let store = Arc::new(CacheStore::open(&dir).unwrap());
+                let svc = EvalService::new(Enablement::Gf12, 7)
+                    .with_workers(4)
+                    .with_cache_store(Arc::clone(&store));
+                svc.evaluate_many(&jobs, None).unwrap();
+                store.flush().unwrap()
+            },
+        );
+        // seed the directory once for the warm rows
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = Arc::new(CacheStore::open(&dir).unwrap());
+            let svc = EvalService::new(Enablement::Gf12, 7)
+                .with_workers(4)
+                .with_cache_store(Arc::clone(&store));
+            svc.evaluate_many(&jobs, None).unwrap();
+            store.flush().unwrap();
+        }
+        b.run(
+            &format!("cache_store/warm_start_{}pts", jobs.len()),
+            || {
+                let store = Arc::new(CacheStore::open(&dir).unwrap());
+                let svc = EvalService::new(Enablement::Gf12, 7)
+                    .with_workers(4)
+                    .with_cache_store(Arc::clone(&store));
+                svc.evaluate_many(&jobs, None).unwrap()
+            },
+        );
+        {
+            let store = Arc::new(CacheStore::open(&dir).unwrap());
+            let svc = EvalService::new(Enablement::Gf12, 7)
+                .with_workers(4)
+                .with_cache_store(Arc::clone(&store));
+            svc.evaluate_many(&jobs, None).unwrap();
+            println!("    warm-start stats: {}", svc.stats());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     // ---- datagen / train / DSE end-to-end rows (per table family) -----

@@ -1,0 +1,682 @@
+//! Persistent sharded oracle cache (ISSUE 2 tentpole; ROADMAP "persist
+//! the oracle cache to disk between runs").
+//!
+//! The `EvalService` (PR 1) memoizes SP&R-flow and full-evaluation
+//! results in process memory, so every new datagen or DSE run re-pays
+//! the oracle cost from zero. This store makes that cache durable and
+//! shareable:
+//!
+//! - **Sharding by content-hash prefix**: the u64 content-hash keys the
+//!   service already computes (`flow_key` / `oracle_key`) are routed to
+//!   one of N shard files by their top byte, so a warm lookup touches
+//!   one small file instead of one monolithic dump, and independent
+//!   runs mostly rewrite disjoint shards.
+//! - **Append-only JSONL records** (via `util::json`): one record per
+//!   line, each carrying a schema tag (`"v"`). Records with an unknown
+//!   schema version are skipped on load, so an old cache directory
+//!   never poisons a newer binary.
+//! - **Lazy per-shard loading**: a shard file is parsed the first time
+//!   a key routed to it is requested; runs that touch a small slice of
+//!   the key space never read the rest.
+//! - **Atomic flushes**: a flush rewrites each dirty shard to a temp
+//!   file in the same directory and renames it over the shard, so a
+//!   crash mid-flush leaves the previous shard intact. Entries are
+//!   written in sorted key order, so shard files are byte-deterministic
+//!   for a given entry set.
+//! - **Cross-run / cross-enablement sharing**: keys already encode the
+//!   enablement, seed, and trial stream (and, for full evaluations, the
+//!   workload), so several `EvalService` instances — different
+//!   enablements, different workloads, different processes — can share
+//!   one directory without collisions. The workload-free flow key from
+//!   PR 1 means the expensive SP&R flow result is shared across every
+//!   workload that touches the same (design, knobs, enablement, seed).
+//!
+//! Determinism contract: evaluations are pure functions of their key
+//! inputs, and `util::json` round-trips every finite f64 exactly
+//! (Rust's shortest-round-trip `Display` + exact `str::parse`), so a
+//! warm-start run returns byte-identical results to the cold run that
+//! populated the store. `tests/warm_start.rs` pins this end to end.
+//!
+//! Design aggregates are *not* persisted: regenerating a module tree is
+//! cheap relative to a flow run, and keeping the record schema to the
+//! two oracle kinds keeps shard files small.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::backend::{BackendResult, FlowResult, PowerBreakdown, SynthResult};
+use crate::simulators::SystemMetrics;
+use crate::util::json::Json;
+
+use super::eval_service::Evaluation;
+
+/// Record schema version. Bump on any layout change to the per-record
+/// JSON; loaders skip records whose tag does not match.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default shard-file count (keys are routed by their top byte).
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// Counters for the store (surfaced through `EvalStats` when a service
+/// is attached, and printable on their own for CLI summaries).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStoreStats {
+    /// Lookups answered by the store (loaded from disk or written by
+    /// another service sharing the store this run).
+    pub hits: usize,
+    /// Shard files parsed so far (lazy loading).
+    pub shard_loads: usize,
+    /// `flush` calls that wrote at least one shard.
+    pub flushes: usize,
+    /// Entries currently held (flow + eval records).
+    pub entries: usize,
+    /// Entries created since the last flush.
+    pub pending: usize,
+}
+
+impl std::fmt::Display for CacheStoreStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} entries ({} pending) | {} disk hits | {} shard loads | {} flushes",
+            self.entries, self.pending, self.hits, self.shard_loads, self.flushes
+        )
+    }
+}
+
+#[derive(Clone, Copy)]
+struct ShardState {
+    loaded: bool,
+    dirty: bool,
+}
+
+struct Inner {
+    flows: HashMap<u64, FlowResult>,
+    evals: HashMap<u64, Evaluation>,
+    shards: Vec<ShardState>,
+}
+
+/// Disk-backed, sharded, read-through/write-behind cache for oracle
+/// results. Thread-safe; share one instance across services via `Arc`.
+pub struct CacheStore {
+    dir: PathBuf,
+    n_shards: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicUsize,
+    shard_loads: AtomicUsize,
+    flushes: AtomicUsize,
+}
+
+impl CacheStore {
+    /// Open (creating if needed) a cache directory with the default
+    /// shard count. An existing directory keeps the shard count it was
+    /// created with (recorded in `meta.json`), so reopening with a
+    /// different default never mis-routes keys.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<CacheStore> {
+        CacheStore::open_sharded(dir, DEFAULT_SHARDS)
+    }
+
+    /// Open with an explicit shard count (ignored when the directory
+    /// already records one).
+    pub fn open_sharded(dir: impl Into<PathBuf>, n_shards: usize) -> Result<CacheStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let meta_path = dir.join("meta.json");
+        let n_shards = match fs::read_to_string(&meta_path) {
+            Ok(text) => {
+                let meta = Json::parse(&text)
+                    .with_context(|| format!("parsing {}", meta_path.display()))?;
+                let v = meta.get("v").as_usize().unwrap_or(0) as u64;
+                anyhow::ensure!(
+                    v == SCHEMA_VERSION,
+                    "cache dir {} has schema v{v}, this binary expects v{SCHEMA_VERSION}",
+                    dir.display()
+                );
+                meta.get("shards")
+                    .as_usize()
+                    .filter(|&s| s > 0)
+                    .with_context(|| format!("{}: bad shard count", meta_path.display()))?
+            }
+            // only a genuinely absent meta.json means "fresh directory";
+            // any other read error (permissions, transient IO) must not
+            // silently re-shard an existing store under a new layout
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                let n = n_shards.max(1);
+                let meta = Json::obj(vec![
+                    ("v", Json::from(SCHEMA_VERSION as usize)),
+                    ("shards", Json::from(n)),
+                ]);
+                write_atomic(&meta_path, format!("{meta}\n").as_bytes())?;
+                n
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading {}", meta_path.display()))
+            }
+        };
+        Ok(CacheStore {
+            dir,
+            n_shards,
+            inner: Mutex::new(Inner {
+                flows: HashMap::new(),
+                evals: HashMap::new(),
+                shards: vec![ShardState { loaded: false, dirty: false }; n_shards],
+            }),
+            hits: AtomicUsize::new(0),
+            shard_loads: AtomicUsize::new(0),
+            flushes: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.n_shards
+    }
+
+    fn shard_of(&self, key: u64) -> usize {
+        // content-hash prefix routing: the top byte spreads uniformly
+        // because keys come out of splitmix-finalized hashes
+        ((key >> 56) as usize) % self.n_shards
+    }
+
+    fn shard_path(&self, shard: usize) -> PathBuf {
+        self.dir.join(format!("shard-{shard:03}.jsonl"))
+    }
+
+    /// Parse a shard file into the maps. Unknown schema versions,
+    /// unknown kinds, and corrupt lines are skipped (a half-written or
+    /// foreign record must never sink a run); in-memory entries win
+    /// over disk (values are identical by the determinism contract).
+    fn load_shard(&self, inner: &mut Inner, shard: usize) {
+        if inner.shards[shard].loaded {
+            return;
+        }
+        inner.shards[shard].loaded = true;
+        self.shard_loads.fetch_add(1, Ordering::Relaxed);
+        let text = match fs::read_to_string(self.shard_path(shard)) {
+            Ok(t) => t,
+            Err(_) => return, // never flushed, or unreadable: treat as empty
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let rec = match Json::parse(line) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            if rec.get("v").as_usize().map(|v| v as u64) != Some(SCHEMA_VERSION) {
+                continue;
+            }
+            let key = match rec.get("key").as_str().and_then(parse_hex_key) {
+                Some(k) => k,
+                None => continue,
+            };
+            match rec.get("kind").as_str() {
+                Some("flow") => {
+                    if let Some(fr) = flow_from_json(&rec) {
+                        inner.flows.entry(key).or_insert(fr);
+                    }
+                }
+                Some("eval") => {
+                    if let Some(ev) = eval_from_json(&rec) {
+                        inner.evals.entry(key).or_insert(ev);
+                    }
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    /// Workload-free SP&R flow result for a flow key, if known.
+    pub fn get_flow(&self, key: u64) -> Option<FlowResult> {
+        let mut inner = self.inner.lock().unwrap();
+        self.load_shard(&mut inner, self.shard_of(key));
+        let hit = inner.flows.get(&key).copied();
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Record a flow result (write-behind: durable at the next flush).
+    pub fn put_flow(&self, key: u64, fr: FlowResult) {
+        let mut inner = self.inner.lock().unwrap();
+        let shard = self.shard_of(key);
+        if inner.flows.insert(key, fr).is_none() {
+            inner.shards[shard].dirty = true;
+        }
+    }
+
+    /// Full (flow + simulator) evaluation for an oracle key, if known.
+    pub fn get_eval(&self, key: u64) -> Option<Evaluation> {
+        let mut inner = self.inner.lock().unwrap();
+        self.load_shard(&mut inner, self.shard_of(key));
+        let hit = inner.evals.get(&key).copied();
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Record a full evaluation (write-behind).
+    pub fn put_eval(&self, key: u64, ev: Evaluation) {
+        let mut inner = self.inner.lock().unwrap();
+        let shard = self.shard_of(key);
+        if inner.evals.insert(key, ev).is_none() {
+            inner.shards[shard].dirty = true;
+        }
+    }
+
+    /// Write every dirty shard atomically (temp file + rename in the
+    /// same directory). A dirty shard is loaded first so a flush never
+    /// drops on-disk entries the run did not happen to read. Returns
+    /// the number of shard files written.
+    pub fn flush(&self) -> Result<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let dirty: Vec<usize> =
+            (0..self.n_shards).filter(|&s| inner.shards[s].dirty).collect();
+        for &shard in &dirty {
+            self.load_shard(&mut inner, shard);
+            let mut lines: Vec<(u8, u64, String)> = Vec::new();
+            for (&key, fr) in &inner.flows {
+                if self.shard_of(key) == shard {
+                    lines.push((0, key, flow_to_json(key, fr).to_string()));
+                }
+            }
+            for (&key, ev) in &inner.evals {
+                if self.shard_of(key) == shard {
+                    lines.push((1, key, eval_to_json(key, ev).to_string()));
+                }
+            }
+            // sorted (kind, key) order: shard bytes are deterministic
+            lines.sort_by_key(|&(kind, key, _)| (kind, key));
+            let mut body = String::new();
+            for (_, _, line) in &lines {
+                body.push_str(line);
+                body.push('\n');
+            }
+            write_atomic(&self.shard_path(shard), body.as_bytes())?;
+            inner.shards[shard].dirty = false;
+        }
+        if !dirty.is_empty() {
+            self.flushes.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(dirty.len())
+    }
+
+    /// Snapshot the store counters.
+    pub fn stats(&self) -> CacheStoreStats {
+        let inner = self.inner.lock().unwrap();
+        let pending: usize = {
+            // dirty shards hold the not-yet-durable entries; count them
+            let dirty: Vec<bool> = inner.shards.iter().map(|s| s.dirty).collect();
+            inner
+                .flows
+                .keys()
+                .chain(inner.evals.keys())
+                .filter(|&&k| dirty[self.shard_of(k)])
+                .count()
+        };
+        CacheStoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            shard_loads: self.shard_loads.load(Ordering::Relaxed),
+            flushes: self.flushes.load(Ordering::Relaxed),
+            entries: inner.flows.len() + inner.evals.len(),
+            pending,
+        }
+    }
+
+    /// Store-level hit count (also surfaced via `stats`).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn shard_loads(&self) -> usize {
+        self.shard_loads.load(Ordering::Relaxed)
+    }
+
+    pub fn flush_count(&self) -> usize {
+        self.flushes.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for CacheStore {
+    /// Best-effort durability for callers that forget an explicit
+    /// flush; errors are swallowed (Drop cannot fail).
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory
+/// (same filesystem, so the rename is atomic), then rename over.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent().context("cache path has no parent directory")?;
+    let base = path.file_name().context("cache path has no file name")?;
+    let tmp = dir.join(format!(".{}.tmp-{}", base.to_string_lossy(), std::process::id()));
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().ok(); // durability best-effort; atomicity is the rename
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+fn parse_hex_key(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn hex_key(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+// ---- record (de)serialization --------------------------------------
+//
+// u64 keys are stored as 16-hex-digit strings (JSON numbers are f64 —
+// 53 mantissa bits would corrupt hash keys). f64 fields are stored as
+// JSON numbers: `util::json` prints the shortest exact representation
+// and parses it back bit-identically; non-finite values round-trip
+// through the `null` sentinel (becoming NaN on re-load).
+
+fn synth_to_json(s: &SynthResult) -> Json {
+    Json::obj(vec![
+        ("cell_area_um2", s.cell_area_um2.into()),
+        ("macro_area_um2", s.macro_area_um2.into()),
+        ("upsize", s.upsize.into()),
+        ("syn_power_w", s.syn_power_w.into()),
+        ("syn_fmax_ghz", s.syn_fmax_ghz.into()),
+        ("logic_delay_ps", s.logic_delay_ps.into()),
+    ])
+}
+
+/// Read a numeric field, requiring the key to be *present*: a present
+/// `null` is the non-finite sentinel (decodes to NaN), but an absent
+/// key fails the whole record — schema drift must read as corrupt and
+/// fall back to a cold entry, never as NaN-filled data.
+fn num_field(j: &Json, name: &str) -> Option<f64> {
+    j.as_obj()?.get(name)?.as_f64_or_nan()
+}
+
+fn synth_from_json(j: &Json) -> Option<SynthResult> {
+    Some(SynthResult {
+        cell_area_um2: num_field(j, "cell_area_um2")?,
+        macro_area_um2: num_field(j, "macro_area_um2")?,
+        upsize: num_field(j, "upsize")?,
+        syn_power_w: num_field(j, "syn_power_w")?,
+        syn_fmax_ghz: num_field(j, "syn_fmax_ghz")?,
+        logic_delay_ps: num_field(j, "logic_delay_ps")?,
+    })
+}
+
+fn backend_to_json(b: &BackendResult) -> Json {
+    Json::obj(vec![
+        ("f_effective_ghz", b.f_effective_ghz.into()),
+        ("f_max_ghz", b.f_max_ghz.into()),
+        ("internal_w", b.power.internal_w.into()),
+        ("switching_w", b.power.switching_w.into()),
+        ("leakage_w", b.power.leakage_w.into()),
+        ("sram_w", b.power.sram_w.into()),
+        ("chip_area_mm2", b.chip_area_mm2.into()),
+        ("cell_area_um2", b.cell_area_um2.into()),
+        ("macro_area_um2", b.macro_area_um2.into()),
+        ("congestion", b.congestion.into()),
+    ])
+}
+
+fn backend_from_json(j: &Json) -> Option<BackendResult> {
+    Some(BackendResult {
+        f_effective_ghz: num_field(j, "f_effective_ghz")?,
+        f_max_ghz: num_field(j, "f_max_ghz")?,
+        power: PowerBreakdown {
+            internal_w: num_field(j, "internal_w")?,
+            switching_w: num_field(j, "switching_w")?,
+            leakage_w: num_field(j, "leakage_w")?,
+            sram_w: num_field(j, "sram_w")?,
+        },
+        chip_area_mm2: num_field(j, "chip_area_mm2")?,
+        cell_area_um2: num_field(j, "cell_area_um2")?,
+        macro_area_um2: num_field(j, "macro_area_um2")?,
+        congestion: num_field(j, "congestion")?,
+    })
+}
+
+fn system_to_json(s: &SystemMetrics) -> Json {
+    Json::obj(vec![
+        ("runtime_s", s.runtime_s.into()),
+        ("energy_j", s.energy_j.into()),
+        ("cycles", s.cycles.into()),
+        ("busy_frac", s.busy_frac.into()),
+        ("dram_bytes", s.dram_bytes.into()),
+    ])
+}
+
+fn system_from_json(j: &Json) -> Option<SystemMetrics> {
+    Some(SystemMetrics {
+        runtime_s: num_field(j, "runtime_s")?,
+        energy_j: num_field(j, "energy_j")?,
+        cycles: num_field(j, "cycles")?,
+        busy_frac: num_field(j, "busy_frac")?,
+        dram_bytes: num_field(j, "dram_bytes")?,
+    })
+}
+
+fn flow_to_json(key: u64, fr: &FlowResult) -> Json {
+    Json::obj(vec![
+        ("v", Json::from(SCHEMA_VERSION as usize)),
+        ("kind", "flow".into()),
+        ("key", hex_key(key).as_str().into()),
+        ("synth", synth_to_json(&fr.synth)),
+        ("backend", backend_to_json(&fr.backend)),
+    ])
+}
+
+fn flow_from_json(rec: &Json) -> Option<FlowResult> {
+    Some(FlowResult {
+        synth: synth_from_json(rec.get("synth"))?,
+        backend: backend_from_json(rec.get("backend"))?,
+    })
+}
+
+fn eval_to_json(key: u64, ev: &Evaluation) -> Json {
+    Json::obj(vec![
+        ("v", Json::from(SCHEMA_VERSION as usize)),
+        ("kind", "eval".into()),
+        ("key", hex_key(key).as_str().into()),
+        ("synth", synth_to_json(&ev.flow.synth)),
+        ("backend", backend_to_json(&ev.flow.backend)),
+        ("system", system_to_json(&ev.system)),
+    ])
+}
+
+fn eval_from_json(rec: &Json) -> Option<Evaluation> {
+    Some(Evaluation {
+        flow: flow_from_json(rec)?,
+        system: system_from_json(rec.get("system"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendConfig, Enablement, SpnrFlow};
+    use crate::generators::{ArchConfig, Platform};
+    use crate::simulators::simulate;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fso-cache-store-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_eval() -> Evaluation {
+        let p = Platform::Axiline;
+        let arch = ArchConfig::new(
+            p,
+            p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+        );
+        let flow = SpnrFlow::new(Enablement::Gf12, 7);
+        let fr = flow.run(&arch, BackendConfig::new(0.8, 0.5)).unwrap();
+        let system = simulate(&arch, &fr.backend, Enablement::Gf12).unwrap();
+        Evaluation { flow: fr, system }
+    }
+
+    #[test]
+    fn flow_and_eval_records_roundtrip_exactly() {
+        let dir = tmp_dir("roundtrip");
+        let ev = sample_eval();
+        {
+            let store = CacheStore::open(&dir).unwrap();
+            store.put_flow(0x0123_4567_89ab_cdef, ev.flow);
+            store.put_eval(0xfedc_ba98_7654_3210, ev);
+            assert_eq!(store.stats().pending, 2);
+            store.flush().unwrap();
+            assert_eq!(store.stats().pending, 0);
+        }
+        let store = CacheStore::open(&dir).unwrap();
+        let fr = store.get_flow(0x0123_4567_89ab_cdef).expect("flow survives reopen");
+        assert_eq!(fr.synth, ev.flow.synth);
+        assert_eq!(fr.backend, ev.flow.backend);
+        let got = store.get_eval(0xfedc_ba98_7654_3210).expect("eval survives reopen");
+        assert_eq!(got.flow.backend, ev.flow.backend);
+        assert_eq!(got.system, ev.system);
+        // bit-exact f64 round-trip, not just approximate
+        assert_eq!(
+            got.flow.backend.f_effective_ghz.to_bits(),
+            ev.flow.backend.f_effective_ghz.to_bits()
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_keys_miss_and_lazy_loading_counts_shards() {
+        let dir = tmp_dir("lazy");
+        let ev = sample_eval();
+        {
+            let store = CacheStore::open(&dir).unwrap();
+            // two keys routed to different shards (top bytes 0x00 and
+            // 0x01 land in shards 0 and 1 of the 16-shard default)
+            store.put_eval(0x00ff_0000_0000_0001, ev);
+            store.put_eval(0x01ff_0000_0000_0002, ev);
+            store.flush().unwrap();
+        }
+        let store = CacheStore::open(&dir).unwrap();
+        assert_eq!(store.shard_loads(), 0, "opening must not read shards");
+        assert!(store.get_eval(0x00ff_0000_0000_0001).is_some());
+        assert_eq!(store.shard_loads(), 1, "one lookup loads one shard");
+        assert!(store.get_eval(0x00ff_0000_0000_0003).is_none());
+        assert_eq!(store.shard_loads(), 1, "same-shard miss loads nothing new");
+        assert!(store.get_eval(0x01ff_0000_0000_0002).is_some());
+        assert_eq!(store.shard_loads(), 2);
+        assert_eq!(store.hits(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flush_is_atomic_and_files_are_deterministic() {
+        let dir_a = tmp_dir("atomic-a");
+        let dir_b = tmp_dir("atomic-b");
+        let ev = sample_eval();
+        let keys: Vec<u64> = (0..40u64)
+            .map(|i| crate::util::rng::hash_bytes(&i.to_le_bytes()))
+            .collect();
+        // same entries, opposite insertion orders (the in-memory maps
+        // iterate in hash order; the flush must sort that away)
+        {
+            let store = CacheStore::open(&dir_a).unwrap();
+            for &key in &keys {
+                store.put_eval(key, ev);
+            }
+            store.flush().unwrap();
+        }
+        {
+            let store = CacheStore::open(&dir_b).unwrap();
+            for &key in keys.iter().rev() {
+                store.put_eval(key, ev);
+            }
+            store.flush().unwrap();
+        }
+        let list = |dir: &Path| -> Vec<(String, Vec<u8>)> {
+            let mut files: Vec<_> = fs::read_dir(dir)
+                .unwrap()
+                .map(|e| e.unwrap().path())
+                .collect();
+            files.sort();
+            files
+                .iter()
+                .map(|p| {
+                    let name = p.file_name().unwrap().to_string_lossy().to_string();
+                    assert!(!name.contains(".tmp"), "leftover temp file {name}");
+                    (name, fs::read(p).unwrap())
+                })
+                .collect()
+        };
+        assert_eq!(
+            list(&dir_a),
+            list(&dir_b),
+            "shard files must be byte-deterministic for a given entry set"
+        );
+        let _ = fs::remove_dir_all(&dir_a);
+        let _ = fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn unknown_versions_and_corrupt_lines_are_skipped() {
+        let dir = tmp_dir("skip");
+        let ev = sample_eval();
+        let key = 0x0500_0000_0000_0042u64;
+        {
+            let store = CacheStore::open(&dir).unwrap();
+            store.put_eval(key, ev);
+            store.flush().unwrap();
+        }
+        // append garbage + a future-schema record to the shard file
+        let store = CacheStore::open(&dir).unwrap();
+        let shard_path = store.shard_path(store.shard_of(key));
+        drop(store);
+        let mut text = fs::read_to_string(&shard_path).unwrap();
+        text.push_str("{ this is not json\n");
+        text.push_str("{\"v\":999,\"kind\":\"eval\",\"key\":\"0500000000000043\"}\n");
+        // current-schema record with the metric fields missing entirely:
+        // must be skipped, not decoded as a NaN-filled evaluation
+        text.push_str("{\"v\":1,\"kind\":\"eval\",\"key\":\"0500000000000044\"}\n");
+        fs::write(&shard_path, text).unwrap();
+
+        let store = CacheStore::open(&dir).unwrap();
+        assert!(store.get_eval(key).is_some(), "good record still loads");
+        assert!(store.get_eval(0x0500_0000_0000_0043).is_none(), "v999 skipped");
+        assert!(
+            store.get_eval(0x0500_0000_0000_0044).is_none(),
+            "field-less record must read as corrupt, not as NaNs"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_keeps_original_shard_count() {
+        let dir = tmp_dir("meta");
+        {
+            let store = CacheStore::open_sharded(&dir, 4).unwrap();
+            assert_eq!(store.shard_count(), 4);
+        }
+        let store = CacheStore::open_sharded(&dir, 64).unwrap();
+        assert_eq!(store.shard_count(), 4, "meta.json pins the shard count");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -5,6 +5,8 @@
 //! memoizes the SP&R oracle + system simulator and fans the sweep out
 //! over the worker pool — and label ROI membership (Eq. 4).
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::backend::{roi_epsilon, BackendConfig, Enablement};
@@ -12,6 +14,7 @@ use crate::data::{Dataset, Row, Split};
 use crate::generators::{unified_features, ArchConfig, Lhg, Platform};
 use crate::sampling::{quantize, Sampler, SamplerKind};
 
+use super::cache_store::CacheStore;
 use super::eval_service::{EvalService, EvalStats};
 
 #[derive(Debug, Clone)]
@@ -124,6 +127,29 @@ pub fn generate(cfg: &DatagenConfig) -> Result<GeneratedData> {
     let service =
         EvalService::new(cfg.enablement, cfg.seed).with_workers(cfg.workers);
     generate_with(&service, cfg)
+}
+
+/// Multi-enablement (or multi-platform) sweep: run datagen for each
+/// configuration through its own `EvalService`, all sharing one
+/// persistent cache store. Content-hash keys encode the enablement and
+/// seed, so entries never collide across services; the workload-free
+/// flow key additionally lets any config that revisits a (design,
+/// knobs, enablement, seed) point reuse the SP&R result — across the
+/// sweep and, once flushed, across runs. Rows are byte-identical to
+/// running each config standalone. The store is *not* flushed here;
+/// callers flush once after the sweep (or let the last `Arc` drop).
+pub fn generate_sweep(
+    cfgs: &[DatagenConfig],
+    store: Option<Arc<CacheStore>>,
+) -> Result<Vec<GeneratedData>> {
+    let mut out = Vec::with_capacity(cfgs.len());
+    for cfg in cfgs {
+        let service = EvalService::new(cfg.enablement, cfg.seed)
+            .with_workers(cfg.workers)
+            .with_cache_store_opt(store.clone());
+        out.push(generate_with(&service, cfg)?);
+    }
+    Ok(out)
 }
 
 /// Run the full datagen pipeline through an existing service (shares
@@ -304,6 +330,31 @@ mod tests {
         let in_roi = g.dataset.rows.iter().filter(|r| r.in_roi).count();
         assert!(in_roi > 0, "no ROI rows at all");
         assert!(in_roi < g.dataset.len(), "everything in ROI — Eq. 4 gate inert");
+    }
+
+    #[test]
+    fn sweep_through_shared_store_matches_standalone_runs() {
+        let mk = |e: Enablement| DatagenConfig {
+            n_arch: 3,
+            n_backend_train: 4,
+            n_backend_test: 2,
+            ..DatagenConfig::small(Platform::Axiline, e)
+        };
+        let cfgs = [mk(Enablement::Gf12), mk(Enablement::Ng45)];
+        let dir = std::env::temp_dir()
+            .join(format!("fso-datagen-sweep-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        let swept = generate_sweep(&cfgs, Some(store)).unwrap();
+        assert_eq!(swept.len(), 2);
+        // sharing a store never changes rows vs. standalone runs
+        for (cfg, g) in cfgs.iter().zip(&swept) {
+            let solo = generate(cfg).unwrap();
+            assert_eq!(g.dataset.rows, solo.dataset.rows, "{}", cfg.enablement.name());
+        }
+        // the two enablements really explored different PPA spaces
+        assert_ne!(swept[0].dataset.rows, swept[1].dataset.rows);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

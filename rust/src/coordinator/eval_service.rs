@@ -30,14 +30,22 @@
 //! - **Stats**: `ServerStats`-style counters (cache hit rates, batch
 //!   occupancy) surfaced via [`EvalService::stats`] for benches,
 //!   examples, and tests.
+//! - **Persistence**: an optional [`CacheStore`]
+//!   (`with_cache_store`) adds a disk-backed second cache level:
+//!   lookups read through to sharded JSONL records from previous runs
+//!   (warm start), oracle results are written behind and flushed via
+//!   `flush_cache`. Several services — across enablements, workloads,
+//!   and processes — can share one store; results never change, only
+//!   wall-clock (see `coordinator::cache_store`).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::backend::{BackendConfig, Enablement, FlowResult, SpnrFlow};
+use crate::coordinator::cache_store::CacheStore;
 use crate::coordinator::dse_driver::SurrogateBundle;
 use crate::coordinator::predict_server::PredictClient;
 use crate::data::Metric;
@@ -78,7 +86,8 @@ pub struct SurrogatePoint {
 /// Snapshot of the service counters (`ServerStats` analogue).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct EvalStats {
-    /// Ground-truth oracle calls answered from the memo cache.
+    /// Ground-truth oracle calls answered without running the flow +
+    /// simulator (in-memory memo or persistent store).
     pub oracle_hits: usize,
     /// Ground-truth oracle calls that ran the flow + simulator.
     pub oracle_misses: usize,
@@ -94,6 +103,15 @@ pub struct EvalStats {
     pub ann_rows: usize,
     /// `predict_ann_batch` invocations.
     pub ann_batches: usize,
+    /// Oracle/flow lookups this service answered from the persistent
+    /// `CacheStore` (loaded from a previous run's shards, or written by
+    /// another service sharing the store).
+    pub disk_hits: usize,
+    /// Shard files the attached store has parsed (store-level: shared
+    /// by every service attached to the same store).
+    pub shard_loads: usize,
+    /// Flushes the attached store has performed (store-level).
+    pub flushes: usize,
 }
 
 impl EvalStats {
@@ -145,6 +163,11 @@ impl std::fmt::Display for EvalStats {
             self.surrogate_rows,
             self.surrogate_batches,
             self.mean_batch_occupancy(),
+        )?;
+        write!(
+            f,
+            " | persistent {} disk hits ({} shard loads, {} flushes)",
+            self.disk_hits, self.shard_loads, self.flushes
         )
     }
 }
@@ -159,6 +182,7 @@ struct Counters {
     surrogate_batches: AtomicUsize,
     ann_rows: AtomicUsize,
     ann_batches: AtomicUsize,
+    disk_hits: AtomicUsize,
 }
 
 /// Optional PJRT path: a `PredictServer` client plus the (variant,
@@ -185,6 +209,10 @@ pub struct EvalService {
     /// share one flow computation per point.
     flow_cache: Mutex<HashMap<u64, FlowResult>>,
     agg_cache: Mutex<HashMap<u64, DesignAggregates>>,
+    /// Optional persistent second-level cache (read-through on memo
+    /// misses, write-behind on oracle runs); shared across services
+    /// and across runs via `Arc<CacheStore>`.
+    store: Option<Arc<CacheStore>>,
     counters: Counters,
 }
 
@@ -202,6 +230,7 @@ impl EvalService {
             oracle_cache: Mutex::new(HashMap::new()),
             flow_cache: Mutex::new(HashMap::new()),
             agg_cache: Mutex::new(HashMap::new()),
+            store: None,
             counters: Counters::default(),
         }
     }
@@ -223,6 +252,41 @@ impl EvalService {
     pub fn with_surrogate(mut self, surrogate: SurrogateBundle) -> EvalService {
         self.surrogate = Some(surrogate);
         self
+    }
+
+    /// Attach a persistent cache store. Lookups fall through the
+    /// in-memory memo to the store (read-through); oracle runs are
+    /// recorded back (write-behind — call [`EvalService::flush_cache`]
+    /// or drop the last `Arc` to make them durable). Several services —
+    /// across enablements, workloads, or processes — can share one
+    /// store: the content-hash keys encode everything that
+    /// distinguishes them. Never changes results, only wall-clock.
+    pub fn with_cache_store(mut self, store: Arc<CacheStore>) -> EvalService {
+        self.store = Some(store);
+        self
+    }
+
+    /// `with_cache_store` for CLI plumbing that may or may not have a
+    /// `--cache-dir`: attaches when given, no-op otherwise.
+    pub fn with_cache_store_opt(self, store: Option<Arc<CacheStore>>) -> EvalService {
+        match store {
+            Some(s) => self.with_cache_store(s),
+            None => self,
+        }
+    }
+
+    /// The attached persistent store, if any.
+    pub fn cache_store(&self) -> Option<&Arc<CacheStore>> {
+        self.store.as_ref()
+    }
+
+    /// Flush the attached store's pending records to disk (no-op
+    /// without a store). Returns the number of shard files written.
+    pub fn flush_cache(&self) -> Result<usize> {
+        match &self.store {
+            Some(s) => s.flush(),
+            None => Ok(0),
+        }
     }
 
     pub fn enablement(&self) -> Enablement {
@@ -252,6 +316,9 @@ impl EvalService {
             surrogate_batches: self.counters.surrogate_batches.load(Ordering::Relaxed),
             ann_rows: self.counters.ann_rows.load(Ordering::Relaxed),
             ann_batches: self.counters.ann_batches.load(Ordering::Relaxed),
+            disk_hits: self.counters.disk_hits.load(Ordering::Relaxed),
+            shard_loads: self.store.as_ref().map_or(0, |s| s.shard_loads()),
+            flushes: self.store.as_ref().map_or(0, |s| s.flush_count()),
         }
     }
 
@@ -369,31 +436,70 @@ impl EvalService {
             self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(*ev);
         }
+        // read-through: a previous run — or another service sharing the
+        // store — may hold the full evaluation. The double-checked memo
+        // insert keeps counter totals deterministic under worker races:
+        // exactly one disk hit per unique key served from the store.
+        if let Some(store) = &self.store {
+            if let Some(ev) = store.get_eval(key) {
+                let mut cache = self.oracle_cache.lock().unwrap();
+                self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
+                if !cache.contains_key(&key) {
+                    self.counters.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    cache.insert(key, ev);
+                }
+                return Ok(ev);
+            }
+        }
         // the flow is workload-independent: reuse it across workloads
         // (datagen's default binding vs. a DSE problem's explicit one)
+        // and, through the store, across runs
         let cached_flow = self.flow_cache.lock().unwrap().get(&flow_key).copied();
         let fr = match cached_flow {
             Some(f) => f,
             None => {
-                let agg = self.aggregates(arch)?;
-                let f = if trial == 0 {
-                    self.flow.run_on_aggregates(
-                        &agg,
-                        arch.id_hash(),
-                        arch.platform.macro_heavy(),
-                        bcfg,
-                    )
-                } else {
-                    let trial_seed = Rng::new(self.seed).fork(trial).next_u64();
-                    let flow = SpnrFlow::new(self.enablement, trial_seed);
-                    flow.run_on_aggregates(
-                        &agg,
-                        arch.id_hash(),
-                        arch.platform.macro_heavy(),
-                        bcfg,
-                    )
+                let disk_flow = self.store.as_ref().and_then(|s| s.get_flow(flow_key));
+                let from_disk = disk_flow.is_some();
+                let f = match disk_flow {
+                    Some(f) => f,
+                    None => {
+                        let agg = self.aggregates(arch)?;
+                        let f = if trial == 0 {
+                            self.flow.run_on_aggregates(
+                                &agg,
+                                arch.id_hash(),
+                                arch.platform.macro_heavy(),
+                                bcfg,
+                            )
+                        } else {
+                            let trial_seed = Rng::new(self.seed).fork(trial).next_u64();
+                            let flow = SpnrFlow::new(self.enablement, trial_seed);
+                            flow.run_on_aggregates(
+                                &agg,
+                                arch.id_hash(),
+                                arch.platform.macro_heavy(),
+                                bcfg,
+                            )
+                        };
+                        f
+                    }
                 };
-                self.flow_cache.lock().unwrap().insert(flow_key, f);
+                // double-check so a racing worker's duplicate disk fetch
+                // (or identical recomputation) counts at most once. The
+                // write-behind put happens only in the winner branch and
+                // under this lock, *after* the memo insert: a racing
+                // worker that finds the store entry also finds the memo
+                // entry, so a cold run can never report a disk hit for
+                // work it did itself.
+                let mut cache = self.flow_cache.lock().unwrap();
+                if !cache.contains_key(&flow_key) {
+                    cache.insert(flow_key, f);
+                    if from_disk {
+                        self.counters.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    } else if let Some(store) = &self.store {
+                        store.put_flow(flow_key, f); // write-behind
+                    }
+                }
                 f
             }
         };
@@ -411,6 +517,9 @@ impl EvalService {
         } else {
             self.counters.oracle_misses.fetch_add(1, Ordering::Relaxed);
             cache.insert(key, ev);
+            if let Some(store) = &self.store {
+                store.put_eval(key, ev); // write-behind
+            }
         }
         Ok(ev)
     }
@@ -570,6 +679,60 @@ mod tests {
             assert_eq!(x.flow.backend, y.flow.backend);
             assert_eq!(x.system, y.system);
         }
+    }
+
+    #[test]
+    fn stats_ratios_are_zero_not_nan_before_any_request() {
+        // ISSUE 2 satellite: zero-denominator ratio helpers must report
+        // 0.0 (a NaN here poisons every downstream aggregate/format)
+        let s = EvalStats::default();
+        assert_eq!(s.oracle_hit_rate(), 0.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        assert_eq!(s.mean_batch_occupancy(), 0.0);
+        assert!(s.oracle_hit_rate().is_finite());
+        assert!(s.cache_hit_rate().is_finite());
+        assert!(s.mean_batch_occupancy().is_finite());
+        let line = format!("{s}");
+        assert!(!line.contains("NaN"), "stats line must not print NaN: {line}");
+        // a fresh service reports the same zeroed, finite stats
+        let svc = EvalService::new(Enablement::Gf12, 1);
+        assert_eq!(svc.stats(), s);
+    }
+
+    #[test]
+    fn cache_store_round_trips_through_service() {
+        use crate::coordinator::cache_store::CacheStore;
+        use std::sync::Arc;
+
+        let dir = std::env::temp_dir()
+            .join(format!("fso-eval-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let arch = mid_arch(Platform::Axiline);
+        let bcfg = BackendConfig::new(0.8, 0.5);
+
+        let cold_ev = {
+            let store = Arc::new(CacheStore::open(&dir).unwrap());
+            let svc = EvalService::new(Enablement::Gf12, 7).with_cache_store(store);
+            let ev = svc.evaluate(&arch, bcfg, None).unwrap();
+            let s = svc.stats();
+            assert_eq!(s.oracle_misses, 1);
+            assert_eq!(s.disk_hits, 0, "cold run must not report disk hits");
+            assert!(svc.flush_cache().unwrap() > 0, "one shard should flush");
+            ev
+        };
+
+        // fresh service + reopened store: served from disk, no oracle run
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        let svc = EvalService::new(Enablement::Gf12, 7).with_cache_store(store);
+        let warm_ev = svc.evaluate(&arch, bcfg, None).unwrap();
+        assert_eq!(warm_ev.flow.backend, cold_ev.flow.backend);
+        assert_eq!(warm_ev.flow.synth, cold_ev.flow.synth);
+        assert_eq!(warm_ev.system, cold_ev.system);
+        let s = svc.stats();
+        assert_eq!(s.oracle_misses, 0, "warm run must not re-run the oracle");
+        assert_eq!(s.disk_hits, 1);
+        assert!(s.shard_loads > 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

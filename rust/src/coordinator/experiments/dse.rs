@@ -10,6 +10,7 @@ use crate::coordinator::datagen::{self, DatagenConfig};
 use crate::coordinator::dse_driver::{
     axiline_svm_problem, vta_backend_problem, DseDriver, SurrogateBundle,
 };
+use crate::coordinator::EvalService;
 use crate::data::Metric;
 use crate::dse::MotpeConfig;
 use crate::generators::{ArchConfig, Platform};
@@ -73,10 +74,15 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
         cfg.n_backend_test = 4;
     }
     println!("[fig11] generating Axiline/NG45 training data ({} archs)...", cfg.n_arch);
-    let g = datagen::generate(&cfg)?;
+    // one service carries datagen and the DSE ground-truth checks, so
+    // the oracle memo is shared; --cache-dir makes it warm-startable
+    let store = opts.open_cache()?;
+    let service = EvalService::new(enablement, cfg.seed)
+        .with_workers(crate::util::pool::default_workers())
+        .with_cache_store_opt(store.clone());
+    let g = datagen::generate_with(&service, &cfg)?;
     let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, opts.seed)?;
-    let driver = DseDriver::new(enablement, surrogate, cfg.seed)
-        .with_workers(crate::util::pool::default_workers());
+    let driver = DseDriver { service: service.with_surrogate(surrogate) };
 
     // constraints: generous power cap, runtime cap from the dataset's
     // median (forces the search away from the slow tail)
@@ -101,6 +107,10 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
         16,
     )?;
     println!("[fig11] eval service: {}", driver.stats());
+    if let Some(store) = &store {
+        store.flush()?;
+        println!("[fig11] cache store: {}", store.stats());
+    }
     let worst = report(opts, "fig11", &outcome)?;
     println!(
         "paper claim: top-3 within 7% of post-SP&R  |  measured worst: {:.1}%",
@@ -122,10 +132,13 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
         cfg.n_backend_test = 4;
     }
     println!("[fig12] generating VTA/GF12 training data ({} archs)...", cfg.n_arch);
-    let g = datagen::generate(&cfg)?;
+    let store = opts.open_cache()?;
+    let service = EvalService::new(enablement, cfg.seed)
+        .with_workers(crate::util::pool::default_workers())
+        .with_cache_store_opt(store.clone());
+    let g = datagen::generate_with(&service, &cfg)?;
     let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, opts.seed)?;
-    let driver = DseDriver::new(enablement, surrogate, cfg.seed)
-        .with_workers(crate::util::pool::default_workers());
+    let driver = DseDriver { service: service.with_surrogate(surrogate) };
 
     let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
     runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -153,6 +166,10 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
         16,
     )?;
     println!("[fig12] eval service: {}", driver.stats());
+    if let Some(store) = &store {
+        store.flush()?;
+        println!("[fig12] cache store: {}", store.stats());
+    }
     let worst = report(opts, "fig12", &outcome)?;
     println!(
         "paper claim: top-3 within 6% of post-SP&R  |  measured worst: {:.1}%",

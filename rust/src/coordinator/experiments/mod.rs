@@ -18,11 +18,19 @@ pub struct ExpOptions {
     pub out_dir: PathBuf,
     /// Reduced sizes for smoke runs / CI.
     pub quick: bool,
+    /// Persistent oracle cache directory (`--cache-dir`): experiments
+    /// that run the SP&R oracle warm-start from it and flush back.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for ExpOptions {
     fn default() -> Self {
-        ExpOptions { seed: 2023, out_dir: PathBuf::from("results"), quick: false }
+        ExpOptions {
+            seed: 2023,
+            out_dir: PathBuf::from("results"),
+            quick: false,
+            cache_dir: None,
+        }
     }
 }
 
@@ -34,6 +42,16 @@ impl ExpOptions {
 
     pub fn csv_path(&self, name: &str) -> PathBuf {
         self.out_dir.join(format!("{name}.csv"))
+    }
+
+    /// Open the persistent oracle cache named by `cache_dir`, if any.
+    pub fn open_cache(&self) -> Result<Option<std::sync::Arc<crate::coordinator::CacheStore>>> {
+        match &self.cache_dir {
+            Some(dir) => Ok(Some(std::sync::Arc::new(
+                crate::coordinator::CacheStore::open(dir)?,
+            ))),
+            None => Ok(None),
+        }
     }
 }
 

@@ -3,6 +3,7 @@
 //! prediction server, the MOTPE DSE driver, and the per-table/figure
 //! experiment drivers (DESIGN.md §5).
 
+pub mod cache_store;
 pub mod datagen;
 pub mod dse_driver;
 pub mod eval_service;
@@ -10,7 +11,8 @@ pub mod experiments;
 pub mod predict_server;
 pub mod trainer;
 
-pub use datagen::{generate, generate_with, DatagenConfig, GeneratedData};
+pub use cache_store::{CacheStore, CacheStoreStats};
+pub use datagen::{generate, generate_sweep, generate_with, DatagenConfig, GeneratedData};
 pub use dse_driver::{DseDriver, DseProblem, SurrogateBundle};
 pub use eval_service::{EvalService, EvalStats, Evaluation, SurrogatePoint};
 pub use predict_server::{PredictClient, PredictServer, ServerStats};

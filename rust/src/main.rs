@@ -11,12 +11,15 @@
 
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use fso::backend::Enablement;
 use fso::coordinator::experiments::{self, ExpOptions};
-use fso::coordinator::{datagen, DatagenConfig, PredictServer, TrainOptions, Trainer};
+use fso::coordinator::{
+    datagen, CacheStore, DatagenConfig, EvalService, PredictServer, TrainOptions, Trainer,
+};
 use fso::data::Metric;
 use fso::generators::Platform;
 use fso::models::ann::glorot_init;
@@ -57,36 +60,76 @@ const HELP: &str = r#"
 fso — ML-based full-stack optimization framework for ML accelerators
 
 USAGE:
-  fso datagen --platform <tabla|genesys|vta|axiline> [--enablement gf12|ng45]
-              [--archs N] [--out data.csv] [--seed N]
+  fso datagen --platform <tabla|genesys|vta|axiline> [--enablement gf12|ng45|gf12,ng45]
+              [--archs N] [--out data.csv] [--seed N] [--cache-dir DIR]
   fso train --platform <...> [--metric power|perf|area|energy|runtime]
-            [--trees-only] [--seed N]
-  fso dse --target <axiline-svm|vta> [--quick]
+            [--trees-only] [--seed N] [--cache-dir DIR]
+  fso dse --target <axiline-svm|vta> [--quick] [--cache-dir DIR]
   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
-                 [--quick] [--out-dir results] [--seed N]
+                 [--quick] [--out-dir results] [--seed N] [--cache-dir DIR]
   fso serve [--clients N] [--rows N]
+
+A comma-separated --enablement sweeps every listed enablement through
+one process (and one --cache-dir store); --out then writes one CSV per
+enablement (data.csv.gf12, data.csv.ng45). --cache-dir persists SP&R
+oracle results between runs: a warm start replays cached evaluations
+byte-identically and reports the disk hits in the stats line.
 "#;
+
+/// Open the persistent oracle cache named by `--cache-dir`, if given.
+fn cache_store(args: &Args) -> Result<Option<Arc<CacheStore>>> {
+    match args.path("cache-dir") {
+        Some(dir) => Ok(Some(Arc::new(CacheStore::open(dir)?))),
+        None => Ok(None),
+    }
+}
 
 fn cmd_datagen(args: &Args) -> Result<()> {
     let platform = Platform::from_name(args.get_or("platform", "axiline"))?;
-    let enablement = Enablement::from_name(args.get_or("enablement", "gf12"))?;
-    let mut cfg = DatagenConfig::small(platform, enablement);
-    cfg.n_arch = args.usize_or("archs", cfg.n_arch)?;
-    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    // `--enablement gf12,ng45` sweeps several enablements through
+    // services sharing one cache store (and one process)
+    let enablements: Vec<Enablement> = args
+        .get_or("enablement", "gf12")
+        .split(',')
+        .map(Enablement::from_name)
+        .collect::<Result<_>>()?;
+    let store = cache_store(args)?;
+    let mut cfgs = Vec::with_capacity(enablements.len());
+    for &enablement in &enablements {
+        let mut cfg = DatagenConfig::small(platform, enablement);
+        cfg.n_arch = args.usize_or("archs", cfg.n_arch)?;
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        cfgs.push(cfg);
+    }
     let t0 = std::time::Instant::now();
-    let g = datagen::generate(&cfg)?;
-    println!(
-        "generated {} rows ({} archs x {} backend points) in {:.2}s",
-        g.dataset.len(),
-        g.dataset.archs.len(),
-        cfg.n_backend_train + cfg.n_backend_test,
-        t0.elapsed().as_secs_f64()
-    );
-    let in_roi = g.dataset.rows.iter().filter(|r| r.in_roi).count();
-    println!("ROI rows: {in_roi}/{}", g.dataset.len());
+    let results = datagen::generate_sweep(&cfgs, store.clone())?;
+    for (cfg, g) in cfgs.iter().zip(&results) {
+        let tag = cfg.enablement.name();
+        let in_roi = g.dataset.rows.iter().filter(|r| r.in_roi).count();
+        println!(
+            "[{tag}] generated {} rows ({} archs x {} backend points), {in_roi} in ROI",
+            g.dataset.len(),
+            g.dataset.archs.len(),
+            cfg.n_backend_train + cfg.n_backend_test,
+        );
+        println!("[{tag}] eval service: {}", g.stats);
+    }
+    println!("datagen took {:.2}s", t0.elapsed().as_secs_f64());
     if let Some(out) = args.get("out") {
-        g.dataset.write_csv(std::path::Path::new(out))?;
-        println!("wrote {out}");
+        if results.len() == 1 {
+            results[0].dataset.write_csv(std::path::Path::new(out))?;
+            println!("wrote {out}");
+        } else {
+            for (cfg, g) in cfgs.iter().zip(&results) {
+                let path = format!("{out}.{}", cfg.enablement.name());
+                g.dataset.write_csv(std::path::Path::new(&path))?;
+                println!("wrote {path}");
+            }
+        }
+    }
+    if let Some(store) = &store {
+        store.flush()?;
+        println!("cache store: {}", store.stats());
     }
     Ok(())
 }
@@ -97,7 +140,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 2023)?;
     let cfg = DatagenConfig { seed, ..DatagenConfig::small(platform, enablement) };
     println!("generating dataset...");
-    let g = datagen::generate(&cfg)?;
+    let g = match cache_store(args)? {
+        Some(store) => {
+            let service = EvalService::new(cfg.enablement, cfg.seed)
+                .with_workers(cfg.workers)
+                .with_cache_store(Arc::clone(&store));
+            let g = datagen::generate_with(&service, &cfg)?;
+            store.flush()?;
+            println!("eval service: {}", g.stats);
+            g
+        }
+        None => datagen::generate(&cfg)?,
+    };
     let trainer = if args.flag("trees-only") {
         Trainer::new(None)
     } else {
@@ -145,6 +199,7 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
         seed: args.u64_or("seed", 2023)?,
         out_dir: PathBuf::from(args.get_or("out-dir", "results")),
         quick: args.flag("quick"),
+        cache_dir: args.path("cache-dir"),
     })
 }
 

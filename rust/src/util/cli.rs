@@ -75,6 +75,11 @@ impl Args {
         }
     }
 
+    /// Optional path-valued option (e.g. `--cache-dir DIR`).
+    pub fn path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.get(name).map(std::path::PathBuf::from)
+    }
+
     pub fn required(&self, name: &str) -> Result<&str> {
         match self.get(name) {
             Some(v) => Ok(v),
@@ -117,6 +122,16 @@ mod tests {
         let a = parse("--a --b v");
         assert!(a.flag("a"));
         assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn path_option() {
+        let a = parse("--cache-dir /tmp/fso-cache");
+        assert_eq!(
+            a.path("cache-dir"),
+            Some(std::path::PathBuf::from("/tmp/fso-cache"))
+        );
+        assert_eq!(a.path("out-dir"), None);
     }
 
     #[test]

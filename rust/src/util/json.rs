@@ -34,6 +34,18 @@ impl Json {
         }
     }
 
+    /// Numeric read that honours the non-finite sentinel: `Display`
+    /// writes NaN/±Inf as `null` (JSON has no spelling for them), so
+    /// a re-loaded record surfaces them here as NaN. Still `None` for
+    /// strings, bools, arrays, and objects.
+    pub fn as_f64_or_nan(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            Json::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
@@ -316,7 +328,19 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // NaN/±Inf have no JSON representation; "{n}" would
+                    // emit unparseable output. Write the null sentinel
+                    // so records (e.g. cache-store shards) survive a
+                    // re-load; readers recover NaN via `as_f64_or_nan`.
+                    write!(f, "null")
+                } else if n.fract() == 0.0
+                    && n.abs() < 1e15
+                    && (*n != 0.0 || n.is_sign_positive())
+                {
+                    // integral fast-path; -0.0 is excluded (casting to
+                    // i64 would drop the sign bit and break the exact
+                    // round-trip the cache store relies on)
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -387,6 +411,48 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn non_finite_floats_roundtrip_via_null_sentinel() {
+        // serializing NaN/±Inf used to emit `NaN`/`inf` — unparseable
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::obj(vec![("m", Json::Num(bad))]);
+            let text = j.to_string();
+            assert_eq!(text, r#"{"m":null}"#, "got {text}");
+            let back = Json::parse(&text).expect("sentinel output must re-parse");
+            assert_eq!(back.get("m"), &Json::Null);
+            let v = back.get("m").as_f64_or_nan().unwrap();
+            assert!(v.is_nan(), "sentinel decodes to NaN, got {v}");
+        }
+        // as_f64_or_nan still rejects non-numeric values outright
+        assert_eq!(Json::Str("x".into()).as_f64_or_nan(), None);
+        assert_eq!(Json::Bool(true).as_f64_or_nan(), None);
+    }
+
+    #[test]
+    fn finite_floats_roundtrip_bit_exactly() {
+        // the cache store depends on exact f64 round-trips: Rust's
+        // shortest-round-trip Display + exact str::parse
+        let vals = [
+            0.1,
+            1.0 / 3.0,
+            -2.5e-9,
+            6.02214076e23,
+            1.0000000000000002, // 1.0 + ulp
+            -0.0,
+            123456789.0,
+            2.0f64.powi(-40),
+        ];
+        for &v in &vals {
+            let text = Json::Num(v).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                v.to_bits(),
+                "value {v} reparsed as {back} (via {text})"
+            );
+        }
     }
 
     #[test]

@@ -1,12 +1,31 @@
 //! Scoped parallel map over a fixed worker count (rayon/tokio are
 //! unavailable offline; dataset generation and benchmark sweeps use this).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Extract a human-readable message from a panic payload (`panic!`
+/// carries `&str` or `String`; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Parallel map: applies `f` to 0..n across `workers` threads, preserving
 /// index order in the output. `f` must be Sync; results are collected
 /// into a Vec<T>.
+///
+/// A panic inside `f` is re-raised on the calling thread with the
+/// worker's payload message and failing index attached (a bare
+/// scope-join panic would say only "a scoped thread panicked", which
+/// makes a poisoned oracle run undiagnosable from CI logs). The first
+/// panic wins; remaining workers stop picking up new indices.
 pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -17,20 +36,37 @@ where
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
+    let poisoned = AtomicBool::new(false);
+    let first_panic: Mutex<Option<(usize, String)>> = Mutex::new(None);
     let results: Mutex<Vec<Option<T>>> =
         Mutex::new((0..n).map(|_| None).collect());
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                if poisoned.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let r = f(i);
-                results.lock().unwrap()[i] = Some(r);
+                match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    Ok(r) => results.lock().unwrap()[i] = Some(r),
+                    Err(payload) => {
+                        let mut slot = first_panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some((i, panic_message(payload.as_ref())));
+                        }
+                        poisoned.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
             });
         }
     });
+    if let Some((i, msg)) = first_panic.into_inner().unwrap() {
+        panic!("par_map worker panicked at index {i}: {msg}");
+    }
     results
         .into_inner()
         .unwrap()
@@ -65,6 +101,53 @@ mod tests {
     #[test]
     fn workers_more_than_items() {
         assert_eq!(par_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    /// The panic tests swap the global panic hook; serialize them so
+    /// concurrent test threads can't interleave take/set pairs.
+    static HOOK_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn worker_panic_propagates_payload_and_index() {
+        let _guard = HOOK_LOCK.lock().unwrap();
+        // silence the default hook while the expected panic fires
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let caught = std::panic::catch_unwind(|| {
+            par_map(8, 4, |i| {
+                if i == 5 {
+                    panic!("oracle poisoned at trial {i}");
+                }
+                i
+            })
+        });
+        std::panic::set_hook(prev);
+        let payload = caught.expect_err("par_map must propagate worker panics");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("re-raised panic carries a String message");
+        assert!(msg.contains("index 5"), "missing index: {msg}");
+        assert!(msg.contains("oracle poisoned at trial 5"), "missing payload: {msg}");
+    }
+
+    #[test]
+    fn serial_path_panics_transparently() {
+        let _guard = HOOK_LOCK.lock().unwrap();
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let caught = std::panic::catch_unwind(|| {
+            par_map(3, 1, |i| {
+                if i == 2 {
+                    panic!("serial boom");
+                }
+                i
+            })
+        });
+        std::panic::set_hook(prev);
+        let payload = caught.expect_err("serial par_map must panic");
+        let msg = panic_message(payload.as_ref());
+        assert!(msg.contains("serial boom"), "{msg}");
     }
 
     #[test]

@@ -150,6 +150,80 @@ mod tests {
         assert_eq!(same, 0);
     }
 
+    /// Pearson correlation of two equal-length samples.
+    fn pearson(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().sum::<f64>() / n;
+        let mb = b.iter().sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            cov += (x - ma) * (y - mb);
+            va += (x - ma) * (x - ma);
+            vb += (y - mb) * (y - mb);
+        }
+        cov / (va.sqrt() * vb.sqrt()).max(1e-300)
+    }
+
+    #[test]
+    fn adjacent_fork_streams_neither_collide_nor_correlate() {
+        // ISSUE 2 satellite: per-trial oracle streams and cache keys
+        // both derive from `fork`, so adjacent trial indices must give
+        // statistically independent streams, not shifted copies.
+        const STREAMS: usize = 16;
+        const DRAWS: usize = 256;
+        let root = Rng::new(2023);
+        let streams: Vec<Vec<u64>> = (0..STREAMS as u64)
+            .map(|t| {
+                let mut r = root.fork(t);
+                (0..DRAWS).map(|_| r.next_u64()).collect()
+            })
+            .collect();
+
+        // overlap check: no value appears twice anywhere across the
+        // fleet of streams (4096 draws from a 2^64 space: a collision
+        // would mean two trials share flow noise / cache-key material)
+        let mut seen = std::collections::BTreeSet::new();
+        for (t, s) in streams.iter().enumerate() {
+            for &v in s {
+                assert!(seen.insert(v), "stream {t} repeats value {v:#x}");
+            }
+        }
+
+        // adjacent-stream correlation on the unit-interval projection
+        for t in 0..STREAMS - 1 {
+            let to_unit = |s: &[u64]| -> Vec<f64> {
+                s.iter().map(|&v| (v >> 11) as f64 * (1.0 / (1u64 << 53) as f64)).collect()
+            };
+            let r = pearson(&to_unit(&streams[t]), &to_unit(&streams[t + 1]));
+            assert!(
+                r.abs() < 0.3, // ~4.8 sigma for n=256: fails only on real structure
+                "streams {t} and {} correlate: r={r}",
+                t + 1
+            );
+        }
+
+        // chi-square uniformity of each stream's low nibble (16 bins,
+        // df=15; 60 is far past the p=0.001 critical value 37.7, so
+        // only gross non-uniformity — e.g. a stuck counter — trips it)
+        for (t, s) in streams.iter().enumerate() {
+            let mut bins = [0usize; 16];
+            for &v in s {
+                bins[(v & 15) as usize] += 1;
+            }
+            let expected = DRAWS as f64 / 16.0;
+            let chi2: f64 = bins
+                .iter()
+                .map(|&c| {
+                    let d = c as f64 - expected;
+                    d * d / expected
+                })
+                .sum();
+            assert!(chi2 < 60.0, "stream {t} low-nibble chi2={chi2}");
+        }
+    }
+
     #[test]
     fn f64_in_unit_interval_and_roughly_uniform() {
         let mut r = Rng::new(3);

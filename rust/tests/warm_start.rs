@@ -1,0 +1,216 @@
+//! Warm-start determinism (ISSUE 2): a run that reads a populated
+//! persistent cache store must produce byte-identical datagen rows and
+//! DSE Pareto fronts to the cold run that populated it — while
+//! reporting >0 disk hits and strictly fewer oracle evaluations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fso::backend::{BackendConfig, Enablement};
+use fso::coordinator::dse_driver::{
+    axiline_svm_problem, DseDriver, DseOutcome, SurrogateBundle,
+};
+use fso::coordinator::{
+    datagen, CacheStore, DatagenConfig, EvalService, EvalStats, GeneratedData,
+};
+use fso::dse::MotpeConfig;
+use fso::generators::{ArchConfig, Platform};
+use fso::workloads::{NonDnnAlgo, NonDnnWorkload};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fso-warmstart-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+// mirrors tests/e2e_small.rs, whose parameters are known to yield a
+// non-empty feasible front and Eq.-3 winners
+fn small_cfg() -> DatagenConfig {
+    DatagenConfig {
+        n_arch: 6,
+        n_backend_train: 10,
+        n_backend_test: 4,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    }
+}
+
+fn run_datagen(store: &Arc<CacheStore>, cfg: &DatagenConfig) -> GeneratedData {
+    let service = EvalService::new(cfg.enablement, cfg.seed)
+        .with_workers(2)
+        .with_cache_store(Arc::clone(store));
+    datagen::generate_with(&service, cfg).expect("datagen")
+}
+
+#[test]
+fn warm_start_datagen_rows_are_byte_identical_with_disk_hits() {
+    let dir = tmp_dir("datagen");
+    let cfg = small_cfg();
+
+    let cold = {
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        let g = run_datagen(&store, &cfg);
+        assert_eq!(g.stats.disk_hits, 0, "cold run must not see disk hits");
+        assert!(g.stats.oracle_misses > 0, "cold run must run the oracle");
+        assert!(store.flush().unwrap() > 0, "cold run must flush shards");
+        g
+    };
+
+    // fresh store instance + fresh service: everything re-read from disk
+    let warm = {
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        run_datagen(&store, &cfg)
+    };
+
+    assert_eq!(cold.dataset.rows, warm.dataset.rows);
+    assert_eq!(cold.backend_split.train, warm.backend_split.train);
+    assert_eq!(cold.backend_split.test, warm.backend_split.test);
+    assert!(warm.stats.disk_hits > 0, "warm run saw no disk hits: {}", warm.stats);
+    assert_eq!(
+        warm.stats.oracle_misses, 0,
+        "warm run re-ran the oracle: {}",
+        warm.stats
+    );
+    assert!(warm.stats.oracle_misses < cold.stats.oracle_misses);
+    assert!(warm.stats.shard_loads > 0);
+
+    // byte-for-byte: the CSVs the CLI would write are identical
+    let cold_csv = tmp_dir("datagen-cold-csv").with_extension("csv");
+    let warm_csv = tmp_dir("datagen-warm-csv").with_extension("csv");
+    cold.dataset.write_csv(&cold_csv).unwrap();
+    warm.dataset.write_csv(&warm_csv).unwrap();
+    assert_eq!(
+        std::fs::read(&cold_csv).unwrap(),
+        std::fs::read(&warm_csv).unwrap(),
+        "cold and warm CSVs differ"
+    );
+    let _ = std::fs::remove_file(&cold_csv);
+    let _ = std::fs::remove_file(&warm_csv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn run_dse(g: &GeneratedData, store: &Arc<CacheStore>) -> (DseOutcome, EvalStats) {
+    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 1).unwrap();
+    let service = EvalService::new(Enablement::Gf12, 2023)
+        .with_workers(2)
+        .with_cache_store(Arc::clone(store))
+        .with_surrogate(surrogate);
+    let driver = DseDriver { service };
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let problem = axiline_svm_problem(
+        g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max) * 2.0,
+        runtimes[runtimes.len() * 3 / 4],
+    );
+    let outcome = driver
+        .run_batched(
+            &problem,
+            60,
+            2,
+            MotpeConfig { n_startup: 16, seed: 5, ..Default::default() },
+            12,
+        )
+        .unwrap();
+    (outcome, driver.stats())
+}
+
+#[test]
+fn warm_start_dse_pareto_front_is_identical_with_disk_hits() {
+    let dir = tmp_dir("dse");
+    // shared surrogate input (plain datagen — the cache under test only
+    // covers the DSE driver's ground-truth oracle traffic)
+    let g = datagen::generate(&small_cfg()).unwrap();
+
+    let (cold, cold_stats) = {
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        let out = run_dse(&g, &store);
+        store.flush().unwrap();
+        out
+    };
+    let store = Arc::new(CacheStore::open(&dir).unwrap());
+    let (warm, warm_stats) = run_dse(&g, &store);
+
+    assert!(
+        !cold.best.is_empty(),
+        "Eq. 3 selected no winners — the cache never saw oracle traffic"
+    );
+    assert_eq!(cold.points, warm.points, "MOTPE trajectories diverged");
+    assert_eq!(cold.best, warm.best, "Eq. 3 winners diverged");
+    assert_eq!(cold.ground_truth_errors, warm.ground_truth_errors);
+    assert_eq!(cold.pareto_front(), warm.pareto_front(), "Pareto fronts diverged");
+
+    assert!(cold_stats.oracle_misses > 0);
+    assert_eq!(cold_stats.disk_hits, 0);
+    assert!(warm_stats.disk_hits > 0, "warm DSE saw no disk hits: {warm_stats}");
+    assert_eq!(
+        warm_stats.oracle_misses, 0,
+        "warm DSE re-ran the oracle: {warm_stats}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn multi_enablement_sweep_warm_starts_from_one_store() {
+    let dir = tmp_dir("sweep");
+    let mk = |e: Enablement| DatagenConfig {
+        n_arch: 3,
+        n_backend_train: 5,
+        n_backend_test: 2,
+        ..DatagenConfig::small(Platform::Vta, e)
+    };
+    let cfgs = [mk(Enablement::Gf12), mk(Enablement::Ng45)];
+
+    let cold = {
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        let out = datagen::generate_sweep(&cfgs, Some(Arc::clone(&store))).unwrap();
+        store.flush().unwrap();
+        out
+    };
+    let store = Arc::new(CacheStore::open(&dir).unwrap());
+    let warm = datagen::generate_sweep(&cfgs, Some(Arc::clone(&store))).unwrap();
+
+    for ((cfg, c), w) in cfgs.iter().zip(&cold).zip(&warm) {
+        let tag = cfg.enablement.name();
+        assert_eq!(c.dataset.rows, w.dataset.rows, "[{tag}] rows diverged");
+        assert!(w.stats.disk_hits > 0, "[{tag}] no disk hits: {}", w.stats);
+        assert_eq!(w.stats.oracle_misses, 0, "[{tag}] oracle re-ran: {}", w.stats);
+    }
+    // the two enablements really produced different data (no key mixup)
+    assert_ne!(cold[0].dataset.rows, cold[1].dataset.rows);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flow_results_are_shared_across_workloads_through_disk() {
+    // the workload-free flow key lets a *different* workload reuse the
+    // expensive SP&R result from disk; only the simulator re-runs
+    let dir = tmp_dir("flowshare");
+    let p = Platform::Axiline;
+    let arch = ArchConfig::new(
+        p,
+        p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+    );
+    let bcfg = BackendConfig::new(0.8, 0.5);
+
+    let cold_flow = {
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        let svc = EvalService::new(Enablement::Gf12, 7).with_cache_store(Arc::clone(&store));
+        let ev = svc.evaluate(&arch, bcfg, None).unwrap();
+        store.flush().unwrap();
+        ev.flow
+    };
+
+    let store = Arc::new(CacheStore::open(&dir).unwrap());
+    let svc = EvalService::new(Enablement::Gf12, 7).with_cache_store(store);
+    let wl = NonDnnWorkload::standard(NonDnnAlgo::Svm, 55);
+    let ev = svc.evaluate(&arch, bcfg, Some(&wl)).unwrap();
+    let s = svc.stats();
+    assert_eq!(ev.flow.backend, cold_flow.backend, "flow PPA must match the cold run");
+    assert_eq!(ev.flow.synth, cold_flow.synth);
+    assert_eq!(s.disk_hits, 1, "flow should load from disk: {s}");
+    assert_eq!(
+        s.oracle_misses, 1,
+        "the new workload's simulator pass is a (cheap) miss: {s}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
