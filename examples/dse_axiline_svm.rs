@@ -5,8 +5,11 @@
 //! winners ground-truthed against the full SP&R oracle.
 //!
 //! Run: `cargo run --release --example dse_axiline_svm [-- --quick] [-- --cache-dir DIR]`
-//! With `--cache-dir`, the SP&R oracle results persist between runs —
-//! a second invocation warm-starts from disk and reports the hits.
+//! With `--cache-dir`, the SP&R oracle results *and* the fitted
+//! surrogate bundle persist between runs — a second invocation
+//! warm-starts from disk (0 oracle runs, 0 surrogate refits) and
+//! replays a byte-identical Pareto front. `--no-model-cache` keeps
+//! only the oracle half.
 
 use fso::coordinator::experiments::{dse, ExpOptions};
 use fso::util::cli::Args;
@@ -16,6 +19,7 @@ fn main() -> anyhow::Result<()> {
     let opts = ExpOptions {
         quick: args.flag("quick"),
         cache_dir: args.path("cache-dir"),
+        no_model_cache: args.flag("no-model-cache"),
         ..Default::default()
     };
     opts.ensure_out_dir()?;

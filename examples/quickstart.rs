@@ -4,8 +4,11 @@
 //! the framework's minimal loop.
 //!
 //! Run: `cargo run --release --example quickstart [-- --cache-dir DIR]`
-//! With `--cache-dir`, the SP&R oracle results persist: a second run
-//! warm-starts from disk (watch the "persistent … disk hits" stats).
+//! With `--cache-dir`, the SP&R oracle results *and* the fitted
+//! surrogate persist: a second run warm-starts from disk (watch the
+//! "persistent … disk hits" stats and the "surrogate: replayed" line —
+//! zero oracle runs, zero refits). `--no-model-cache` keeps only the
+//! oracle half.
 
 use std::sync::Arc;
 
@@ -13,7 +16,7 @@ use anyhow::Result;
 
 use fso::backend::Enablement;
 use fso::coordinator::dse_driver::SurrogateBundle;
-use fso::coordinator::{datagen, CacheStore, DatagenConfig, EvalService};
+use fso::coordinator::{datagen, CacheStore, DatagenConfig, EvalService, ModelStore};
 use fso::data::Metric;
 use fso::generators::Platform;
 use fso::metrics::mape_stats;
@@ -48,8 +51,25 @@ fn main() -> Result<()> {
     println!("  datagen eval service: {}", g.stats);
 
     // 2. Fit the two-stage surrogate (ROI classifier + per-metric GBDT)
-    //    and attach it to a service for batched scoring.
-    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7)?;
+    //    and attach it to a service for batched scoring. With a cache
+    //    dir, the fitted bundle reads through the model store: a warm
+    //    run loads the artifact instead of refitting.
+    let mstore = match args.path("cache-dir") {
+        Some(dir) if !args.flag("no-model-cache") => {
+            Some(Arc::new(ModelStore::open_under(dir)?))
+        }
+        _ => None,
+    };
+    let (surrogate, replayed) =
+        SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, mstore.as_deref())?;
+    println!(
+        "  surrogate: {}",
+        if replayed { "replayed from model store (0 refits)" } else { "fitted fresh" }
+    );
+    if let Some(ms) = &mstore {
+        ms.flush()?;
+        println!("  model store: {}", ms.stats());
+    }
     let service = EvalService::new(cfg.enablement, cfg.seed)
         .with_surrogate(surrogate)
         .with_workers(2);

@@ -221,6 +221,56 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // ---- model store: cold fit + flush vs warm artifact load ----------
+    // the ISSUE-3 acceptance rows: a cold start pays the full surrogate
+    // fit (ROI classifier + 5 GBDT regressors) and the artifact flush;
+    // a warm start loads and deserializes the stored bundle instead —
+    // bit-identical predictions, zero refits.
+    {
+        use fso::coordinator::ModelStore;
+        let g = datagen::generate(&DatagenConfig {
+            n_arch: 8,
+            n_backend_train: 12,
+            n_backend_test: 4,
+            ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+        })
+        .unwrap();
+        let dir =
+            std::env::temp_dir().join(format!("fso-bench-models-{}", std::process::id()));
+        b.run("model_store/cold_fit_surrogate+flush", || {
+            let _ = std::fs::remove_dir_all(&dir);
+            let ms = ModelStore::open(&dir).unwrap();
+            let (s, replayed) =
+                SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&ms))
+                    .unwrap();
+            assert!(!replayed);
+            ms.flush().unwrap();
+            s
+        });
+        // seed the directory once for the warm rows
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let ms = ModelStore::open(&dir).unwrap();
+            SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&ms)).unwrap();
+            ms.flush().unwrap();
+        }
+        b.run("model_store/warm_load_surrogate", || {
+            let ms = ModelStore::open(&dir).unwrap();
+            let (s, replayed) =
+                SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&ms))
+                    .unwrap();
+            assert!(replayed, "warm start must replay the stored bundle");
+            s
+        });
+        {
+            let ms = ModelStore::open(&dir).unwrap();
+            let _ = SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&ms))
+                .unwrap();
+            println!("    model store stats: {}", ms.stats());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // ---- datagen / train / DSE end-to-end rows (per table family) -----
     b.run("e2e/datagen_axiline_24x40 (tab3-5 input)", || {
         datagen::generate(&DatagenConfig::small(Platform::Axiline, Enablement::Gf12))

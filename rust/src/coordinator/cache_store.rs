@@ -37,6 +37,20 @@
 //! warm-start run returns byte-identical results to the cold run that
 //! populated the store. `tests/warm_start.rs` pins this end to end.
 //!
+//! Cross-process safety (ISSUE 3): trainer and DSE processes may share
+//! one cache directory concurrently. Flushes are serialized through a
+//! directory lock file (`.store.lock`, stolen after a staleness
+//! timeout so a crashed holder never wedges the store) and each dirty
+//! shard is **merged on flush**: the disk shard is re-parsed right
+//! before the rewrite, so entries another process flushed since our
+//! last read are folded in instead of silently dropped (in-memory
+//! entries win; values are identical by the determinism contract).
+//!
+//! NB: `model_store.rs` mirrors this shard/lock/flush protocol line
+//! for line. Until the two grow a shared generic core (ROADMAP), any
+//! change to the lazy-load / merge-on-flush / DirLock-ordering logic
+//! must be applied to BOTH files.
+//!
 //! Design aggregates are *not* persisted: regenerating a module tree is
 //! cheap relative to a flow run, and keeping the record schema to the
 //! two oracle kinds keeps shard files small.
@@ -76,7 +90,9 @@ pub struct CacheStoreStats {
     pub flushes: usize,
     /// Entries currently held (flow + eval records).
     pub entries: usize,
-    /// Entries created since the last flush.
+    /// Entries residing in shards with unflushed changes (an upper
+    /// bound on the write-behind backlog: a dirty shard's disk-loaded
+    /// entries count too, since the whole shard rewrites at flush).
     pub pending: usize,
 }
 
@@ -203,6 +219,13 @@ impl CacheStore {
         }
         inner.shards[shard].loaded = true;
         self.shard_loads.fetch_add(1, Ordering::Relaxed);
+        self.parse_shard_lines(inner, shard);
+    }
+
+    /// The raw disk-to-map merge under `load_shard` and the flush-time
+    /// re-read. Does not touch the `loaded` flag or the lazy-load
+    /// counter — callers decide what the read means.
+    fn parse_shard_lines(&self, inner: &mut Inner, shard: usize) {
         let text = match fs::read_to_string(self.shard_path(shard)) {
             Ok(t) => t,
             Err(_) => return, // never flushed, or unreadable: treat as empty
@@ -280,15 +303,35 @@ impl CacheStore {
     }
 
     /// Write every dirty shard atomically (temp file + rename in the
-    /// same directory). A dirty shard is loaded first so a flush never
-    /// drops on-disk entries the run did not happen to read. Returns
-    /// the number of shard files written.
+    /// same directory). Flushes from processes sharing the directory
+    /// are serialized by a lock file, and each dirty shard is re-read
+    /// from disk right before the rewrite (merge-on-flush), so a flush
+    /// never drops entries — neither on-disk records this run did not
+    /// happen to read, nor records a concurrent process flushed since.
+    /// Returns the number of shard files written.
     pub fn flush(&self) -> Result<usize> {
+        // cheap dirtiness pre-check, then take the cross-process lock
+        // *without* holding the in-process Mutex: a contended DirLock
+        // wait (up to the staleness window) must not stall every
+        // worker thread doing get/put on the shared store
+        {
+            let inner = self.inner.lock().unwrap();
+            if !inner.shards.iter().any(|s| s.dirty) {
+                return Ok(0);
+            }
+        }
+        let lock = DirLock::acquire(&self.dir)?;
         let mut inner = self.inner.lock().unwrap();
+        // recompute under the lock: another thread may have flushed
         let dirty: Vec<usize> =
             (0..self.n_shards).filter(|&s| inner.shards[s].dirty).collect();
+        if dirty.is_empty() {
+            return Ok(0);
+        }
         for &shard in &dirty {
-            self.load_shard(&mut inner, shard);
+            lock.refresh();
+            self.parse_shard_lines(&mut inner, shard);
+            inner.shards[shard].loaded = true;
             let mut lines: Vec<(u8, u64, String)> = Vec::new();
             for (&key, fr) in &inner.flows {
                 if self.shard_of(key) == shard {
@@ -310,9 +353,7 @@ impl CacheStore {
             write_atomic(&self.shard_path(shard), body.as_bytes())?;
             inner.shards[shard].dirty = false;
         }
-        if !dirty.is_empty() {
-            self.flushes.fetch_add(1, Ordering::Relaxed);
-        }
+        self.flushes.fetch_add(1, Ordering::Relaxed);
         Ok(dirty.len())
     }
 
@@ -360,9 +401,120 @@ impl Drop for CacheStore {
     }
 }
 
+/// Cross-process flush serialization for a store directory: a
+/// `.store.lock` file created with `create_new` (atomic on every
+/// filesystem we care about) and removed on drop. A lock whose *file*
+/// has not changed for the staleness window is presumed to belong to a
+/// crashed process and is broken — flushes must never wedge a run
+/// forever. Staleness is judged by the lock file's age, never by how
+/// long this waiter has been waiting: a live holder mid-long-flush, or
+/// a sequence of short-lived locks taken by other processes, must not
+/// get stolen (stealing a live lock reintroduces the lost-update race
+/// the lock exists to prevent). Shared by `CacheStore` and
+/// `ModelStore` (separate directories, so their locks never contend).
+pub(crate) struct DirLock {
+    path: PathBuf,
+    /// Unique content written into the lock file; `drop` unlinks the
+    /// file only while it still holds this token, so a holder whose
+    /// lock was stolen never deletes the new holder's lock.
+    token: String,
+    /// The handle from `create_new`: `refresh` touches mtime through
+    /// it, so a stalled holder whose lock was stolen (path renamed and
+    /// recreated by the new holder) touches its own orphaned inode,
+    /// never the new holder's file.
+    file: fs::File,
+}
+
+impl DirLock {
+    const STALE_MS: u128 = 30_000;
+    /// A lock file stamped in the *future* only reads as stale past
+    /// this much skew. It is deliberately much larger than `STALE_MS`:
+    /// a live holder whose clock runs ahead by less than this ages out
+    /// naturally (its mtime drifts into the past as real time passes),
+    /// while an absurd future timestamp — which could otherwise never
+    /// age out and would wedge every flusher forever — is eventually
+    /// broken. NTP-grade skew is well under a second; ten minutes of
+    /// skew between hosts cooperating on one cache dir is operational
+    /// pathology, and progress wins at that point.
+    const FUTURE_SKEW_STALE_MS: u128 = 600_000;
+    const POLL_MS: u64 = 20;
+
+    pub(crate) fn acquire(dir: &Path) -> Result<DirLock> {
+        static NONCE: AtomicUsize = AtomicUsize::new(0);
+        let path = dir.join(".store.lock");
+        let token = format!(
+            "{}-{}",
+            std::process::id(),
+            NONCE.fetch_add(1, Ordering::Relaxed)
+        );
+        loop {
+            match fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = f.write_all(token.as_bytes());
+                    let _ = f.sync_all();
+                    return Ok(DirLock { path, token, file: f });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = match fs::metadata(&path).and_then(|m| m.modified()) {
+                        Ok(mtime) => match mtime.elapsed() {
+                            Ok(age) => age.as_millis() >= Self::STALE_MS,
+                            // mtime ahead of our clock: see
+                            // FUTURE_SKEW_STALE_MS for why this bound
+                            // is far looser than the normal window
+                            Err(skew) => {
+                                skew.duration().as_millis() >= Self::FUTURE_SKEW_STALE_MS
+                            }
+                        },
+                        // lock vanished between create_new and the stat
+                        // (holder released): just retry create_new
+                        Err(_) => false,
+                    };
+                    if stale {
+                        // crashed holder (the file itself went stale,
+                        // see `refresh`). Steal by *rename*, which is
+                        // atomic: exactly one contender claims the
+                        // stale file; the losers' renames fail and
+                        // they re-poll — so a fresh lock created by
+                        // the winner is never unlinked by a loser.
+                        let stolen = dir.join(format!(".store.lock.stale-{token}"));
+                        if fs::rename(&path, &stolen).is_ok() {
+                            let _ = fs::remove_file(&stolen);
+                        }
+                        continue;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(Self::POLL_MS));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("locking {}", path.display()))
+                }
+            }
+        }
+    }
+
+    /// Keep the holder visibly live during a long multi-shard flush
+    /// (staleness is judged by file mtime): touch mtime through the
+    /// handle opened at acquire — never through the path, which may
+    /// by now belong to a new holder after a staleness steal. Call
+    /// between expensive write steps.
+    pub(crate) fn refresh(&self) {
+        let _ = self.file.set_modified(std::time::SystemTime::now());
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        // unlink only while we still own the file: after a staleness
+        // steal the path holds the new holder's token, and removing it
+        // would admit a third concurrent writer
+        if fs::read_to_string(&self.path).is_ok_and(|s| s == self.token) {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
 /// Write `bytes` to `path` atomically: temp file in the same directory
 /// (same filesystem, so the rename is atomic), then rename over.
-fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     let dir = path.parent().context("cache path has no parent directory")?;
     let base = path.file_name().context("cache path has no file name")?;
     let tmp = dir.join(format!(".{}.tmp-{}", base.to_string_lossy(), std::process::id()));
@@ -378,11 +530,11 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
-fn parse_hex_key(s: &str) -> Option<u64> {
+pub(crate) fn parse_hex_key(s: &str) -> Option<u64> {
     u64::from_str_radix(s, 16).ok()
 }
 
-fn hex_key(key: u64) -> String {
+pub(crate) fn hex_key(key: u64) -> String {
     format!("{key:016x}")
 }
 
@@ -664,6 +816,35 @@ mod tests {
         assert!(
             store.get_eval(0x0500_0000_0000_0044).is_none(),
             "field-less record must read as corrupt, not as NaNs"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_merge_on_flush() {
+        // ISSUE 3: two store instances (stand-ins for two processes)
+        // write distinct keys routed to the same shard. The classic
+        // lost-update: the later flush used to rewrite the shard from
+        // its own memory only, dropping the earlier writer's record.
+        let dir = tmp_dir("merge");
+        let ev = sample_eval();
+        let a = CacheStore::open(&dir).unwrap();
+        let b = CacheStore::open(&dir).unwrap();
+        a.put_eval(0x0aff_0000_0000_0001, ev);
+        b.put_eval(0x0aff_0000_0000_0002, ev);
+        a.flush().unwrap();
+        b.flush().unwrap(); // b never read a's entry in memory
+        drop(a);
+        drop(b);
+        let c = CacheStore::open(&dir).unwrap();
+        assert!(
+            c.get_eval(0x0aff_0000_0000_0001).is_some(),
+            "a's entry must survive b's flush (merge-on-flush)"
+        );
+        assert!(c.get_eval(0x0aff_0000_0000_0002).is_some());
+        assert!(
+            !dir.join(".store.lock").exists(),
+            "flush must release the directory lock"
         );
         let _ = fs::remove_dir_all(&dir);
     }

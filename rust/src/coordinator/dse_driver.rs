@@ -21,10 +21,12 @@ use crate::data::{Dataset, Metric, Split};
 use crate::dse::{select_best, Candidate, CostSpec, Motpe, MotpeConfig};
 use crate::generators::{ArchConfig, ParamKind, ParamSpec, Platform};
 use crate::models::{Gbdt, GbdtParams, RoiClassifier};
+use crate::util::json::Json;
 use crate::util::pool::{default_workers, par_map};
 use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
 
 use super::eval_service::{EvalService, EvalStats};
+use super::model_store::{ModelKey, ModelStore};
 
 /// The trained predictor bundle the DSE consults (two-stage: ROI
 /// classifier + per-metric GBDT regressors — the fastest family at
@@ -103,6 +105,73 @@ impl SurrogateBundle {
         self.predict_batch(&[feats.to_vec()], 1)
             .pop()
             .expect("one row in, one prediction out")
+    }
+
+    /// Model-store family tag for persisted bundles.
+    pub const STORE_KIND: &'static str = "surrogate-bundle";
+
+    /// Content-hash key for the fitted bundle: everything `fit` is a
+    /// pure function of — the training features, ROI labels, every
+    /// per-metric target vector, and the seed.
+    pub fn store_key(ds: &Dataset, split: &Split, seed: u64) -> u64 {
+        let mut key = ModelKey::new(Self::STORE_KIND)
+            .rows(&ds.features(&split.train))
+            .bools(&ds.roi_labels(&split.train))
+            .u64(seed);
+        for m in Metric::ALL {
+            key = key.f64s(&ds.targets(&split.train, m));
+        }
+        key.finish()
+    }
+
+    /// Model-store serialization (bit-exact prediction replay — the
+    /// warm DSE trajectory and Pareto front are byte-identical).
+    pub fn to_json(&self) -> Json {
+        let regs: Vec<(&str, Json)> = Metric::ALL
+            .iter()
+            .map(|m| (m.name(), self.regressors[m].to_json()))
+            .collect();
+        Json::obj(vec![
+            ("classifier", self.classifier.to_json()),
+            ("regressors", Json::obj(regs)),
+        ])
+    }
+
+    /// Strict inverse of `to_json`: `None` on any defect (missing
+    /// metric, corrupt tree), so callers fall back to refitting.
+    pub fn from_json(j: &Json) -> Option<SurrogateBundle> {
+        let classifier = RoiClassifier::from_json(j.get("classifier"))?;
+        let mut regressors = BTreeMap::new();
+        for m in Metric::ALL {
+            regressors.insert(m, Gbdt::from_json(j.get("regressors").get(m.name()))?);
+        }
+        Some(SurrogateBundle { classifier, regressors })
+    }
+
+    /// Read-through `fit` (ISSUE 3): serve the bundle from the model
+    /// store when an artifact for these exact inputs exists —
+    /// bit-identical predictions, zero refits — and fit + write-behind
+    /// otherwise (durable at the caller's flush). A corrupt artifact
+    /// reads as a miss: the fallback refit repairs it. Returns the
+    /// bundle and whether it was served from the store.
+    pub fn fit_cached(
+        ds: &Dataset,
+        split: &Split,
+        seed: u64,
+        store: Option<&ModelStore>,
+    ) -> Result<(SurrogateBundle, bool)> {
+        let Some(store) = store else {
+            return Ok((SurrogateBundle::fit(ds, split, seed)?, false));
+        };
+        let key = Self::store_key(ds, split, seed);
+        if let Some(payload) = store.get(Self::STORE_KIND, key) {
+            if let Some(bundle) = SurrogateBundle::from_json(&payload) {
+                return Ok((bundle, true));
+            }
+        }
+        let bundle = SurrogateBundle::fit(ds, split, seed)?;
+        store.put(Self::STORE_KIND, key, bundle.to_json());
+        Ok((bundle, false))
     }
 }
 

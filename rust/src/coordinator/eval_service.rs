@@ -47,8 +47,9 @@ use anyhow::{Context, Result};
 use crate::backend::{BackendConfig, Enablement, FlowResult, SpnrFlow};
 use crate::coordinator::cache_store::CacheStore;
 use crate::coordinator::dse_driver::SurrogateBundle;
+use crate::coordinator::model_store::ModelStore;
 use crate::coordinator::predict_server::PredictClient;
-use crate::data::Metric;
+use crate::data::{Dataset, Metric, Split};
 use crate::generators::{unified_features, ArchConfig, DesignAggregates, FEAT_DIM};
 use crate::simulators::{simulate, simulate_nondnn, SystemMetrics};
 use crate::util::pool::par_map;
@@ -112,6 +113,11 @@ pub struct EvalStats {
     pub shard_loads: usize,
     /// Flushes the attached store has performed (store-level).
     pub flushes: usize,
+    /// Surrogate-model artifacts served from the attached `ModelStore`
+    /// (store-level counters, shared by everything attached to it).
+    pub model_hits: usize,
+    /// Model-store lookups that fell back to a fresh fit.
+    pub model_misses: usize,
 }
 
 impl EvalStats {
@@ -168,6 +174,11 @@ impl std::fmt::Display for EvalStats {
             f,
             " | persistent {} disk hits ({} shard loads, {} flushes)",
             self.disk_hits, self.shard_loads, self.flushes
+        )?;
+        write!(
+            f,
+            " | model store {} hits / {} misses",
+            self.model_hits, self.model_misses
         )
     }
 }
@@ -213,6 +224,9 @@ pub struct EvalService {
     /// misses, write-behind on oracle runs); shared across services
     /// and across runs via `Arc<CacheStore>`.
     store: Option<Arc<CacheStore>>,
+    /// Optional persistent surrogate-model store (ISSUE 3):
+    /// `fit_surrogate` reads through it and writes fresh fits behind.
+    model_store: Option<Arc<ModelStore>>,
     counters: Counters,
 }
 
@@ -231,6 +245,7 @@ impl EvalService {
             flow_cache: Mutex::new(HashMap::new()),
             agg_cache: Mutex::new(HashMap::new()),
             store: None,
+            model_store: None,
             counters: Counters::default(),
         }
     }
@@ -280,13 +295,54 @@ impl EvalService {
         self.store.as_ref()
     }
 
-    /// Flush the attached store's pending records to disk (no-op
-    /// without a store). Returns the number of shard files written.
-    pub fn flush_cache(&self) -> Result<usize> {
-        match &self.store {
-            Some(s) => s.flush(),
-            None => Ok(0),
+    /// Attach a persistent surrogate-model store (ISSUE 3):
+    /// [`EvalService::fit_surrogate`] reads fitted bundles through it
+    /// and writes fresh fits behind. Cohabits with the oracle store
+    /// under one `--cache-dir` (see `coordinator::model_store`). Never
+    /// changes results — stored models replay bit-identical
+    /// predictions — only wall-clock.
+    pub fn with_model_store(mut self, store: Arc<ModelStore>) -> EvalService {
+        self.model_store = Some(store);
+        self
+    }
+
+    /// `with_model_store` for CLI plumbing: attaches when given.
+    pub fn with_model_store_opt(self, store: Option<Arc<ModelStore>>) -> EvalService {
+        match store {
+            Some(s) => self.with_model_store(s),
+            None => self,
         }
+    }
+
+    /// The attached model store, if any.
+    pub fn model_store(&self) -> Option<&Arc<ModelStore>> {
+        self.model_store.as_ref()
+    }
+
+    /// Fit-or-load the two-stage DSE surrogate through the attached
+    /// model store and attach it for `predict_batch` (read-through on
+    /// the fit request, write-behind after fitting; a plain fit
+    /// without a store attached). Returns whether the bundle was
+    /// served from the store — a warm start reports `true` and runs
+    /// zero refits.
+    pub fn fit_surrogate(&mut self, ds: &Dataset, split: &Split, seed: u64) -> Result<bool> {
+        let (bundle, cached) =
+            SurrogateBundle::fit_cached(ds, split, seed, self.model_store.as_deref())?;
+        self.surrogate = Some(bundle);
+        Ok(cached)
+    }
+
+    /// Flush both attached stores' pending records to disk (no-op for
+    /// absent stores). Returns the number of shard files written.
+    pub fn flush_cache(&self) -> Result<usize> {
+        let mut written = 0;
+        if let Some(s) = &self.store {
+            written += s.flush()?;
+        }
+        if let Some(m) = &self.model_store {
+            written += m.flush()?;
+        }
+        Ok(written)
     }
 
     pub fn enablement(&self) -> Enablement {
@@ -319,6 +375,8 @@ impl EvalService {
             disk_hits: self.counters.disk_hits.load(Ordering::Relaxed),
             shard_loads: self.store.as_ref().map_or(0, |s| s.shard_loads()),
             flushes: self.store.as_ref().map_or(0, |s| s.flush_count()),
+            model_hits: self.model_store.as_ref().map_or(0, |m| m.hits()),
+            model_misses: self.model_store.as_ref().map_or(0, |m| m.misses()),
         }
     }
 

@@ -7,9 +7,7 @@ use anyhow::Result;
 
 use crate::backend::Enablement;
 use crate::coordinator::datagen::{self, DatagenConfig};
-use crate::coordinator::dse_driver::{
-    axiline_svm_problem, vta_backend_problem, DseDriver, SurrogateBundle,
-};
+use crate::coordinator::dse_driver::{axiline_svm_problem, vta_backend_problem, DseDriver};
 use crate::coordinator::EvalService;
 use crate::data::Metric;
 use crate::dse::MotpeConfig;
@@ -75,14 +73,25 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
     }
     println!("[fig11] generating Axiline/NG45 training data ({} archs)...", cfg.n_arch);
     // one service carries datagen and the DSE ground-truth checks, so
-    // the oracle memo is shared; --cache-dir makes it warm-startable
+    // the oracle memo is shared; --cache-dir makes both the oracle
+    // results and the fitted surrogate warm-startable
     let store = opts.open_cache()?;
-    let service = EvalService::new(enablement, cfg.seed)
+    let mstore = opts.open_model_store()?;
+    let mut service = EvalService::new(enablement, cfg.seed)
         .with_workers(crate::util::pool::default_workers())
-        .with_cache_store_opt(store.clone());
+        .with_cache_store_opt(store.clone())
+        .with_model_store_opt(mstore.clone());
     let g = datagen::generate_with(&service, &cfg)?;
-    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, opts.seed)?;
-    let driver = DseDriver { service: service.with_surrogate(surrogate) };
+    let cached = service.fit_surrogate(&g.dataset, &g.backend_split, opts.seed)?;
+    println!(
+        "[fig11] surrogate: {}",
+        if cached {
+            "replayed from model store (0 refits, 0 tuning evals)"
+        } else {
+            "fitted fresh (1 refit)"
+        }
+    );
+    let driver = DseDriver { service };
 
     // constraints: generous power cap, runtime cap from the dataset's
     // median (forces the search away from the slow tail)
@@ -111,6 +120,10 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
         store.flush()?;
         println!("[fig11] cache store: {}", store.stats());
     }
+    if let Some(ms) = &mstore {
+        ms.flush()?;
+        println!("[fig11] model store: {}", ms.stats());
+    }
     let worst = report(opts, "fig11", &outcome)?;
     println!(
         "paper claim: top-3 within 7% of post-SP&R  |  measured worst: {:.1}%",
@@ -133,12 +146,22 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
     }
     println!("[fig12] generating VTA/GF12 training data ({} archs)...", cfg.n_arch);
     let store = opts.open_cache()?;
-    let service = EvalService::new(enablement, cfg.seed)
+    let mstore = opts.open_model_store()?;
+    let mut service = EvalService::new(enablement, cfg.seed)
         .with_workers(crate::util::pool::default_workers())
-        .with_cache_store_opt(store.clone());
+        .with_cache_store_opt(store.clone())
+        .with_model_store_opt(mstore.clone());
     let g = datagen::generate_with(&service, &cfg)?;
-    let surrogate = SurrogateBundle::fit(&g.dataset, &g.backend_split, opts.seed)?;
-    let driver = DseDriver { service: service.with_surrogate(surrogate) };
+    let cached = service.fit_surrogate(&g.dataset, &g.backend_split, opts.seed)?;
+    println!(
+        "[fig12] surrogate: {}",
+        if cached {
+            "replayed from model store (0 refits, 0 tuning evals)"
+        } else {
+            "fitted fresh (1 refit)"
+        }
+    );
+    let driver = DseDriver { service };
 
     let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
     runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -169,6 +192,10 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
     if let Some(store) = &store {
         store.flush()?;
         println!("[fig12] cache store: {}", store.stats());
+    }
+    if let Some(ms) = &mstore {
+        ms.flush()?;
+        println!("[fig12] model store: {}", ms.stats());
     }
     let worst = report(opts, "fig12", &outcome)?;
     println!(

@@ -19,8 +19,13 @@ pub struct ExpOptions {
     /// Reduced sizes for smoke runs / CI.
     pub quick: bool,
     /// Persistent oracle cache directory (`--cache-dir`): experiments
-    /// that run the SP&R oracle warm-start from it and flush back.
+    /// that run the SP&R oracle warm-start from it and flush back. The
+    /// same directory carries the surrogate-model store (`models/`
+    /// subdirectory) unless `no_model_cache` opts out.
     pub cache_dir: Option<PathBuf>,
+    /// `--no-model-cache`: keep the oracle cache but skip the
+    /// surrogate-model store (always refit).
+    pub no_model_cache: bool,
 }
 
 impl Default for ExpOptions {
@@ -30,6 +35,7 @@ impl Default for ExpOptions {
             out_dir: PathBuf::from("results"),
             quick: false,
             cache_dir: None,
+            no_model_cache: false,
         }
     }
 }
@@ -49,6 +55,22 @@ impl ExpOptions {
         match &self.cache_dir {
             Some(dir) => Ok(Some(std::sync::Arc::new(
                 crate::coordinator::CacheStore::open(dir)?,
+            ))),
+            None => Ok(None),
+        }
+    }
+
+    /// Open the surrogate-model store cohabiting under `cache_dir`
+    /// (`<cache_dir>/models/`), unless `no_model_cache` opts out.
+    pub fn open_model_store(
+        &self,
+    ) -> Result<Option<std::sync::Arc<crate::coordinator::ModelStore>>> {
+        if self.no_model_cache {
+            return Ok(None);
+        }
+        match &self.cache_dir {
+            Some(dir) => Ok(Some(std::sync::Arc::new(
+                crate::coordinator::ModelStore::open_under(dir)?,
             ))),
             None => Ok(None),
         }

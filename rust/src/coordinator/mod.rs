@@ -8,6 +8,7 @@ pub mod datagen;
 pub mod dse_driver;
 pub mod eval_service;
 pub mod experiments;
+pub mod model_store;
 pub mod predict_server;
 pub mod trainer;
 
@@ -15,5 +16,6 @@ pub use cache_store::{CacheStore, CacheStoreStats};
 pub use datagen::{generate, generate_sweep, generate_with, DatagenConfig, GeneratedData};
 pub use dse_driver::{DseDriver, DseProblem, SurrogateBundle};
 pub use eval_service::{EvalService, EvalStats, Evaluation, SurrogatePoint};
+pub use model_store::{ModelKey, ModelStore, ModelStoreStats};
 pub use predict_server::{PredictClient, PredictServer, ServerStats};
-pub use trainer::{EvalReport, ModelMenu, TrainOptions, Trainer};
+pub use trainer::{EvalReport, ModelCacheStats, ModelMenu, TrainOptions, Trainer};

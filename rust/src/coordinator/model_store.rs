@@ -1,0 +1,616 @@
+//! Persistent surrogate-model store (ISSUE 3 tentpole; ROADMAP
+//! "surrogate-model persistence so a warm start skips refitting too").
+//!
+//! PR 2 made the *oracle* cache durable, but every warm start still
+//! re-tuned and refit the GBDT/RF/ensemble surrogates from scratch —
+//! with the oracle served from disk, refitting now dominates restart
+//! wall-clock. This store makes the fitted models durable too,
+//! mirroring `cache_store.rs` discipline:
+//!
+//! - **Content-hash keys**: a model artifact is keyed by a hash of
+//!   everything the fit is a pure function of — training matrices (a
+//!   dataset + split + metric fingerprint), tuning budget, and seed —
+//!   built through [`ModelKey`]. Same inputs ⇒ same key ⇒ the stored
+//!   model replays **bit-identical predictions**, because every model
+//!   family serializes its f64s through `util::json`'s exact
+//!   round-trip.
+//! - **Schema-tagged JSONL shards**: records carry `{"v", "kind",
+//!   "key", "model"}`; unknown versions and corrupt lines are skipped
+//!   on load, and a payload that fails a family's `from_json` reads as
+//!   a miss — callers fall back to refitting (and overwrite the bad
+//!   artifact at the next flush). Shard files are written in sorted
+//!   (kind, key) order, so they are byte-deterministic for an entry
+//!   set.
+//! - **Lazy load, atomic flush, merge-on-flush**: shard files parse on
+//!   first touch; flushes rewrite dirty shards via temp + rename under
+//!   the shared `.store.lock`, re-reading the disk shard first so a
+//!   concurrent trainer/DSE process sharing the directory never loses
+//!   records (same cross-process contract as the oracle store).
+//! - **Cohabitation**: the store lives in a `models/` subdirectory of
+//!   the oracle cache dir ([`ModelStore::open_under`]), so one
+//!   `--cache-dir` carries both oracle shards and model artifacts
+//!   without the two stores' files or locks ever colliding.
+//!
+//! Readers/writers: `Trainer` (tuned GBDT/RF, ROI classifier, stacked
+//! ensemble), `SurrogateBundle::fit_cached` (the DSE surrogate), and
+//! `EvalService::fit_surrogate` route through here — read-through on
+//! fit requests, write-behind after tuning, flushed by the CLI or the
+//! last `Drop`. `--no-model-cache` is the CLI escape hatch.
+//!
+//! NB: the shard/lock/flush *protocol* here deliberately mirrors
+//! `cache_store.rs` line for line (only the record schema and sort key
+//! differ). Until the two grow a shared generic core (ROADMAP), any
+//! change to the lazy-load / merge-on-flush / DirLock-ordering logic
+//! must be applied to BOTH files.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::hash_bytes;
+
+use super::cache_store::{hex_key, parse_hex_key, write_atomic, DirLock};
+
+/// Record schema version; bump on any layout change. Loaders skip
+/// records whose tag does not match.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default shard-file count (model artifacts are few but large, so
+/// fewer shards than the oracle store).
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Deterministic content-hash key builder for model artifacts: feed it
+/// everything the fitted model is a pure function of (family tag,
+/// training matrices, labels, tuning budget, seeds) and `finish`.
+/// f64s are hashed by bit pattern, and every field is length-prefixed
+/// so adjacent fields cannot alias.
+pub struct ModelKey {
+    bytes: Vec<u8>,
+}
+
+impl ModelKey {
+    pub fn new(tag: &str) -> ModelKey {
+        let mut bytes = Vec::with_capacity(256);
+        bytes.extend_from_slice(tag.as_bytes());
+        bytes.push(0);
+        ModelKey { bytes }
+    }
+
+    pub fn u64(mut self, v: u64) -> ModelKey {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn usize(self, v: usize) -> ModelKey {
+        self.u64(v as u64)
+    }
+
+    pub fn str(mut self, s: &str) -> ModelKey {
+        self.bytes.extend_from_slice(&(s.len() as u64).to_le_bytes());
+        self.bytes.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub fn f64s(mut self, vs: &[f64]) -> ModelKey {
+        self.bytes.extend_from_slice(&(vs.len() as u64).to_le_bytes());
+        for v in vs {
+            self.bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        self
+    }
+
+    pub fn rows(mut self, rows: &[Vec<f64>]) -> ModelKey {
+        self.bytes.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+        for r in rows {
+            self = self.f64s(r);
+        }
+        self
+    }
+
+    pub fn bools(mut self, bs: &[bool]) -> ModelKey {
+        self.bytes.extend_from_slice(&(bs.len() as u64).to_le_bytes());
+        self.bytes.extend(bs.iter().map(|&b| b as u8));
+        self
+    }
+
+    pub fn finish(self) -> u64 {
+        hash_bytes(&self.bytes)
+    }
+}
+
+/// Counters for the store (surfaced through `EvalStats` when a service
+/// is attached, and printable on their own for CLI summaries).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelStoreStats {
+    /// Lookups answered with a stored artifact of the requested kind.
+    pub hits: usize,
+    /// Lookups that found nothing (or a kind mismatch) — the caller
+    /// refits.
+    pub misses: usize,
+    /// Shard files parsed so far (lazy loading).
+    pub shard_loads: usize,
+    /// `flush` calls that wrote at least one shard.
+    pub flushes: usize,
+    /// Artifacts currently held.
+    pub entries: usize,
+    /// Artifacts residing in shards with unflushed changes (an upper
+    /// bound on the write-behind backlog: a dirty shard's disk-loaded
+    /// entries count too, since the whole shard rewrites at flush).
+    pub pending: usize,
+}
+
+impl std::fmt::Display for ModelStoreStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} artifacts ({} pending) | {} hits / {} misses | {} shard loads | {} flushes",
+            self.entries, self.pending, self.hits, self.misses, self.shard_loads, self.flushes
+        )
+    }
+}
+
+#[derive(Clone, Copy)]
+struct ShardState {
+    loaded: bool,
+    dirty: bool,
+}
+
+struct Entry {
+    kind: String,
+    payload: Json,
+}
+
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    shards: Vec<ShardState>,
+}
+
+/// Disk-backed, sharded, read-through/write-behind store for fitted
+/// surrogate models. Thread-safe; share one instance across the
+/// trainer and services via `Arc`.
+pub struct ModelStore {
+    dir: PathBuf,
+    n_shards: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    shard_loads: AtomicUsize,
+    flushes: AtomicUsize,
+}
+
+impl ModelStore {
+    /// Open (creating if needed) a model-store directory with the
+    /// default shard count. An existing directory keeps the shard
+    /// count it was created with (recorded in `meta.json`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ModelStore> {
+        ModelStore::open_sharded(dir, DEFAULT_SHARDS)
+    }
+
+    /// The cohabitation entry point: open the model store that lives
+    /// under an oracle cache directory (`<cache-dir>/models/`), so one
+    /// `--cache-dir` carries both stores.
+    pub fn open_under(cache_dir: impl AsRef<Path>) -> Result<ModelStore> {
+        ModelStore::open(cache_dir.as_ref().join("models"))
+    }
+
+    /// Open with an explicit shard count (ignored when the directory
+    /// already records one).
+    pub fn open_sharded(dir: impl Into<PathBuf>, n_shards: usize) -> Result<ModelStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating model store dir {}", dir.display()))?;
+        let meta_path = dir.join("meta.json");
+        let n_shards = match fs::read_to_string(&meta_path) {
+            Ok(text) => {
+                let meta = Json::parse(&text)
+                    .with_context(|| format!("parsing {}", meta_path.display()))?;
+                let v = meta.get("v").as_usize().unwrap_or(0) as u64;
+                anyhow::ensure!(
+                    v == SCHEMA_VERSION,
+                    "model store {} has schema v{v}, this binary expects v{SCHEMA_VERSION}",
+                    dir.display()
+                );
+                meta.get("shards")
+                    .as_usize()
+                    .filter(|&s| s > 0)
+                    .with_context(|| format!("{}: bad shard count", meta_path.display()))?
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                let n = n_shards.max(1);
+                let meta = Json::obj(vec![
+                    ("v", Json::from(SCHEMA_VERSION as usize)),
+                    ("shards", Json::from(n)),
+                ]);
+                write_atomic(&meta_path, format!("{meta}\n").as_bytes())?;
+                n
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", meta_path.display()))
+            }
+        };
+        Ok(ModelStore {
+            dir,
+            n_shards,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                shards: vec![ShardState { loaded: false, dirty: false }; n_shards],
+            }),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            shard_loads: AtomicUsize::new(0),
+            flushes: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.n_shards
+    }
+
+    fn shard_of(&self, key: u64) -> usize {
+        ((key >> 56) as usize) % self.n_shards
+    }
+
+    fn shard_path(&self, shard: usize) -> PathBuf {
+        self.dir.join(format!("model-{shard:03}.jsonl"))
+    }
+
+    fn load_shard(&self, inner: &mut Inner, shard: usize) {
+        if inner.shards[shard].loaded {
+            return;
+        }
+        inner.shards[shard].loaded = true;
+        self.shard_loads.fetch_add(1, Ordering::Relaxed);
+        self.parse_shard_lines(inner, shard);
+    }
+
+    /// Disk-to-map merge (in-memory entries win). Unknown schema
+    /// versions and corrupt lines are skipped; payloads are *not*
+    /// validated here — a family's `from_json` is the arbiter, so a
+    /// structurally-valid but semantically-corrupt artifact surfaces
+    /// as a refit, never a crash.
+    fn parse_shard_lines(&self, inner: &mut Inner, shard: usize) {
+        let text = match fs::read_to_string(self.shard_path(shard)) {
+            Ok(t) => t,
+            Err(_) => return,
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let rec = match Json::parse(line) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            if rec.get("v").as_usize().map(|v| v as u64) != Some(SCHEMA_VERSION) {
+                continue;
+            }
+            let key = match rec.get("key").as_str().and_then(parse_hex_key) {
+                Some(k) => k,
+                None => continue,
+            };
+            let kind = match rec.get("kind").as_str() {
+                Some(k) => k.to_string(),
+                None => continue,
+            };
+            let payload = rec.get("model").clone();
+            if payload == Json::Null {
+                continue;
+            }
+            inner
+                .entries
+                .entry(key)
+                .or_insert(Entry { kind, payload });
+        }
+    }
+
+    /// Stored artifact payload for (kind, key), if present. A key held
+    /// under a different kind reads as a miss (content-hash keys embed
+    /// the family tag, so this only happens on adversarial input).
+    pub fn get(&self, kind: &str, key: u64) -> Option<Json> {
+        let mut inner = self.inner.lock().unwrap();
+        self.load_shard(&mut inner, self.shard_of(key));
+        match inner.entries.get(&key) {
+            Some(e) if e.kind == kind => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.payload.clone())
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record an artifact (write-behind: durable at the next flush).
+    /// Overwrites an existing entry whose payload differs — that is
+    /// how a corrupt artifact gets repaired after the fallback refit.
+    pub fn put(&self, kind: &str, key: u64, payload: Json) {
+        let mut inner = self.inner.lock().unwrap();
+        let shard = self.shard_of(key);
+        let changed = match inner.entries.get(&key) {
+            Some(e) => e.kind != kind || e.payload != payload,
+            None => true,
+        };
+        if changed {
+            inner
+                .entries
+                .insert(key, Entry { kind: kind.to_string(), payload });
+            inner.shards[shard].dirty = true;
+        }
+    }
+
+    /// Write every dirty shard atomically, serialized across processes
+    /// by the directory lock and merged with the disk state first
+    /// (same contract as `CacheStore::flush`). Returns the number of
+    /// shard files written.
+    pub fn flush(&self) -> Result<usize> {
+        // dirtiness pre-check, then the cross-process lock *without*
+        // the in-process Mutex held (a contended lock wait must not
+        // stall concurrent get/put callers), then recompute under it
+        {
+            let inner = self.inner.lock().unwrap();
+            if !inner.shards.iter().any(|s| s.dirty) {
+                return Ok(0);
+            }
+        }
+        let lock = DirLock::acquire(&self.dir)?;
+        let mut inner = self.inner.lock().unwrap();
+        let dirty: Vec<usize> =
+            (0..self.n_shards).filter(|&s| inner.shards[s].dirty).collect();
+        if dirty.is_empty() {
+            return Ok(0);
+        }
+        for &shard in &dirty {
+            lock.refresh();
+            self.parse_shard_lines(&mut inner, shard);
+            inner.shards[shard].loaded = true;
+            let mut lines: Vec<(String, u64, String)> = inner
+                .entries
+                .iter()
+                .filter(|(k, _)| self.shard_of(**k) == shard)
+                .map(|(&k, e)| {
+                    let rec = Json::obj(vec![
+                        ("v", Json::from(SCHEMA_VERSION as usize)),
+                        ("kind", e.kind.as_str().into()),
+                        ("key", hex_key(k).as_str().into()),
+                        ("model", e.payload.clone()),
+                    ]);
+                    (e.kind.clone(), k, rec.to_string())
+                })
+                .collect();
+            // sorted (kind, key) order: shard bytes are deterministic
+            lines.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+            let mut body = String::new();
+            for (_, _, line) in &lines {
+                body.push_str(line);
+                body.push('\n');
+            }
+            write_atomic(&self.shard_path(shard), body.as_bytes())?;
+            inner.shards[shard].dirty = false;
+        }
+        self.flushes.fetch_add(1, Ordering::Relaxed);
+        Ok(dirty.len())
+    }
+
+    /// Snapshot the store counters.
+    pub fn stats(&self) -> ModelStoreStats {
+        let inner = self.inner.lock().unwrap();
+        let pending = inner
+            .entries
+            .keys()
+            .filter(|&&k| inner.shards[self.shard_of(k)].dirty)
+            .count();
+        ModelStoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            shard_loads: self.shard_loads.load(Ordering::Relaxed),
+            flushes: self.flushes.load(Ordering::Relaxed),
+            entries: inner.entries.len(),
+            pending,
+        }
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn shard_loads(&self) -> usize {
+        self.shard_loads.load(Ordering::Relaxed)
+    }
+
+    pub fn flush_count(&self) -> usize {
+        self.flushes.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ModelStore {
+    /// Best-effort durability for callers that forget an explicit
+    /// flush; errors are swallowed (Drop cannot fail).
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fso-model-store-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn payload(v: f64) -> Json {
+        Json::obj(vec![("w", Json::arr_f64(&[v, -v])), ("b", v.into())])
+    }
+
+    #[test]
+    fn artifacts_survive_reopen_byte_exactly() {
+        let dir = tmp_dir("roundtrip");
+        let key = 0x0123_4567_89ab_cdefu64;
+        {
+            let store = ModelStore::open(&dir).unwrap();
+            store.put("test-family", key, payload(1.0 / 3.0));
+            assert_eq!(store.stats().pending, 1);
+            store.flush().unwrap();
+            assert_eq!(store.stats().pending, 0);
+        }
+        let store = ModelStore::open(&dir).unwrap();
+        let got = store.get("test-family", key).expect("artifact survives reopen");
+        assert_eq!(got, payload(1.0 / 3.0));
+        assert_eq!(
+            got.get("b").as_f64().unwrap().to_bits(),
+            (1.0f64 / 3.0).to_bits(),
+            "f64 payloads must round-trip bit-exactly"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kind_mismatch_and_missing_keys_are_misses() {
+        let dir = tmp_dir("miss");
+        let store = ModelStore::open(&dir).unwrap();
+        store.put("family-a", 42, payload(2.0));
+        assert!(store.get("family-b", 42).is_none(), "kind mismatch is a miss");
+        assert!(store.get("family-a", 43).is_none());
+        assert!(store.get("family-a", 42).is_some());
+        assert_eq!(store.misses(), 2);
+        assert_eq!(store.hits(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn put_overwrites_changed_payloads() {
+        // the corrupt-artifact repair path: a refit must replace the
+        // stored payload, not be swallowed by insert-if-absent
+        let dir = tmp_dir("overwrite");
+        {
+            let store = ModelStore::open(&dir).unwrap();
+            store.put("f", 7, payload(1.0));
+            store.flush().unwrap();
+            store.put("f", 7, payload(2.0));
+            assert_eq!(store.stats().pending, 1, "changed payload re-dirties");
+            store.put("f", 7, payload(2.0));
+            store.flush().unwrap();
+        }
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.get("f", 7).unwrap(), payload(2.0));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_lines_and_unknown_versions_are_skipped() {
+        let dir = tmp_dir("skip");
+        let key = 0x0500_0000_0000_0042u64;
+        {
+            let store = ModelStore::open(&dir).unwrap();
+            store.put("f", key, payload(3.0));
+            store.flush().unwrap();
+        }
+        let store = ModelStore::open(&dir).unwrap();
+        let shard_path = store.shard_path(store.shard_of(key));
+        drop(store);
+        let mut text = fs::read_to_string(&shard_path).unwrap();
+        text.push_str("{ not json\n");
+        text.push_str("{\"v\":999,\"kind\":\"f\",\"key\":\"0500000000000043\",\"model\":{}}\n");
+        text.push_str("{\"v\":1,\"kind\":\"f\",\"key\":\"0500000000000044\"}\n"); // no payload
+        fs::write(&shard_path, text).unwrap();
+        let store = ModelStore::open(&dir).unwrap();
+        assert!(store.get("f", key).is_some(), "good record still loads");
+        assert!(store.get("f", 0x0500_0000_0000_0043).is_none(), "v999 skipped");
+        assert!(store.get("f", 0x0500_0000_0000_0044).is_none(), "payload-less skipped");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_stores_merge_on_flush() {
+        let dir = tmp_dir("merge");
+        let a = ModelStore::open(&dir).unwrap();
+        let b = ModelStore::open(&dir).unwrap();
+        // same shard (same top byte), different keys
+        a.put("f", 0x0b00_0000_0000_0001, payload(1.0));
+        b.put("f", 0x0b00_0000_0000_0002, payload(2.0));
+        a.flush().unwrap();
+        b.flush().unwrap();
+        drop(a);
+        drop(b);
+        let c = ModelStore::open(&dir).unwrap();
+        assert!(c.get("f", 0x0b00_0000_0000_0001).is_some(), "merge-on-flush");
+        assert!(c.get("f", 0x0b00_0000_0000_0002).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_files_are_byte_deterministic() {
+        let dir_a = tmp_dir("det-a");
+        let dir_b = tmp_dir("det-b");
+        let keys: Vec<u64> = (0..24u64)
+            .map(|i| crate::util::rng::hash_bytes(&i.to_le_bytes()))
+            .collect();
+        {
+            let store = ModelStore::open(&dir_a).unwrap();
+            for &k in &keys {
+                store.put("f", k, payload(k as f64));
+            }
+            store.flush().unwrap();
+        }
+        {
+            let store = ModelStore::open(&dir_b).unwrap();
+            for &k in keys.iter().rev() {
+                store.put("f", k, payload(k as f64));
+            }
+            store.flush().unwrap();
+        }
+        let list = |dir: &Path| -> Vec<(String, Vec<u8>)> {
+            let mut files: Vec<_> =
+                fs::read_dir(dir).unwrap().map(|e| e.unwrap().path()).collect();
+            files.sort();
+            files
+                .iter()
+                .map(|p| {
+                    let name = p.file_name().unwrap().to_string_lossy().to_string();
+                    assert!(!name.contains(".tmp"), "leftover temp file {name}");
+                    (name, fs::read(p).unwrap())
+                })
+                .collect()
+        };
+        assert_eq!(list(&dir_a), list(&dir_b));
+        let _ = fs::remove_dir_all(&dir_a);
+        let _ = fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn model_keys_separate_tags_inputs_and_seeds() {
+        let base = || ModelKey::new("fam").rows(&[vec![1.0, 2.0]]).u64(7);
+        let k0 = base().finish();
+        assert_eq!(k0, base().finish(), "keys are deterministic");
+        assert_ne!(k0, ModelKey::new("fam2").rows(&[vec![1.0, 2.0]]).u64(7).finish());
+        assert_ne!(k0, base().u64(0).finish());
+        assert_ne!(
+            ModelKey::new("f").f64s(&[1.0]).f64s(&[]).finish(),
+            ModelKey::new("f").f64s(&[]).f64s(&[1.0]).finish(),
+            "length prefixes must prevent field aliasing"
+        );
+        assert_ne!(
+            ModelKey::new("f").f64s(&[0.0]).finish(),
+            ModelKey::new("f").f64s(&[-0.0]).finish(),
+            "bit-pattern hashing distinguishes -0.0"
+        );
+    }
+}

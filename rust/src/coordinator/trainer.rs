@@ -4,9 +4,18 @@
 //! (AOT artifacts through the PJRT engine), and the stacked ensemble —
 //! and evaluate muAPE / MAPE / STD APE on the test rows the ROI gate
 //! accepts.
+//!
+//! Persistence (ISSUE 3): with a [`ModelStore`] attached, every tree-
+//! family fit request reads through the store — a warm start at the
+//! same (data, budget, seed) skips the tuning searches entirely and
+//! replays bit-identical predictions — and freshly fitted models are
+//! written behind (durable at the caller's flush). The per-run
+//! [`ModelCacheStats`] in each report pin the acceptance contract:
+//! a warm rerun shows 0 refits and 0 tuning-search evaluations.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -14,9 +23,11 @@ use crate::data::{Dataset, Metric, Split};
 use crate::metrics::{mape_stats, ClassifyStats, MapeStats};
 use crate::models::{
     tune_gbdt, tune_rf, AnnModel, BasePredictions, GcnModel, GraphCache, RoiClassifier,
-    SearchBudget, StackedEnsemble, TrainConfig,
+    SearchBudget, StackedEnsemble, TrainConfig, TunedGbdt, TunedRf,
 };
 use crate::runtime::Engine;
+
+use super::model_store::{ModelKey, ModelStore};
 
 /// Which model families to run (GCN/ANN dominate wall-clock; experiments
 /// can trim).
@@ -89,6 +100,37 @@ impl TrainOptions {
     }
 }
 
+/// Per-run model-cache accounting (ISSUE 3 acceptance: a warm rerun
+/// reports 0 refits and 0 tuning-search evaluations).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ModelCacheStats {
+    /// Models served from the persistent store (bit-identical replay).
+    pub cached: usize,
+    /// Models fitted fresh this run.
+    pub refits: usize,
+    /// Tuning-search model evaluations executed (stage-1 + stage-2
+    /// fits per random discrete search that actually ran).
+    pub tuning_evals: usize,
+}
+
+impl std::ops::AddAssign for ModelCacheStats {
+    fn add_assign(&mut self, o: ModelCacheStats) {
+        self.cached += o.cached;
+        self.refits += o.refits;
+        self.tuning_evals += o.tuning_evals;
+    }
+}
+
+impl std::fmt::Display for ModelCacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} models cached | {} refits | {} tuning evals",
+            self.cached, self.refits, self.tuning_evals
+        )
+    }
+}
+
 /// Per-model evaluation on the ROI-gated test set.
 #[derive(Debug, Clone)]
 pub struct EvalReport {
@@ -98,22 +140,59 @@ pub struct EvalReport {
     pub models: BTreeMap<String, MapeStats>,
     /// test rows accepted by the ROI gate (and actually in ROI)
     pub eval_rows: usize,
+    /// How this run's models were obtained (store hits vs. refits).
+    pub model_cache: ModelCacheStats,
 }
 
 pub struct Trainer {
     pub engine: Option<Rc<Engine>>,
+    /// Optional persistent surrogate-model store: fit requests read
+    /// through it, fresh fits are written behind (ISSUE 3).
+    pub model_store: Option<Arc<ModelStore>>,
 }
 
 impl Trainer {
     /// `engine` is optional: tree-only menus never touch PJRT.
     pub fn new(engine: Option<Rc<Engine>>) -> Trainer {
-        Trainer { engine }
+        Trainer { engine, model_store: None }
     }
 
     pub fn from_artifacts() -> Result<Trainer> {
         let dir = crate::test_support::artifacts_dir()
             .context("artifacts not found (run `make artifacts`)")?;
-        Ok(Trainer { engine: Some(Rc::new(Engine::load(&dir)?)) })
+        Ok(Trainer::new(Some(Rc::new(Engine::load(&dir)?))))
+    }
+
+    /// Attach a persistent model store (read-through on fit requests,
+    /// write-behind after tuning). Never changes results — a stored
+    /// model replays bit-identical predictions — only wall-clock.
+    pub fn with_model_store(mut self, store: Arc<ModelStore>) -> Trainer {
+        self.model_store = Some(store);
+        self
+    }
+
+    /// `with_model_store` for CLI plumbing that may or may not have a
+    /// cache dir: attaches when given, no-op otherwise.
+    pub fn with_model_store_opt(self, store: Option<Arc<ModelStore>>) -> Trainer {
+        match store {
+            Some(s) => self.with_model_store(s),
+            None => self,
+        }
+    }
+
+    /// Look up a stored artifact and decode it; a decode failure reads
+    /// as a miss (corrupt artifacts fall back to refitting).
+    fn load_model<T>(&self, kind: &str, key: u64, decode: impl Fn(&crate::util::json::Json) -> Option<T>) -> Option<T> {
+        self.model_store
+            .as_ref()
+            .and_then(|s| s.get(kind, key))
+            .and_then(|payload| decode(&payload))
+    }
+
+    fn store_model(&self, kind: &str, key: u64, payload: crate::util::json::Json) {
+        if let Some(store) = &self.model_store {
+            store.put(kind, key, payload);
+        }
     }
 
     /// Train + evaluate every family in the menu for one metric.
@@ -136,10 +215,29 @@ impl Trainer {
             ds.carve_validation(&mut split, 0.2, opts.seed);
         }
 
+        let mut mc = ModelCacheStats::default();
+
         // ---- stage 1: ROI classifier on all training rows ----
         let x_all_train = ds.features(&split.train);
         let roi_train = ds.roi_labels(&split.train);
-        let classifier = RoiClassifier::fit(&x_all_train, &roi_train, opts.seed);
+        let cls_key = ModelKey::new("roi-classifier")
+            .rows(&x_all_train)
+            .bools(&roi_train)
+            .u64(opts.seed)
+            .finish();
+        let classifier =
+            match self.load_model("roi-classifier", cls_key, RoiClassifier::from_json) {
+                Some(c) => {
+                    mc.cached += 1;
+                    c
+                }
+                None => {
+                    let c = RoiClassifier::fit(&x_all_train, &roi_train, opts.seed);
+                    mc.refits += 1;
+                    self.store_model("roi-classifier", cls_key, c.to_json());
+                    c
+                }
+            };
         let x_test = ds.features(&split.test);
         let roi_test = ds.roi_labels(&split.test);
         let roi_stats = classifier.evaluate(&x_test, &roi_test);
@@ -169,31 +267,83 @@ impl Trainer {
         let mut models = BTreeMap::new();
         let mut bases: Vec<BasePredictions> = Vec::new();
 
-        // the GBDT and RF tuners are independent seeded searches: run
-        // them concurrently on the shared pool (same EvalService
-        // discipline — parallelism never changes seeded results)
-        let (tuned_gbdt, tuned_rf) =
-            if opts.menu.gbdt && opts.menu.rf && opts.effective_workers() > 1 {
-                std::thread::scope(|scope| {
-                    let g = scope
-                        .spawn(|| tune_gbdt(&x_train, &y_train, &x_val, &y_val, opts.search));
-                    let r = scope
-                        .spawn(|| tune_rf(&x_train, &y_train, &x_val, &y_val, opts.search));
-                    (
-                        Some(g.join().expect("gbdt tuner panicked")),
-                        Some(r.join().expect("rf tuner panicked")),
-                    )
-                })
-            } else {
+        // tuned-model keys: the search is a pure function of the four
+        // matrices and the budget, so these cover dataset, split,
+        // metric, tuning config, and seed at once
+        let tuner_key = |tag: &str| {
+            ModelKey::new(tag)
+                .rows(&x_train)
+                .f64s(&y_train)
+                .rows(&x_val)
+                .f64s(&y_val)
+                .usize(opts.search.stage1)
+                .usize(opts.search.stage2)
+                .u64(opts.search.seed)
+                .finish()
+        };
+        let gbdt_key = tuner_key("tuned-gbdt");
+        let rf_key = tuner_key("tuned-rf");
+        let cached_gbdt = opts
+            .menu
+            .gbdt
+            .then(|| self.load_model("tuned-gbdt", gbdt_key, TunedGbdt::from_json))
+            .flatten();
+        let cached_rf = opts
+            .menu
+            .rf
+            .then(|| self.load_model("tuned-rf", rf_key, TunedRf::from_json))
+            .flatten();
+
+        // the GBDT and RF tuners are independent seeded searches: when
+        // both actually need to run, fan them out on the shared pool
+        // (same EvalService discipline — parallelism never changes
+        // seeded results); a store hit skips its search entirely
+        let need_g = opts.menu.gbdt && cached_gbdt.is_none();
+        let need_r = opts.menu.rf && cached_rf.is_none();
+        let (fresh_gbdt, fresh_rf) = if need_g && need_r && opts.effective_workers() > 1 {
+            std::thread::scope(|scope| {
+                let g = scope
+                    .spawn(|| tune_gbdt(&x_train, &y_train, &x_val, &y_val, opts.search));
+                let r = scope
+                    .spawn(|| tune_rf(&x_train, &y_train, &x_val, &y_val, opts.search));
                 (
-                    opts.menu
-                        .gbdt
-                        .then(|| tune_gbdt(&x_train, &y_train, &x_val, &y_val, opts.search)),
-                    opts.menu
-                        .rf
-                        .then(|| tune_rf(&x_train, &y_train, &x_val, &y_val, opts.search)),
+                    Some(g.join().expect("gbdt tuner panicked")),
+                    Some(r.join().expect("rf tuner panicked")),
                 )
-            };
+            })
+        } else {
+            (
+                need_g.then(|| tune_gbdt(&x_train, &y_train, &x_val, &y_val, opts.search)),
+                need_r.then(|| tune_rf(&x_train, &y_train, &x_val, &y_val, opts.search)),
+            )
+        };
+        let search_evals = opts.search.stage1 + opts.search.stage2;
+        let tuned_gbdt = match (cached_gbdt, fresh_gbdt) {
+            (Some(t), _) => {
+                mc.cached += 1;
+                Some(t)
+            }
+            (None, Some(t)) => {
+                mc.refits += 1;
+                mc.tuning_evals += search_evals;
+                self.store_model("tuned-gbdt", gbdt_key, t.to_json());
+                Some(t)
+            }
+            (None, None) => None,
+        };
+        let tuned_rf = match (cached_rf, fresh_rf) {
+            (Some(t), _) => {
+                mc.cached += 1;
+                Some(t)
+            }
+            (None, Some(t)) => {
+                mc.refits += 1;
+                mc.tuning_evals += search_evals;
+                self.store_model("tuned-rf", rf_key, t.to_json());
+                Some(t)
+            }
+            (None, None) => None,
+        };
 
         if let Some(tuned) = tuned_gbdt {
             let pred = tuned.model.predict(&x_eval);
@@ -217,6 +367,7 @@ impl Trainer {
             let engine = self.engine.as_ref().context("ANN needs the PJRT engine")?;
             let mut ann = AnnModel::new(engine.clone(), &opts.ann_variant, opts.ann_cfg)?;
             ann.fit(&x_train, &y_train, &x_val, &y_val)?;
+            mc.refits += 1; // PJRT models are not persisted (AOT theta lives elsewhere)
             let pred = ann.predict(&x_eval)?;
             models.insert("ANN".to_string(), mape_stats(&y_eval, &pred));
             bases.push(BasePredictions {
@@ -226,7 +377,26 @@ impl Trainer {
             });
         }
         if opts.menu.ensemble && bases.len() >= 2 {
-            let ens = StackedEnsemble::fit(&bases, &y_val)?;
+            // keyed by what the meta-learner sees: base names + their
+            // validation predictions + the validation targets
+            let mut ekey = ModelKey::new("stacked-ensemble");
+            for b in &bases {
+                ekey = ekey.str(&b.name).f64s(&b.val);
+            }
+            let ens_key = ekey.f64s(&y_val).finish();
+            let ens = match self.load_model("stacked-ensemble", ens_key, StackedEnsemble::from_json)
+            {
+                Some(e) => {
+                    mc.cached += 1;
+                    e
+                }
+                None => {
+                    let e = StackedEnsemble::fit(&bases, &y_val)?;
+                    mc.refits += 1;
+                    self.store_model("stacked-ensemble", ens_key, e.to_json());
+                    e
+                }
+            };
             let pred = ens.predict(&bases);
             models.insert("Ensemble".to_string(), mape_stats(&y_eval, &pred));
         }
@@ -236,10 +406,17 @@ impl Trainer {
             let mut gcn = GcnModel::new(engine.clone(), &opts.gcn_variant, opts.gcn_cfg)?;
             let targets: Vec<f64> = ds.rows.iter().map(|r| r.target(metric)).collect();
             gcn.fit(ds, &cache, &train_roi, &val_roi, &targets)?;
+            mc.refits += 1;
             let pred = gcn.predict_rows(ds, &cache, &eval_idx)?;
             models.insert("GCN".to_string(), mape_stats(&y_eval, &pred));
         }
 
-        Ok(EvalReport { metric, roi: roi_stats, models, eval_rows: eval_idx.len() })
+        Ok(EvalReport {
+            metric,
+            roi: roi_stats,
+            models,
+            eval_rows: eval_idx.len(),
+            model_cache: mc,
+        })
     }
 }

@@ -197,7 +197,13 @@ impl Motpe {
                 best = Some((score, cand));
             }
         }
-        best.unwrap().1
+        match best {
+            Some((_, cand)) => cand,
+            // empty candidate set (e.g. a zero candidate budget):
+            // fall back to a prior sample instead of panicking —
+            // ISSUE 3 satellite regression for `best.unwrap()`
+            None => self.random_point(),
+        }
     }
 
     /// Propose `n` configurations without intermediate observations
@@ -286,6 +292,23 @@ mod tests {
             xs.iter().sum::<f64>() / xs.len() as f64
         };
         assert!(motpe_err < random_err, "{motpe_err} !< {random_err}");
+    }
+
+    #[test]
+    fn empty_candidate_set_falls_back_to_prior_sample() {
+        // ISSUE 3 satellite regression: with the model path active and
+        // no candidates drawn, ask() used to panic on best.unwrap()
+        let mut m = Motpe::new(
+            space2d(),
+            MotpeConfig { n_startup: 2, n_candidates: 0, seed: 1, ..Default::default() },
+        );
+        for _ in 0..30 {
+            let x = m.ask();
+            assert!(x.iter().all(|v| (0.0..=1.0).contains(v)), "prior sample in range");
+            let obj = eval(&x);
+            m.tell(x, obj, true);
+        }
+        assert_eq!(m.trials.len(), 30);
     }
 
     #[test]

@@ -74,6 +74,14 @@ pub struct ParetoFront {
 
 impl ParetoFront {
     pub fn insert(&mut self, obj: Vec<f64>, payload: usize) -> bool {
+        // A point with a NaN objective is never dominated (every
+        // comparison is false), so it would sit on the front forever
+        // and silently poison it; ±Inf is equally meaningless as an
+        // objective value. Reject non-finite points outright —
+        // ISSUE 3 satellite.
+        if obj.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
         if self
             .objectives
             .iter()
@@ -167,5 +175,21 @@ mod tests {
         let mut front = ParetoFront::default();
         assert!(front.insert(vec![1.0, 1.0], 0));
         assert!(!front.insert(vec![1.0, 1.0], 1));
+    }
+
+    #[test]
+    fn non_finite_objectives_are_rejected() {
+        // ISSUE 3 satellite regression: a NaN point is never dominated,
+        // so it used to enter the front and sit there forever
+        let mut front = ParetoFront::default();
+        assert!(!front.insert(vec![f64::NAN, 1.0], 0));
+        assert!(!front.insert(vec![1.0, f64::INFINITY], 1));
+        assert!(!front.insert(vec![f64::NEG_INFINITY, 1.0], 2));
+        assert!(front.is_empty(), "non-finite points must never poison the front");
+        // the finite path still works after rejections
+        assert!(front.insert(vec![2.0, 2.0], 3));
+        assert!(front.insert(vec![1.0, 1.0], 4), "dominating point replaces");
+        assert_eq!(front.len(), 1);
+        assert_eq!(front.payload, vec![4]);
     }
 }

@@ -116,17 +116,20 @@ pub enum ParamKind {
 
 impl ParamKind {
     /// Map a unit-interval sample u in [0,1) to a legal value (used by all
-    /// samplers so LHS/Sobol/Halton share one quantization rule).
+    /// samplers so LHS/Sobol/Halton share one quantization rule). The
+    /// discrete arms index through `sampling::stratum`, which clamps the
+    /// bin to n-1, so a coordinate of exactly 1.0 is legal (closed-
+    /// interval inputs from boundary knobs) rather than out of bounds.
     pub fn from_unit(&self, u: f64) -> f64 {
-        let u = u.clamp(0.0, 1.0 - 1e-12);
+        let u = u.clamp(0.0, 1.0);
         match self {
             ParamKind::Int { lo, hi } => {
-                let n = (hi - lo + 1) as f64;
-                lo.wrapping_add((u * n) as i64) as f64
+                let n = (hi - lo + 1).max(1) as usize;
+                lo.wrapping_add(crate::sampling::stratum(u, n) as i64) as f64
             }
             ParamKind::Float { lo, hi } => lo + u * (hi - lo),
-            ParamKind::Choice(vals) => vals[(u * vals.len() as f64) as usize],
-            ParamKind::Cat(names) => (u * names.len() as f64).floor(),
+            ParamKind::Choice(vals) => vals[crate::sampling::stratum(u, vals.len())],
+            ParamKind::Cat(names) => crate::sampling::stratum(u, names.len()) as f64,
         }
     }
 
@@ -397,6 +400,27 @@ mod tests {
             .map(|s| s.kind.from_unit(0.5))
             .collect();
         ArchConfig::new(p, values)
+    }
+
+    #[test]
+    fn from_unit_accepts_the_closed_upper_boundary() {
+        // ISSUE 3 satellite: the discrete arms used to index with
+        // (u * n) as usize, which is out of bounds at u == 1.0
+        for p in Platform::ALL {
+            for spec in p.param_space() {
+                let v = spec.kind.from_unit(1.0);
+                assert!(v.is_finite(), "{p}/{}: {v}", spec.name);
+                if !matches!(spec.kind, ParamKind::Float { .. }) {
+                    // discrete kinds: 1.0 lands in the last bin
+                    assert_eq!(
+                        v,
+                        spec.kind.from_unit(0.999_999_999),
+                        "{p}/{}: 1.0 must land in the last bin",
+                        spec.name
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -59,7 +59,9 @@ pub mod test_support {
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::backend::{BackendConfig, BackendResult, Enablement, SpnrFlow};
+    pub use crate::coordinator::cache_store::CacheStore;
     pub use crate::coordinator::eval_service::{EvalService, EvalStats, Evaluation};
+    pub use crate::coordinator::model_store::{ModelKey, ModelStore};
     pub use crate::coordinator::predict_server::PredictServer;
     pub use crate::data::{Dataset, Row, Split};
     pub use crate::dse::{CostSpec, DseConfig, Motpe, ParetoFront};

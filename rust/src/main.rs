@@ -18,7 +18,8 @@ use anyhow::{bail, Context, Result};
 use fso::backend::Enablement;
 use fso::coordinator::experiments::{self, ExpOptions};
 use fso::coordinator::{
-    datagen, CacheStore, DatagenConfig, EvalService, PredictServer, TrainOptions, Trainer,
+    datagen, CacheStore, DatagenConfig, EvalService, ModelCacheStats, ModelStore,
+    PredictServer, TrainOptions, Trainer,
 };
 use fso::data::Metric;
 use fso::generators::Platform;
@@ -63,23 +64,41 @@ USAGE:
   fso datagen --platform <tabla|genesys|vta|axiline> [--enablement gf12|ng45|gf12,ng45]
               [--archs N] [--out data.csv] [--seed N] [--cache-dir DIR]
   fso train --platform <...> [--metric power|perf|area|energy|runtime]
-            [--trees-only] [--seed N] [--cache-dir DIR]
-  fso dse --target <axiline-svm|vta> [--quick] [--cache-dir DIR]
+            [--trees-only] [--seed N] [--cache-dir DIR] [--no-model-cache]
+            [--report-out FILE]
+  fso dse --target <axiline-svm|vta> [--quick] [--cache-dir DIR] [--no-model-cache]
   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
                  [--quick] [--out-dir results] [--seed N] [--cache-dir DIR]
+                 [--no-model-cache]
   fso serve [--clients N] [--rows N]
 
 A comma-separated --enablement sweeps every listed enablement through
 one process (and one --cache-dir store); --out then writes one CSV per
 enablement (data.csv.gf12, data.csv.ng45). --cache-dir persists SP&R
 oracle results between runs: a warm start replays cached evaluations
-byte-identically and reports the disk hits in the stats line.
+byte-identically and reports the disk hits in the stats line. The same
+directory also carries fitted surrogate models (DIR/models/): a warm
+`fso train`/`fso dse` skips refitting and tuning searches entirely and
+replays bit-identical reports; --no-model-cache opts out of the model
+half while keeping the oracle cache.
 "#;
 
 /// Open the persistent oracle cache named by `--cache-dir`, if given.
 fn cache_store(args: &Args) -> Result<Option<Arc<CacheStore>>> {
     match args.path("cache-dir") {
         Some(dir) => Ok(Some(Arc::new(CacheStore::open(dir)?))),
+        None => Ok(None),
+    }
+}
+
+/// Open the surrogate-model store cohabiting under `--cache-dir`
+/// (`DIR/models/`), unless `--no-model-cache` opts out.
+fn model_store(args: &Args) -> Result<Option<Arc<ModelStore>>> {
+    if args.flag("no-model-cache") {
+        return Ok(None);
+    }
+    match args.path("cache-dir") {
+        Some(dir) => Ok(Some(Arc::new(ModelStore::open_under(dir)?))),
         None => Ok(None),
     }
 }
@@ -152,11 +171,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         None => datagen::generate(&cfg)?,
     };
+    let mstore = model_store(args)?;
     let trainer = if args.flag("trees-only") {
         Trainer::new(None)
     } else {
         Trainer::new(Some(Rc::new(Engine::load(&artifacts_dir(args))?)))
-    };
+    }
+    .with_model_store_opt(mstore.clone());
     let mut opts = TrainOptions { seed, ..Default::default() };
     if args.flag("trees-only") {
         opts.menu = fso::coordinator::ModelMenu::trees_only();
@@ -168,18 +189,36 @@ fn cmd_train(args: &Args) -> Result<()> {
             .with_context(|| format!("unknown metric {name}"))?],
         None => Metric::ALL.to_vec(),
     };
+    // the report text is accumulated separately from the cache-stats
+    // lines so the CI warm-start job can byte-diff cold vs. warm
+    // reports (--report-out) while still asserting the stats differ
+    let mut model_cache = ModelCacheStats::default();
+    let mut report_text = String::new();
     for metric in metrics {
         let report = trainer.run(&g.dataset, &g.backend_split, metric, &opts)?;
-        println!(
-            "--- {metric} (ROI acc {:.2} / F1 {:.2}, {} eval rows) ---",
+        model_cache += report.model_cache;
+        let mut block = format!(
+            "--- {metric} (ROI acc {:.2} / F1 {:.2}, {} eval rows) ---\n",
             report.roi.accuracy, report.roi.f1, report.eval_rows
         );
         for (model, stats) in &report.models {
-            println!(
-                "{model:9} muAPE {:6.2}%  STD {:6.2}  MAPE {:6.2}%",
+            block.push_str(&format!(
+                "{model:9} muAPE {:6.2}%  STD {:6.2}  MAPE {:6.2}%\n",
                 stats.mu_ape, stats.std_ape, stats.max_ape
-            );
+            ));
         }
+        print!("{block}");
+        report_text.push_str(&block);
+    }
+    println!("model cache: {model_cache}");
+    if let Some(ms) = &mstore {
+        ms.flush()?;
+        println!("model store: {}", ms.stats());
+    }
+    if let Some(out) = args.get("report-out") {
+        std::fs::write(out, &report_text)
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
     }
     Ok(())
 }
@@ -200,6 +239,7 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
         out_dir: PathBuf::from(args.get_or("out-dir", "results")),
         quick: args.flag("quick"),
         cache_dir: args.path("cache-dir"),
+        no_model_cache: args.flag("no-model-cache"),
     })
 }
 

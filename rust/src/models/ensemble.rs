@@ -4,6 +4,8 @@
 
 use anyhow::Result;
 
+use crate::util::json::Json;
+
 use super::linear::Ridge;
 
 /// A fitted base learner as the ensemble sees it: its validation and
@@ -65,6 +67,31 @@ impl StackedEnsemble {
 
     pub fn weights(&self) -> (&[f64], f64) {
         (&self.meta.weights, self.meta.intercept)
+    }
+
+    /// Model-store serialization (bit-exact prediction replay).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("base_names", Json::arr_str(&self.base_names)),
+            ("meta", self.meta.to_json()),
+        ])
+    }
+
+    /// Strict inverse of `to_json`: `None` on any defect (including a
+    /// meta-learner arity that does not match the base count), so
+    /// callers fall back to refitting.
+    pub fn from_json(j: &Json) -> Option<StackedEnsemble> {
+        let base_names = j
+            .get("base_names")
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(String::from))
+            .collect::<Option<Vec<_>>>()?;
+        let meta = Ridge::from_json(j.get("meta"))?;
+        if base_names.is_empty() || meta.weights.len() != base_names.len() {
+            return None;
+        }
+        Some(StackedEnsemble { base_names, meta })
     }
 }
 

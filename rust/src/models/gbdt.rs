@@ -1,6 +1,7 @@
 //! Gradient-boosted decision trees (paper §5.3): least-squares boosting
 //! for regression, logistic-loss boosting for the ROI classifier.
 
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::tree::{RegTree, TreeParams};
@@ -24,6 +25,28 @@ impl Default for GbdtParams {
             min_samples_leaf: 2,
             subsample: 0.9,
         }
+    }
+}
+
+impl GbdtParams {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_estimators", self.n_estimators.into()),
+            ("learning_rate", self.learning_rate.into()),
+            ("max_depth", self.max_depth.into()),
+            ("min_samples_leaf", self.min_samples_leaf.into()),
+            ("subsample", self.subsample.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<GbdtParams> {
+        Some(GbdtParams {
+            n_estimators: j.get("n_estimators").as_usize()?,
+            learning_rate: j.get("learning_rate").as_f64()?,
+            max_depth: j.get("max_depth").as_usize()?,
+            min_samples_leaf: j.get("min_samples_leaf").as_usize()?,
+            subsample: j.get("subsample").as_f64()?,
+        })
     }
 }
 
@@ -77,6 +100,33 @@ impl Gbdt {
 
     pub fn n_trees(&self) -> usize {
         self.trees.len()
+    }
+
+    /// Model-store serialization (bit-exact prediction replay — every
+    /// f64 round-trips exactly through `util::json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("params", self.params.to_json()),
+            ("base", self.base.into()),
+            ("trees", Json::Arr(self.trees.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    /// Strict inverse of `to_json`: `None` on any defect, so callers
+    /// fall back to refitting.
+    pub fn from_json(j: &Json) -> Option<Gbdt> {
+        let params = GbdtParams::from_json(j.get("params"))?;
+        let base = j.get("base").as_f64()?;
+        let trees = j
+            .get("trees")
+            .as_arr()?
+            .iter()
+            .map(RegTree::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        if !base.is_finite() {
+            return None;
+        }
+        Some(Gbdt { params, base, trees })
     }
 }
 
@@ -143,6 +193,30 @@ impl GbdtClassifier {
 
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<bool> {
         xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    /// Model-store serialization (same layout as the regressor).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("params", self.params.to_json()),
+            ("base", self.base.into()),
+            ("trees", Json::Arr(self.trees.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<GbdtClassifier> {
+        let params = GbdtParams::from_json(j.get("params"))?;
+        let base = j.get("base").as_f64()?;
+        let trees = j
+            .get("trees")
+            .as_arr()?
+            .iter()
+            .map(RegTree::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        if !base.is_finite() {
+            return None;
+        }
+        Some(GbdtClassifier { params, base, trees })
     }
 }
 

@@ -2,6 +2,8 @@
 //! partial pivoting). Serves as the stacked ensemble's meta-learner
 //! (paper §5.3: "linear regression acting as meta learner").
 
+use crate::util::json::Json;
+
 #[derive(Debug, Clone)]
 pub struct Ridge {
     /// weights[0..d], intercept last.
@@ -91,6 +93,32 @@ impl Ridge {
 
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    /// Model-store serialization (bit-exact prediction replay).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("weights", Json::arr_f64(&self.weights)),
+            ("intercept", self.intercept.into()),
+            ("lambda", self.lambda.into()),
+        ])
+    }
+
+    /// Strict inverse of `to_json`: `None` on any defect, so callers
+    /// fall back to refitting.
+    pub fn from_json(j: &Json) -> Option<Ridge> {
+        let weights = j
+            .get("weights")
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().filter(|w| w.is_finite()))
+            .collect::<Option<Vec<_>>>()?;
+        let intercept = j.get("intercept").as_f64()?;
+        let lambda = j.get("lambda").as_f64()?;
+        if !intercept.is_finite() {
+            return None;
+        }
+        Some(Ridge { weights, intercept, lambda })
     }
 }
 

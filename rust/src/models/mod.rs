@@ -21,7 +21,7 @@ pub use gcn::{GcnModel, GraphCache};
 pub use linear::Ridge;
 pub use rf::{RandomForest, RfParams};
 pub use tree::{RegTree, TreeParams};
-pub use tuning::{get_node_config, tune_gbdt, tune_rf, SearchBudget};
+pub use tuning::{get_node_config, tune_gbdt, tune_rf, SearchBudget, TunedGbdt, TunedRf};
 pub use two_stage::{RoiClassifier, TwoStageModel};
 
 /// Uniform interface over feature-based regressors (the GCN, which needs

@@ -1,6 +1,7 @@
 //! Random forest regressor (paper §5.3): bootstrap-bagged CART trees
 //! with per-split feature subsampling (`mtries`), predictions averaged.
 
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::tree::{RegTree, TreeParams};
@@ -17,6 +18,32 @@ pub struct RfParams {
 impl Default for RfParams {
     fn default() -> Self {
         RfParams { n_estimators: 150, max_depth: 16, min_samples_leaf: 1, mtries: None }
+    }
+}
+
+impl RfParams {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_estimators", self.n_estimators.into()),
+            ("max_depth", self.max_depth.into()),
+            ("min_samples_leaf", self.min_samples_leaf.into()),
+            (
+                "mtries",
+                match self.mtries {
+                    Some(m) => m.into(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<RfParams> {
+        Some(RfParams {
+            n_estimators: j.get("n_estimators").as_usize()?,
+            max_depth: j.get("max_depth").as_usize()?,
+            min_samples_leaf: j.get("min_samples_leaf").as_usize()?,
+            mtries: j.get("mtries").as_usize(),
+        })
     }
 }
 
@@ -61,6 +88,29 @@ impl RandomForest {
 
     pub fn n_trees(&self) -> usize {
         self.trees.len()
+    }
+
+    /// Model-store serialization (bit-exact prediction replay).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "trees",
+            Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()),
+        )])
+    }
+
+    /// Strict inverse of `to_json`; an empty forest reads as corrupt
+    /// (`predict_one` divides by the tree count).
+    pub fn from_json(j: &Json) -> Option<RandomForest> {
+        let trees = j
+            .get("trees")
+            .as_arr()?
+            .iter()
+            .map(RegTree::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        if trees.is_empty() {
+            return None;
+        }
+        Some(RandomForest { trees })
     }
 }
 

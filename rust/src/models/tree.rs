@@ -3,6 +3,7 @@
 //! variance-reduction splits, optional per-split feature subsampling
 //! (`mtries`, used by random forest).
 
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy)]
@@ -80,9 +81,11 @@ impl<'a> Builder<'a> {
             if fi >= primary_k && best.is_some() {
                 break;
             }
-            order.sort_unstable_by(|&a, &b| {
-                self.x[a][f].partial_cmp(&self.x[b][f]).unwrap()
-            });
+            // total_cmp, not partial_cmp().unwrap(): a NaN feature
+            // (reachable since the null-sentinel JSON round-trip reads
+            // non-finite values back as NaN) used to panic here. NaNs
+            // sort last under the IEEE total order.
+            order.sort_unstable_by(|&a, &b| self.x[a][f].total_cmp(&self.x[b][f]));
             let mut left_sum = 0.0;
             let mut left_sq = 0.0;
             for (pos, &i) in order.iter().enumerate().take(order.len() - 1) {
@@ -105,7 +108,11 @@ impl<'a> Builder<'a> {
                     + (right_sq - right_sum * right_sum / nr);
                 if best.map(|(_, _, s)| sse < s).unwrap_or(sse < base_sse - 1e-12) {
                     let thr = 0.5 * (self.x[i][f] + self.x[order[pos + 1]][f]);
-                    best = Some((f, thr, sse));
+                    // a NaN neighbour yields a NaN midpoint: not a
+                    // usable threshold (x <= NaN is always false)
+                    if thr.is_finite() {
+                        best = Some((f, thr, sse));
+                    }
                 }
             }
         }
@@ -195,6 +202,86 @@ impl RegTree {
             };
         }
     }
+
+    /// Model-store serialization: one `[feature, threshold, left,
+    /// right, value]` row per node (leaf = feature -1). f64 fields
+    /// round-trip bit-exactly through `util::json`, so a deserialized
+    /// tree replays identical predictions.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.nodes
+                .iter()
+                .map(|n| {
+                    Json::Arr(vec![
+                        Json::Num(if n.feature == usize::MAX {
+                            -1.0
+                        } else {
+                            n.feature as f64
+                        }),
+                        Json::Num(n.threshold),
+                        Json::Num(n.left as f64),
+                        Json::Num(n.right as f64),
+                        Json::Num(n.value),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Strict inverse of `to_json`: any structural defect reads as
+    /// corrupt (`None`), so callers fall back to refitting. Beyond
+    /// field presence/finiteness, internal nodes must point *forward*
+    /// (`left`/`right` strictly greater than their own index, within
+    /// range) — the pre-order layout `build` emits — which guarantees
+    /// `predict`'s unchecked walk terminates and never escapes the
+    /// node array; the feature index is also sanity-capped so a
+    /// corrupt artifact cannot turn prediction into an out-of-bounds
+    /// row access.
+    pub fn from_json(j: &Json) -> Option<RegTree> {
+        // no real feature space comes close to this; anything above
+        // is a corrupt artifact, not a model
+        const MAX_FEATURE: f64 = (1u32 << 20) as f64;
+        let arr = j.as_arr()?;
+        if arr.is_empty() {
+            return None;
+        }
+        let mut nodes = Vec::with_capacity(arr.len());
+        for (pos, row) in arr.iter().enumerate() {
+            let row = row.as_arr()?;
+            if row.len() != 5 {
+                return None;
+            }
+            let feat = row[0].as_f64()?;
+            let threshold = row[1].as_f64()?;
+            let left = row[2].as_f64()?;
+            let right = row[3].as_f64()?;
+            let value = row[4].as_f64()?;
+            if !threshold.is_finite() || !value.is_finite() {
+                return None;
+            }
+            let is_leaf = feat < 0.0;
+            if !is_leaf {
+                if feat >= MAX_FEATURE {
+                    return None;
+                }
+                // pre-order invariant: children live strictly after
+                // their parent (rules out cycles and self-references)
+                let lo = (pos + 1) as f64;
+                let hi = arr.len() as f64;
+                if left < lo || right < lo || left >= hi || right >= hi {
+                    return None;
+                }
+            }
+            nodes.push(Node {
+                feature: if is_leaf { usize::MAX } else { feat as usize },
+                threshold,
+                left: left as u32,
+                right: right as u32,
+                value,
+            });
+        }
+        Some(RegTree { nodes })
+    }
 }
 
 #[cfg(test)]
@@ -268,6 +355,61 @@ mod tests {
         );
         // with min leaf 4 and 9 points, at most one split
         assert!(t.node_count() <= 3);
+    }
+
+    #[test]
+    fn nan_feature_rows_do_not_panic() {
+        // ISSUE 3 satellite regression: sorting feature values with
+        // partial_cmp().unwrap() panicked on a NaN feature (reachable
+        // since PR 2's as_f64_or_nan reads null-sentinel JSON as NaN)
+        let (mut x, y) = step_data();
+        x[3][0] = f64::NAN;
+        x[17][1] = f64::NAN;
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let mut rng = Rng::new(0);
+        let t = RegTree::fit(&x, &y, &idx, TreeParams::default(), &mut rng);
+        // a NaN query routes right at every split and lands in a leaf
+        assert!(t.predict(&[f64::NAN, f64::NAN]).is_finite());
+        // the clean rows still fit well
+        let clean: Vec<usize> = (0..x.len()).filter(|&i| i != 3 && i != 17).collect();
+        let err: f64 = clean
+            .iter()
+            .map(|&i| (t.predict(&x[i]) - y[i]).abs())
+            .sum::<f64>()
+            / clean.len() as f64;
+        assert!(err < 0.5, "mean abs err {err}");
+    }
+
+    #[test]
+    fn json_roundtrip_replays_identical_predictions() {
+        let (x, y) = step_data();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let mut rng = Rng::new(2);
+        let t = RegTree::fit(&x, &y, &idx, TreeParams::default(), &mut rng);
+        let text = t.to_json().to_string();
+        let back = RegTree::from_json(&crate::util::json::Json::parse(&text).unwrap())
+            .expect("round-trip");
+        for xi in &x {
+            assert_eq!(t.predict(xi).to_bits(), back.predict(xi).to_bits());
+        }
+        // structural corruption reads as None, never a bad tree
+        let corrupt = |s: &str| {
+            RegTree::from_json(&crate::util::json::Json::parse(s).unwrap()).is_none()
+        };
+        assert!(corrupt("[]"));
+        assert!(corrupt("[[0,0.5,9,9,1.0]]"), "child index out of range");
+        assert!(
+            corrupt("[[0,0.5,0,0,1.0]]"),
+            "self-referential node would make predict() loop forever"
+        );
+        assert!(
+            corrupt("[[0,0.5,1,2,0],[0,0.5,0,2,1],[-1,0,0,0,2]]"),
+            "backward child edge (node 1 -> node 0) would cycle"
+        );
+        assert!(
+            corrupt("[[9999999,0.5,1,2,0],[-1,0,0,0,1],[-1,0,0,0,2]]"),
+            "absurd feature index would index out of the row at predict time"
+        );
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! (hidden-layer configuration) used to pick ANN variants.
 
 use crate::metrics::rmse;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::gbdt::{Gbdt, GbdtParams};
@@ -56,6 +57,24 @@ pub struct TunedGbdt {
     pub params: GbdtParams,
     pub model: Gbdt,
     pub val_rmse: f64,
+}
+
+impl TunedGbdt {
+    /// Model-store serialization: the fitted model (which embeds its
+    /// params) plus the search's validation RMSE, so a warm start
+    /// replays the tuner's full outcome without a single evaluation.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.to_json()),
+            ("val_rmse", self.val_rmse.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TunedGbdt> {
+        let model = Gbdt::from_json(j.get("model"))?;
+        let val_rmse = j.get("val_rmse").as_f64()?;
+        Some(TunedGbdt { params: model.params, model, val_rmse })
+    }
 }
 
 /// Two-stage random discrete search for GBDT (paper §7.3): stage 1 fixes
@@ -115,6 +134,26 @@ pub struct TunedRf {
     pub params: RfParams,
     pub model: RandomForest,
     pub val_rmse: f64,
+}
+
+impl TunedRf {
+    /// Model-store serialization (the forest does not embed its
+    /// params, so they ride alongside).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("params", self.params.to_json()),
+            ("model", self.model.to_json()),
+            ("val_rmse", self.val_rmse.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TunedRf> {
+        Some(TunedRf {
+            params: RfParams::from_json(j.get("params"))?,
+            model: RandomForest::from_json(j.get("model"))?,
+            val_rmse: j.get("val_rmse").as_f64()?,
+        })
+    }
 }
 
 pub fn tune_rf(

@@ -8,6 +8,7 @@
 use anyhow::Result;
 
 use crate::metrics::{classify_stats, ClassifyStats};
+use crate::util::json::Json;
 
 use super::gbdt::{GbdtClassifier, GbdtParams};
 
@@ -37,6 +38,17 @@ impl RoiClassifier {
 
     pub fn evaluate(&self, xs: &[Vec<f64>], actual: &[bool]) -> ClassifyStats {
         classify_stats(actual, &self.predict(xs))
+    }
+
+    /// Model-store serialization (bit-exact prediction replay).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("model", self.model.to_json())])
+    }
+
+    /// Strict inverse of `to_json`: `None` on any defect, so callers
+    /// fall back to refitting.
+    pub fn from_json(j: &Json) -> Option<RoiClassifier> {
+        Some(RoiClassifier { model: GbdtClassifier::from_json(j.get("model"))? })
     }
 }
 

@@ -16,6 +16,17 @@ pub struct Lhs {
     pub swaps: usize,
 }
 
+/// Stratum (bin) index of a unit-interval coordinate among `n` bins.
+/// Clamped to `n - 1`: the naive `(coord * n) as usize` indexes out of
+/// bounds when a coordinate equals exactly 1.0 (legal closed-interval
+/// input from boundary knobs) — ISSUE 3 satellite. This is the single
+/// binning rule for unit coordinates: `ParamKind::from_unit`'s
+/// discrete arms route through it, as does the stratification check.
+pub fn stratum(coord: f64, n: usize) -> usize {
+    debug_assert!(n > 0);
+    ((coord * n as f64) as usize).min(n - 1)
+}
+
 impl Lhs {
     pub fn new(dim: usize, seed: u64) -> Lhs {
         Lhs { dim, rng: Rng::new(seed ^ 0x1A5D_17C3), restarts: 6, swaps: 200 }
@@ -142,8 +153,7 @@ mod tests {
         let n = 20;
         let pts = lhs.sample(n);
         for d in 0..4 {
-            let mut strata: Vec<usize> =
-                pts.iter().map(|p| (p[d] * n as f64) as usize).collect();
+            let mut strata: Vec<usize> = pts.iter().map(|p| stratum(p[d], n)).collect();
             strata.sort_unstable();
             assert_eq!(strata, (0..n).collect::<Vec<_>>(), "dim {d} not stratified");
         }
@@ -168,6 +178,21 @@ mod tests {
         let a = Lhs::new(3, 5).sample(12);
         let b = Lhs::new(3, 5).sample(12);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stratum_clamps_the_closed_upper_boundary() {
+        // (1.0 * n) as usize == n — one past the last legal bin
+        assert_eq!(stratum(1.0, 20), 19);
+        assert_eq!(stratum(1.0, 1), 0);
+        assert_eq!(stratum(0.999_999, 20), 19);
+        assert_eq!(stratum(0.0, 20), 0);
+        assert_eq!(stratum(0.05, 20), 1);
+        // every bin index stays in range across the closed interval
+        for i in 0..=100 {
+            let c = i as f64 / 100.0;
+            assert!(stratum(c, 7) < 7, "coord {c}");
+        }
     }
 
     #[test]

@@ -9,6 +9,8 @@ pub mod halton;
 pub mod lhs;
 pub mod sobol;
 
+pub use lhs::stratum;
+
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

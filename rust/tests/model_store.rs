@@ -1,0 +1,285 @@
+//! Surrogate-model persistence (ISSUE 3): every serializable model
+//! family round-trips through the model store with bit-exact
+//! predictions; corrupt artifacts fall back to refitting (and are
+//! repaired); a warm `Trainer` run reports zero refits and zero
+//! tuning-search evaluations with identical reports.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fso::backend::Enablement;
+use fso::coordinator::dse_driver::SurrogateBundle;
+use fso::coordinator::{datagen, DatagenConfig, ModelKey, ModelStore, Trainer};
+use fso::coordinator::{ModelMenu, TrainOptions};
+use fso::generators::Platform;
+use fso::models::{
+    tune_gbdt, tune_rf, BasePredictions, Gbdt, GbdtClassifier, GbdtParams, RandomForest,
+    RegTree, RfParams, Ridge, RoiClassifier, SearchBudget, StackedEnsemble, TreeParams,
+    TunedGbdt, TunedRf,
+};
+use fso::util::json::Json;
+use fso::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fso-modelstore-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Synthetic regression data with interactions and a held-out matrix.
+fn toy(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..6).map(|_| rng.f64()).collect()).collect();
+    let y: Vec<f64> =
+        x.iter().map(|v| 4.0 * v[0] * v[1] + v[2] - 2.0 * v[3] + 0.1 * v[4]).collect();
+    (x, y)
+}
+
+/// Serialize -> print -> parse -> deserialize: the exact disk path.
+fn disk_roundtrip(j: Json) -> Json {
+    Json::parse(&j.to_string()).expect("serialized model must re-parse")
+}
+
+#[test]
+fn every_model_family_round_trips_with_bit_exact_predictions() {
+    let (x, y) = toy(200, 1);
+    let (x_hold, y_hold) = toy(60, 2);
+
+    // decision tree
+    let idx: Vec<usize> = (0..x.len()).collect();
+    let tree = RegTree::fit(&x, &y, &idx, TreeParams::default(), &mut Rng::new(3));
+    let tree2 = RegTree::from_json(&disk_roundtrip(tree.to_json())).expect("tree");
+    for xi in &x_hold {
+        assert_eq!(tree.predict(xi).to_bits(), tree2.predict(xi).to_bits());
+    }
+
+    // GBDT regressor
+    let gbdt = Gbdt::fit(&x, &y, GbdtParams { n_estimators: 40, ..Default::default() }, 5);
+    let gbdt2 = Gbdt::from_json(&disk_roundtrip(gbdt.to_json())).expect("gbdt");
+    for (a, b) in gbdt.predict(&x_hold).iter().zip(gbdt2.predict(&x_hold)) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // GBDT classifier (the two-stage ROI stage 1)
+    let labels: Vec<bool> = y.iter().map(|&v| v > 1.5).collect();
+    let cls = GbdtClassifier::fit(
+        &x,
+        &labels,
+        GbdtParams { n_estimators: 40, ..Default::default() },
+        5,
+    );
+    let cls2 = GbdtClassifier::from_json(&disk_roundtrip(cls.to_json())).expect("classifier");
+    for xi in &x_hold {
+        assert_eq!(cls.prob_one(xi).to_bits(), cls2.prob_one(xi).to_bits());
+    }
+
+    // random forest
+    let rf = RandomForest::fit(
+        &x,
+        &y,
+        RfParams { n_estimators: 30, ..Default::default() },
+        5,
+    );
+    let rf2 = RandomForest::from_json(&disk_roundtrip(rf.to_json())).expect("rf");
+    for (a, b) in rf.predict(&x_hold).iter().zip(rf2.predict(&x_hold)) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // ridge (linear)
+    let ridge = Ridge::fit(&x, &y, 1e-3);
+    let ridge2 = Ridge::from_json(&disk_roundtrip(ridge.to_json())).expect("ridge");
+    for (a, b) in ridge.predict(&x_hold).iter().zip(ridge2.predict(&x_hold)) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // two-stage ROI classifier
+    let roi = RoiClassifier::fit(&x, &labels, 5);
+    let roi2 = RoiClassifier::from_json(&disk_roundtrip(roi.to_json())).expect("roi");
+    for xi in &x_hold {
+        assert_eq!(roi.prob(xi).to_bits(), roi2.prob(xi).to_bits());
+    }
+
+    // tuned GBDT / RF (the tuning-search outcomes the trainer persists)
+    let budget = SearchBudget { stage1: 3, stage2: 2, seed: 1 };
+    let tg = tune_gbdt(&x, &y, &x_hold, &y_hold, budget);
+    let tg2 = TunedGbdt::from_json(&disk_roundtrip(tg.to_json())).expect("tuned gbdt");
+    assert_eq!(tg.val_rmse.to_bits(), tg2.val_rmse.to_bits());
+    for (a, b) in tg.model.predict(&x_hold).iter().zip(tg2.model.predict(&x_hold)) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let tr = tune_rf(&x, &y, &x_hold, &y_hold, budget);
+    let tr2 = TunedRf::from_json(&disk_roundtrip(tr.to_json())).expect("tuned rf");
+    assert_eq!(tr.params.max_depth, tr2.params.max_depth);
+    for (a, b) in tr.model.predict(&x_hold).iter().zip(tr2.model.predict(&x_hold)) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // stacked ensemble
+    let bases = vec![
+        BasePredictions {
+            name: "GBDT".into(),
+            val: gbdt.predict(&x_hold),
+            test: gbdt.predict(&x_hold),
+        },
+        BasePredictions {
+            name: "RF".into(),
+            val: rf.predict(&x_hold),
+            test: rf.predict(&x_hold),
+        },
+    ];
+    let ens = StackedEnsemble::fit(&bases, &y_hold).unwrap();
+    let ens2 = StackedEnsemble::from_json(&disk_roundtrip(ens.to_json())).expect("ensemble");
+    assert_eq!(ens.base_names, ens2.base_names);
+    for (a, b) in ens.predict(&bases).iter().zip(ens2.predict(&bases)) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+fn small_cfg() -> DatagenConfig {
+    DatagenConfig {
+        n_arch: 6,
+        n_backend_train: 10,
+        n_backend_test: 4,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    }
+}
+
+#[test]
+fn surrogate_bundle_persists_and_replays_bit_identically() {
+    let dir = tmp_dir("bundle");
+    let g = datagen::generate(&small_cfg()).unwrap();
+    let feats: Vec<Vec<f64>> = g.dataset.rows.iter().map(|r| r.features_vec()).collect();
+
+    let cold_preds = {
+        let store = ModelStore::open(&dir).unwrap();
+        let (bundle, replayed) =
+            SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&store))
+                .unwrap();
+        assert!(!replayed, "empty store cannot replay");
+        store.flush().unwrap();
+        bundle.predict_batch(&feats, 1)
+    };
+
+    let store = ModelStore::open(&dir).unwrap();
+    let (bundle, replayed) =
+        SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&store)).unwrap();
+    assert!(replayed, "reopened store must serve the artifact");
+    assert_eq!(store.hits(), 1);
+    let warm_preds = bundle.predict_batch(&feats, 1);
+    assert_eq!(cold_preds.len(), warm_preds.len());
+    for ((roi_a, pred_a), (roi_b, pred_b)) in cold_preds.iter().zip(&warm_preds) {
+        assert_eq!(roi_a, roi_b, "ROI gate must replay identically");
+        for (m, va) in pred_a {
+            assert_eq!(
+                va.to_bits(),
+                pred_b[m].to_bits(),
+                "{m}: stored bundle must replay bit-identical predictions"
+            );
+        }
+    }
+
+    // a different seed is a different artifact, not a collision
+    let (_, replayed) =
+        SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 8, Some(&store)).unwrap();
+    assert!(!replayed, "seed is part of the content-hash key");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_artifact_falls_back_to_refit_and_is_repaired() {
+    let dir = tmp_dir("corrupt");
+    let g = datagen::generate(&small_cfg()).unwrap();
+    let key = SurrogateBundle::store_key(&g.dataset, &g.backend_split, 7);
+
+    // plant a structurally-valid record whose payload is garbage
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        store.put(
+            SurrogateBundle::STORE_KIND,
+            key,
+            Json::obj(vec![("bogus", true.into())]),
+        );
+        store.flush().unwrap();
+    }
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        let (_, replayed) =
+            SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&store))
+                .unwrap();
+        assert!(!replayed, "corrupt artifact must fall back to a refit");
+        store.flush().unwrap(); // the refit's write-behind repairs the record
+    }
+    let store = ModelStore::open(&dir).unwrap();
+    let (_, replayed) =
+        SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&store)).unwrap();
+    assert!(replayed, "the repaired artifact must replay on the next warm start");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_trainer_run_skips_all_tuning_and_reports_identically() {
+    let dir = tmp_dir("trainer");
+    // sizes mirror tests/pipeline_smoke.rs, known to leave ROI rows in
+    // both the training and the carved validation parts
+    let g = datagen::generate(&DatagenConfig {
+        n_arch: 8,
+        n_backend_train: 12,
+        n_backend_test: 4,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    })
+    .unwrap();
+    let opts = TrainOptions {
+        menu: ModelMenu::trees_only(),
+        search: SearchBudget { stage1: 3, stage2: 2, seed: 1 },
+        seed: 7,
+        ..Default::default()
+    };
+    let metric = fso::data::Metric::Power;
+
+    let cold = {
+        let store = Arc::new(ModelStore::open_under(&dir).unwrap());
+        let trainer = Trainer::new(None).with_model_store(store.clone());
+        let report = trainer.run(&g.dataset, &g.backend_split, metric, &opts).unwrap();
+        store.flush().unwrap();
+        report
+    };
+    assert!(cold.model_cache.refits > 0, "cold run must fit fresh models");
+    assert!(cold.model_cache.tuning_evals > 0, "cold run must run tuning searches");
+
+    let store = Arc::new(ModelStore::open_under(&dir).unwrap());
+    let trainer = Trainer::new(None).with_model_store(store.clone());
+    let warm = trainer.run(&g.dataset, &g.backend_split, metric, &opts).unwrap();
+
+    // ISSUE 3 acceptance: zero refits, zero tuning-search evaluations
+    assert_eq!(warm.model_cache.refits, 0, "warm run refit: {:?}", warm.model_cache);
+    assert_eq!(warm.model_cache.tuning_evals, 0);
+    assert_eq!(warm.model_cache.cached, 3, "classifier + tuned GBDT + tuned RF");
+
+    // and the report replays identically (bit-exact model predictions)
+    assert_eq!(cold.roi, warm.roi);
+    assert_eq!(cold.eval_rows, warm.eval_rows);
+    assert_eq!(cold.models, warm.models, "cold and warm reports diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn model_keys_fingerprint_dataset_split_metric_and_seed() {
+    let g = datagen::generate(&small_cfg()).unwrap();
+    let k = |seed| SurrogateBundle::store_key(&g.dataset, &g.backend_split, seed);
+    assert_eq!(k(7), k(7), "keys are deterministic");
+    assert_ne!(k(7), k(8), "seed changes the key");
+    let mut other_split = g.backend_split.clone();
+    other_split.train.truncate(other_split.train.len() - 1);
+    assert_ne!(
+        k(7),
+        SurrogateBundle::store_key(&g.dataset, &other_split, 7),
+        "split changes the key"
+    );
+    // raw ModelKey: tag + matrix shape discrimination
+    assert_ne!(
+        ModelKey::new("a").rows(&[vec![1.0], vec![2.0]]).finish(),
+        ModelKey::new("a").rows(&[vec![1.0, 2.0]]).finish(),
+    );
+}
