@@ -42,6 +42,10 @@ fn main() -> Result<()> {
     if let Some(store) = &store {
         store.flush()?;
         println!("  cache store: {}", store.stats());
+        // housekeeping for long-lived stores: reclaim tombstones and
+        // dead lines (a no-op on a healthy store; reads are unchanged
+        // either way — see `fso store compact`)
+        println!("  compacted:   {}", store.compact()?);
     }
     println!(
         "  {} rows, {} in ROI",

@@ -218,6 +218,31 @@ fn main() {
             svc.evaluate_many(&jobs, None).unwrap();
             println!("    warm-start stats: {}", svc.stats());
         }
+
+        // ---- store lifecycle: compaction + eviction (ISSUE 4) ----
+        // compaction over the warm dir is idempotent (byte-unchanged
+        // shards are skipped), so the row times the full load + merge
+        // + render + compare pass
+        b.run(&format!("cache_store/compact_{}pts", jobs.len()), || {
+            let store = CacheStore::open(&dir).unwrap();
+            store.compact().unwrap()
+        });
+        // one-shot (destructive): LRU-evict the warm store down to half
+        // its records, report the reclaim
+        {
+            use fso::coordinator::StorePolicy;
+            let store = CacheStore::open(&dir).unwrap().with_policy(StorePolicy {
+                max_records: Some(jobs.len() / 2),
+                ..StorePolicy::default()
+            });
+            let t0 = Instant::now();
+            let rep = store.compact().unwrap();
+            println!(
+                "    eviction to {} records: {rep} ({:.3} ms)",
+                jobs.len() / 2,
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

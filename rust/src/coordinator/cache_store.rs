@@ -1,77 +1,55 @@
-//! Persistent sharded oracle cache (ISSUE 2 tentpole; ROADMAP "persist
-//! the oracle cache to disk between runs").
+//! Persistent sharded oracle cache (ISSUE 2; rebased onto the shared
+//! `coordinator::store` core in ISSUE 4).
 //!
 //! The `EvalService` (PR 1) memoizes SP&R-flow and full-evaluation
 //! results in process memory, so every new datagen or DSE run re-pays
 //! the oracle cost from zero. This store makes that cache durable and
-//! shareable:
+//! shareable. All of the persistence *protocol* — content-hash shard
+//! routing, lazy per-shard load, schema-tagged JSONL encode/decode,
+//! atomic temp+rename flush, `.store.lock` ordering, merge-on-flush,
+//! LRU eviction budgets, and compaction — lives in the generic
+//! [`ShardedStore`]; this file only defines the oracle record family:
 //!
-//! - **Sharding by content-hash prefix**: the u64 content-hash keys the
-//!   service already computes (`flow_key` / `oracle_key`) are routed to
-//!   one of N shard files by their top byte, so a warm lookup touches
-//!   one small file instead of one monolithic dump, and independent
-//!   runs mostly rewrite disjoint shards.
-//! - **Append-only JSONL records** (via `util::json`): one record per
-//!   line, each carrying a schema tag (`"v"`). Records with an unknown
-//!   schema version are skipped on load, so an old cache directory
-//!   never poisons a newer binary.
-//! - **Lazy per-shard loading**: a shard file is parsed the first time
-//!   a key routed to it is requested; runs that touch a small slice of
-//!   the key space never read the rest.
-//! - **Atomic flushes**: a flush rewrites each dirty shard to a temp
-//!   file in the same directory and renames it over the shard, so a
-//!   crash mid-flush leaves the previous shard intact. Entries are
-//!   written in sorted key order, so shard files are byte-deterministic
-//!   for a given entry set.
-//! - **Cross-run / cross-enablement sharing**: keys already encode the
-//!   enablement, seed, and trial stream (and, for full evaluations, the
-//!   workload), so several `EvalService` instances — different
-//!   enablements, different workloads, different processes — can share
-//!   one directory without collisions. The workload-free flow key from
-//!   PR 1 means the expensive SP&R flow result is shared across every
-//!   workload that touches the same (design, knobs, enablement, seed).
+//! - **Keys** are the u64 content hashes the service already computes
+//!   (`flow_key` / `oracle_key`): they encode the enablement, seed,
+//!   trial stream, and (for full evaluations) the workload, so several
+//!   `EvalService` instances — different enablements, workloads,
+//!   processes — share one directory without collisions. The
+//!   workload-free flow key from PR 1 means the expensive SP&R flow
+//!   result is shared across every workload that touches the same
+//!   (design, knobs, enablement, seed).
+//! - **Records** are the two oracle kinds (`flow`, `eval`), encoded
+//!   through `util::json` so every finite f64 round-trips bit-exactly
+//!   (non-finite values ride the `null` sentinel). Design aggregates
+//!   are *not* persisted: regenerating a module tree is cheap relative
+//!   to a flow run.
 //!
 //! Determinism contract: evaluations are pure functions of their key
-//! inputs, and `util::json` round-trips every finite f64 exactly
-//! (Rust's shortest-round-trip `Display` + exact `str::parse`), so a
-//! warm-start run returns byte-identical results to the cold run that
-//! populated the store. `tests/warm_start.rs` pins this end to end.
-//!
-//! Cross-process safety (ISSUE 3): trainer and DSE processes may share
-//! one cache directory concurrently. Flushes are serialized through a
-//! directory lock file (`.store.lock`, stolen after a staleness
-//! timeout so a crashed holder never wedges the store) and each dirty
-//! shard is **merged on flush**: the disk shard is re-parsed right
-//! before the rewrite, so entries another process flushed since our
-//! last read are folded in instead of silently dropped (in-memory
-//! entries win; values are identical by the determinism contract).
-//!
-//! NB: `model_store.rs` mirrors this shard/lock/flush protocol line
-//! for line. Until the two grow a shared generic core (ROADMAP), any
-//! change to the lazy-load / merge-on-flush / DirLock-ordering logic
-//! must be applied to BOTH files.
-//!
-//! Design aggregates are *not* persisted: regenerating a module tree is
-//! cheap relative to a flow run, and keeping the record schema to the
-//! two oracle kinds keeps shard files small.
+//! inputs, so a warm-start run returns byte-identical results to the
+//! cold run that populated the store — before or after an `fso store
+//! compact`. `tests/warm_start.rs` pins this end to end.
 
-use std::collections::HashMap;
-use std::fs;
-use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::backend::{BackendResult, FlowResult, PowerBreakdown, SynthResult};
 use crate::simulators::SystemMetrics;
 use crate::util::json::Json;
 
 use super::eval_service::Evaluation;
+use super::store::{CompactReport, Record, ShardedStore, StoreConfig, StorePolicy};
 
-/// Record schema version. Bump on any layout change to the per-record
-/// JSON; loaders skip records whose tag does not match.
+/// Record schema version. Bump on any *breaking* layout change to the
+/// per-record JSON; loaders skip records whose tag does not match.
+/// The ISSUE 4 store core added envelope fields **additively** (an
+/// optional `used` stamp, defaulting to oldest, and a `tomb` kind that
+/// pre-core loaders skip as unknown), deliberately *without* a bump so
+/// PR 2/3 cache directories stay warm. Caveat of that choice: a
+/// pre-core binary sharing a directory with this one drops tombstones
+/// and stamps when it rewrites a shard — mixed-version *concurrent*
+/// writers degrade eviction to best-effort (never correctness: values
+/// are pure functions of their keys).
 pub const SCHEMA_VERSION: u64 = 1;
 
 /// Default shard-file count (keys are routed by their top byte).
@@ -84,52 +62,159 @@ pub struct CacheStoreStats {
     /// Lookups answered by the store (loaded from disk or written by
     /// another service sharing the store this run).
     pub hits: usize,
+    /// Lookups that found nothing (the caller runs the oracle).
+    pub misses: usize,
     /// Shard files parsed so far (lazy loading).
     pub shard_loads: usize,
     /// `flush` calls that wrote at least one shard.
     pub flushes: usize,
     /// Entries currently held (flow + eval records).
     pub entries: usize,
-    /// Entries residing in shards with unflushed changes (an upper
-    /// bound on the write-behind backlog: a dirty shard's disk-loaded
-    /// entries count too, since the whole shard rewrites at flush).
+    /// Entries not yet durable on disk. Exact per-record accounting
+    /// (ISSUE 4 fix): a merge-on-flush that folds disk records into a
+    /// shard no longer inflates this.
     pub pending: usize,
+    /// Eviction tombstones currently held (reclaimed at compaction).
+    pub tombstones: usize,
+    /// Serialized bytes of the live records (what the `max_bytes`
+    /// eviction budget is judged against).
+    pub live_bytes: u64,
+    /// Records evicted (policy budgets or explicit `evict`) since open.
+    pub evictions: usize,
+    /// Compaction passes since open (explicit + automatic).
+    pub compactions: usize,
 }
 
 impl std::fmt::Display for CacheStoreStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} entries ({} pending) | {} disk hits | {} shard loads | {} flushes",
-            self.entries, self.pending, self.hits, self.shard_loads, self.flushes
+            "{} entries ({} pending, {} B live) | {} disk hits | {} shard loads | {} flushes | {} evicted, {} tombstones, {} compactions",
+            self.entries,
+            self.pending,
+            self.live_bytes,
+            self.hits,
+            self.shard_loads,
+            self.flushes,
+            self.evictions,
+            self.tombstones,
+            self.compactions
         )
     }
 }
 
-#[derive(Clone, Copy)]
-struct ShardState {
-    loaded: bool,
-    dirty: bool,
+/// The oracle record family: the workload-free SP&R flow result and
+/// the full (flow + simulator) evaluation.
+#[derive(Debug, Clone, Copy)]
+pub enum OracleRecord {
+    Flow(FlowResult),
+    Eval(Evaluation),
 }
 
-struct Inner {
-    flows: HashMap<u64, FlowResult>,
-    evals: HashMap<u64, Evaluation>,
-    shards: Vec<ShardState>,
+/// Bit-pattern equality, not derived f64 equality: the store's
+/// identical-re-put check must treat a record as unchanged when its
+/// bits are unchanged. Derived `==` would make any NaN-bearing record
+/// (the `null`-sentinel round-trip, PR 2) compare unequal to itself
+/// and re-dirty its shard on every re-put, forever.
+impl PartialEq for OracleRecord {
+    fn eq(&self, other: &OracleRecord) -> bool {
+        fn synth_bits(s: &SynthResult) -> [u64; 6] {
+            [
+                s.cell_area_um2.to_bits(),
+                s.macro_area_um2.to_bits(),
+                s.upsize.to_bits(),
+                s.syn_power_w.to_bits(),
+                s.syn_fmax_ghz.to_bits(),
+                s.logic_delay_ps.to_bits(),
+            ]
+        }
+        fn backend_bits(b: &BackendResult) -> [u64; 10] {
+            [
+                b.f_effective_ghz.to_bits(),
+                b.f_max_ghz.to_bits(),
+                b.power.internal_w.to_bits(),
+                b.power.switching_w.to_bits(),
+                b.power.leakage_w.to_bits(),
+                b.power.sram_w.to_bits(),
+                b.chip_area_mm2.to_bits(),
+                b.cell_area_um2.to_bits(),
+                b.macro_area_um2.to_bits(),
+                b.congestion.to_bits(),
+            ]
+        }
+        fn system_bits(s: &SystemMetrics) -> [u64; 5] {
+            [
+                s.runtime_s.to_bits(),
+                s.energy_j.to_bits(),
+                s.cycles.to_bits(),
+                s.busy_frac.to_bits(),
+                s.dram_bytes.to_bits(),
+            ]
+        }
+        match (self, other) {
+            (OracleRecord::Flow(a), OracleRecord::Flow(b)) => {
+                synth_bits(&a.synth) == synth_bits(&b.synth)
+                    && backend_bits(&a.backend) == backend_bits(&b.backend)
+            }
+            (OracleRecord::Eval(a), OracleRecord::Eval(b)) => {
+                synth_bits(&a.flow.synth) == synth_bits(&b.flow.synth)
+                    && backend_bits(&a.flow.backend) == backend_bits(&b.flow.backend)
+                    && system_bits(&a.system) == system_bits(&b.system)
+            }
+            _ => false,
+        }
+    }
+}
+
+impl Record for OracleRecord {
+    fn kind(&self) -> std::borrow::Cow<'_, str> {
+        match self {
+            OracleRecord::Flow(_) => "flow".into(),
+            OracleRecord::Eval(_) => "eval".into(),
+        }
+    }
+
+    fn encode(&self, out: &mut Vec<(&'static str, Json)>) {
+        match self {
+            OracleRecord::Flow(fr) => {
+                out.push(("synth", synth_to_json(&fr.synth)));
+                out.push(("backend", backend_to_json(&fr.backend)));
+            }
+            OracleRecord::Eval(ev) => {
+                out.push(("synth", synth_to_json(&ev.flow.synth)));
+                out.push(("backend", backend_to_json(&ev.flow.backend)));
+                out.push(("system", system_to_json(&ev.system)));
+            }
+        }
+    }
+
+    fn decode(kind: &str, rec: &Json) -> Option<OracleRecord> {
+        match kind {
+            "flow" => Some(OracleRecord::Flow(flow_from_json(rec)?)),
+            "eval" => Some(OracleRecord::Eval(eval_from_json(rec)?)),
+            _ => None,
+        }
+    }
 }
 
 /// Disk-backed, sharded, read-through/write-behind cache for oracle
-/// results. Thread-safe; share one instance across services via `Arc`.
+/// results: a thin typed wrapper over the shared [`ShardedStore`]
+/// core. Thread-safe; share one instance across services via `Arc`.
 pub struct CacheStore {
-    dir: PathBuf,
-    n_shards: usize,
-    inner: Mutex<Inner>,
-    hits: AtomicUsize,
-    shard_loads: AtomicUsize,
-    flushes: AtomicUsize,
+    core: ShardedStore<OracleRecord>,
 }
 
 impl CacheStore {
+    fn config() -> StoreConfig {
+        StoreConfig {
+            schema_version: SCHEMA_VERSION,
+            default_shards: DEFAULT_SHARDS,
+            file_prefix: "shard",
+            label: "cache dir",
+            policy: StorePolicy::default_auto(),
+        }
+    }
+
     /// Open (creating if needed) a cache directory with the default
     /// shard count. An existing directory keeps the shard count it was
     /// created with (recorded in `meta.json`), so reopening with a
@@ -141,407 +226,119 @@ impl CacheStore {
     /// Open with an explicit shard count (ignored when the directory
     /// already records one).
     pub fn open_sharded(dir: impl Into<PathBuf>, n_shards: usize) -> Result<CacheStore> {
-        let dir = dir.into();
-        fs::create_dir_all(&dir)
-            .with_context(|| format!("creating cache dir {}", dir.display()))?;
-        let meta_path = dir.join("meta.json");
-        let n_shards = match fs::read_to_string(&meta_path) {
-            Ok(text) => {
-                let meta = Json::parse(&text)
-                    .with_context(|| format!("parsing {}", meta_path.display()))?;
-                let v = meta.get("v").as_usize().unwrap_or(0) as u64;
-                anyhow::ensure!(
-                    v == SCHEMA_VERSION,
-                    "cache dir {} has schema v{v}, this binary expects v{SCHEMA_VERSION}",
-                    dir.display()
-                );
-                meta.get("shards")
-                    .as_usize()
-                    .filter(|&s| s > 0)
-                    .with_context(|| format!("{}: bad shard count", meta_path.display()))?
-            }
-            // only a genuinely absent meta.json means "fresh directory";
-            // any other read error (permissions, transient IO) must not
-            // silently re-shard an existing store under a new layout
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                let n = n_shards.max(1);
-                let meta = Json::obj(vec![
-                    ("v", Json::from(SCHEMA_VERSION as usize)),
-                    ("shards", Json::from(n)),
-                ]);
-                write_atomic(&meta_path, format!("{meta}\n").as_bytes())?;
-                n
-            }
-            Err(e) => {
-                return Err(e)
-                    .with_context(|| format!("reading {}", meta_path.display()))
-            }
-        };
         Ok(CacheStore {
-            dir,
-            n_shards,
-            inner: Mutex::new(Inner {
-                flows: HashMap::new(),
-                evals: HashMap::new(),
-                shards: vec![ShardState { loaded: false, dirty: false }; n_shards],
-            }),
-            hits: AtomicUsize::new(0),
-            shard_loads: AtomicUsize::new(0),
-            flushes: AtomicUsize::new(0),
+            core: ShardedStore::open_sharded(dir, CacheStore::config(), n_shards)?,
         })
     }
 
+    /// Replace the lifecycle policy (eviction budgets, auto-compaction
+    /// ratio) before sharing the store.
+    pub fn with_policy(self, policy: StorePolicy) -> CacheStore {
+        CacheStore { core: self.core.with_policy(policy) }
+    }
+
     pub fn dir(&self) -> &Path {
-        &self.dir
+        self.core.dir()
     }
 
     pub fn shard_count(&self) -> usize {
-        self.n_shards
-    }
-
-    fn shard_of(&self, key: u64) -> usize {
-        // content-hash prefix routing: the top byte spreads uniformly
-        // because keys come out of splitmix-finalized hashes
-        ((key >> 56) as usize) % self.n_shards
-    }
-
-    fn shard_path(&self, shard: usize) -> PathBuf {
-        self.dir.join(format!("shard-{shard:03}.jsonl"))
-    }
-
-    /// Parse a shard file into the maps. Unknown schema versions,
-    /// unknown kinds, and corrupt lines are skipped (a half-written or
-    /// foreign record must never sink a run); in-memory entries win
-    /// over disk (values are identical by the determinism contract).
-    fn load_shard(&self, inner: &mut Inner, shard: usize) {
-        if inner.shards[shard].loaded {
-            return;
-        }
-        inner.shards[shard].loaded = true;
-        self.shard_loads.fetch_add(1, Ordering::Relaxed);
-        self.parse_shard_lines(inner, shard);
-    }
-
-    /// The raw disk-to-map merge under `load_shard` and the flush-time
-    /// re-read. Does not touch the `loaded` flag or the lazy-load
-    /// counter — callers decide what the read means.
-    fn parse_shard_lines(&self, inner: &mut Inner, shard: usize) {
-        let text = match fs::read_to_string(self.shard_path(shard)) {
-            Ok(t) => t,
-            Err(_) => return, // never flushed, or unreadable: treat as empty
-        };
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            let rec = match Json::parse(line) {
-                Ok(r) => r,
-                Err(_) => continue,
-            };
-            if rec.get("v").as_usize().map(|v| v as u64) != Some(SCHEMA_VERSION) {
-                continue;
-            }
-            let key = match rec.get("key").as_str().and_then(parse_hex_key) {
-                Some(k) => k,
-                None => continue,
-            };
-            match rec.get("kind").as_str() {
-                Some("flow") => {
-                    if let Some(fr) = flow_from_json(&rec) {
-                        inner.flows.entry(key).or_insert(fr);
-                    }
-                }
-                Some("eval") => {
-                    if let Some(ev) = eval_from_json(&rec) {
-                        inner.evals.entry(key).or_insert(ev);
-                    }
-                }
-                _ => continue,
-            }
-        }
+        self.core.shard_count()
     }
 
     /// Workload-free SP&R flow result for a flow key, if known.
     pub fn get_flow(&self, key: u64) -> Option<FlowResult> {
-        let mut inner = self.inner.lock().unwrap();
-        self.load_shard(&mut inner, self.shard_of(key));
-        let hit = inner.flows.get(&key).copied();
-        if hit.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+        match self.core.get("flow", key) {
+            Some(OracleRecord::Flow(fr)) => Some(fr),
+            _ => None,
         }
-        hit
     }
 
     /// Record a flow result (write-behind: durable at the next flush).
     pub fn put_flow(&self, key: u64, fr: FlowResult) {
-        let mut inner = self.inner.lock().unwrap();
-        let shard = self.shard_of(key);
-        if inner.flows.insert(key, fr).is_none() {
-            inner.shards[shard].dirty = true;
-        }
+        self.core.put(key, OracleRecord::Flow(fr));
     }
 
     /// Full (flow + simulator) evaluation for an oracle key, if known.
     pub fn get_eval(&self, key: u64) -> Option<Evaluation> {
-        let mut inner = self.inner.lock().unwrap();
-        self.load_shard(&mut inner, self.shard_of(key));
-        let hit = inner.evals.get(&key).copied();
-        if hit.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+        match self.core.get("eval", key) {
+            Some(OracleRecord::Eval(ev)) => Some(ev),
+            _ => None,
         }
-        hit
     }
 
     /// Record a full evaluation (write-behind).
     pub fn put_eval(&self, key: u64, ev: Evaluation) {
-        let mut inner = self.inner.lock().unwrap();
-        let shard = self.shard_of(key);
-        if inner.evals.insert(key, ev).is_none() {
-            inner.shards[shard].dirty = true;
-        }
+        self.core.put(key, OracleRecord::Eval(ev));
     }
 
-    /// Write every dirty shard atomically (temp file + rename in the
-    /// same directory). Flushes from processes sharing the directory
-    /// are serialized by a lock file, and each dirty shard is re-read
-    /// from disk right before the rewrite (merge-on-flush), so a flush
-    /// never drops entries — neither on-disk records this run did not
-    /// happen to read, nor records a concurrent process flushed since.
+    /// Evict a key (tombstoned: reads miss, concurrent writers cannot
+    /// resurrect it). Returns whether a live record was evicted.
+    pub fn evict(&self, key: u64) -> bool {
+        self.core.evict(key)
+    }
+
+    /// Write every dirty shard atomically, serialized across processes
+    /// and merged with the disk state first (see the store core docs).
     /// Returns the number of shard files written.
     pub fn flush(&self) -> Result<usize> {
-        // cheap dirtiness pre-check, then take the cross-process lock
-        // *without* holding the in-process Mutex: a contended DirLock
-        // wait (up to the staleness window) must not stall every
-        // worker thread doing get/put on the shared store
-        {
-            let inner = self.inner.lock().unwrap();
-            if !inner.shards.iter().any(|s| s.dirty) {
-                return Ok(0);
-            }
-        }
-        let lock = DirLock::acquire(&self.dir)?;
-        let mut inner = self.inner.lock().unwrap();
-        // recompute under the lock: another thread may have flushed
-        let dirty: Vec<usize> =
-            (0..self.n_shards).filter(|&s| inner.shards[s].dirty).collect();
-        if dirty.is_empty() {
-            return Ok(0);
-        }
-        for &shard in &dirty {
-            lock.refresh();
-            self.parse_shard_lines(&mut inner, shard);
-            inner.shards[shard].loaded = true;
-            let mut lines: Vec<(u8, u64, String)> = Vec::new();
-            for (&key, fr) in &inner.flows {
-                if self.shard_of(key) == shard {
-                    lines.push((0, key, flow_to_json(key, fr).to_string()));
-                }
-            }
-            for (&key, ev) in &inner.evals {
-                if self.shard_of(key) == shard {
-                    lines.push((1, key, eval_to_json(key, ev).to_string()));
-                }
-            }
-            // sorted (kind, key) order: shard bytes are deterministic
-            lines.sort_by_key(|&(kind, key, _)| (kind, key));
-            let mut body = String::new();
-            for (_, _, line) in &lines {
-                body.push_str(line);
-                body.push('\n');
-            }
-            write_atomic(&self.shard_path(shard), body.as_bytes())?;
-            inner.shards[shard].dirty = false;
-        }
-        self.flushes.fetch_add(1, Ordering::Relaxed);
-        Ok(dirty.len())
+        self.core.flush()
+    }
+
+    /// Compaction pass: drop tombstones and dead lines, enforce the
+    /// eviction policy, rewrite only the shards whose bytes change.
+    pub fn compact(&self) -> Result<CompactReport> {
+        self.core.compact()
+    }
+
+    /// Force every shard into memory (CLI stats / maintenance; normal
+    /// traffic relies on lazy loading).
+    pub fn load_all(&self) {
+        self.core.load_all()
     }
 
     /// Snapshot the store counters.
     pub fn stats(&self) -> CacheStoreStats {
-        let inner = self.inner.lock().unwrap();
-        let pending: usize = {
-            // dirty shards hold the not-yet-durable entries; count them
-            let dirty: Vec<bool> = inner.shards.iter().map(|s| s.dirty).collect();
-            inner
-                .flows
-                .keys()
-                .chain(inner.evals.keys())
-                .filter(|&&k| dirty[self.shard_of(k)])
-                .count()
-        };
+        let s = self.core.stats();
         CacheStoreStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            shard_loads: self.shard_loads.load(Ordering::Relaxed),
-            flushes: self.flushes.load(Ordering::Relaxed),
-            entries: inner.flows.len() + inner.evals.len(),
-            pending,
+            hits: s.hits,
+            misses: s.misses,
+            shard_loads: s.shard_loads,
+            flushes: s.flushes,
+            entries: s.entries,
+            pending: s.pending,
+            tombstones: s.tombstones,
+            live_bytes: s.live_bytes,
+            evictions: s.evictions,
+            compactions: s.compactions,
         }
     }
 
     /// Store-level hit count (also surfaced via `stats`).
     pub fn hits(&self) -> usize {
-        self.hits.load(Ordering::Relaxed)
+        self.core.hits()
     }
 
     pub fn shard_loads(&self) -> usize {
-        self.shard_loads.load(Ordering::Relaxed)
+        self.core.shard_loads()
     }
 
     pub fn flush_count(&self) -> usize {
-        self.flushes.load(Ordering::Relaxed)
-    }
-}
-
-impl Drop for CacheStore {
-    /// Best-effort durability for callers that forget an explicit
-    /// flush; errors are swallowed (Drop cannot fail).
-    fn drop(&mut self) {
-        let _ = self.flush();
-    }
-}
-
-/// Cross-process flush serialization for a store directory: a
-/// `.store.lock` file created with `create_new` (atomic on every
-/// filesystem we care about) and removed on drop. A lock whose *file*
-/// has not changed for the staleness window is presumed to belong to a
-/// crashed process and is broken — flushes must never wedge a run
-/// forever. Staleness is judged by the lock file's age, never by how
-/// long this waiter has been waiting: a live holder mid-long-flush, or
-/// a sequence of short-lived locks taken by other processes, must not
-/// get stolen (stealing a live lock reintroduces the lost-update race
-/// the lock exists to prevent). Shared by `CacheStore` and
-/// `ModelStore` (separate directories, so their locks never contend).
-pub(crate) struct DirLock {
-    path: PathBuf,
-    /// Unique content written into the lock file; `drop` unlinks the
-    /// file only while it still holds this token, so a holder whose
-    /// lock was stolen never deletes the new holder's lock.
-    token: String,
-    /// The handle from `create_new`: `refresh` touches mtime through
-    /// it, so a stalled holder whose lock was stolen (path renamed and
-    /// recreated by the new holder) touches its own orphaned inode,
-    /// never the new holder's file.
-    file: fs::File,
-}
-
-impl DirLock {
-    const STALE_MS: u128 = 30_000;
-    /// A lock file stamped in the *future* only reads as stale past
-    /// this much skew. It is deliberately much larger than `STALE_MS`:
-    /// a live holder whose clock runs ahead by less than this ages out
-    /// naturally (its mtime drifts into the past as real time passes),
-    /// while an absurd future timestamp — which could otherwise never
-    /// age out and would wedge every flusher forever — is eventually
-    /// broken. NTP-grade skew is well under a second; ten minutes of
-    /// skew between hosts cooperating on one cache dir is operational
-    /// pathology, and progress wins at that point.
-    const FUTURE_SKEW_STALE_MS: u128 = 600_000;
-    const POLL_MS: u64 = 20;
-
-    pub(crate) fn acquire(dir: &Path) -> Result<DirLock> {
-        static NONCE: AtomicUsize = AtomicUsize::new(0);
-        let path = dir.join(".store.lock");
-        let token = format!(
-            "{}-{}",
-            std::process::id(),
-            NONCE.fetch_add(1, Ordering::Relaxed)
-        );
-        loop {
-            match fs::OpenOptions::new().write(true).create_new(true).open(&path) {
-                Ok(mut f) => {
-                    let _ = f.write_all(token.as_bytes());
-                    let _ = f.sync_all();
-                    return Ok(DirLock { path, token, file: f });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let stale = match fs::metadata(&path).and_then(|m| m.modified()) {
-                        Ok(mtime) => match mtime.elapsed() {
-                            Ok(age) => age.as_millis() >= Self::STALE_MS,
-                            // mtime ahead of our clock: see
-                            // FUTURE_SKEW_STALE_MS for why this bound
-                            // is far looser than the normal window
-                            Err(skew) => {
-                                skew.duration().as_millis() >= Self::FUTURE_SKEW_STALE_MS
-                            }
-                        },
-                        // lock vanished between create_new and the stat
-                        // (holder released): just retry create_new
-                        Err(_) => false,
-                    };
-                    if stale {
-                        // crashed holder (the file itself went stale,
-                        // see `refresh`). Steal by *rename*, which is
-                        // atomic: exactly one contender claims the
-                        // stale file; the losers' renames fail and
-                        // they re-poll — so a fresh lock created by
-                        // the winner is never unlinked by a loser.
-                        let stolen = dir.join(format!(".store.lock.stale-{token}"));
-                        if fs::rename(&path, &stolen).is_ok() {
-                            let _ = fs::remove_file(&stolen);
-                        }
-                        continue;
-                    }
-                    std::thread::sleep(std::time::Duration::from_millis(Self::POLL_MS));
-                }
-                Err(e) => {
-                    return Err(e).with_context(|| format!("locking {}", path.display()))
-                }
-            }
-        }
+        self.core.flush_count()
     }
 
-    /// Keep the holder visibly live during a long multi-shard flush
-    /// (staleness is judged by file mtime): touch mtime through the
-    /// handle opened at acquire — never through the path, which may
-    /// by now belong to a new holder after a staleness steal. Call
-    /// between expensive write steps.
-    pub(crate) fn refresh(&self) {
-        let _ = self.file.set_modified(std::time::SystemTime::now());
+    pub fn evictions(&self) -> usize {
+        self.core.evictions()
     }
-}
 
-impl Drop for DirLock {
-    fn drop(&mut self) {
-        // unlink only while we still own the file: after a staleness
-        // steal the path holds the new holder's token, and removing it
-        // would admit a third concurrent writer
-        if fs::read_to_string(&self.path).is_ok_and(|s| s == self.token) {
-            let _ = fs::remove_file(&self.path);
-        }
+    pub fn compactions(&self) -> usize {
+        self.core.compactions()
     }
-}
-
-/// Write `bytes` to `path` atomically: temp file in the same directory
-/// (same filesystem, so the rename is atomic), then rename over.
-pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
-    let dir = path.parent().context("cache path has no parent directory")?;
-    let base = path.file_name().context("cache path has no file name")?;
-    let tmp = dir.join(format!(".{}.tmp-{}", base.to_string_lossy(), std::process::id()));
-    {
-        let mut f = fs::File::create(&tmp)
-            .with_context(|| format!("creating {}", tmp.display()))?;
-        f.write_all(bytes)
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        f.sync_all().ok(); // durability best-effort; atomicity is the rename
-    }
-    fs::rename(&tmp, path)
-        .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
-    Ok(())
-}
-
-pub(crate) fn parse_hex_key(s: &str) -> Option<u64> {
-    u64::from_str_radix(s, 16).ok()
-}
-
-pub(crate) fn hex_key(key: u64) -> String {
-    format!("{key:016x}")
 }
 
 // ---- record (de)serialization --------------------------------------
 //
-// u64 keys are stored as 16-hex-digit strings (JSON numbers are f64 —
-// 53 mantissa bits would corrupt hash keys). f64 fields are stored as
+// The envelope (`v`, `kind`, `key`, `used`) belongs to the store core;
+// only the payload fields are defined here. f64 fields are stored as
 // JSON numbers: `util::json` prints the shortest exact representation
 // and parses it back bit-identically; non-finite values round-trip
 // through the `null` sentinel (becoming NaN on re-load).
@@ -628,32 +425,11 @@ fn system_from_json(j: &Json) -> Option<SystemMetrics> {
     })
 }
 
-fn flow_to_json(key: u64, fr: &FlowResult) -> Json {
-    Json::obj(vec![
-        ("v", Json::from(SCHEMA_VERSION as usize)),
-        ("kind", "flow".into()),
-        ("key", hex_key(key).as_str().into()),
-        ("synth", synth_to_json(&fr.synth)),
-        ("backend", backend_to_json(&fr.backend)),
-    ])
-}
-
 fn flow_from_json(rec: &Json) -> Option<FlowResult> {
     Some(FlowResult {
         synth: synth_from_json(rec.get("synth"))?,
         backend: backend_from_json(rec.get("backend"))?,
     })
-}
-
-fn eval_to_json(key: u64, ev: &Evaluation) -> Json {
-    Json::obj(vec![
-        ("v", Json::from(SCHEMA_VERSION as usize)),
-        ("kind", "eval".into()),
-        ("key", hex_key(key).as_str().into()),
-        ("synth", synth_to_json(&ev.flow.synth)),
-        ("backend", backend_to_json(&ev.flow.backend)),
-        ("system", system_to_json(&ev.system)),
-    ])
 }
 
 fn eval_from_json(rec: &Json) -> Option<Evaluation> {
@@ -669,6 +445,7 @@ mod tests {
     use crate::backend::{BackendConfig, Enablement, SpnrFlow};
     use crate::generators::{ArchConfig, Platform};
     use crate::simulators::simulate;
+    use std::fs;
 
     fn tmp_dir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir()
@@ -687,6 +464,11 @@ mod tests {
         let fr = flow.run(&arch, BackendConfig::new(0.8, 0.5)).unwrap();
         let system = simulate(&arch, &fr.backend, Enablement::Gf12).unwrap();
         Evaluation { flow: fr, system }
+    }
+
+    fn shard_file_of(store: &CacheStore, key: u64) -> PathBuf {
+        let shard = ((key >> 56) as usize) % store.shard_count();
+        store.dir().join(format!("shard-{shard:03}.jsonl"))
     }
 
     #[test]
@@ -800,7 +582,7 @@ mod tests {
         }
         // append garbage + a future-schema record to the shard file
         let store = CacheStore::open(&dir).unwrap();
-        let shard_path = store.shard_path(store.shard_of(key));
+        let shard_path = shard_file_of(&store, key);
         drop(store);
         let mut text = fs::read_to_string(&shard_path).unwrap();
         text.push_str("{ this is not json\n");
@@ -858,6 +640,65 @@ mod tests {
         }
         let store = CacheStore::open_sharded(&dir, 64).unwrap();
         assert_eq!(store.shard_count(), 4, "meta.json pins the shard count");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pending_count_is_exact_after_merge_on_flush() {
+        // ISSUE 4 satellite regression: `pending` used to count every
+        // entry residing in a dirty shard — so a merge-on-flush that
+        // folded another writer's disk records into memory, followed by
+        // one new put, reported the whole shard as pending. It must
+        // count exactly the not-yet-durable records.
+        let dir = tmp_dir("pending-drift");
+        let ev = sample_eval();
+        {
+            let other = CacheStore::open(&dir).unwrap();
+            other.put_eval(0x0bff_0000_0000_0001, ev);
+            other.put_eval(0x0bff_0000_0000_0002, ev);
+            other.flush().unwrap();
+        }
+        let store = CacheStore::open(&dir).unwrap();
+        store.put_eval(0x0bff_0000_0000_0003, ev);
+        assert_eq!(store.stats().pending, 1);
+        store.flush().unwrap(); // merges the other writer's two records
+        let s = store.stats();
+        assert_eq!(s.entries, 3);
+        assert_eq!(s.pending, 0, "everything durable after the flush: {s}");
+        store.put_eval(0x0bff_0000_0000_0004, ev);
+        let s = store.stats();
+        assert_eq!(s.entries, 4);
+        assert_eq!(
+            s.pending, 1,
+            "only the new record is pending, not its disk-merged shardmates: {s}"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn evicted_oracle_keys_miss_and_repopulate() {
+        let dir = tmp_dir("evict");
+        let ev = sample_eval();
+        {
+            let store = CacheStore::open(&dir).unwrap();
+            store.put_eval(0x0cff_0000_0000_0001, ev);
+            store.put_flow(0x0cff_0000_0000_0002, ev.flow);
+            store.flush().unwrap();
+            assert!(store.evict(0x0cff_0000_0000_0001));
+            store.flush().unwrap();
+        }
+        let store = CacheStore::open(&dir).unwrap();
+        assert!(
+            store.get_eval(0x0cff_0000_0000_0001).is_none(),
+            "evicted key must read as a miss after reopen"
+        );
+        assert!(store.get_flow(0x0cff_0000_0000_0002).is_some());
+        // the caller re-runs the oracle and repopulates
+        store.put_eval(0x0cff_0000_0000_0001, ev);
+        store.flush().unwrap();
+        drop(store);
+        let store = CacheStore::open(&dir).unwrap();
+        assert!(store.get_eval(0x0cff_0000_0000_0001).is_some());
         let _ = fs::remove_dir_all(&dir);
     }
 }

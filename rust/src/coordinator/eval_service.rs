@@ -118,6 +118,12 @@ pub struct EvalStats {
     pub model_hits: usize,
     /// Model-store lookups that fell back to a fresh fit.
     pub model_misses: usize,
+    /// Records evicted by the attached stores' lifecycle policies
+    /// (oracle + model store, store-level).
+    pub store_evictions: usize,
+    /// Compaction passes the attached stores have run (explicit +
+    /// automatic, store-level).
+    pub store_compactions: usize,
 }
 
 impl EvalStats {
@@ -179,6 +185,11 @@ impl std::fmt::Display for EvalStats {
             f,
             " | model store {} hits / {} misses",
             self.model_hits, self.model_misses
+        )?;
+        write!(
+            f,
+            " | lifecycle {} evictions / {} compactions",
+            self.store_evictions, self.store_compactions
         )
     }
 }
@@ -377,6 +388,10 @@ impl EvalService {
             flushes: self.store.as_ref().map_or(0, |s| s.flush_count()),
             model_hits: self.model_store.as_ref().map_or(0, |m| m.hits()),
             model_misses: self.model_store.as_ref().map_or(0, |m| m.misses()),
+            store_evictions: self.store.as_ref().map_or(0, |s| s.evictions())
+                + self.model_store.as_ref().map_or(0, |m| m.evictions()),
+            store_compactions: self.store.as_ref().map_or(0, |s| s.compactions())
+                + self.model_store.as_ref().map_or(0, |m| m.compactions()),
         }
     }
 

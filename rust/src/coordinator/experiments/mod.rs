@@ -11,6 +11,8 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::StorePolicy;
+
 /// Common experiment options from the CLI.
 #[derive(Debug, Clone)]
 pub struct ExpOptions {
@@ -26,6 +28,9 @@ pub struct ExpOptions {
     /// `--no-model-cache`: keep the oracle cache but skip the
     /// surrogate-model store (always refit).
     pub no_model_cache: bool,
+    /// Store lifecycle policy (`--store-max-*` flags): applied to both
+    /// stores opened through these options.
+    pub store_policy: StorePolicy,
 }
 
 impl Default for ExpOptions {
@@ -36,6 +41,7 @@ impl Default for ExpOptions {
             quick: false,
             cache_dir: None,
             no_model_cache: false,
+            store_policy: StorePolicy::default_auto(),
         }
     }
 }
@@ -50,11 +56,13 @@ impl ExpOptions {
         self.out_dir.join(format!("{name}.csv"))
     }
 
-    /// Open the persistent oracle cache named by `cache_dir`, if any.
+    /// Open the persistent oracle cache named by `cache_dir`, if any,
+    /// under the configured lifecycle policy.
     pub fn open_cache(&self) -> Result<Option<std::sync::Arc<crate::coordinator::CacheStore>>> {
         match &self.cache_dir {
             Some(dir) => Ok(Some(std::sync::Arc::new(
-                crate::coordinator::CacheStore::open(dir)?,
+                crate::coordinator::CacheStore::open(dir)?
+                    .with_policy(self.store_policy.clone()),
             ))),
             None => Ok(None),
         }
@@ -70,7 +78,8 @@ impl ExpOptions {
         }
         match &self.cache_dir {
             Some(dir) => Ok(Some(std::sync::Arc::new(
-                crate::coordinator::ModelStore::open_under(dir)?,
+                crate::coordinator::ModelStore::open_under(dir)?
+                    .with_policy(self.store_policy.clone()),
             ))),
             None => Ok(None),
         }

@@ -1,7 +1,8 @@
 //! L3 coordinator: dataset generation, model-training orchestration,
 //! the parallel memoizing evaluation service, the dynamic-batching
-//! prediction server, the MOTPE DSE driver, and the per-table/figure
-//! experiment drivers (DESIGN.md §5).
+//! prediction server, the MOTPE DSE driver, the per-table/figure
+//! experiment drivers (DESIGN.md §5), and the shared persistent-store
+//! subsystem both durable caches are built on (`store`).
 
 pub mod cache_store;
 pub mod datagen;
@@ -10,6 +11,7 @@ pub mod eval_service;
 pub mod experiments;
 pub mod model_store;
 pub mod predict_server;
+pub mod store;
 pub mod trainer;
 
 pub use cache_store::{CacheStore, CacheStoreStats};
@@ -18,4 +20,5 @@ pub use dse_driver::{DseDriver, DseProblem, SurrogateBundle};
 pub use eval_service::{EvalService, EvalStats, Evaluation, SurrogatePoint};
 pub use model_store::{ModelKey, ModelStore, ModelStoreStats};
 pub use predict_server::{PredictClient, PredictServer, ServerStats};
+pub use store::{CompactReport, StorePolicy, StoreStats};
 pub use trainer::{EvalReport, ModelCacheStats, ModelMenu, TrainOptions, Trainer};

@@ -1,11 +1,14 @@
-//! Persistent surrogate-model store (ISSUE 3 tentpole; ROADMAP
-//! "surrogate-model persistence so a warm start skips refitting too").
+//! Persistent surrogate-model store (ISSUE 3; rebased onto the shared
+//! `coordinator::store` core in ISSUE 4).
 //!
 //! PR 2 made the *oracle* cache durable, but every warm start still
 //! re-tuned and refit the GBDT/RF/ensemble surrogates from scratch —
-//! with the oracle served from disk, refitting now dominates restart
-//! wall-clock. This store makes the fitted models durable too,
-//! mirroring `cache_store.rs` discipline:
+//! with the oracle served from disk, refitting dominates restart
+//! wall-clock. This store makes the fitted models durable too. The
+//! whole persistence protocol (shard routing, lazy load, atomic
+//! flush, `.store.lock` ordering, merge-on-flush, eviction budgets,
+//! compaction) lives in the generic [`ShardedStore`]; this file only
+//! defines the artifact record family and the [`ModelKey`] builder:
 //!
 //! - **Content-hash keys**: a model artifact is keyed by a hash of
 //!   everything the fit is a pure function of — training matrices (a
@@ -14,18 +17,10 @@
 //!   model replays **bit-identical predictions**, because every model
 //!   family serializes its f64s through `util::json`'s exact
 //!   round-trip.
-//! - **Schema-tagged JSONL shards**: records carry `{"v", "kind",
-//!   "key", "model"}`; unknown versions and corrupt lines are skipped
-//!   on load, and a payload that fails a family's `from_json` reads as
-//!   a miss — callers fall back to refitting (and overwrite the bad
-//!   artifact at the next flush). Shard files are written in sorted
-//!   (kind, key) order, so they are byte-deterministic for an entry
-//!   set.
-//! - **Lazy load, atomic flush, merge-on-flush**: shard files parse on
-//!   first touch; flushes rewrite dirty shards via temp + rename under
-//!   the shared `.store.lock`, re-reading the disk shard first so a
-//!   concurrent trainer/DSE process sharing the directory never loses
-//!   records (same cross-process contract as the oracle store).
+//! - **Artifacts** carry their family tag as the record kind and the
+//!   family's `to_json` payload under `"model"`; a payload that fails
+//!   a family's `from_json` reads as a miss — callers fall back to
+//!   refitting (and overwrite the bad artifact at the next flush).
 //! - **Cohabitation**: the store lives in a `models/` subdirectory of
 //!   the oracle cache dir ([`ModelStore::open_under`]), so one
 //!   `--cache-dir` carries both oracle shards and model artifacts
@@ -36,28 +31,21 @@
 //! `EvalService::fit_surrogate` route through here — read-through on
 //! fit requests, write-behind after tuning, flushed by the CLI or the
 //! last `Drop`. `--no-model-cache` is the CLI escape hatch.
-//!
-//! NB: the shard/lock/flush *protocol* here deliberately mirrors
-//! `cache_store.rs` line for line (only the record schema and sort key
-//! differ). Until the two grow a shared generic core (ROADMAP), any
-//! change to the lazy-load / merge-on-flush / DirLock-ordering logic
-//! must be applied to BOTH files.
 
-use std::collections::HashMap;
-use std::fs;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::util::json::Json;
 use crate::util::rng::hash_bytes;
 
-use super::cache_store::{hex_key, parse_hex_key, write_atomic, DirLock};
+use super::store::{CompactReport, Record, ShardedStore, StoreConfig, StorePolicy};
 
-/// Record schema version; bump on any layout change. Loaders skip
-/// records whose tag does not match.
+/// Record schema version; bump on any *breaking* layout change
+/// (loaders skip records whose tag does not match). The ISSUE 4 store
+/// core's envelope additions (`used` stamp, `tomb` kind) are additive
+/// and deliberately unbumped so PR 3 model directories stay warm — see
+/// the matching note on `cache_store::SCHEMA_VERSION`.
 pub const SCHEMA_VERSION: u64 = 1;
 
 /// Default shard-file count (model artifacts are few but large, so
@@ -138,52 +126,86 @@ pub struct ModelStoreStats {
     pub flushes: usize,
     /// Artifacts currently held.
     pub entries: usize,
-    /// Artifacts residing in shards with unflushed changes (an upper
-    /// bound on the write-behind backlog: a dirty shard's disk-loaded
-    /// entries count too, since the whole shard rewrites at flush).
+    /// Artifacts not yet durable on disk. Exact per-record accounting
+    /// (ISSUE 4 fix): a merge-on-flush that folds disk artifacts into
+    /// a shard no longer inflates this.
     pub pending: usize,
+    /// Eviction tombstones currently held (reclaimed at compaction).
+    pub tombstones: usize,
+    /// Serialized bytes of the live artifacts (what the `max_bytes`
+    /// eviction budget is judged against).
+    pub live_bytes: u64,
+    /// Artifacts evicted (policy budgets or explicit `evict`) since
+    /// open.
+    pub evictions: usize,
+    /// Compaction passes since open (explicit + automatic).
+    pub compactions: usize,
 }
 
 impl std::fmt::Display for ModelStoreStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} artifacts ({} pending) | {} hits / {} misses | {} shard loads | {} flushes",
-            self.entries, self.pending, self.hits, self.misses, self.shard_loads, self.flushes
+            "{} artifacts ({} pending, {} B live) | {} hits / {} misses | {} shard loads | {} flushes | {} evicted, {} tombstones, {} compactions",
+            self.entries,
+            self.pending,
+            self.live_bytes,
+            self.hits,
+            self.misses,
+            self.shard_loads,
+            self.flushes,
+            self.evictions,
+            self.tombstones,
+            self.compactions
         )
     }
 }
 
-#[derive(Clone, Copy)]
-struct ShardState {
-    loaded: bool,
-    dirty: bool,
+/// One stored artifact: the family tag (record kind) plus the
+/// family's `to_json` payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArtifact {
+    pub kind: String,
+    pub payload: Json,
 }
 
-struct Entry {
-    kind: String,
-    payload: Json,
-}
+impl Record for ModelArtifact {
+    fn kind(&self) -> std::borrow::Cow<'_, str> {
+        std::borrow::Cow::Borrowed(self.kind.as_str())
+    }
 
-struct Inner {
-    entries: HashMap<u64, Entry>,
-    shards: Vec<ShardState>,
+    fn encode(&self, out: &mut Vec<(&'static str, Json)>) {
+        out.push(("model", self.payload.clone()));
+    }
+
+    fn decode(kind: &str, rec: &Json) -> Option<ModelArtifact> {
+        let payload = rec.get("model").clone();
+        if payload == Json::Null {
+            return None;
+        }
+        Some(ModelArtifact { kind: kind.to_string(), payload })
+    }
 }
 
 /// Disk-backed, sharded, read-through/write-behind store for fitted
-/// surrogate models. Thread-safe; share one instance across the
+/// surrogate models: a thin typed wrapper over the shared
+/// [`ShardedStore`] core. Thread-safe; share one instance across the
 /// trainer and services via `Arc`.
 pub struct ModelStore {
-    dir: PathBuf,
-    n_shards: usize,
-    inner: Mutex<Inner>,
-    hits: AtomicUsize,
-    misses: AtomicUsize,
-    shard_loads: AtomicUsize,
-    flushes: AtomicUsize,
+    core: ShardedStore<ModelArtifact>,
 }
 
 impl ModelStore {
+    fn config() -> StoreConfig {
+        StoreConfig {
+            schema_version: SCHEMA_VERSION,
+            default_shards: DEFAULT_SHARDS,
+            file_prefix: "model",
+            label: "model store",
+            policy: StorePolicy::default_auto(),
+        }
+    }
+
     /// Open (creating if needed) a model-store directory with the
     /// default shard count. An existing directory keeps the shard
     /// count it was created with (recorded in `meta.json`).
@@ -201,253 +223,111 @@ impl ModelStore {
     /// Open with an explicit shard count (ignored when the directory
     /// already records one).
     pub fn open_sharded(dir: impl Into<PathBuf>, n_shards: usize) -> Result<ModelStore> {
-        let dir = dir.into();
-        fs::create_dir_all(&dir)
-            .with_context(|| format!("creating model store dir {}", dir.display()))?;
-        let meta_path = dir.join("meta.json");
-        let n_shards = match fs::read_to_string(&meta_path) {
-            Ok(text) => {
-                let meta = Json::parse(&text)
-                    .with_context(|| format!("parsing {}", meta_path.display()))?;
-                let v = meta.get("v").as_usize().unwrap_or(0) as u64;
-                anyhow::ensure!(
-                    v == SCHEMA_VERSION,
-                    "model store {} has schema v{v}, this binary expects v{SCHEMA_VERSION}",
-                    dir.display()
-                );
-                meta.get("shards")
-                    .as_usize()
-                    .filter(|&s| s > 0)
-                    .with_context(|| format!("{}: bad shard count", meta_path.display()))?
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                let n = n_shards.max(1);
-                let meta = Json::obj(vec![
-                    ("v", Json::from(SCHEMA_VERSION as usize)),
-                    ("shards", Json::from(n)),
-                ]);
-                write_atomic(&meta_path, format!("{meta}\n").as_bytes())?;
-                n
-            }
-            Err(e) => {
-                return Err(e).with_context(|| format!("reading {}", meta_path.display()))
-            }
-        };
         Ok(ModelStore {
-            dir,
-            n_shards,
-            inner: Mutex::new(Inner {
-                entries: HashMap::new(),
-                shards: vec![ShardState { loaded: false, dirty: false }; n_shards],
-            }),
-            hits: AtomicUsize::new(0),
-            misses: AtomicUsize::new(0),
-            shard_loads: AtomicUsize::new(0),
-            flushes: AtomicUsize::new(0),
+            core: ShardedStore::open_sharded(dir, ModelStore::config(), n_shards)?,
         })
     }
 
+    /// Replace the lifecycle policy (eviction budgets, auto-compaction
+    /// ratio) before sharing the store.
+    pub fn with_policy(self, policy: StorePolicy) -> ModelStore {
+        ModelStore { core: self.core.with_policy(policy) }
+    }
+
     pub fn dir(&self) -> &Path {
-        &self.dir
+        self.core.dir()
     }
 
     pub fn shard_count(&self) -> usize {
-        self.n_shards
-    }
-
-    fn shard_of(&self, key: u64) -> usize {
-        ((key >> 56) as usize) % self.n_shards
-    }
-
-    fn shard_path(&self, shard: usize) -> PathBuf {
-        self.dir.join(format!("model-{shard:03}.jsonl"))
-    }
-
-    fn load_shard(&self, inner: &mut Inner, shard: usize) {
-        if inner.shards[shard].loaded {
-            return;
-        }
-        inner.shards[shard].loaded = true;
-        self.shard_loads.fetch_add(1, Ordering::Relaxed);
-        self.parse_shard_lines(inner, shard);
-    }
-
-    /// Disk-to-map merge (in-memory entries win). Unknown schema
-    /// versions and corrupt lines are skipped; payloads are *not*
-    /// validated here — a family's `from_json` is the arbiter, so a
-    /// structurally-valid but semantically-corrupt artifact surfaces
-    /// as a refit, never a crash.
-    fn parse_shard_lines(&self, inner: &mut Inner, shard: usize) {
-        let text = match fs::read_to_string(self.shard_path(shard)) {
-            Ok(t) => t,
-            Err(_) => return,
-        };
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            let rec = match Json::parse(line) {
-                Ok(r) => r,
-                Err(_) => continue,
-            };
-            if rec.get("v").as_usize().map(|v| v as u64) != Some(SCHEMA_VERSION) {
-                continue;
-            }
-            let key = match rec.get("key").as_str().and_then(parse_hex_key) {
-                Some(k) => k,
-                None => continue,
-            };
-            let kind = match rec.get("kind").as_str() {
-                Some(k) => k.to_string(),
-                None => continue,
-            };
-            let payload = rec.get("model").clone();
-            if payload == Json::Null {
-                continue;
-            }
-            inner
-                .entries
-                .entry(key)
-                .or_insert(Entry { kind, payload });
-        }
+        self.core.shard_count()
     }
 
     /// Stored artifact payload for (kind, key), if present. A key held
     /// under a different kind reads as a miss (content-hash keys embed
     /// the family tag, so this only happens on adversarial input).
     pub fn get(&self, kind: &str, key: u64) -> Option<Json> {
-        let mut inner = self.inner.lock().unwrap();
-        self.load_shard(&mut inner, self.shard_of(key));
-        match inner.entries.get(&key) {
-            Some(e) if e.kind == kind => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(e.payload.clone())
-            }
-            _ => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+        self.core.get(kind, key).map(|a| a.payload)
     }
 
     /// Record an artifact (write-behind: durable at the next flush).
     /// Overwrites an existing entry whose payload differs — that is
     /// how a corrupt artifact gets repaired after the fallback refit.
     pub fn put(&self, kind: &str, key: u64, payload: Json) {
-        let mut inner = self.inner.lock().unwrap();
-        let shard = self.shard_of(key);
-        let changed = match inner.entries.get(&key) {
-            Some(e) => e.kind != kind || e.payload != payload,
-            None => true,
-        };
-        if changed {
-            inner
-                .entries
-                .insert(key, Entry { kind: kind.to_string(), payload });
-            inner.shards[shard].dirty = true;
-        }
+        self.core.put(key, ModelArtifact { kind: kind.to_string(), payload });
+    }
+
+    /// Evict an artifact (tombstoned: reads miss, concurrent writers
+    /// cannot resurrect it). Returns whether a live artifact was
+    /// evicted.
+    pub fn evict(&self, key: u64) -> bool {
+        self.core.evict(key)
     }
 
     /// Write every dirty shard atomically, serialized across processes
     /// by the directory lock and merged with the disk state first
-    /// (same contract as `CacheStore::flush`). Returns the number of
-    /// shard files written.
+    /// (same contract as `CacheStore::flush` — it is literally the
+    /// same code). Returns the number of shard files written.
     pub fn flush(&self) -> Result<usize> {
-        // dirtiness pre-check, then the cross-process lock *without*
-        // the in-process Mutex held (a contended lock wait must not
-        // stall concurrent get/put callers), then recompute under it
-        {
-            let inner = self.inner.lock().unwrap();
-            if !inner.shards.iter().any(|s| s.dirty) {
-                return Ok(0);
-            }
-        }
-        let lock = DirLock::acquire(&self.dir)?;
-        let mut inner = self.inner.lock().unwrap();
-        let dirty: Vec<usize> =
-            (0..self.n_shards).filter(|&s| inner.shards[s].dirty).collect();
-        if dirty.is_empty() {
-            return Ok(0);
-        }
-        for &shard in &dirty {
-            lock.refresh();
-            self.parse_shard_lines(&mut inner, shard);
-            inner.shards[shard].loaded = true;
-            let mut lines: Vec<(String, u64, String)> = inner
-                .entries
-                .iter()
-                .filter(|(k, _)| self.shard_of(**k) == shard)
-                .map(|(&k, e)| {
-                    let rec = Json::obj(vec![
-                        ("v", Json::from(SCHEMA_VERSION as usize)),
-                        ("kind", e.kind.as_str().into()),
-                        ("key", hex_key(k).as_str().into()),
-                        ("model", e.payload.clone()),
-                    ]);
-                    (e.kind.clone(), k, rec.to_string())
-                })
-                .collect();
-            // sorted (kind, key) order: shard bytes are deterministic
-            lines.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
-            let mut body = String::new();
-            for (_, _, line) in &lines {
-                body.push_str(line);
-                body.push('\n');
-            }
-            write_atomic(&self.shard_path(shard), body.as_bytes())?;
-            inner.shards[shard].dirty = false;
-        }
-        self.flushes.fetch_add(1, Ordering::Relaxed);
-        Ok(dirty.len())
+        self.core.flush()
+    }
+
+    /// Compaction pass: drop tombstones and dead lines, enforce the
+    /// eviction policy, rewrite only the shards whose bytes change.
+    pub fn compact(&self) -> Result<CompactReport> {
+        self.core.compact()
+    }
+
+    /// Force every shard into memory (CLI stats / maintenance).
+    pub fn load_all(&self) {
+        self.core.load_all()
     }
 
     /// Snapshot the store counters.
     pub fn stats(&self) -> ModelStoreStats {
-        let inner = self.inner.lock().unwrap();
-        let pending = inner
-            .entries
-            .keys()
-            .filter(|&&k| inner.shards[self.shard_of(k)].dirty)
-            .count();
+        let s = self.core.stats();
         ModelStoreStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            shard_loads: self.shard_loads.load(Ordering::Relaxed),
-            flushes: self.flushes.load(Ordering::Relaxed),
-            entries: inner.entries.len(),
-            pending,
+            hits: s.hits,
+            misses: s.misses,
+            shard_loads: s.shard_loads,
+            flushes: s.flushes,
+            entries: s.entries,
+            pending: s.pending,
+            tombstones: s.tombstones,
+            live_bytes: s.live_bytes,
+            evictions: s.evictions,
+            compactions: s.compactions,
         }
     }
 
     pub fn hits(&self) -> usize {
-        self.hits.load(Ordering::Relaxed)
+        self.core.hits()
     }
 
     pub fn misses(&self) -> usize {
-        self.misses.load(Ordering::Relaxed)
+        self.core.misses()
     }
 
     pub fn shard_loads(&self) -> usize {
-        self.shard_loads.load(Ordering::Relaxed)
+        self.core.shard_loads()
     }
 
     pub fn flush_count(&self) -> usize {
-        self.flushes.load(Ordering::Relaxed)
+        self.core.flush_count()
     }
-}
 
-impl Drop for ModelStore {
-    /// Best-effort durability for callers that forget an explicit
-    /// flush; errors are swallowed (Drop cannot fail).
-    fn drop(&mut self) {
-        let _ = self.flush();
+    pub fn evictions(&self) -> usize {
+        self.core.evictions()
+    }
+
+    pub fn compactions(&self) -> usize {
+        self.core.compactions()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::fs;
 
     fn tmp_dir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir()
@@ -458,6 +338,11 @@ mod tests {
 
     fn payload(v: f64) -> Json {
         Json::obj(vec![("w", Json::arr_f64(&[v, -v])), ("b", v.into())])
+    }
+
+    fn shard_file_of(store: &ModelStore, key: u64) -> PathBuf {
+        let shard = ((key >> 56) as usize) % store.shard_count();
+        store.dir().join(format!("model-{shard:03}.jsonl"))
     }
 
     #[test]
@@ -524,7 +409,7 @@ mod tests {
             store.flush().unwrap();
         }
         let store = ModelStore::open(&dir).unwrap();
-        let shard_path = store.shard_path(store.shard_of(key));
+        let shard_path = shard_file_of(&store, key);
         drop(store);
         let mut text = fs::read_to_string(&shard_path).unwrap();
         text.push_str("{ not json\n");
@@ -612,5 +497,61 @@ mod tests {
             ModelKey::new("f").f64s(&[-0.0]).finish(),
             "bit-pattern hashing distinguishes -0.0"
         );
+    }
+
+    #[test]
+    fn pending_count_is_exact_after_merge_on_flush() {
+        // ISSUE 4 satellite regression, model-store side (same drift
+        // as the oracle store: pending must never count disk-merged
+        // shardmates of a dirty record)
+        let dir = tmp_dir("pending-drift");
+        {
+            let other = ModelStore::open(&dir).unwrap();
+            other.put("f", 0x0c00_0000_0000_0001, payload(1.0));
+            other.put("f", 0x0c00_0000_0000_0002, payload(2.0));
+            other.flush().unwrap();
+        }
+        let store = ModelStore::open(&dir).unwrap();
+        store.put("f", 0x0c00_0000_0000_0003, payload(3.0));
+        assert_eq!(store.stats().pending, 1);
+        store.flush().unwrap();
+        let s = store.stats();
+        assert_eq!(s.entries, 3);
+        assert_eq!(s.pending, 0, "everything durable after the flush: {s}");
+        store.put("f", 0x0c00_0000_0000_0004, payload(4.0));
+        let s = store.stats();
+        assert_eq!(
+            s.pending, 1,
+            "only the new artifact is pending, not its disk-merged shardmates: {s}"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_budget_evicts_lru_artifacts() {
+        use crate::coordinator::store::StorePolicy;
+        let dir = tmp_dir("budget");
+        {
+            let store = ModelStore::open(&dir).unwrap(); // epoch 1
+            for i in 0..5u64 {
+                store.put("f", 0x0d00_0000_0000_0000 + i, payload(i as f64));
+            }
+            store.flush().unwrap();
+        }
+        // epoch 2: keep 2; key 1 is freshly used, key 9 freshly put
+        let store = ModelStore::open(&dir)
+            .unwrap()
+            .with_policy(StorePolicy { max_records: Some(2), ..StorePolicy::default() });
+        assert!(store.get("f", 0x0d00_0000_0000_0001).is_some());
+        store.put("f", 0x0d00_0000_0000_0009, payload(9.0));
+        store.flush().unwrap();
+        let s = store.stats();
+        assert_eq!(s.entries, 2, "budget must hold: {s}");
+        assert!(s.evictions >= 4, "4 stale artifacts evicted: {s}");
+        assert!(store.get("f", 0x0d00_0000_0000_0001).is_some(), "LRU keeps fresh use");
+        assert!(store.get("f", 0x0d00_0000_0000_0009).is_some(), "LRU keeps fresh put");
+        assert!(store.get("f", 0x0d00_0000_0000_0000).is_none());
+        assert!(store.get("f", 0x0d00_0000_0000_0002).is_none());
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,58 @@
+//! Crash-injection fault points for the shared flush path (ISSUE 4
+//! satellite): tests arm a one-shot fault and the next flush dies at
+//! that protocol step, leaving the exact on-disk state a `kill -9`
+//! would — a staged temp file without the rename, or renamed shards
+//! with the directory lock still held. Recovery tests then reopen the
+//! directory with a fresh store (the moral equivalent of a fresh
+//! process) and assert that no acknowledged record is lost and no torn
+//! JSONL is ever served.
+//!
+//! The hook is process-global and one-shot: `arm` schedules a single
+//! fault, the first flush to reach that point consumes it, and
+//! everything after runs normally. Tests that arm faults must
+//! serialize themselves (the fault does not know which store will
+//! flush next).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Where in the flush protocol the injected crash happens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushFault {
+    /// After the shard body is staged to its temp file, before the
+    /// rename: the previous shard contents must survive intact and the
+    /// orphaned temp file must be ignored by every later reader.
+    BeforeRename,
+    /// After every dirty shard is renamed into place, before the
+    /// directory lock is released: the data is durable but the lock is
+    /// left behind; a later flusher must steal it once stale.
+    BeforeLockRelease,
+}
+
+// 0 = disarmed, 1 = BeforeRename, 2 = BeforeLockRelease
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+fn code(fault: FlushFault) -> usize {
+    match fault {
+        FlushFault::BeforeRename => 1,
+        FlushFault::BeforeLockRelease => 2,
+    }
+}
+
+/// Arm a one-shot crash at `fault`; the next flush that reaches the
+/// point consumes it.
+pub fn arm(fault: FlushFault) {
+    ARMED.store(code(fault), Ordering::SeqCst);
+}
+
+/// Cancel a pending fault (test cleanup).
+pub fn disarm() {
+    ARMED.store(0, Ordering::SeqCst);
+}
+
+/// True exactly once after `arm(point)` — the flush path calls this at
+/// each fault point and dies when it fires.
+pub(crate) fn trip(point: FlushFault) -> bool {
+    ARMED
+        .compare_exchange(code(point), 0, Ordering::SeqCst, Ordering::SeqCst)
+        .is_ok()
+}

@@ -1,0 +1,179 @@
+//! Cross-process flush serialization and atomic file replacement for
+//! store directories — the two disk primitives every `ShardedStore`
+//! protocol step is built from (extracted from `cache_store.rs`, which
+//! previously mirrored them into `model_store.rs` by hand).
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{Context, Result};
+
+/// Cross-process flush serialization for a store directory: a
+/// `.store.lock` file created with `create_new` (atomic on every
+/// filesystem we care about) and removed on drop. A lock whose *file*
+/// has not changed for the staleness window is presumed to belong to a
+/// crashed process and is broken — flushes must never wedge a run
+/// forever. Staleness is judged by the lock file's age, never by how
+/// long this waiter has been waiting: a live holder mid-long-flush, or
+/// a sequence of short-lived locks taken by other processes, must not
+/// get stolen (stealing a live lock reintroduces the lost-update race
+/// the lock exists to prevent). One lock per directory, so the oracle
+/// and model stores (separate directories) never contend.
+pub(crate) struct DirLock {
+    path: PathBuf,
+    /// Unique content written into the lock file; `drop` unlinks the
+    /// file only while it still holds this token, so a holder whose
+    /// lock was stolen never deletes the new holder's lock.
+    token: String,
+    /// The handle from `create_new`: `refresh` touches mtime through
+    /// it, so a stalled holder whose lock was stolen (path renamed and
+    /// recreated by the new holder) touches its own orphaned inode,
+    /// never the new holder's file.
+    file: fs::File,
+}
+
+impl DirLock {
+    /// A lock file stamped in the *future* only reads as stale past
+    /// this much skew. It is deliberately much larger than the normal
+    /// staleness window: a live holder whose clock runs ahead by less
+    /// than this ages out naturally (its mtime drifts into the past as
+    /// real time passes), while an absurd future timestamp — which
+    /// could otherwise never age out and would wedge every flusher
+    /// forever — is eventually broken. NTP-grade skew is well under a
+    /// second; ten minutes of skew between hosts cooperating on one
+    /// cache dir is operational pathology, and progress wins at that
+    /// point.
+    const FUTURE_SKEW_STALE_MS: u128 = 600_000;
+    const POLL_MS: u64 = 20;
+
+    /// Staleness window in milliseconds. Default 30 s; the
+    /// `FSO_STORE_LOCK_STALE_MS` environment variable overrides it
+    /// (crash-recovery tests shrink it so a leaked lock is stolen in
+    /// milliseconds instead of half a minute). Read once per process.
+    fn stale_ms() -> u128 {
+        static MS: OnceLock<u128> = OnceLock::new();
+        *MS.get_or_init(|| {
+            std::env::var("FSO_STORE_LOCK_STALE_MS")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(30_000)
+        })
+    }
+
+    pub(crate) fn acquire(dir: &Path) -> Result<DirLock> {
+        static NONCE: AtomicUsize = AtomicUsize::new(0);
+        let path = dir.join(".store.lock");
+        let token = format!(
+            "{}-{}",
+            std::process::id(),
+            NONCE.fetch_add(1, Ordering::Relaxed)
+        );
+        loop {
+            match fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = f.write_all(token.as_bytes());
+                    let _ = f.sync_all();
+                    return Ok(DirLock { path, token, file: f });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = match fs::metadata(&path).and_then(|m| m.modified()) {
+                        Ok(mtime) => match mtime.elapsed() {
+                            Ok(age) => age.as_millis() >= Self::stale_ms(),
+                            // mtime ahead of our clock: see
+                            // FUTURE_SKEW_STALE_MS for why this bound
+                            // is far looser than the normal window
+                            Err(skew) => {
+                                skew.duration().as_millis() >= Self::FUTURE_SKEW_STALE_MS
+                            }
+                        },
+                        // lock vanished between create_new and the stat
+                        // (holder released): just retry create_new
+                        Err(_) => false,
+                    };
+                    if stale {
+                        // crashed holder (the file itself went stale,
+                        // see `refresh`). Steal by *rename*, which is
+                        // atomic: exactly one contender claims the
+                        // stale file; the losers' renames fail and
+                        // they re-poll — so a fresh lock created by
+                        // the winner is never unlinked by a loser.
+                        let stolen = dir.join(format!(".store.lock.stale-{token}"));
+                        if fs::rename(&path, &stolen).is_ok() {
+                            let _ = fs::remove_file(&stolen);
+                        }
+                        continue;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(Self::POLL_MS));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("locking {}", path.display()))
+                }
+            }
+        }
+    }
+
+    /// Keep the holder visibly live during a long multi-shard flush
+    /// (staleness is judged by file mtime): touch mtime through the
+    /// handle opened at acquire — never through the path, which may
+    /// by now belong to a new holder after a staleness steal. Call
+    /// between expensive write steps.
+    pub(crate) fn refresh(&self) {
+        let _ = self.file.set_modified(std::time::SystemTime::now());
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        // unlink only while we still own the file: after a staleness
+        // steal the path holds the new holder's token, and removing it
+        // would admit a third concurrent writer
+        if fs::read_to_string(&self.path).is_ok_and(|s| s == self.token) {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// The temp-file path `write_atomic` stages through for `path` (shared
+/// with the crash-injection fault hook, which must leave behind exactly
+/// the temp file a killed writer would). The suffix is unique per call
+/// — pid *and* a process-wide nonce — because two threads of one
+/// process may race unlocked writes to the same target (the meta.json
+/// epoch bump at open), and a shared temp path would let one thread's
+/// rename steal or lose the other's staged file.
+pub(crate) fn tmp_path(path: &Path) -> PathBuf {
+    static NONCE: AtomicUsize = AtomicUsize::new(0);
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    let base = path
+        .file_name()
+        .map(|b| b.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    dir.join(format!(
+        ".{base}.tmp-{}-{}",
+        std::process::id(),
+        NONCE.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory
+/// (same filesystem, so the rename is atomic), then rename over.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    anyhow::ensure!(
+        path.parent().is_some() && path.file_name().is_some(),
+        "store path {} has no parent directory / file name",
+        path.display()
+    );
+    let tmp = tmp_path(path);
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().ok(); // durability best-effort; atomicity is the rename
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+    Ok(())
+}

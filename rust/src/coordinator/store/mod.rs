@@ -1,0 +1,17 @@
+//! Shared persistent-store subsystem (ISSUE 4 tentpole): the generic
+//! sharded JSONL store core both `CacheStore` and `ModelStore` are
+//! built on, plus the disk primitives (atomic replace, directory lock)
+//! and the crash-injection fault hook its test suite drives.
+//!
+//! See [`sharded`] for the full protocol and lifecycle-policy docs,
+//! and the README "Store subsystem" section for the on-disk layout and
+//! CLI (`fso store compact` / `fso store stats`).
+
+pub mod fault;
+pub(crate) mod lock;
+pub mod sharded;
+
+pub use sharded::{
+    hex_key, parse_hex_key, CompactReport, Record, ShardedStore, StoreConfig, StorePolicy,
+    StoreStats, TOMB_KIND,
+};

@@ -1,0 +1,1292 @@
+//! `ShardedStore<R>` — the generic persistent-store core (ISSUE 4
+//! tentpole). `CacheStore` (oracle results) and `ModelStore` (fitted
+//! surrogates) used to mirror the same shard/lock/flush protocol line
+//! for line; every drift between the two copies was a correctness
+//! hazard. This module owns the protocol once, and both stores are now
+//! thin typed wrappers:
+//!
+//! - **Content-hash shard routing**: u64 keys (splitmix-finalized
+//!   hashes) route to one of N shard files by their top byte.
+//! - **Schema-tagged JSONL records**: the store owns the envelope
+//!   (`v`, `kind`, `key`, `used`); a [`Record`] implementation encodes
+//!   and decodes the payload fields. Unknown schema versions and
+//!   corrupt lines are skipped on load — a torn or foreign record is
+//!   never served.
+//! - **Lazy per-shard load**: a shard file parses the first time a key
+//!   routed to it is requested.
+//! - **Atomic flush**: dirty shards rewrite via temp + rename (same
+//!   directory, so the rename is atomic) in sorted `(kind, key)` order
+//!   — shard files are byte-deterministic for a given entry set.
+//! - **`.store.lock` ordering + merge-on-flush**: flushes serialize
+//!   through a directory lock (stolen after a staleness window, so a
+//!   crashed holder never wedges the store), and each dirty shard is
+//!   re-parsed from disk right before its rewrite so records another
+//!   process flushed since our last read are folded in, never dropped.
+//!
+//! On top of the shared protocol sit the first **lifecycle policies**
+//! ([`StorePolicy`]):
+//!
+//! - **Eviction** — LRU by last-used stamp under a byte / record /
+//!   age budget. Stamps are *logical epochs* (the store's open
+//!   counter, persisted in `meta.json`), not wall-clock times: two runs
+//!   replaying the same operation sequence assign identical stamps, so
+//!   eviction decisions — and therefore shard bytes — stay
+//!   deterministic. Evicting a key plants a **tombstone** record, so
+//!   merge-on-flush in a concurrent process cannot resurrect the
+//!   evicted entry from its own stale shard read — for as long as the
+//!   tombstone is on disk. Compaction reclaims tombstones, which
+//!   narrows that guarantee: a concurrent writer that loaded the key
+//!   before the eviction and flushes after the compact can write the
+//!   record back. That is deliberate and safe for a cache — by the
+//!   determinism contract the resurrected value is identical, so the
+//!   cost is bytes, not correctness, and any active budget simply
+//!   re-evicts it at its next flush or compact. Budgets apply to
+//!   live-record bytes; they are enforced on every flush that has work
+//!   to do, and on every compaction.
+//! - **Compaction** — [`ShardedStore::compact`] (CLI: `fso store
+//!   compact`) loads and merges every shard, applies the eviction
+//!   policy, then rewrites shards dropping tombstones, superseded /
+//!   unparseable lines, and orphaned temp files. A shard whose bytes
+//!   would not change is left untouched, so compaction is idempotent
+//!   and never perturbs a warm start: reads before and after compact
+//!   are identical. Flush auto-compacts when the dead-line ratio on
+//!   disk (tombstones + garbage + shadowed lines over total lines)
+//!   crosses `auto_compact_ratio`.
+//!
+//! Pending-count contract (ISSUE 4 satellite): `StoreStats::pending`
+//! counts exactly the records that are not yet durable — per-slot
+//! dirty flags, not "everything in a dirty shard" — so a
+//! merge-on-flush that folds disk records into memory can no longer
+//! drift the count.
+
+use std::borrow::Cow;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, HashSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::fault::{self, FlushFault};
+use super::lock::{tmp_path, write_atomic, DirLock};
+
+/// Reserved record kind for eviction tombstones (never a payload kind).
+pub const TOMB_KIND: &str = "tomb";
+
+/// A record family a `ShardedStore` can persist. The store owns the
+/// envelope fields (`v`, `kind`, `key`, `used`); implementations own
+/// only the payload.
+pub trait Record: Clone + PartialEq + Send {
+    /// Envelope kind tag — also the deterministic sort class within a
+    /// shard file. Must never be [`TOMB_KIND`]. Borrowing from `self`
+    /// is encouraged (`Cow::Borrowed`): the tag is compared on every
+    /// `get` hit, so an owned allocation per call is pure overhead.
+    fn kind(&self) -> Cow<'_, str>;
+    /// Append the payload fields to the record object.
+    fn encode(&self, out: &mut Vec<(&'static str, Json)>);
+    /// Decode a payload from the full record object; `None` reads as a
+    /// corrupt line (skipped on load, dropped at compaction).
+    fn decode(kind: &str, rec: &Json) -> Option<Self>
+    where
+        Self: Sized;
+}
+
+/// Static knobs a typed wrapper fixes once for its record family.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Record schema version; bump on any layout change. Loaders skip
+    /// records whose tag does not match.
+    pub schema_version: u64,
+    /// Shard-file count for fresh directories (existing directories
+    /// keep the count recorded in `meta.json`).
+    pub default_shards: usize,
+    /// Shard file prefix (`shard` -> `shard-003.jsonl`).
+    pub file_prefix: &'static str,
+    /// Noun used in error messages ("cache dir", "model store").
+    pub label: &'static str,
+    /// Lifecycle policy (eviction budgets + auto-compaction).
+    pub policy: StorePolicy,
+}
+
+/// Eviction / compaction policy. `Default` is unbounded with no
+/// auto-compaction; [`StorePolicy::default_auto`] is what the wrappers
+/// ship — unbounded, but auto-compacting once half the disk lines are
+/// dead.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StorePolicy {
+    /// Evict LRU records until live-record bytes fit this budget.
+    /// (Shard files may transiently exceed it by tombstone overhead
+    /// until the next compaction.)
+    pub max_bytes: Option<u64>,
+    /// Evict LRU records until at most this many live records remain.
+    pub max_records: Option<usize>,
+    /// Evict records whose last *persisted* use is more than this many
+    /// epochs old (an epoch is one open of the store directory; 0 =
+    /// only the current epoch survives). Caveat: runs with no budget
+    /// configured never rewrite shards for reads, so a fully-warm
+    /// unbounded run does not advance stamps on disk — pair `max_age`
+    /// with budget-carrying runs (or use the byte/record budgets,
+    /// whose *relative* LRU order is unaffected), and expect
+    /// write-age semantics otherwise.
+    pub max_age_epochs: Option<u64>,
+    /// Auto-compact after a flush when dead disk lines (tombstones +
+    /// garbage + shadowed) exceed this fraction of all lines.
+    pub auto_compact_ratio: Option<f64>,
+}
+
+impl StorePolicy {
+    /// The wrappers' default: unbounded, auto-compacting at 50% dead.
+    pub fn default_auto() -> StorePolicy {
+        StorePolicy { auto_compact_ratio: Some(0.5), ..StorePolicy::default() }
+    }
+
+    /// Whether any eviction budget is set (budget enforcement loads
+    /// every shard at flush, so it only runs when asked for).
+    pub fn is_bounded(&self) -> bool {
+        self.max_bytes.is_some() || self.max_records.is_some() || self.max_age_epochs.is_some()
+    }
+}
+
+/// Counter snapshot (wrappers re-surface these through their own
+/// stats structs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreStats {
+    /// Lookups answered with a live record of the requested kind.
+    pub hits: usize,
+    /// Lookups that found nothing (or a kind mismatch / tombstone).
+    pub misses: usize,
+    /// Shard files parsed so far (lazy loading).
+    pub shard_loads: usize,
+    /// `flush` calls that wrote at least one shard.
+    pub flushes: usize,
+    /// Live records currently held in memory.
+    pub entries: usize,
+    /// Records (live or tombstone) not yet durable on disk — exactly
+    /// the per-slot dirty flags, never "everything in a dirty shard".
+    pub pending: usize,
+    /// Tombstones currently held (reclaimed at compaction).
+    pub tombstones: usize,
+    /// Serialized bytes of the live records (the eviction byte budget
+    /// is judged against this). Exact whenever `max_bytes` is set;
+    /// without a byte budget, records put since the last flush count
+    /// as 0 until a flush or load renders them.
+    pub live_bytes: u64,
+    /// Records evicted by policy or `evict` since open.
+    pub evictions: usize,
+    /// Compaction passes since open (explicit + automatic).
+    pub compactions: usize,
+    /// This instance's logical epoch (open counter of the directory).
+    pub epoch: u64,
+}
+
+/// What one compaction pass did.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompactReport {
+    /// Shard files rewritten or removed (unchanged shards are skipped).
+    pub shards_rewritten: usize,
+    /// Live records in the compacted store.
+    pub live_records: usize,
+    /// Tombstones dropped from memory + disk.
+    pub tombstones_dropped: usize,
+    /// Dead disk lines reclaimed (tombstones, unparseable garbage,
+    /// superseded-schema records, shadowed duplicates).
+    pub dead_lines_dropped: usize,
+    /// Records evicted by the policy during this pass.
+    pub evicted: usize,
+    /// Total shard-file bytes before / after.
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+impl std::fmt::Display for CompactReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} live records | dropped {} tombstones / {} dead lines | evicted {} | {} -> {} bytes | {} shards rewritten",
+            self.live_records,
+            self.tombstones_dropped,
+            self.dead_lines_dropped,
+            self.evicted,
+            self.bytes_before,
+            self.bytes_after,
+            self.shards_rewritten
+        )
+    }
+}
+
+#[derive(Clone)]
+enum SlotState<R> {
+    Live(R),
+    /// Evicted: reads miss; persisted as a tombstone record so a
+    /// concurrent process's merge-on-flush cannot resurrect the key.
+    Tomb,
+}
+
+#[derive(Clone)]
+struct Slot<R> {
+    state: SlotState<R>,
+    /// Logical last-used stamp (the store epoch that last touched it).
+    used: u64,
+    /// Serialized line length in bytes (incl. newline) — the unit the
+    /// byte budget is accounted in.
+    bytes: usize,
+    /// Not yet durable on disk.
+    dirty: bool,
+}
+
+#[derive(Clone, Copy)]
+struct ShardMeta {
+    loaded: bool,
+    /// Needs a rewrite at the next flush (dirty slots, stamp bumps
+    /// under an active policy, or evictions).
+    dirty: bool,
+    /// Line stats from the most recent parse / rewrite of the disk
+    /// file (drives the auto-compaction ratio).
+    disk_lines: usize,
+    disk_dead: usize,
+}
+
+struct Inner<R> {
+    slots: HashMap<u64, Slot<R>>,
+    shards: Vec<ShardMeta>,
+}
+
+/// Disk-backed, sharded, read-through/write-behind store. Thread-safe;
+/// share one instance across services via `Arc`.
+pub struct ShardedStore<R: Record> {
+    dir: PathBuf,
+    cfg: StoreConfig,
+    n_shards: usize,
+    /// Logical clock: how many times this directory has been opened
+    /// (persisted in `meta.json`). All accesses in one instance stamp
+    /// with this epoch, so stamps are independent of thread schedule —
+    /// and shard bytes stay deterministic under parallel access.
+    epoch: u64,
+    inner: Mutex<Inner<R>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    shard_loads: AtomicUsize,
+    flushes: AtomicUsize,
+    evictions: AtomicUsize,
+    compactions: AtomicUsize,
+}
+
+impl<R: Record> ShardedStore<R> {
+    /// Open (creating if needed) a store directory with the config's
+    /// default shard count. An existing directory keeps the shard
+    /// count it was created with (recorded in `meta.json`), so
+    /// reopening with a different default never mis-routes keys. Every
+    /// open bumps the directory's logical epoch.
+    pub fn open(dir: impl Into<PathBuf>, cfg: StoreConfig) -> Result<ShardedStore<R>> {
+        let n = cfg.default_shards;
+        ShardedStore::open_sharded(dir, cfg, n)
+    }
+
+    /// Open with an explicit shard count (ignored when the directory
+    /// already records one).
+    pub fn open_sharded(
+        dir: impl Into<PathBuf>,
+        cfg: StoreConfig,
+        n_shards: usize,
+    ) -> Result<ShardedStore<R>> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {} {}", cfg.label, dir.display()))?;
+        let meta_path = dir.join("meta.json");
+        let (n_shards, epoch, fresh) = match fs::read_to_string(&meta_path) {
+            Ok(text) => {
+                let meta = Json::parse(&text)
+                    .with_context(|| format!("parsing {}", meta_path.display()))?;
+                let v = meta.get("v").as_usize().unwrap_or(0) as u64;
+                anyhow::ensure!(
+                    v == cfg.schema_version,
+                    "{} {} has schema v{v}, this binary expects v{}",
+                    cfg.label,
+                    dir.display(),
+                    cfg.schema_version
+                );
+                let shards = meta
+                    .get("shards")
+                    .as_usize()
+                    .filter(|&s| s > 0)
+                    .with_context(|| format!("{}: bad shard count", meta_path.display()))?;
+                // epoch was introduced with the store core; a pre-core
+                // meta.json (no field) reads as epoch 0
+                let epoch = meta.get("epoch").as_usize().unwrap_or(0) as u64;
+                (shards, epoch.saturating_add(1), false)
+            }
+            // only a genuinely absent meta.json means "fresh directory";
+            // any other read error (permissions, transient IO) must not
+            // silently re-shard an existing store under a new layout
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => (n_shards.max(1), 1, true),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", meta_path.display()))
+            }
+        };
+        // persist the bumped epoch (concurrent opens race benignly:
+        // the rename is atomic and the epoch only steers LRU policy)
+        let meta = Json::obj(vec![
+            ("v", Json::from(cfg.schema_version as usize)),
+            ("shards", Json::from(n_shards)),
+            ("epoch", Json::from(epoch as usize)),
+        ]);
+        let wrote = write_atomic(&meta_path, format!("{meta}\n").as_bytes());
+        if fresh {
+            // a store we cannot create is an error...
+            wrote?;
+        } else {
+            // ...but an existing store on a read-only mount must stay
+            // readable: the epoch bump is best-effort (LRU stamps just
+            // stop advancing; pure readers never flush anyway)
+            let _ = wrote;
+        }
+        Ok(ShardedStore {
+            dir,
+            cfg,
+            n_shards,
+            epoch,
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                shards: vec![
+                    ShardMeta { loaded: false, dirty: false, disk_lines: 0, disk_dead: 0 };
+                    n_shards
+                ],
+            }),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            shard_loads: AtomicUsize::new(0),
+            flushes: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            compactions: AtomicUsize::new(0),
+        })
+    }
+
+    /// Replace the lifecycle policy (builder-style, before sharing).
+    pub fn with_policy(mut self, policy: StorePolicy) -> ShardedStore<R> {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn policy(&self) -> &StorePolicy {
+        &self.cfg.policy
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn shard_of(&self, key: u64) -> usize {
+        // content-hash prefix routing: the top byte spreads uniformly
+        // because keys come out of splitmix-finalized hashes
+        ((key >> 56) as usize) % self.n_shards
+    }
+
+    fn shard_path(&self, shard: usize) -> PathBuf {
+        self.dir.join(format!("{}-{shard:03}.jsonl", self.cfg.file_prefix))
+    }
+
+    // ---- envelope (de)serialization --------------------------------
+    //
+    // u64 keys are stored as 16-hex-digit strings (JSON numbers are
+    // f64 — 53 mantissa bits would corrupt hash keys). `Json::obj`
+    // sorts keys, so a rendered line is deterministic for its fields.
+
+    fn render_live(&self, key: u64, rec: &R, used: u64) -> String {
+        let mut extra: Vec<(&'static str, Json)> = Vec::new();
+        rec.encode(&mut extra);
+        let kind = rec.kind();
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("v", Json::from(self.cfg.schema_version as usize)),
+            ("kind", Json::from(kind.as_ref())),
+            ("key", Json::from(hex_key(key).as_str())),
+            ("used", Json::from(used as usize)),
+        ];
+        for (k, v) in extra {
+            fields.push((k, v));
+        }
+        Json::obj(fields).to_string()
+    }
+
+    fn render_tomb(&self, key: u64, used: u64) -> String {
+        Json::obj(vec![
+            ("v", Json::from(self.cfg.schema_version as usize)),
+            ("kind", Json::from(TOMB_KIND)),
+            ("key", Json::from(hex_key(key).as_str())),
+            ("used", Json::from(used as usize)),
+        ])
+        .to_string()
+    }
+
+    fn parse_line(&self, line: &str) -> Option<(u64, u64, SlotState<R>)> {
+        let rec = Json::parse(line).ok()?;
+        if rec.get("v").as_usize().map(|v| v as u64) != Some(self.cfg.schema_version) {
+            return None;
+        }
+        let key = rec.get("key").as_str().and_then(parse_hex_key)?;
+        // pre-core records carry no stamp: they read as "oldest"
+        let used = rec.get("used").as_usize().map(|v| v as u64).unwrap_or(0);
+        let kind = rec.get("kind").as_str()?;
+        if kind == TOMB_KIND {
+            return Some((key, used, SlotState::Tomb));
+        }
+        let r = R::decode(kind, &rec)?;
+        Some((key, used, SlotState::Live(r)))
+    }
+
+    /// Parse a shard file into the slots the first time a key routed
+    /// to it is requested.
+    fn load_shard(&self, inner: &mut Inner<R>, shard: usize) {
+        if inner.shards[shard].loaded {
+            return;
+        }
+        inner.shards[shard].loaded = true;
+        self.shard_loads.fetch_add(1, Ordering::Relaxed);
+        self.parse_shard_lines(inner, shard);
+    }
+
+    /// The raw disk-to-memory merge under `load_shard`, the flush-time
+    /// re-read, and the compact-time sweep. Unknown schema versions,
+    /// unknown kinds, and corrupt lines are skipped (a half-written or
+    /// foreign record must never sink a run). Merge rule: in-memory
+    /// entries win unless the disk stamp is strictly newer *and* ours
+    /// is clean — a fresher use or eviction by a concurrent process
+    /// replaces a clean slot; our own unflushed data is never clobbered.
+    /// Also refreshes the shard's dead-line stats (tombstones +
+    /// garbage + in-file shadowed duplicates) for auto-compaction.
+    fn parse_shard_lines(&self, inner: &mut Inner<R>, shard: usize) {
+        let text = match fs::read_to_string(self.shard_path(shard)) {
+            Ok(t) => t,
+            Err(_) => {
+                // never flushed, or unreadable: treat as empty
+                inner.shards[shard].disk_lines = 0;
+                inner.shards[shard].disk_dead = 0;
+                return;
+            }
+        };
+        let mut total = 0usize;
+        let mut dead = 0usize;
+        let mut seen: HashSet<u64> = HashSet::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            total += 1;
+            let Some((key, used, state)) = self.parse_line(line) else {
+                dead += 1;
+                continue;
+            };
+            if !seen.insert(key) {
+                // in-file duplicate: first record wins, later copies
+                // are shadowed (and reclaimable)
+                dead += 1;
+                continue;
+            }
+            if matches!(state, SlotState::Tomb) {
+                dead += 1; // tombstones are reclaimable at compaction
+            }
+            let bytes = line.len() + 1;
+            match inner.slots.entry(key) {
+                Entry::Vacant(v) => {
+                    v.insert(Slot { state, used, bytes, dirty: false });
+                }
+                Entry::Occupied(mut o) => {
+                    let cur = o.get();
+                    if !cur.dirty && used > cur.used {
+                        o.insert(Slot { state, used, bytes, dirty: false });
+                    }
+                }
+            }
+        }
+        inner.shards[shard].disk_lines = total;
+        inner.shards[shard].disk_dead = dead;
+    }
+
+    /// Force every shard into memory (CLI stats and union assertions;
+    /// normal traffic should rely on lazy loading).
+    pub fn load_all(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for s in 0..self.n_shards {
+            self.load_shard(&mut inner, s);
+        }
+    }
+
+    /// Merge every shard from disk, one parse per shard: a first touch
+    /// goes through the lazy-load path; an already-loaded shard
+    /// re-parses to fold in records concurrent processes flushed since
+    /// we read it. Call with the `DirLock` held — then the disk state
+    /// cannot move underneath, and the merged view stays current for
+    /// the rest of the locked section.
+    fn merge_all(&self, inner: &mut Inner<R>) {
+        for s in 0..self.n_shards {
+            if inner.shards[s].loaded {
+                self.parse_shard_lines(inner, s);
+            } else {
+                self.load_shard(inner, s);
+            }
+        }
+    }
+
+    /// Live record of `kind` for `key`, if known. A key held under a
+    /// different kind — or a tombstone — reads as a miss. A hit bumps
+    /// the LRU stamp to the current epoch (marking the shard for
+    /// rewrite only when an eviction budget is active, so unbounded
+    /// warm runs stay read-only on disk).
+    pub fn get(&self, kind: &str, key: u64) -> Option<R> {
+        let mut inner = self.inner.lock().unwrap();
+        let shard = self.shard_of(key);
+        self.load_shard(&mut inner, shard);
+        let epoch = self.epoch;
+        let mut bumped = false;
+        let hit = match inner.slots.get_mut(&key) {
+            Some(slot) => match &slot.state {
+                SlotState::Live(r) if r.kind() == kind => {
+                    if slot.used < epoch {
+                        slot.used = epoch;
+                        bumped = true;
+                    }
+                    Some(r.clone())
+                }
+                _ => None,
+            },
+            None => None,
+        };
+        if bumped && self.cfg.policy.is_bounded() {
+            inner.shards[shard].dirty = true;
+        }
+        match hit {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a value (write-behind: durable at the next flush). An
+    /// identical live value only refreshes the LRU stamp; a changed
+    /// value, a resurrection over a tombstone, or a fresh key dirties
+    /// the slot — that is how a corrupt artifact gets repaired after
+    /// its fallback recompute.
+    pub fn put(&self, key: u64, rec: R) {
+        let mut inner = self.inner.lock().unwrap();
+        let shard = self.shard_of(key);
+        let epoch = self.epoch;
+        let same = matches!(
+            inner.slots.get(&key),
+            Some(Slot { state: SlotState::Live(cur), .. }) if *cur == rec
+        );
+        if same {
+            let mut bumped = false;
+            if let Some(slot) = inner.slots.get_mut(&key) {
+                if slot.used < epoch {
+                    slot.used = epoch;
+                    bumped = true;
+                }
+            }
+            if bumped && self.cfg.policy.is_bounded() {
+                inner.shards[shard].dirty = true;
+            }
+        } else {
+            // measure the serialized size only when a byte budget needs
+            // it — rendering on every put would double serialization
+            // work for the common unbounded store (flush's render pass
+            // refreshes `bytes` to the exact length either way)
+            let bytes = if self.cfg.policy.max_bytes.is_some() {
+                self.render_live(key, &rec, epoch).len() + 1
+            } else {
+                0
+            };
+            inner
+                .slots
+                .insert(key, Slot { state: SlotState::Live(rec), used: epoch, bytes, dirty: true });
+            inner.shards[shard].dirty = true;
+        }
+    }
+
+    /// Explicitly evict a key: it reads as a miss from now on, and a
+    /// tombstone persists the eviction so a concurrent writer's merge
+    /// cannot resurrect a *staler* copy of the record. Advisory, not
+    /// absolute: a concurrent process that used the key at a strictly
+    /// newer epoch keeps it live through its own merge (and compaction
+    /// reclaims tombstones — see the module docs); for a deterministic
+    /// cache that only ever costs bytes, and budgets re-evict. Returns
+    /// whether a live record was evicted.
+    pub fn evict(&self, key: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let shard = self.shard_of(key);
+        self.load_shard(&mut inner, shard);
+        let live = matches!(
+            inner.slots.get(&key),
+            Some(Slot { state: SlotState::Live(_), .. })
+        );
+        if live {
+            self.tombstone(&mut inner, key);
+        }
+        live
+    }
+
+    fn tombstone(&self, inner: &mut Inner<R>, key: u64) {
+        let epoch = self.epoch;
+        let bytes = self.render_tomb(key, epoch).len() + 1;
+        inner
+            .slots
+            .insert(key, Slot { state: SlotState::Tomb, used: epoch, bytes, dirty: true });
+        let shard = self.shard_of(key);
+        inner.shards[shard].dirty = true;
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Enforce the eviction policy over the (fully loaded) slot map:
+    /// age bound first, then LRU down to the byte / record budgets.
+    /// Deterministic: candidates order by (stamp, key).
+    fn apply_policy(&self, inner: &mut Inner<R>) {
+        let pol = self.cfg.policy.clone();
+        let epoch = self.epoch;
+        if let Some(max_age) = pol.max_age_epochs {
+            let mut expired: Vec<u64> = inner
+                .slots
+                .iter()
+                .filter_map(|(&k, s)| {
+                    let live = matches!(s.state, SlotState::Live(_));
+                    (live && epoch.saturating_sub(s.used) > max_age).then_some(k)
+                })
+                .collect();
+            expired.sort_unstable();
+            for key in expired {
+                self.tombstone(inner, key);
+            }
+        }
+        let mut live: Vec<(u64, u64, usize)> = inner
+            .slots
+            .iter()
+            .filter_map(|(&k, s)| match s.state {
+                SlotState::Live(_) => Some((s.used, k, s.bytes)),
+                SlotState::Tomb => None,
+            })
+            .collect();
+        let mut bytes: u64 = live.iter().map(|&(_, _, b)| b as u64).sum();
+        let mut count = live.len();
+        let over = |bytes: u64, count: usize| {
+            pol.max_bytes.is_some_and(|m| bytes > m)
+                || pol.max_records.is_some_and(|m| count > m)
+        };
+        if !over(bytes, count) {
+            return;
+        }
+        live.sort_unstable(); // (used, key, bytes): oldest stamp first
+        let mut i = 0;
+        while i < live.len() && over(bytes, count) {
+            let (_, key, b) = live[i];
+            self.tombstone(inner, key);
+            bytes -= b as u64;
+            count -= 1;
+            i += 1;
+        }
+    }
+
+    /// Serialize one shard's slots in sorted (kind, key) order.
+    /// Returns (body, line count, tombstone count) and refreshes each
+    /// written slot's byte size to the exact rendered length.
+    fn render_shard(&self, inner: &mut Inner<R>, shard: usize) -> (String, usize, usize) {
+        let mut lines: Vec<(String, u64, String)> = Vec::new();
+        let mut tombs = 0usize;
+        for (&key, slot) in &inner.slots {
+            if self.shard_of(key) != shard {
+                continue;
+            }
+            let (kind, line) = match &slot.state {
+                SlotState::Live(r) => {
+                    (r.kind().into_owned(), self.render_live(key, r, slot.used))
+                }
+                SlotState::Tomb => {
+                    tombs += 1;
+                    (TOMB_KIND.to_string(), self.render_tomb(key, slot.used))
+                }
+            };
+            lines.push((kind, key, line));
+        }
+        for (_, key, line) in &lines {
+            if let Some(slot) = inner.slots.get_mut(key) {
+                slot.bytes = line.len() + 1;
+            }
+        }
+        // sorted (kind, key) order: shard bytes are deterministic
+        lines.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+        let mut body = String::new();
+        for (_, _, line) in &lines {
+            body.push_str(line);
+            body.push('\n');
+        }
+        (body, lines.len(), tombs)
+    }
+
+    fn clear_slot_dirty(&self, inner: &mut Inner<R>, shard: usize) {
+        for (&key, slot) in inner.slots.iter_mut() {
+            if self.shard_of(key) == shard {
+                slot.dirty = false;
+            }
+        }
+    }
+
+    fn auto_compact_due(&self, inner: &Inner<R>) -> bool {
+        let Some(ratio) = self.cfg.policy.auto_compact_ratio else {
+            return false;
+        };
+        let (lines, dead) = inner
+            .shards
+            .iter()
+            .fold((0usize, 0usize), |a, s| (a.0 + s.disk_lines, a.1 + s.disk_dead));
+        lines > 0 && (dead as f64) / (lines as f64) > ratio
+    }
+
+    /// Write every dirty shard atomically (temp + rename), serialized
+    /// across processes by the directory lock and merged with the disk
+    /// state first — a flush never drops entries: neither on-disk
+    /// records this run did not happen to read, nor records a
+    /// concurrent process flushed since. When an eviction budget is
+    /// active the policy is enforced first (which loads every shard).
+    /// Returns the number of shard files written; may trigger an
+    /// auto-compaction afterwards (see `StorePolicy`).
+    pub fn flush(&self) -> Result<usize> {
+        // cheap dirtiness pre-check, then take the cross-process lock
+        // *without* holding the in-process Mutex: a contended DirLock
+        // wait (up to the staleness window) must not stall every
+        // worker thread doing get/put on the shared store
+        {
+            let inner = self.inner.lock().unwrap();
+            if !inner.shards.iter().any(|s| s.dirty) {
+                return Ok(0);
+            }
+        }
+        let lock = DirLock::acquire(&self.dir)?;
+        let mut inner = self.inner.lock().unwrap();
+        let premerged = self.cfg.policy.is_bounded();
+        if premerged {
+            // merge every shard from disk *before* deciding evictions:
+            // shards loaded long ago may hold stale LRU stamps, and
+            // evicting on a stale view could tombstone a key a
+            // concurrent process used (and stamped fresher) since —
+            // its dirty tombstone would then survive the merge and
+            // clobber the most-recently-used record instead of the
+            // least.
+            self.merge_all(&mut inner);
+            self.apply_policy(&mut inner);
+        }
+        // recompute under the lock: another thread may have flushed
+        let dirty: Vec<usize> =
+            (0..self.n_shards).filter(|&s| inner.shards[s].dirty).collect();
+        if dirty.is_empty() {
+            return Ok(0);
+        }
+        for &shard in &dirty {
+            lock.refresh();
+            if !premerged {
+                // merge-on-flush; redundant when merge_all already ran
+                // under this same lock (the disk cannot have moved)
+                self.parse_shard_lines(&mut inner, shard);
+                inner.shards[shard].loaded = true;
+            }
+            let (body, lines, tombs) = self.render_shard(&mut inner, shard);
+            let path = self.shard_path(shard);
+            if fault::trip(FlushFault::BeforeRename) {
+                // emulate a kill after the temp write, before the
+                // rename: the temp file exists, the shard file is
+                // untouched, and the directory lock stays behind (the
+                // "process" died holding it)
+                let _ = fs::write(tmp_path(&path), body.as_bytes());
+                std::mem::forget(lock);
+                anyhow::bail!("injected crash before rename (store::fault)");
+            }
+            write_atomic(&path, body.as_bytes())?;
+            inner.shards[shard].dirty = false;
+            inner.shards[shard].disk_lines = lines;
+            inner.shards[shard].disk_dead = tombs;
+            self.clear_slot_dirty(&mut inner, shard);
+        }
+        self.flushes.fetch_add(1, Ordering::Relaxed);
+        if fault::trip(FlushFault::BeforeLockRelease) {
+            // data is durable; the lock is abandoned as a crash would
+            std::mem::forget(lock);
+            anyhow::bail!("injected crash before lock release (store::fault)");
+        }
+        let auto = self.auto_compact_due(&inner);
+        drop(inner);
+        drop(lock);
+        if auto {
+            self.compact()?;
+        }
+        Ok(dirty.len())
+    }
+
+    /// Compaction pass: load + merge every shard, enforce the eviction
+    /// policy, drop tombstones and dead lines, and rewrite only the
+    /// shards whose bytes change (so a second compact is a no-op and a
+    /// warm start straddling a compact replays identical reads). Also
+    /// sweeps orphaned temp files left by killed writers. Serialized
+    /// by the directory lock; also persists any pending writes.
+    pub fn compact(&self) -> Result<CompactReport> {
+        let lock = DirLock::acquire(&self.dir)?;
+        let mut inner = self.inner.lock().unwrap();
+        // merge-on-compact: fold in records concurrent processes
+        // flushed since our lazy loads (one parse per shard)
+        self.merge_all(&mut inner);
+        let ev0 = self.evictions.load(Ordering::Relaxed);
+        if self.cfg.policy.is_bounded() {
+            self.apply_policy(&mut inner);
+        }
+        let mut rep = CompactReport {
+            evicted: self.evictions.load(Ordering::Relaxed) - ev0,
+            dead_lines_dropped: inner.shards.iter().map(|s| s.disk_dead).sum(),
+            ..CompactReport::default()
+        };
+        let tomb_keys: Vec<u64> = inner
+            .slots
+            .iter()
+            .filter_map(|(&k, s)| matches!(s.state, SlotState::Tomb).then_some(k))
+            .collect();
+        rep.tombstones_dropped = tomb_keys.len();
+        for k in &tomb_keys {
+            inner.slots.remove(k);
+        }
+        for shard in 0..self.n_shards {
+            lock.refresh();
+            let path = self.shard_path(shard);
+            let before = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            rep.bytes_before += before;
+            let (body, lines, _) = self.render_shard(&mut inner, shard);
+            if body.is_empty() {
+                if before > 0 {
+                    let _ = fs::remove_file(&path);
+                    rep.shards_rewritten += 1;
+                }
+            } else {
+                let unchanged = before == body.len() as u64
+                    && fs::read(&path).map(|b| b == body.as_bytes()).unwrap_or(false);
+                if !unchanged {
+                    write_atomic(&path, body.as_bytes())?;
+                    rep.shards_rewritten += 1;
+                }
+                rep.bytes_after += body.len() as u64;
+            }
+            inner.shards[shard].dirty = false;
+            inner.shards[shard].disk_lines = lines;
+            inner.shards[shard].disk_dead = 0;
+            self.clear_slot_dirty(&mut inner, shard);
+            rep.live_records += lines;
+        }
+        // sweep crash leftovers: orphaned *shard* temp files from
+        // killed writers. Meta temps are deliberately spared — another
+        // process may be mid-open (the meta epoch bump takes no
+        // DirLock), and deleting its staged temp would fail that open.
+        let tmp_prefix = format!(".{}-", self.cfg.file_prefix);
+        if let Ok(rd) = fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with(tmp_prefix.as_str()) && name.contains(".tmp-") {
+                    let _ = fs::remove_file(e.path());
+                }
+            }
+        }
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        Ok(rep)
+    }
+
+    /// Snapshot the store counters. `pending` counts exactly the
+    /// not-yet-durable slots (the ISSUE 4 drift fix).
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.inner.lock().unwrap();
+        let mut entries = 0usize;
+        let mut tombstones = 0usize;
+        let mut pending = 0usize;
+        let mut live_bytes = 0u64;
+        for slot in inner.slots.values() {
+            match slot.state {
+                SlotState::Live(_) => {
+                    entries += 1;
+                    live_bytes += slot.bytes as u64;
+                }
+                SlotState::Tomb => tombstones += 1,
+            }
+            if slot.dirty {
+                pending += 1;
+            }
+        }
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            shard_loads: self.shard_loads.load(Ordering::Relaxed),
+            flushes: self.flushes.load(Ordering::Relaxed),
+            entries,
+            pending,
+            tombstones,
+            live_bytes,
+            evictions: self.evictions.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            epoch: self.epoch,
+        }
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn shard_loads(&self) -> usize {
+        self.shard_loads.load(Ordering::Relaxed)
+    }
+
+    pub fn flush_count(&self) -> usize {
+        self.flushes.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> usize {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn compactions(&self) -> usize {
+        self.compactions.load(Ordering::Relaxed)
+    }
+}
+
+impl<R: Record> Drop for ShardedStore<R> {
+    /// Best-effort durability for callers that forget an explicit
+    /// flush; errors are swallowed (Drop cannot fail).
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+pub fn parse_hex_key(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+pub fn hex_key(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    struct TestRec {
+        tag: &'static str,
+        val: f64,
+    }
+
+    impl Record for TestRec {
+        fn kind(&self) -> Cow<'_, str> {
+            Cow::Borrowed(self.tag)
+        }
+        fn encode(&self, out: &mut Vec<(&'static str, Json)>) {
+            out.push(("val", Json::from(self.val)));
+        }
+        fn decode(kind: &str, rec: &Json) -> Option<TestRec> {
+            let tag = match kind {
+                "a" => "a",
+                "b" => "b",
+                _ => return None,
+            };
+            Some(TestRec { tag, val: rec.get("val").as_f64()? })
+        }
+    }
+
+    fn cfg() -> StoreConfig {
+        StoreConfig {
+            schema_version: 7,
+            default_shards: 4,
+            file_prefix: "t",
+            label: "test store",
+            policy: StorePolicy::default_auto(),
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fso-sharded-core-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn open(dir: &Path) -> ShardedStore<TestRec> {
+        ShardedStore::open(dir, cfg()).unwrap()
+    }
+
+    /// Keys with a chosen top byte (shard) and low tag.
+    fn key(top: u8, low: u64) -> u64 {
+        ((top as u64) << 56) | low
+    }
+
+    fn rec(val: f64) -> TestRec {
+        TestRec { tag: "a", val }
+    }
+
+    #[test]
+    fn roundtrip_kind_mismatch_and_tombstone_semantics() {
+        let dir = tmp_dir("roundtrip");
+        {
+            let s = open(&dir);
+            s.put(key(1, 10), rec(0.5));
+            s.put(key(1, 11), TestRec { tag: "b", val: 1.5 });
+            assert_eq!(s.stats().pending, 2);
+            s.flush().unwrap();
+            assert_eq!(s.stats().pending, 0);
+        }
+        let s = open(&dir);
+        assert_eq!(s.get("a", key(1, 10)), Some(rec(0.5)));
+        assert_eq!(s.get("b", key(1, 10)), None, "kind mismatch is a miss");
+        assert_eq!(s.get("b", key(1, 11)), Some(TestRec { tag: "b", val: 1.5 }));
+        assert!(s.evict(key(1, 10)));
+        assert!(!s.evict(key(1, 10)), "second evict finds nothing live");
+        assert_eq!(s.get("a", key(1, 10)), None, "evicted key is a miss");
+        s.flush().unwrap();
+        drop(s);
+        let s = open(&dir);
+        assert_eq!(s.get("a", key(1, 10)), None, "tombstone survives reopen");
+        assert_eq!(s.get("b", key(1, 11)), Some(TestRec { tag: "b", val: 1.5 }));
+        // resurrection: a fresh put over the tombstone is live again
+        s.put(key(1, 10), rec(2.5));
+        s.flush().unwrap();
+        drop(s);
+        let s = open(&dir);
+        assert_eq!(s.get("a", key(1, 10)), Some(rec(2.5)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pending_counts_only_undurable_slots_after_merge_on_flush() {
+        // the ISSUE 4 stats-drift fix, at the core level: disk records
+        // folded in by merge-on-flush must not count as pending when a
+        // new record later dirties their shard
+        let dir = tmp_dir("pending");
+        {
+            let other = open(&dir);
+            other.put(key(2, 1), rec(1.0));
+            other.put(key(2, 2), rec(2.0));
+            other.flush().unwrap();
+        }
+        let s = open(&dir);
+        s.put(key(2, 3), rec(3.0));
+        assert_eq!(s.stats().pending, 1);
+        s.flush().unwrap(); // merges keys 1 and 2 from disk
+        assert_eq!(s.stats().entries, 3);
+        assert_eq!(s.stats().pending, 0);
+        s.put(key(2, 4), rec(4.0));
+        let st = s.stats();
+        assert_eq!(st.entries, 4);
+        assert_eq!(
+            st.pending, 1,
+            "pending must count the one new record, not the whole dirty shard"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_then_compact_fits_files_in_budget() {
+        let dir = tmp_dir("budget");
+        let n = 10u64;
+        let probe_dir = tmp_dir("budget-probe");
+        let line_len = {
+            // probe one record's serialized size (all identical shape);
+            // a byte budget must be set for puts to measure themselves
+            let probe = ShardedStore::<TestRec>::open(
+                &probe_dir,
+                StoreConfig {
+                    policy: StorePolicy {
+                        max_bytes: Some(u64::MAX),
+                        ..StorePolicy::default()
+                    },
+                    ..cfg()
+                },
+            )
+            .unwrap();
+            probe.put(key(3, 100), rec(0.25));
+            probe.stats().live_bytes as usize
+        };
+        let _ = fs::remove_dir_all(&probe_dir);
+        let budget = (line_len * 6) as u64; // room for ~6 of 10
+        let s = ShardedStore::<TestRec>::open(
+            &dir,
+            StoreConfig {
+                policy: StorePolicy { max_bytes: Some(budget), ..StorePolicy::default() },
+                ..cfg()
+            },
+        )
+        .unwrap();
+        for i in 0..n {
+            s.put(key(3, 100 + i), rec(0.25));
+        }
+        s.flush().unwrap();
+        let st = s.stats();
+        assert!(st.evictions > 0, "over-budget store must evict: {st:?}");
+        assert!(
+            st.live_bytes <= budget,
+            "live bytes {} must fit the budget {budget}",
+            st.live_bytes
+        );
+        // same stamp everywhere -> ties break by key: smallest evicted
+        assert_eq!(s.get("a", key(3, 100)), None, "oldest (smallest key) evicted");
+        assert_eq!(s.get("a", key(3, 100 + n - 1)), Some(rec(0.25)), "newest kept");
+        s.compact().unwrap();
+        let on_disk: u64 = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| {
+                p.file_name().unwrap().to_string_lossy().starts_with("t-")
+            })
+            .map(|p| fs::metadata(&p).unwrap().len())
+            .sum();
+        assert!(
+            on_disk <= budget,
+            "compacted shard files ({on_disk} B) must fit the byte budget ({budget} B)"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_prefers_recently_used_across_epochs() {
+        let dir = tmp_dir("lru");
+        {
+            let s = open(&dir); // epoch 1
+            for i in 0..4u64 {
+                s.put(key(4, i), rec(i as f64));
+            }
+            s.flush().unwrap();
+        }
+        // epoch 2: touch key 2, add key 9, then shrink to 2 records
+        let s = ShardedStore::<TestRec>::open(
+            &dir,
+            StoreConfig {
+                policy: StorePolicy { max_records: Some(2), ..StorePolicy::default() },
+                ..cfg()
+            },
+        )
+        .unwrap();
+        assert_eq!(s.epoch(), 2);
+        assert!(s.get("a", key(4, 2)).is_some()); // bump to epoch 2
+        s.put(key(4, 9), rec(9.0)); // stamped epoch 2
+        s.flush().unwrap();
+        assert_eq!(s.stats().entries, 2);
+        assert!(s.get("a", key(4, 2)).is_some(), "recently-used key survives");
+        assert!(s.get("a", key(4, 9)).is_some(), "fresh key survives");
+        assert!(s.get("a", key(4, 0)).is_none(), "stale keys evicted");
+        assert!(s.get("a", key(4, 1)).is_none());
+        assert!(s.get("a", key(4, 3)).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn age_bound_evicts_unused_epochs() {
+        let dir = tmp_dir("age");
+        {
+            let s = open(&dir); // epoch 1
+            s.put(key(5, 1), rec(1.0));
+            s.put(key(5, 2), rec(2.0));
+            s.flush().unwrap();
+        }
+        // epoch 2, max_age 0: anything not used *this* epoch goes
+        let s = ShardedStore::<TestRec>::open(
+            &dir,
+            StoreConfig {
+                policy: StorePolicy { max_age_epochs: Some(0), ..StorePolicy::default() },
+                ..cfg()
+            },
+        )
+        .unwrap();
+        assert!(s.get("a", key(5, 1)).is_some()); // bump to epoch 2
+        s.put(key(5, 3), rec(3.0));
+        s.flush().unwrap();
+        assert!(s.get("a", key(5, 1)).is_some(), "used-this-epoch survives");
+        assert!(s.get("a", key(5, 3)).is_some());
+        assert!(s.get("a", key(5, 2)).is_none(), "unused-for-an-epoch evicted");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auto_compaction_reclaims_tombstones_past_ratio() {
+        let dir = tmp_dir("autocompact");
+        let s = open(&dir); // default_auto: compacts past 50% dead
+        for i in 0..4u64 {
+            s.put(key(6, i), rec(i as f64));
+        }
+        s.flush().unwrap();
+        for i in 0..3u64 {
+            assert!(s.evict(key(6, i)));
+        }
+        // the flush writes 3 tombstones + 1 live record (75% dead) and
+        // must then auto-compact them away
+        s.flush().unwrap();
+        assert!(s.compactions() >= 1, "auto-compaction must have fired");
+        assert_eq!(s.stats().tombstones, 0, "compaction drops tombstones");
+        // keys carry top byte 6 -> shard 6 % 4 = 2
+        let text = fs::read_to_string(dir.join("t-002.jsonl")).unwrap_or_default();
+        assert!(
+            !text.contains("\"tomb\""),
+            "no tombstone lines may remain on disk: {text}"
+        );
+        assert!(s.get("a", key(6, 3)).is_some());
+        for i in 0..3u64 {
+            assert!(s.get("a", key(6, i)).is_none(), "evicted key resurfaced");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_is_idempotent_and_preserves_reads() {
+        let dir = tmp_dir("idempotent");
+        let s = open(&dir);
+        for i in 0..6u64 {
+            s.put(key(7, i), TestRec { tag: if i % 2 == 0 { "a" } else { "b" }, val: i as f64 });
+        }
+        s.flush().unwrap();
+        s.evict(key(7, 0));
+        let r1 = s.compact().unwrap();
+        assert_eq!(r1.live_records, 5);
+        assert_eq!(r1.tombstones_dropped, 1);
+        let snapshot: Vec<Option<TestRec>> = (0..6)
+            .map(|i| s.get(if i % 2 == 0 { "a" } else { "b" }, key(7, i)))
+            .collect();
+        let r2 = s.compact().unwrap();
+        assert_eq!(r2.shards_rewritten, 0, "second compact must be a no-op");
+        assert_eq!(r2.bytes_before, r2.bytes_after);
+        let after: Vec<Option<TestRec>> = (0..6)
+            .map(|i| s.get(if i % 2 == 0 { "a" } else { "b" }, key(7, i)))
+            .collect();
+        assert_eq!(snapshot, after, "compaction must not change any read result");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn epoch_bumps_per_open_and_meta_pins_shards() {
+        let dir = tmp_dir("epoch");
+        {
+            let s = ShardedStore::<TestRec>::open_sharded(&dir, cfg(), 2).unwrap();
+            assert_eq!(s.epoch(), 1);
+            assert_eq!(s.shard_count(), 2);
+        }
+        let s = ShardedStore::<TestRec>::open_sharded(&dir, cfg(), 64).unwrap();
+        assert_eq!(s.epoch(), 2, "every open bumps the logical epoch");
+        assert_eq!(s.shard_count(), 2, "meta.json pins the shard count");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -12,6 +12,13 @@
 //! written behind (durable at the caller's flush). The per-run
 //! [`ModelCacheStats`] in each report pin the acceptance contract:
 //! a warm rerun shows 0 refits and 0 tuning-search evaluations.
+//!
+//! Since ISSUE 4 the store is a thin wrapper over the shared
+//! `coordinator::store` core, which may evict cold artifacts under a
+//! configured budget and compact its shards (`fso store compact`):
+//! both are invisible here beyond extra refits for evicted keys — a
+//! stored artifact that survives replays bit-identically, and a
+//! missing one falls back to the plain fit path below.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;

@@ -5,6 +5,7 @@
 //!   fso train     --platform vta [--metric power] [--trees-only]
 //!   fso dse       --target axiline-svm|vta [--iters N]
 //!   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
+//!   fso store     <compact|stats> --cache-dir DIR   (persistent-store maintenance)
 //!   fso serve     --demo      (dynamic-batching predict server demo)
 //!
 //! Global: --seed N, --quick, --out-dir DIR, --artifacts DIR
@@ -19,7 +20,7 @@ use fso::backend::Enablement;
 use fso::coordinator::experiments::{self, ExpOptions};
 use fso::coordinator::{
     datagen, CacheStore, DatagenConfig, EvalService, ModelCacheStats, ModelStore,
-    PredictServer, TrainOptions, Trainer,
+    PredictServer, StorePolicy, TrainOptions, Trainer,
 };
 use fso::data::Metric;
 use fso::generators::Platform;
@@ -49,6 +50,7 @@ fn run(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "dse" => cmd_dse(args),
         "experiment" => cmd_experiment(args),
+        "store" => cmd_store(args),
         "serve" => cmd_serve(args),
         _ => {
             println!("{}", HELP.trim());
@@ -70,6 +72,8 @@ USAGE:
   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
                  [--quick] [--out-dir results] [--seed N] [--cache-dir DIR]
                  [--no-model-cache]
+  fso store <compact|stats> --cache-dir DIR
+            [--store-max-bytes N] [--store-max-records N] [--store-max-age N]
   fso serve [--clients N] [--rows N]
 
 A comma-separated --enablement sweeps every listed enablement through
@@ -81,12 +85,48 @@ directory also carries fitted surrogate models (DIR/models/): a warm
 `fso train`/`fso dse` skips refitting and tuning searches entirely and
 replays bit-identical reports; --no-model-cache opts out of the model
 half while keeping the oracle cache.
+
+Long-lived stores are bounded by the lifecycle flags (accepted by every
+command that takes --cache-dir): --store-max-bytes / --store-max-records
+cap the live records (LRU eviction at flush), --store-max-age N evicts
+records whose last persisted use is more than N store openings old
+(reads persist their use-stamps only in runs that carry a budget —
+pass the flags on the regular runs, not just at compact time, for true
+use-age). `fso store compact`
+rewrites the shards dropping tombstones and dead lines — reads before
+and after a compact are identical, so warm starts are unaffected —
+and `fso store stats` prints both stores' counters.
 "#;
+
+/// Lifecycle policy from the `--store-max-*` flags (defaults:
+/// unbounded, auto-compacting once half the disk lines are dead).
+fn store_policy(args: &Args) -> Result<StorePolicy> {
+    let mut p = StorePolicy::default_auto();
+    if let Some(v) = args.get("store-max-bytes") {
+        p.max_bytes = Some(
+            v.parse().with_context(|| format!("--store-max-bytes wants bytes, got {v:?}"))?,
+        );
+    }
+    if let Some(v) = args.get("store-max-records") {
+        p.max_records = Some(
+            v.parse()
+                .with_context(|| format!("--store-max-records wants a count, got {v:?}"))?,
+        );
+    }
+    if let Some(v) = args.get("store-max-age") {
+        p.max_age_epochs = Some(
+            v.parse().with_context(|| format!("--store-max-age wants epochs, got {v:?}"))?,
+        );
+    }
+    Ok(p)
+}
 
 /// Open the persistent oracle cache named by `--cache-dir`, if given.
 fn cache_store(args: &Args) -> Result<Option<Arc<CacheStore>>> {
     match args.path("cache-dir") {
-        Some(dir) => Ok(Some(Arc::new(CacheStore::open(dir)?))),
+        Some(dir) => Ok(Some(Arc::new(
+            CacheStore::open(dir)?.with_policy(store_policy(args)?),
+        ))),
         None => Ok(None),
     }
 }
@@ -98,8 +138,48 @@ fn model_store(args: &Args) -> Result<Option<Arc<ModelStore>>> {
         return Ok(None);
     }
     match args.path("cache-dir") {
-        Some(dir) => Ok(Some(Arc::new(ModelStore::open_under(dir)?))),
+        Some(dir) => Ok(Some(Arc::new(
+            ModelStore::open_under(dir)?.with_policy(store_policy(args)?),
+        ))),
         None => Ok(None),
+    }
+}
+
+/// `fso store <compact|stats> --cache-dir DIR`: maintenance for the
+/// persistent stores. Compact covers both the oracle shards and the
+/// cohabiting model store (`DIR/models/`), applying any `--store-max-*`
+/// budgets; stats prints both stores' counters after a full load.
+fn cmd_store(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("store action required (`fso store compact` or `fso store stats`)")?;
+    let dir = args.path("cache-dir").context("--cache-dir required for `fso store`")?;
+    anyhow::ensure!(dir.exists(), "no store at {}", dir.display());
+    let models_dir = dir.join("models");
+    match action {
+        "compact" => {
+            let store = CacheStore::open(&dir)?.with_policy(store_policy(args)?);
+            println!("oracle store: {}", store.compact()?);
+            if models_dir.exists() {
+                let ms = ModelStore::open(&models_dir)?.with_policy(store_policy(args)?);
+                println!("model store:  {}", ms.compact()?);
+            }
+            Ok(())
+        }
+        "stats" => {
+            let store = CacheStore::open(&dir)?;
+            store.load_all();
+            println!("oracle store ({}): {}", dir.display(), store.stats());
+            if models_dir.exists() {
+                let ms = ModelStore::open(&models_dir)?;
+                ms.load_all();
+                println!("model store ({}): {}", models_dir.display(), ms.stats());
+            }
+            Ok(())
+        }
+        other => bail!("unknown store action {other:?} (compact|stats)"),
     }
 }
 
@@ -240,6 +320,7 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
         quick: args.flag("quick"),
         cache_dir: args.path("cache-dir"),
         no_model_cache: args.flag("no-model-cache"),
+        store_policy: store_policy(args)?,
     })
 }
 

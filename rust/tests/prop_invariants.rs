@@ -180,6 +180,144 @@ fn prop_dataset_splits_are_disjoint_and_complete() {
 }
 
 #[test]
+fn prop_store_lifecycle_preserves_liveness_and_byte_determinism() {
+    // ISSUE 4: arbitrary insert/get/evict/flush/compact/reopen
+    // sequences against the shared store core must keep every live key
+    // readable with its latest value, every evicted key a miss, and
+    // shard files byte-deterministic for a given operation sequence.
+    use fso::coordinator::ModelStore;
+    use fso::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    #[derive(Clone, Copy)]
+    enum Op {
+        Put(usize, u64),   // key index, value tag
+        Get(usize),
+        Evict(usize),
+        Flush,
+        Compact,
+        Reopen,
+    }
+
+    let payload = |v: u64| {
+        Json::obj(vec![("w", Json::arr_f64(&[v as f64, -(v as f64)])), ("tag", Json::from(v as usize))])
+    };
+
+    check(20, 0x570E, |rng| {
+        // keys spread over every shard (top byte varies), fixed space
+        // so evicts and re-puts collide on purpose
+        let keyspace: Vec<u64> =
+            (0..10u64).map(|i| (i << 56) | (0xABC0 + i)).collect();
+        let n_ops = 12 + rng.below(30);
+        let ops: Vec<Op> = (0..n_ops)
+            .map(|_| {
+                let k = rng.below(keyspace.len());
+                match rng.below(12) {
+                    0..=4 => Op::Put(k, rng.next_u64() % 1000),
+                    5..=6 => Op::Get(k),
+                    7..=8 => Op::Evict(k),
+                    9 => Op::Flush,
+                    10 => Op::Compact,
+                    _ => Op::Reopen,
+                }
+            })
+            .collect();
+
+        let run = |dir: &Path| {
+            // reference model: key -> latest live value
+            let mut live: BTreeMap<u64, u64> = BTreeMap::new();
+            let mut store = ModelStore::open(dir).unwrap();
+            for op in &ops {
+                match *op {
+                    Op::Put(k, v) => {
+                        store.put("prop", keyspace[k], payload(v));
+                        live.insert(keyspace[k], v);
+                    }
+                    Op::Get(k) => {
+                        let got = store.get("prop", keyspace[k]);
+                        match live.get(&keyspace[k]) {
+                            Some(&v) => assert_eq!(
+                                got,
+                                Some(payload(v)),
+                                "live key must read its latest value"
+                            ),
+                            None => assert_eq!(got, None, "non-live key must miss"),
+                        }
+                    }
+                    Op::Evict(k) => {
+                        let was_live = live.remove(&keyspace[k]).is_some();
+                        assert_eq!(
+                            store.evict(keyspace[k]),
+                            was_live,
+                            "evict must report whether a live record existed"
+                        );
+                    }
+                    Op::Flush => {
+                        store.flush().unwrap();
+                    }
+                    Op::Compact => {
+                        store.compact().unwrap();
+                    }
+                    Op::Reopen => {
+                        // assignment drops the old instance (flush-on-drop)
+                        store = ModelStore::open(dir).unwrap();
+                    }
+                }
+            }
+            store.flush().unwrap();
+            for (&key, &v) in &live {
+                assert_eq!(
+                    store.get("prop", key),
+                    Some(payload(v)),
+                    "live key lost at the end of the sequence"
+                );
+            }
+            for &key in &keyspace {
+                if !live.contains_key(&key) {
+                    assert_eq!(store.get("prop", key), None, "evicted key resurfaced");
+                }
+            }
+        };
+
+        let tag = rng.next_u64();
+        let dir_a = std::env::temp_dir()
+            .join(format!("fso-prop-store-{}-{tag:016x}-a", std::process::id()));
+        let dir_b = std::env::temp_dir()
+            .join(format!("fso-prop-store-{}-{tag:016x}-b", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+        run(&dir_a);
+        run(&dir_b);
+
+        // identical op sequences -> byte-identical store directories
+        let listing = |dir: &Path| -> Vec<(String, Vec<u8>)> {
+            let mut files: Vec<_> = std::fs::read_dir(dir)
+                .unwrap()
+                .map(|e| e.unwrap().path())
+                .collect();
+            files.sort();
+            files
+                .iter()
+                .map(|p| {
+                    (
+                        p.file_name().unwrap().to_string_lossy().into_owned(),
+                        std::fs::read(p).unwrap(),
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(
+            listing(&dir_a),
+            listing(&dir_b),
+            "store directories must be byte-deterministic per op sequence"
+        );
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    });
+}
+
+#[test]
 fn prop_simulator_metrics_scale_with_clock() {
     check(60, 0x51E, |rng| {
         let p = random_platform(rng);

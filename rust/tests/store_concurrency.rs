@@ -1,0 +1,151 @@
+//! Concurrency tests for the shared store core (ISSUE 4 satellite):
+//! writers flushing one store directory at the same time — in-process
+//! threads over separate store instances, and two spawned `fso
+//! datagen` processes sharing `--cache-dir` — must end with shards
+//! holding the *union* of everything written (merge-on-flush +
+//! `.store.lock` ordering; no lost updates).
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+use fso::coordinator::{CacheStore, ModelStore};
+use fso::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fso-store-conc-{}-{tag}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+fn payload(v: f64) -> Json {
+    Json::obj(vec![("w", Json::arr_f64(&[v])), ("b", v.into())])
+}
+
+#[test]
+fn two_threads_flushing_one_dir_keep_the_union() {
+    let dir = tmp_dir("threads");
+    let n = 40u64;
+    // same top byte -> same shard: maximal flush contention
+    let key_a = |i: u64| 0x1100_0000_0000_0000 | (2 * i + 1);
+    let key_b = |i: u64| 0x1100_0000_0000_0000 | (2 * i + 2);
+    std::thread::scope(|scope| {
+        let dir_a = dir.clone();
+        let dir_b = dir.clone();
+        scope.spawn(move || {
+            let store = ModelStore::open(&dir_a).unwrap();
+            for i in 0..n {
+                store.put("f", key_a(i), payload(i as f64));
+                if i % 8 == 7 {
+                    store.flush().unwrap();
+                }
+            }
+            store.flush().unwrap();
+        });
+        scope.spawn(move || {
+            let store = ModelStore::open(&dir_b).unwrap();
+            for i in 0..n {
+                store.put("f", key_b(i), payload(-(i as f64)));
+                if i % 8 == 7 {
+                    store.flush().unwrap();
+                }
+            }
+            store.flush().unwrap();
+        });
+    });
+    let store = ModelStore::open(&dir).unwrap();
+    for i in 0..n {
+        assert_eq!(
+            store.get("f", key_a(i)),
+            Some(payload(i as f64)),
+            "writer A's record {i} lost in concurrent flushing"
+        );
+        assert_eq!(
+            store.get("f", key_b(i)),
+            Some(payload(-(i as f64))),
+            "writer B's record {i} lost in concurrent flushing"
+        );
+    }
+    assert_eq!(store.stats().entries, 2 * n as usize);
+    assert!(
+        !dir.join(".store.lock").exists(),
+        "all flushes must release the directory lock"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+fn datagen_cmd(enablement: &str, cache_dir: &PathBuf) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_fso"));
+    cmd.args([
+        "datagen",
+        "--platform",
+        "axiline",
+        "--archs",
+        "2",
+        "--seed",
+        "7",
+        "--enablement",
+        enablement,
+        "--cache-dir",
+    ])
+    .arg(cache_dir);
+    cmd
+}
+
+fn live_entries(dir: &PathBuf) -> usize {
+    let store = CacheStore::open(dir).unwrap();
+    store.load_all();
+    store.stats().entries
+}
+
+#[test]
+fn spawned_datagen_pair_sharing_cache_dir_merges_both_writers() {
+    // solo baselines: what each enablement writes on its own
+    let dir_gf = tmp_dir("solo-gf12");
+    let dir_ng = tmp_dir("solo-ng45");
+    let out = datagen_cmd("gf12", &dir_gf).output().expect("spawn fso datagen");
+    assert!(out.status.success(), "solo gf12 datagen failed: {out:?}");
+    let out = datagen_cmd("ng45", &dir_ng).output().expect("spawn fso datagen");
+    assert!(out.status.success(), "solo ng45 datagen failed: {out:?}");
+    let solo_gf = live_entries(&dir_gf);
+    let solo_ng = live_entries(&dir_ng);
+    assert!(solo_gf > 0 && solo_ng > 0, "solo runs must populate their stores");
+
+    // the race: two processes, one cache dir, concurrent flushes
+    let shared = tmp_dir("shared");
+    let mut a = datagen_cmd("gf12", &shared).spawn().expect("spawn fso datagen");
+    let mut b = datagen_cmd("ng45", &shared).spawn().expect("spawn fso datagen");
+    let sa = a.wait().expect("wait gf12");
+    let sb = b.wait().expect("wait ng45");
+    assert!(sa.success() && sb.success(), "concurrent datagen pair failed");
+
+    // enablement is part of every content-hash key, so the two key
+    // sets are disjoint and the merged store must hold exactly the sum
+    assert_eq!(
+        live_entries(&shared),
+        solo_gf + solo_ng,
+        "concurrent flushes dropped records (lost update)"
+    );
+    assert!(
+        !shared.join(".store.lock").exists(),
+        "both processes must release the directory lock"
+    );
+
+    // a warm rerun over the shared dir replays entirely from disk
+    let out = datagen_cmd("gf12", &shared).output().expect("spawn warm datagen");
+    assert!(out.status.success(), "warm datagen failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("100.0% cached"),
+        "warm rerun must be fully cached:\n{stdout}"
+    );
+    assert!(
+        !stdout.contains("persistent 0 disk hits"),
+        "warm rerun must hit the persistent store:\n{stdout}"
+    );
+
+    let _ = fs::remove_dir_all(&dir_gf);
+    let _ = fs::remove_dir_all(&dir_ng);
+    let _ = fs::remove_dir_all(&shared);
+}

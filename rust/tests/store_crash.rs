@@ -1,0 +1,235 @@
+//! Crash-injection tests for the shared store flush path (ISSUE 4
+//! satellite): arm a one-shot fault hook, let the flush die at a
+//! protocol step, then reopen the directory with a fresh store (the
+//! moral equivalent of a fresh process) and prove that
+//!
+//!   * records acknowledged by a *completed* flush are never lost,
+//!   * a torn / un-renamed temp file is never served,
+//!   * the abandoned `.store.lock` is stolen once stale, so the store
+//!     never wedges.
+//!
+//! The fault hook is process-global, so these tests serialize through
+//! a local mutex, and the lock staleness window is shrunk via
+//! `FSO_STORE_LOCK_STALE_MS` so recovery takes milliseconds.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use fso::coordinator::store::fault::{self, FlushFault};
+use fso::coordinator::ModelStore;
+use fso::util::json::Json;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn setup(tag: &str) -> (std::sync::MutexGuard<'static, ()>, PathBuf) {
+    let guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // must be set before the process's first DirLock acquire (read once)
+    std::env::set_var("FSO_STORE_LOCK_STALE_MS", "200");
+    fault::disarm();
+    let dir = std::env::temp_dir()
+        .join(format!("fso-store-crash-{}-{tag}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    (guard, dir)
+}
+
+fn payload(v: f64) -> Json {
+    Json::obj(vec![("w", Json::arr_f64(&[v, 2.0 * v])), ("b", v.into())])
+}
+
+/// Keys sharing one shard (top byte 0x0a -> shard 2 of the 8-shard
+/// model-store default), so a single flush writes a single file.
+fn key(i: u64) -> u64 {
+    0x0a00_0000_0000_0000 | i
+}
+
+fn lock_file(dir: &PathBuf) -> PathBuf {
+    dir.join(".store.lock")
+}
+
+fn tmp_files(dir: &PathBuf) -> Vec<String> {
+    fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| n.contains(".tmp-"))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[test]
+fn crash_between_temp_write_and_rename_loses_no_acknowledged_record() {
+    let (_guard, dir) = setup("before-rename");
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        for i in 0..4 {
+            store.put("f", key(i), payload(i as f64));
+        }
+        store.flush().unwrap(); // acknowledged: must survive anything
+    }
+    let store = ModelStore::open(&dir).unwrap();
+    store.put("f", key(9), payload(9.0));
+    fault::arm(FlushFault::BeforeRename);
+    let err = store.flush();
+    assert!(err.is_err(), "armed flush must report the injected crash");
+    assert!(
+        lock_file(&dir).exists(),
+        "a crash mid-flush leaves the directory lock behind"
+    );
+    assert!(
+        !tmp_files(&dir).is_empty(),
+        "the staged temp file must exist (written, never renamed)"
+    );
+    // the "process" died: never let its Drop-flush run
+    std::mem::forget(store);
+
+    // fresh store = fresh process: acknowledged records intact, the
+    // unacknowledged one lost (it was never durable), nothing torn
+    let store = ModelStore::open(&dir).unwrap();
+    for i in 0..4 {
+        assert_eq!(
+            store.get("f", key(i)),
+            Some(payload(i as f64)),
+            "acknowledged record {i} lost after injected crash"
+        );
+    }
+    assert_eq!(
+        store.get("f", key(9)),
+        None,
+        "the un-renamed record was never acknowledged and must read as a miss"
+    );
+    // recovery flush steals the stale lock (200 ms window) and succeeds
+    store.put("f", key(9), payload(9.0));
+    store.flush().unwrap();
+    assert!(
+        !lock_file(&dir).exists(),
+        "recovered flush must release the (stolen) lock"
+    );
+    // compaction sweeps the orphaned temp file
+    store.compact().unwrap();
+    assert!(
+        tmp_files(&dir).is_empty(),
+        "compaction must sweep orphaned temp files: {:?}",
+        tmp_files(&dir)
+    );
+    drop(store);
+    let store = ModelStore::open(&dir).unwrap();
+    assert_eq!(store.get("f", key(9)), Some(payload(9.0)));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_between_rename_and_lock_release_keeps_everything_durable() {
+    let (_guard, dir) = setup("before-release");
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        store.put("f", key(1), payload(1.0));
+        store.flush().unwrap();
+    }
+    let store = ModelStore::open(&dir).unwrap();
+    store.put("f", key(2), payload(2.0));
+    fault::arm(FlushFault::BeforeLockRelease);
+    assert!(store.flush().is_err(), "armed flush must report the injected crash");
+    assert!(
+        lock_file(&dir).exists(),
+        "the crash happened while holding the directory lock"
+    );
+    std::mem::forget(store);
+
+    let store = ModelStore::open(&dir).unwrap();
+    assert_eq!(store.get("f", key(1)), Some(payload(1.0)));
+    assert_eq!(
+        store.get("f", key(2)),
+        Some(payload(2.0)),
+        "the rename completed before the crash, so the record is durable"
+    );
+    // the next flush must steal the stale lock instead of wedging
+    store.put("f", key(3), payload(3.0));
+    store.flush().unwrap();
+    assert!(!lock_file(&dir).exists(), "stale lock stolen and released");
+    drop(store);
+    let store = ModelStore::open(&dir).unwrap();
+    for i in 1..=3 {
+        assert_eq!(store.get("f", key(i)), Some(payload(i as f64)));
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_tail_line_is_never_served_and_repairs_on_rewrite() {
+    let (_guard, dir) = setup("torn-tail");
+    let shard_file = dir.join("model-002.jsonl");
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        store.put("f", key(1), payload(1.0));
+        store.put("f", key(2), payload(2.0));
+        store.flush().unwrap();
+    }
+    // tear the file mid-way through its last line (what a non-atomic
+    // writer or a truncated disk would leave behind)
+    let text = fs::read_to_string(&shard_file).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2);
+    let torn = format!("{}\n{}", lines[0], &lines[1][..lines[1].len() / 2]);
+    fs::write(&shard_file, torn).unwrap();
+
+    let store = ModelStore::open(&dir).unwrap();
+    // sorted (kind, key) order puts key(1) on the intact first line
+    assert_eq!(
+        store.get("f", key(1)),
+        Some(payload(1.0)),
+        "intact line must still load"
+    );
+    assert_eq!(
+        store.get("f", key(2)),
+        None,
+        "the torn record must read as a miss, never as garbage"
+    );
+    // repopulating and flushing rewrites the shard cleanly
+    store.put("f", key(2), payload(2.0));
+    store.flush().unwrap();
+    drop(store);
+    let store = ModelStore::open(&dir).unwrap();
+    assert_eq!(store.get("f", key(1)), Some(payload(1.0)));
+    assert_eq!(store.get("f", key(2)), Some(payload(2.0)));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn double_crash_then_recovery_converges() {
+    // two successive injected crashes (one per fault point) must still
+    // leave a store that recovers to full consistency
+    let (_guard, dir) = setup("double");
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        store.put("f", key(1), payload(1.0));
+        store.flush().unwrap();
+    }
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        store.put("f", key(2), payload(2.0));
+        fault::arm(FlushFault::BeforeRename);
+        assert!(store.flush().is_err());
+        std::mem::forget(store);
+    }
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        store.put("f", key(3), payload(3.0));
+        fault::arm(FlushFault::BeforeLockRelease);
+        assert!(store.flush().is_err());
+        std::mem::forget(store);
+    }
+    let store = ModelStore::open(&dir).unwrap();
+    assert_eq!(store.get("f", key(1)), Some(payload(1.0)), "acknowledged survives");
+    assert_eq!(store.get("f", key(3)), Some(payload(3.0)), "renamed-before-crash survives");
+    store.put("f", key(2), payload(2.0));
+    store.flush().unwrap();
+    assert!(!lock_file(&dir).exists());
+    drop(store);
+    let store = ModelStore::open(&dir).unwrap();
+    for i in 1..=3 {
+        assert_eq!(store.get("f", key(i)), Some(payload(i as f64)));
+    }
+    let _ = fs::remove_dir_all(&dir);
+}

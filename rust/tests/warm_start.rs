@@ -162,6 +162,46 @@ fn warm_start_dse_pareto_front_is_identical_with_disk_hits_and_zero_refits() {
 }
 
 #[test]
+fn warm_start_survives_forced_compaction_byte_identically() {
+    // ISSUE 4 acceptance: an `fso store compact` between the cold and
+    // warm runs must not change any read result — the warm rerun still
+    // replays byte-identical rows with 0 oracle re-runs.
+    let dir = tmp_dir("compact");
+    let cfg = small_cfg();
+
+    let cold = {
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        let g = run_datagen(&store, &cfg);
+        assert!(store.flush().unwrap() > 0);
+        g
+    };
+
+    // forced compaction (what the CLI runs for `fso store compact`)
+    {
+        let store = CacheStore::open(&dir).unwrap();
+        let rep = store.compact().unwrap();
+        assert!(rep.live_records > 0, "compaction must keep the live records");
+        // a second compact is a no-op: nothing left to reclaim
+        let rep2 = store.compact().unwrap();
+        assert_eq!(rep2.shards_rewritten, 0, "second compact must be a no-op: {rep2}");
+        assert_eq!(rep2.bytes_before, rep2.bytes_after);
+    }
+
+    let warm = {
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        run_datagen(&store, &cfg)
+    };
+    assert_eq!(cold.dataset.rows, warm.dataset.rows, "compaction changed a read");
+    assert_eq!(
+        warm.stats.oracle_misses, 0,
+        "warm run after compact re-ran the oracle: {}",
+        warm.stats
+    );
+    assert!(warm.stats.disk_hits > 0, "no disk hits after compact: {}", warm.stats);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn multi_enablement_sweep_warm_starts_from_one_store() {
     let dir = tmp_dir("sweep");
     let mk = |e: Enablement| DatagenConfig {
