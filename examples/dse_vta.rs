@@ -18,6 +18,8 @@ fn main() -> anyhow::Result<()> {
         quick: args.flag("quick"),
         cache_dir: args.path("cache-dir"),
         no_model_cache: args.flag("no-model-cache"),
+        coalesce: args.flag("coalesce"),
+        inflight: args.usize_or("inflight", 4)?,
         ..Default::default()
     };
     opts.ensure_out_dir()?;

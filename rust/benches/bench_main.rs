@@ -296,6 +296,153 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // ---- request coalescing (ISSUE 5): duplicate-heavy oracle sweep ---
+    // the acceptance rows: with duplicates outnumbering cores, single-
+    // flight turns the redundant concurrent oracle runs per key into
+    // one shared run — wall-clock drops and oracle_runs == unique keys.
+    // The measured pair lands in BENCH_coalesce.json as a trajectory
+    // point for cross-PR tracking.
+    {
+        let p = Platform::Axiline;
+        let uniques = datagen::sample_archs(p, 6, SamplerKind::Lhs, 21);
+        let bcfg = BackendConfig::new(0.9, 0.45);
+        let dup = 16usize;
+        // grouped by key: every worker piles onto the same fresh key at
+        // once, the worst duplication pattern for an uncoalesced memo
+        let jobs: Vec<(ArchConfig, BackendConfig)> = uniques
+            .iter()
+            .flat_map(|a| std::iter::repeat(a.clone()).take(dup).map(|a| (a, bcfg)))
+            .collect();
+        let workers = 16;
+        b.run(
+            &format!("coalesce/uncoalesced_{}keys_x{dup}dups_w{workers}", uniques.len()),
+            || {
+                let svc = EvalService::new(Enablement::Gf12, 7).with_workers(workers);
+                svc.evaluate_many(&jobs, None).unwrap()
+            },
+        );
+        b.run(
+            &format!("coalesce/coalesced_{}keys_x{dup}dups_w{workers}", uniques.len()),
+            || {
+                let svc = EvalService::new(Enablement::Gf12, 7)
+                    .with_workers(workers)
+                    .with_coalescing(true);
+                svc.evaluate_many(&jobs, None).unwrap()
+            },
+        );
+        // one measured pair for the trajectory point + the invariant
+        let t0 = Instant::now();
+        let plain = EvalService::new(Enablement::Gf12, 7).with_workers(workers);
+        plain.evaluate_many(&jobs, None).unwrap();
+        let uncoalesced_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let uncoalesced_runs = plain.stats().oracle_runs;
+        let t0 = Instant::now();
+        let coal = EvalService::new(Enablement::Gf12, 7)
+            .with_workers(workers)
+            .with_coalescing(true);
+        coal.evaluate_many(&jobs, None).unwrap();
+        let coalesced_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let s = coal.stats();
+        assert_eq!(
+            s.oracle_runs,
+            uniques.len(),
+            "coalesced oracle runs must equal unique keys"
+        );
+        println!("    coalesced stats: {s}");
+        let speedup = uncoalesced_ms / coalesced_ms.max(1e-9);
+        let json = format!(
+            "{{\"bench\":\"coalesce_dup_heavy\",\"jobs\":{},\"unique_keys\":{},\"workers\":{workers},\"uncoalesced_ms\":{uncoalesced_ms:.3},\"coalesced_ms\":{coalesced_ms:.3},\"speedup\":{speedup:.3},\"uncoalesced_oracle_runs\":{uncoalesced_runs},\"coalesced_oracle_runs\":{},\"coalesced_hits\":{}}}\n",
+            jobs.len(),
+            uniques.len(),
+            s.oracle_runs,
+            s.coalesced_hits,
+        );
+        std::fs::write("BENCH_coalesce.json", &json).ok();
+        println!(
+            "    wrote BENCH_coalesce.json (uncoalesced {uncoalesced_ms:.1} ms vs \
+             coalesced {coalesced_ms:.1} ms, {speedup:.2}x)"
+        );
+    }
+
+    // ---- EvalRouter: cross-client surrogate mega-batching -------------
+    {
+        use fso::coordinator::EvalRouter;
+        use std::sync::Arc;
+        let g = datagen::generate(&DatagenConfig {
+            n_arch: 6,
+            n_backend_train: 8,
+            n_backend_test: 2,
+            ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+        })
+        .unwrap();
+        let feats: Vec<Vec<f64>> =
+            g.dataset.rows.iter().map(|r| r.features_vec()).collect();
+        let service = Arc::new(
+            EvalService::new(Enablement::Gf12, 2023)
+                .with_surrogate(SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap()),
+        );
+        let router = EvalRouter::start(Arc::clone(&service));
+        let clients = 8usize;
+        let per_client = 40usize;
+        b.run(&format!("coalesce/router_{clients}clients_x{per_client}rows"), || {
+            std::thread::scope(|scope| {
+                for c in 0..clients {
+                    let client = router.client();
+                    let feats = &feats;
+                    scope.spawn(move || {
+                        for k in 0..per_client {
+                            let row =
+                                feats[(c * per_client + k) % feats.len()].clone();
+                            client.predict(vec![row]).unwrap();
+                        }
+                    });
+                }
+            })
+        });
+        println!("    router stats: {}", service.stats());
+        drop(router);
+
+        // pipelined vs strict DSE cadence (byte-identical trajectories)
+        let mk_driver = |seed: u64| {
+            let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, seed).unwrap();
+            fso::coordinator::DseDriver {
+                service: EvalService::new(Enablement::Gf12, 2023).with_surrogate(bundle),
+            }
+        };
+        let mut runtimes: Vec<f64> =
+            g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+        runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let problem = fso::coordinator::dse_driver::axiline_svm_problem(
+            g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max) * 2.0,
+            runtimes[runtimes.len() * 3 / 4],
+        );
+        let strict = mk_driver(7);
+        b.run("dse/strict_alternation_x60_b12", || {
+            strict
+                .run_batched(
+                    &problem,
+                    60,
+                    2,
+                    MotpeConfig { n_startup: 16, seed: 5, ..Default::default() },
+                    12,
+                )
+                .unwrap()
+        });
+        let piped = mk_driver(7);
+        b.run("dse/pipelined_x60_b12_inflight4", || {
+            piped
+                .run_pipelined(
+                    &problem,
+                    60,
+                    2,
+                    MotpeConfig { n_startup: 16, seed: 5, ..Default::default() },
+                    12,
+                    4,
+                )
+                .unwrap()
+        });
+    }
+
     // ---- datagen / train / DSE end-to-end rows (per table family) -----
     b.run("e2e/datagen_axiline_24x40 (tab3-5 input)", || {
         datagen::generate(&DatagenConfig::small(Platform::Axiline, Enablement::Gf12))

@@ -1,0 +1,514 @@
+//! Request coalescing for oracle + surrogate traffic (ISSUE 5): the
+//! front-end that sits between DSE/datagen workers and the
+//! `EvalService` hot paths.
+//!
+//! Two mechanisms, both invisible to results:
+//!
+//! - **Single-flight dedup** ([`SingleFlight`]): concurrent callers
+//!   that miss the memo on the *same* content-hash key elect one
+//!   leader to run the expensive computation (SP&R flow + simulator);
+//!   every other caller waits on the in-flight run and receives the
+//!   leader's bit-identical value. A leader error is broadcast to the
+//!   waiters as an error; a leader *panic* propagates to every waiter
+//!   (nobody hangs on a dead flight). The `EvalService` wires this
+//!   around its oracle and flow miss paths (`with_coalescing`) and
+//!   reports `coalesced_hits` / `inflight_peak` / `oracle_runs` in
+//!   [`super::eval_service::EvalStats`].
+//!
+//! - **Cross-client surrogate batching** ([`EvalRouter`]): the
+//!   PJRT-only `PredictServer` dynamic-batching pattern
+//!   (`coordinator::predict_server`), generalized to the tree-family
+//!   surrogate. Clients submit feature rows over a channel; the
+//!   router thread drains whatever is queued — its coalescing window —
+//!   concatenates the rows from *all* cohabiting requests, runs one
+//!   metric-major `predict_batch` mega-batch, and splits the results
+//!   back per request. `SurrogateBundle::predict_batch` scores rows
+//!   independently, so batch composition never changes a value; the
+//!   `router_batches` counters prove the occupancy gain.
+//!
+//! **Determinism contract**: coalescing shares *work*, never state —
+//! a coalesced run at the same seed produces byte-identical rows,
+//! reports, and Pareto fronts to the serial path, and the
+//! hit/miss/run counter totals are thread-schedule-independent
+//! (`oracle_runs == unique keys` on any workload).
+//!
+//! The [`hook`] submodule (mirroring `store::fault`) lets tests force
+//! exact interleavings — "N waiters queued before the leader
+//! finishes", "N requests queued before the router drains" — without
+//! sleeps; see `tests/coalesce.rs`.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::eval_service::{EvalService, SurrogatePoint};
+use crate::util::pool::panic_message;
+
+/// Safety valve for the test barriers: an armed interleaving that
+/// never completes (test bug) times out instead of deadlocking CI.
+const HOOK_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Test-only interleaving hooks (ISSUE 5 satellite, mirroring
+/// `store::fault`): process-global and one-shot — `arm_*` schedules a
+/// single forced interleaving, the next leader/drain consumes it, and
+/// everything after runs normally. Tests that arm hooks must
+/// serialize themselves (the hook does not know which flight or
+/// router will fire next).
+pub mod hook {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static LEADER_BARRIER: AtomicUsize = AtomicUsize::new(0);
+    static ROUTER_BARRIER: AtomicUsize = AtomicUsize::new(0);
+
+    /// The next single-flight *leader* blocks — after winning the
+    /// flight, before computing — until `waiters` callers are queued
+    /// on its flight. Forces "N waiters queued before the leader
+    /// finishes" without sleeps.
+    pub fn arm_leader_barrier(waiters: usize) {
+        LEADER_BARRIER.store(waiters, Ordering::SeqCst);
+    }
+
+    /// The next router drain holds its coalescing window open until
+    /// `requests` predict requests are queued (or a shutdown arrives),
+    /// forcing them into one mega-batch.
+    pub fn arm_router_barrier(requests: usize) {
+        ROUTER_BARRIER.store(requests, Ordering::SeqCst);
+    }
+
+    /// Cancel any pending barrier (test cleanup).
+    pub fn disarm() {
+        LEADER_BARRIER.store(0, Ordering::SeqCst);
+        ROUTER_BARRIER.store(0, Ordering::SeqCst);
+    }
+
+    pub(super) fn take_leader_barrier() -> Option<usize> {
+        let n = LEADER_BARRIER.swap(0, Ordering::SeqCst);
+        if n > 0 {
+            Some(n)
+        } else {
+            None
+        }
+    }
+
+    pub(super) fn take_router_barrier() -> Option<usize> {
+        let n = ROUTER_BARRIER.swap(0, Ordering::SeqCst);
+        if n > 0 {
+            Some(n)
+        } else {
+            None
+        }
+    }
+}
+
+/// How a [`SingleFlight::run`] call was served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Joined<T> {
+    /// This call won the flight and ran the computation itself.
+    Led(T),
+    /// This call waited on another caller's in-flight computation and
+    /// received its bit-identical result.
+    Coalesced(T),
+}
+
+enum FlightState<T> {
+    Running,
+    Done(Result<T, String>),
+    Panicked(String),
+}
+
+/// One in-flight computation: waiters block on `cv` until the leader
+/// publishes; the leader's barrier hook blocks on the same `cv` until
+/// enough waiters have registered.
+struct Flight<T> {
+    state: Mutex<FlightState<T>>,
+    cv: Condvar,
+    waiters: AtomicUsize,
+}
+
+impl<T: Clone> Flight<T> {
+    fn new() -> Flight<T> {
+        Flight {
+            state: Mutex::new(FlightState::Running),
+            cv: Condvar::new(),
+            waiters: AtomicUsize::new(0),
+        }
+    }
+
+    /// Poison-tolerant state lock: the first waiter to re-panic with a
+    /// leader panic poisons the mutex while unwinding; later waiters
+    /// must still read the published state and re-panic with the
+    /// *leader's* message, not a `PoisonError`.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, FlightState<T>> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn publish(&self, state: FlightState<T>) {
+        *self.lock_state() = state;
+        self.cv.notify_all();
+    }
+
+    /// Barrier hook: hold the flight open until `need` waiters are
+    /// queued (bounded by [`HOOK_TIMEOUT`]).
+    fn wait_for_waiters(&self, need: usize) {
+        let deadline = Instant::now() + HOOK_TIMEOUT;
+        let mut guard = self.lock_state();
+        while self.waiters.load(Ordering::SeqCst) < need {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = self
+                .cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            guard = g;
+        }
+    }
+
+    /// Wait for the leader's result. `Err` carries the leader's error
+    /// message; a leader panic re-panics here so no waiter silently
+    /// continues past a dead flight.
+    fn join(&self) -> Result<T, String> {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let mut guard = self.lock_state();
+        // wake a leader blocked on the waiter barrier
+        self.cv.notify_all();
+        loop {
+            match &*guard {
+                FlightState::Running => {
+                    guard = self.cv.wait(guard).unwrap_or_else(|p| p.into_inner())
+                }
+                FlightState::Done(r) => return r.clone(),
+                FlightState::Panicked(msg) => {
+                    // release the lock before unwinding so sibling
+                    // waiters see Panicked, not a poisoned mutex
+                    let msg = msg.clone();
+                    drop(guard);
+                    panic!("coalesced leader panicked: {msg}");
+                }
+            }
+        }
+    }
+}
+
+/// Single-flight table: at most one computation per key is ever in
+/// flight; concurrent callers for the same key coalesce onto it. Keys
+/// are released as soon as their flight completes, so later callers
+/// recompute (or hit whatever memo the computation fed).
+pub struct SingleFlight<T> {
+    flights: Mutex<HashMap<u64, Arc<Flight<T>>>>,
+    inflight: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl<T: Clone> Default for SingleFlight<T> {
+    fn default() -> Self {
+        SingleFlight::new()
+    }
+}
+
+impl<T: Clone> SingleFlight<T> {
+    pub fn new() -> SingleFlight<T> {
+        SingleFlight {
+            flights: Mutex::new(HashMap::new()),
+            inflight: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Highest number of concurrently in-flight leaders observed.
+    pub fn inflight_peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Run `compute` for `key`, or wait on another caller already
+    /// running it. Exactly one caller (the leader) executes `compute`
+    /// per in-flight window; waiters receive the leader's cloned
+    /// value, error message, or propagated panic.
+    pub fn run<F>(&self, key: u64, compute: F) -> Result<Joined<T>>
+    where
+        F: FnOnce() -> Result<T>,
+    {
+        let (flight, leads) = {
+            let mut map = self.flights.lock().unwrap();
+            match map.entry(key) {
+                Entry::Occupied(e) => (Arc::clone(e.get()), false),
+                Entry::Vacant(v) => {
+                    let f = Arc::new(Flight::new());
+                    v.insert(Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+        if !leads {
+            return match flight.join() {
+                Ok(v) => Ok(Joined::Coalesced(v)),
+                Err(msg) => Err(anyhow::anyhow!("coalesced leader failed: {msg}")),
+            };
+        }
+        let depth = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(depth, Ordering::SeqCst);
+        if let Some(need) = hook::take_leader_barrier() {
+            flight.wait_for_waiters(need);
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(compute));
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        // release the key before publishing: a caller that arrives now
+        // simply leads a fresh flight (and hits the memo the finished
+        // computation fed, so no work repeats)
+        self.flights.lock().unwrap().remove(&key);
+        match outcome {
+            Ok(Ok(v)) => {
+                flight.publish(FlightState::Done(Ok(v.clone())));
+                Ok(Joined::Led(v))
+            }
+            Ok(Err(e)) => {
+                flight.publish(FlightState::Done(Err(format!("{e:#}"))));
+                Err(e)
+            }
+            Err(payload) => {
+                flight.publish(FlightState::Panicked(panic_message(payload.as_ref())));
+                resume_unwind(payload)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// EvalRouter: cross-client surrogate batching
+// ---------------------------------------------------------------------
+
+type PredictReply = mpsc::Sender<Result<Vec<SurrogatePoint>, String>>;
+
+enum RouterMsg {
+    Predict {
+        rows: Vec<Vec<f64>>,
+        reply: PredictReply,
+    },
+    Shutdown,
+}
+
+/// Cheap cloneable submit handle onto a running router.
+#[derive(Clone)]
+pub struct RouterClient {
+    tx: mpsc::Sender<RouterMsg>,
+}
+
+impl RouterClient {
+    /// Score feature rows through the router's shared mega-batches.
+    /// Value-identical to `EvalService::predict_batch` on the same
+    /// rows — the router only changes who pays the batch overhead.
+    pub fn predict(&self, rows: Vec<Vec<f64>>) -> Result<Vec<SurrogatePoint>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(RouterMsg::Predict { rows, reply })
+            .context("eval router is gone")?;
+        match rx.recv().context("eval router dropped an in-flight request")? {
+            Ok(points) => Ok(points),
+            Err(msg) => Err(anyhow::anyhow!("eval router predict failed: {msg}")),
+        }
+    }
+}
+
+/// Dynamic-batching router over an owned (`Arc`) service — the
+/// generic sibling of `PredictServer` for tree-family surrogate
+/// traffic. Drop shuts the service thread down; requests still queued
+/// at shutdown receive replies or a disconnect error — never a hang.
+pub struct EvalRouter {
+    tx: mpsc::Sender<RouterMsg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EvalRouter {
+    /// Boot the router thread over a shared service (the service needs
+    /// a surrogate attached for predictions to succeed).
+    pub fn start(service: Arc<EvalService>) -> EvalRouter {
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || serve(&service, &rx));
+        EvalRouter { tx, handle: Some(handle) }
+    }
+
+    pub fn client(&self) -> RouterClient {
+        RouterClient { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for EvalRouter {
+    fn drop(&mut self) {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Scoped router for borrowed services (`DseDriver::run_pipelined`):
+/// the serve thread lives on `scope` and exits when every clone of
+/// the returned client has been dropped — callers must drop their
+/// clients before the scope closes or the scope's implicit join
+/// deadlocks.
+pub fn serve_scoped<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    service: &'env EvalService,
+) -> RouterClient {
+    let (tx, rx) = mpsc::channel();
+    scope.spawn(move || serve(service, &rx));
+    RouterClient { tx }
+}
+
+fn serve(service: &EvalService, rx: &mpsc::Receiver<RouterMsg>) {
+    loop {
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // every client dropped
+        };
+        let mut pending = vec![first];
+        // coalescing window: drain whatever else is queued
+        while let Ok(m) = rx.try_recv() {
+            pending.push(m);
+        }
+        // barrier hook: hold the window open until enough predict
+        // requests cohabit (tests force exact batch compositions)
+        if let Some(need) = hook::take_router_barrier() {
+            let deadline = Instant::now() + HOOK_TIMEOUT;
+            while !pending.iter().any(|m| matches!(m, RouterMsg::Shutdown)) {
+                let have = pending
+                    .iter()
+                    .filter(|m| matches!(m, RouterMsg::Predict { .. }))
+                    .count();
+                if have >= need {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(m) => pending.push(m),
+                    Err(_) => break, // timeout or disconnect
+                }
+            }
+        }
+        let mut shutdown = false;
+        let mut requests: Vec<(Vec<Vec<f64>>, PredictReply)> = Vec::new();
+        for m in pending {
+            match m {
+                RouterMsg::Shutdown => shutdown = true,
+                RouterMsg::Predict { rows, reply } => requests.push((rows, reply)),
+            }
+        }
+        // requests drained alongside a shutdown are still answered —
+        // in-flight callers never hang on router teardown
+        if !requests.is_empty() {
+            run_mega_batch(service, requests);
+        }
+        if shutdown {
+            return;
+        }
+    }
+}
+
+/// Concatenate every cohabiting request's rows, score them in one
+/// metric-major `predict_batch` pass, and split the results back per
+/// request. Row scoring is per-row independent, so cohabitation never
+/// changes a value; an error is broadcast to the whole window.
+fn run_mega_batch(service: &EvalService, requests: Vec<(Vec<Vec<f64>>, PredictReply)>) {
+    let total: usize = requests.iter().map(|(rows, _)| rows.len()).sum();
+    service.note_router_requests(requests.len(), total);
+    if total == 0 {
+        for (_, reply) in requests {
+            let _ = reply.send(Ok(Vec::new()));
+        }
+        return;
+    }
+    // move the owned rows into the mega-batch (no row copies); only
+    // the per-request lengths are needed to split the results back
+    let mut mega: Vec<Vec<f64>> = Vec::with_capacity(total);
+    let mut replies: Vec<(usize, PredictReply)> = Vec::with_capacity(requests.len());
+    for (mut rows, reply) in requests {
+        replies.push((rows.len(), reply));
+        mega.append(&mut rows);
+    }
+    service.note_router_batch();
+    match service.predict_batch(&mega) {
+        Ok(points) => {
+            let mut points = points.into_iter();
+            for (n, reply) in replies {
+                let chunk: Vec<SurrogatePoint> = points.by_ref().take(n).collect();
+                let _ = reply.send(Ok(chunk));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (_, reply) in replies {
+                let _ = reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // hook-using interleaving tests live in tests/coalesce.rs (they
+    // serialize on a process-global barrier); these cover the
+    // hook-free single-flight semantics
+
+    #[test]
+    fn sequential_runs_each_lead_and_recompute() {
+        let sf: SingleFlight<u64> = SingleFlight::new();
+        let mut runs = 0;
+        for want in [3u64, 4] {
+            let got = sf
+                .run(9, || {
+                    runs += 1;
+                    Ok(want)
+                })
+                .unwrap();
+            assert_eq!(got, Joined::Led(want), "no concurrency, so every call leads");
+        }
+        assert_eq!(runs, 2, "flights release their key on completion");
+        assert_eq!(sf.inflight_peak(), 1);
+    }
+
+    #[test]
+    fn leader_error_is_returned_and_key_released() {
+        let sf: SingleFlight<u64> = SingleFlight::new();
+        let err = sf
+            .run(1, || -> Result<u64> { Err(anyhow::anyhow!("tool crashed")) })
+            .expect_err("leader error must surface");
+        assert!(format!("{err:#}").contains("tool crashed"));
+        // the key is free again: the next call computes normally
+        let v = match sf.run(1, || Ok(7u64)).unwrap() {
+            Joined::Led(v) | Joined::Coalesced(v) => v,
+        };
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn distinct_keys_run_concurrently_and_peak_tracks_them() {
+        let sf: SingleFlight<usize> = SingleFlight::new();
+        let gate = std::sync::Barrier::new(2);
+        std::thread::scope(|scope| {
+            let sf = &sf;
+            let gate = &gate;
+            for k in 0..2u64 {
+                scope.spawn(move || {
+                    sf.run(k, || {
+                        // both leaders in flight before either returns
+                        gate.wait();
+                        Ok(k as usize)
+                    })
+                    .unwrap()
+                });
+            }
+        });
+        assert_eq!(sf.inflight_peak(), 2);
+    }
+}

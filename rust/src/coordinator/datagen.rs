@@ -32,6 +32,10 @@ pub struct DatagenConfig {
     /// Ground-truth fan-out width; 0 = one per available core. Never
     /// changes the generated rows, only wall-clock.
     pub workers: usize,
+    /// Single-flight request coalescing (`--coalesce`, ISSUE 5):
+    /// concurrent duplicate oracle keys share one in-flight run.
+    /// Never changes the generated rows, only wall-clock/CPU.
+    pub coalesce: bool,
 }
 
 impl DatagenConfig {
@@ -49,6 +53,7 @@ impl DatagenConfig {
             arch_sampler: SamplerKind::Lhs,
             seed: 2023,
             workers: 0,
+            coalesce: false,
         }
     }
 }
@@ -124,8 +129,9 @@ pub struct GeneratedData {
 
 /// Run the full datagen pipeline on a fresh service.
 pub fn generate(cfg: &DatagenConfig) -> Result<GeneratedData> {
-    let service =
-        EvalService::new(cfg.enablement, cfg.seed).with_workers(cfg.workers);
+    let service = EvalService::new(cfg.enablement, cfg.seed)
+        .with_workers(cfg.workers)
+        .with_coalescing(cfg.coalesce);
     generate_with(&service, cfg)
 }
 
@@ -146,6 +152,7 @@ pub fn generate_sweep(
     for cfg in cfgs {
         let service = EvalService::new(cfg.enablement, cfg.seed)
             .with_workers(cfg.workers)
+            .with_coalescing(cfg.coalesce)
             .with_cache_store_opt(store.clone());
         out.push(generate_with(&service, cfg)?);
     }
@@ -171,8 +178,9 @@ pub fn build_rows(
     backends_train: &[BackendConfig],
     backends_test: &[BackendConfig],
 ) -> Result<GeneratedData> {
-    let service =
-        EvalService::new(cfg.enablement, cfg.seed).with_workers(cfg.workers);
+    let service = EvalService::new(cfg.enablement, cfg.seed)
+        .with_workers(cfg.workers)
+        .with_coalescing(cfg.coalesce);
     build_rows_with(&service, cfg, archs, backends_train, backends_test)
 }
 

@@ -13,8 +13,9 @@
 //! ask/tell loop exactly.
 
 use std::collections::BTreeMap;
+use std::sync::{mpsc, Mutex};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::backend::{BackendConfig, Enablement};
 use crate::data::{Dataset, Metric, Split};
@@ -25,7 +26,8 @@ use crate::util::json::Json;
 use crate::util::pool::{default_workers, par_map};
 use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
 
-use super::eval_service::{EvalService, EvalStats};
+use super::coalesce;
+use super::eval_service::{EvalService, EvalStats, SurrogatePoint};
 use super::model_store::{ModelKey, ModelStore};
 
 /// The trained predictor bundle the DSE consults (two-stage: ROI
@@ -263,6 +265,26 @@ pub struct DseDriver {
     pub service: EvalService,
 }
 
+/// Apply one scored proposal in ask order: the Eq. 3 feasibility gate,
+/// the (energy, area) objectives, the MOTPE tell, and the recorded
+/// point. One home, shared by the strict-alternation and pipelined run
+/// flavors, so the two cadences can never diverge.
+fn tell_scored(
+    problem: &DseProblem,
+    motpe: &mut Motpe,
+    points: &mut Vec<DsePoint>,
+    x: Vec<f64>,
+    sp: SurrogatePoint,
+) {
+    let feasible = sp.in_roi
+        && problem
+            .cost
+            .feasible(sp.predicted[&Metric::Power], sp.predicted[&Metric::Runtime]);
+    let objectives = vec![sp.predicted[&Metric::Energy], sp.predicted[&Metric::Area]];
+    motpe.tell(x.clone(), objectives, feasible);
+    points.push(DsePoint { x, predicted: sp.predicted, feasible });
+}
+
 impl DseDriver {
     /// Build a driver whose service owns the surrogate and a flow
     /// seeded with `flow_seed` (serial until `with_workers`).
@@ -321,18 +343,105 @@ impl DseDriver {
             }
             let scored = self.service.predict_batch(&feats)?;
             for (x, sp) in xs.into_iter().zip(scored) {
-                let feasible = sp.in_roi
-                    && problem
-                        .cost
-                        .feasible(sp.predicted[&Metric::Power], sp.predicted[&Metric::Runtime]);
-                let objectives =
-                    vec![sp.predicted[&Metric::Energy], sp.predicted[&Metric::Area]];
-                motpe.tell(x.clone(), objectives, feasible);
-                points.push(DsePoint { x, predicted: sp.predicted, feasible });
+                tell_scored(problem, &mut motpe, &mut points, x, sp);
             }
             remaining -= b;
         }
 
+        self.select_and_ground_truth(problem, points, top_k)
+    }
+
+    /// `run_batched` with the proposal and scoring stages overlapped
+    /// (ISSUE 5): the calling thread keeps generating the current
+    /// batch's MOTPE proposals while up to `inflight` scoring workers
+    /// decode, featurize, and score already-asked proposals through a
+    /// scoped [`coalesce::serve_scoped`] router — so concurrent
+    /// workers' rows coalesce into metric-major mega-batches.
+    ///
+    /// Byte-identical to `run_batched` at the same seed and batch
+    /// size: `ask_batch(n)` is exactly `n` sequential `ask` calls with
+    /// no intermediate observations, proposals are scored row-
+    /// independently, and every `tell` is applied in ask order after
+    /// the whole batch is scored — only wall-clock changes.
+    pub fn run_pipelined(
+        &self,
+        problem: &DseProblem,
+        iterations: usize,
+        top_k: usize,
+        motpe_cfg: MotpeConfig,
+        batch: usize,
+        inflight: usize,
+    ) -> Result<DseOutcome> {
+        let batch = batch.max(1);
+        let inflight = inflight.max(1);
+        let service = &self.service;
+        let mut motpe = Motpe::new(problem.space(), motpe_cfg);
+        let mut points: Vec<DsePoint> = Vec::with_capacity(iterations);
+
+        let mut remaining = iterations;
+        while remaining > 0 {
+            let b = batch.min(remaining);
+            let mut xs: Vec<Vec<f64>> = Vec::with_capacity(b);
+            let slots: Vec<Mutex<Option<Result<SurrogatePoint>>>> =
+                (0..b).map(|_| Mutex::new(None)).collect();
+            let (jtx, jrx) = mpsc::channel::<(usize, ArchConfig, BackendConfig)>();
+            let jrx = Mutex::new(jrx);
+            std::thread::scope(|scope| {
+                let router = coalesce::serve_scoped(scope, service);
+                for _ in 0..inflight {
+                    let client = router.clone();
+                    let jrx = &jrx;
+                    let slots = &slots;
+                    scope.spawn(move || loop {
+                        // take one job at a time: whichever worker is
+                        // free scores the next asked proposal
+                        let job = jrx.lock().unwrap().recv();
+                        let (i, arch, bcfg) = match job {
+                            Ok(j) => j,
+                            Err(_) => break, // batch fully asked + dispatched
+                        };
+                        let scored = (|| {
+                            let feats = service.features(&arch, bcfg)?;
+                            let mut out = client.predict(vec![feats.to_vec()])?;
+                            out.pop().context("router returned an empty batch for one row")
+                        })();
+                        *slots[i].lock().unwrap() = Some(scored);
+                    });
+                }
+                // the pipeline: proposal i+1 is generated here while
+                // workers score proposals <= i through the router
+                for i in 0..b {
+                    let x = motpe.ask();
+                    let (arch, bcfg) = problem.decode(&x);
+                    xs.push(x);
+                    let _ = jtx.send((i, arch, bcfg));
+                }
+                drop(jtx);
+                drop(router);
+            });
+            // collect in ask order, tell in ask order: the trajectory
+            // is exactly the strict-alternation one
+            for (x, slot) in xs.into_iter().zip(slots) {
+                let sp = slot
+                    .into_inner()
+                    .unwrap()
+                    .context("scoring worker dropped a proposal")??;
+                tell_scored(problem, &mut motpe, &mut points, x, sp);
+            }
+            remaining -= b;
+        }
+
+        self.select_and_ground_truth(problem, points, top_k)
+    }
+
+    /// Eq. 3 selection + top-k ground-truth check shared by every run
+    /// flavor (strict alternation and pipelined).
+    fn select_and_ground_truth(
+        &self,
+        problem: &DseProblem,
+        points: Vec<DsePoint>,
+        top_k: usize,
+    ) -> Result<DseOutcome> {
         // Eq. 3 selection over the feasible Pareto set. MOTPE converges
         // onto good configurations and proposes them repeatedly — dedup
         // by knob vector so top-k names k *distinct* designs.

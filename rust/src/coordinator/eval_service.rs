@@ -37,6 +37,13 @@
 //!   `flush_cache`. Several services — across enablements, workloads,
 //!   and processes — can share one store; results never change, only
 //!   wall-clock (see `coordinator::cache_store`).
+//! - **Single-flight coalescing** (`with_coalescing`, ISSUE 5):
+//!   concurrent misses on the same content-hash key share one
+//!   in-flight oracle run instead of racing to recompute it — all
+//!   waiters receive the bit-identical result, the memo and store are
+//!   written once per key, and `oracle_runs` is pinned at one per
+//!   unique key under any thread schedule (see
+//!   `coordinator::coalesce`).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -46,6 +53,7 @@ use anyhow::{Context, Result};
 
 use crate::backend::{BackendConfig, Enablement, FlowResult, SpnrFlow};
 use crate::coordinator::cache_store::CacheStore;
+use crate::coordinator::coalesce::{Joined, SingleFlight};
 use crate::coordinator::dse_driver::SurrogateBundle;
 use crate::coordinator::model_store::ModelStore;
 use crate::coordinator::predict_server::PredictClient;
@@ -124,6 +132,31 @@ pub struct EvalStats {
     /// Compaction passes the attached stores have run (explicit +
     /// automatic, store-level).
     pub store_compactions: usize,
+    /// Full ground-truth computations actually executed (the
+    /// simulator pass after every cache level missed). Unlike
+    /// `oracle_misses` — which is pinned at one per unique key by the
+    /// double-checked memo insert — this counts *work*: racing
+    /// uncoalesced workers may run the same key several times, while a
+    /// coalesced service pins it at exactly one per unique key.
+    pub oracle_runs: usize,
+    /// SP&R flow executions actually performed (`flow_runs <=
+    /// oracle_runs`; the flow is shared across workloads and trials
+    /// reuse nothing).
+    pub flow_runs: usize,
+    /// Oracle calls served by waiting on another caller's in-flight
+    /// single-flight computation (ISSUE 5; also counted in
+    /// `oracle_hits` — the call never ran the oracle).
+    pub coalesced_hits: usize,
+    /// Highest number of concurrently in-flight oracle leaders
+    /// observed (single-flight occupancy).
+    pub inflight_peak: usize,
+    /// Predict requests routed through an attached `EvalRouter`.
+    pub router_requests: usize,
+    /// Feature rows routed through an attached `EvalRouter`.
+    pub router_rows: usize,
+    /// Mega-batches the router issued (cross-client coalescing
+    /// efficiency denominator).
+    pub router_batches: usize,
 }
 
 impl EvalStats {
@@ -155,6 +188,16 @@ impl EvalStats {
             0.0
         } else {
             self.surrogate_rows as f64 / self.surrogate_batches as f64
+        }
+    }
+
+    /// Mean rows per router mega-batch (cross-client coalescing
+    /// efficiency).
+    pub fn router_occupancy(&self) -> f64 {
+        if self.router_batches == 0 {
+            0.0
+        } else {
+            self.router_rows as f64 / self.router_batches as f64
         }
     }
 }
@@ -190,6 +233,19 @@ impl std::fmt::Display for EvalStats {
             f,
             " | lifecycle {} evictions / {} compactions",
             self.store_evictions, self.store_compactions
+        )?;
+        write!(
+            f,
+            " | coalesce {} waits ({} oracle runs, peak {} in flight)",
+            self.coalesced_hits, self.oracle_runs, self.inflight_peak
+        )?;
+        write!(
+            f,
+            " | router {} reqs / {} rows / {} batches ({:.1}/batch)",
+            self.router_requests,
+            self.router_rows,
+            self.router_batches,
+            self.router_occupancy()
         )
     }
 }
@@ -205,6 +261,12 @@ struct Counters {
     ann_rows: AtomicUsize,
     ann_batches: AtomicUsize,
     disk_hits: AtomicUsize,
+    oracle_runs: AtomicUsize,
+    flow_runs: AtomicUsize,
+    coalesced_hits: AtomicUsize,
+    router_requests: AtomicUsize,
+    router_rows: AtomicUsize,
+    router_batches: AtomicUsize,
 }
 
 /// Optional PJRT path: a `PredictServer` client plus the (variant,
@@ -238,6 +300,13 @@ pub struct EvalService {
     /// Optional persistent surrogate-model store (ISSUE 3):
     /// `fit_surrogate` reads through it and writes fresh fits behind.
     model_store: Option<Arc<ModelStore>>,
+    /// Single-flight request coalescing (ISSUE 5, `with_coalescing`):
+    /// when enabled, concurrent misses on the same oracle/flow key
+    /// share one in-flight computation instead of racing to recompute
+    /// identical results.
+    coalesce: bool,
+    oracle_flights: SingleFlight<Evaluation>,
+    flow_flights: SingleFlight<FlowResult>,
     counters: Counters,
 }
 
@@ -257,8 +326,29 @@ impl EvalService {
             agg_cache: Mutex::new(HashMap::new()),
             store: None,
             model_store: None,
+            coalesce: false,
+            oracle_flights: SingleFlight::new(),
+            flow_flights: SingleFlight::new(),
             counters: Counters::default(),
         }
+    }
+
+    /// Enable single-flight request coalescing (ISSUE 5): concurrent
+    /// `evaluate*` calls that miss every cache level on the same
+    /// content-hash key elect one leader to run the SP&R oracle +
+    /// simulator; every other caller waits and receives the leader's
+    /// bit-identical result, and the memo/store are written once per
+    /// key. Never changes results — only wall-clock and CPU time —
+    /// and pins `oracle_runs` at exactly one per unique key under any
+    /// thread schedule.
+    pub fn with_coalescing(mut self, on: bool) -> EvalService {
+        self.coalesce = on;
+        self
+    }
+
+    /// Whether single-flight coalescing is enabled.
+    pub fn coalescing(&self) -> bool {
+        self.coalesce
     }
 
     /// Worker threads for `evaluate_many` / `predict_batch` fan-out;
@@ -392,7 +482,26 @@ impl EvalService {
                 + self.model_store.as_ref().map_or(0, |m| m.evictions()),
             store_compactions: self.store.as_ref().map_or(0, |s| s.compactions())
                 + self.model_store.as_ref().map_or(0, |m| m.compactions()),
+            oracle_runs: self.counters.oracle_runs.load(Ordering::Relaxed),
+            flow_runs: self.counters.flow_runs.load(Ordering::Relaxed),
+            coalesced_hits: self.counters.coalesced_hits.load(Ordering::Relaxed),
+            inflight_peak: self.oracle_flights.inflight_peak(),
+            router_requests: self.counters.router_requests.load(Ordering::Relaxed),
+            router_rows: self.counters.router_rows.load(Ordering::Relaxed),
+            router_batches: self.counters.router_batches.load(Ordering::Relaxed),
         }
+    }
+
+    /// Router accounting (called by `coordinator::coalesce` when an
+    /// `EvalRouter` drains a coalescing window into this service).
+    pub(crate) fn note_router_requests(&self, requests: usize, rows: usize) {
+        self.counters.router_requests.fetch_add(requests, Ordering::Relaxed);
+        self.counters.router_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// One router mega-batch issued against this service.
+    pub(crate) fn note_router_batch(&self) {
+        self.counters.router_batches.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Content-hash key for the workload-independent SP&R flow result:
@@ -505,6 +614,46 @@ impl EvalService {
     ) -> Result<Evaluation> {
         let flow_key = self.flow_key(arch, bcfg, trial);
         let key = self.oracle_key(flow_key, wl);
+        if !self.coalesce {
+            return self.evaluate_keyed(arch, bcfg, wl, trial, flow_key, key);
+        }
+        // fast path: a memo hit needs no flight bookkeeping
+        if let Some(ev) = self.oracle_cache.lock().unwrap().get(&key) {
+            self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(*ev);
+        }
+        // single flight (ISSUE 5): one leader per in-flight key runs
+        // the miss path; everyone else waits on its result. A caller
+        // that leads *after* a previous flight published simply hits
+        // the memo inside `evaluate_keyed`, so `oracle_runs` stays at
+        // exactly one per unique key under any schedule.
+        match self
+            .oracle_flights
+            .run(key, || self.evaluate_keyed(arch, bcfg, wl, trial, flow_key, key))?
+        {
+            Joined::Led(ev) => Ok(ev),
+            Joined::Coalesced(ev) => {
+                self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
+                self.counters.coalesced_hits.fetch_add(1, Ordering::Relaxed);
+                Ok(ev)
+            }
+        }
+    }
+
+    /// The full lookup-or-compute path for pre-computed keys (memo →
+    /// store → flow reuse → compute). Safe to run concurrently for the
+    /// same key — double-checked inserts keep counter totals
+    /// deterministic — but `with_coalescing` routes duplicates through
+    /// a single flight so the work itself is never repeated.
+    fn evaluate_keyed(
+        &self,
+        arch: &ArchConfig,
+        bcfg: BackendConfig,
+        wl: Option<&NonDnnWorkload>,
+        trial: u64,
+        flow_key: u64,
+        key: u64,
+    ) -> Result<Evaluation> {
         if let Some(ev) = self.oracle_cache.lock().unwrap().get(&key) {
             self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(*ev);
@@ -530,52 +679,19 @@ impl EvalService {
         let cached_flow = self.flow_cache.lock().unwrap().get(&flow_key).copied();
         let fr = match cached_flow {
             Some(f) => f,
-            None => {
-                let disk_flow = self.store.as_ref().and_then(|s| s.get_flow(flow_key));
-                let from_disk = disk_flow.is_some();
-                let f = match disk_flow {
-                    Some(f) => f,
-                    None => {
-                        let agg = self.aggregates(arch)?;
-                        let f = if trial == 0 {
-                            self.flow.run_on_aggregates(
-                                &agg,
-                                arch.id_hash(),
-                                arch.platform.macro_heavy(),
-                                bcfg,
-                            )
-                        } else {
-                            let trial_seed = Rng::new(self.seed).fork(trial).next_u64();
-                            let flow = SpnrFlow::new(self.enablement, trial_seed);
-                            flow.run_on_aggregates(
-                                &agg,
-                                arch.id_hash(),
-                                arch.platform.macro_heavy(),
-                                bcfg,
-                            )
-                        };
-                        f
-                    }
-                };
-                // double-check so a racing worker's duplicate disk fetch
-                // (or identical recomputation) counts at most once. The
-                // write-behind put happens only in the winner branch and
-                // under this lock, *after* the memo insert: a racing
-                // worker that finds the store entry also finds the memo
-                // entry, so a cold run can never report a disk hit for
-                // work it did itself.
-                let mut cache = self.flow_cache.lock().unwrap();
-                if !cache.contains_key(&flow_key) {
-                    cache.insert(flow_key, f);
-                    if from_disk {
-                        self.counters.disk_hits.fetch_add(1, Ordering::Relaxed);
-                    } else if let Some(store) = &self.store {
-                        store.put_flow(flow_key, f); // write-behind
-                    }
+            // distinct workloads over the same design race on one flow:
+            // coalesce them onto a single SP&R run too
+            None if self.coalesce => {
+                match self
+                    .flow_flights
+                    .run(flow_key, || self.compute_flow(arch, bcfg, trial, flow_key))?
+                {
+                    Joined::Led(f) | Joined::Coalesced(f) => f,
                 }
-                f
             }
+            None => self.compute_flow(arch, bcfg, trial, flow_key)?,
         };
+        self.counters.oracle_runs.fetch_add(1, Ordering::Relaxed);
         let system = match wl {
             Some(w) => simulate_nondnn(arch, &fr.backend, self.enablement, w)?,
             None => simulate(arch, &fr.backend, self.enablement)?,
@@ -595,6 +711,66 @@ impl EvalService {
             }
         }
         Ok(ev)
+    }
+
+    /// Fetch-or-run the workload-independent SP&R flow for `flow_key`
+    /// (memo re-check → store → execute), inserting the winner into
+    /// the flow memo and write-behind store exactly once per key.
+    fn compute_flow(
+        &self,
+        arch: &ArchConfig,
+        bcfg: BackendConfig,
+        trial: u64,
+        flow_key: u64,
+    ) -> Result<FlowResult> {
+        // re-check the memo: a single-flight leader can arrive after a
+        // previous leader already published this flow
+        if let Some(f) = self.flow_cache.lock().unwrap().get(&flow_key) {
+            return Ok(*f);
+        }
+        let disk_flow = self.store.as_ref().and_then(|s| s.get_flow(flow_key));
+        let from_disk = disk_flow.is_some();
+        let f = match disk_flow {
+            Some(f) => f,
+            None => {
+                let agg = self.aggregates(arch)?;
+                self.counters.flow_runs.fetch_add(1, Ordering::Relaxed);
+                if trial == 0 {
+                    self.flow.run_on_aggregates(
+                        &agg,
+                        arch.id_hash(),
+                        arch.platform.macro_heavy(),
+                        bcfg,
+                    )
+                } else {
+                    let trial_seed = Rng::new(self.seed).fork(trial).next_u64();
+                    let flow = SpnrFlow::new(self.enablement, trial_seed);
+                    flow.run_on_aggregates(
+                        &agg,
+                        arch.id_hash(),
+                        arch.platform.macro_heavy(),
+                        bcfg,
+                    )
+                }
+            }
+        };
+        // double-check so a racing worker's duplicate disk fetch
+        // (or identical recomputation) counts at most once. The
+        // write-behind put happens only in the winner branch and
+        // under this lock, *after* the memo insert: a racing
+        // worker that finds the store entry also finds the memo
+        // entry, so a cold run can never report a disk hit for
+        // work it did itself.
+        let mut cache = self.flow_cache.lock().unwrap();
+        if !cache.contains_key(&flow_key) {
+            cache.insert(flow_key, f);
+            if from_disk {
+                self.counters.disk_hits.fetch_add(1, Ordering::Relaxed);
+            } else if let Some(store) = &self.store {
+                store.put_flow(flow_key, f); // write-behind
+            }
+        }
+        Ok(f)
     }
 
     /// Ground-truth a batch of points across the worker pool. Output
@@ -806,6 +982,57 @@ mod tests {
         assert_eq!(s.disk_hits, 1);
         assert!(s.shard_loads > 0);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn coalescing_is_invisible_to_results_and_counter_totals() {
+        // ISSUE 5: a coalesced service must report the same hit/miss
+        // totals and values as the uncoalesced one — on a serial
+        // workload the single-flight layer is pure pass-through
+        let arch = mid_arch(Platform::Vta);
+        let bcfg = BackendConfig::new(1.0, 0.4);
+        let plain = EvalService::new(Enablement::Gf12, 1);
+        let coal = EvalService::new(Enablement::Gf12, 1).with_coalescing(true);
+        assert!(coal.coalescing() && !plain.coalescing());
+        for svc in [&plain, &coal] {
+            let a = svc.evaluate(&arch, bcfg, None).unwrap();
+            let b = svc.evaluate(&arch, bcfg, None).unwrap();
+            assert_eq!(a.flow.backend, b.flow.backend);
+            assert_eq!(a.system, b.system);
+        }
+        let (p, c) = (plain.stats(), coal.stats());
+        assert_eq!(
+            plain.evaluate(&arch, bcfg, None).unwrap().flow.backend,
+            coal.evaluate(&arch, bcfg, None).unwrap().flow.backend
+        );
+        assert_eq!(p.oracle_hits, c.oracle_hits);
+        assert_eq!(p.oracle_misses, c.oracle_misses);
+        assert_eq!(p.oracle_runs, c.oracle_runs);
+        assert_eq!(c.oracle_runs, 1);
+        assert_eq!(c.flow_runs, 1);
+        assert_eq!(c.coalesced_hits, 0, "serial calls never wait on a flight");
+        assert_eq!(c.inflight_peak, 1);
+    }
+
+    #[test]
+    fn oracle_runs_counter_tracks_actual_work() {
+        // distinct points, serial service: runs == misses == points
+        let svc = EvalService::new(Enablement::Gf12, 3);
+        let arch = mid_arch(Platform::Axiline);
+        for f in [0.6, 0.9, 1.2] {
+            svc.evaluate(&arch, BackendConfig::new(f, 0.5), None).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.oracle_runs, 3);
+        assert_eq!(s.flow_runs, 3);
+        assert_eq!(s.oracle_misses, 3);
+        // a workload revisit reuses the flow: one more oracle run (the
+        // cheap simulator pass) but no new flow run
+        let wl = NonDnnWorkload::standard(NonDnnAlgo::Svm, 55);
+        svc.evaluate(&arch, BackendConfig::new(0.6, 0.5), Some(&wl)).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.oracle_runs, 4);
+        assert_eq!(s.flow_runs, 3, "the SP&R flow is shared across workloads");
     }
 
     #[test]

@@ -79,6 +79,7 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
     let mstore = opts.open_model_store()?;
     let mut service = EvalService::new(enablement, cfg.seed)
         .with_workers(crate::util::pool::default_workers())
+        .with_coalescing(opts.coalesce)
         .with_cache_store_opt(store.clone())
         .with_model_store_opt(mstore.clone());
     let g = datagen::generate_with(&service, &cfg)?;
@@ -108,13 +109,14 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
 
     let iters = if opts.quick { 120 } else { 400 };
     println!("[fig11] MOTPE x {iters} over (dimension, num_cycles, f_target, util)");
-    let outcome = driver.run_batched(
-        &problem,
-        iters,
-        3,
-        MotpeConfig { seed: opts.seed, ..Default::default() },
-        16,
-    )?;
+    // --coalesce: pipelined ask/tell (byte-identical trajectory; see
+    // DseDriver::run_pipelined)
+    let motpe_cfg = MotpeConfig { seed: opts.seed, ..Default::default() };
+    let outcome = if opts.coalesce {
+        driver.run_pipelined(&problem, iters, 3, motpe_cfg, 16, opts.inflight)?
+    } else {
+        driver.run_batched(&problem, iters, 3, motpe_cfg, 16)?
+    };
     println!("[fig11] eval service: {}", driver.stats());
     if let Some(store) = &store {
         store.flush()?;
@@ -149,6 +151,7 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
     let mstore = opts.open_model_store()?;
     let mut service = EvalService::new(enablement, cfg.seed)
         .with_workers(crate::util::pool::default_workers())
+        .with_coalescing(opts.coalesce)
         .with_cache_store_opt(store.clone())
         .with_model_store_opt(mstore.clone());
     let g = datagen::generate_with(&service, &cfg)?;
@@ -181,13 +184,12 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
 
     let iters = if opts.quick { 100 } else { 300 };
     println!("[fig12] MOTPE x {iters} over (f_target, util)");
-    let outcome = driver.run_batched(
-        &problem,
-        iters,
-        3,
-        MotpeConfig { seed: opts.seed, ..Default::default() },
-        16,
-    )?;
+    let motpe_cfg = MotpeConfig { seed: opts.seed, ..Default::default() };
+    let outcome = if opts.coalesce {
+        driver.run_pipelined(&problem, iters, 3, motpe_cfg, 16, opts.inflight)?
+    } else {
+        driver.run_batched(&problem, iters, 3, motpe_cfg, 16)?
+    };
     println!("[fig12] eval service: {}", driver.stats());
     if let Some(store) = &store {
         store.flush()?;

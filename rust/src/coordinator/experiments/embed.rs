@@ -27,6 +27,7 @@ pub fn fig8_tsne(opts: &ExpOptions) -> Result<()> {
     let mut rows = Vec::new();
     for platform in platforms {
         let mut cfg = DatagenConfig::small(platform, Enablement::Gf12);
+        cfg.coalesce = opts.coalesce;
         cfg.n_arch = 8;
         cfg.n_backend_train = 12;
         cfg.n_backend_test = 4;

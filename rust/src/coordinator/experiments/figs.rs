@@ -183,7 +183,10 @@ pub fn fig9_arch_samples(opts: &ExpOptions) -> Result<()> {
 pub fn fig10_extrapolation(opts: &ExpOptions) -> Result<()> {
     let platform = Platform::Axiline;
     let enablement = Enablement::Gf12;
-    let base = DatagenConfig::small(platform, enablement);
+    let base = DatagenConfig {
+        coalesce: opts.coalesce,
+        ..DatagenConfig::small(platform, enablement)
+    };
     let backends_train = datagen::sample_backend(platform, enablement, 30, opts.seed ^ 0xB1);
     let backends_test = datagen::sample_backend(platform, enablement, 10, opts.seed ^ 0xB2);
 

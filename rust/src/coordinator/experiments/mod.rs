@@ -31,6 +31,11 @@ pub struct ExpOptions {
     /// Store lifecycle policy (`--store-max-*` flags): applied to both
     /// stores opened through these options.
     pub store_policy: StorePolicy,
+    /// `--coalesce` (ISSUE 5): single-flight oracle dedup plus the
+    /// pipelined DSE ask/tell cadence. Byte-identical results.
+    pub coalesce: bool,
+    /// `--inflight N`: scoring-pipeline depth for the pipelined DSE.
+    pub inflight: usize,
 }
 
 impl Default for ExpOptions {
@@ -42,6 +47,8 @@ impl Default for ExpOptions {
             cache_dir: None,
             no_model_cache: false,
             store_policy: StorePolicy::default_auto(),
+            coalesce: false,
+            inflight: 4,
         }
     }
 }

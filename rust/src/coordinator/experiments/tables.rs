@@ -22,7 +22,10 @@ fn fmt(v: f64) -> String {
 /// power and system energy (muAPE / STD APE / MAPE) per model.
 pub fn tab3_sampling_study(opts: &ExpOptions) -> Result<()> {
     let platform = Platform::Axiline;
-    let base = DatagenConfig::small(platform, Enablement::Gf12);
+    let base = DatagenConfig {
+        coalesce: opts.coalesce,
+        ..DatagenConfig::small(platform, Enablement::Gf12)
+    };
     let trainer = Trainer::from_artifacts()?;
     let sizes: &[usize] = if opts.quick { &[16] } else { &[16, 24, 32] };
     let menu = if opts.quick {
@@ -171,7 +174,10 @@ fn unseen_table(
 
     let mut rows = Vec::new();
     for (platform, enablement) in designs {
-        let cfg = DatagenConfig::small(platform, enablement);
+        let cfg = DatagenConfig {
+            coalesce: opts.coalesce,
+            ..DatagenConfig::small(platform, enablement)
+        };
         let g = datagen::generate(&cfg)?;
         let ds = &g.dataset;
         let split = if unseen_backend {

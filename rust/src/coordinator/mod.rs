@@ -1,10 +1,13 @@
 //! L3 coordinator: dataset generation, model-training orchestration,
-//! the parallel memoizing evaluation service, the dynamic-batching
-//! prediction server, the MOTPE DSE driver, the per-table/figure
-//! experiment drivers (DESIGN.md §5), and the shared persistent-store
-//! subsystem both durable caches are built on (`store`).
+//! the parallel memoizing evaluation service, the single-flight /
+//! cross-client request-coalescing layer (`coalesce`), the
+//! dynamic-batching prediction server, the MOTPE DSE driver, the
+//! per-table/figure experiment drivers (DESIGN.md §5), and the shared
+//! persistent-store subsystem both durable caches are built on
+//! (`store`).
 
 pub mod cache_store;
+pub mod coalesce;
 pub mod datagen;
 pub mod dse_driver;
 pub mod eval_service;
@@ -15,6 +18,7 @@ pub mod store;
 pub mod trainer;
 
 pub use cache_store::{CacheStore, CacheStoreStats};
+pub use coalesce::{EvalRouter, RouterClient, SingleFlight};
 pub use datagen::{generate, generate_sweep, generate_with, DatagenConfig, GeneratedData};
 pub use dse_driver::{DseDriver, DseProblem, SurrogateBundle};
 pub use eval_service::{EvalService, EvalStats, Evaluation, SurrogatePoint};

@@ -157,13 +157,40 @@ fn serve(engine: Engine, rx: mpsc::Receiver<Msg>, stats: &mut ServerStats) {
     }
 }
 
+type PredictRequest = (Vec<Vec<f32>>, mpsc::Sender<Result<Vec<f32>>>);
+
+/// Reject requests whose feature rows don't match the manifest width
+/// (ISSUE 5 satellite): each offending request gets a per-request
+/// error reply and is dropped from the batch, so cohabiting requests
+/// in the same coalescing window are scored normally. Rows used to be
+/// silently zero-padded or truncated to fit, corrupting predictions.
+fn reject_bad_rows(requests: Vec<PredictRequest>, feat: usize) -> Vec<PredictRequest> {
+    let mut valid = Vec::with_capacity(requests.len());
+    for (rows, reply) in requests {
+        match rows.iter().find(|r| r.len() != feat) {
+            Some(bad) => {
+                let _ = reply.send(Err(anyhow::anyhow!(
+                    "feature row has {} values, manifest expects {feat}",
+                    bad.len()
+                )));
+            }
+            None => valid.push((rows, reply)),
+        }
+    }
+    valid
+}
+
 fn run_group(
     engine: &Engine,
     variant: &str,
     theta: &[f32],
-    requests: Vec<(Vec<Vec<f32>>, mpsc::Sender<Result<Vec<f32>>>)>,
+    requests: Vec<PredictRequest>,
     stats: &mut ServerStats,
 ) {
+    let requests = reject_bad_rows(requests, engine.manifest.feat);
+    if requests.is_empty() {
+        return;
+    }
     let mut run = || -> Result<Vec<Vec<f32>>> {
         let v = engine.manifest.variant(variant)?;
         let file = v.entrypoint("predict")?.file.clone();
@@ -178,9 +205,9 @@ fn run_group(
         for plan in batcher.plan(all_rows.len()) {
             let mut packed = vec![0.0f32; b * f];
             for (slot, &src) in plan.rows.iter().enumerate() {
+                // row widths are validated above: exact copy
                 let row = all_rows[src];
-                packed[slot * f..slot * f + row.len().min(f)]
-                    .copy_from_slice(&row[..row.len().min(f)]);
+                packed[slot * f..(slot + 1) * f].copy_from_slice(row);
             }
             let x = Tensor::from_vec(&[b, f], packed)?;
             let out = engine.run(&file, &[theta_t.clone(), x])?;
@@ -208,5 +235,45 @@ fn run_group(
                 let _ = reply.send(Err(anyhow::anyhow!("{msg}")));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bad_row_widths_error_per_request_without_poisoning_neighbors() {
+        // ISSUE 5 satellite regression: a mis-sized feature row used to
+        // be silently zero-padded/truncated into the packed batch; now
+        // the offending request errors and its neighbors score normally
+        let (tx_ok, rx_ok) = mpsc::channel();
+        let (tx_short, rx_short) = mpsc::channel();
+        let (tx_long, rx_long) = mpsc::channel();
+        let requests: Vec<PredictRequest> = vec![
+            (vec![vec![0.0; 4], vec![1.0; 4]], tx_ok),
+            (vec![vec![0.0; 4], vec![0.0; 3]], tx_short),
+            (vec![vec![0.0; 5]], tx_long),
+        ];
+        let valid = reject_bad_rows(requests, 4);
+        assert_eq!(valid.len(), 1, "only the well-formed request survives");
+        assert_eq!(valid[0].0.len(), 2);
+        assert!(
+            rx_ok.try_recv().is_err(),
+            "the surviving request must not be answered by validation"
+        );
+        let err = rx_short.recv().unwrap().expect_err("short row must error");
+        assert!(format!("{err:#}").contains("3 values"), "{err:#}");
+        let err = rx_long.recv().unwrap().expect_err("long row must error");
+        assert!(format!("{err:#}").contains("5 values"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_and_exact_requests_pass_validation() {
+        let (tx_a, _rx_a) = mpsc::channel();
+        let (tx_b, _rx_b) = mpsc::channel();
+        let valid =
+            reject_bad_rows(vec![(vec![], tx_a), (vec![vec![0.5; 7]], tx_b)], 7);
+        assert_eq!(valid.len(), 2, "zero-row and exact-width requests are fine");
     }
 }

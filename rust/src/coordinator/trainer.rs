@@ -20,9 +20,9 @@
 //! stored artifact that survives replays bit-identically, and a
 //! missing one falls back to the plain fit path below.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -156,12 +156,21 @@ pub struct Trainer {
     /// Optional persistent surrogate-model store: fit requests read
     /// through it, fresh fits are written behind (ISSUE 3).
     pub model_store: Option<Arc<ModelStore>>,
+    /// In-process fit memo (`--coalesce`, ISSUE 5): identical fit
+    /// requests — same family kind and content-hash key — are served
+    /// from memory after the first fit, sharing one tuning search
+    /// across metrics and repeated runs even without a persistent
+    /// store (the ROI classifier, for one, is metric-independent and
+    /// would otherwise refit once per metric). Artifacts replay
+    /// bit-identically, so results never change; a memo hit counts as
+    /// `cached` in [`ModelCacheStats`].
+    fit_memo: Option<Mutex<HashMap<(String, u64), crate::util::json::Json>>>,
 }
 
 impl Trainer {
     /// `engine` is optional: tree-only menus never touch PJRT.
     pub fn new(engine: Option<Rc<Engine>>) -> Trainer {
-        Trainer { engine, model_store: None }
+        Trainer { engine, model_store: None, fit_memo: None }
     }
 
     pub fn from_artifacts() -> Result<Trainer> {
@@ -187,16 +196,50 @@ impl Trainer {
         }
     }
 
-    /// Look up a stored artifact and decode it; a decode failure reads
-    /// as a miss (corrupt artifacts fall back to refitting).
+    /// Enable the in-process fit memo (ISSUE 5): repeated identical
+    /// fit requests within this trainer's lifetime are served from
+    /// memory — zero refits, zero tuning searches — instead of going
+    /// back to the store (or refitting when no store is attached).
+    /// Never changes results, only wall-clock.
+    pub fn with_fit_coalescing(mut self) -> Trainer {
+        self.fit_memo = Some(Mutex::new(HashMap::new()));
+        self
+    }
+
+    /// `with_fit_coalescing` for CLI plumbing (`--coalesce`).
+    pub fn with_fit_coalescing_opt(self, on: bool) -> Trainer {
+        if on {
+            self.with_fit_coalescing()
+        } else {
+            self
+        }
+    }
+
+    fn memo_put(&self, kind: &str, key: u64, payload: &crate::util::json::Json) {
+        if let Some(memo) = &self.fit_memo {
+            memo.lock().unwrap().insert((kind.to_string(), key), payload.clone());
+        }
+    }
+
+    /// Look up a stored artifact — fit memo first, then the persistent
+    /// store — and decode it; a decode failure reads as a miss
+    /// (corrupt artifacts fall back to refitting).
     fn load_model<T>(&self, kind: &str, key: u64, decode: impl Fn(&crate::util::json::Json) -> Option<T>) -> Option<T> {
-        self.model_store
-            .as_ref()
-            .and_then(|s| s.get(kind, key))
-            .and_then(|payload| decode(&payload))
+        if let Some(memo) = &self.fit_memo {
+            if let Some(payload) = memo.lock().unwrap().get(&(kind.to_string(), key)) {
+                if let Some(model) = decode(payload) {
+                    return Some(model);
+                }
+            }
+        }
+        let payload = self.model_store.as_ref().and_then(|s| s.get(kind, key))?;
+        let model = decode(&payload)?;
+        self.memo_put(kind, key, &payload);
+        Some(model)
     }
 
     fn store_model(&self, kind: &str, key: u64, payload: crate::util::json::Json) {
+        self.memo_put(kind, key, &payload);
         if let Some(store) = &self.model_store {
             store.put(kind, key, payload);
         }

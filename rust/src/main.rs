@@ -17,10 +17,11 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use fso::backend::Enablement;
+use fso::coordinator::dse_driver::SurrogateBundle;
 use fso::coordinator::experiments::{self, ExpOptions};
 use fso::coordinator::{
-    datagen, CacheStore, DatagenConfig, EvalService, ModelCacheStats, ModelStore,
-    PredictServer, StorePolicy, TrainOptions, Trainer,
+    datagen, CacheStore, DatagenConfig, EvalRouter, EvalService, ModelCacheStats,
+    ModelStore, PredictServer, StorePolicy, TrainOptions, Trainer,
 };
 use fso::data::Metric;
 use fso::generators::Platform;
@@ -64,17 +65,18 @@ fso — ML-based full-stack optimization framework for ML accelerators
 
 USAGE:
   fso datagen --platform <tabla|genesys|vta|axiline> [--enablement gf12|ng45|gf12,ng45]
-              [--archs N] [--out data.csv] [--seed N] [--cache-dir DIR]
+              [--archs N] [--out data.csv] [--seed N] [--cache-dir DIR] [--coalesce]
   fso train --platform <...> [--metric power|perf|area|energy|runtime]
             [--trees-only] [--seed N] [--cache-dir DIR] [--no-model-cache]
-            [--report-out FILE]
+            [--report-out FILE] [--coalesce]
   fso dse --target <axiline-svm|vta> [--quick] [--cache-dir DIR] [--no-model-cache]
+          [--coalesce] [--inflight N]
   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
                  [--quick] [--out-dir results] [--seed N] [--cache-dir DIR]
-                 [--no-model-cache]
+                 [--no-model-cache] [--coalesce] [--inflight N]
   fso store <compact|stats> --cache-dir DIR
             [--store-max-bytes N] [--store-max-records N] [--store-max-age N]
-  fso serve [--clients N] [--rows N]
+  fso serve [--clients N] [--rows N] [--tree-router]
 
 A comma-separated --enablement sweeps every listed enablement through
 one process (and one --cache-dir store); --out then writes one CSV per
@@ -96,6 +98,17 @@ use-age). `fso store compact`
 rewrites the shards dropping tombstones and dead lines — reads before
 and after a compact are identical, so warm starts are unaffected —
 and `fso store stats` prints both stores' counters.
+
+--coalesce turns on single-flight request coalescing (ISSUE 5):
+concurrent evaluations of the same content-hash key share one
+in-flight SP&R-oracle+simulator run (oracle runs == unique keys under
+any thread schedule), trainers memoize identical fit requests
+in-process, and the DSE overlaps MOTPE proposal generation with
+in-flight scoring through a batching router (--inflight bounds the
+scoring pipeline depth, default 4). Results are byte-identical to the
+serial path at the same seed — only wall-clock and CPU time change.
+`fso serve --tree-router` demos the cross-client router on the
+tree-family surrogate (no PJRT artifacts needed).
 "#;
 
 /// Lifecycle policy from the `--store-max-*` flags (defaults:
@@ -198,6 +211,7 @@ fn cmd_datagen(args: &Args) -> Result<()> {
         let mut cfg = DatagenConfig::small(platform, enablement);
         cfg.n_arch = args.usize_or("archs", cfg.n_arch)?;
         cfg.seed = args.u64_or("seed", cfg.seed)?;
+        cfg.coalesce = args.flag("coalesce");
         cfgs.push(cfg);
     }
     let t0 = std::time::Instant::now();
@@ -237,12 +251,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let platform = Platform::from_name(args.get_or("platform", "axiline"))?;
     let enablement = Enablement::from_name(args.get_or("enablement", "gf12"))?;
     let seed = args.u64_or("seed", 2023)?;
-    let cfg = DatagenConfig { seed, ..DatagenConfig::small(platform, enablement) };
+    let cfg = DatagenConfig {
+        seed,
+        coalesce: args.flag("coalesce"),
+        ..DatagenConfig::small(platform, enablement)
+    };
     println!("generating dataset...");
     let g = match cache_store(args)? {
         Some(store) => {
             let service = EvalService::new(cfg.enablement, cfg.seed)
                 .with_workers(cfg.workers)
+                .with_coalescing(cfg.coalesce)
                 .with_cache_store(Arc::clone(&store));
             let g = datagen::generate_with(&service, &cfg)?;
             store.flush()?;
@@ -257,7 +276,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         Trainer::new(Some(Rc::new(Engine::load(&artifacts_dir(args))?)))
     }
-    .with_model_store_opt(mstore.clone());
+    .with_model_store_opt(mstore.clone())
+    .with_fit_coalescing_opt(args.flag("coalesce"));
     let mut opts = TrainOptions { seed, ..Default::default() };
     if args.flag("trees-only") {
         opts.menu = fso::coordinator::ModelMenu::trees_only();
@@ -321,6 +341,8 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
         cache_dir: args.path("cache-dir"),
         no_model_cache: args.flag("no-model-cache"),
         store_policy: store_policy(args)?,
+        coalesce: args.flag("coalesce"),
+        inflight: args.usize_or("inflight", 4)?,
     })
 }
 
@@ -337,6 +359,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("tree-router") {
+        return cmd_serve_tree_router(args);
+    }
     // Demo: boot the dynamic-batching predict server, fan requests in
     // from several client threads, report batching efficiency.
     let dir = artifacts_dir(args);
@@ -382,5 +407,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.mean_occupancy,
         engine.manifest.batch
     );
+    Ok(())
+}
+
+/// `fso serve --tree-router`: demo the generic `EvalRouter` (ISSUE 5)
+/// on the tree-family surrogate — no PJRT artifacts needed. Client
+/// threads submit single feature rows; the router coalesces whatever
+/// cohabits its drain window into metric-major mega-batches.
+fn cmd_serve_tree_router(args: &Args) -> Result<()> {
+    let mut cfg = DatagenConfig::small(Platform::Axiline, Enablement::Gf12);
+    cfg.n_arch = 6;
+    cfg.n_backend_train = 8;
+    cfg.n_backend_test = 2;
+    println!("fitting a small tree surrogate for the router demo...");
+    let g = datagen::generate(&cfg)?;
+    let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7)?;
+    let service = Arc::new(
+        EvalService::new(Enablement::Gf12, cfg.seed).with_surrogate(bundle),
+    );
+    let router = EvalRouter::start(Arc::clone(&service));
+    let feats: Vec<Vec<f64>> =
+        g.dataset.rows.iter().map(|r| r.features_vec()).collect();
+
+    let n_clients = args.usize_or("clients", 8)?;
+    let rows_per_client = args.usize_or("rows", 100)?;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let client = router.client();
+            let feats = &feats;
+            scope.spawn(move || {
+                for k in 0..rows_per_client {
+                    let row = feats[(c * rows_per_client + k) % feats.len()].clone();
+                    let out = client.predict(vec![row]).expect("router predict");
+                    assert_eq!(out.len(), 1);
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let s = service.stats();
+    println!(
+        "routed {} rows across {} requests in {:.3}s ({:.0} rows/s)",
+        s.router_rows,
+        s.router_requests,
+        dt,
+        s.router_rows as f64 / dt.max(1e-9)
+    );
+    println!(
+        "mega-batches issued: {} (mean occupancy {:.1})",
+        s.router_batches,
+        s.router_occupancy()
+    );
+    drop(router);
     Ok(())
 }

@@ -7,7 +7,9 @@ use std::sync::Mutex;
 
 /// Extract a human-readable message from a panic payload (`panic!`
 /// carries `&str` or `String`; anything else gets a placeholder).
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+/// Shared with `coordinator::coalesce`, which propagates a
+/// single-flight leader's panic to its waiters.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

@@ -1,0 +1,378 @@
+//! Deterministic coalescing tests (ISSUE 5): the barrier hooks in
+//! `coordinator::coalesce::hook` (mirroring `store::fault`) force
+//! exact interleavings — "N waiters queued before the leader
+//! finishes", "N requests queued before the router drains" — without
+//! a single sleep, so these assertions hold on any machine and any
+//! scheduler.
+//!
+//! The hooks are process-global one-shots, so every test here
+//! serializes on one mutex (a test that creates flights or routers
+//! while another test's barrier is armed would consume it).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use fso::backend::{BackendConfig, Enablement};
+use fso::coordinator::coalesce::{hook, Joined, SingleFlight};
+use fso::coordinator::dse_driver::{axiline_svm_problem, DseDriver, SurrogateBundle};
+use fso::coordinator::{
+    datagen, CacheStore, DatagenConfig, EvalRouter, EvalService, ModelMenu,
+    SurrogatePoint, TrainOptions, Trainer,
+};
+use fso::data::Metric;
+use fso::dse::MotpeConfig;
+use fso::generators::{ArchConfig, Platform};
+use fso::models::SearchBudget;
+
+/// Serializes every test in this binary (see module docs).
+static HOOKS: Mutex<()> = Mutex::new(());
+
+fn lock_hooks() -> std::sync::MutexGuard<'static, ()> {
+    let guard = HOOKS.lock().unwrap_or_else(|p| p.into_inner());
+    // a previous test that failed between arm and disarm must not
+    // leak its barrier into this one
+    hook::disarm();
+    guard
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fso-coalesce-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn mid_arch(p: Platform) -> ArchConfig {
+    ArchConfig::new(
+        p,
+        p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+    )
+}
+
+fn small_cfg() -> DatagenConfig {
+    DatagenConfig {
+        n_arch: 6,
+        n_backend_train: 10,
+        n_backend_test: 4,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    }
+}
+
+#[test]
+fn n_waiters_queued_before_leader_finishes_share_one_computation() {
+    let _g = lock_hooks();
+    let sf: SingleFlight<u64> = SingleFlight::new();
+    let runs = AtomicUsize::new(0);
+    const WAITERS: usize = 4;
+    hook::arm_leader_barrier(WAITERS);
+    let outcomes: Vec<bool> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..WAITERS + 1)
+            .map(|_| {
+                let sf = &sf;
+                let runs = &runs;
+                scope.spawn(move || {
+                    match sf
+                        .run(0xC0A1, || {
+                            runs.fetch_add(1, Ordering::SeqCst);
+                            Ok(42u64)
+                        })
+                        .unwrap()
+                    {
+                        Joined::Led(v) => {
+                            assert_eq!(v, 42);
+                            true
+                        }
+                        Joined::Coalesced(v) => {
+                            assert_eq!(v, 42);
+                            false
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    hook::disarm();
+    assert_eq!(runs.load(Ordering::SeqCst), 1, "exactly one caller computes");
+    assert_eq!(outcomes.iter().filter(|&&led| led).count(), 1);
+    assert_eq!(outcomes.iter().filter(|&&led| !led).count(), WAITERS);
+    assert_eq!(sf.inflight_peak(), 1, "one key, one flight in the air");
+}
+
+#[test]
+fn leader_panic_propagates_to_every_waiter_and_table_stays_clean() {
+    let _g = lock_hooks();
+    // silence the default hook while the expected panics fire
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let sf: SingleFlight<u64> = SingleFlight::new();
+    const WAITERS: usize = 3;
+    hook::arm_leader_barrier(WAITERS);
+    let outcomes: Vec<Result<Result<Joined<u64>, String>, String>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..WAITERS + 1)
+                .map(|_| {
+                    let sf = &sf;
+                    scope.spawn(move || {
+                        sf.run(7, || -> anyhow::Result<u64> {
+                            panic!("oracle exploded mid-flight")
+                        })
+                        .map_err(|e| format!("{e:#}"))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().map_err(|payload| {
+                        payload
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| {
+                                payload.downcast_ref::<&str>().map(|s| s.to_string())
+                            })
+                            .unwrap_or_default()
+                    })
+                })
+                .collect()
+        });
+    std::panic::set_hook(prev);
+    hook::disarm();
+    assert_eq!(outcomes.len(), WAITERS + 1);
+    for o in &outcomes {
+        let msg = o.as_ref().expect_err("every caller must observe the panic");
+        assert!(
+            msg.contains("oracle exploded mid-flight"),
+            "panic payload lost: {msg:?}"
+        );
+    }
+    // the key is released: a later call recomputes instead of hanging
+    let v = match sf.run(7, || Ok(9u64)).unwrap() {
+        Joined::Led(v) | Joined::Coalesced(v) => v,
+    };
+    assert_eq!(v, 9);
+}
+
+#[test]
+fn coalesced_evaluate_runs_oracle_once_and_writes_store_once() {
+    let _g = lock_hooks();
+    let dir = tmp_dir("evaluate");
+    let store = Arc::new(CacheStore::open(&dir).unwrap());
+    let svc = EvalService::new(Enablement::Gf12, 7)
+        .with_coalescing(true)
+        .with_cache_store(Arc::clone(&store));
+    let arch = mid_arch(Platform::Axiline);
+    let bcfg = BackendConfig::new(0.8, 0.5);
+    const WAITERS: usize = 3;
+    hook::arm_leader_barrier(WAITERS);
+    let evals: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..WAITERS + 1)
+            .map(|_| {
+                let svc = &svc;
+                let arch = &arch;
+                scope.spawn(move || svc.evaluate(arch, bcfg, None).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    hook::disarm();
+    // every waiter received the leader's bit-identical result
+    let reference = EvalService::new(Enablement::Gf12, 7)
+        .evaluate(&arch, bcfg, None)
+        .unwrap();
+    for e in &evals {
+        assert_eq!(e.flow.backend, reference.flow.backend);
+        assert_eq!(e.flow.synth, reference.flow.synth);
+        assert_eq!(e.system, reference.system);
+    }
+    let s = svc.stats();
+    assert_eq!(s.oracle_runs, 1, "single-flight must run the oracle once: {s}");
+    assert_eq!(s.flow_runs, 1, "{s}");
+    assert_eq!(s.oracle_misses, 1, "{s}");
+    assert_eq!(s.coalesced_hits, WAITERS, "{s}");
+    assert_eq!(s.oracle_hits, WAITERS, "waits count as hits: {s}");
+    assert_eq!(s.inflight_peak, 1, "{s}");
+    // the store was fed exactly once per key: one flow + one eval record
+    assert_eq!(store.stats().pending, 2, "store written once per key");
+    assert!(svc.flush_cache().unwrap() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn router_coalesces_cross_client_single_rows_into_one_mega_batch() {
+    let _g = lock_hooks();
+    let cfg = DatagenConfig {
+        n_arch: 4,
+        n_backend_train: 6,
+        n_backend_test: 2,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    };
+    let g = datagen::generate(&cfg).unwrap();
+    let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap();
+    let service =
+        Arc::new(EvalService::new(Enablement::Gf12, cfg.seed).with_surrogate(bundle));
+    let feats: Vec<Vec<f64>> =
+        g.dataset.rows.iter().take(6).map(|r| r.features_vec()).collect();
+    let reference = service.predict_batch(&feats).unwrap();
+
+    let router = EvalRouter::start(Arc::clone(&service));
+    const CLIENTS: usize = 6;
+    hook::arm_router_barrier(CLIENTS);
+    let outs: Vec<SurrogatePoint> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let client = router.client();
+                let row = feats[c].clone();
+                scope.spawn(move || client.predict(vec![row]).unwrap().pop().unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    hook::disarm();
+    for (c, sp) in outs.iter().enumerate() {
+        assert_eq!(*sp, reference[c], "row {c}: routed batching changed a value");
+    }
+    let s = service.stats();
+    assert_eq!(s.router_requests, CLIENTS, "{s}");
+    assert_eq!(s.router_rows, CLIENTS, "{s}");
+    assert_eq!(
+        s.router_batches, 1,
+        "barrier forced every client into one mega-batch: {s}"
+    );
+    assert!((s.router_occupancy() - CLIENTS as f64).abs() < 1e-9);
+    drop(router);
+}
+
+#[test]
+fn router_shutdown_replies_to_inflight_requests_instead_of_hanging() {
+    let _g = lock_hooks();
+    let cfg = DatagenConfig {
+        n_arch: 4,
+        n_backend_train: 6,
+        n_backend_test: 2,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    };
+    let g = datagen::generate(&cfg).unwrap();
+    let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap();
+    let service =
+        Arc::new(EvalService::new(Enablement::Gf12, cfg.seed).with_surrogate(bundle));
+    let feats: Vec<Vec<f64>> =
+        g.dataset.rows.iter().take(2).map(|r| r.features_vec()).collect();
+
+    // the router's drain is held open waiting for 3 requests, but only
+    // 2 ever arrive before the shutdown: both callers must receive a
+    // reply (a result or a disconnect error), never hang. If anything
+    // hangs, the scope join below never returns and the test times out.
+    let router = EvalRouter::start(Arc::clone(&service));
+    hook::arm_router_barrier(3);
+    let (r1, r2) = std::thread::scope(|scope| {
+        let h1 = {
+            let client = router.client();
+            let row = feats[0].clone();
+            scope.spawn(move || client.predict(vec![row]))
+        };
+        let h2 = {
+            let client = router.client();
+            let row = feats[1].clone();
+            scope.spawn(move || client.predict(vec![row]))
+        };
+        drop(router); // sends Shutdown and joins the serve thread
+        (h1.join().unwrap(), h2.join().unwrap())
+    });
+    hook::disarm();
+    for r in [r1, r2] {
+        match r {
+            Ok(points) => assert_eq!(points.len(), 1),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("router"), "unexpected error: {msg}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_dse_matches_strict_alternation_byte_for_byte() {
+    let _g = lock_hooks();
+    let g = datagen::generate(&small_cfg()).unwrap();
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let problem = axiline_svm_problem(
+        g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max) * 2.0,
+        runtimes[runtimes.len() * 3 / 4],
+    );
+    let mk_driver = || {
+        let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 1).unwrap();
+        DseDriver {
+            service: EvalService::new(Enablement::Gf12, 2023)
+                .with_surrogate(bundle)
+                .with_workers(2),
+        }
+    };
+    let motpe_cfg = || MotpeConfig { n_startup: 16, seed: 5, ..Default::default() };
+    let strict = mk_driver().run_batched(&problem, 60, 2, motpe_cfg(), 12).unwrap();
+    assert!(!strict.best.is_empty(), "Eq. 3 must select winners to compare");
+    for inflight in [1usize, 3] {
+        let piped = mk_driver()
+            .run_pipelined(&problem, 60, 2, motpe_cfg(), 12, inflight)
+            .unwrap();
+        assert_eq!(strict.points, piped.points, "trajectory diverged (x{inflight})");
+        assert_eq!(strict.best, piped.best, "Eq. 3 winners diverged (x{inflight})");
+        assert_eq!(strict.ground_truth_errors, piped.ground_truth_errors);
+        assert_eq!(
+            strict.pareto_front(),
+            piped.pareto_front(),
+            "Pareto front diverged (x{inflight})"
+        );
+    }
+}
+
+#[test]
+fn trainer_fit_memo_shares_identical_fits_without_changing_reports() {
+    let _g = lock_hooks();
+    let g = datagen::generate(&DatagenConfig {
+        n_arch: 8,
+        n_backend_train: 12,
+        n_backend_test: 4,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    })
+    .unwrap();
+    let opts = TrainOptions {
+        menu: ModelMenu::trees_only(),
+        search: SearchBudget { stage1: 3, stage2: 2, seed: 1 },
+        seed: 7,
+        ..Default::default()
+    };
+
+    // plain trainer: the metric-independent ROI classifier refits for
+    // every metric; the memoized trainer fits it once and replays it
+    let plain = Trainer::new(None);
+    let memo = Trainer::new(None).with_fit_coalescing();
+    let p_power = plain.run(&g.dataset, &g.backend_split, Metric::Power, &opts).unwrap();
+    let p_area = plain.run(&g.dataset, &g.backend_split, Metric::Area, &opts).unwrap();
+    let m_power = memo.run(&g.dataset, &g.backend_split, Metric::Power, &opts).unwrap();
+    let m_area = memo.run(&g.dataset, &g.backend_split, Metric::Area, &opts).unwrap();
+
+    assert_eq!(p_power.model_cache.cached, 0, "no store, no memo: all fresh");
+    assert_eq!(p_area.model_cache.cached, 0);
+    assert_eq!(m_power.model_cache.cached, 0, "first run fits everything");
+    assert!(
+        m_area.model_cache.cached >= 1,
+        "second metric must replay the memoized ROI classifier: {:?}",
+        m_area.model_cache
+    );
+    assert!(m_area.model_cache.refits < p_area.model_cache.refits);
+
+    // the memo never changes a number
+    assert_eq!(p_power.roi, m_power.roi);
+    assert_eq!(p_power.models, m_power.models);
+    assert_eq!(p_area.roi, m_area.roi);
+    assert_eq!(p_area.models, m_area.models);
+
+    // a full rerun of an already-seen metric is 100% memoized
+    let rerun = memo.run(&g.dataset, &g.backend_split, Metric::Power, &opts).unwrap();
+    assert_eq!(rerun.model_cache.refits, 0, "{:?}", rerun.model_cache);
+    assert_eq!(rerun.model_cache.tuning_evals, 0);
+    assert_eq!(rerun.models, m_power.models);
+}

@@ -1,0 +1,194 @@
+//! Coalescing stress tests (ISSUE 5 satellite): a duplicate-heavy key
+//! mix hammered by threads in-process, plus a spawned `fso datagen
+//! --coalesce` process pair sharing one `--cache-dir` — asserting the
+//! schedule-independent counter invariants (`oracle_runs == unique
+//! keys`, hits + misses == total calls) and byte-identical outputs
+//! vs. serial reference runs. No hooks here: these runs take whatever
+//! interleavings the scheduler produces, and the invariants must hold
+//! on all of them.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+use fso::backend::{BackendConfig, Enablement};
+use fso::coordinator::{datagen, CacheStore, EvalService};
+use fso::generators::{ArchConfig, Platform};
+use fso::sampling::SamplerKind;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fso-coalesce-stress-{}-{tag}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn thread_hammer_on_duplicate_heavy_keys_holds_counter_invariants() {
+    // 6 unique (arch, backend) points, hammered by 8 threads x 30
+    // calls in round-robin (every thread touches every key, so the
+    // duplicate pressure is maximal and coverage is deterministic)
+    let archs = datagen::sample_archs(Platform::Axiline, 3, SamplerKind::Lhs, 11);
+    let uniques: Vec<(ArchConfig, BackendConfig)> = archs
+        .iter()
+        .flat_map(|a| {
+            [BackendConfig::new(0.7, 0.5), BackendConfig::new(1.1, 0.45)]
+                .into_iter()
+                .map(move |b| (a.clone(), b))
+        })
+        .collect();
+    assert!(uniques.len() >= 4, "need a duplicate-heavy mix, got {}", uniques.len());
+
+    let dir = tmp_dir("hammer");
+    let store = std::sync::Arc::new(CacheStore::open(&dir).unwrap());
+    let svc = EvalService::new(Enablement::Gf12, 7)
+        .with_coalescing(true)
+        .with_cache_store(std::sync::Arc::clone(&store));
+    const THREADS: usize = 8;
+    const CALLS: usize = 30;
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let svc = &svc;
+            let uniques = &uniques;
+            scope.spawn(move || {
+                for k in 0..CALLS {
+                    let (arch, bcfg) = &uniques[(t + k) % uniques.len()];
+                    svc.evaluate(arch, *bcfg, None).unwrap();
+                }
+            });
+        }
+    });
+
+    let s = svc.stats();
+    let total = THREADS * CALLS;
+    assert_eq!(
+        s.oracle_runs,
+        uniques.len(),
+        "single-flight must run the oracle exactly once per unique key: {s}"
+    );
+    assert_eq!(s.flow_runs, uniques.len(), "{s}");
+    assert_eq!(s.oracle_misses, uniques.len(), "{s}");
+    assert_eq!(s.oracle_hits, total - uniques.len(), "{s}");
+    assert_eq!(s.oracle_hits + s.oracle_misses, total, "{s}");
+    assert!(s.coalesced_hits <= s.oracle_hits, "{s}");
+    assert!(s.inflight_peak >= 1 && s.inflight_peak <= uniques.len(), "{s}");
+
+    // the store saw exactly one flow + one eval record per unique key
+    assert_eq!(store.stats().pending, 2 * uniques.len(), "store written once per key");
+    store.flush().unwrap();
+
+    // byte-identical to a serial, uncoalesced reference
+    let reference = EvalService::new(Enablement::Gf12, 7);
+    for (arch, bcfg) in &uniques {
+        let want = reference.evaluate(arch, *bcfg, None).unwrap();
+        let got = svc.evaluate(arch, *bcfg, None).unwrap(); // memo replay
+        assert_eq!(got.flow.backend, want.flow.backend);
+        assert_eq!(got.flow.synth, want.flow.synth);
+        assert_eq!(got.system, want.system);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+fn datagen_cmd(
+    enablement: &str,
+    cache_dir: Option<&PathBuf>,
+    coalesce: bool,
+    out: Option<&PathBuf>,
+) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_fso"));
+    cmd.args([
+        "datagen",
+        "--platform",
+        "axiline",
+        "--archs",
+        "2",
+        "--seed",
+        "7",
+        "--enablement",
+        enablement,
+    ]);
+    if coalesce {
+        cmd.arg("--coalesce");
+    }
+    if let Some(dir) = cache_dir {
+        cmd.arg("--cache-dir").arg(dir);
+    }
+    if let Some(path) = out {
+        cmd.arg("--out").arg(path);
+    }
+    cmd
+}
+
+fn live_entries(dir: &PathBuf) -> usize {
+    let store = CacheStore::open(dir).unwrap();
+    store.load_all();
+    store.stats().entries
+}
+
+#[test]
+fn spawned_coalesced_datagen_pair_merges_and_matches_serial_csv() {
+    // serial reference: no cache, no coalescing
+    let serial_csv = tmp_dir("serial-csv").with_extension("csv");
+    let out = datagen_cmd("gf12", None, false, Some(&serial_csv))
+        .output()
+        .expect("spawn serial fso datagen");
+    assert!(out.status.success(), "serial datagen failed: {out:?}");
+
+    // the race: two coalesced processes, one cache dir
+    let shared = tmp_dir("shared");
+    let coal_csv = tmp_dir("coal-csv").with_extension("csv");
+    let mut a = datagen_cmd("gf12", Some(&shared), true, Some(&coal_csv))
+        .spawn()
+        .expect("spawn coalesced gf12");
+    let mut b = datagen_cmd("ng45", Some(&shared), true, None)
+        .spawn()
+        .expect("spawn coalesced ng45");
+    let sa = a.wait().expect("wait gf12");
+    let sb = b.wait().expect("wait ng45");
+    assert!(sa.success() && sb.success(), "coalesced datagen pair failed");
+
+    // byte-identical CSV vs. the serial reference run
+    assert_eq!(
+        fs::read(&serial_csv).unwrap(),
+        fs::read(&coal_csv).unwrap(),
+        "coalescing changed the generated rows"
+    );
+
+    // union survived the concurrent flushes: both enablements' records
+    // live (their key sets are disjoint) and the lock was released
+    let solo = tmp_dir("solo");
+    let out = datagen_cmd("gf12", Some(&solo), true, None)
+        .output()
+        .expect("spawn solo gf12");
+    assert!(out.status.success(), "solo gf12 failed: {out:?}");
+    let solo_gf = live_entries(&solo);
+    assert!(solo_gf > 0);
+    assert!(
+        live_entries(&shared) > solo_gf,
+        "shared store must hold both enablements' records"
+    );
+    assert!(
+        !shared.join(".store.lock").exists(),
+        "both processes must release the directory lock"
+    );
+
+    // a coalesced warm rerun replays entirely from disk
+    let out = datagen_cmd("gf12", Some(&shared), true, None)
+        .output()
+        .expect("spawn warm coalesced datagen");
+    assert!(out.status.success(), "warm coalesced datagen failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("100.0% cached"),
+        "warm coalesced rerun must be fully cached:\n{stdout}"
+    );
+    assert!(
+        !stdout.contains("persistent 0 disk hits"),
+        "warm coalesced rerun must hit the persistent store:\n{stdout}"
+    );
+
+    let _ = fs::remove_file(&serial_csv);
+    let _ = fs::remove_file(&coal_csv);
+    let _ = fs::remove_dir_all(&shared);
+    let _ = fs::remove_dir_all(&solo);
+}

@@ -318,6 +318,70 @@ fn prop_store_lifecycle_preserves_liveness_and_byte_determinism() {
 }
 
 #[test]
+fn prop_single_flight_coalescing_is_invisible_and_runs_each_key_once() {
+    // ISSUE 5: arbitrary interleavings of duplicate/unique keys across
+    // arbitrary worker counts => the coalesced service (a) returns
+    // bit-identical results to a serial uncoalesced reference, (b)
+    // runs the oracle exactly once per unique key, and (c) feeds the
+    // persistent store exactly once per key. The counters are
+    // schedule-independent by design, so no barriers are needed —
+    // whatever interleaving the scheduler produces must satisfy them.
+    use fso::coordinator::{CacheStore, EvalService};
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    check(10, 0xC0A7, |rng| {
+        let p = Platform::Axiline;
+        let archs: Vec<ArchConfig> = (0..2).map(|_| random_arch(rng, p)).collect();
+        let backends: Vec<BackendConfig> = (0..3)
+            .map(|_| BackendConfig::new(rng.range(0.4, 1.4), rng.range(0.35, 0.75)))
+            .collect();
+        let n_jobs = 6 + rng.below(18);
+        let jobs: Vec<(ArchConfig, BackendConfig)> = (0..n_jobs)
+            .map(|_| (archs[rng.below(2)].clone(), backends[rng.below(3)]))
+            .collect();
+        let workers = 1 + rng.below(7);
+        let seed = rng.next_u64();
+
+        let dir = std::env::temp_dir().join(format!(
+            "fso-prop-coalesce-{}-{:016x}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        let coal = EvalService::new(Enablement::Gf12, seed)
+            .with_workers(workers)
+            .with_coalescing(true)
+            .with_cache_store(Arc::clone(&store));
+        let got = coal.evaluate_many(&jobs, None).unwrap();
+
+        let reference = EvalService::new(Enablement::Gf12, seed);
+        let want = reference.evaluate_many(&jobs, None).unwrap();
+        for ((g, w), (arch, _)) in got.iter().zip(&want).zip(&jobs) {
+            assert_eq!(g.flow.backend, w.flow.backend, "{}", arch.id_hash());
+            assert_eq!(g.flow.synth, w.flow.synth);
+            assert_eq!(g.system, w.system);
+        }
+
+        let unique: BTreeSet<(u64, u64, u64)> = jobs
+            .iter()
+            .map(|(a, b)| (a.id_hash(), b.f_target_ghz.to_bits(), b.util.to_bits()))
+            .collect();
+        let s = coal.stats();
+        assert_eq!(s.oracle_runs, unique.len(), "w={workers}: {s}");
+        assert_eq!(s.flow_runs, unique.len(), "w={workers}: {s}");
+        assert_eq!(s.oracle_misses, unique.len(), "w={workers}: {s}");
+        assert_eq!(s.oracle_hits, jobs.len() - unique.len(), "w={workers}: {s}");
+        assert!(s.coalesced_hits <= s.oracle_hits, "{s}");
+        // store fed exactly once per key: one flow + one eval record
+        assert_eq!(store.stats().pending, 2 * unique.len(), "{s}");
+        store.flush().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
 fn prop_simulator_metrics_scale_with_clock() {
     check(60, 0x51E, |rng| {
         let p = random_platform(rng);
