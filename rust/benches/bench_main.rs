@@ -534,6 +534,20 @@ fn main() {
         println!("(artifacts not built: skipping PJRT benches)");
     }
 
+    // ---- flat SoA tree inference (ISSUE 6): the gated perf suite -----
+    // same suite the CI perf gate runs via `fso bench run/compare`;
+    // emits BENCH_flat_tree.json as the trajectory point and asserts
+    // the mega-batch flat-vs-recursive speedup invariant.
+    if b.filter.as_ref().map_or(true, |f| "flat_tree".contains(f.as_str())) {
+        println!("{}", "-".repeat(70));
+        let report = fso::bench::run_suite("flat_tree", b.quick).unwrap();
+        print!("{}", report.render());
+        fso::bench::check_invariants(&report).unwrap();
+        let out = std::path::Path::new("BENCH_flat_tree.json");
+        report.save(out).unwrap();
+        println!("    wrote BENCH_flat_tree.json (gate: fso bench compare)");
+    }
+
     println!("{}", "-".repeat(70));
     println!("done");
 }

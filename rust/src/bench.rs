@@ -1,0 +1,539 @@
+//! Named benchmark suites with saved baselines and a machine-checked
+//! perf gate (criterion is unavailable offline).
+//!
+//! The ad-hoc `cargo bench` harness prints medians but nothing ever
+//! *checks* them, so a perf claim in a PR is asserted, not enforced.
+//! This module turns the hot-path rows into named suites that emit
+//! `BENCH_<suite>.json` trajectory points, and gives the CLI a
+//! `fso bench compare` subcommand that diffs a fresh run (or a saved
+//! candidate file) against a prior trajectory point and fails past a
+//! noise threshold — which is what the CI `perf-gate` job runs.
+//!
+//! Two kinds of measurements live in a [`SuiteReport`]:
+//!
+//! * **rows** — absolute medians (ms) with MAD error bars. Only
+//!   comparable on the same machine; the CI gate runs the suite twice
+//!   (baseline + candidate) in one job so the comparison is honest.
+//! * **derived** — dimensionless ratios (speedups, occupancies).
+//!   Machine-portable by construction; by convention **higher is
+//!   better**, so a candidate regresses when it drops below
+//!   `baseline * (1 - threshold)`. The committed seed baselines under
+//!   `rust/benches/baselines/` are compared `--derived-only`.
+//!
+//! Adding a gated suite: write a `fn my_suite(quick: bool) ->
+//! Result<SuiteReport>` next to [`flat_tree`], register its name in
+//! [`SUITES`] and [`run_suite`], give it self-invariants in
+//! [`check_invariants`] if it makes a claim every run must uphold,
+//! commit a generated `BENCH_<suite>.json` as its seed baseline, and
+//! add it to the CI `perf-gate` matrix.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Registered suite names (`fso bench list`).
+pub const SUITES: &[&str] = &["flat_tree"];
+
+/// One timed row: the median of `reps` timed runs and the median
+/// absolute deviation around it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    pub name: String,
+    pub median_ms: f64,
+    pub mad_ms: f64,
+    pub reps: usize,
+}
+
+/// One suite run — the unit `BENCH_<suite>.json` persists and
+/// [`compare`] diffs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteReport {
+    pub suite: String,
+    pub quick: bool,
+    pub rows: Vec<BenchRow>,
+    /// Machine-portable ratios; higher is better by convention.
+    pub derived: BTreeMap<String, f64>,
+}
+
+impl SuiteReport {
+    pub fn row(&self, name: &str) -> Option<&BenchRow> {
+        self.rows.iter().find(|r| r.name == name)
+    }
+
+    /// Human-readable table (mirrors the `cargo bench` harness format).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "suite {} ({} mode)\n",
+            self.suite,
+            if self.quick { "quick" } else { "full" }
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:<46} {:>10.3} ms  (+-{:.3})\n",
+                r.name, r.median_ms, r.mad_ms
+            ));
+        }
+        for (k, v) in &self.derived {
+            s.push_str(&format!("derived/{k:<38} {v:>10.3}\n"));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", 1usize.into()),
+            ("suite", Json::Str(self.suite.clone())),
+            ("quick", Json::Bool(self.quick)),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("median_ms", r.median_ms.into()),
+                                ("mad_ms", r.mad_ms.into()),
+                                ("reps", r.reps.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "derived",
+                Json::Obj(
+                    self.derived
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Strict inverse of `to_json`: `None` on any structural defect,
+    /// so a corrupt baseline file is an explicit error, not a silent
+    /// empty comparison.
+    pub fn from_json(j: &Json) -> Option<SuiteReport> {
+        let suite = j.get("suite").as_str()?.to_string();
+        let quick = j.get("quick").as_bool().unwrap_or(false);
+        let mut rows = Vec::new();
+        for r in j.get("rows").as_arr()? {
+            rows.push(BenchRow {
+                name: r.get("name").as_str()?.to_string(),
+                median_ms: r.get("median_ms").as_f64()?,
+                mad_ms: r.get("mad_ms").as_f64().unwrap_or(0.0),
+                reps: r.get("reps").as_usize().unwrap_or(0),
+            });
+        }
+        let mut derived = BTreeMap::new();
+        for (k, v) in j.get("derived").as_obj()? {
+            derived.insert(k.clone(), v.as_f64()?);
+        }
+        Some(SuiteReport { suite, quick, rows, derived })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<SuiteReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(text.trim())
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        SuiteReport::from_json(&j)
+            .with_context(|| format!("{} is not a bench report", path.display()))
+    }
+}
+
+/// Default trajectory-point filename for a suite.
+pub fn default_out(suite: &str) -> String {
+    format!("BENCH_{suite}.json")
+}
+
+/// Warmup + repetition timer (median/MAD), shared with the `cargo
+/// bench` harness conventions: quick = (1 warmup, 5 reps), full =
+/// (3, 15).
+struct Timer {
+    warmup: usize,
+    reps: usize,
+}
+
+impl Timer {
+    fn new(quick: bool) -> Timer {
+        let (warmup, reps) = if quick { (1, 5) } else { (3, 15) };
+        Timer { warmup, reps }
+    }
+
+    fn measure<R, F: FnMut() -> R>(&self, mut f: F) -> (f64, f64) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times: Vec<f64> = (0..self.reps)
+            .map(|_| {
+                let t0 = Instant::now();
+                std::hint::black_box(f());
+                t0.elapsed().as_secs_f64() * 1e3
+            })
+            .collect();
+        times.sort_by(|a, b| a.total_cmp(b));
+        let median = times[times.len() / 2];
+        let mut dev: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        dev.sort_by(|a, b| a.total_cmp(b));
+        (median, dev[dev.len() / 2])
+    }
+}
+
+/// Run a named suite.
+pub fn run_suite(suite: &str, quick: bool) -> Result<SuiteReport> {
+    match suite {
+        "flat_tree" => flat_tree(quick),
+        other => bail!("unknown bench suite {other:?} (available: {})", SUITES.join(", ")),
+    }
+}
+
+/// Per-suite self-invariants, checked on every fresh run independent
+/// of any baseline. For `flat_tree`: the mega-batch flat path must
+/// actually beat the recursive reference — the measured speedup this
+/// PR claims is machine-checked here and in the CI perf-gate job.
+pub fn check_invariants(report: &SuiteReport) -> Result<()> {
+    if report.suite == "flat_tree" {
+        let speedup = report
+            .derived
+            .get("speedup_mega")
+            .copied()
+            .context("flat_tree report is missing derived speedup_mega")?;
+        anyhow::ensure!(
+            speedup >= 1.0,
+            "flat mega-batch inference is slower than the recursive reference \
+             ({speedup:.2}x < 1.0x)"
+        );
+    }
+    Ok(())
+}
+
+/// The `flat_tree` suite: cold (recursive per-row reference walkers)
+/// vs flat SoA `predict_batch` over the two-stage surrogate at small /
+/// medium / mega batch sizes, plus the `EvalRouter` occupancy rerun.
+/// The differential bit-identity check rides along on every batch
+/// size, so the bench doubles as an end-to-end equivalence harness.
+fn flat_tree(quick: bool) -> Result<SuiteReport> {
+    use crate::backend::Enablement;
+    use crate::coordinator::dse_driver::SurrogateBundle;
+    use crate::coordinator::{datagen, DatagenConfig, EvalRouter, EvalService};
+    use crate::data::Metric;
+    use crate::generators::Platform;
+    use std::sync::Arc;
+
+    let t = Timer::new(quick);
+    let g = datagen::generate(&DatagenConfig {
+        n_arch: 6,
+        n_backend_train: 8,
+        n_backend_test: 2,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    })?;
+    let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7)?;
+    let feats: Vec<Vec<f64>> =
+        g.dataset.rows.iter().map(|r| r.features_vec()).collect();
+
+    let mut rows_out: Vec<BenchRow> = Vec::new();
+    let mut derived = BTreeMap::new();
+
+    {
+        // the pre-flat scoring path: per-row recursive classifier prob
+        // + per-row, per-metric regressor walk + exp — what every
+        // mega-batch used to degrade to
+        let reference = |rows: &[Vec<f64>]| {
+            let mut out = Vec::with_capacity(rows.len());
+            for x in rows {
+                let p = bundle.classifier.prob(x);
+                let mut preds = BTreeMap::new();
+                for m in Metric::ALL {
+                    preds.insert(m, bundle.regressors[&m].predict_one(x).exp());
+                }
+                out.push((p >= 0.5, preds));
+            }
+            out
+        };
+
+        for (tag, size) in [("small", 32usize), ("medium", 512), ("mega", 4096)] {
+            let batch: Vec<Vec<f64>> =
+                (0..size).map(|i| feats[i % feats.len()].clone()).collect();
+
+            // differential check first: flat == recursive, bit for bit
+            let flat_out = bundle.predict_batch(&batch, 1);
+            let ref_out = reference(&batch);
+            for (i, (f, r)) in flat_out.iter().zip(&ref_out).enumerate() {
+                anyhow::ensure!(
+                    f.0 == r.0,
+                    "row {i}: flat ROI gate diverged from the recursive reference"
+                );
+                for m in Metric::ALL {
+                    anyhow::ensure!(
+                        f.1[&m].to_bits() == r.1[&m].to_bits(),
+                        "row {i} metric {m}: flat prediction is not bit-identical \
+                         to the recursive reference"
+                    );
+                }
+            }
+
+            let (med, mad) = t.measure(|| reference(&batch));
+            rows_out.push(BenchRow {
+                name: format!("surrogate/recursive/batch_{size}"),
+                median_ms: med,
+                mad_ms: mad,
+                reps: t.reps,
+            });
+            let (fmed, fmad) = t.measure(|| bundle.predict_batch(&batch, 1));
+            rows_out.push(BenchRow {
+                name: format!("surrogate/flat/batch_{size}"),
+                median_ms: fmed,
+                mad_ms: fmad,
+                reps: t.reps,
+            });
+            derived.insert(format!("speedup_{tag}"), med / fmed.max(1e-9));
+        }
+    }
+
+    // router-occupancy rerun: concurrent single-row clients coalescing
+    // into mega-batches that now land on the flat path
+    let service =
+        Arc::new(EvalService::new(Enablement::Gf12, 2023).with_surrogate(bundle));
+    let clients = 8usize;
+    let per_client = 40usize;
+    let router = EvalRouter::start(Arc::clone(&service));
+    let (rmed, rmad) = t.measure(|| {
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let client = router.client();
+                let feats = &feats;
+                scope.spawn(move || {
+                    for k in 0..per_client {
+                        let row = feats[(c * per_client + k) % feats.len()].clone();
+                        client.predict(vec![row]).expect("router predict");
+                    }
+                });
+            }
+        })
+    });
+    drop(router);
+    rows_out.push(BenchRow {
+        name: format!("router/{clients}clients_x{per_client}rows"),
+        median_ms: rmed,
+        mad_ms: rmad,
+        reps: t.reps,
+    });
+    derived.insert("router_occupancy".to_string(), service.stats().router_occupancy());
+
+    Ok(SuiteReport { suite: "flat_tree".to_string(), quick, rows: rows_out, derived })
+}
+
+/// Comparison outcome: printable lines plus the regressions that
+/// should fail the gate.
+#[derive(Debug)]
+pub struct Comparison {
+    pub lines: Vec<String>,
+    pub regressions: Vec<String>,
+}
+
+/// Diff `candidate` against `baseline`. Timed rows regress when the
+/// median grows past `1 + threshold`; derived ratios (higher-better)
+/// regress when they drop below `1 - threshold` of the baseline. Rows
+/// present in the baseline but missing from the candidate are
+/// regressions too (a renamed row must update its baseline
+/// deliberately); new candidate rows are reported but never fail.
+/// `derived_only` skips the timed rows — the mode for committed seed
+/// baselines, whose absolute medians came from another machine.
+pub fn compare(
+    baseline: &SuiteReport,
+    candidate: &SuiteReport,
+    threshold: f64,
+    derived_only: bool,
+) -> Result<Comparison> {
+    anyhow::ensure!(
+        baseline.suite == candidate.suite,
+        "suite mismatch: baseline {:?} vs candidate {:?}",
+        baseline.suite,
+        candidate.suite
+    );
+    anyhow::ensure!(threshold > 0.0, "threshold must be positive");
+    let mut lines = Vec::new();
+    let mut regressions = Vec::new();
+    if !derived_only {
+        for b in &baseline.rows {
+            let Some(c) = candidate.row(&b.name) else {
+                regressions
+                    .push(format!("{}: in baseline, missing from candidate", b.name));
+                continue;
+            };
+            let ratio = c.median_ms / b.median_ms.max(1e-9);
+            let regressed = ratio > 1.0 + threshold;
+            lines.push(format!(
+                "{:<46} {:>9.3} -> {:>9.3} ms  x{ratio:.2}  {}",
+                b.name,
+                b.median_ms,
+                c.median_ms,
+                if regressed { "REGRESSED" } else { "ok" }
+            ));
+            if regressed {
+                regressions.push(format!(
+                    "{}: {:.3} ms -> {:.3} ms ({:+.1}%, threshold {:.0}%)",
+                    b.name,
+                    b.median_ms,
+                    c.median_ms,
+                    (ratio - 1.0) * 100.0,
+                    threshold * 100.0
+                ));
+            }
+        }
+        for c in &candidate.rows {
+            if baseline.row(&c.name).is_none() {
+                lines.push(format!("{:<46} (new row, no baseline)", c.name));
+            }
+        }
+    }
+    for (k, b) in &baseline.derived {
+        let Some(c) = candidate.derived.get(k) else {
+            regressions.push(format!("derived/{k}: missing from candidate"));
+            continue;
+        };
+        let regressed = *c < b * (1.0 - threshold);
+        lines.push(format!(
+            "derived/{k:<38} {b:>9.3} -> {c:>9.3}  {}",
+            if regressed { "REGRESSED" } else { "ok" }
+        ));
+        if regressed {
+            regressions.push(format!(
+                "derived/{k}: {b:.3} -> {c:.3} (below the {:.0}% floor)",
+                (1.0 - threshold) * 100.0
+            ));
+        }
+    }
+    Ok(Comparison { lines, regressions })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(rows: &[(&str, f64)], derived: &[(&str, f64)]) -> SuiteReport {
+        SuiteReport {
+            suite: "flat_tree".to_string(),
+            quick: true,
+            rows: rows
+                .iter()
+                .map(|(n, ms)| BenchRow {
+                    name: n.to_string(),
+                    median_ms: *ms,
+                    mad_ms: 0.01,
+                    reps: 5,
+                })
+                .collect(),
+            derived: derived
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_report() {
+        let r = report(
+            &[("a/b", 1.25), ("c/d", 0.003)],
+            &[("speedup_mega", 3.5), ("router_occupancy", 12.25)],
+        );
+        let text = r.to_json().to_string();
+        let back = SuiteReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn corrupt_reports_read_as_none() {
+        for text in [
+            "{}",
+            r#"{"suite":"x"}"#,
+            r#"{"suite":"x","rows":[{"median_ms":1}],"derived":{}}"#,
+            r#"{"suite":"x","rows":[],"derived":{"k":"not-a-number"}}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(SuiteReport::from_json(&j).is_none(), "{text}");
+        }
+    }
+
+    #[test]
+    fn within_threshold_passes() {
+        let base = report(&[("r", 10.0)], &[("speedup_mega", 3.0)]);
+        let cand = report(&[("r", 11.0)], &[("speedup_mega", 2.8)]);
+        let cmp = compare(&base, &cand, 0.15, false).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+    }
+
+    #[test]
+    fn slow_row_regresses_past_threshold() {
+        let base = report(&[("r", 10.0)], &[]);
+        let cand = report(&[("r", 12.0)], &[]);
+        let cmp = compare(&base, &cand, 0.15, false).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+        assert!(cmp.regressions[0].contains("r:"), "{:?}", cmp.regressions);
+    }
+
+    #[test]
+    fn derived_ratio_drop_regresses() {
+        let base = report(&[], &[("speedup_mega", 3.0)]);
+        let cand = report(&[], &[("speedup_mega", 2.0)]);
+        let cmp = compare(&base, &cand, 0.15, false).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+        // derived checks survive --derived-only; improvements pass
+        let cmp = compare(&base, &cand, 0.15, true).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+        let better = report(&[], &[("speedup_mega", 4.0)]);
+        assert!(compare(&base, &better, 0.15, true).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn missing_row_is_a_regression_but_new_rows_pass() {
+        let base = report(&[("old", 1.0)], &[]);
+        let cand = report(&[("new", 1.0)], &[]);
+        let cmp = compare(&base, &cand, 0.15, false).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+        assert!(cmp.regressions[0].contains("missing"));
+        // --derived-only ignores the timed rows entirely
+        assert!(compare(&base, &cand, 0.15, true).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn suite_mismatch_is_an_error() {
+        let base = report(&[], &[]);
+        let mut cand = report(&[], &[]);
+        cand.suite = "other".to_string();
+        assert!(compare(&base, &cand, 0.15, false).is_err());
+    }
+
+    #[test]
+    fn invariants_demand_a_mega_speedup() {
+        let ok = report(&[], &[("speedup_mega", 1.5)]);
+        assert!(check_invariants(&ok).is_ok());
+        let slow = report(&[], &[("speedup_mega", 0.8)]);
+        assert!(check_invariants(&slow).is_err());
+        let missing = report(&[], &[]);
+        assert!(check_invariants(&missing).is_err());
+        // other suites have no flat_tree invariant
+        let mut other = report(&[], &[]);
+        other.suite = "something_else".to_string();
+        assert!(check_invariants(&other).is_ok());
+    }
+
+    #[test]
+    fn unknown_suite_is_an_error() {
+        assert!(run_suite("no-such-suite", true).is_err());
+    }
+}

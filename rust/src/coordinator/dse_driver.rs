@@ -71,9 +71,13 @@ impl SurrogateBundle {
     }
 
     /// Batched two-stage scoring — the single home of the 0.5 ROI
-    /// threshold and the log-space `.exp()` inverse. Row-parallel
-    /// classifier probabilities, one regressor pass per metric.
-    /// Parallelism never changes values (`par_map` preserves order).
+    /// threshold and the log-space `.exp()` inverse. One flat-forest
+    /// batch for the classifier probabilities (row-chunked across the
+    /// workers) and one flat-forest batch per metric regressor
+    /// (metric-parallel): exactly `1 + Metric::ALL.len()` batch-major
+    /// passes per call, no per-row fallback anywhere — the call-count
+    /// regression test in `tests/flat_tree.rs` pins that. Parallelism
+    /// never changes values (chunking and `par_map` preserve order).
     pub fn predict_batch(
         &self,
         feats: &[Vec<f64>],
@@ -83,7 +87,7 @@ impl SurrogateBundle {
         if n == 0 {
             return Vec::new();
         }
-        let probs: Vec<f64> = par_map(n, workers, |i| self.classifier.prob(&feats[i]));
+        let probs: Vec<f64> = self.classifier.probs_with(feats, workers);
         let metric_preds: Vec<Vec<f64>> = par_map(Metric::ALL.len(), workers, |k| {
             let m = Metric::ALL[k];
             self.regressors[&m]
@@ -107,6 +111,21 @@ impl SurrogateBundle {
         self.predict_batch(&[feats.to_vec()], 1)
             .pop()
             .expect("one row in, one prediction out")
+    }
+
+    /// Aggregated (flat batch invocations, rows scored) across the
+    /// classifier and every metric regressor. A `predict_batch` of `n`
+    /// rows adds exactly `1 + Metric::ALL.len()` batches and
+    /// `(1 + Metric::ALL.len()) * n` rows — the call-count regression
+    /// test's probe that no caller degrades to per-row scoring.
+    pub fn flat_stats(&self) -> (usize, usize) {
+        let (mut batches, mut rows) = self.classifier.flat_stats();
+        for reg in self.regressors.values() {
+            let (b, r) = reg.flat_stats();
+            batches += b;
+            rows += r;
+        }
+        (batches, rows)
     }
 
     /// Model-store family tag for persisted bundles.

@@ -789,8 +789,9 @@ impl EvalService {
     }
 
     /// Score a batch of feature rows through the two-stage surrogate:
-    /// row-parallel ROI probabilities, then one batched regressor pass
-    /// per metric (value-identical to per-row `predict_one` + `exp`).
+    /// one flat-SoA classifier pass for the ROI gate, then one batched
+    /// regressor pass per metric — bit-identical to per-row
+    /// `prob`/`predict_one() + exp` reference walks.
     pub fn predict_batch(&self, feats: &[Vec<f64>]) -> Result<Vec<SurrogatePoint>> {
         let bundle = self
             .surrogate

@@ -18,6 +18,7 @@
 
 pub mod analysis;
 pub mod backend;
+pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod dse;

@@ -7,6 +7,7 @@
 //!   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
 //!   fso store     <compact|stats> --cache-dir DIR   (persistent-store maintenance)
 //!   fso serve     --demo      (dynamic-batching predict server demo)
+//!   fso bench     <run|compare|list> --suite NAME   (perf-gate suites)
 //!
 //! Global: --seed N, --quick, --out-dir DIR, --artifacts DIR
 
@@ -53,6 +54,7 @@ fn run(args: &Args) -> Result<()> {
         "experiment" => cmd_experiment(args),
         "store" => cmd_store(args),
         "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
         _ => {
             println!("{}", HELP.trim());
             Ok(())
@@ -77,6 +79,10 @@ USAGE:
   fso store <compact|stats> --cache-dir DIR
             [--store-max-bytes N] [--store-max-records N] [--store-max-age N]
   fso serve [--clients N] [--rows N] [--tree-router]
+  fso bench run     --suite NAME [--quick] [--out FILE]
+  fso bench compare --suite NAME --baseline FILE [--candidate FILE]
+                    [--threshold 0.15] [--derived-only] [--quick] [--out FILE]
+  fso bench list
 
 A comma-separated --enablement sweeps every listed enablement through
 one process (and one --cache-dir store); --out then writes one CSV per
@@ -109,6 +115,17 @@ scoring pipeline depth, default 4). Results are byte-identical to the
 serial path at the same seed — only wall-clock and CPU time change.
 `fso serve --tree-router` demos the cross-client router on the
 tree-family surrogate (no PJRT artifacts needed).
+
+`fso bench` drives the named perf-gate suites (see `fso bench list`):
+`run` executes a suite and writes its BENCH_<suite>.json trajectory
+point; `compare` runs the suite fresh (or loads --candidate) and diffs
+it against --baseline, exiting nonzero when a timed row slows past
+--threshold (default 15%) or a derived higher-is-better ratio drops
+below it. --derived-only restricts the diff to the machine-portable
+ratios — the mode for comparing against a committed baseline produced
+on another machine. Suites self-check their invariants on every run
+(flat_tree: flat mega-batch inference at least matches the recursive
+walkers, predictions verified bit-identical before timing starts).
 "#;
 
 /// Lifecycle policy from the `--store-max-*` flags (defaults:
@@ -356,6 +373,87 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     experiments::run(id, &opts)?;
     println!("[{id}] done in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
+}
+
+/// `fso bench <run|compare|list>`: the perf-gate CLI over
+/// `fso::bench`'s named suites (see the HELP text for semantics).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use fso::bench;
+    let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("list");
+    match action {
+        "list" => {
+            for s in bench::SUITES {
+                println!("{s}  (default out: {})", bench::default_out(s));
+            }
+            Ok(())
+        }
+        "run" => {
+            let suite = args.get("suite").context("--suite required for `fso bench run`")?;
+            let report = bench::run_suite(suite, args.flag("quick"))?;
+            print!("{}", report.render());
+            bench::check_invariants(&report)?;
+            let out = args
+                .get("out")
+                .map(String::from)
+                .unwrap_or_else(|| bench::default_out(suite));
+            report.save(std::path::Path::new(&out))?;
+            println!("wrote {out}");
+            Ok(())
+        }
+        "compare" => {
+            let suite = args
+                .get("suite")
+                .context("--suite required for `fso bench compare`")?;
+            let base_path = args
+                .path("baseline")
+                .context("--baseline required for `fso bench compare`")?;
+            let baseline = bench::SuiteReport::load(&base_path)?;
+            // candidate: a saved report when --candidate is given, a
+            // fresh run of the suite otherwise
+            let candidate = match args.path("candidate") {
+                Some(p) => bench::SuiteReport::load(&p)?,
+                None => {
+                    let report = bench::run_suite(suite, args.flag("quick"))?;
+                    bench::check_invariants(&report)?;
+                    if let Some(out) = args.get("out") {
+                        report.save(std::path::Path::new(out))?;
+                        println!("wrote {out}");
+                    }
+                    report
+                }
+            };
+            anyhow::ensure!(
+                baseline.suite == suite,
+                "baseline {} holds suite {:?}, not {suite:?}",
+                base_path.display(),
+                baseline.suite
+            );
+            let threshold = args.f64_or("threshold", 0.15)?;
+            let cmp = bench::compare(
+                &baseline,
+                &candidate,
+                threshold,
+                args.flag("derived-only"),
+            )?;
+            for line in &cmp.lines {
+                println!("{line}");
+            }
+            if cmp.regressions.is_empty() {
+                println!(
+                    "perf gate passed ({} checks, threshold {:.0}%)",
+                    cmp.lines.len(),
+                    threshold * 100.0
+                );
+                Ok(())
+            } else {
+                for r in &cmp.regressions {
+                    eprintln!("REGRESSION: {r}");
+                }
+                bail!("{} perf regression(s) past the threshold", cmp.regressions.len());
+            }
+        }
+        other => bail!("unknown bench action {other:?} (run|compare|list)"),
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

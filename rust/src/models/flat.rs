@@ -1,0 +1,287 @@
+//! Flattened structure-of-arrays (SoA) forest inference — the batch
+//! hot path under `Gbdt`, `GbdtClassifier`, and `RandomForest`.
+//!
+//! `RegTree` keeps one `Vec<Node>` per tree: batch prediction over a
+//! forest pointer-chases a fresh allocation per tree per row, which
+//! profiles as the innermost hot loop of the DSE once oracle traffic
+//! is cached and coalesced (PRs 1-5). `FlatForest` repacks every tree
+//! of a fitted forest back-to-back into contiguous per-field slabs
+//! (`feature[]`, `threshold[]`, `left[]`, `right[]`, `value[]`) with
+//! absolute child indices, then walks them tree-major / row-minor: the
+//! tree being traversed stays hot in cache across the whole batch and
+//! the walk itself is branch-light (one predicated child select per
+//! level, no call per tree).
+//!
+//! ## Bit-identity contract
+//!
+//! Flat predictions are **bit-identical** to the recursive reference
+//! walkers (`RegTree::predict` per tree, summed in tree order):
+//!
+//! * each row's accumulator starts at 0.0 and adds leaf values in tree
+//!   order — exactly the fold `trees.iter().map(|t| t.predict(x)).sum()`
+//!   performs, so f64 rounding is reproduced addition-for-addition;
+//! * the split test is the same `x[feature] <= threshold` expression,
+//!   so NaN features route right and ±Inf/-0.0 compare identically;
+//! * row-chunked parallelism only partitions rows (never reorders a
+//!   row's additions), so worker count cannot change a single bit.
+//!
+//! That contract is what lets every mega-batch path (`SurrogateBundle`,
+//! `EvalService::predict_batch`, the `EvalRouter`) switch to the flat
+//! layout without touching the repo's determinism spine (fixed seed ⇒
+//! byte-identical CSVs, reports, Pareto fronts). `tests/flat_tree.rs`
+//! enforces it differentially, NaN/±Inf/-0.0 features included.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::pool::par_map;
+
+use super::tree::RegTree;
+
+/// Leaf sentinel in the packed `feature` slab.
+const LEAF: u32 = u32::MAX;
+
+/// Rows per parallel chunk. Chunking partitions the batch across
+/// workers without reordering any row's per-tree additions.
+const CHUNK: usize = 128;
+
+/// A forest of regression trees packed into contiguous SoA slabs.
+/// Built once at fit/deserialization time; read-only afterwards.
+#[derive(Debug)]
+pub struct FlatForest {
+    /// Split feature per node (`LEAF` = leaf).
+    feature: Vec<u32>,
+    threshold: Vec<f64>,
+    /// Absolute child indices into the packed slab (per-tree base
+    /// already applied).
+    left: Vec<u32>,
+    right: Vec<u32>,
+    /// Leaf prediction (internal nodes keep their training mean, as in
+    /// `RegTree`; the walk never reads it there).
+    value: Vec<f64>,
+    /// Tree `t` occupies nodes `roots[t]..roots[t+1]`; `len = trees+1`.
+    roots: Vec<u32>,
+    /// Batch-entry instrumentation: `sum_batch` invocations and rows
+    /// scored. Per-instance (not global) so concurrent tests can pin
+    /// call counts without cross-talk; one relaxed fetch_add per batch,
+    /// nothing per row.
+    batches: AtomicUsize,
+    rows: AtomicUsize,
+}
+
+impl Clone for FlatForest {
+    fn clone(&self) -> FlatForest {
+        FlatForest {
+            feature: self.feature.clone(),
+            threshold: self.threshold.clone(),
+            left: self.left.clone(),
+            right: self.right.clone(),
+            value: self.value.clone(),
+            roots: self.roots.clone(),
+            batches: AtomicUsize::new(self.batches.load(Ordering::Relaxed)),
+            rows: AtomicUsize::new(self.rows.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl FlatForest {
+    /// Pack validated trees (fit output or `RegTree::from_json`, both
+    /// of which enforce forward child edges) into one slab set.
+    pub fn from_trees(trees: &[RegTree]) -> FlatForest {
+        let total: usize = trees.iter().map(|t| t.node_count()).sum();
+        assert!(
+            total < LEAF as usize,
+            "forest too large for u32 node indices ({total} nodes)"
+        );
+        let mut f = FlatForest {
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+            value: Vec::with_capacity(total),
+            roots: Vec::with_capacity(trees.len() + 1),
+            batches: AtomicUsize::new(0),
+            rows: AtomicUsize::new(0),
+        };
+        f.roots.push(0);
+        for tree in trees {
+            let base = f.feature.len() as u32;
+            for n in tree.nodes() {
+                f.feature.push(if n.feature == usize::MAX {
+                    LEAF
+                } else {
+                    n.feature as u32
+                });
+                f.threshold.push(n.threshold);
+                // leaves carry left/right 0; base+0 points at this
+                // tree's own root and is never followed
+                f.left.push(base + n.left);
+                f.right.push(base + n.right);
+                f.value.push(n.value);
+            }
+            f.roots.push(f.feature.len() as u32);
+        }
+        f
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.roots.len() - 1
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    /// (batch invocations, rows scored) through `sum_batch` so far —
+    /// the call-count regression tests' probe.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.batches.load(Ordering::Relaxed), self.rows.load(Ordering::Relaxed))
+    }
+
+    /// Walk one tree for one row. Same comparison expression as
+    /// `RegTree::predict` (NaN routes right); compiles to a predicated
+    /// child select per level.
+    #[inline]
+    fn walk(&self, root: u32, x: &[f64]) -> f64 {
+        let mut cur = root as usize;
+        loop {
+            // SAFETY: `from_trees` packs only validated trees whose
+            // child edges stay inside their own node range; adding the
+            // per-tree base keeps every index < n_nodes.
+            let f = unsafe { *self.feature.get_unchecked(cur) };
+            if f == LEAF {
+                return unsafe { *self.value.get_unchecked(cur) };
+            }
+            // bounds-checked row access, exactly like the reference
+            // walker (a short feature row must fail identically)
+            let go_left = x[f as usize] <= unsafe { *self.threshold.get_unchecked(cur) };
+            cur = if go_left {
+                unsafe { *self.left.get_unchecked(cur) }
+            } else {
+                unsafe { *self.right.get_unchecked(cur) }
+            } as usize;
+        }
+    }
+
+    /// Tree-major accumulation over a row range: for each tree, score
+    /// every row before moving on, keeping the tree's slab segment hot.
+    /// Per row this adds leaf values in tree order from 0.0 — the exact
+    /// fold of the recursive reference, bit for bit.
+    fn sum_range(&self, xs: &[Vec<f64>], lo: usize, hi: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), hi - lo);
+        for t in 0..self.n_trees() {
+            let root = self.roots[t];
+            for (acc, x) in out.iter_mut().zip(&xs[lo..hi]) {
+                *acc += self.walk(root, x);
+            }
+        }
+    }
+
+    /// Per-row tree-sums for a batch: the single batch entry point all
+    /// forest models route through. `workers > 1` chunks rows across
+    /// the scoped pool; chunking never reorders a row's additions, so
+    /// the output is worker-count-invariant down to the bit.
+    pub fn sum_batch(&self, xs: &[Vec<f64>], workers: usize) -> Vec<f64> {
+        let n = xs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(n, Ordering::Relaxed);
+        let workers = workers.max(1);
+        if workers == 1 || n <= CHUNK {
+            let mut out = vec![0.0; n];
+            self.sum_range(xs, 0, n, &mut out);
+            return out;
+        }
+        let chunks = (n + CHUNK - 1) / CHUNK;
+        let pieces = par_map(chunks, workers, |c| {
+            let lo = c * CHUNK;
+            let hi = ((c + 1) * CHUNK).min(n);
+            let mut out = vec![0.0; hi - lo];
+            self.sum_range(xs, lo, hi, &mut out);
+            out
+        });
+        pieces.concat()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tree::TreeParams;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn forest(n_trees: usize, seed: u64) -> (Vec<RegTree>, Vec<Vec<f64>>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> =
+            (0..80).map(|_| (0..6).map(|_| rng.f64()).collect()).collect();
+        let y: Vec<f64> = x.iter().map(|v| v[0] * 4.0 - v[1] + v[2] * v[3]).collect();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let trees = (0..n_trees)
+            .map(|_| RegTree::fit(&x, &y, &idx, TreeParams::default(), &mut rng))
+            .collect();
+        (trees, x)
+    }
+
+    #[test]
+    fn packs_every_node_and_tree() {
+        let (trees, _) = forest(7, 1);
+        let flat = FlatForest::from_trees(&trees);
+        assert_eq!(flat.n_trees(), 7);
+        assert_eq!(
+            flat.n_nodes(),
+            trees.iter().map(|t| t.node_count()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn matches_reference_sum_bitwise() {
+        let (trees, x) = forest(9, 2);
+        let flat = FlatForest::from_trees(&trees);
+        let sums = flat.sum_batch(&x, 1);
+        for (row, s) in x.iter().zip(&sums) {
+            let reference: f64 = trees.iter().map(|t| t.predict(row)).sum();
+            assert_eq!(s.to_bits(), reference.to_bits());
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_bits() {
+        let (trees, x) = forest(5, 3);
+        // tile rows well past CHUNK so the parallel path actually chunks
+        let xs: Vec<Vec<f64>> =
+            (0..4 * CHUNK + 17).map(|i| x[i % x.len()].clone()).collect();
+        let flat = FlatForest::from_trees(&trees);
+        let serial = flat.sum_batch(&xs, 1);
+        for workers in [2, 3, 8] {
+            let par = flat.sum_batch(&xs, workers);
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_forest_and_empty_batch() {
+        let (trees, x) = forest(3, 4);
+        let flat = FlatForest::from_trees(&trees);
+        assert!(flat.sum_batch(&[], 4).is_empty());
+        let none = FlatForest::from_trees(&[]);
+        assert_eq!(none.n_trees(), 0);
+        assert_eq!(none.sum_batch(&x, 1), vec![0.0; x.len()]);
+    }
+
+    #[test]
+    fn counts_batches_and_rows() {
+        let (trees, x) = forest(2, 5);
+        let flat = FlatForest::from_trees(&trees);
+        assert_eq!(flat.stats(), (0, 0));
+        flat.sum_batch(&x, 1);
+        flat.sum_batch(&x[..10], 4);
+        assert_eq!(flat.stats(), (2, x.len() + 10));
+        // empty batches are not counted
+        flat.sum_batch(&[], 1);
+        assert_eq!(flat.stats(), (2, x.len() + 10));
+    }
+}

@@ -4,6 +4,7 @@
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::flat::FlatForest;
 use super::tree::{RegTree, TreeParams};
 
 #[derive(Debug, Clone, Copy)]
@@ -55,6 +56,10 @@ pub struct Gbdt {
     pub params: GbdtParams,
     base: f64,
     trees: Vec<RegTree>,
+    /// SoA repack of `trees`, built at fit/deserialization time; every
+    /// batch prediction routes through it (bit-identical to the
+    /// recursive walk — see `models::flat`).
+    flat: FlatForest,
 }
 
 impl Gbdt {
@@ -85,9 +90,13 @@ impl Gbdt {
             }
             trees.push(tree);
         }
-        Gbdt { params, base, trees }
+        let flat = FlatForest::from_trees(&trees);
+        Gbdt { params, base, trees, flat }
     }
 
+    /// Single-row *reference* prediction: the recursive/per-tree walk
+    /// the flat batch path must match bit-for-bit. Kept for the
+    /// differential tests; batch callers use `predict`/`predict_with`.
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         self.base
             + self.params.learning_rate
@@ -95,7 +104,24 @@ impl Gbdt {
     }
 
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        xs.iter().map(|x| self.predict_one(x)).collect()
+        self.predict_with(xs, 1)
+    }
+
+    /// Batch prediction through the flat SoA forest, row-chunked over
+    /// `workers` threads. Bit-identical to mapping `predict_one` (same
+    /// per-row addition order) at any worker count.
+    pub fn predict_with(&self, xs: &[Vec<f64>], workers: usize) -> Vec<f64> {
+        self.flat
+            .sum_batch(xs, workers)
+            .into_iter()
+            .map(|s| self.base + self.params.learning_rate * s)
+            .collect()
+    }
+
+    /// (flat batch invocations, rows scored) — the call-count
+    /// regression tests' probe that batch callers stay batched.
+    pub fn flat_stats(&self) -> (usize, usize) {
+        self.flat.stats()
     }
 
     pub fn n_trees(&self) -> usize {
@@ -126,7 +152,8 @@ impl Gbdt {
         if !base.is_finite() {
             return None;
         }
-        Some(Gbdt { params, base, trees })
+        let flat = FlatForest::from_trees(&trees);
+        Some(Gbdt { params, base, trees, flat })
     }
 }
 
@@ -136,6 +163,8 @@ pub struct GbdtClassifier {
     params: GbdtParams,
     base: f64, // log-odds
     trees: Vec<RegTree>,
+    /// SoA repack of `trees` (see `Gbdt::flat`).
+    flat: FlatForest,
 }
 
 fn sigmoid(z: f64) -> f64 {
@@ -176,9 +205,13 @@ impl GbdtClassifier {
             }
             trees.push(tree);
         }
-        GbdtClassifier { params, base, trees }
+        let flat = FlatForest::from_trees(&trees);
+        GbdtClassifier { params, base, trees, flat }
     }
 
+    /// Single-row *reference* probability (recursive per-tree walk);
+    /// batch callers use `probs`/`probs_with`, which must match this
+    /// bit-for-bit.
     pub fn prob_one(&self, x: &[f64]) -> f64 {
         let raw = self.base
             + self.params.learning_rate
@@ -191,8 +224,28 @@ impl GbdtClassifier {
         self.prob_one(x) >= 0.5
     }
 
+    /// Batched probabilities through the flat SoA forest — bit-identical
+    /// to mapping `prob_one` (same per-row sum, same sigmoid input).
+    pub fn probs(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        self.probs_with(xs, 1)
+    }
+
+    /// `probs` with row-chunked parallelism (worker-count-invariant).
+    pub fn probs_with(&self, xs: &[Vec<f64>], workers: usize) -> Vec<f64> {
+        self.flat
+            .sum_batch(xs, workers)
+            .into_iter()
+            .map(|s| sigmoid(self.base + self.params.learning_rate * 4.0 * s))
+            .collect()
+    }
+
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<bool> {
-        xs.iter().map(|x| self.predict_one(x)).collect()
+        self.probs(xs).into_iter().map(|p| p >= 0.5).collect()
+    }
+
+    /// (flat batch invocations, rows scored) — call-count probe.
+    pub fn flat_stats(&self) -> (usize, usize) {
+        self.flat.stats()
     }
 
     /// Model-store serialization (same layout as the regressor).
@@ -216,7 +269,8 @@ impl GbdtClassifier {
         if !base.is_finite() {
             return None;
         }
-        Some(GbdtClassifier { params, base, trees })
+        let flat = FlatForest::from_trees(&trees);
+        Some(GbdtClassifier { params, base, trees, flat })
     }
 }
 

@@ -6,6 +6,7 @@
 
 pub mod ann;
 pub mod ensemble;
+pub mod flat;
 pub mod gbdt;
 pub mod gcn;
 pub mod linear;
@@ -16,6 +17,7 @@ pub mod two_stage;
 
 pub use ann::{AnnModel, TrainConfig};
 pub use ensemble::{BasePredictions, StackedEnsemble};
+pub use flat::FlatForest;
 pub use gbdt::{Gbdt, GbdtClassifier, GbdtParams};
 pub use gcn::{GcnModel, GraphCache};
 pub use linear::Ridge;

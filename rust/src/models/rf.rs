@@ -4,6 +4,7 @@
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::flat::FlatForest;
 use super::tree::{RegTree, TreeParams};
 
 #[derive(Debug, Clone, Copy)]
@@ -50,6 +51,9 @@ impl RfParams {
 #[derive(Debug, Clone)]
 pub struct RandomForest {
     trees: Vec<RegTree>,
+    /// SoA repack of `trees`; all batch predictions route through it
+    /// (bit-identical to the recursive walk — see `models::flat`).
+    flat: FlatForest,
 }
 
 impl RandomForest {
@@ -75,15 +79,31 @@ impl RandomForest {
                 RegTree::fit(x, y, &idx, tp, &mut rng)
             })
             .collect();
-        RandomForest { trees }
+        let flat = FlatForest::from_trees(&trees);
+        RandomForest { trees, flat }
     }
 
+    /// Single-row *reference* prediction (recursive per-tree walk);
+    /// batch callers use `predict`/`predict_with`, which must match
+    /// this bit-for-bit.
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         self.trees.iter().map(|t| t.predict(x)).sum::<f64>() / self.trees.len() as f64
     }
 
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        xs.iter().map(|x| self.predict_one(x)).collect()
+        self.predict_with(xs, 1)
+    }
+
+    /// Batch prediction through the flat SoA forest (bit-identical to
+    /// mapping `predict_one` at any worker count).
+    pub fn predict_with(&self, xs: &[Vec<f64>], workers: usize) -> Vec<f64> {
+        let n = self.trees.len() as f64;
+        self.flat.sum_batch(xs, workers).into_iter().map(|s| s / n).collect()
+    }
+
+    /// (flat batch invocations, rows scored) — call-count probe.
+    pub fn flat_stats(&self) -> (usize, usize) {
+        self.flat.stats()
     }
 
     pub fn n_trees(&self) -> usize {
@@ -110,7 +130,8 @@ impl RandomForest {
         if trees.is_empty() {
             return None;
         }
-        Some(RandomForest { trees })
+        let flat = FlatForest::from_trees(&trees);
+        Some(RandomForest { trees, flat })
     }
 }
 

@@ -20,19 +20,23 @@ impl Default for TreeParams {
     }
 }
 
+/// One tree node; `pub(crate)` so `models::flat` can repack fitted /
+/// deserialized trees into its contiguous SoA slabs without a copy of
+/// the validation logic (both constructors below enforce the pre-order
+/// child invariant the flat walker relies on).
 #[derive(Debug, Clone, Copy)]
-struct Node {
+pub(crate) struct Node {
     /// Split feature (leaf if usize::MAX).
-    feature: usize,
-    threshold: f64,
+    pub(crate) feature: usize,
+    pub(crate) threshold: f64,
     /// Index of left child (pre-order: always parent + 1).
-    left: u32,
+    pub(crate) left: u32,
     /// Index of right child (start of the right subtree). Stored
     /// explicitly: deriving it by walking the left subtree made
     /// prediction O(tree) per *step* — the profile's top hot spot.
-    right: u32,
+    pub(crate) right: u32,
     /// Leaf prediction.
-    value: f64,
+    pub(crate) value: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -183,10 +187,20 @@ impl RegTree {
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
+
+    /// Validated node slab (pre-order, children strictly after their
+    /// parent) — what `models::flat::FlatForest::from_trees` packs.
+    pub(crate) fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
 }
 
 impl RegTree {
-    /// Iterative prediction: one array lookup per level.
+    /// Iterative prediction: one array lookup per level. This is the
+    /// *reference walker*: `models::flat` batch inference must match it
+    /// bit-for-bit (the differential property tests in
+    /// `tests/flat_tree.rs` pin that), including the NaN routing below
+    /// (`x <= thr` is false for NaN, so NaN features go right).
     #[inline]
     pub fn predict(&self, x: &[f64]) -> f64 {
         let mut cur = 0usize;

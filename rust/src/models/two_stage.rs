@@ -32,8 +32,28 @@ impl RoiClassifier {
         self.model.predict(xs)
     }
 
+    /// Single-row *reference* probability (recursive walk). Batch
+    /// callers must use `probs`/`probs_with` — falling back to per-row
+    /// `prob` loops was the pointer-chasing hot spot the flat layout
+    /// removes (the call-count regression test pins this).
     pub fn prob(&self, x: &[f64]) -> f64 {
         self.model.prob_one(x)
+    }
+
+    /// Batched ROI probabilities through the flat SoA forest
+    /// (bit-identical to mapping `prob`).
+    pub fn probs(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        self.model.probs(xs)
+    }
+
+    /// `probs` with row-chunked parallelism (worker-count-invariant).
+    pub fn probs_with(&self, xs: &[Vec<f64>], workers: usize) -> Vec<f64> {
+        self.model.probs_with(xs, workers)
+    }
+
+    /// (flat batch invocations, rows scored) — call-count probe.
+    pub fn flat_stats(&self) -> (usize, usize) {
+        self.model.flat_stats()
     }
 
     pub fn evaluate(&self, xs: &[Vec<f64>], actual: &[bool]) -> ClassifyStats {

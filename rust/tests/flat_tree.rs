@@ -1,0 +1,319 @@
+//! Flat SoA forest inference (the PR-6 tentpole): differential
+//! bit-identity between the flattened batch walkers and the recursive
+//! reference walkers — NaN/±Inf/-0.0 features included — across every
+//! tree family, through disk round-trips and model-store warm starts,
+//! plus the call-count regression test pinning that every batch caller
+//! stays batched (no per-row fallback anywhere on the surrogate path).
+
+use std::path::PathBuf;
+
+use fso::backend::Enablement;
+use fso::coordinator::dse_driver::SurrogateBundle;
+use fso::coordinator::{datagen, DatagenConfig, EvalService, ModelStore};
+use fso::data::Metric;
+use fso::generators::Platform;
+use fso::models::{
+    tune_gbdt, tune_rf, Gbdt, GbdtClassifier, GbdtParams, RandomForest, RfParams,
+    RoiClassifier, SearchBudget, TunedGbdt, TunedRf,
+};
+use fso::util::json::Json;
+use fso::util::prop::check;
+use fso::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fso-flat-tree-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Serialize -> print -> parse -> deserialize: the exact disk path.
+fn disk_roundtrip(j: Json) -> Json {
+    Json::parse(&j.to_string()).expect("serialized model must re-parse")
+}
+
+/// One of the IEEE special values the split comparison must route
+/// identically in both walkers (`x <= thr` is false for NaN; ±Inf and
+/// -0.0 compare by the usual total order of `<=`).
+fn special(rng: &mut Rng) -> f64 {
+    match rng.below(4) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        _ => -0.0,
+    }
+}
+
+/// A query matrix over `d` features where roughly `p_special` of the
+/// cells are NaN/±Inf/-0.0 and the rest are uniform.
+fn query_matrix(rng: &mut Rng, rows: usize, d: usize, p_special: f64) -> Vec<Vec<f64>> {
+    (0..rows)
+        .map(|_| {
+            (0..d)
+                .map(|_| {
+                    if rng.bool(p_special) {
+                        special(rng)
+                    } else {
+                        rng.f64() * 4.0 - 2.0
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_bits_eq(flat: &[f64], reference: &[f64], what: &str) {
+    assert_eq!(flat.len(), reference.len(), "{what}: length mismatch");
+    for (i, (a, b)) in flat.iter().zip(reference).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: row {i} diverged (flat {a:?} vs reference {b:?})"
+        );
+    }
+}
+
+/// Satellite 1: arbitrary fitted forests x arbitrary query matrices
+/// (special values injected into training *and* queries) — the flat
+/// batch path reproduces the recursive per-row walkers bit-for-bit at
+/// every worker count.
+#[test]
+fn prop_flat_batch_matches_recursive_walkers_bitwise() {
+    check(10, 0xF1A7, |rng| {
+        let n = 40 + rng.below(40);
+        let d = 2 + rng.below(5);
+        // training data: mostly finite, a few NaN cells (the tree
+        // builder tolerates them; ±Inf-adjacent midpoints are rejected
+        // as thresholds at fit time, so fits stay valid)
+        let x: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                (0..d)
+                    .map(|_| if rng.bool(0.02) { f64::NAN } else { rng.f64() * 3.0 })
+                    .collect()
+            })
+            .collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|v| {
+                let v0 = if v[0].is_nan() { 0.0 } else { v[0] };
+                2.0 * v0 - v[1 % d].abs().min(5.0) + 0.1 * rng.normal()
+            })
+            .collect();
+        let labels: Vec<bool> = y.iter().map(|&v| v > 1.0).collect();
+
+        let params = GbdtParams { n_estimators: 12, max_depth: 3, ..Default::default() };
+        let gbdt = Gbdt::fit(&x, &y, params, rng.next_u64());
+        let cls = GbdtClassifier::fit(&x, &labels, params, rng.next_u64());
+        let rf = RandomForest::fit(
+            &x,
+            &y,
+            RfParams { n_estimators: 10, max_depth: 6, ..Default::default() },
+            rng.next_u64(),
+        );
+
+        let queries = query_matrix(rng, 10 + rng.below(300), d, 0.2);
+        let g_ref: Vec<f64> = queries.iter().map(|q| gbdt.predict_one(q)).collect();
+        let c_ref: Vec<f64> = queries.iter().map(|q| cls.prob_one(q)).collect();
+        let r_ref: Vec<f64> = queries.iter().map(|q| rf.predict_one(q)).collect();
+        for workers in [1usize, 3, 8] {
+            assert_bits_eq(
+                &gbdt.predict_with(&queries, workers),
+                &g_ref,
+                &format!("gbdt w={workers}"),
+            );
+            assert_bits_eq(
+                &cls.probs_with(&queries, workers),
+                &c_ref,
+                &format!("classifier w={workers}"),
+            );
+            assert_bits_eq(
+                &rf.predict_with(&queries, workers),
+                &r_ref,
+                &format!("rf w={workers}"),
+            );
+        }
+    });
+}
+
+/// Satellite 2 (first half): every serializable tree family's disk
+/// round-trip re-flattens on load, and the deserialized model's *batch*
+/// predictions match the original model's *recursive* reference — so
+/// flattening composes with persistence without touching a bit, even
+/// on special-value queries.
+#[test]
+fn persisted_families_reflatten_with_bit_exact_batch_predictions() {
+    let mut rng = Rng::new(41);
+    let x: Vec<Vec<f64>> =
+        (0..160).map(|_| (0..6).map(|_| rng.f64()).collect()).collect();
+    let y: Vec<f64> =
+        x.iter().map(|v| 4.0 * v[0] * v[1] + v[2] - 2.0 * v[3] + 0.1 * v[4]).collect();
+    let labels: Vec<bool> = y.iter().map(|&v| v > 1.5).collect();
+    let (x_val, y_val) = {
+        let xv: Vec<Vec<f64>> =
+            (0..50).map(|_| (0..6).map(|_| rng.f64()).collect()).collect();
+        let yv: Vec<f64> = xv
+            .iter()
+            .map(|v| 4.0 * v[0] * v[1] + v[2] - 2.0 * v[3] + 0.1 * v[4])
+            .collect();
+        (xv, yv)
+    };
+    // hold-out queries include NaN/±Inf/-0.0 cells
+    let hold = query_matrix(&mut rng, 80, 6, 0.15);
+
+    let params = GbdtParams { n_estimators: 40, ..Default::default() };
+    let gbdt = Gbdt::fit(&x, &y, params, 5);
+    let gbdt2 = Gbdt::from_json(&disk_roundtrip(gbdt.to_json())).expect("gbdt");
+    let reference: Vec<f64> = hold.iter().map(|q| gbdt.predict_one(q)).collect();
+    assert_bits_eq(&gbdt2.predict(&hold), &reference, "gbdt roundtrip");
+
+    let cls = GbdtClassifier::fit(&x, &labels, params, 5);
+    let cls2 = GbdtClassifier::from_json(&disk_roundtrip(cls.to_json())).expect("cls");
+    let reference: Vec<f64> = hold.iter().map(|q| cls.prob_one(q)).collect();
+    assert_bits_eq(&cls2.probs(&hold), &reference, "classifier roundtrip");
+
+    let rf = RandomForest::fit(&x, &y, RfParams { n_estimators: 30, ..Default::default() }, 5);
+    let rf2 = RandomForest::from_json(&disk_roundtrip(rf.to_json())).expect("rf");
+    let reference: Vec<f64> = hold.iter().map(|q| rf.predict_one(q)).collect();
+    assert_bits_eq(&rf2.predict(&hold), &reference, "rf roundtrip");
+
+    let roi = RoiClassifier::fit(&x, &labels, 5);
+    let roi2 = RoiClassifier::from_json(&disk_roundtrip(roi.to_json())).expect("roi");
+    let reference: Vec<f64> = hold.iter().map(|q| roi.prob(q)).collect();
+    assert_bits_eq(&roi2.probs(&hold), &reference, "roi roundtrip");
+
+    // tuned families persist (params, model) — the reloaded model's
+    // batch path must match the original's recursive walk too
+    let budget = SearchBudget { stage1: 3, stage2: 2, seed: 1 };
+    let tg = tune_gbdt(&x, &y, &x_val, &y_val, budget);
+    let tg2 = TunedGbdt::from_json(&disk_roundtrip(tg.to_json())).expect("tuned gbdt");
+    let reference: Vec<f64> = hold.iter().map(|q| tg.model.predict_one(q)).collect();
+    assert_bits_eq(&tg2.model.predict(&hold), &reference, "tuned gbdt roundtrip");
+    let tr = tune_rf(&x, &y, &x_val, &y_val, budget);
+    let tr2 = TunedRf::from_json(&disk_roundtrip(tr.to_json())).expect("tuned rf");
+    let reference: Vec<f64> = hold.iter().map(|q| tr.model.predict_one(q)).collect();
+    assert_bits_eq(&tr2.model.predict(&hold), &reference, "tuned rf roundtrip");
+}
+
+fn small_cfg() -> DatagenConfig {
+    DatagenConfig {
+        n_arch: 6,
+        n_backend_train: 10,
+        n_backend_test: 4,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    }
+}
+
+/// Per-row recursive reference for the full two-stage bundle: the ROI
+/// gate from the classifier's recursive probability, each metric from
+/// the regressor's recursive walk + the log-space inverse.
+fn bundle_reference(
+    bundle: &SurrogateBundle,
+    feats: &[Vec<f64>],
+) -> Vec<(bool, Vec<(Metric, f64)>)> {
+    feats
+        .iter()
+        .map(|x| {
+            let gate = bundle.classifier.prob(x) >= 0.5;
+            let preds = Metric::ALL
+                .into_iter()
+                .map(|m| (m, bundle.regressors[&m].predict_one(x).exp()))
+                .collect();
+            (gate, preds)
+        })
+        .collect()
+}
+
+fn assert_bundle_matches(
+    got: &[(bool, std::collections::BTreeMap<Metric, f64>)],
+    want: &[(bool, Vec<(Metric, f64)>)],
+    what: &str,
+) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, ((g_roi, g_pred), (w_roi, w_pred))) in got.iter().zip(want).enumerate() {
+        assert_eq!(g_roi, w_roi, "{what}: row {i} ROI gate diverged");
+        for (m, w) in w_pred {
+            assert_eq!(
+                g_pred[m].to_bits(),
+                w.to_bits(),
+                "{what}: row {i} metric {m} not bit-identical"
+            );
+        }
+    }
+}
+
+/// Satellite 2 (second half): a model-store warm start hands back a
+/// bundle whose *flat batch* predictions are bit-identical to the cold
+/// fit's *recursive* reference, at any worker count.
+#[test]
+fn warm_started_bundle_predicts_bit_identically_through_flat_batches() {
+    let dir = tmp_dir("warm");
+    let g = datagen::generate(&small_cfg()).unwrap();
+    let feats: Vec<Vec<f64>> =
+        g.dataset.rows.iter().map(|r| r.features_vec()).collect();
+
+    let reference = {
+        let store = ModelStore::open(&dir).unwrap();
+        let (bundle, replayed) =
+            SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&store))
+                .unwrap();
+        assert!(!replayed, "empty store cannot replay");
+        store.flush().unwrap();
+        bundle_reference(&bundle, &feats)
+    };
+
+    let store = ModelStore::open(&dir).unwrap();
+    let (bundle, replayed) =
+        SurrogateBundle::fit_cached(&g.dataset, &g.backend_split, 7, Some(&store)).unwrap();
+    assert!(replayed, "reopened store must serve the artifact");
+    for workers in [1usize, 5] {
+        let warm = bundle.predict_batch(&feats, workers);
+        assert_bundle_matches(&warm, &reference, &format!("warm flat batch w={workers}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite 3: the call-count regression test. A `predict_batch` of
+/// `n` rows is exactly `1 + Metric::ALL.len()` flat batch entries and
+/// `(1 + Metric::ALL.len()) * n` flat rows — through the bundle, the
+/// single-row wrapper, and the `EvalService` — so no caller can
+/// silently degrade to per-row scoring (the pre-flat hot spot) without
+/// failing here.
+#[test]
+fn surrogate_batch_callers_stay_batched() {
+    let passes = 1 + Metric::ALL.len(); // classifier + 5 metric regressors
+    let g = datagen::generate(&small_cfg()).unwrap();
+    let feats: Vec<Vec<f64>> =
+        g.dataset.rows.iter().map(|r| r.features_vec()).collect();
+    let n = feats.len();
+    assert!(n > 0);
+
+    let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap();
+    assert_eq!(bundle.flat_stats(), (0, 0), "fitting never scores through flat");
+
+    // one mega-batch: one flat entry per forest, n rows each
+    bundle.predict_batch(&feats, 3);
+    assert_eq!(bundle.flat_stats(), (passes, passes * n));
+    // the classifier specifically used to be the per-row fallback
+    // (one `prob` per row); now it is exactly one batch of n rows
+    assert_eq!(bundle.classifier.flat_stats(), (1, n));
+
+    // the single-row wrapper is a batch of one, not a different path
+    bundle.predict(&feats[0]);
+    assert_eq!(bundle.flat_stats(), (2 * passes, passes * n + passes));
+
+    // through the service (what the DSE driver and router call): same
+    // counts, shifted by what the bundle has already scored
+    let svc = EvalService::new(Enablement::Gf12, 2023)
+        .with_surrogate(bundle)
+        .with_workers(4);
+    svc.predict_batch(&feats).unwrap();
+    let (batches, rows) = svc.surrogate().unwrap().flat_stats();
+    assert_eq!((batches, rows), (3 * passes, 2 * passes * n + passes));
+    // empty batches short-circuit before any counter
+    svc.predict_batch(&[]).unwrap();
+    assert_eq!(svc.surrogate().unwrap().flat_stats(), (3 * passes, 2 * passes * n + passes));
+
+    let s = svc.stats();
+    assert_eq!(s.surrogate_batches, 1);
+    assert_eq!(s.surrogate_rows, n);
+}
