@@ -38,7 +38,7 @@ use crate::simulators::SystemMetrics;
 use crate::util::json::Json;
 
 use super::eval_service::Evaluation;
-use super::store::{CompactReport, Record, ShardedStore, StoreConfig, StorePolicy};
+use super::store::{Codec, CompactReport, Record, ShardedStore, StoreConfig, StorePolicy};
 
 /// Record schema version. Bump on any *breaking* layout change to the
 /// per-record JSON; loaders skip records whose tag does not match.
@@ -83,13 +83,26 @@ pub struct CacheStoreStats {
     pub evictions: usize,
     /// Compaction passes since open (explicit + automatic).
     pub compactions: usize,
+    /// Frames loaded as undecoded spans whose body was never
+    /// tree-parsed (storage engine v2 streaming scans).
+    pub lazy_skips: usize,
+    /// Lazy frames actually decoded into records.
+    pub full_decodes: usize,
+    /// Point lookups answered by a sidecar index (definitive miss or
+    /// single-frame fetch — either way no shard scan).
+    pub sidecar_hits: usize,
+    /// Sidecars rebuilt after being found missing, torn, or stale.
+    pub sidecar_rebuilds: usize,
+    /// Records transcoded from the other codec during a rewrite of a
+    /// mixed-codec directory.
+    pub transcoded_records: usize,
 }
 
 impl std::fmt::Display for CacheStoreStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} entries ({} pending, {} B live) | {} disk hits | {} shard loads | {} flushes | {} evicted, {} tombstones, {} compactions",
+            "{} entries ({} pending, {} B live) | {} disk hits | {} shard loads | {} flushes | {} evicted, {} tombstones, {} compactions | {} lazy skips, {} decodes, {} sidecar hits, {} rebuilds, {} transcoded",
             self.entries,
             self.pending,
             self.live_bytes,
@@ -98,7 +111,12 @@ impl std::fmt::Display for CacheStoreStats {
             self.flushes,
             self.evictions,
             self.tombstones,
-            self.compactions
+            self.compactions,
+            self.lazy_skips,
+            self.full_decodes,
+            self.sidecar_hits,
+            self.sidecar_rebuilds,
+            self.transcoded_records
         )
     }
 }
@@ -212,6 +230,7 @@ impl CacheStore {
             file_prefix: "shard",
             label: "cache dir",
             policy: StorePolicy::default_auto(),
+            codec: Codec::V2Binary,
         }
     }
 
@@ -235,6 +254,16 @@ impl CacheStore {
     /// ratio) before sharing the store.
     pub fn with_policy(self, policy: StorePolicy) -> CacheStore {
         CacheStore { core: self.core.with_policy(policy) }
+    }
+
+    /// Replace the write codec (`--store-codec`); reads auto-detect
+    /// both codecs regardless.
+    pub fn with_codec(self, codec: Codec) -> CacheStore {
+        CacheStore { core: self.core.with_codec(codec) }
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.core.codec()
     }
 
     pub fn dir(&self) -> &Path {
@@ -310,6 +339,11 @@ impl CacheStore {
             live_bytes: s.live_bytes,
             evictions: s.evictions,
             compactions: s.compactions,
+            lazy_skips: s.lazy_skips,
+            full_decodes: s.full_decodes,
+            sidecar_hits: s.sidecar_hits,
+            sidecar_rebuilds: s.sidecar_rebuilds,
+            transcoded_records: s.transcoded_records,
         }
     }
 
@@ -332,6 +366,26 @@ impl CacheStore {
 
     pub fn compactions(&self) -> usize {
         self.core.compactions()
+    }
+
+    pub fn lazy_skips(&self) -> usize {
+        self.core.lazy_skips()
+    }
+
+    pub fn full_decodes(&self) -> usize {
+        self.core.full_decodes()
+    }
+
+    pub fn sidecar_hits(&self) -> usize {
+        self.core.sidecar_hits()
+    }
+
+    pub fn sidecar_rebuilds(&self) -> usize {
+        self.core.sidecar_rebuilds()
+    }
+
+    pub fn transcoded_records(&self) -> usize {
+        self.core.transcoded_records()
     }
 }
 
@@ -513,11 +567,18 @@ mod tests {
         let store = CacheStore::open(&dir).unwrap();
         assert_eq!(store.shard_loads(), 0, "opening must not read shards");
         assert!(store.get_eval(0x00ff_0000_0000_0001).is_some());
-        assert_eq!(store.shard_loads(), 1, "one lookup loads one shard");
+        assert_eq!(store.sidecar_hits(), 1, "a point lookup goes through the sidecar");
+        assert_eq!(store.shard_loads(), 0, "no shard scan for an indexed key");
         assert!(store.get_eval(0x00ff_0000_0000_0003).is_none());
-        assert_eq!(store.shard_loads(), 1, "same-shard miss loads nothing new");
+        assert_eq!(store.sidecar_hits(), 2, "the index answers the miss definitively");
+        assert_eq!(
+            store.full_decodes(),
+            1,
+            "a lookup miss never pays a full-tree parse"
+        );
         assert!(store.get_eval(0x01ff_0000_0000_0002).is_some());
-        assert_eq!(store.shard_loads(), 2);
+        assert_eq!(store.sidecar_hits(), 3);
+        assert_eq!(store.shard_loads(), 0);
         assert_eq!(store.hits(), 2);
         let _ = fs::remove_dir_all(&dir);
     }
@@ -572,11 +633,14 @@ mod tests {
 
     #[test]
     fn unknown_versions_and_corrupt_lines_are_skipped() {
+        // written under the v1 JSONL codec so garbage can be appended
+        // as text; the reopen (v2 default) must auto-detect and still
+        // skip every bad line
         let dir = tmp_dir("skip");
         let ev = sample_eval();
         let key = 0x0500_0000_0000_0042u64;
         {
-            let store = CacheStore::open(&dir).unwrap();
+            let store = CacheStore::open(&dir).unwrap().with_codec(Codec::V1Jsonl);
             store.put_eval(key, ev);
             store.flush().unwrap();
         }

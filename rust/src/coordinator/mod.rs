@@ -24,5 +24,5 @@ pub use dse_driver::{DseDriver, DseProblem, SurrogateBundle};
 pub use eval_service::{EvalService, EvalStats, Evaluation, SurrogatePoint};
 pub use model_store::{ModelKey, ModelStore, ModelStoreStats};
 pub use predict_server::{PredictClient, PredictServer, ServerStats};
-pub use store::{CompactReport, StorePolicy, StoreStats};
+pub use store::{Codec, CompactReport, StorePolicy, StoreStats};
 pub use trainer::{EvalReport, ModelCacheStats, ModelMenu, TrainOptions, Trainer};

@@ -39,7 +39,7 @@ use anyhow::Result;
 use crate::util::json::Json;
 use crate::util::rng::hash_bytes;
 
-use super::store::{CompactReport, Record, ShardedStore, StoreConfig, StorePolicy};
+use super::store::{Codec, CompactReport, Record, ShardedStore, StoreConfig, StorePolicy};
 
 /// Record schema version; bump on any *breaking* layout change
 /// (loaders skip records whose tag does not match). The ISSUE 4 store
@@ -140,13 +140,26 @@ pub struct ModelStoreStats {
     pub evictions: usize,
     /// Compaction passes since open (explicit + automatic).
     pub compactions: usize,
+    /// Artifacts scanned but *not* decoded at shard load (storage
+    /// engine v2: bodies stay raw frames until materialized).
+    pub lazy_skips: usize,
+    /// Lazy frames actually decoded into artifacts.
+    pub full_decodes: usize,
+    /// Point lookups answered by a shard's `.idx` sidecar (definitive
+    /// miss or single-frame fetch) without loading the shard.
+    pub sidecar_hits: usize,
+    /// Sidecars rebuilt after being found missing, torn, or stale.
+    pub sidecar_rebuilds: usize,
+    /// Artifacts rewritten from the other codec at flush/compact
+    /// (mixed-codec directory migration).
+    pub transcoded_records: usize,
 }
 
 impl std::fmt::Display for ModelStoreStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} artifacts ({} pending, {} B live) | {} hits / {} misses | {} shard loads | {} flushes | {} evicted, {} tombstones, {} compactions",
+            "{} artifacts ({} pending, {} B live) | {} hits / {} misses | {} shard loads | {} flushes | {} evicted, {} tombstones, {} compactions | {} lazy skips, {} decodes, {} sidecar hits, {} rebuilds, {} transcoded",
             self.entries,
             self.pending,
             self.live_bytes,
@@ -156,7 +169,12 @@ impl std::fmt::Display for ModelStoreStats {
             self.flushes,
             self.evictions,
             self.tombstones,
-            self.compactions
+            self.compactions,
+            self.lazy_skips,
+            self.full_decodes,
+            self.sidecar_hits,
+            self.sidecar_rebuilds,
+            self.transcoded_records
         )
     }
 }
@@ -203,6 +221,7 @@ impl ModelStore {
             file_prefix: "model",
             label: "model store",
             policy: StorePolicy::default_auto(),
+            codec: Codec::V2Binary,
         }
     }
 
@@ -232,6 +251,17 @@ impl ModelStore {
     /// ratio) before sharing the store.
     pub fn with_policy(self, policy: StorePolicy) -> ModelStore {
         ModelStore { core: self.core.with_policy(policy) }
+    }
+
+    /// Select the record codec new shard files are written in
+    /// (`--store-codec`). Reads auto-detect either codec regardless.
+    pub fn with_codec(self, codec: Codec) -> ModelStore {
+        ModelStore { core: self.core.with_codec(codec) }
+    }
+
+    /// Active write codec.
+    pub fn codec(&self) -> Codec {
+        self.core.codec()
     }
 
     pub fn dir(&self) -> &Path {
@@ -296,6 +326,11 @@ impl ModelStore {
             live_bytes: s.live_bytes,
             evictions: s.evictions,
             compactions: s.compactions,
+            lazy_skips: s.lazy_skips,
+            full_decodes: s.full_decodes,
+            sidecar_hits: s.sidecar_hits,
+            sidecar_rebuilds: s.sidecar_rebuilds,
+            transcoded_records: s.transcoded_records,
         }
     }
 
@@ -322,6 +357,26 @@ impl ModelStore {
     pub fn compactions(&self) -> usize {
         self.core.compactions()
     }
+
+    pub fn lazy_skips(&self) -> usize {
+        self.core.lazy_skips()
+    }
+
+    pub fn full_decodes(&self) -> usize {
+        self.core.full_decodes()
+    }
+
+    pub fn sidecar_hits(&self) -> usize {
+        self.core.sidecar_hits()
+    }
+
+    pub fn sidecar_rebuilds(&self) -> usize {
+        self.core.sidecar_rebuilds()
+    }
+
+    pub fn transcoded_records(&self) -> usize {
+        self.core.transcoded_records()
+    }
 }
 
 #[cfg(test)]
@@ -340,6 +395,8 @@ mod tests {
         Json::obj(vec![("w", Json::arr_f64(&[v, -v])), ("b", v.into())])
     }
 
+    /// v1 (JSONL) shard path — only meaningful for stores opened with
+    /// `.with_codec(Codec::V1Jsonl)`.
     fn shard_file_of(store: &ModelStore, key: u64) -> PathBuf {
         let shard = ((key >> 56) as usize) % store.shard_count();
         store.dir().join(format!("model-{shard:03}.jsonl"))
@@ -404,7 +461,8 @@ mod tests {
         let dir = tmp_dir("skip");
         let key = 0x0500_0000_0000_0042u64;
         {
-            let store = ModelStore::open(&dir).unwrap();
+            // write as v1 JSONL so raw text lines can be appended below
+            let store = ModelStore::open(&dir).unwrap().with_codec(Codec::V1Jsonl);
             store.put("f", key, payload(3.0));
             store.flush().unwrap();
         }

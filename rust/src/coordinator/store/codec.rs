@@ -1,0 +1,674 @@
+//! Record codecs — the on-disk frame format seam under `ShardedStore`
+//! (ISSUE 7 tentpole, layer 2). The store core owns slots, locking,
+//! merge, and policy; a [`RecordCodec`] owns only how an envelope
+//! `{v, kind, key, used, payload...}` becomes bytes:
+//!
+//! - **v1** ([`V1Jsonl`]): schema-tagged JSONL, one envelope object per
+//!   line — bit-identical to the PR 6 writer, so existing dirs keep
+//!   reading (and, when selected, writing) byte-for-byte.
+//! - **v2** ([`V2Binary`]): length-prefixed binary frames. Large forest
+//!   model artifacts are the motivating payload: numbers are 8 raw
+//!   bytes instead of shortest-decimal text, so those payloads shrink
+//!   roughly 2x and re-load without float re-parsing.
+//!
+//! Scans are *streaming*: they surface the envelope fields plus the raw
+//! frame span and never tree-parse the body — `decode_payload` runs
+//! only when a record is actually materialized. Each shard file carries
+//! its codec in its extension (`.jsonl` / `.fsb`), which is how mixed
+//! dirs auto-detect on read.
+//!
+//! Determinism contract: both codecs render a given (schema, key, used,
+//! kind, payload) to identical bytes on every run, and non-finite
+//! floats canonicalize the same way (v1 writes the `null` sentinel, v2
+//! writes the Null tag), so the two codecs decode to *equal* records
+//! and transcoding either direction is lossless.
+
+use std::borrow::Cow;
+
+use crate::util::json::{Json, JsonToken, JsonTokenizer};
+
+/// Magic byte opening every v2 binary frame (never valid leading JSON).
+pub const V2_MAGIC: u8 = 0xF5;
+
+const TAG_NULL: u8 = 0x00;
+const TAG_FALSE: u8 = 0x01;
+const TAG_TRUE: u8 = 0x02;
+const TAG_NUM: u8 = 0x03;
+const TAG_STR: u8 = 0x04;
+const TAG_ARR: u8 = 0x05;
+const TAG_OBJ: u8 = 0x06;
+
+/// Which frame format a store writes (reads auto-detect both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Schema-tagged JSONL (the PR 6 format).
+    V1Jsonl,
+    /// Compact length-prefixed binary frames.
+    V2Binary,
+}
+
+impl Codec {
+    pub const ALL: [Codec; 2] = [Codec::V1Jsonl, Codec::V2Binary];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::V1Jsonl => "v1",
+            Codec::V2Binary => "v2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Codec> {
+        match s {
+            "v1" | "jsonl" => Some(Codec::V1Jsonl),
+            "v2" | "binary" => Some(Codec::V2Binary),
+            _ => None,
+        }
+    }
+
+    /// Shard-file extension — the auto-detect key on read.
+    pub fn file_ext(self) -> &'static str {
+        match self {
+            Codec::V1Jsonl => "jsonl",
+            Codec::V2Binary => "fsb",
+        }
+    }
+
+    pub fn other(self) -> Codec {
+        match self {
+            Codec::V1Jsonl => Codec::V2Binary,
+            Codec::V2Binary => Codec::V1Jsonl,
+        }
+    }
+
+    /// Per-frame bytes outside the frame span (the v1 newline) — keeps
+    /// the byte-budget accounting consistent across codecs.
+    pub fn frame_overhead(self) -> usize {
+        match self {
+            Codec::V1Jsonl => 1,
+            Codec::V2Binary => 0,
+        }
+    }
+
+    pub fn imp(self) -> &'static dyn RecordCodec {
+        match self {
+            Codec::V1Jsonl => &V1Jsonl,
+            Codec::V2Binary => &V2Binary,
+        }
+    }
+}
+
+/// One envelope frame surfaced by a codec scan. `bytes` spans the whole
+/// frame with the body still encoded (decode is deferred), `offset` is
+/// its position in the scanned buffer (what sidecars index).
+pub struct Frame<'a> {
+    pub key: u64,
+    pub used: u64,
+    pub kind: Cow<'a, str>,
+    pub bytes: &'a [u8],
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScanStats {
+    /// Frames encountered, including dead ones.
+    pub frames: usize,
+    /// Frames that can never serve a read: torn, foreign schema,
+    /// garbage. (Tombstones and shadowed duplicates are accounted by
+    /// the store, which owns that context.)
+    pub dead: usize,
+}
+
+/// The codec seam at the `Record` boundary: envelope framing + payload
+/// encoding. Implementations must render deterministically — fixed
+/// inputs produce identical bytes on every run and machine.
+pub trait RecordCodec: Sync {
+    /// Append one frame (terminator included for line-oriented codecs)
+    /// and return the frame-span length (terminator excluded).
+    fn append_frame(
+        &self,
+        out: &mut Vec<u8>,
+        schema: u64,
+        key: u64,
+        used: u64,
+        kind: &str,
+        payload: Vec<(&'static str, Json)>,
+    ) -> usize;
+
+    /// Stream every frame in `bytes`, emitting the envelope + raw span
+    /// per readable frame. Bodies are never tree-parsed here.
+    fn scan(&self, bytes: &[u8], schema: u64, emit: &mut dyn FnMut(Frame<'_>)) -> ScanStats;
+
+    /// Decode one frame's payload into the record object that
+    /// `Record::decode` reads. `None` = corrupt (never served).
+    fn decode_payload(&self, frame: &[u8], schema: u64) -> Option<Json>;
+}
+
+pub fn parse_hex_key(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+pub fn hex_key(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+// ---- v1: schema-tagged JSONL ---------------------------------------
+
+pub struct V1Jsonl;
+
+impl RecordCodec for V1Jsonl {
+    fn append_frame(
+        &self,
+        out: &mut Vec<u8>,
+        schema: u64,
+        key: u64,
+        used: u64,
+        kind: &str,
+        payload: Vec<(&'static str, Json)>,
+    ) -> usize {
+        // identical field set + `Json::obj` key sort as the PR 6
+        // writer: v1 output stays byte-compatible with existing dirs
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("v", Json::from(schema as usize)),
+            ("kind", Json::from(kind)),
+            ("key", Json::from(hex_key(key).as_str())),
+            ("used", Json::from(used as usize)),
+        ];
+        for (k, v) in payload {
+            fields.push((k, v));
+        }
+        let line = Json::obj(fields).to_string();
+        out.extend_from_slice(line.as_bytes());
+        out.push(b'\n');
+        line.len()
+    }
+
+    fn scan(&self, bytes: &[u8], schema: u64, emit: &mut dyn FnMut(Frame<'_>)) -> ScanStats {
+        let mut st = ScanStats::default();
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            let end = bytes[pos..]
+                .iter()
+                .position(|&b| b == b'\n')
+                .map(|i| pos + i)
+                .unwrap_or(bytes.len());
+            let (mut s, mut e) = (pos, end);
+            pos = end + 1;
+            while s < e && bytes[s].is_ascii_whitespace() {
+                s += 1;
+            }
+            while e > s && bytes[e - 1].is_ascii_whitespace() {
+                e -= 1;
+            }
+            if s == e {
+                continue;
+            }
+            st.frames += 1;
+            match scan_envelope(&bytes[s..e], schema) {
+                Some((key, used, kind)) => {
+                    emit(Frame { key, used, kind, bytes: &bytes[s..e], offset: s })
+                }
+                None => st.dead += 1,
+            }
+        }
+        st
+    }
+
+    fn decode_payload(&self, frame: &[u8], _schema: u64) -> Option<Json> {
+        // the full envelope object; `Record::decode` reads only its
+        // payload fields, exactly as the eager loader passed it
+        Json::parse(std::str::from_utf8(frame).ok()?).ok()
+    }
+}
+
+/// Streaming envelope extraction for one JSONL frame: tokenize the
+/// top-level object, pull `v`/`key`/`used`/`kind`, and *span-skip*
+/// every other value (this is where body tree-parses are saved).
+/// Acceptance matches the eager loader: bad `v`/`key`/`kind` types or
+/// values are dead; a non-numeric `used` defaults to 0 (pre-core
+/// records); structural damage anywhere is dead.
+fn scan_envelope<'a>(line: &'a [u8], schema: u64) -> Option<(u64, u64, Cow<'a, str>)> {
+    let mut t = JsonTokenizer::new(line);
+    match t.next().ok()?? {
+        JsonToken::ObjBegin => {}
+        _ => return None,
+    }
+    let mut v: Option<u64> = None;
+    let mut key: Option<u64> = None;
+    let mut used: u64 = 0;
+    let mut kind: Option<Cow<'a, str>> = None;
+    loop {
+        match t.next().ok()?? {
+            JsonToken::Key(k) => match k.as_ref() {
+                "v" => match t.next().ok()?? {
+                    // f64-as-usize truncation matches the tree loader
+                    JsonToken::Num(n) => v = Some(n as usize as u64),
+                    _ => return None,
+                },
+                "key" => match t.next().ok()?? {
+                    JsonToken::Str(s) => key = Some(parse_hex_key(s.as_ref())?),
+                    _ => return None,
+                },
+                "used" => match t.next().ok()?? {
+                    JsonToken::Num(n) => used = n as usize as u64,
+                    JsonToken::Str(_) | JsonToken::Bool(_) | JsonToken::Null => used = 0,
+                    JsonToken::ArrBegin | JsonToken::ObjBegin => {
+                        drain_container(&mut t)?;
+                        used = 0;
+                    }
+                    _ => return None,
+                },
+                "kind" => match t.next().ok()?? {
+                    JsonToken::Str(s) => kind = Some(s),
+                    _ => return None,
+                },
+                _ => {
+                    // body field: validate + skip without building a tree
+                    t.value_span().ok()?;
+                }
+            },
+            JsonToken::ObjEnd => break,
+            _ => return None,
+        }
+    }
+    // trailing-garbage / torn-tail check, same as the tree parser
+    if t.next().ok()?.is_some() {
+        return None;
+    }
+    if v != Some(schema) {
+        return None;
+    }
+    Some((key?, used, kind?))
+}
+
+/// Drain a just-opened container to its matching close.
+fn drain_container(t: &mut JsonTokenizer<'_>) -> Option<()> {
+    let mut depth = 1usize;
+    while depth > 0 {
+        match t.next().ok()?? {
+            JsonToken::ObjBegin | JsonToken::ArrBegin => depth += 1,
+            JsonToken::ObjEnd | JsonToken::ArrEnd => depth -= 1,
+            _ => {}
+        }
+    }
+    Some(())
+}
+
+// ---- v2: length-prefixed binary frames -----------------------------
+//
+// [0xF5][schema u64 LE][key u64 LE][used u64 LE]
+// [kind_len u8][kind bytes][payload_len u32 LE][payload]
+//
+// The payload is a tagged binary encoding of the record object with
+// keys in sorted order (same order `Json::obj` gives v1), values as:
+// Null 0x00 | false 0x01 | true 0x02 | Num 0x03 + f64 bits LE |
+// Str 0x04 + u32 len + bytes | Arr 0x05 + u32 count + values |
+// Obj 0x06 + u32 count + (u32 key len + key + value)*.
+
+pub struct V2Binary;
+
+/// Fixed header bytes before the kind: magic + schema + key + used +
+/// kind length.
+const V2_HEAD: usize = 1 + 8 + 8 + 8 + 1;
+
+impl RecordCodec for V2Binary {
+    fn append_frame(
+        &self,
+        out: &mut Vec<u8>,
+        schema: u64,
+        key: u64,
+        used: u64,
+        kind: &str,
+        payload: Vec<(&'static str, Json)>,
+    ) -> usize {
+        let start = out.len();
+        out.push(V2_MAGIC);
+        out.extend_from_slice(&schema.to_le_bytes());
+        out.extend_from_slice(&key.to_le_bytes());
+        out.extend_from_slice(&used.to_le_bytes());
+        assert!(kind.len() <= u8::MAX as usize, "record kind too long: {kind}");
+        out.push(kind.len() as u8);
+        out.extend_from_slice(kind.as_bytes());
+        let len_at = out.len();
+        out.extend_from_slice(&0u32.to_le_bytes());
+        // Json::obj sorts the fields (BTreeMap) — identical logical
+        // record to the v1 rendering of the same payload
+        encode_value(out, &Json::obj(payload));
+        let plen = (out.len() - len_at - 4) as u32;
+        out[len_at..len_at + 4].copy_from_slice(&plen.to_le_bytes());
+        out.len() - start
+    }
+
+    fn scan(&self, bytes: &[u8], schema: u64, emit: &mut dyn FnMut(Frame<'_>)) -> ScanStats {
+        let mut st = ScanStats::default();
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            let Some((total, fschema, key, used, krange)) = v2_header(&bytes[pos..]) else {
+                // bad magic or torn tail: nothing past this point has a
+                // trustworthy frame boundary (no resync)
+                st.frames += 1;
+                st.dead += 1;
+                break;
+            };
+            st.frames += 1;
+            let span = &bytes[pos..pos + total];
+            if fschema == schema {
+                match std::str::from_utf8(&span[krange]) {
+                    Ok(kind) => emit(Frame {
+                        key,
+                        used,
+                        kind: Cow::Borrowed(kind),
+                        bytes: span,
+                        offset: pos,
+                    }),
+                    Err(_) => st.dead += 1,
+                }
+            } else {
+                // foreign schema but intact framing: skip past it
+                st.dead += 1;
+            }
+            pos += total;
+        }
+        st
+    }
+
+    fn decode_payload(&self, frame: &[u8], schema: u64) -> Option<Json> {
+        let (total, fschema, _, _, krange) = v2_header(frame)?;
+        if total != frame.len() || fschema != schema {
+            return None;
+        }
+        let payload = &frame[krange.end + 4..total];
+        let mut pos = 0usize;
+        let v = decode_value(payload, &mut pos)?;
+        if pos != payload.len() {
+            return None;
+        }
+        match v {
+            Json::Obj(_) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one v2 frame header at the start of `b`: `(frame_len, schema,
+/// key, used, kind byte range)`. `None` when the magic is wrong or any
+/// length runs past the buffer (a torn tail).
+fn v2_header(b: &[u8]) -> Option<(usize, u64, u64, u64, std::ops::Range<usize>)> {
+    if b.first() != Some(&V2_MAGIC) || b.len() < V2_HEAD {
+        return None;
+    }
+    let schema = u64::from_le_bytes(b[1..9].try_into().unwrap());
+    let key = u64::from_le_bytes(b[9..17].try_into().unwrap());
+    let used = u64::from_le_bytes(b[17..25].try_into().unwrap());
+    let klen = b[25] as usize;
+    let plen_at = V2_HEAD + klen;
+    if b.len() < plen_at + 4 {
+        return None;
+    }
+    let plen = u32::from_le_bytes(b[plen_at..plen_at + 4].try_into().unwrap()) as usize;
+    let total = plen_at.checked_add(4)?.checked_add(plen)?;
+    if b.len() < total {
+        return None;
+    }
+    Some((total, schema, key, used, V2_HEAD..plen_at))
+}
+
+fn encode_value(out: &mut Vec<u8>, v: &Json) {
+    match v {
+        Json::Null => out.push(TAG_NULL),
+        Json::Bool(false) => out.push(TAG_FALSE),
+        Json::Bool(true) => out.push(TAG_TRUE),
+        Json::Num(n) => {
+            if n.is_finite() {
+                out.push(TAG_NUM);
+                out.extend_from_slice(&n.to_bits().to_le_bytes());
+            } else {
+                // canonicalize NaN/±Inf exactly like the v1 `null`
+                // sentinel, so both codecs decode to equal records
+                // (readers recover NaN via `as_f64_or_nan`)
+                out.push(TAG_NULL);
+            }
+        }
+        Json::Str(s) => {
+            out.push(TAG_STR);
+            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
+        }
+        Json::Arr(a) => {
+            out.push(TAG_ARR);
+            out.extend_from_slice(&(a.len() as u32).to_le_bytes());
+            for x in a {
+                encode_value(out, x);
+            }
+        }
+        Json::Obj(o) => {
+            out.push(TAG_OBJ);
+            out.extend_from_slice(&(o.len() as u32).to_le_bytes());
+            for (k, x) in o {
+                out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+                out.extend_from_slice(k.as_bytes());
+                encode_value(out, x);
+            }
+        }
+    }
+}
+
+fn take<'a>(b: &'a [u8], pos: &mut usize, n: usize) -> Option<&'a [u8]> {
+    let s = b.get(*pos..pos.checked_add(n)?)?;
+    *pos += n;
+    Some(s)
+}
+
+fn decode_value(b: &[u8], pos: &mut usize) -> Option<Json> {
+    let tag = *b.get(*pos)?;
+    *pos += 1;
+    match tag {
+        TAG_NULL => Some(Json::Null),
+        TAG_FALSE => Some(Json::Bool(false)),
+        TAG_TRUE => Some(Json::Bool(true)),
+        TAG_NUM => {
+            let raw = take(b, pos, 8)?;
+            Some(Json::Num(f64::from_bits(u64::from_le_bytes(raw.try_into().unwrap()))))
+        }
+        TAG_STR => {
+            let n = u32::from_le_bytes(take(b, pos, 4)?.try_into().unwrap()) as usize;
+            let s = std::str::from_utf8(take(b, pos, n)?).ok()?;
+            Some(Json::Str(s.to_string()))
+        }
+        TAG_ARR => {
+            let n = u32::from_le_bytes(take(b, pos, 4)?.try_into().unwrap()) as usize;
+            let mut a = Vec::new();
+            for _ in 0..n {
+                a.push(decode_value(b, pos)?);
+            }
+            Some(Json::Arr(a))
+        }
+        TAG_OBJ => {
+            let n = u32::from_le_bytes(take(b, pos, 4)?.try_into().unwrap()) as usize;
+            let mut o = std::collections::BTreeMap::new();
+            for _ in 0..n {
+                let klen = u32::from_le_bytes(take(b, pos, 4)?.try_into().unwrap()) as usize;
+                let k = std::str::from_utf8(take(b, pos, klen)?).ok()?.to_string();
+                o.insert(k, decode_value(b, pos)?);
+            }
+            Some(Json::Obj(o))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(v: f64) -> Vec<(&'static str, Json)> {
+        vec![
+            ("val", Json::from(v)),
+            ("tags", Json::arr_str(&["x".to_string(), "y".to_string()])),
+            ("nested", Json::obj(vec![("deep", Json::arr_f64(&[v, -0.0, 2.5]))])),
+        ]
+    }
+
+    fn collect(codec: Codec, bytes: &[u8], schema: u64) -> (Vec<(u64, u64, String)>, ScanStats) {
+        let mut out = Vec::new();
+        let st = codec.imp().scan(bytes, schema, &mut |f: Frame<'_>| {
+            out.push((f.key, f.used, f.kind.to_string()));
+        });
+        (out, st)
+    }
+
+    #[test]
+    fn both_codecs_roundtrip_equal_records() {
+        for codec in Codec::ALL {
+            let imp = codec.imp();
+            let mut buf = Vec::new();
+            let flen = imp.append_frame(&mut buf, 7, 0xabcd, 3, "eval", payload(0.1));
+            assert_eq!(flen + codec.frame_overhead(), buf.len());
+            let (frames, st) = collect(codec, &buf, 7);
+            assert_eq!(st, ScanStats { frames: 1, dead: 0 });
+            assert_eq!(frames, vec![(0xabcd, 3, "eval".to_string())]);
+            let rec = imp.decode_payload(&buf[..flen], 7).expect("payload decodes");
+            assert_eq!(rec.get("val").as_f64(), Some(0.1));
+            assert_eq!(rec.get("nested").get("deep").idx(1).as_f64(), Some(-0.0));
+            assert_eq!(rec.get("tags").idx(1).as_str(), Some("y"));
+        }
+    }
+
+    #[test]
+    fn v1_and_v2_decode_to_equal_payload_fields() {
+        // incl. the non-finite canonicalization: v1 null sentinel and
+        // v2 Null tag must decode to the same Json
+        let p = || {
+            vec![
+                ("a", Json::Num(f64::NAN)),
+                ("b", Json::Num(f64::INFINITY)),
+                ("c", Json::Num(-0.0)),
+                ("d", Json::arr_f64(&[1.0 / 3.0])),
+            ]
+        };
+        let mut b1 = Vec::new();
+        let l1 = V1Jsonl.append_frame(&mut b1, 7, 9, 1, "eval", p());
+        let mut b2 = Vec::new();
+        let l2 = V2Binary.append_frame(&mut b2, 7, 9, 1, "eval", p());
+        let r1 = V1Jsonl.decode_payload(&b1[..l1], 7).unwrap();
+        let r2 = V2Binary.decode_payload(&b2[..l2], 7).unwrap();
+        for f in ["a", "b", "c", "d"] {
+            assert_eq!(r1.get(f), r2.get(f), "field {f} differs across codecs");
+        }
+        assert!(r1.get("a").as_f64_or_nan().unwrap().is_nan());
+        assert_eq!(r1.get("c").as_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn v2_frames_are_much_smaller_for_numeric_payloads() {
+        let nums: Vec<f64> = (0..64).map(|i| 1.0 / (i as f64 + 3.0)).collect();
+        let p = || vec![("w", Json::arr_f64(&nums))];
+        let mut b1 = Vec::new();
+        V1Jsonl.append_frame(&mut b1, 7, 1, 1, "m", p());
+        let mut b2 = Vec::new();
+        V2Binary.append_frame(&mut b2, 7, 1, 1, "m", p());
+        assert!(
+            b1.len() as f64 / b2.len() as f64 > 1.5,
+            "v1 {} B vs v2 {} B",
+            b1.len(),
+            b2.len()
+        );
+    }
+
+    #[test]
+    fn torn_tails_are_dead_in_both_codecs() {
+        for codec in Codec::ALL {
+            let imp = codec.imp();
+            let mut buf = Vec::new();
+            imp.append_frame(&mut buf, 7, 1, 1, "a", payload(1.0));
+            let keep = buf.len();
+            imp.append_frame(&mut buf, 7, 2, 1, "a", payload(2.0));
+            for cut in keep + 1..buf.len() {
+                let (frames, st) = collect(codec, &buf[..cut], 7);
+                assert_eq!(
+                    frames.iter().map(|f| f.0).collect::<Vec<_>>(),
+                    vec![1],
+                    "{}: torn tail must serve only the intact frame (cut {cut})",
+                    codec.name()
+                );
+                assert!(st.dead >= 1, "{}: torn frame must count dead", codec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn foreign_schema_and_garbage_are_dead_not_fatal() {
+        for codec in Codec::ALL {
+            let imp = codec.imp();
+            let mut buf = Vec::new();
+            imp.append_frame(&mut buf, 99, 5, 1, "a", payload(5.0)); // foreign schema
+            imp.append_frame(&mut buf, 7, 6, 1, "a", payload(6.0));
+            let (frames, st) = collect(codec, &buf, 7);
+            // both codecs skip a foreign-schema frame (its framing is
+            // intact) and keep reading the rest of the file
+            assert_eq!(frames.iter().map(|f| f.0).collect::<Vec<_>>(), vec![6]);
+            assert_eq!(st.frames, 2);
+            assert_eq!(st.dead, 1);
+        }
+        // v1 garbage lines + blank lines skip exactly like the old loader
+        let text = b"\n  \nthis is not json\n{\"v\":7,\"key\":\"zz\",\"kind\":\"a\",\"used\":1}\n";
+        let (frames, st) = collect(Codec::V1Jsonl, text, 7);
+        assert!(frames.is_empty());
+        assert_eq!(st, ScanStats { frames: 2, dead: 2 });
+    }
+
+    #[test]
+    fn v1_scan_agrees_with_tree_parse_on_envelopes() {
+        let lines = [
+            r#"{"b":0.5,"key":"00000000000000aa","kind":"eval","used":4,"v":7}"#,
+            // body before the envelope fields, deep nesting to span-skip
+            r#"{"aaa":{"x":[1,[2,{"y":"}]"}]]},"key":"00000000000000bb","kind":"flow","v":7}"#,
+            // pre-core record: no used stamp -> 0
+            r#"{"key":"00000000000000cc","kind":"eval","v":7}"#,
+        ];
+        let text = lines.join("\n");
+        let (frames, st) = collect(Codec::V1Jsonl, text.as_bytes(), 7);
+        assert_eq!(st, ScanStats { frames: 3, dead: 0 });
+        assert_eq!(
+            frames,
+            vec![
+                (0xaa, 4, "eval".to_string()),
+                (0xbb, 0, "flow".to_string()),
+                (0xcc, 0, "eval".to_string()),
+            ]
+        );
+        // and the spans decode to the same object the tree parser sees
+        let mut spans = Vec::new();
+        V1Jsonl.scan(text.as_bytes(), 7, &mut |f: Frame<'_>| spans.push(f.bytes.to_vec()));
+        for (span, line) in spans.iter().zip(lines) {
+            assert_eq!(
+                V1Jsonl.decode_payload(span, 7).unwrap(),
+                Json::parse(line).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn scan_offsets_index_fetchable_frames() {
+        for codec in Codec::ALL {
+            let imp = codec.imp();
+            let mut buf = Vec::new();
+            for i in 0..5u64 {
+                imp.append_frame(&mut buf, 7, i, i, "a", payload(i as f64));
+            }
+            let mut spans: Vec<(u64, usize, usize)> = Vec::new();
+            imp.scan(&buf, 7, &mut |f: Frame<'_>| {
+                spans.push((f.key, f.offset, f.bytes.len()))
+            });
+            assert_eq!(spans.len(), 5);
+            for (key, off, len) in spans {
+                // a sidecar fetch reads exactly [off, off+len): re-scan
+                // of that slice must yield the one frame, alive
+                let (frames, st) = collect(codec, &buf[off..off + len], 7);
+                assert_eq!(st, ScanStats { frames: 1, dead: 0 });
+                assert_eq!(frames[0].0, key);
+                let rec = imp.decode_payload(&buf[off..off + len], 7).unwrap();
+                assert_eq!(rec.get("val").as_f64(), Some(key as f64));
+            }
+        }
+    }
+}

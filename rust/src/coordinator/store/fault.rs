@@ -26,15 +26,22 @@ pub enum FlushFault {
     /// directory lock is released: the data is durable but the lock is
     /// left behind; a later flusher must steal it once stale.
     BeforeLockRelease,
+    /// After a shard file is renamed into place, with its `.idx`
+    /// sidecar staged to a temp file but not renamed: the record data
+    /// is durable, the sidecar is missing/stale, and readers must fall
+    /// back to the streaming scan and silently rebuild it (ISSUE 7
+    /// satellite).
+    IdxBeforeRename,
 }
 
-// 0 = disarmed, 1 = BeforeRename, 2 = BeforeLockRelease
+// 0 = disarmed, 1 = BeforeRename, 2 = BeforeLockRelease, 3 = IdxBeforeRename
 static ARMED: AtomicUsize = AtomicUsize::new(0);
 
 fn code(fault: FlushFault) -> usize {
     match fault {
         FlushFault::BeforeRename => 1,
         FlushFault::BeforeLockRelease => 2,
+        FlushFault::IdxBeforeRename => 3,
     }
 }
 

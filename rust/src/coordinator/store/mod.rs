@@ -1,16 +1,23 @@
-//! Shared persistent-store subsystem (ISSUE 4 tentpole): the generic
-//! sharded JSONL store core both `CacheStore` and `ModelStore` are
-//! built on, plus the disk primitives (atomic replace, directory lock)
-//! and the crash-injection fault hook its test suite drives.
+//! Shared persistent-store subsystem (ISSUE 4 tentpole, storage
+//! engine v2 in ISSUE 7): the generic sharded store core both
+//! `CacheStore` and `ModelStore` are built on, plus the disk
+//! primitives (atomic replace, directory lock), the pluggable record
+//! codecs ([`codec`]: `v1` JSONL / `v2` binary frames), the per-shard
+//! index sidecars ([`sidecar`]), and the crash-injection fault hook
+//! the test suite drives.
 //!
 //! See [`sharded`] for the full protocol and lifecycle-policy docs,
-//! and the README "Store subsystem" section for the on-disk layout and
-//! CLI (`fso store compact` / `fso store stats`).
+//! and the README "Store subsystem" / "Storage engine v2" sections for
+//! the on-disk layout and CLI (`fso store compact` / `fso store
+//! stats`).
 
+pub mod codec;
 pub mod fault;
 pub(crate) mod lock;
 pub mod sharded;
+pub mod sidecar;
 
+pub use codec::Codec;
 pub use sharded::{
     hex_key, parse_hex_key, CompactReport, Record, ShardedStore, StoreConfig, StorePolicy,
     StoreStats, TOMB_KIND,

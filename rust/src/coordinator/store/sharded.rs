@@ -7,20 +7,37 @@
 //!
 //! - **Content-hash shard routing**: u64 keys (splitmix-finalized
 //!   hashes) route to one of N shard files by their top byte.
-//! - **Schema-tagged JSONL records**: the store owns the envelope
-//!   (`v`, `kind`, `key`, `used`); a [`Record`] implementation encodes
-//!   and decodes the payload fields. Unknown schema versions and
-//!   corrupt lines are skipped on load — a torn or foreign record is
-//!   never served.
-//! - **Lazy per-shard load**: a shard file parses the first time a key
-//!   routed to it is requested.
+//! - **Schema-tagged envelopes, pluggable codecs** (ISSUE 7): the store
+//!   owns the envelope (`v`, `kind`, `key`, `used`); a [`Record`]
+//!   implementation encodes and decodes the payload fields; a
+//!   [`Codec`] (`v1` JSONL / `v2` binary, see `store::codec`) owns the
+//!   frame bytes. Reads auto-detect the codec per shard file by
+//!   extension, so mixed-version dirs just work; writes use the
+//!   configured codec and a flush collapses a shard to it. Unknown
+//!   schema versions and corrupt frames are skipped on load — a torn
+//!   or foreign record is never served.
+//! - **Streaming lazy loads** (ISSUE 7): a shard file is scanned the
+//!   first time a key routed to it is requested — but the scan only
+//!   tokenizes the envelope fields and records each body as an
+//!   undecoded frame span ([`SlotState::Lazy`]). The full payload
+//!   decode is deferred until a record is actually materialized by a
+//!   matching `get` (or a rewrite), so warm runs that touch a fraction
+//!   of a shard never tree-parse the rest (`lazy_skips` counts them).
+//! - **Index sidecars** (ISSUE 7): each flushed shard gets a
+//!   `<shard>.idx` bloom + key→offset sidecar (see `store::sidecar`).
+//!   A point lookup on an unloaded shard consults it first: a bloom or
+//!   table miss answers "miss" with no file scan at all, a hit fetches
+//!   exactly one frame (`sidecar_hits`). Sidecars are disposable —
+//!   missing/torn/stale ones fall back to the streaming scan and are
+//!   rebuilt best-effort (`sidecar_rebuilds`).
 //! - **Atomic flush**: dirty shards rewrite via temp + rename (same
 //!   directory, so the rename is atomic) in sorted `(kind, key)` order
-//!   — shard files are byte-deterministic for a given entry set.
+//!   — shard files are byte-deterministic for a given entry set and
+//!   codec.
 //! - **`.store.lock` ordering + merge-on-flush**: flushes serialize
 //!   through a directory lock (stolen after a staleness window, so a
 //!   crashed holder never wedges the store), and each dirty shard is
-//!   re-parsed from disk right before its rewrite so records another
+//!   re-scanned from disk right before its rewrite so records another
 //!   process flushed since our last read are folded in, never dropped.
 //!
 //! On top of the shared protocol sit the first **lifecycle policies**
@@ -46,12 +63,14 @@
 //! - **Compaction** — [`ShardedStore::compact`] (CLI: `fso store
 //!   compact`) loads and merges every shard, applies the eviction
 //!   policy, then rewrites shards dropping tombstones, superseded /
-//!   unparseable lines, and orphaned temp files. A shard whose bytes
-//!   would not change is left untouched, so compaction is idempotent
-//!   and never perturbs a warm start: reads before and after compact
-//!   are identical. Flush auto-compacts when the dead-line ratio on
-//!   disk (tombstones + garbage + shadowed lines over total lines)
-//!   crosses `auto_compact_ratio`.
+//!   unparseable frames, and orphaned temp files — and, since the
+//!   rewrite always uses the configured codec, compaction *transcodes*
+//!   shards written under the other codec (`transcoded_records`). A
+//!   shard whose bytes would not change is left untouched, so
+//!   compaction is idempotent and never perturbs a warm start: reads
+//!   before and after compact are identical. Flush auto-compacts when
+//!   the dead-frame ratio on disk (tombstones + garbage + shadowed
+//!   frames over total frames) crosses `auto_compact_ratio`.
 //!
 //! Pending-count contract (ISSUE 4 satellite): `StoreStats::pending`
 //! counts exactly the records that are not yet durable — per-slot
@@ -63,6 +82,7 @@ use std::borrow::Cow;
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
 use std::fs;
+use std::io::{Read as IoRead, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -70,9 +90,14 @@ use std::sync::Mutex;
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
+use crate::util::rng::hash_bytes;
 
+use super::codec::{Codec, Frame};
 use super::fault::{self, FlushFault};
 use super::lock::{tmp_path, write_atomic, DirLock};
+use super::sidecar::{idx_path, SidecarIndex};
+
+pub use super::codec::{hex_key, parse_hex_key};
 
 /// Reserved record kind for eviction tombstones (never a payload kind).
 pub const TOMB_KIND: &str = "tomb";
@@ -89,7 +114,7 @@ pub trait Record: Clone + PartialEq + Send {
     /// Append the payload fields to the record object.
     fn encode(&self, out: &mut Vec<(&'static str, Json)>);
     /// Decode a payload from the full record object; `None` reads as a
-    /// corrupt line (skipped on load, dropped at compaction).
+    /// corrupt frame (skipped on load, dropped at compaction).
     fn decode(kind: &str, rec: &Json) -> Option<Self>
     where
         Self: Sized;
@@ -104,17 +129,20 @@ pub struct StoreConfig {
     /// Shard-file count for fresh directories (existing directories
     /// keep the count recorded in `meta.json`).
     pub default_shards: usize,
-    /// Shard file prefix (`shard` -> `shard-003.jsonl`).
+    /// Shard file prefix (`shard` -> `shard-003.fsb`).
     pub file_prefix: &'static str,
     /// Noun used in error messages ("cache dir", "model store").
     pub label: &'static str,
     /// Lifecycle policy (eviction budgets + auto-compaction).
     pub policy: StorePolicy,
+    /// Frame codec new shard files are written with. Reads always
+    /// auto-detect per file, so this only steers writes.
+    pub codec: Codec,
 }
 
 /// Eviction / compaction policy. `Default` is unbounded with no
 /// auto-compaction; [`StorePolicy::default_auto`] is what the wrappers
-/// ship — unbounded, but auto-compacting once half the disk lines are
+/// ship — unbounded, but auto-compacting once half the disk frames are
 /// dead.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StorePolicy {
@@ -133,8 +161,8 @@ pub struct StorePolicy {
     /// whose *relative* LRU order is unaffected), and expect
     /// write-age semantics otherwise.
     pub max_age_epochs: Option<u64>,
-    /// Auto-compact after a flush when dead disk lines (tombstones +
-    /// garbage + shadowed) exceed this fraction of all lines.
+    /// Auto-compact after a flush when dead disk frames (tombstones +
+    /// garbage + shadowed) exceed this fraction of all frames.
     pub auto_compact_ratio: Option<f64>,
 }
 
@@ -159,11 +187,11 @@ pub struct StoreStats {
     pub hits: usize,
     /// Lookups that found nothing (or a kind mismatch / tombstone).
     pub misses: usize,
-    /// Shard files parsed so far (lazy loading).
+    /// Shard files scanned so far (lazy loading).
     pub shard_loads: usize,
     /// `flush` calls that wrote at least one shard.
     pub flushes: usize,
-    /// Live records currently held in memory.
+    /// Live records currently held in memory (decoded or lazy).
     pub entries: usize,
     /// Records (live or tombstone) not yet durable on disk — exactly
     /// the per-slot dirty flags, never "everything in a dirty shard".
@@ -181,6 +209,20 @@ pub struct StoreStats {
     pub compactions: usize,
     /// This instance's logical epoch (open counter of the directory).
     pub epoch: u64,
+    /// Frames loaded as undecoded spans whose body was never
+    /// tree-parsed (the streaming-scan win).
+    pub lazy_skips: usize,
+    /// Lazy frames actually decoded into records (materialized by a
+    /// matching `get` or a shard rewrite).
+    pub full_decodes: usize,
+    /// Point lookups answered by a sidecar index — a definitive miss
+    /// or a single-frame fetch, either way with no shard scan.
+    pub sidecar_hits: usize,
+    /// Sidecars rebuilt after being found missing, torn, or stale.
+    pub sidecar_rebuilds: usize,
+    /// Records rewritten from the other codec's frame format during a
+    /// flush or compaction of a mixed-codec directory.
+    pub transcoded_records: usize,
 }
 
 /// What one compaction pass did.
@@ -192,7 +234,7 @@ pub struct CompactReport {
     pub live_records: usize,
     /// Tombstones dropped from memory + disk.
     pub tombstones_dropped: usize,
-    /// Dead disk lines reclaimed (tombstones, unparseable garbage,
+    /// Dead disk frames reclaimed (tombstones, unparseable garbage,
     /// superseded-schema records, shadowed duplicates).
     pub dead_lines_dropped: usize,
     /// Records evicted by the policy during this pass.
@@ -221,6 +263,9 @@ impl std::fmt::Display for CompactReport {
 #[derive(Clone)]
 enum SlotState<R> {
     Live(R),
+    /// Scanned envelope with the body still encoded: the frame decodes
+    /// only when a matching `get` or a shard rewrite materializes it.
+    Lazy { kind: String, frame: Box<[u8]>, codec: Codec },
     /// Evicted: reads miss; persisted as a tombstone record so a
     /// concurrent process's merge-on-flush cannot resurrect the key.
     Tomb,
@@ -231,8 +276,8 @@ struct Slot<R> {
     state: SlotState<R>,
     /// Logical last-used stamp (the store epoch that last touched it).
     used: u64,
-    /// Serialized line length in bytes (incl. newline) — the unit the
-    /// byte budget is accounted in.
+    /// Serialized frame length in bytes (incl. the v1 newline) — the
+    /// unit the byte budget is accounted in.
     bytes: usize,
     /// Not yet durable on disk.
     dirty: bool,
@@ -244,15 +289,37 @@ struct ShardMeta {
     /// Needs a rewrite at the next flush (dirty slots, stamp bumps
     /// under an active policy, or evictions).
     dirty: bool,
-    /// Line stats from the most recent parse / rewrite of the disk
+    /// Frame stats from the most recent scan / rewrite of the disk
     /// file (drives the auto-compaction ratio).
     disk_lines: usize,
     disk_dead: usize,
 }
 
+/// Per-shard sidecar cache: probed lazily on the first point lookup
+/// into an unloaded shard.
+#[derive(Clone)]
+enum SideState {
+    Unprobed,
+    /// No usable index (missing/torn/stale sidecar, mixed-codec shard,
+    /// or no shard file at all): lookups fall back to the scan.
+    Unusable,
+    Ready { codec: Codec, idx: SidecarIndex },
+}
+
+/// How a sidecar answered one point lookup.
+enum SideLookup {
+    /// Definitively absent — no scan, no fetch.
+    Miss,
+    /// One frame fetched and parked as a lazy slot.
+    Frame,
+    /// No usable sidecar: caller must scan the shard.
+    Fallback,
+}
+
 struct Inner<R> {
     slots: HashMap<u64, Slot<R>>,
     shards: Vec<ShardMeta>,
+    sides: Vec<SideState>,
 }
 
 /// Disk-backed, sharded, read-through/write-behind store. Thread-safe;
@@ -273,6 +340,11 @@ pub struct ShardedStore<R: Record> {
     flushes: AtomicUsize,
     evictions: AtomicUsize,
     compactions: AtomicUsize,
+    lazy_skips: AtomicUsize,
+    full_decodes: AtomicUsize,
+    sidecar_hits: AtomicUsize,
+    sidecar_rebuilds: AtomicUsize,
+    transcoded_records: AtomicUsize,
 }
 
 impl<R: Record> ShardedStore<R> {
@@ -355,6 +427,7 @@ impl<R: Record> ShardedStore<R> {
                     ShardMeta { loaded: false, dirty: false, disk_lines: 0, disk_dead: 0 };
                     n_shards
                 ],
+                sides: vec![SideState::Unprobed; n_shards],
             }),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
@@ -362,12 +435,24 @@ impl<R: Record> ShardedStore<R> {
             flushes: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
             compactions: AtomicUsize::new(0),
+            lazy_skips: AtomicUsize::new(0),
+            full_decodes: AtomicUsize::new(0),
+            sidecar_hits: AtomicUsize::new(0),
+            sidecar_rebuilds: AtomicUsize::new(0),
+            transcoded_records: AtomicUsize::new(0),
         })
     }
 
     /// Replace the lifecycle policy (builder-style, before sharing).
     pub fn with_policy(mut self, policy: StorePolicy) -> ShardedStore<R> {
         self.cfg.policy = policy;
+        self
+    }
+
+    /// Replace the write codec (builder-style, before sharing). Reads
+    /// auto-detect regardless.
+    pub fn with_codec(mut self, codec: Codec) -> ShardedStore<R> {
+        self.cfg.codec = codec;
         self
     }
 
@@ -383,6 +468,10 @@ impl<R: Record> ShardedStore<R> {
         &self.cfg.policy
     }
 
+    pub fn codec(&self) -> Codec {
+        self.cfg.codec
+    }
+
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
@@ -393,59 +482,49 @@ impl<R: Record> ShardedStore<R> {
         ((key >> 56) as usize) % self.n_shards
     }
 
+    fn shard_path_for(&self, shard: usize, codec: Codec) -> PathBuf {
+        self.dir
+            .join(format!("{}-{shard:03}.{}", self.cfg.file_prefix, codec.file_ext()))
+    }
+
+    /// The active-codec path — where writes go.
     fn shard_path(&self, shard: usize) -> PathBuf {
-        self.dir.join(format!("{}-{shard:03}.jsonl", self.cfg.file_prefix))
+        self.shard_path_for(shard, self.cfg.codec)
     }
 
-    // ---- envelope (de)serialization --------------------------------
+    // ---- frame (de)serialization -----------------------------------
     //
-    // u64 keys are stored as 16-hex-digit strings (JSON numbers are
-    // f64 — 53 mantissa bits would corrupt hash keys). `Json::obj`
-    // sorts keys, so a rendered line is deterministic for its fields.
+    // The codec owns the bytes; the store hands it the envelope fields
+    // plus the record payload. Both codecs render deterministically
+    // (sorted object keys), so a rendered frame is a pure function of
+    // its fields.
 
-    fn render_live(&self, key: u64, rec: &R, used: u64) -> String {
-        let mut extra: Vec<(&'static str, Json)> = Vec::new();
-        rec.encode(&mut extra);
+    fn append_live(&self, out: &mut Vec<u8>, key: u64, rec: &R, used: u64) -> usize {
+        let mut payload: Vec<(&'static str, Json)> = Vec::new();
+        rec.encode(&mut payload);
         let kind = rec.kind();
-        let mut fields: Vec<(&str, Json)> = vec![
-            ("v", Json::from(self.cfg.schema_version as usize)),
-            ("kind", Json::from(kind.as_ref())),
-            ("key", Json::from(hex_key(key).as_str())),
-            ("used", Json::from(used as usize)),
-        ];
-        for (k, v) in extra {
-            fields.push((k, v));
-        }
-        Json::obj(fields).to_string()
+        self.cfg.codec.imp().append_frame(
+            out,
+            self.cfg.schema_version,
+            key,
+            used,
+            kind.as_ref(),
+            payload,
+        )
     }
 
-    fn render_tomb(&self, key: u64, used: u64) -> String {
-        Json::obj(vec![
-            ("v", Json::from(self.cfg.schema_version as usize)),
-            ("kind", Json::from(TOMB_KIND)),
-            ("key", Json::from(hex_key(key).as_str())),
-            ("used", Json::from(used as usize)),
-        ])
-        .to_string()
+    fn append_tomb(&self, out: &mut Vec<u8>, key: u64, used: u64) -> usize {
+        self.cfg.codec.imp().append_frame(
+            out,
+            self.cfg.schema_version,
+            key,
+            used,
+            TOMB_KIND,
+            Vec::new(),
+        )
     }
 
-    fn parse_line(&self, line: &str) -> Option<(u64, u64, SlotState<R>)> {
-        let rec = Json::parse(line).ok()?;
-        if rec.get("v").as_usize().map(|v| v as u64) != Some(self.cfg.schema_version) {
-            return None;
-        }
-        let key = rec.get("key").as_str().and_then(parse_hex_key)?;
-        // pre-core records carry no stamp: they read as "oldest"
-        let used = rec.get("used").as_usize().map(|v| v as u64).unwrap_or(0);
-        let kind = rec.get("kind").as_str()?;
-        if kind == TOMB_KIND {
-            return Some((key, used, SlotState::Tomb));
-        }
-        let r = R::decode(kind, &rec)?;
-        Some((key, used, SlotState::Live(r)))
-    }
-
-    /// Parse a shard file into the slots the first time a key routed
+    /// Scan a shard file into the slots the first time a key routed
     /// to it is requested.
     fn load_shard(&self, inner: &mut Inner<R>, shard: usize) {
         if inner.shards[shard].loaded {
@@ -453,65 +532,239 @@ impl<R: Record> ShardedStore<R> {
         }
         inner.shards[shard].loaded = true;
         self.shard_loads.fetch_add(1, Ordering::Relaxed);
-        self.parse_shard_lines(inner, shard);
+        self.scan_shard(inner, shard);
     }
 
     /// The raw disk-to-memory merge under `load_shard`, the flush-time
-    /// re-read, and the compact-time sweep. Unknown schema versions,
-    /// unknown kinds, and corrupt lines are skipped (a half-written or
+    /// re-read, and the compact-time sweep — streaming: the codec scan
+    /// surfaces envelopes and raw frame spans, and bodies park as
+    /// [`SlotState::Lazy`] without a tree parse. Both codec files are
+    /// scanned (active first), so mixed-codec dirs auto-detect; within
+    /// and across files the first frame per key wins. Unknown schema
+    /// versions and corrupt frames are skipped (a half-written or
     /// foreign record must never sink a run). Merge rule: in-memory
     /// entries win unless the disk stamp is strictly newer *and* ours
     /// is clean — a fresher use or eviction by a concurrent process
     /// replaces a clean slot; our own unflushed data is never clobbered.
-    /// Also refreshes the shard's dead-line stats (tombstones +
-    /// garbage + in-file shadowed duplicates) for auto-compaction.
-    fn parse_shard_lines(&self, inner: &mut Inner<R>, shard: usize) {
-        let text = match fs::read_to_string(self.shard_path(shard)) {
-            Ok(t) => t,
-            Err(_) => {
-                // never flushed, or unreadable: treat as empty
-                inner.shards[shard].disk_lines = 0;
-                inner.shards[shard].disk_dead = 0;
-                return;
-            }
-        };
+    /// Also refreshes the shard's dead-frame stats (tombstones +
+    /// garbage + shadowed duplicates) for auto-compaction.
+    fn scan_shard(&self, inner: &mut Inner<R>, shard: usize) {
         let mut total = 0usize;
         let mut dead = 0usize;
+        let mut lazy = 0usize;
         let mut seen: HashSet<u64> = HashSet::new();
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            total += 1;
-            let Some((key, used, state)) = self.parse_line(line) else {
-                dead += 1;
+        let schema = self.cfg.schema_version;
+        for codec in [self.cfg.codec, self.cfg.codec.other()] {
+            let Ok(bytes) = fs::read(self.shard_path_for(shard, codec)) else {
                 continue;
             };
-            if !seen.insert(key) {
-                // in-file duplicate: first record wins, later copies
-                // are shadowed (and reclaimable)
-                dead += 1;
-                continue;
-            }
-            if matches!(state, SlotState::Tomb) {
-                dead += 1; // tombstones are reclaimable at compaction
-            }
-            let bytes = line.len() + 1;
-            match inner.slots.entry(key) {
-                Entry::Vacant(v) => {
-                    v.insert(Slot { state, used, bytes, dirty: false });
+            let slots = &mut inner.slots;
+            let st = codec.imp().scan(&bytes, schema, &mut |f: Frame<'_>| {
+                if !seen.insert(f.key) {
+                    // duplicate: first frame wins, later copies are
+                    // shadowed (and reclaimable)
+                    dead += 1;
+                    return;
                 }
-                Entry::Occupied(mut o) => {
-                    let cur = o.get();
-                    if !cur.dirty && used > cur.used {
-                        o.insert(Slot { state, used, bytes, dirty: false });
+                let state = if f.kind.as_ref() == TOMB_KIND {
+                    dead += 1; // tombstones are reclaimable at compaction
+                    SlotState::Tomb
+                } else {
+                    lazy += 1;
+                    SlotState::Lazy {
+                        kind: f.kind.into_owned(),
+                        frame: Box::from(f.bytes),
+                        codec,
+                    }
+                };
+                let bytes_len = f.bytes.len() + codec.frame_overhead();
+                match slots.entry(f.key) {
+                    Entry::Vacant(v) => {
+                        v.insert(Slot { state, used: f.used, bytes: bytes_len, dirty: false });
+                    }
+                    Entry::Occupied(mut o) => {
+                        let cur = o.get();
+                        if !cur.dirty && f.used > cur.used {
+                            o.insert(Slot {
+                                state,
+                                used: f.used,
+                                bytes: bytes_len,
+                                dirty: false,
+                            });
+                        }
                     }
                 }
-            }
+            });
+            total += st.frames;
+            dead += st.dead;
+        }
+        if lazy > 0 {
+            self.lazy_skips.fetch_add(lazy, Ordering::Relaxed);
         }
         inner.shards[shard].disk_lines = total;
         inner.shards[shard].disk_dead = dead;
+    }
+
+    /// Decode a lazy slot in place. A frame whose payload fails to
+    /// decode is dead: the slot is dropped (reads miss) and the next
+    /// rewrite reclaims it.
+    fn materialize(&self, inner: &mut Inner<R>, shard: usize, key: u64) {
+        let decoded = match inner.slots.get(&key) {
+            Some(Slot { state: SlotState::Lazy { kind, frame, codec }, .. }) => {
+                self.full_decodes.fetch_add(1, Ordering::Relaxed);
+                Some(
+                    codec
+                        .imp()
+                        .decode_payload(frame, self.cfg.schema_version)
+                        .and_then(|obj| R::decode(kind, &obj)),
+                )
+            }
+            _ => None,
+        };
+        match decoded {
+            Some(Some(r)) => {
+                if let Some(slot) = inner.slots.get_mut(&key) {
+                    slot.state = SlotState::Live(r);
+                }
+            }
+            Some(None) => {
+                inner.slots.remove(&key);
+                inner.shards[shard].disk_dead += 1;
+            }
+            None => {}
+        }
+    }
+
+    /// Probe the sidecar situation for a shard: which codec file
+    /// exists, and whether its `.idx` is present, parseable, and
+    /// matches the file length. Returns the state plus a codec to
+    /// rebuild for when the shard file is fine but the sidecar is not.
+    fn probe_sidecar(&self, shard: usize) -> (SideState, Option<Codec>) {
+        let mut found: Option<(Codec, u64)> = None;
+        for codec in [self.cfg.codec, self.cfg.codec.other()] {
+            if let Ok(m) = fs::metadata(self.shard_path_for(shard, codec)) {
+                if found.is_some() {
+                    // both codec files present: only a scan can merge
+                    // them (first-frame-wins across files)
+                    return (SideState::Unusable, None);
+                }
+                found = Some((codec, m.len()));
+            }
+        }
+        let Some((codec, len)) = found else {
+            return (SideState::Unusable, None); // no shard file at all
+        };
+        let path = self.shard_path_for(shard, codec);
+        let idx = fs::read_to_string(idx_path(&path))
+            .ok()
+            .and_then(|t| SidecarIndex::parse(&t))
+            .filter(|i| i.codec == codec && i.len == len);
+        match idx {
+            Some(idx) => (SideState::Ready { codec, idx }, None),
+            None => (SideState::Unusable, Some(codec)),
+        }
+    }
+
+    /// Re-derive a shard's sidecar from its body (the authoritative
+    /// bytes) and write it atomically, best-effort.
+    fn rebuild_sidecar(&self, shard: usize, codec: Codec) {
+        let path = self.shard_path_for(shard, codec);
+        let Ok(body) = fs::read(&path) else {
+            return;
+        };
+        let mut entries: Vec<(u64, u64, u64)> = Vec::new();
+        let mut seen: HashSet<u64> = HashSet::new();
+        codec.imp().scan(&body, self.cfg.schema_version, &mut |f: Frame<'_>| {
+            // the seen-set must gate *before* the tombstone test: a
+            // tomb frame shadowing a later live duplicate means the
+            // key is dead, and indexing the shadowed copy would serve
+            // a record the scan path correctly misses
+            if seen.insert(f.key) && f.kind.as_ref() != TOMB_KIND {
+                entries.push((f.key, f.offset as u64, f.bytes.len() as u64));
+            }
+        });
+        let idx = SidecarIndex::build(codec, &body, &entries);
+        let _ = write_atomic(&idx_path(&path), idx.render().as_bytes());
+        self.sidecar_rebuilds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Read exactly one frame span out of a shard file and verify it:
+    /// the re-scan of the fetched bytes must yield a single live frame
+    /// for the expected key, or the sidecar that pointed here is stale.
+    fn fetch_frame(
+        &self,
+        shard: usize,
+        codec: Codec,
+        off: u64,
+        len: u64,
+        key: u64,
+    ) -> Option<(u64, String, Box<[u8]>)> {
+        let path = self.shard_path_for(shard, codec);
+        let mut file = fs::File::open(&path).ok()?;
+        file.seek(SeekFrom::Start(off)).ok()?;
+        let mut buf = vec![0u8; len as usize];
+        file.read_exact(&mut buf).ok()?;
+        let mut hit: Option<(u64, String, Box<[u8]>)> = None;
+        let st = codec.imp().scan(&buf, self.cfg.schema_version, &mut |f: Frame<'_>| {
+            if hit.is_none()
+                && f.offset == 0
+                && f.bytes.len() == buf.len()
+                && f.key == key
+                && f.kind.as_ref() != TOMB_KIND
+            {
+                hit = Some((f.used, f.kind.into_owned(), Box::from(f.bytes)));
+            }
+        });
+        if st.frames != 1 || st.dead != 0 {
+            return None;
+        }
+        hit
+    }
+
+    /// Answer a point lookup on an *unloaded* shard from its sidecar,
+    /// if one is usable. A fetched frame parks as a clean lazy slot;
+    /// any defect flips the shard to scan-fallback and rebuilds the
+    /// sidecar from the shard body.
+    fn sidecar_get(&self, inner: &mut Inner<R>, shard: usize, key: u64) -> SideLookup {
+        if matches!(inner.sides[shard], SideState::Unprobed) {
+            let (state, rebuild) = self.probe_sidecar(shard);
+            inner.sides[shard] = state;
+            if let Some(codec) = rebuild {
+                // shard file is fine, sidecar is missing/torn/stale:
+                // this lookup falls back to the scan, the next open
+                // finds a fresh index
+                self.rebuild_sidecar(shard, codec);
+            }
+        }
+        let (codec, off, len) = match &inner.sides[shard] {
+            SideState::Ready { codec, idx } => {
+                if !idx.may_contain(key) {
+                    return SideLookup::Miss;
+                }
+                match idx.lookup(key) {
+                    Some((off, len)) => (*codec, off, len),
+                    None => return SideLookup::Miss,
+                }
+            }
+            _ => return SideLookup::Fallback,
+        };
+        match self.fetch_frame(shard, codec, off, len, key) {
+            Some((used, kind, frame)) => {
+                let bytes = frame.len() + codec.frame_overhead();
+                inner.slots.insert(
+                    key,
+                    Slot { state: SlotState::Lazy { kind, frame, codec }, used, bytes, dirty: false },
+                );
+                SideLookup::Frame
+            }
+            None => {
+                // the index pointed at garbage: it is stale relative to
+                // the shard body — discard it and re-derive
+                inner.sides[shard] = SideState::Unusable;
+                self.rebuild_sidecar(shard, codec);
+                SideLookup::Fallback
+            }
+        }
     }
 
     /// Force every shard into memory (CLI stats and union assertions;
@@ -523,16 +776,16 @@ impl<R: Record> ShardedStore<R> {
         }
     }
 
-    /// Merge every shard from disk, one parse per shard: a first touch
+    /// Merge every shard from disk, one scan per shard: a first touch
     /// goes through the lazy-load path; an already-loaded shard
-    /// re-parses to fold in records concurrent processes flushed since
+    /// re-scans to fold in records concurrent processes flushed since
     /// we read it. Call with the `DirLock` held — then the disk state
     /// cannot move underneath, and the merged view stays current for
     /// the rest of the locked section.
     fn merge_all(&self, inner: &mut Inner<R>) {
         for s in 0..self.n_shards {
             if inner.shards[s].loaded {
-                self.parse_shard_lines(inner, s);
+                self.scan_shard(inner, s);
             } else {
                 self.load_shard(inner, s);
             }
@@ -540,14 +793,38 @@ impl<R: Record> ShardedStore<R> {
     }
 
     /// Live record of `kind` for `key`, if known. A key held under a
-    /// different kind — or a tombstone — reads as a miss. A hit bumps
-    /// the LRU stamp to the current epoch (marking the shard for
-    /// rewrite only when an eviction budget is active, so unbounded
-    /// warm runs stay read-only on disk).
+    /// different kind — or a tombstone — reads as a miss. On an
+    /// unloaded shard the sidecar answers first: a definitive index
+    /// miss never touches the shard file, an index hit fetches one
+    /// frame, and only a fallback scans the shard. A hit bumps the LRU
+    /// stamp to the current epoch (marking the shard for rewrite only
+    /// when an eviction budget is active, so unbounded warm runs stay
+    /// read-only on disk).
     pub fn get(&self, kind: &str, key: u64) -> Option<R> {
         let mut inner = self.inner.lock().unwrap();
         let shard = self.shard_of(key);
-        self.load_shard(&mut inner, shard);
+        if !inner.shards[shard].loaded && !inner.slots.contains_key(&key) {
+            match self.sidecar_get(&mut inner, shard, key) {
+                SideLookup::Miss => {
+                    self.sidecar_hits.fetch_add(1, Ordering::Relaxed);
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                SideLookup::Frame => {
+                    self.sidecar_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                SideLookup::Fallback => self.load_shard(&mut inner, shard),
+            }
+        }
+        // decode a lazy slot only when the kind matches: a mismatch is
+        // a miss and must not pay (or count) a full-tree parse
+        let lazy_match = matches!(
+            inner.slots.get(&key),
+            Some(Slot { state: SlotState::Lazy { kind: k, .. }, .. }) if k.as_str() == kind
+        );
+        if lazy_match {
+            self.materialize(&mut inner, shard, key);
+        }
         let epoch = self.epoch;
         let mut bumped = false;
         let hit = match inner.slots.get_mut(&key) {
@@ -587,6 +864,16 @@ impl<R: Record> ShardedStore<R> {
         let mut inner = self.inner.lock().unwrap();
         let shard = self.shard_of(key);
         let epoch = self.epoch;
+        // a lazy slot of the same kind must decode before the
+        // same-value check can compare records
+        let lazy_same_kind = matches!(
+            inner.slots.get(&key),
+            Some(Slot { state: SlotState::Lazy { kind, .. }, .. })
+                if kind.as_str() == rec.kind().as_ref()
+        );
+        if lazy_same_kind {
+            self.materialize(&mut inner, shard, key);
+        }
         let same = matches!(
             inner.slots.get(&key),
             Some(Slot { state: SlotState::Live(cur), .. }) if *cur == rec
@@ -608,7 +895,9 @@ impl<R: Record> ShardedStore<R> {
             // work for the common unbounded store (flush's render pass
             // refreshes `bytes` to the exact length either way)
             let bytes = if self.cfg.policy.max_bytes.is_some() {
-                self.render_live(key, &rec, epoch).len() + 1
+                let mut scratch = Vec::new();
+                self.append_live(&mut scratch, key, &rec, epoch)
+                    + self.cfg.codec.frame_overhead()
             } else {
                 0
             };
@@ -633,7 +922,7 @@ impl<R: Record> ShardedStore<R> {
         self.load_shard(&mut inner, shard);
         let live = matches!(
             inner.slots.get(&key),
-            Some(Slot { state: SlotState::Live(_), .. })
+            Some(Slot { state: SlotState::Live(_) | SlotState::Lazy { .. }, .. })
         );
         if live {
             self.tombstone(&mut inner, key);
@@ -643,7 +932,10 @@ impl<R: Record> ShardedStore<R> {
 
     fn tombstone(&self, inner: &mut Inner<R>, key: u64) {
         let epoch = self.epoch;
-        let bytes = self.render_tomb(key, epoch).len() + 1;
+        let bytes = {
+            let mut scratch = Vec::new();
+            self.append_tomb(&mut scratch, key, epoch) + self.cfg.codec.frame_overhead()
+        };
         inner
             .slots
             .insert(key, Slot { state: SlotState::Tomb, used: epoch, bytes, dirty: true });
@@ -654,7 +946,9 @@ impl<R: Record> ShardedStore<R> {
 
     /// Enforce the eviction policy over the (fully loaded) slot map:
     /// age bound first, then LRU down to the byte / record budgets.
-    /// Deterministic: candidates order by (stamp, key).
+    /// Deterministic: candidates order by (stamp, key). Lazy slots are
+    /// live records for policy purposes — their stamps and frame sizes
+    /// are exact without a decode.
     fn apply_policy(&self, inner: &mut Inner<R>) {
         let pol = self.cfg.policy.clone();
         let epoch = self.epoch;
@@ -663,7 +957,7 @@ impl<R: Record> ShardedStore<R> {
                 .slots
                 .iter()
                 .filter_map(|(&k, s)| {
-                    let live = matches!(s.state, SlotState::Live(_));
+                    let live = matches!(s.state, SlotState::Live(_) | SlotState::Lazy { .. });
                     (live && epoch.saturating_sub(s.used) > max_age).then_some(k)
                 })
                 .collect();
@@ -676,7 +970,7 @@ impl<R: Record> ShardedStore<R> {
             .slots
             .iter()
             .filter_map(|(&k, s)| match s.state {
-                SlotState::Live(_) => Some((s.used, k, s.bytes)),
+                SlotState::Live(_) | SlotState::Lazy { .. } => Some((s.used, k, s.bytes)),
                 SlotState::Tomb => None,
             })
             .collect();
@@ -700,40 +994,68 @@ impl<R: Record> ShardedStore<R> {
         }
     }
 
-    /// Serialize one shard's slots in sorted (kind, key) order.
-    /// Returns (body, line count, tombstone count) and refreshes each
-    /// written slot's byte size to the exact rendered length.
-    fn render_shard(&self, inner: &mut Inner<R>, shard: usize) -> (String, usize, usize) {
-        let mut lines: Vec<(String, u64, String)> = Vec::new();
+    /// Serialize one shard's slots in sorted (kind, key) order under
+    /// the active codec, materializing (and thereby transcoding) any
+    /// lazy frames first. Refreshes each written slot's byte size to
+    /// the exact rendered length and returns the live-frame table the
+    /// sidecar is built from.
+    fn render_shard(&self, inner: &mut Inner<R>, shard: usize) -> RenderedShard {
+        // a rewrite re-encodes every record: lazy frames decode here,
+        // and frames written under the other codec count as transcoded
+        let lazy: Vec<(u64, bool)> = inner
+            .slots
+            .iter()
+            .filter_map(|(&k, s)| match &s.state {
+                SlotState::Lazy { codec, .. } if self.shard_of(k) == shard => {
+                    Some((k, *codec != self.cfg.codec))
+                }
+                _ => None,
+            })
+            .collect();
+        for &(k, transcode) in &lazy {
+            self.materialize(inner, shard, k);
+            if transcode && inner.slots.contains_key(&k) {
+                self.transcoded_records.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let mut order: Vec<(String, u64)> = Vec::new();
         let mut tombs = 0usize;
         for (&key, slot) in &inner.slots {
             if self.shard_of(key) != shard {
                 continue;
             }
-            let (kind, line) = match &slot.state {
-                SlotState::Live(r) => {
-                    (r.kind().into_owned(), self.render_live(key, r, slot.used))
-                }
+            match &slot.state {
+                SlotState::Live(r) => order.push((r.kind().into_owned(), key)),
                 SlotState::Tomb => {
                     tombs += 1;
-                    (TOMB_KIND.to_string(), self.render_tomb(key, slot.used))
+                    order.push((TOMB_KIND.to_string(), key));
                 }
-            };
-            lines.push((kind, key, line));
-        }
-        for (_, key, line) in &lines {
-            if let Some(slot) = inner.slots.get_mut(key) {
-                slot.bytes = line.len() + 1;
+                SlotState::Lazy { .. } => unreachable!("lazy slots materialized above"),
             }
         }
         // sorted (kind, key) order: shard bytes are deterministic
-        lines.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
-        let mut body = String::new();
-        for (_, _, line) in &lines {
-            body.push_str(line);
-            body.push('\n');
+        order.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+        let mut body: Vec<u8> = Vec::new();
+        let mut entries: Vec<(u64, u64, u64)> = Vec::new();
+        let frames = order.len();
+        for (kind, key) in &order {
+            let off = body.len() as u64;
+            let flen = {
+                let slot = &inner.slots[key];
+                match &slot.state {
+                    SlotState::Live(r) => self.append_live(&mut body, *key, r, slot.used),
+                    SlotState::Tomb => self.append_tomb(&mut body, *key, slot.used),
+                    SlotState::Lazy { .. } => unreachable!("lazy slots materialized above"),
+                }
+            };
+            if let Some(slot) = inner.slots.get_mut(key) {
+                slot.bytes = flen + self.cfg.codec.frame_overhead();
+            }
+            if kind != TOMB_KIND {
+                entries.push((*key, off, flen as u64));
+            }
         }
-        (body, lines.len(), tombs)
+        RenderedShard { body, entries, frames, tombs }
     }
 
     fn clear_slot_dirty(&self, inner: &mut Inner<R>, shard: usize) {
@@ -759,10 +1081,15 @@ impl<R: Record> ShardedStore<R> {
     /// across processes by the directory lock and merged with the disk
     /// state first — a flush never drops entries: neither on-disk
     /// records this run did not happen to read, nor records a
-    /// concurrent process flushed since. When an eviction budget is
-    /// active the policy is enforced first (which loads every shard).
-    /// Returns the number of shard files written; may trigger an
-    /// auto-compaction afterwards (see `StorePolicy`).
+    /// concurrent process flushed since. Each written shard also gets
+    /// a fresh `.idx` sidecar (after the shard rename, so a crash
+    /// between the two leaves data durable and the sidecar merely
+    /// stale), and the other codec's file for that shard is removed —
+    /// a flush collapses a mixed-codec shard to the active codec. When
+    /// an eviction budget is active the policy is enforced first
+    /// (which loads every shard). Returns the number of shard files
+    /// written; may trigger an auto-compaction afterwards (see
+    /// `StorePolicy`).
     pub fn flush(&self) -> Result<usize> {
         // cheap dirtiness pre-check, then take the cross-process lock
         // *without* holding the in-process Mutex: a contended DirLock
@@ -799,24 +1126,45 @@ impl<R: Record> ShardedStore<R> {
             if !premerged {
                 // merge-on-flush; redundant when merge_all already ran
                 // under this same lock (the disk cannot have moved)
-                self.parse_shard_lines(&mut inner, shard);
+                self.scan_shard(&mut inner, shard);
                 inner.shards[shard].loaded = true;
             }
-            let (body, lines, tombs) = self.render_shard(&mut inner, shard);
+            let r = self.render_shard(&mut inner, shard);
             let path = self.shard_path(shard);
             if fault::trip(FlushFault::BeforeRename) {
                 // emulate a kill after the temp write, before the
                 // rename: the temp file exists, the shard file is
                 // untouched, and the directory lock stays behind (the
                 // "process" died holding it)
-                let _ = fs::write(tmp_path(&path), body.as_bytes());
+                let _ = fs::write(tmp_path(&path), &r.body);
                 std::mem::forget(lock);
                 anyhow::bail!("injected crash before rename (store::fault)");
             }
-            write_atomic(&path, body.as_bytes())?;
+            write_atomic(&path, &r.body)?;
+            // the shard is now wholly under the active codec: drop the
+            // other codec's file (its frames were merged above) and its
+            // now-dangling sidecar
+            let other = self.shard_path_for(shard, self.cfg.codec.other());
+            let _ = fs::remove_file(idx_path(&other));
+            let _ = fs::remove_file(&other);
+            let idx = SidecarIndex::build(self.cfg.codec, &r.body, &r.entries);
+            let ip = idx_path(&path);
+            if fault::trip(FlushFault::IdxBeforeRename) {
+                // emulate a kill after the shard rename with the
+                // sidecar still staged: records are durable, the old
+                // sidecar (if any) is stale against the new body, and
+                // the lock is left behind
+                let _ = fs::write(tmp_path(&ip), idx.render().as_bytes());
+                std::mem::forget(lock);
+                anyhow::bail!("injected crash before sidecar rename (store::fault)");
+            }
+            // sidecar writes are best-effort: the store must work
+            // (scan-fallback) on a read-only or full disk
+            let _ = write_atomic(&ip, idx.render().as_bytes());
+            inner.sides[shard] = SideState::Unprobed;
             inner.shards[shard].dirty = false;
-            inner.shards[shard].disk_lines = lines;
-            inner.shards[shard].disk_dead = tombs;
+            inner.shards[shard].disk_lines = r.frames;
+            inner.shards[shard].disk_dead = r.tombs;
             self.clear_slot_dirty(&mut inner, shard);
         }
         self.flushes.fetch_add(1, Ordering::Relaxed);
@@ -835,16 +1183,19 @@ impl<R: Record> ShardedStore<R> {
     }
 
     /// Compaction pass: load + merge every shard, enforce the eviction
-    /// policy, drop tombstones and dead lines, and rewrite only the
+    /// policy, drop tombstones and dead frames, and rewrite only the
     /// shards whose bytes change (so a second compact is a no-op and a
-    /// warm start straddling a compact replays identical reads). Also
-    /// sweeps orphaned temp files left by killed writers. Serialized
-    /// by the directory lock; also persists any pending writes.
+    /// warm start straddling a compact replays identical reads). The
+    /// rewrite uses the active codec, so compaction transcodes shards
+    /// written under the other one. Also sweeps orphaned temp files
+    /// left by killed writers and refreshes any sidecar that no longer
+    /// matches its shard body. Serialized by the directory lock; also
+    /// persists any pending writes.
     pub fn compact(&self) -> Result<CompactReport> {
         let lock = DirLock::acquire(&self.dir)?;
         let mut inner = self.inner.lock().unwrap();
         // merge-on-compact: fold in records concurrent processes
-        // flushed since our lazy loads (one parse per shard)
+        // flushed since our lazy loads (one scan per shard)
         self.merge_all(&mut inner);
         let ev0 = self.evictions.load(Ordering::Relaxed);
         if self.cfg.policy.is_bounded() {
@@ -867,33 +1218,61 @@ impl<R: Record> ShardedStore<R> {
         for shard in 0..self.n_shards {
             lock.refresh();
             let path = self.shard_path(shard);
-            let before = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-            rep.bytes_before += before;
-            let (body, lines, _) = self.render_shard(&mut inner, shard);
-            if body.is_empty() {
-                if before > 0 {
+            let other = self.shard_path_for(shard, self.cfg.codec.other());
+            let active_before = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            let other_before = fs::metadata(&other).map(|m| m.len()).unwrap_or(0);
+            rep.bytes_before += active_before + other_before;
+            let r = self.render_shard(&mut inner, shard);
+            if r.body.is_empty() {
+                if active_before > 0 || other_before > 0 {
                     let _ = fs::remove_file(&path);
+                    let _ = fs::remove_file(&other);
                     rep.shards_rewritten += 1;
                 }
+                let _ = fs::remove_file(idx_path(&path));
+                let _ = fs::remove_file(idx_path(&other));
             } else {
-                let unchanged = before == body.len() as u64
-                    && fs::read(&path).map(|b| b == body.as_bytes()).unwrap_or(false);
+                let unchanged = other_before == 0
+                    && active_before == r.body.len() as u64
+                    && fs::read(&path).map(|b| b == r.body).unwrap_or(false);
                 if !unchanged {
-                    write_atomic(&path, body.as_bytes())?;
+                    write_atomic(&path, &r.body)?;
+                    let _ = fs::remove_file(idx_path(&other));
+                    let _ = fs::remove_file(&other);
                     rep.shards_rewritten += 1;
                 }
-                rep.bytes_after += body.len() as u64;
+                rep.bytes_after += r.body.len() as u64;
+                // refresh the sidecar only when it is not already an
+                // exact match for the body — the hash check keeps a
+                // second compact byte-level idempotent (and quietly
+                // heals sidecars torn by a crashed writer)
+                let ip = idx_path(&path);
+                let fresh = fs::read_to_string(&ip)
+                    .ok()
+                    .and_then(|t| SidecarIndex::parse(&t))
+                    .is_some_and(|i| {
+                        i.codec == self.cfg.codec
+                            && i.len == r.body.len() as u64
+                            && i.hash == hash_bytes(&r.body)
+                    });
+                if !fresh {
+                    let idx = SidecarIndex::build(self.cfg.codec, &r.body, &r.entries);
+                    let _ = write_atomic(&ip, idx.render().as_bytes());
+                }
             }
+            inner.sides[shard] = SideState::Unprobed;
             inner.shards[shard].dirty = false;
-            inner.shards[shard].disk_lines = lines;
+            inner.shards[shard].disk_lines = r.frames;
             inner.shards[shard].disk_dead = 0;
             self.clear_slot_dirty(&mut inner, shard);
-            rep.live_records += lines;
+            rep.live_records += r.frames;
         }
         // sweep crash leftovers: orphaned *shard* temp files from
-        // killed writers. Meta temps are deliberately spared — another
-        // process may be mid-open (the meta epoch bump takes no
-        // DirLock), and deleting its staged temp would fail that open.
+        // killed writers (shard bodies and `.idx` sidecars both stage
+        // as `.{prefix}-...tmp-...`). Meta temps are deliberately
+        // spared — another process may be mid-open (the meta epoch
+        // bump takes no DirLock), and deleting its staged temp would
+        // fail that open.
         let tmp_prefix = format!(".{}-", self.cfg.file_prefix);
         if let Ok(rd) = fs::read_dir(&self.dir) {
             for e in rd.flatten() {
@@ -909,7 +1288,8 @@ impl<R: Record> ShardedStore<R> {
     }
 
     /// Snapshot the store counters. `pending` counts exactly the
-    /// not-yet-durable slots (the ISSUE 4 drift fix).
+    /// not-yet-durable slots (the ISSUE 4 drift fix). Lazy slots count
+    /// as live entries — they serve reads, just without a decode yet.
     pub fn stats(&self) -> StoreStats {
         let inner = self.inner.lock().unwrap();
         let mut entries = 0usize;
@@ -918,7 +1298,7 @@ impl<R: Record> ShardedStore<R> {
         let mut live_bytes = 0u64;
         for slot in inner.slots.values() {
             match slot.state {
-                SlotState::Live(_) => {
+                SlotState::Live(_) | SlotState::Lazy { .. } => {
                     entries += 1;
                     live_bytes += slot.bytes as u64;
                 }
@@ -940,6 +1320,11 @@ impl<R: Record> ShardedStore<R> {
             evictions: self.evictions.load(Ordering::Relaxed),
             compactions: self.compactions.load(Ordering::Relaxed),
             epoch: self.epoch,
+            lazy_skips: self.lazy_skips.load(Ordering::Relaxed),
+            full_decodes: self.full_decodes.load(Ordering::Relaxed),
+            sidecar_hits: self.sidecar_hits.load(Ordering::Relaxed),
+            sidecar_rebuilds: self.sidecar_rebuilds.load(Ordering::Relaxed),
+            transcoded_records: self.transcoded_records.load(Ordering::Relaxed),
         }
     }
 
@@ -966,6 +1351,36 @@ impl<R: Record> ShardedStore<R> {
     pub fn compactions(&self) -> usize {
         self.compactions.load(Ordering::Relaxed)
     }
+
+    pub fn lazy_skips(&self) -> usize {
+        self.lazy_skips.load(Ordering::Relaxed)
+    }
+
+    pub fn full_decodes(&self) -> usize {
+        self.full_decodes.load(Ordering::Relaxed)
+    }
+
+    pub fn sidecar_hits(&self) -> usize {
+        self.sidecar_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn sidecar_rebuilds(&self) -> usize {
+        self.sidecar_rebuilds.load(Ordering::Relaxed)
+    }
+
+    pub fn transcoded_records(&self) -> usize {
+        self.transcoded_records.load(Ordering::Relaxed)
+    }
+}
+
+/// One shard serialized under the active codec, plus the live-frame
+/// table its sidecar indexes.
+struct RenderedShard {
+    body: Vec<u8>,
+    /// `(key, offset, frame_len)` for every live (non-tomb) frame.
+    entries: Vec<(u64, u64, u64)>,
+    frames: usize,
+    tombs: usize,
 }
 
 impl<R: Record> Drop for ShardedStore<R> {
@@ -974,14 +1389,6 @@ impl<R: Record> Drop for ShardedStore<R> {
     fn drop(&mut self) {
         let _ = self.flush();
     }
-}
-
-pub fn parse_hex_key(s: &str) -> Option<u64> {
-    u64::from_str_radix(s, 16).ok()
-}
-
-pub fn hex_key(key: u64) -> String {
-    format!("{key:016x}")
 }
 
 #[cfg(test)]
@@ -1018,6 +1425,7 @@ mod tests {
             file_prefix: "t",
             label: "test store",
             policy: StorePolicy::default_auto(),
+            codec: Codec::V2Binary,
         }
     }
 
@@ -1152,7 +1560,8 @@ mod tests {
             .unwrap()
             .map(|e| e.unwrap().path())
             .filter(|p| {
-                p.file_name().unwrap().to_string_lossy().starts_with("t-")
+                let name = p.file_name().unwrap().to_string_lossy().to_string();
+                name.starts_with("t-") && !name.ends_with(".idx")
             })
             .map(|p| fs::metadata(&p).unwrap().len())
             .sum();
@@ -1238,11 +1647,12 @@ mod tests {
         s.flush().unwrap();
         assert!(s.compactions() >= 1, "auto-compaction must have fired");
         assert_eq!(s.stats().tombstones, 0, "compaction drops tombstones");
-        // keys carry top byte 6 -> shard 6 % 4 = 2
-        let text = fs::read_to_string(dir.join("t-002.jsonl")).unwrap_or_default();
+        // keys carry top byte 6 -> shard 6 % 4 = 2; v2 frames carry the
+        // kind as raw bytes, so a tombstone would leave "tomb" in them
+        let body = fs::read(dir.join("t-002.fsb")).unwrap_or_default();
         assert!(
-            !text.contains("\"tomb\""),
-            "no tombstone lines may remain on disk: {text}"
+            !body.windows(4).any(|w| w == b"tomb"),
+            "no tombstone frames may remain on disk"
         );
         assert!(s.get("a", key(6, 3)).is_some());
         for i in 0..3u64 {
@@ -1287,6 +1697,95 @@ mod tests {
         let s = ShardedStore::<TestRec>::open_sharded(&dir, cfg(), 64).unwrap();
         assert_eq!(s.epoch(), 2, "every open bumps the logical epoch");
         assert_eq!(s.shard_count(), 2, "meta.json pins the shard count");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_codec_writes_byte_identical_files_to_the_pr6_writer() {
+        let dir = tmp_dir("v1bytes");
+        let s = ShardedStore::<TestRec>::open(&dir, cfg())
+            .unwrap()
+            .with_codec(Codec::V1Jsonl);
+        s.put(key(1, 0x10), rec(0.5));
+        s.flush().unwrap();
+        drop(s);
+        let text = fs::read_to_string(dir.join("t-001.jsonl")).unwrap();
+        assert_eq!(
+            text,
+            "{\"key\":\"0100000000000010\",\"kind\":\"a\",\"used\":1,\"v\":7,\"val\":0.5}\n",
+            "v1 output must stay byte-compatible with dirs written before the codec seam"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mixed_codec_dirs_auto_detect_and_flush_collapses_to_active() {
+        let dir = tmp_dir("mixed");
+        {
+            let s = ShardedStore::<TestRec>::open(&dir, cfg())
+                .unwrap()
+                .with_codec(Codec::V1Jsonl);
+            for i in 0..3u64 {
+                s.put(key(9, i), rec(i as f64));
+            }
+            s.flush().unwrap();
+            assert!(dir.join("t-001.jsonl").exists()); // 9 % 4 = 1
+        }
+        let s = open(&dir); // active codec v2
+        assert_eq!(s.get("a", key(9, 1)), Some(rec(1.0)), "v1 file auto-detected");
+        s.put(key(9, 7), rec(7.0));
+        s.flush().unwrap();
+        assert_eq!(
+            s.transcoded_records(),
+            2,
+            "the two still-lazy v1 frames transcode at the rewrite"
+        );
+        assert!(dir.join("t-001.fsb").exists(), "flush rewrites under the active codec");
+        assert!(!dir.join("t-001.jsonl").exists(), "the v1 file is collapsed away");
+        drop(s);
+        let s = open(&dir);
+        for i in 0..3u64 {
+            assert_eq!(s.get("a", key(9, i)), Some(rec(i as f64)));
+        }
+        assert_eq!(s.get("a", key(9, 7)), Some(rec(7.0)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sidecar_point_lookup_skips_scans_and_survives_idx_deletion() {
+        let dir = tmp_dir("sidecar");
+        {
+            let s = open(&dir);
+            for i in 0..8u64 {
+                s.put(key(8, i), rec(i as f64)); // 8 % 4 = 0
+            }
+            s.flush().unwrap();
+        }
+        let s = open(&dir);
+        assert_eq!(s.get("a", key(8, 3)), Some(rec(3.0)));
+        assert_eq!(s.sidecar_hits(), 1);
+        assert_eq!(s.shard_loads(), 0, "a point lookup must not scan the shard");
+        assert_eq!(s.full_decodes(), 1, "exactly the fetched frame decodes");
+        assert_eq!(s.get("a", key(8, 77)), None);
+        assert_eq!(s.sidecar_hits(), 2, "a definitive miss is answered by the index");
+        assert_eq!(s.full_decodes(), 1, "a lookup miss costs no full-tree parse");
+        assert_eq!(s.shard_loads(), 0);
+        drop(s);
+        // delete every sidecar: reads fall back to the scan and the
+        // store silently re-derives the indexes
+        for e in fs::read_dir(&dir).unwrap().flatten() {
+            if e.file_name().to_string_lossy().ends_with(".idx") {
+                fs::remove_file(e.path()).unwrap();
+            }
+        }
+        let s = open(&dir);
+        assert_eq!(s.get("a", key(8, 3)), Some(rec(3.0)));
+        assert!(s.shard_loads() >= 1, "missing sidecar falls back to the scan");
+        assert!(s.sidecar_rebuilds() >= 1, "missing sidecar is rebuilt");
+        assert!(
+            idx_path(&dir.join("t-000.fsb")).exists(),
+            "the sidecar file is recreated on disk"
+        );
         let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,242 @@
+//! Per-shard index sidecars (ISSUE 7 tentpole, layer 3): a bloom
+//! filter + key→byte-offset table written next to each shard file as
+//! `<shard>.idx`, rebuilt atomically at flush/compact.
+//!
+//! A sidecar is a **disposable cache**, never a source of truth:
+//!
+//! - a *missing* sidecar (a PR 6 dir, or a crash between the shard
+//!   rename and the idx rename) falls back to the streaming scan and is
+//!   rebuilt best-effort;
+//! - a *torn or stale* sidecar is detected — file-length check at
+//!   probe, per-frame key/schema re-validation at fetch — and discarded
+//!   the same way;
+//! - deleting every `.idx` in a store dir is always safe.
+//!
+//! The index is a pure function of the shard body, so sidecar files are
+//! as deterministic as the shards themselves (fixed seed ⇒ identical
+//! dir listings). Tombstoned keys are *not* indexed: a bloom/table miss
+//! and a tombstone read both answer "miss", so point lookups skip the
+//! lazy scan entirely — the sidecar's whole purpose.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::rng::hash_bytes;
+
+use super::codec::{hex_key, parse_hex_key, Codec};
+
+pub const SIDECAR_VERSION: u64 = 1;
+/// ~10 bits/key with 4 probes: ~1% false-positive rate, and a false
+/// positive only costs one wasted frame fetch.
+const BLOOM_BITS_PER_KEY: usize = 10;
+const BLOOM_PROBES: u8 = 4;
+
+/// Sidecar path for a shard file: `t-002.fsb` -> `t-002.fsb.idx`.
+pub fn idx_path(shard_path: &Path) -> PathBuf {
+    let mut name = shard_path.file_name().unwrap_or_default().to_os_string();
+    name.push(".idx");
+    shard_path.with_file_name(name)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SidecarIndex {
+    /// Codec of the shard file this index describes.
+    pub codec: Codec,
+    /// Shard-file byte length at build time (the cheap staleness probe).
+    pub len: u64,
+    /// `hash_bytes` of the shard body (compact uses it to decide
+    /// whether an on-disk sidecar is already fresh).
+    pub hash: u64,
+    /// Power-of-two word count; bit count is `words * 64`.
+    bloom: Vec<u64>,
+    /// `(key, offset, frame_len)` sorted by key; tombstones excluded.
+    keys: Vec<(u64, u64, u64)>,
+}
+
+fn bloom_slots(key: u64, words: usize) -> impl Iterator<Item = (usize, u64)> {
+    let bits = (words as u64) * 64;
+    (0..BLOOM_PROBES).map(move |i| {
+        let mut probe = [0u8; 9];
+        probe[..8].copy_from_slice(&key.to_le_bytes());
+        probe[8] = i;
+        let bit = hash_bytes(&probe) & (bits - 1);
+        ((bit >> 6) as usize, 1u64 << (bit & 63))
+    })
+}
+
+impl SidecarIndex {
+    /// Build from a rendered shard body and its live-frame table.
+    /// `entries` may arrive in any order and with duplicate keys (first
+    /// wins, matching the scan merge rule).
+    pub fn build(codec: Codec, body: &[u8], entries: &[(u64, u64, u64)]) -> SidecarIndex {
+        let mut keys: Vec<(u64, u64, u64)> = Vec::with_capacity(entries.len());
+        let mut seen = std::collections::HashSet::new();
+        for &e in entries {
+            if seen.insert(e.0) {
+                keys.push(e);
+            }
+        }
+        keys.sort_unstable();
+        let words = ((keys.len() * BLOOM_BITS_PER_KEY + 63) / 64).next_power_of_two().max(1);
+        let mut bloom = vec![0u64; words];
+        for &(key, _, _) in &keys {
+            for (w, mask) in bloom_slots(key, words) {
+                bloom[w] |= mask;
+            }
+        }
+        SidecarIndex { codec, len: body.len() as u64, hash: hash_bytes(body), bloom, keys }
+    }
+
+    /// Definitely-absent filter; false positives cost one frame fetch.
+    pub fn may_contain(&self, key: u64) -> bool {
+        bloom_slots(key, self.bloom.len()).all(|(w, mask)| self.bloom[w] & mask != 0)
+    }
+
+    /// Exact `(offset, frame_len)` for a live key.
+    pub fn lookup(&self, key: u64) -> Option<(u64, u64)> {
+        let i = self.keys.binary_search_by_key(&key, |e| e.0).ok()?;
+        let (_, off, len) = self.keys[i];
+        Some((off, len))
+    }
+
+    pub fn n_keys(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// One-line JSON, alphabetical keys — deterministic for its inputs.
+    pub fn render(&self) -> String {
+        let bloom: Vec<String> = self.bloom.iter().map(|w| format!("{w:016x}")).collect();
+        let keys: Vec<Json> = self
+            .keys
+            .iter()
+            .map(|&(k, off, len)| {
+                Json::Arr(vec![
+                    Json::from(hex_key(k).as_str()),
+                    Json::from(off as usize),
+                    Json::from(len as usize),
+                ])
+            })
+            .collect();
+        let mut line = Json::obj(vec![
+            ("bloom", Json::arr_str(&bloom)),
+            ("codec", Json::from(self.codec.name())),
+            ("hash", Json::from(hex_key(self.hash).as_str())),
+            ("keys", Json::Arr(keys)),
+            ("len", Json::from(self.len as usize)),
+            ("v", Json::from(SIDECAR_VERSION as usize)),
+        ])
+        .to_string();
+        line.push('\n');
+        line
+    }
+
+    /// Strict parse: any defect (version drift, torn write, bad field,
+    /// unsorted table) returns `None` and the caller treats the sidecar
+    /// as missing.
+    pub fn parse(text: &str) -> Option<SidecarIndex> {
+        let j = Json::parse(text.trim()).ok()?;
+        if j.get("v").as_usize()? as u64 != SIDECAR_VERSION {
+            return None;
+        }
+        let codec = Codec::from_name(j.get("codec").as_str()?)?;
+        let len = j.get("len").as_usize()? as u64;
+        let hash = parse_hex_key(j.get("hash").as_str()?)?;
+        let bloom: Vec<u64> = j
+            .get("bloom")
+            .as_arr()?
+            .iter()
+            .map(|w| w.as_str().and_then(parse_hex_key))
+            .collect::<Option<_>>()?;
+        if !bloom.len().is_power_of_two() {
+            return None;
+        }
+        let keys: Vec<(u64, u64, u64)> = j
+            .get("keys")
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                let k = e.idx(0).as_str().and_then(parse_hex_key)?;
+                Some((k, e.idx(1).as_usize()? as u64, e.idx(2).as_usize()? as u64))
+            })
+            .collect::<Option<_>>()?;
+        if !keys.windows(2).all(|w| w[0].0 < w[1].0) {
+            return None;
+        }
+        Some(SidecarIndex { codec, len, hash, bloom, keys })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SidecarIndex {
+        let body = b"frame-one\nframe-two\nframe-three\n";
+        let entries = [(0x0a01u64, 0u64, 9u64), (0x0a02, 10, 9), (0x0a03, 20, 11)];
+        SidecarIndex::build(Codec::V2Binary, body, &entries)
+    }
+
+    #[test]
+    fn roundtrips_through_render_and_parse() {
+        let idx = sample();
+        let text = idx.render();
+        assert!(text.ends_with('\n') && !text[..text.len() - 1].contains('\n'));
+        let back = SidecarIndex::parse(&text).expect("rendered sidecar re-parses");
+        assert_eq!(back, idx);
+        assert_eq!(idx.render(), back.render(), "render is deterministic");
+    }
+
+    #[test]
+    fn lookup_and_bloom_answer_membership() {
+        let idx = sample();
+        assert_eq!(idx.lookup(0x0a02), Some((10, 9)));
+        assert_eq!(idx.lookup(0x0a04), None);
+        assert_eq!(idx.n_keys(), 3);
+        for k in [0x0a01u64, 0x0a02, 0x0a03] {
+            assert!(idx.may_contain(k), "present key {k:#x} must pass the bloom");
+        }
+        // bloom false positives are allowed but must be rare
+        let fp = (0..10_000u64).filter(|&i| idx.may_contain(0xdead_0000 + i)).count();
+        assert!(fp < 500, "false-positive rate too high: {fp}/10000");
+    }
+
+    #[test]
+    fn duplicate_entries_first_wins_and_empty_index_misses_everything() {
+        let idx = SidecarIndex::build(
+            Codec::V1Jsonl,
+            b"xy",
+            &[(5, 0, 4), (5, 9, 9), (1, 4, 2)],
+        );
+        assert_eq!(idx.lookup(5), Some((0, 4)), "first entry for a key wins");
+        assert_eq!(idx.n_keys(), 2);
+        let empty = SidecarIndex::build(Codec::V1Jsonl, b"", &[]);
+        assert!(!empty.may_contain(7));
+        assert_eq!(empty.lookup(7), None);
+        assert!(SidecarIndex::parse(&empty.render()).is_some());
+    }
+
+    #[test]
+    fn torn_or_tampered_sidecars_parse_as_none() {
+        let text = sample().render();
+        for cut in 1..text.len().saturating_sub(1) {
+            assert!(SidecarIndex::parse(&text[..cut]).is_none(), "torn at {cut}");
+        }
+        assert!(SidecarIndex::parse("").is_none());
+        assert!(SidecarIndex::parse("{}").is_none());
+        let wrong_v = text.replace("\"v\":1", "\"v\":99");
+        assert!(SidecarIndex::parse(&wrong_v).is_none());
+        // unsorted key table would break binary search: rejected
+        let idx = sample();
+        let mut j = idx.render();
+        j = j.replace("\"0000000000000a01\"", "\"0000000000000a09\"");
+        assert!(SidecarIndex::parse(&j).is_none());
+    }
+
+    #[test]
+    fn idx_path_appends_to_the_shard_file_name() {
+        let p = idx_path(Path::new("/tmp/store/t-002.fsb"));
+        assert_eq!(p, Path::new("/tmp/store/t-002.fsb.idx"));
+        let p = idx_path(Path::new("rel/shard-015.jsonl"));
+        assert_eq!(p, Path::new("rel/shard-015.jsonl.idx"));
+    }
+}

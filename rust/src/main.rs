@@ -21,7 +21,7 @@ use fso::backend::Enablement;
 use fso::coordinator::dse_driver::SurrogateBundle;
 use fso::coordinator::experiments::{self, ExpOptions};
 use fso::coordinator::{
-    datagen, CacheStore, DatagenConfig, EvalRouter, EvalService, ModelCacheStats,
+    datagen, CacheStore, Codec, DatagenConfig, EvalRouter, EvalService, ModelCacheStats,
     ModelStore, PredictServer, StorePolicy, TrainOptions, Trainer,
 };
 use fso::data::Metric;
@@ -68,6 +68,7 @@ fso — ML-based full-stack optimization framework for ML accelerators
 USAGE:
   fso datagen --platform <tabla|genesys|vta|axiline> [--enablement gf12|ng45|gf12,ng45]
               [--archs N] [--out data.csv] [--seed N] [--cache-dir DIR] [--coalesce]
+              [--store-codec v1|v2]
   fso train --platform <...> [--metric power|perf|area|energy|runtime]
             [--trees-only] [--seed N] [--cache-dir DIR] [--no-model-cache]
             [--report-out FILE] [--coalesce]
@@ -76,7 +77,7 @@ USAGE:
   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
                  [--quick] [--out-dir results] [--seed N] [--cache-dir DIR]
                  [--no-model-cache] [--coalesce] [--inflight N]
-  fso store <compact|stats> --cache-dir DIR
+  fso store <compact|stats> --cache-dir DIR [--store-codec v1|v2]
             [--store-max-bytes N] [--store-max-records N] [--store-max-age N]
   fso serve [--clients N] [--rows N] [--tree-router]
   fso bench run     --suite NAME [--quick] [--out FILE]
@@ -103,7 +104,19 @@ pass the flags on the regular runs, not just at compact time, for true
 use-age). `fso store compact`
 rewrites the shards dropping tombstones and dead lines — reads before
 and after a compact are identical, so warm starts are unaffected —
-and `fso store stats` prints both stores' counters.
+and `fso store stats` prints both stores' counters plus a per-codec
+shard/sidecar file census.
+
+--store-codec picks the record codec *new* shard files are written in
+(accepted by every command that takes --cache-dir): v1 is the original
+JSONL, v2 (the default) a compact length-prefixed binary framing of
+the same records. Reads auto-detect either codec per shard, so mixed
+directories stay warm; flushing or compacting a touched shard
+transcodes it to the active codec (`fso store compact --store-codec
+v2` migrates a whole PR 6 directory in place). Each shard also carries
+a `<shard>.idx` bloom + offset sidecar for point lookups — a
+disposable cache, rebuilt automatically when missing, torn, or stale;
+deleting every .idx is always safe.
 
 --coalesce turns on single-flight request coalescing (ISSUE 5):
 concurrent evaluations of the same content-hash key share one
@@ -151,11 +164,23 @@ fn store_policy(args: &Args) -> Result<StorePolicy> {
     Ok(p)
 }
 
+/// Write codec from `--store-codec v1|v2` (default v2; reads always
+/// auto-detect both, so the flag only picks what new shards look like).
+fn store_codec(args: &Args) -> Result<Codec> {
+    match args.get("store-codec") {
+        None => Ok(Codec::V2Binary),
+        Some(name) => Codec::from_name(name)
+            .with_context(|| format!("--store-codec wants v1|v2, got {name:?}")),
+    }
+}
+
 /// Open the persistent oracle cache named by `--cache-dir`, if given.
 fn cache_store(args: &Args) -> Result<Option<Arc<CacheStore>>> {
     match args.path("cache-dir") {
         Some(dir) => Ok(Some(Arc::new(
-            CacheStore::open(dir)?.with_policy(store_policy(args)?),
+            CacheStore::open(dir)?
+                .with_policy(store_policy(args)?)
+                .with_codec(store_codec(args)?),
         ))),
         None => Ok(None),
     }
@@ -169,7 +194,9 @@ fn model_store(args: &Args) -> Result<Option<Arc<ModelStore>>> {
     }
     match args.path("cache-dir") {
         Some(dir) => Ok(Some(Arc::new(
-            ModelStore::open_under(dir)?.with_policy(store_policy(args)?),
+            ModelStore::open_under(dir)?
+                .with_policy(store_policy(args)?)
+                .with_codec(store_codec(args)?),
         ))),
         None => Ok(None),
     }
@@ -190,10 +217,16 @@ fn cmd_store(args: &Args) -> Result<()> {
     let models_dir = dir.join("models");
     match action {
         "compact" => {
-            let store = CacheStore::open(&dir)?.with_policy(store_policy(args)?);
+            // compaction rewrites through the active codec, so
+            // `--store-codec` here transcodes a whole directory in place
+            let store = CacheStore::open(&dir)?
+                .with_policy(store_policy(args)?)
+                .with_codec(store_codec(args)?);
             println!("oracle store: {}", store.compact()?);
             if models_dir.exists() {
-                let ms = ModelStore::open(&models_dir)?.with_policy(store_policy(args)?);
+                let ms = ModelStore::open(&models_dir)?
+                    .with_policy(store_policy(args)?)
+                    .with_codec(store_codec(args)?);
                 println!("model store:  {}", ms.compact()?);
             }
             Ok(())
@@ -202,15 +235,35 @@ fn cmd_store(args: &Args) -> Result<()> {
             let store = CacheStore::open(&dir)?;
             store.load_all();
             println!("oracle store ({}): {}", dir.display(), store.stats());
+            println!("oracle store files: {}", codec_file_counts(&dir)?);
             if models_dir.exists() {
                 let ms = ModelStore::open(&models_dir)?;
                 ms.load_all();
                 println!("model store ({}): {}", models_dir.display(), ms.stats());
+                println!("model store files: {}", codec_file_counts(&models_dir)?);
             }
             Ok(())
         }
         other => bail!("unknown store action {other:?} (compact|stats)"),
     }
+}
+
+/// Shard-file census for `fso store stats`: how many shards sit in each
+/// codec, and how many carry an `.idx` sidecar.
+fn codec_file_counts(dir: &std::path::Path) -> Result<String> {
+    let (mut v1, mut v2, mut idx) = (0usize, 0usize, 0usize);
+    for entry in std::fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        if name.ends_with(".idx") {
+            idx += 1;
+        } else if name.ends_with(&format!(".{}", Codec::V1Jsonl.file_ext())) {
+            v1 += 1;
+        } else if name.ends_with(&format!(".{}", Codec::V2Binary.file_ext())) {
+            v2 += 1;
+        }
+    }
+    Ok(format!("{v1} v1 (jsonl) shards, {v2} v2 (fsb) shards, {idx} sidecars"))
 }
 
 fn cmd_datagen(args: &Args) -> Result<()> {

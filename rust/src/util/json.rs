@@ -385,6 +385,328 @@ impl fmt::Display for Json {
     }
 }
 
+/// One event from the forward-only streaming tokenizer. String-ish
+/// tokens borrow from the input (`Cow::Borrowed`) unless the literal
+/// contains escapes, in which case they decode into an owned buffer
+/// with semantics identical to the tree parser.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonToken<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// An object key (the following value tokens belong to it).
+    Key(std::borrow::Cow<'a, str>),
+    Str(std::borrow::Cow<'a, str>),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum TokState {
+    /// Expecting a value (document start, after ':', after ',' in an array).
+    Value,
+    /// Expecting a value or ']' (right after '[').
+    ValueOrEnd,
+    /// Expecting a key or '}' (right after '{').
+    KeyOrEnd,
+    /// Expecting a key (after ',' in an object).
+    Key,
+    /// Expecting ',' or a container close.
+    AfterValue,
+    /// The document value is complete; only whitespace may remain.
+    Done,
+}
+
+/// Forward-only, zero-copy JSON tokenizer over raw bytes. Accepts and
+/// rejects exactly the documents `Json::parse` does — numbers go
+/// through the same byte-scan + `str::parse::<f64>` so f64 values are
+/// bit-identical, and escaped strings reuse the tree parser's decoder.
+/// Unlike the tree parser it never allocates a value tree, so shard
+/// loads can skim envelopes and skip bodies (see `lazy_get`).
+pub struct JsonTokenizer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    /// Open-container stack, `b'{'` / `b'['` per frame.
+    stack: Vec<u8>,
+    state: TokState,
+}
+
+impl<'a> JsonTokenizer<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        JsonTokenizer { bytes, pos: 0, stack: Vec::new(), state: TokState::Value }
+    }
+
+    /// Current byte offset (end of the last token consumed).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn terr(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<(), JsonError> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.terr(&format!("expected '{lit}'")))
+        }
+    }
+
+    /// Decode a string literal. Fast path: no escapes, borrow the span
+    /// between the quotes (validated UTF-8). Slow path: rewind to the
+    /// opening quote and delegate to the tree parser's `string()` so
+    /// escape semantics (incl. `\u` replacement chars) stay identical.
+    fn cow_string(&mut self) -> Result<std::borrow::Cow<'a, str>, JsonError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.terr("expected '\"'"));
+        }
+        let open = self.pos;
+        self.pos += 1;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err(self.terr("unterminated string")),
+                Some(b'"') => {
+                    let span = &self.bytes[start..self.pos];
+                    self.pos += 1;
+                    let s = std::str::from_utf8(span).map_err(|_| self.terr("bad utf8"))?;
+                    return Ok(std::borrow::Cow::Borrowed(s));
+                }
+                Some(b'\\') => {
+                    // escape found: fall back to the allocating decoder
+                    let mut p = Parser { bytes: self.bytes, pos: open };
+                    let s = p.string()?;
+                    self.pos = p.pos;
+                    return Ok(std::borrow::Cow::Owned(s));
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    /// Byte-for-byte mirror of `Parser::number` so acceptance (e.g.
+    /// `"1e"` fails, `"1e999"` parses to inf) and the resulting bits
+    /// agree with the tree parser.
+    fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>().map_err(|_| self.terr("bad number"))
+    }
+
+    fn after_value(&mut self) {
+        self.state = if self.stack.is_empty() { TokState::Done } else { TokState::AfterValue };
+    }
+
+    fn value_token(&mut self) -> Result<JsonToken<'a>, JsonError> {
+        match self.peek() {
+            Some(b'n') => {
+                self.literal("null")?;
+                self.after_value();
+                Ok(JsonToken::Null)
+            }
+            Some(b't') => {
+                self.literal("true")?;
+                self.after_value();
+                Ok(JsonToken::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal("false")?;
+                self.after_value();
+                Ok(JsonToken::Bool(false))
+            }
+            Some(b'"') => {
+                let s = self.cow_string()?;
+                self.after_value();
+                Ok(JsonToken::Str(s))
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.stack.push(b'[');
+                self.state = TokState::ValueOrEnd;
+                Ok(JsonToken::ArrBegin)
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                self.stack.push(b'{');
+                self.state = TokState::KeyOrEnd;
+                Ok(JsonToken::ObjBegin)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.number()?;
+                self.after_value();
+                Ok(JsonToken::Num(n))
+            }
+            _ => Err(self.terr("unexpected character")),
+        }
+    }
+
+    fn key_token(&mut self) -> Result<JsonToken<'a>, JsonError> {
+        let k = self.cow_string()?;
+        self.skip_ws();
+        if self.peek() != Some(b':') {
+            return Err(self.terr("expected ':'"));
+        }
+        self.pos += 1;
+        self.state = TokState::Value;
+        Ok(JsonToken::Key(k))
+    }
+
+    /// Pull the next token. `Ok(None)` exactly once, when the document
+    /// value is complete and only trailing whitespace remained.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Result<Option<JsonToken<'a>>, JsonError> {
+        loop {
+            self.skip_ws();
+            match self.state {
+                TokState::Done => {
+                    return if self.pos == self.bytes.len() {
+                        Ok(None)
+                    } else {
+                        Err(self.terr("trailing characters"))
+                    };
+                }
+                TokState::Value => return self.value_token().map(Some),
+                TokState::ValueOrEnd => {
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.after_value();
+                        return Ok(Some(JsonToken::ArrEnd));
+                    }
+                    return self.value_token().map(Some);
+                }
+                TokState::KeyOrEnd => {
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.after_value();
+                        return Ok(Some(JsonToken::ObjEnd));
+                    }
+                    return self.key_token().map(Some);
+                }
+                TokState::Key => return self.key_token().map(Some),
+                TokState::AfterValue => match self.peek() {
+                    Some(b',') => {
+                        self.pos += 1;
+                        self.state = if self.stack.last() == Some(&b'{') {
+                            TokState::Key
+                        } else {
+                            TokState::Value
+                        };
+                        continue;
+                    }
+                    Some(b'}') if self.stack.last() == Some(&b'{') => {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.after_value();
+                        return Ok(Some(JsonToken::ObjEnd));
+                    }
+                    Some(b']') if self.stack.last() == Some(&b'[') => {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.after_value();
+                        return Ok(Some(JsonToken::ArrEnd));
+                    }
+                    _ => {
+                        return Err(self.terr(if self.stack.last() == Some(&b'{') {
+                            "expected ',' or '}'"
+                        } else {
+                            "expected ',' or ']'"
+                        }));
+                    }
+                },
+            }
+        }
+    }
+
+    /// Consume one whole value (scalar or full container subtree) at a
+    /// value position without decoding it, returning its byte span.
+    /// This is the lazy-body primitive: the caller keeps the raw slice
+    /// and tree-parses it only on materialization.
+    pub fn value_span(&mut self) -> Result<(usize, usize), JsonError> {
+        if self.state != TokState::Value {
+            return Err(self.terr("value_span outside value position"));
+        }
+        self.skip_ws();
+        let start = self.pos;
+        let depth0 = self.stack.len();
+        self.value_token()?;
+        while self.stack.len() > depth0 {
+            match self.next()? {
+                Some(_) => {}
+                None => return Err(self.terr("unexpected end of value")),
+            }
+        }
+        Ok((start, self.pos))
+    }
+}
+
+/// Scan a top-level JSON object for `key` and return the raw byte span
+/// of its value, validating the whole document structurally (so torn
+/// tails error) without building any value tree. Duplicate keys follow
+/// the tree parser: last one wins. `Ok(None)` if the key is absent.
+pub fn lazy_get<'a>(bytes: &'a [u8], key: &str) -> Result<Option<&'a [u8]>, JsonError> {
+    let mut t = JsonTokenizer::new(bytes);
+    match t.next()? {
+        Some(JsonToken::ObjBegin) => {}
+        _ => return Err(JsonError { pos: 0, msg: "expected top-level object".to_string() }),
+    }
+    let mut found: Option<(usize, usize)> = None;
+    loop {
+        match t.next()? {
+            Some(JsonToken::Key(k)) => {
+                let hit = k.as_ref() == key;
+                let span = t.value_span()?;
+                if hit {
+                    found = Some(span);
+                }
+            }
+            Some(JsonToken::ObjEnd) => break,
+            _ => unreachable!("object position yields keys or the close"),
+        }
+    }
+    // drain the trailing-garbage check so a torn tail never half-succeeds
+    if t.next()?.is_some() {
+        return Err(JsonError { pos: t.pos(), msg: "trailing characters".to_string() });
+    }
+    Ok(found.map(|(s, e)| &bytes[s..e]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -474,5 +796,110 @@ mod tests {
     fn display_escapes_control_chars() {
         let s = Json::Str("a\"b\\c\nd".into()).to_string();
         assert_eq!(Json::parse(&s).unwrap().as_str(), Some("a\"b\\c\nd"));
+    }
+
+    fn tokens(src: &str) -> Result<Vec<String>, JsonError> {
+        let mut t = JsonTokenizer::new(src.as_bytes());
+        let mut out = Vec::new();
+        while let Some(tok) = t.next()? {
+            out.push(format!("{tok:?}"));
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn tokenizer_streams_nested_documents() {
+        let toks = tokens(r#"{"a": [1, -2.5e2, "x\n"], "b": {"c": null}, "d": true}"#).unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                "ObjBegin",
+                "Key(\"a\")",
+                "ArrBegin",
+                "Num(1.0)",
+                "Num(-250.0)",
+                "Str(\"x\\n\")",
+                "ArrEnd",
+                "Key(\"b\")",
+                "ObjBegin",
+                "Key(\"c\")",
+                "Null",
+                "ObjEnd",
+                "Key(\"d\")",
+                "Bool(true)",
+                "ObjEnd",
+            ]
+        );
+    }
+
+    #[test]
+    fn tokenizer_borrows_escape_free_strings() {
+        let src = r#"["plain", "esc\t"]"#;
+        let mut t = JsonTokenizer::new(src.as_bytes());
+        assert_eq!(t.next().unwrap(), Some(JsonToken::ArrBegin));
+        match t.next().unwrap() {
+            Some(JsonToken::Str(std::borrow::Cow::Borrowed(s))) => assert_eq!(s, "plain"),
+            other => panic!("expected borrowed str, got {other:?}"),
+        }
+        match t.next().unwrap() {
+            Some(JsonToken::Str(std::borrow::Cow::Owned(s))) => assert_eq!(s, "esc\t"),
+            other => panic!("expected owned str, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tokenizer_rejects_what_the_tree_parser_rejects() {
+        for bad in ["{", "[1,]", "1 2", "", "{\"a\"}", "[1 2]", "{\"a\":1,}", "tru", "1e"] {
+            assert!(Json::parse(bad).is_err(), "tree parser accepted {bad:?}");
+            assert!(tokens(bad).is_err(), "tokenizer accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn value_span_skips_whole_subtrees() {
+        let src = r#"{"k": {"deep": [1, {"x": "}"}]}, "n": 7}"#;
+        let mut t = JsonTokenizer::new(src.as_bytes());
+        assert_eq!(t.next().unwrap(), Some(JsonToken::ObjBegin));
+        assert!(matches!(t.next().unwrap(), Some(JsonToken::Key(_))));
+        let (s, e) = t.value_span().unwrap();
+        assert_eq!(&src[s..e], r#"{"deep": [1, {"x": "}"}]}"#);
+        assert!(matches!(t.next().unwrap(), Some(JsonToken::Key(_))));
+        let (s, e) = t.value_span().unwrap();
+        assert_eq!(&src[s..e], "7");
+        assert_eq!(t.next().unwrap(), Some(JsonToken::ObjEnd));
+        assert_eq!(t.next().unwrap(), None);
+    }
+
+    #[test]
+    fn lazy_get_finds_spans_without_tree_parsing() {
+        let src = br#"{"v":1,"kind":"eval","key":"00ff","used":3,"body":{"w":[1.5,null]}}"#;
+        assert_eq!(lazy_get(src, "kind").unwrap(), Some(&b"\"eval\""[..]));
+        assert_eq!(lazy_get(src, "used").unwrap(), Some(&b"3"[..]));
+        assert_eq!(lazy_get(src, "body").unwrap(), Some(&br#"{"w":[1.5,null]}"#[..]));
+        assert_eq!(lazy_get(src, "missing").unwrap(), None);
+        // duplicate keys: last wins, matching BTreeMap insert order
+        assert_eq!(lazy_get(br#"{"a":1,"a":2}"#, "a").unwrap(), Some(&b"2"[..]));
+        // torn tails must error, never return a partial span
+        for cut in 1..src.len() {
+            assert!(lazy_get(&src[..cut], "v").is_err(), "accepted torn prefix len {cut}");
+        }
+        assert!(lazy_get(b"[1,2]", "a").is_err(), "top level must be an object");
+    }
+
+    #[test]
+    fn tokenizer_numbers_are_bit_identical_to_tree_parser() {
+        for src in ["0.1", "-0.0", "1e999", "-2.5e-9", "6.02214076e23", "123456789"] {
+            let tree = Json::parse(src).unwrap().as_f64().unwrap();
+            let mut t = JsonTokenizer::new(src.as_bytes());
+            match t.next().unwrap() {
+                Some(JsonToken::Num(n)) => assert_eq!(
+                    n.to_bits(),
+                    tree.to_bits(),
+                    "tokenizer {n} != tree {tree} for {src}"
+                ),
+                other => panic!("expected number, got {other:?}"),
+            }
+            assert_eq!(t.next().unwrap(), None);
+        }
     }
 }

@@ -1,0 +1,198 @@
+//! Differential property tests for the streaming JSON tokenizer
+//! (ISSUE 7 satellite a): `util::json::JsonTokenizer` and `lazy_get`
+//! must accept and reject *exactly* the documents the tree parser
+//! does, and every f64 that flows through them must come out
+//! bit-identical — the storage engine's lazy shard loads stand on that
+//! equivalence.
+
+use std::collections::BTreeMap;
+
+use fso::util::json::{lazy_get, Json, JsonToken, JsonTokenizer};
+use fso::util::prop::check;
+use fso::util::rng::Rng;
+
+/// Random JSON value with bounded depth; finite numbers only (the
+/// writer side never emits non-finite values — they render as null).
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    let pick = if depth == 0 { rng.below(5) } else { rng.below(7) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(random_f64(rng)),
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Num(rng.below(1_000_000) as f64),
+        5 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = BTreeMap::new();
+            for _ in 0..rng.below(4) {
+                m.insert(random_string(rng), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+/// Finite f64 across many orders of magnitude, occasionally adversarial.
+fn random_f64(rng: &mut Rng) -> f64 {
+    match rng.below(6) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => (rng.next_u64() as i64) as f64,
+        3 => rng.f64(),
+        _ => {
+            let v = (rng.f64() - 0.5) * 10f64.powi(rng.int_range(-250, 250) as i32);
+            if v.is_finite() {
+                v
+            } else {
+                rng.f64()
+            }
+        }
+    }
+}
+
+/// Strings mixing plain ASCII, escapes, and multi-byte UTF-8.
+fn random_string(rng: &mut Rng) -> String {
+    const POOL: &[&str] =
+        &["a", "key", "\"", "\\", "\n", "\t", "\u{1F600}", "é", "x y", "0", "\u{0}"];
+    (0..rng.below(5)).map(|_| POOL[rng.below(POOL.len())]).collect()
+}
+
+/// Rebuild a full value tree by walking the token stream — the
+/// reference decode the streaming store paths must be equivalent to.
+fn rebuild(t: &mut JsonTokenizer<'_>) -> Json {
+    let tok = t.next().expect("tokenizer accepts what the tree parser accepted");
+    rebuild_from(tok.expect("value expected"), t)
+}
+
+fn rebuild_from(tok: JsonToken<'_>, t: &mut JsonTokenizer<'_>) -> Json {
+    match tok {
+        JsonToken::Null => Json::Null,
+        JsonToken::Bool(b) => Json::Bool(b),
+        JsonToken::Num(n) => Json::Num(n),
+        JsonToken::Str(s) => Json::Str(s.into_owned()),
+        JsonToken::ArrBegin => {
+            let mut items = Vec::new();
+            loop {
+                match t.next().unwrap().expect("array items or close") {
+                    JsonToken::ArrEnd => return Json::Arr(items),
+                    tok => items.push(rebuild_from(tok, t)),
+                }
+            }
+        }
+        JsonToken::ObjBegin => {
+            let mut m = BTreeMap::new();
+            loop {
+                match t.next().unwrap().expect("object keys or close") {
+                    JsonToken::ObjEnd => return Json::Obj(m),
+                    JsonToken::Key(k) => {
+                        let v = rebuild(t);
+                        m.insert(k.into_owned(), v);
+                    }
+                    other => panic!("unexpected token in object: {other:?}"),
+                }
+            }
+        }
+        other => panic!("unexpected value token: {other:?}"),
+    }
+}
+
+/// Drive the tokenizer over a document to completion (or first error).
+fn tokenize_all(bytes: &[u8]) -> Result<Vec<String>, String> {
+    let mut t = JsonTokenizer::new(bytes);
+    let mut toks = Vec::new();
+    loop {
+        match t.next() {
+            Ok(Some(tok)) => toks.push(format!("{tok:?}")),
+            Ok(None) => return Ok(toks),
+            Err(e) => return Err(format!("{e:?}")),
+        }
+    }
+}
+
+fn bits(j: &Json) -> Vec<u64> {
+    match j {
+        Json::Num(n) => vec![n.to_bits()],
+        Json::Arr(xs) => xs.iter().flat_map(bits).collect(),
+        Json::Obj(m) => m.values().flat_map(bits).collect(),
+        _ => Vec::new(),
+    }
+}
+
+#[test]
+fn prop_token_walk_rebuilds_the_tree_parse_bit_exactly() {
+    check(400, 0x70CE1, |rng| {
+        let value = random_json(rng, 3);
+        let text = value.to_string();
+        let parsed = Json::parse(&text).expect("rendered JSON re-parses");
+        let rebuilt = rebuild(&mut JsonTokenizer::new(text.as_bytes()));
+        assert_eq!(rebuilt, parsed, "token walk diverged on {text}");
+        assert_eq!(
+            bits(&rebuilt),
+            bits(&parsed),
+            "f64 bit patterns diverged on {text}"
+        );
+        assert_eq!(rebuilt.to_string(), text, "round-trip render changed {text}");
+    });
+}
+
+#[test]
+fn prop_tokenizer_accepts_exactly_what_the_tree_parser_accepts() {
+    check(400, 0xACCE97, |rng| {
+        let value = random_json(rng, 2);
+        let mut text = value.to_string();
+        // random mutation: truncate, splice a byte, or append garbage
+        match rng.below(4) {
+            0 => {
+                let mut cut = rng.below(text.len() + 1);
+                while !text.is_char_boundary(cut) {
+                    cut -= 1;
+                }
+                text.truncate(cut);
+            }
+            1 => {
+                let junk = ["}", "]", ",", ":", "x", "1", "\"", " "][rng.below(8)];
+                let at = rng.below(text.len() + 1);
+                if text.is_char_boundary(at) {
+                    text.insert_str(at, junk);
+                }
+            }
+            2 => text.push_str(["tail", "{}", "  ", "null"][rng.below(4)]),
+            _ => {} // unmodified: both must accept
+        }
+        let tree = Json::parse(&text);
+        let stream = tokenize_all(text.as_bytes());
+        assert_eq!(
+            tree.is_ok(),
+            stream.is_ok(),
+            "acceptance diverged on {text:?}: tree={tree:?} stream={stream:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_lazy_get_matches_tree_lookup_and_rejects_torn_docs() {
+    check(300, 0x1A27, |rng| {
+        let mut m = BTreeMap::new();
+        for _ in 0..1 + rng.below(5) {
+            m.insert(random_string(rng), random_json(rng, 2));
+        }
+        let doc = Json::Obj(m.clone());
+        let text = doc.to_string();
+        for key in m.keys() {
+            let span = lazy_get(text.as_bytes(), key)
+                .expect("valid doc scans")
+                .expect("present key found");
+            let body = Json::parse(std::str::from_utf8(span).unwrap()).unwrap();
+            assert_eq!(&body, doc.get(key), "lazy span diverged for key {key:?}");
+        }
+        assert_eq!(lazy_get(text.as_bytes(), "\u{1}no-such-key").unwrap(), None);
+        // a torn tail must error, never half-succeed with a found span
+        let cut = rng.below(text.len());
+        if cut > 0 && text.is_char_boundary(cut) {
+            assert!(
+                lazy_get(&text.as_bytes()[..cut], m.keys().next().unwrap()).is_err(),
+                "torn doc (cut at {cut}) must not scan cleanly: {text}"
+            );
+        }
+    });
+}

@@ -17,7 +17,8 @@ use std::path::PathBuf;
 use std::sync::Mutex;
 
 use fso::coordinator::store::fault::{self, FlushFault};
-use fso::coordinator::ModelStore;
+use fso::coordinator::store::sidecar::idx_path;
+use fso::coordinator::{Codec, ModelStore};
 use fso::util::json::Json;
 
 static SERIAL: Mutex<()> = Mutex::new(());
@@ -161,7 +162,8 @@ fn torn_tail_line_is_never_served_and_repairs_on_rewrite() {
     let (_guard, dir) = setup("torn-tail");
     let shard_file = dir.join("model-002.jsonl");
     {
-        let store = ModelStore::open(&dir).unwrap();
+        // v1 JSONL codec: the tear below slices a text line in half
+        let store = ModelStore::open(&dir).unwrap().with_codec(Codec::V1Jsonl);
         store.put("f", key(1), payload(1.0));
         store.put("f", key(2), payload(2.0));
         store.flush().unwrap();
@@ -193,6 +195,73 @@ fn torn_tail_line_is_never_served_and_repairs_on_rewrite() {
     let store = ModelStore::open(&dir).unwrap();
     assert_eq!(store.get("f", key(1)), Some(payload(1.0)));
     assert_eq!(store.get("f", key(2)), Some(payload(2.0)));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_before_sidecar_rename_rebuilds_the_index_silently() {
+    // ISSUE 7 satellite: the flush protocol renames the shard body
+    // *before* staging its `.idx` sidecar, so a crash in the gap leaves
+    // every record durable with only the disposable index missing —
+    // readers must fall back to the streaming scan and rebuild it
+    // without ever surfacing an error
+    let (_guard, dir) = setup("idx-crash");
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        for i in 0..3 {
+            store.put("f", key(i), payload(i as f64));
+        }
+        fault::arm(FlushFault::IdxBeforeRename);
+        assert!(store.flush().is_err(), "armed flush must report the injected crash");
+        assert!(
+            lock_file(&dir).exists(),
+            "the crash happened while holding the directory lock"
+        );
+        std::mem::forget(store);
+    }
+    let shard = dir.join("model-002.fsb");
+    assert!(shard.exists(), "the shard rename completed before the idx crash");
+    assert!(
+        !idx_path(&shard).exists(),
+        "the sidecar was staged but never renamed"
+    );
+    assert!(
+        !tmp_files(&dir).is_empty(),
+        "the staged idx temp file must be left behind"
+    );
+
+    // fresh process: every acknowledged record is durable, the missing
+    // sidecar falls back to the scan and is rebuilt best-effort
+    let store = ModelStore::open(&dir).unwrap();
+    for i in 0..3 {
+        assert_eq!(
+            store.get("f", key(i)),
+            Some(payload(i as f64)),
+            "record {i} lost to a sidecar-only crash"
+        );
+    }
+    assert!(
+        store.sidecar_rebuilds() >= 1,
+        "the missing sidecar must be rebuilt silently"
+    );
+    assert!(idx_path(&shard).exists(), "rebuild rewrites the sidecar file");
+    // the next flush steals the stale lock and sweeps nothing it needs
+    store.put("f", key(9), payload(9.0));
+    store.flush().unwrap();
+    assert!(!lock_file(&dir).exists(), "stale lock stolen and released");
+    assert!(idx_path(&shard).exists(), "flush rewrites a fresh sidecar");
+    store.compact().unwrap();
+    assert!(
+        tmp_files(&dir).is_empty(),
+        "compaction must sweep the orphaned idx temp: {:?}",
+        tmp_files(&dir)
+    );
+    drop(store);
+    let store = ModelStore::open(&dir).unwrap();
+    for i in 0..3 {
+        assert_eq!(store.get("f", key(i)), Some(payload(i as f64)));
+    }
+    assert_eq!(store.get("f", key(9)), Some(payload(9.0)));
     let _ = fs::remove_dir_all(&dir);
 }
 

@@ -70,7 +70,10 @@ fn warm_start_datagen_rows_are_byte_identical_with_disk_hits() {
         warm.stats
     );
     assert!(warm.stats.oracle_misses < cold.stats.oracle_misses);
-    assert!(warm.stats.shard_loads > 0);
+    // storage engine v2: warm point lookups are answered by the `.idx`
+    // sidecars frame-by-frame — no shard is ever scanned wholesale
+    assert!(warm.stats.sidecar_hits > 0, "no sidecar hits: {}", warm.stats);
+    assert_eq!(warm.stats.shard_loads, 0, "warm run scanned a shard: {}", warm.stats);
 
     // byte-for-byte: the CSVs the CLI would write are identical
     let cold_csv = tmp_dir("datagen-cold-csv").with_extension("csv");
@@ -229,6 +232,62 @@ fn multi_enablement_sweep_warm_starts_from_one_store() {
     }
     // the two enablements really produced different data (no key mixup)
     assert_ne!(cold[0].dataset.rows, cold[1].dataset.rows);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn storage_engine_counters_pin_the_lazy_and_sidecar_paths() {
+    // ISSUE 7 satellite: the streaming/sidecar counters are part of the
+    // warm-start contract — point lookups (hits *and* misses) decode at
+    // most the one frame they return, and a full shard load defers
+    // every body it does not need.
+    let dir = tmp_dir("engine-counters");
+    let p = Platform::Axiline;
+    let arch = ArchConfig::new(
+        p,
+        p.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+    );
+    let ev = EvalService::new(Enablement::Gf12, 7)
+        .evaluate(&arch, BackendConfig::new(0.8, 0.5), None)
+        .unwrap();
+    // 30 records spread over the 16 shards (top byte routes)
+    let keys: Vec<u64> = (0..30u64).map(|i| (i << 56) | i).collect();
+    {
+        let store = CacheStore::open(&dir).unwrap();
+        for &k in &keys {
+            store.put_eval(k, ev);
+        }
+        store.flush().unwrap();
+    }
+
+    let store = CacheStore::open(&dir).unwrap();
+    // present keys: one sidecar frame fetch + one decode each, no scans
+    for &k in &keys[..3] {
+        assert!(store.get_eval(k).is_some(), "flushed record lost");
+    }
+    assert_eq!(store.sidecar_hits(), 3, "present lookups go through the sidecar");
+    assert_eq!(store.full_decodes(), 3, "exactly the returned frames decode");
+    assert_eq!(store.shard_loads(), 0, "point lookups must not scan shards");
+    // absent keys land in populated shards: definitive sidecar misses,
+    // zero additional record parses (the warm-start miss-path pin)
+    for i in 0..5u64 {
+        assert!(store.get_eval(0x0900_0000_0000_1000 | i).is_none());
+    }
+    assert_eq!(store.sidecar_hits(), 8, "misses are answered by the sidecar too");
+    assert_eq!(store.full_decodes(), 3, "a lookup miss must parse no record at all");
+    assert_eq!(store.shard_loads(), 0);
+    assert_eq!(store.sidecar_rebuilds(), 0, "fresh sidecars never rebuild");
+
+    // a full load streams envelopes and defers every unread body
+    store.load_all();
+    assert!(store.shard_loads() > 0);
+    assert!(
+        store.lazy_skips() >= 27,
+        "full load must defer the unread bodies: {} lazy skips",
+        store.lazy_skips()
+    );
+    assert_eq!(store.full_decodes(), 3, "load_all must not decode eagerly");
+    assert_eq!(store.transcoded_records(), 0, "single-codec dir never transcodes");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
