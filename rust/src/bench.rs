@@ -36,7 +36,7 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 
 /// Registered suite names (`fso bench list`).
-pub const SUITES: &[&str] = &["flat_tree", "store_v2"];
+pub const SUITES: &[&str] = &["flat_tree", "store_v2", "dse_strategies"];
 
 /// One timed row: the median of `reps` timed runs and the median
 /// absolute deviation around it.
@@ -198,6 +198,7 @@ pub fn run_suite(suite: &str, quick: bool) -> Result<SuiteReport> {
     match suite {
         "flat_tree" => flat_tree(quick),
         "store_v2" => store_v2(quick),
+        "dse_strategies" => dse_strategies(quick),
         other => bail!("unknown bench suite {other:?} (available: {})", SUITES.join(", ")),
     }
 }
@@ -231,6 +232,20 @@ pub fn check_invariants(report: &SuiteReport) -> Result<()> {
                 .with_context(|| format!("store_v2 report is missing derived {key}"))?;
             anyhow::ensure!(v >= 1.0, "store_v2 {key} fell below 1.0 ({v:.3})");
         }
+    }
+    if report.suite == "dse_strategies" {
+        // the pipelined cadence overlaps proposal generation with
+        // featurize+score workers; it must never lose to strict
+        // alternation at the same seed
+        let v = report
+            .derived
+            .get("pipelined_vs_strict")
+            .copied()
+            .context("dse_strategies report is missing derived pipelined_vs_strict")?;
+        anyhow::ensure!(
+            v >= 1.0,
+            "pipelined DSE cadence is slower than strict alternation ({v:.3}x < 1.0x)"
+        );
     }
     Ok(())
 }
@@ -521,6 +536,81 @@ fn store_v2(quick: bool) -> Result<SuiteReport> {
 
     let _ = fs::remove_dir_all(&base);
     Ok(SuiteReport { suite: "store_v2".to_string(), quick, rows: rows_out, derived })
+}
+
+/// The `dse_strategies` suite (ISSUE 8): full-`DseDriver` throughput of
+/// every strategy in the zoo on the Axiline-SVM problem under the
+/// strict ask/tell cadence, plus the pipelined cadence for the default
+/// MOTPE. The derived `pipelined_vs_strict` ratio machine-checks the
+/// pipelining claim: overlapping proposal generation with the
+/// featurize+score workers must at least match strict alternation at
+/// the same seed (the trajectories are byte-identical either way).
+fn dse_strategies(quick: bool) -> Result<SuiteReport> {
+    use crate::backend::Enablement;
+    use crate::coordinator::dse_driver::{axiline_svm_problem, DseDriver, SurrogateBundle};
+    use crate::coordinator::{datagen, DatagenConfig, EvalService};
+    use crate::dse::{MotpeConfig, StrategyKind};
+    use crate::generators::Platform;
+
+    let t = Timer::new(quick);
+    let g = datagen::generate(&DatagenConfig {
+        n_arch: 6,
+        n_backend_train: 8,
+        n_backend_test: 2,
+        ..DatagenConfig::small(Platform::Axiline, Enablement::Gf12)
+    })?;
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.total_cmp(b));
+    let problem = axiline_svm_problem(
+        g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max) * 2.0,
+        runtimes[runtimes.len() * 3 / 4],
+    );
+    let mk_driver = || {
+        let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7).unwrap();
+        DseDriver {
+            service: EvalService::new(Enablement::Gf12, 2023).with_surrogate(bundle),
+        }
+    };
+    let scfg = MotpeConfig { n_startup: 16, seed: 5, ..Default::default() };
+    let iters = if quick { 48 } else { 96 };
+
+    let mut rows_out: Vec<BenchRow> = Vec::new();
+    let mut derived = BTreeMap::new();
+
+    let mut strict_motpe_ms = f64::NAN;
+    for kind in StrategyKind::ALL {
+        let driver = mk_driver();
+        let (med, mad) = t.measure(|| {
+            let strategy = kind.build(problem.space(), &scfg);
+            driver.run_batched_with(&problem, strategy, iters, 2, 12).unwrap()
+        });
+        rows_out.push(BenchRow {
+            name: format!("dse/strict/{}_x{iters}_b12", kind.name()),
+            median_ms: med,
+            mad_ms: mad,
+            reps: t.reps,
+        });
+        if kind == StrategyKind::Motpe {
+            strict_motpe_ms = med;
+        }
+    }
+
+    let driver = mk_driver();
+    let (pmed, pmad) = t.measure(|| {
+        let strategy = StrategyKind::Motpe.build(problem.space(), &scfg);
+        driver
+            .run_pipelined_with(&problem, strategy, iters, 2, 12, 4)
+            .unwrap()
+    });
+    rows_out.push(BenchRow {
+        name: format!("dse/pipelined/motpe_x{iters}_b12_inflight4"),
+        median_ms: pmed,
+        mad_ms: pmad,
+        reps: t.reps,
+    });
+    derived.insert("pipelined_vs_strict".to_string(), strict_motpe_ms / pmed.max(1e-9));
+
+    Ok(SuiteReport { suite: "dse_strategies".to_string(), quick, rows: rows_out, derived })
 }
 
 /// Comparison outcome: printable lines plus the regressions that

@@ -36,6 +36,13 @@ pub struct DatagenConfig {
     /// concurrent duplicate oracle keys share one in-flight run.
     /// Never changes the generated rows, only wall-clock/CPU.
     pub coalesce: bool,
+    /// Explicit workload name (`--workload`), resolved through the
+    /// `workloads::lookup*` registry at row-build time: every row's
+    /// system metrics price this workload instead of the platform's
+    /// default binding. Unknown names error with the registry listing.
+    /// `None` keeps the default binding (byte-identical to pre-matrix
+    /// datasets).
+    pub workload: Option<String>,
 }
 
 impl DatagenConfig {
@@ -54,6 +61,7 @@ impl DatagenConfig {
             seed: 2023,
             workers: 0,
             coalesce: false,
+            workload: None,
         }
     }
 }
@@ -226,7 +234,14 @@ pub fn build_rows_with(
     // oracle + simulator, fanned out over the worker pool, order kept
     let pairs: Vec<(ArchConfig, BackendConfig)> =
         jobs.iter().map(|&(ai, b, _, _)| (archs[ai].clone(), b)).collect();
-    let evals = service.evaluate_many(&pairs, None)?;
+    let workload = match &cfg.workload {
+        None => None,
+        Some(name) => Some(crate::workloads::lookup_with_features(
+            name,
+            crate::simulators::default_workload_features(cfg.platform),
+        )?),
+    };
+    let evals = service.evaluate_many(&pairs, workload.as_ref())?;
 
     let rows: Vec<Row> = jobs
         .iter()
@@ -338,6 +353,52 @@ mod tests {
         let in_roi = g.dataset.rows.iter().filter(|r| r.in_roi).count();
         assert!(in_roi > 0, "no ROI rows at all");
         assert!(in_roi < g.dataset.len(), "everything in ROI — Eq. 4 gate inert");
+    }
+
+    #[test]
+    fn workload_override_changes_rows_but_not_flow_columns() {
+        let base = DatagenConfig {
+            n_arch: 3,
+            n_backend_train: 4,
+            n_backend_test: 2,
+            ..DatagenConfig::small(Platform::Vta, Enablement::Gf12)
+        };
+        let default = generate(&base).unwrap();
+        let explicit = generate(&DatagenConfig {
+            workload: Some("mobilenet".into()),
+            ..base.clone()
+        })
+        .unwrap();
+        // naming the platform's default binding explicitly is a no-op
+        assert_eq!(default.dataset.rows, explicit.dataset.rows);
+
+        let tf = generate(&DatagenConfig {
+            workload: Some("transformer".into()),
+            ..base.clone()
+        })
+        .unwrap();
+        assert_ne!(default.dataset.rows, tf.dataset.rows);
+        for (a, b) in default.dataset.rows.iter().zip(&tf.dataset.rows) {
+            // the SP&R flow is workload-independent; only system metrics move
+            assert_eq!(a.power_w, b.power_w);
+            assert_eq!(a.area_mm2, b.area_mm2);
+            assert_eq!(a.f_effective_ghz, b.f_effective_ghz);
+            assert_ne!(a.energy_j, b.energy_j);
+        }
+    }
+
+    #[test]
+    fn unknown_workload_name_fails_with_registry_listing() {
+        let cfg = DatagenConfig {
+            n_arch: 2,
+            n_backend_train: 2,
+            n_backend_test: 1,
+            workload: Some("lenet".into()),
+            ..DatagenConfig::small(Platform::Vta, Enablement::Gf12)
+        };
+        let err = generate(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown workload"), "{err}");
+        assert!(err.contains("transformer") && err.contains("gcn"), "{err}");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! DSE driver (paper §8.4): MOTPE proposes (architecture, backend)
+//! DSE driver (paper §8.4): a [`DseStrategy`] (MOTPE by default — see
+//! `dse/strategy.rs` for the zoo) proposes (architecture, backend)
 //! knobs in batches; the trained two-stage models predict the five
 //! metrics through the `EvalService`'s batched surrogate path; ROI +
 //! power/runtime constraints gate feasibility; the Pareto front of
@@ -7,10 +8,14 @@
 //! through the same service — memoized and fanned out over the worker
 //! pool — the paper's "within 6-7% of post-SP&R" check.
 //!
-//! Determinism contract: the MOTPE trajectory depends only on the seed
-//! and the batch size (`run_batched`'s `batch`), never on the worker
-//! count. `run` uses batch 1, which reproduces the historical serial
-//! ask/tell loop exactly.
+//! Determinism contract: the proposal trajectory depends only on the
+//! strategy (and its seed) and the batch size (`run_batched`'s
+//! `batch`), never on the worker count. `run` uses batch 1, which
+//! reproduces the historical serial ask/tell loop exactly. The
+//! `MotpeConfig`-taking entry points (`run`/`run_batched`/
+//! `run_pipelined`) are thin wrappers that build a fresh MOTPE and
+//! delegate to the strategy-generic `*_with` flavors, so the default
+//! cell is byte-identical to the pre-seam driver.
 
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Mutex};
@@ -19,12 +24,12 @@ use anyhow::{Context, Result};
 
 use crate::backend::{BackendConfig, Enablement};
 use crate::data::{Dataset, Metric, Split};
-use crate::dse::{select_best, Candidate, CostSpec, Motpe, MotpeConfig};
+use crate::dse::{select_best, Candidate, CostSpec, DseStrategy, MotpeConfig, StrategyKind};
 use crate::generators::{ArchConfig, ParamKind, ParamSpec, Platform};
 use crate::models::{Gbdt, GbdtParams, RoiClassifier};
 use crate::util::json::Json;
 use crate::util::pool::{default_workers, par_map};
-use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
+use crate::workloads::{NonDnnAlgo, NonDnnWorkload, WorkloadSpec};
 
 use super::coalesce;
 use super::eval_service::{EvalService, EvalStats, SurrogatePoint};
@@ -206,13 +211,18 @@ pub struct DseProblem {
     pub f_target_range: (f64, f64),
     pub util_range: (f64, f64),
     pub cost: CostSpec,
-    /// Explicit workload override for non-DNN platforms (e.g. the
-    /// paper's SVM-55 for Axiline).
-    pub workload: Option<NonDnnWorkload>,
+    /// Explicit workload override routed into the oracle simulators:
+    /// a registry non-DNN spec (e.g. the paper's SVM-55 for Axiline)
+    /// or a DNN layer table (e.g. `transformer` on VTA). `None` keeps
+    /// the platform's default binding.
+    pub workload: Option<WorkloadSpec>,
 }
 
 impl DseProblem {
-    fn space(&self) -> Vec<ParamSpec> {
+    /// The proposal space a strategy optimizes over: the exposed arch
+    /// knobs plus the two backend knobs (public so callers can build
+    /// `DseStrategy` instances for the `*_with` run flavors).
+    pub fn space(&self) -> Vec<ParamSpec> {
         let mut space = self.arch_knobs.clone();
         space.push(ParamSpec {
             name: "f_target",
@@ -279,18 +289,18 @@ impl DseOutcome {
     }
 }
 
-/// MOTPE + surrogate + oracle, glued together by the `EvalService`.
+/// Strategy + surrogate + oracle, glued together by the `EvalService`.
 pub struct DseDriver {
     pub service: EvalService,
 }
 
 /// Apply one scored proposal in ask order: the Eq. 3 feasibility gate,
-/// the (energy, area) objectives, the MOTPE tell, and the recorded
+/// the (energy, area) objectives, the strategy tell, and the recorded
 /// point. One home, shared by the strict-alternation and pipelined run
 /// flavors, so the two cadences can never diverge.
 fn tell_scored(
     problem: &DseProblem,
-    motpe: &mut Motpe,
+    strategy: &mut dyn DseStrategy,
     points: &mut Vec<DsePoint>,
     x: Vec<f64>,
     sp: SurrogatePoint,
@@ -300,7 +310,7 @@ fn tell_scored(
             .cost
             .feasible(sp.predicted[&Metric::Power], sp.predicted[&Metric::Runtime]);
     let objectives = vec![sp.predicted[&Metric::Energy], sp.predicted[&Metric::Area]];
-    motpe.tell(x.clone(), objectives, feasible);
+    strategy.tell(x.clone(), objectives, feasible);
     points.push(DsePoint { x, predicted: sp.predicted, feasible });
 }
 
@@ -335,6 +345,17 @@ impl DseDriver {
         self.run_batched(problem, iterations, top_k, motpe_cfg, 1)
     }
 
+    /// Any-strategy `run`: serial ask/tell cadence (batch 1).
+    pub fn run_with(
+        &self,
+        problem: &DseProblem,
+        strategy: Box<dyn DseStrategy>,
+        iterations: usize,
+        top_k: usize,
+    ) -> Result<DseOutcome> {
+        self.run_batched_with(problem, strategy, iterations, top_k, 1)
+    }
+
     /// Run MOTPE for `iterations`, requesting suggestions in batches of
     /// `batch` and scoring each batch through the service's batched
     /// surrogate path, then ground-truth the top-k winners through the
@@ -347,14 +368,28 @@ impl DseDriver {
         motpe_cfg: MotpeConfig,
         batch: usize,
     ) -> Result<DseOutcome> {
+        let strategy = StrategyKind::Motpe.build(problem.space(), &motpe_cfg);
+        self.run_batched_with(problem, strategy, iterations, top_k, batch)
+    }
+
+    /// Strategy-generic `run_batched`: the strategy asks in batches of
+    /// `batch`, each batch is scored through the service's batched
+    /// surrogate path, and every tell lands in ask order.
+    pub fn run_batched_with(
+        &self,
+        problem: &DseProblem,
+        mut strategy: Box<dyn DseStrategy>,
+        iterations: usize,
+        top_k: usize,
+        batch: usize,
+    ) -> Result<DseOutcome> {
         let batch = batch.max(1);
-        let mut motpe = Motpe::new(problem.space(), motpe_cfg);
         let mut points = Vec::with_capacity(iterations);
 
         let mut remaining = iterations;
         while remaining > 0 {
             let b = batch.min(remaining);
-            let xs = motpe.ask_batch(b);
+            let xs = strategy.ask_batch(b);
             let mut feats = Vec::with_capacity(b);
             for x in &xs {
                 let (arch, bcfg) = problem.decode(x);
@@ -362,7 +397,7 @@ impl DseDriver {
             }
             let scored = self.service.predict_batch(&feats)?;
             for (x, sp) in xs.into_iter().zip(scored) {
-                tell_scored(problem, &mut motpe, &mut points, x, sp);
+                tell_scored(problem, strategy.as_mut(), &mut points, x, sp);
             }
             remaining -= b;
         }
@@ -391,10 +426,26 @@ impl DseDriver {
         batch: usize,
         inflight: usize,
     ) -> Result<DseOutcome> {
+        let strategy = StrategyKind::Motpe.build(problem.space(), &motpe_cfg);
+        self.run_pipelined_with(problem, strategy, iterations, top_k, batch, inflight)
+    }
+
+    /// Strategy-generic `run_pipelined`. The same byte-identity
+    /// argument as above holds for every strategy in the zoo: `ask`
+    /// consumes only the strategy's private RNG stream and its tell
+    /// log, and tells land in ask order after the batch is scored.
+    pub fn run_pipelined_with(
+        &self,
+        problem: &DseProblem,
+        mut strategy: Box<dyn DseStrategy>,
+        iterations: usize,
+        top_k: usize,
+        batch: usize,
+        inflight: usize,
+    ) -> Result<DseOutcome> {
         let batch = batch.max(1);
         let inflight = inflight.max(1);
         let service = &self.service;
-        let mut motpe = Motpe::new(problem.space(), motpe_cfg);
         let mut points: Vec<DsePoint> = Vec::with_capacity(iterations);
 
         let mut remaining = iterations;
@@ -430,7 +481,7 @@ impl DseDriver {
                 // the pipeline: proposal i+1 is generated here while
                 // workers score proposals <= i through the router
                 for i in 0..b {
-                    let x = motpe.ask();
+                    let x = strategy.ask();
                     let (arch, bcfg) = problem.decode(&x);
                     xs.push(x);
                     let _ = jtx.send((i, arch, bcfg));
@@ -445,7 +496,7 @@ impl DseDriver {
                     .into_inner()
                     .unwrap()
                     .context("scoring worker dropped a proposal")??;
-                tell_scored(problem, &mut motpe, &mut points, x, sp);
+                tell_scored(problem, strategy.as_mut(), &mut points, x, sp);
             }
             remaining -= b;
         }
@@ -507,18 +558,24 @@ impl DseDriver {
     }
 }
 
-/// The paper's Axiline-SVM-55 DSE problem (§8.4): size 10-51, cycles
-/// 5-21, f_target 0.3-1.3 GHz, util 0.4-0.8, alpha=1, beta=0.001.
-pub fn axiline_svm_problem(p_max: f64, r_max: f64) -> DseProblem {
+/// The Axiline DSE problem shape (§8.4) for any registry non-DNN
+/// workload: size 10-51, cycles 5-21, f_target 0.3-1.3 GHz, util
+/// 0.4-0.8, alpha=1, beta=0.001. The base arch's `benchmark`
+/// categorical is pinned to the workload's algorithm so the SP&R flow
+/// and the oracle simulator agree on what runs.
+pub fn axiline_nondnn_problem(p_max: f64, r_max: f64, wl: NonDnnWorkload) -> DseProblem {
     let platform = Platform::Axiline;
     let space = platform.param_space();
     let mut base = ArchConfig::new(
         platform,
         space.iter().map(|s| s.kind.from_unit(0.5)).collect(),
     );
-    // benchmark = svm
     let bidx = space.iter().position(|s| s.name == "benchmark").unwrap();
-    base.values[bidx] = 0.0;
+    if let ParamKind::Cat(names) = &space[bidx].kind {
+        if let Some(pos) = names.iter().position(|n| *n == wl.algo.name()) {
+            base.values[bidx] = pos as f64;
+        }
+    }
     DseProblem {
         base_arch: base,
         arch_knobs: vec![
@@ -528,8 +585,14 @@ pub fn axiline_svm_problem(p_max: f64, r_max: f64) -> DseProblem {
         f_target_range: (0.3, 1.3),
         util_range: (0.4, 0.8),
         cost: CostSpec { alpha: 1.0, beta: 0.001, p_max, r_max },
-        workload: Some(NonDnnWorkload::standard(NonDnnAlgo::Svm, 55)),
+        workload: Some(WorkloadSpec::NonDnn(wl)),
     }
+}
+
+/// The paper's Axiline-SVM-55 DSE problem (§8.4) — the default cell of
+/// the workload axis on the `axiline-svm` target.
+pub fn axiline_svm_problem(p_max: f64, r_max: f64) -> DseProblem {
+    axiline_nondnn_problem(p_max, r_max, NonDnnWorkload::standard(NonDnnAlgo::Svm, 55))
 }
 
 /// The paper's VTA backend-only DSE (§8.4): f_target 0.3-1.3 GHz, util

@@ -59,10 +59,10 @@ use crate::coordinator::model_store::ModelStore;
 use crate::coordinator::predict_server::PredictClient;
 use crate::data::{Dataset, Metric, Split};
 use crate::generators::{unified_features, ArchConfig, DesignAggregates, FEAT_DIM};
-use crate::simulators::{simulate, simulate_nondnn, SystemMetrics};
+use crate::simulators::{simulate, simulate_spec, SystemMetrics};
 use crate::util::pool::par_map;
 use crate::util::rng::{hash_bytes, Rng};
-use crate::workloads::{NonDnnAlgo, NonDnnWorkload};
+use crate::workloads::{NonDnnAlgo, WorkloadSpec};
 
 /// One fully ground-truthed point: SP&R flow output + system metrics.
 #[derive(Debug, Clone, Copy)]
@@ -547,13 +547,16 @@ impl EvalService {
     }
 
     /// Content-hash key for a full ground-truth evaluation: the flow
-    /// key extended with the workload the simulator ran.
-    fn oracle_key(&self, flow_key: u64, wl: Option<&NonDnnWorkload>) -> u64 {
-        let mut bytes = Vec::with_capacity(40);
+    /// key extended with the workload the simulator ran. The `None`
+    /// (platform default binding) and non-DNN encodings are frozen —
+    /// warm caches from earlier releases stay byte-compatible; DNN
+    /// layer-table overrides extend the keyspace under a new tag.
+    fn oracle_key(&self, flow_key: u64, wl: Option<&WorkloadSpec>) -> u64 {
+        let mut bytes = Vec::with_capacity(48);
         bytes.extend_from_slice(&flow_key.to_le_bytes());
         match wl {
             None => bytes.push(0),
-            Some(w) => {
+            Some(WorkloadSpec::NonDnn(w)) => {
                 bytes.push(match w.algo {
                     NonDnnAlgo::Svm => 1,
                     NonDnnAlgo::LinearRegression => 2,
@@ -564,6 +567,16 @@ impl EvalService {
                 bytes.extend_from_slice(&(w.features as u64).to_le_bytes());
                 bytes.extend_from_slice(&(w.samples as u64).to_le_bytes());
                 bytes.extend_from_slice(&(w.epochs as u64).to_le_bytes());
+            }
+            Some(WorkloadSpec::Dnn(net)) => {
+                bytes.push(6);
+                // name + op/weight totals + layer count: a cached result
+                // never survives an edit to the layer table it priced
+                bytes.extend_from_slice(&hash_bytes(net.name.as_bytes()).to_le_bytes());
+                bytes.extend_from_slice(&net.total_macs().to_le_bytes());
+                bytes.extend_from_slice(&net.total_vector_ops().to_le_bytes());
+                bytes.extend_from_slice(&net.total_weights().to_le_bytes());
+                bytes.extend_from_slice(&(net.layers.len() as u64).to_le_bytes());
             }
         }
         hash_bytes(&bytes)
@@ -617,12 +630,13 @@ impl EvalService {
     }
 
     /// Ground-truth one point (SP&R flow + system simulator), memoized.
-    /// `wl = None` uses the platform's default workload binding.
+    /// `wl = None` uses the platform's default workload binding; any
+    /// registry workload (DNN layer table or non-DNN spec) overrides it.
     pub fn evaluate(
         &self,
         arch: &ArchConfig,
         bcfg: BackendConfig,
-        wl: Option<&NonDnnWorkload>,
+        wl: Option<&WorkloadSpec>,
     ) -> Result<Evaluation> {
         self.evaluate_trial(arch, bcfg, wl, 0)
     }
@@ -635,7 +649,7 @@ impl EvalService {
         &self,
         arch: &ArchConfig,
         bcfg: BackendConfig,
-        wl: Option<&NonDnnWorkload>,
+        wl: Option<&WorkloadSpec>,
         trial: u64,
     ) -> Result<Evaluation> {
         let flow_key = self.flow_key(arch, bcfg, trial);
@@ -675,7 +689,7 @@ impl EvalService {
         &self,
         arch: &ArchConfig,
         bcfg: BackendConfig,
-        wl: Option<&NonDnnWorkload>,
+        wl: Option<&WorkloadSpec>,
         trial: u64,
         flow_key: u64,
         key: u64,
@@ -719,7 +733,7 @@ impl EvalService {
         };
         self.counters.oracle_runs.fetch_add(1, Ordering::Relaxed);
         let system = match wl {
-            Some(w) => simulate_nondnn(arch, &fr.backend, self.enablement, w)?,
+            Some(spec) => simulate_spec(arch, &fr.backend, self.enablement, spec)?,
             None => simulate(arch, &fr.backend, self.enablement)?,
         };
         let ev = Evaluation { flow: fr, system };
@@ -805,7 +819,7 @@ impl EvalService {
     pub fn evaluate_many(
         &self,
         jobs: &[(ArchConfig, BackendConfig)],
-        wl: Option<&NonDnnWorkload>,
+        wl: Option<&WorkloadSpec>,
     ) -> Result<Vec<Evaluation>> {
         let results: Vec<Result<Evaluation>> = par_map(jobs.len(), self.workers, |i| {
             let (arch, bcfg) = &jobs[i];
@@ -871,6 +885,7 @@ impl EvalService {
 mod tests {
     use super::*;
     use crate::generators::Platform;
+    use crate::workloads::NonDnnWorkload;
 
     fn mid_arch(p: Platform) -> ArchConfig {
         ArchConfig::new(
@@ -917,12 +932,36 @@ mod tests {
         let a = svc.evaluate(&arch, BackendConfig::new(0.8, 0.5), None).unwrap();
         let b = svc.evaluate(&arch, BackendConfig::new(0.9, 0.5), None).unwrap();
         assert_ne!(a.flow.backend.f_effective_ghz, b.flow.backend.f_effective_ghz);
-        let wl = NonDnnWorkload::standard(NonDnnAlgo::Svm, 55);
+        let wl = WorkloadSpec::NonDnn(NonDnnWorkload::standard(NonDnnAlgo::Svm, 55));
         let c = svc.evaluate(&arch, BackendConfig::new(0.8, 0.5), Some(&wl)).unwrap();
         // same flow result, workload-specific system metrics allowed to
         // differ; the cache must treat them as distinct entries
         assert_eq!(svc.stats().oracle_misses, 3);
         assert_eq!(a.flow.backend, c.flow.backend);
+    }
+
+    #[test]
+    fn dnn_workload_overrides_are_distinct_cache_entries() {
+        let arch = mid_arch(Platform::Vta);
+        let svc = EvalService::new(Enablement::Gf12, 1);
+        let bcfg = BackendConfig::new(0.9, 0.4);
+        let a = svc.evaluate(&arch, bcfg, None).unwrap(); // default: mobilenet
+        let tf = crate::workloads::lookup("transformer").unwrap();
+        let b = svc.evaluate(&arch, bcfg, Some(&tf)).unwrap();
+        let gc = crate::workloads::lookup("gcn").unwrap();
+        let c = svc.evaluate(&arch, bcfg, Some(&gc)).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.oracle_misses, 3, "each workload is its own oracle entry");
+        assert_eq!(s.flow_runs, 1, "the SP&R flow is workload-independent");
+        assert_eq!(a.flow.backend, b.flow.backend);
+        // an 11-GMAC encoder and a 63-MMAC GCN cannot price the same
+        assert_ne!(b.system, c.system);
+        // an explicit mobilenet override is a distinct key from the
+        // default binding but simulates identically
+        let mb = crate::workloads::lookup("mobilenet").unwrap();
+        let d = svc.evaluate(&arch, bcfg, Some(&mb)).unwrap();
+        assert_eq!(d.system, a.system);
+        assert_eq!(svc.stats().oracle_misses, 4);
     }
 
     #[test]
@@ -1058,7 +1097,7 @@ mod tests {
         assert_eq!(s.oracle_misses, 3);
         // a workload revisit reuses the flow: one more oracle run (the
         // cheap simulator pass) but no new flow run
-        let wl = NonDnnWorkload::standard(NonDnnAlgo::Svm, 55);
+        let wl = WorkloadSpec::NonDnn(NonDnnWorkload::standard(NonDnnAlgo::Svm, 55));
         svc.evaluate(&arch, BackendConfig::new(0.6, 0.5), Some(&wl)).unwrap();
         let s = svc.stats();
         assert_eq!(s.oracle_runs, 4);

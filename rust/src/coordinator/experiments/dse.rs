@@ -3,15 +3,16 @@
 //! against the full SP&R oracle + simulator. The paper's check: top-3
 //! predictions within 7% (Axiline-SVM/NG45) and 6% (VTA/GF12).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::backend::Enablement;
 use crate::coordinator::datagen::{self, DatagenConfig};
-use crate::coordinator::dse_driver::{axiline_svm_problem, vta_backend_problem, DseDriver};
+use crate::coordinator::dse_driver::{axiline_nondnn_problem, vta_backend_problem, DseDriver};
 use crate::coordinator::EvalService;
 use crate::data::Metric;
 use crate::dse::MotpeConfig;
 use crate::generators::{ArchConfig, Platform};
+use crate::workloads::{self, NonDnnWorkload, WorkloadSpec};
 
 use super::{write_csv, ExpOptions};
 
@@ -64,7 +65,20 @@ fn report(
 /// beta=0.001.
 pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
     let enablement = Enablement::Ng45;
+    // `--workload` picks any non-DNN registry entry for the Axiline
+    // search; the default stays the paper's SVM-55
+    let wl = match &opts.workload {
+        None => NonDnnWorkload::standard(crate::workloads::NonDnnAlgo::Svm, 55),
+        Some(name) => match workloads::lookup_with_features(name, 55)? {
+            WorkloadSpec::NonDnn(wl) => wl,
+            WorkloadSpec::Dnn(_) => bail!(
+                "fig11 explores Axiline, a non-DNN platform; --workload {name} is a DNN \
+                 layer table (pick one of svm, linear_regression, logistic_regression, recsys)"
+            ),
+        },
+    };
     let mut cfg = DatagenConfig::small(Platform::Axiline, enablement);
+    cfg.workload = opts.workload.clone();
     cfg.n_arch = 60; // datagen is cheap; dense coverage sharpens the surrogate
     if opts.quick {
         cfg.n_arch = 10;
@@ -105,17 +119,22 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
         .iter()
         .map(|r| r.power_w)
         .fold(0.0f64, f64::max);
-    let problem = axiline_svm_problem(p_max, r_max);
+    // with no override this is exactly `axiline_svm_problem(p_max, r_max)`
+    let problem = axiline_nondnn_problem(p_max, r_max, wl);
 
     let iters = if opts.quick { 120 } else { 400 };
-    println!("[fig11] MOTPE x {iters} over (dimension, num_cycles, f_target, util)");
-    // --coalesce: pipelined ask/tell (byte-identical trajectory; see
-    // DseDriver::run_pipelined)
-    let motpe_cfg = MotpeConfig { seed: opts.seed, ..Default::default() };
+    println!(
+        "[fig11] {} x {iters} over (dimension, num_cycles, f_target, util)",
+        opts.strategy.name()
+    );
+    // --coalesce: pipelined ask/tell (byte-identical trajectory per
+    // strategy; see DseDriver::run_pipelined_with)
+    let scfg = MotpeConfig { seed: opts.seed, ..Default::default() };
+    let strategy = opts.strategy.build(problem.space(), &scfg);
     let outcome = if opts.coalesce {
-        driver.run_pipelined(&problem, iters, 3, motpe_cfg, 16, opts.inflight)?
+        driver.run_pipelined_with(&problem, strategy, iters, 3, 16, opts.inflight)?
     } else {
-        driver.run_batched(&problem, iters, 3, motpe_cfg, 16)?
+        driver.run_batched_with(&problem, strategy, iters, 3, 16)?
     };
     println!("[fig11] eval service: {}", driver.stats());
     if let Some(store) = &store {
@@ -138,7 +157,20 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
 /// 0.3-1.3 GHz, util 0.25-0.55; alpha=beta=1.
 pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
     let enablement = Enablement::Gf12;
+    // `--workload` swaps the layer table the VTA search prices; the
+    // default stays the paper's MobileNet-v1 binding
+    let wl_override = match &opts.workload {
+        None => None,
+        Some(name) => match workloads::lookup(name)? {
+            spec @ WorkloadSpec::Dnn(_) => Some(spec),
+            WorkloadSpec::NonDnn(_) => bail!(
+                "fig12 explores VTA, a DNN platform; --workload {name} is a non-DNN \
+                 training algorithm (pick one of mobilenet, resnet50, transformer, gcn)"
+            ),
+        },
+    };
     let mut cfg = DatagenConfig::small(Platform::Vta, enablement);
+    cfg.workload = opts.workload.clone();
     cfg.n_arch = 24;
     cfg.n_backend_train = 60; // backend-only DSE: densify the knob plane
     if opts.quick {
@@ -180,15 +212,17 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
             .map(|s| s.kind.from_unit(0.5))
             .collect(),
     );
-    let problem = vta_backend_problem(base, p_max, r_max);
+    let mut problem = vta_backend_problem(base, p_max, r_max);
+    problem.workload = wl_override; // None keeps the default binding
 
     let iters = if opts.quick { 100 } else { 300 };
-    println!("[fig12] MOTPE x {iters} over (f_target, util)");
-    let motpe_cfg = MotpeConfig { seed: opts.seed, ..Default::default() };
+    println!("[fig12] {} x {iters} over (f_target, util)", opts.strategy.name());
+    let scfg = MotpeConfig { seed: opts.seed, ..Default::default() };
+    let strategy = opts.strategy.build(problem.space(), &scfg);
     let outcome = if opts.coalesce {
-        driver.run_pipelined(&problem, iters, 3, motpe_cfg, 16, opts.inflight)?
+        driver.run_pipelined_with(&problem, strategy, iters, 3, 16, opts.inflight)?
     } else {
-        driver.run_batched(&problem, iters, 3, motpe_cfg, 16)?
+        driver.run_batched_with(&problem, strategy, iters, 3, 16)?
     };
     println!("[fig12] eval service: {}", driver.stats());
     if let Some(store) = &store {

@@ -36,6 +36,14 @@ pub struct ExpOptions {
     pub coalesce: bool,
     /// `--inflight N`: scoring-pipeline depth for the pipelined DSE.
     pub inflight: usize,
+    /// `--strategy {motpe,random,lhs,evo}`: which optimizer drives the
+    /// DSE experiments. Motpe reproduces the historical trajectories
+    /// byte for byte.
+    pub strategy: crate::dse::StrategyKind,
+    /// `--workload <name>`: registry workload override for experiments
+    /// that price system metrics. `None` keeps each platform's default
+    /// binding (paper §7.1).
+    pub workload: Option<String>,
 }
 
 impl Default for ExpOptions {
@@ -49,6 +57,8 @@ impl Default for ExpOptions {
             store_policy: StorePolicy::default_auto(),
             coalesce: false,
             inflight: 4,
+            strategy: crate::dse::StrategyKind::Motpe,
+            workload: None,
         }
     }
 }

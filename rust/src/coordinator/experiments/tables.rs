@@ -17,6 +17,22 @@ fn fmt(v: f64) -> String {
     format!("{v:6.2}")
 }
 
+/// Apply the `--workload` override to a platform's datagen only when the
+/// workload kind matches the platform (DNN layer tables on GeneSys/VTA,
+/// non-DNN training specs on TABLA/Axiline). The name is validated
+/// against the registry either way; incompatible cells keep their
+/// default binding so a cross-platform table sweep stays runnable.
+fn workload_for(opts: &ExpOptions, platform: Platform) -> Result<Option<String>> {
+    match &opts.workload {
+        None => Ok(None),
+        Some(name) => {
+            let spec = crate::workloads::lookup(name)?;
+            Ok((spec.is_dnn() == crate::simulators::is_dnn_platform(platform))
+                .then(|| name.clone()))
+        }
+    }
+}
+
 /// Table 3: Axiline-SVM, training architectures sampled by LHS / Sobol /
 /// Halton at sizes 16/24/32; unseen-architecture evaluation of backend
 /// power and system energy (muAPE / STD APE / MAPE) per model.
@@ -24,6 +40,7 @@ pub fn tab3_sampling_study(opts: &ExpOptions) -> Result<()> {
     let platform = Platform::Axiline;
     let base = DatagenConfig {
         coalesce: opts.coalesce,
+        workload: workload_for(opts, platform)?,
         ..DatagenConfig::small(platform, Enablement::Gf12)
     };
     let trainer = Trainer::from_artifacts()?;
@@ -176,6 +193,7 @@ fn unseen_table(
     for (platform, enablement) in designs {
         let cfg = DatagenConfig {
             coalesce: opts.coalesce,
+            workload: workload_for(opts, platform)?,
             ..DatagenConfig::small(platform, enablement)
         };
         let g = datagen::generate(&cfg)?;

@@ -5,10 +5,12 @@
 pub mod cost;
 pub mod motpe;
 pub mod pareto;
+pub mod strategy;
 
 pub use cost::{select_best, Candidate, CostSpec};
 pub use motpe::{Motpe, MotpeConfig, Trial};
 pub use pareto::{dominates, nondominated_rank, pareto_front, ParetoFront};
+pub use strategy::{DseStrategy, EvoSearch, LhsSearch, RandomSearch, StrategyKind};
 
 /// Knobs of a DSE run (which dimensions are explored and their ranges
 /// are carried by the ParamSpec space handed to Motpe).

@@ -232,7 +232,7 @@ impl Motpe {
     }
 }
 
-fn discrete_values(kind: &ParamKind) -> Vec<f64> {
+pub(crate) fn discrete_values(kind: &ParamKind) -> Vec<f64> {
     match kind {
         ParamKind::Int { lo, hi } => (*lo..=*hi).map(|v| v as f64).collect(),
         ParamKind::Choice(vs) => vs.clone(),

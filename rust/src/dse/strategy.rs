@@ -1,0 +1,532 @@
+//! The optimizer seam of the DSE stack: every proposal engine implements
+//! [`DseStrategy`], and `DseDriver` only ever talks to the trait.
+//!
+//! The zoo currently holds four strategies:
+//!
+//! - [`Motpe`] — the paper's multi-objective TPE (the default);
+//! - [`RandomSearch`] — uniform prior sampling, the classic baseline;
+//! - [`LhsSearch`] — block-wise maximin Latin hypercube sampling built on
+//!   `sampling::Lhs`, so space-filling coverage survives an open-ended
+//!   ask/tell loop;
+//! - [`EvoSearch`] — a (mu+lambda) evolutionary strategy that mutates
+//!   nondominated parents.
+//!
+//! Determinism contract: each strategy owns a private RNG stream derived
+//! from the shared seed XOR a per-strategy constant, and consumes it only
+//! inside `ask`. A fixed seed therefore replays the exact proposal
+//! sequence for every cell of the strategy × workload × enablement grid,
+//! independent of worker count, coalescing, or cache temperature.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::generators::{ParamKind, ParamSpec};
+use crate::sampling::lhs::Lhs;
+use crate::util::rng::Rng;
+
+use super::motpe::discrete_values;
+use super::pareto::{nondominated_rank, pareto_front};
+use super::{Motpe, MotpeConfig, Trial};
+
+/// A multi-objective ask/tell proposal engine over a `ParamSpec` space.
+///
+/// The driver loop is strictly `ask_batch` → evaluate → `tell` in ask
+/// order; implementations may assume tells arrive in the order points
+/// were asked (that ordering is what makes pipelined runs byte-identical
+/// to strict alternation).
+pub trait DseStrategy {
+    /// Short stable name (matches the `--strategy` flag spelling).
+    fn name(&self) -> &'static str;
+
+    /// Propose the next point to evaluate.
+    fn ask(&mut self) -> Vec<f64>;
+
+    /// Propose `n` points; defined as `n` sequential asks so batched and
+    /// serial drivers see identical trajectories.
+    fn ask_batch(&mut self, n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| self.ask()).collect()
+    }
+
+    /// Record an observed outcome for an asked point.
+    fn tell(&mut self, x: Vec<f64>, objectives: Vec<f64>, feasible: bool);
+
+    /// Indices of recorded trials on the feasible Pareto front.
+    fn pareto_trials(&self) -> Vec<usize>;
+
+    /// All recorded trials, in tell order.
+    fn trials(&self) -> &[Trial];
+}
+
+impl DseStrategy for Motpe {
+    fn name(&self) -> &'static str {
+        "motpe"
+    }
+
+    fn ask(&mut self) -> Vec<f64> {
+        Motpe::ask(self)
+    }
+
+    fn ask_batch(&mut self, n: usize) -> Vec<Vec<f64>> {
+        Motpe::ask_batch(self, n)
+    }
+
+    fn tell(&mut self, x: Vec<f64>, objectives: Vec<f64>, feasible: bool) {
+        Motpe::tell(self, x, objectives, feasible)
+    }
+
+    fn pareto_trials(&self) -> Vec<usize> {
+        Motpe::pareto_trials(self)
+    }
+
+    fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+}
+
+/// Feasible Pareto-front indices over a raw trial log (shared by the
+/// non-TPE strategies; mirrors `Motpe::pareto_trials`).
+fn feasible_pareto(trials: &[Trial]) -> Vec<usize> {
+    let feasible: Vec<usize> =
+        (0..trials.len()).filter(|&i| trials[i].feasible).collect();
+    let objs: Vec<Vec<f64>> =
+        feasible.iter().map(|&i| trials[i].objectives.clone()).collect();
+    pareto_front(&objs).into_iter().map(|k| feasible[k]).collect()
+}
+
+fn prior_point(space: &[ParamSpec], rng: &mut Rng) -> Vec<f64> {
+    space.iter().map(|s| s.kind.from_unit(rng.f64())).collect()
+}
+
+/// Uniform prior sampling. Every ask is an independent draw from the
+/// parameter space; the trial log exists only for `pareto_trials`.
+pub struct RandomSearch {
+    space: Vec<ParamSpec>,
+    trials: Vec<Trial>,
+    rng: Rng,
+}
+
+impl RandomSearch {
+    pub fn new(space: Vec<ParamSpec>, seed: u64) -> RandomSearch {
+        RandomSearch { space, trials: Vec::new(), rng: Rng::new(seed ^ 0x52_41_4E_44) }
+    }
+}
+
+impl DseStrategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn ask(&mut self) -> Vec<f64> {
+        prior_point(&self.space, &mut self.rng)
+    }
+
+    fn tell(&mut self, x: Vec<f64>, objectives: Vec<f64>, feasible: bool) {
+        self.trials.push(Trial { x, objectives, feasible });
+    }
+
+    fn pareto_trials(&self) -> Vec<usize> {
+        feasible_pareto(&self.trials)
+    }
+
+    fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+}
+
+/// Block-wise Latin hypercube sampling. `sampling::Lhs` produces a
+/// fixed-size maximin design per call, so an open-ended ask stream is
+/// served in blocks of [`LhsSearch::BLOCK`] points, each block seeded
+/// from its own forked stream. Coverage is stratified within every
+/// block and the sequence depends only on (seed, ask count).
+pub struct LhsSearch {
+    space: Vec<ParamSpec>,
+    trials: Vec<Trial>,
+    seed: u64,
+    next_block: u64,
+    buf: VecDeque<Vec<f64>>,
+}
+
+impl LhsSearch {
+    /// Points per maximin design block.
+    pub const BLOCK: usize = 16;
+
+    pub fn new(space: Vec<ParamSpec>, seed: u64) -> LhsSearch {
+        LhsSearch {
+            space,
+            trials: Vec::new(),
+            seed,
+            next_block: 0,
+            buf: VecDeque::new(),
+        }
+    }
+
+    fn refill(&mut self) {
+        let block_seed = Rng::new(self.seed ^ 0x4C_48_53).fork(self.next_block).next_u64();
+        self.next_block += 1;
+        let unit = Lhs::new(self.space.len(), block_seed).sample(Self::BLOCK);
+        for row in unit {
+            let x: Vec<f64> = row
+                .iter()
+                .zip(&self.space)
+                .map(|(u, s)| s.kind.from_unit(*u))
+                .collect();
+            self.buf.push_back(x);
+        }
+    }
+}
+
+impl DseStrategy for LhsSearch {
+    fn name(&self) -> &'static str {
+        "lhs"
+    }
+
+    fn ask(&mut self) -> Vec<f64> {
+        if self.buf.is_empty() {
+            self.refill();
+        }
+        self.buf.pop_front().expect("refilled block is non-empty")
+    }
+
+    fn tell(&mut self, x: Vec<f64>, objectives: Vec<f64>, feasible: bool) {
+        self.trials.push(Trial { x, objectives, feasible });
+    }
+
+    fn pareto_trials(&self) -> Vec<usize> {
+        feasible_pareto(&self.trials)
+    }
+
+    fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+}
+
+/// A (mu+lambda) evolutionary strategy: the parent pool is the best `mu`
+/// trials of the whole history ranked by nondominated sort (feasible
+/// trials only — the plus-selection union of parents and offspring),
+/// and each ask mutates a uniformly chosen parent. Floats get Gaussian
+/// perturbation scaled to `sigma` of the range; discrete dimensions
+/// resample uniformly with a small probability. Until `n_startup` tells
+/// have arrived (and with a small exploration probability afterwards)
+/// asks fall back to the uniform prior.
+pub struct EvoSearch {
+    space: Vec<ParamSpec>,
+    trials: Vec<Trial>,
+    rng: Rng,
+    /// Parent pool size (the "mu" of mu+lambda).
+    pub mu: usize,
+    /// Random-prior warmup budget before selection kicks in.
+    pub n_startup: usize,
+    /// Gaussian mutation scale as a fraction of each Float range.
+    pub sigma: f64,
+}
+
+impl EvoSearch {
+    /// Probability an ask ignores the parents and explores the prior.
+    const P_EXPLORE: f64 = 0.10;
+    /// Probability a discrete dimension resamples instead of inheriting.
+    const P_DISCRETE_FLIP: f64 = 0.25;
+
+    pub fn new(space: Vec<ParamSpec>, cfg: &MotpeConfig) -> EvoSearch {
+        EvoSearch {
+            space,
+            trials: Vec::new(),
+            rng: Rng::new(cfg.seed ^ 0x45_56_4F),
+            mu: 8,
+            n_startup: cfg.n_startup,
+            sigma: 0.12,
+        }
+    }
+
+    /// Best-`mu` feasible trial indices by nondominated rank (ties broken
+    /// by tell order, which keeps selection deterministic).
+    fn parents(&self) -> Vec<usize> {
+        let feasible: Vec<usize> =
+            (0..self.trials.len()).filter(|&i| self.trials[i].feasible).collect();
+        if feasible.is_empty() {
+            return Vec::new();
+        }
+        let objs: Vec<Vec<f64>> =
+            feasible.iter().map(|&i| self.trials[i].objectives.clone()).collect();
+        let ranks = nondominated_rank(&objs);
+        let mut order: Vec<usize> = (0..feasible.len()).collect();
+        order.sort_by_key(|&k| (ranks[k], k));
+        order.into_iter().take(self.mu).map(|k| feasible[k]).collect()
+    }
+
+    fn mutate(&mut self, parent: &[f64]) -> Vec<f64> {
+        let mut child = Vec::with_capacity(self.space.len());
+        for (d, spec) in self.space.iter().enumerate() {
+            let v = match &spec.kind {
+                ParamKind::Float { lo, hi } => {
+                    let step = self.sigma * (hi - lo) * self.rng.normal();
+                    (parent[d] + step).clamp(*lo, *hi)
+                }
+                kind => {
+                    if self.rng.bool(Self::P_DISCRETE_FLIP) {
+                        let vals = discrete_values(kind);
+                        vals[self.rng.below(vals.len())]
+                    } else {
+                        parent[d]
+                    }
+                }
+            };
+            child.push(v);
+        }
+        child
+    }
+}
+
+impl DseStrategy for EvoSearch {
+    fn name(&self) -> &'static str {
+        "evo"
+    }
+
+    fn ask(&mut self) -> Vec<f64> {
+        if self.trials.len() < self.n_startup || self.rng.bool(Self::P_EXPLORE) {
+            return prior_point(&self.space, &mut self.rng);
+        }
+        let parents = self.parents();
+        if parents.is_empty() {
+            return prior_point(&self.space, &mut self.rng);
+        }
+        let pick = parents[self.rng.below(parents.len())];
+        let parent = self.trials[pick].x.clone();
+        self.mutate(&parent)
+    }
+
+    fn tell(&mut self, x: Vec<f64>, objectives: Vec<f64>, feasible: bool) {
+        self.trials.push(Trial { x, objectives, feasible });
+    }
+
+    fn pareto_trials(&self) -> Vec<usize> {
+        feasible_pareto(&self.trials)
+    }
+
+    fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+}
+
+/// Name-addressable constructor for the strategy zoo (the `--strategy`
+/// CLI axis). `build` hands out a fresh strategy, so every run of a grid
+/// cell starts from the same per-strategy RNG stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Motpe,
+    Random,
+    Lhs,
+    Evo,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 4] =
+        [StrategyKind::Motpe, StrategyKind::Random, StrategyKind::Lhs, StrategyKind::Evo];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Motpe => "motpe",
+            StrategyKind::Random => "random",
+            StrategyKind::Lhs => "lhs",
+            StrategyKind::Evo => "evo",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<StrategyKind> {
+        match name {
+            "motpe" => Ok(StrategyKind::Motpe),
+            "random" => Ok(StrategyKind::Random),
+            "lhs" => Ok(StrategyKind::Lhs),
+            "evo" => Ok(StrategyKind::Evo),
+            other => {
+                let names: Vec<&str> = Self::ALL.iter().map(|k| k.name()).collect();
+                bail!("unknown DSE strategy {:?} (available: {})", other, names.join(", "))
+            }
+        }
+    }
+
+    /// Build a fresh strategy over `space`. The `MotpeConfig` doubles as
+    /// the shared strategy config: every strategy derives its RNG stream
+    /// from `cfg.seed`, and `n_startup` bounds warmup where applicable.
+    pub fn build(self, space: Vec<ParamSpec>, cfg: &MotpeConfig) -> Box<dyn DseStrategy> {
+        match self {
+            StrategyKind::Motpe => Box::new(Motpe::new(space, cfg.clone())),
+            StrategyKind::Random => Box::new(RandomSearch::new(space, cfg.seed)),
+            StrategyKind::Lhs => Box::new(LhsSearch::new(space, cfg.seed)),
+            StrategyKind::Evo => Box::new(EvoSearch::new(space, cfg)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::stratum;
+
+    fn space2d() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "a", kind: ParamKind::Float { lo: 0.0, hi: 1.0 } },
+            ParamSpec { name: "b", kind: ParamKind::Float { lo: 0.0, hi: 1.0 } },
+        ]
+    }
+
+    fn mixed_space() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "f", kind: ParamKind::Float { lo: -2.0, hi: 3.0 } },
+            ParamSpec { name: "i", kind: ParamKind::Int { lo: 4, hi: 9 } },
+            ParamSpec { name: "c", kind: ParamKind::Choice(vec![8.0, 16.0, 32.0]) },
+            ParamSpec { name: "k", kind: ParamKind::Cat(vec!["x", "y"]) },
+        ]
+    }
+
+    fn eval(p: &[f64]) -> Vec<f64> {
+        vec![p[0], 1.0 - p[0] + (p[1] - 0.5).abs()]
+    }
+
+    fn legal(space: &[ParamSpec], x: &[f64]) {
+        assert_eq!(x.len(), space.len());
+        for (v, s) in x.iter().zip(space) {
+            match &s.kind {
+                ParamKind::Float { lo, hi } => assert!(*v >= *lo && *v <= *hi),
+                kind => assert!(
+                    discrete_values(kind).iter().any(|d| (d - v).abs() < 1e-9),
+                    "illegal discrete value {v} for {}",
+                    s.name
+                ),
+            }
+        }
+    }
+
+    fn drive(kind: StrategyKind, seed: u64, n: usize) -> Vec<Vec<f64>> {
+        let cfg = MotpeConfig { seed, n_startup: 8, ..Default::default() };
+        let mut s = kind.build(mixed_space(), &cfg);
+        let mut asked = Vec::new();
+        for _ in 0..n {
+            let x = s.ask();
+            legal(&mixed_space(), &x);
+            let objs = vec![x[0], -x[0] + x[1]];
+            let feasible = x[1] < 8.0;
+            s.tell(x.clone(), objs, feasible);
+            asked.push(x);
+        }
+        asked
+    }
+
+    #[test]
+    fn every_strategy_is_deterministic_and_legal() {
+        for kind in StrategyKind::ALL {
+            let a = drive(kind, 11, 40);
+            let b = drive(kind, 11, 40);
+            assert_eq!(a, b, "{} replay diverged", kind.name());
+        }
+    }
+
+    #[test]
+    fn strategies_use_distinct_rng_streams() {
+        let cfg = MotpeConfig { seed: 11, ..Default::default() };
+        let firsts: Vec<Vec<f64>> = StrategyKind::ALL
+            .iter()
+            .map(|k| k.build(space2d(), &cfg).ask())
+            .collect();
+        for i in 0..firsts.len() {
+            for j in (i + 1)..firsts.len() {
+                assert_ne!(
+                    firsts[i], firsts[j],
+                    "{} and {} opened with the same point",
+                    StrategyKind::ALL[i].name(),
+                    StrategyKind::ALL[j].name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ask_batch_matches_sequential_asks_for_all_strategies() {
+        for kind in StrategyKind::ALL {
+            let cfg = MotpeConfig { seed: 3, n_startup: 4, ..Default::default() };
+            let mut batched = kind.build(space2d(), &cfg);
+            let mut serial = kind.build(space2d(), &cfg);
+            for _ in 0..3 {
+                let xs = batched.ask_batch(5);
+                let ys: Vec<Vec<f64>> = (0..5).map(|_| serial.ask()).collect();
+                assert_eq!(xs, ys, "{} batch != serial", kind.name());
+                for x in xs {
+                    let o = eval(&x);
+                    batched.tell(x.clone(), o.clone(), true);
+                    serial.tell(x, o, true);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lhs_first_block_is_stratified_per_dimension() {
+        let mut s = LhsSearch::new(space2d(), 5);
+        let pts: Vec<Vec<f64>> = (0..LhsSearch::BLOCK).map(|_| s.ask()).collect();
+        for d in 0..2 {
+            let mut bins: Vec<usize> =
+                pts.iter().map(|p| stratum(p[d], LhsSearch::BLOCK)).collect();
+            bins.sort_unstable();
+            assert_eq!(bins, (0..LhsSearch::BLOCK).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn evo_concentrates_near_the_front_after_warmup() {
+        let cfg = MotpeConfig { seed: 9, n_startup: 12, ..Default::default() };
+        let mut evo = EvoSearch::new(space2d(), &cfg);
+        let mut late_hits = 0usize;
+        for i in 0..120 {
+            let x = evo.ask();
+            let o = eval(&x);
+            // Only points with b near 0.5 sit near the front; count how
+            // often the strategy proposes them late in the run.
+            if i >= 60 && (x[1] - 0.5).abs() < 0.2 {
+                late_hits += 1;
+            }
+            evo.tell(x, o, true);
+        }
+        // Uniform sampling lands in the band 40% of the time; the ES
+        // exploiting nondominated parents should do clearly better.
+        assert!(late_hits > 33, "only {late_hits}/60 late proposals near the front");
+    }
+
+    #[test]
+    fn pareto_trials_are_nondominated_for_non_tpe_strategies(
+    ) {
+        for kind in [StrategyKind::Random, StrategyKind::Lhs, StrategyKind::Evo] {
+            let cfg = MotpeConfig { seed: 17, n_startup: 8, ..Default::default() };
+            let mut s = kind.build(space2d(), &cfg);
+            for i in 0..60 {
+                let x = s.ask();
+                let o = eval(&x);
+                s.tell(x, o, i % 5 != 0);
+            }
+            let front = s.pareto_trials();
+            assert!(!front.is_empty());
+            let trials = s.trials();
+            for &i in &front {
+                assert!(trials[i].feasible, "{}: infeasible trial on front", kind.name());
+                for &j in &front {
+                    assert!(
+                        !crate::dse::dominates(&trials[j].objectives, &trials[i].objectives),
+                        "{}: front point dominated",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_name_lists_available() {
+        let err = StrategyKind::from_name("annealing").unwrap_err().to_string();
+        assert!(err.contains("annealing"));
+        for k in StrategyKind::ALL {
+            assert!(err.contains(k.name()), "error should list {}", k.name());
+        }
+        for k in StrategyKind::ALL {
+            assert_eq!(StrategyKind::from_name(k.name()).unwrap(), k);
+        }
+    }
+}

@@ -1,9 +1,9 @@
 //! `fso` — launcher for the full-stack ML-accelerator optimization
 //! framework (paper reproduction). Subcommands:
 //!
-//!   fso datagen   --platform axiline --enablement gf12 [--out data.csv]
+//!   fso datagen   --platform axiline --enablement gf12 [--out data.csv] [--workload NAME]
 //!   fso train     --platform vta [--metric power] [--trees-only]
-//!   fso dse       --target axiline-svm|vta [--iters N]
+//!   fso dse       --target axiline-svm|vta [--strategy motpe|random|lhs|evo] [--workload NAME]
 //!   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
 //!   fso store     <compact|stats> --cache-dir DIR   (persistent-store maintenance)
 //!   fso serve     --demo      (dynamic-batching predict server demo)
@@ -25,6 +25,7 @@ use fso::coordinator::{
     ModelStore, PredictServer, StorePolicy, TrainOptions, Trainer,
 };
 use fso::data::Metric;
+use fso::dse::StrategyKind;
 use fso::generators::Platform;
 use fso::models::ann::glorot_init;
 use fso::runtime::Engine;
@@ -68,15 +69,17 @@ fso — ML-based full-stack optimization framework for ML accelerators
 USAGE:
   fso datagen --platform <tabla|genesys|vta|axiline> [--enablement gf12|ng45|gf12,ng45]
               [--archs N] [--out data.csv] [--seed N] [--cache-dir DIR] [--coalesce]
-              [--store-codec v1|v2]
+              [--store-codec v1|v2] [--workload NAME]
   fso train --platform <...> [--metric power|perf|area|energy|runtime]
             [--trees-only] [--seed N] [--cache-dir DIR] [--no-model-cache]
-            [--report-out FILE] [--coalesce]
+            [--report-out FILE] [--coalesce] [--workload NAME]
   fso dse --target <axiline-svm|vta> [--quick] [--cache-dir DIR] [--no-model-cache]
-          [--coalesce] [--inflight N]
+          [--coalesce] [--inflight N] [--strategy motpe|random|lhs|evo]
+          [--workload NAME]
   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
                  [--quick] [--out-dir results] [--seed N] [--cache-dir DIR]
                  [--no-model-cache] [--coalesce] [--inflight N]
+                 [--strategy motpe|random|lhs|evo] [--workload NAME]
   fso store <compact|stats> --cache-dir DIR [--store-codec v1|v2]
             [--store-max-bytes N] [--store-max-records N] [--store-max-age N]
   fso serve [--clients N] [--rows N] [--tree-router]
@@ -128,6 +131,18 @@ scoring pipeline depth, default 4). Results are byte-identical to the
 serial path at the same seed — only wall-clock and CPU time change.
 `fso serve --tree-router` demos the cross-client router on the
 tree-family surrogate (no PJRT artifacts needed).
+
+--strategy picks the optimizer driving `fso dse` and the DSE
+experiments: motpe (the default, the paper's MO-TPE), random (seeded
+uniform), lhs (blocked maximin Latin hypercube), evo (mu+lambda
+mutation over the running Pareto set). --workload picks any registry
+workload by name — mobilenet, resnet50, transformer, gcn on the DNN
+platforms (GeneSys/VTA); svm, linear_regression, logistic_regression,
+recsys, backprop on TABLA/Axiline — for datagen, train, dse, and the
+experiments; unknown names list the registry. Every (strategy,
+workload, enablement) cell keeps the determinism contract: a fixed
+--seed yields byte-identical rows and Pareto fronts at any worker
+count, with or without --coalesce, cold or warm --cache-dir.
 
 `fso bench` drives the named perf-gate suites (see `fso bench list`):
 `run` executes a suite and writes its BENCH_<suite>.json trajectory
@@ -282,6 +297,7 @@ fn cmd_datagen(args: &Args) -> Result<()> {
         cfg.n_arch = args.usize_or("archs", cfg.n_arch)?;
         cfg.seed = args.u64_or("seed", cfg.seed)?;
         cfg.coalesce = args.flag("coalesce");
+        cfg.workload = args.get("workload").map(String::from);
         cfgs.push(cfg);
     }
     let t0 = std::time::Instant::now();
@@ -324,6 +340,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = DatagenConfig {
         seed,
         coalesce: args.flag("coalesce"),
+        workload: args.get("workload").map(String::from),
         ..DatagenConfig::small(platform, enablement)
     };
     println!("generating dataset...");
@@ -413,6 +430,8 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
         store_policy: store_policy(args)?,
         coalesce: args.flag("coalesce"),
         inflight: args.usize_or("inflight", 4)?,
+        strategy: StrategyKind::from_name(args.get_or("strategy", "motpe"))?,
+        workload: args.get("workload").map(String::from),
     })
 }
 

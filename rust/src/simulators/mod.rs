@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 
 use crate::backend::{BackendResult, Enablement};
 use crate::generators::{ArchConfig, Platform};
-use crate::workloads::{mobilenet_v1, resnet50, NonDnnAlgo, NonDnnWorkload};
+use crate::workloads::{self, DnnWorkload, NonDnnWorkload, WorkloadSpec};
 
 pub use energy::EnergyModel;
 
@@ -45,38 +45,58 @@ pub fn default_workload_features(platform: Platform) -> usize {
     }
 }
 
-/// Run the platform-appropriate simulator.
+/// Whether a platform runs DNN layer tables (systolic simulators) as
+/// opposed to non-DNN training algorithms (TABLA / Axiline).
+pub fn is_dnn_platform(platform: Platform) -> bool {
+    matches!(platform, Platform::GeneSys | Platform::Vta)
+}
+
+/// Registry name of the workload a platform runs when nothing is
+/// requested explicitly (paper §7.1 bindings).
+pub fn default_workload_name(platform: Platform) -> Option<&'static str> {
+    match platform {
+        Platform::GeneSys => Some("resnet50"),
+        Platform::Vta => Some("mobilenet"),
+        // Tabla/Axiline read the per-arch `benchmark` categorical
+        Platform::Tabla | Platform::Axiline => None,
+    }
+}
+
+/// Run the platform-appropriate simulator on its default workload
+/// binding. All workload-name resolution goes through the
+/// `workloads::lookup*` registry, so an arch whose `benchmark` value
+/// names nothing registered errors with the available list.
 pub fn simulate(
     arch: &ArchConfig,
     backend: &BackendResult,
     enablement: Enablement,
 ) -> Result<SystemMetrics> {
+    let name = match default_workload_name(arch.platform) {
+        Some(name) => name,
+        None => arch
+            .benchmark()
+            .ok_or_else(|| anyhow::anyhow!("{} config without benchmark", arch.platform))?,
+    };
+    let features = default_workload_features(arch.platform);
+    match workloads::lookup_with_features(name, features)? {
+        WorkloadSpec::Dnn(net) => simulate_dnn(arch, backend, enablement, &net),
+        WorkloadSpec::NonDnn(wl) => simulate_nondnn(arch, backend, enablement, &wl),
+    }
+}
+
+/// Simulate with an explicit DNN layer table (the `--workload` axis on
+/// GeneSys / VTA: resnet50, mobilenet, transformer, gcn, ...).
+pub fn simulate_dnn(
+    arch: &ArchConfig,
+    backend: &BackendResult,
+    enablement: Enablement,
+    net: &DnnWorkload,
+) -> Result<SystemMetrics> {
     let energy = EnergyModel::new(backend, enablement);
     match arch.platform {
-        Platform::GeneSys => {
-            let net = resnet50();
-            Ok(systolic::simulate_genesys(arch, backend, &energy, &net))
-        }
-        Platform::Vta => {
-            let net = mobilenet_v1();
-            Ok(vta_sim::simulate_vta(arch, backend, &energy, &net))
-        }
-        Platform::Tabla => {
-            let Some(name) = arch.benchmark() else {
-                bail!("tabla config without benchmark")
-            };
-            let algo = NonDnnAlgo::from_name(name).expect("tabla benchmark");
-            let wl = NonDnnWorkload::standard(algo, default_workload_features(Platform::Tabla));
-            Ok(tabla_sim::simulate_tabla(arch, backend, &energy, &wl))
-        }
-        Platform::Axiline => {
-            let Some(name) = arch.benchmark() else {
-                bail!("axiline config without benchmark")
-            };
-            let algo = NonDnnAlgo::from_name(name).expect("axiline benchmark");
-            let wl = NonDnnWorkload::standard(algo, default_workload_features(Platform::Axiline));
-            Ok(axiline_sim::simulate_axiline(arch, backend, &energy, &wl))
-        }
+        Platform::GeneSys => Ok(systolic::simulate_genesys(arch, backend, &energy, net)),
+        Platform::Vta => Ok(vta_sim::simulate_vta(arch, backend, &energy, net)),
+        p => bail!("{p} is not a DNN platform"),
     }
 }
 
@@ -93,6 +113,19 @@ pub fn simulate_nondnn(
         Platform::Tabla => Ok(tabla_sim::simulate_tabla(arch, backend, &energy, wl)),
         Platform::Axiline => Ok(axiline_sim::simulate_axiline(arch, backend, &energy, wl)),
         p => bail!("{p} is not a non-DNN platform"),
+    }
+}
+
+/// Simulate with any registry workload, dispatched by spec kind.
+pub fn simulate_spec(
+    arch: &ArchConfig,
+    backend: &BackendResult,
+    enablement: Enablement,
+    wl: &WorkloadSpec,
+) -> Result<SystemMetrics> {
+    match wl {
+        WorkloadSpec::Dnn(net) => simulate_dnn(arch, backend, enablement, net),
+        WorkloadSpec::NonDnn(w) => simulate_nondnn(arch, backend, enablement, w),
     }
 }
 
@@ -120,6 +153,42 @@ mod tests {
             assert!(m.cycles > 0.0);
             assert!((0.0..=1.0).contains(&m.busy_frac), "{p}: busy={}", m.busy_frac);
         }
+    }
+
+    #[test]
+    fn dnn_workload_matrix_simulates() {
+        for p in [Platform::GeneSys, Platform::Vta] {
+            let arch = mid(p);
+            let flow = SpnrFlow::new(Enablement::Gf12, 0);
+            let r = flow.run(&arch, BackendConfig::new(0.8, 0.45)).unwrap();
+            for name in ["mobilenet", "resnet50", "transformer", "gcn"] {
+                let WorkloadSpec::Dnn(net) = workloads::lookup(name).unwrap() else {
+                    panic!("{name} is registered as a DNN workload")
+                };
+                let m = simulate_dnn(&arch, &r.backend, Enablement::Gf12, &net).unwrap();
+                assert!(m.runtime_s > 0.0 && m.runtime_s.is_finite(), "{p}/{name}: {m:?}");
+                assert!(m.energy_j > 0.0 && m.energy_j.is_finite(), "{p}/{name}: {m:?}");
+                assert!(m.cycles > 0.0, "{p}/{name}: {m:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn workload_platform_mismatch_errors() {
+        let arch = mid(Platform::Axiline);
+        let flow = SpnrFlow::new(Enablement::Gf12, 0);
+        let r = flow.run(&arch, BackendConfig::new(0.8, 0.45)).unwrap();
+        let WorkloadSpec::Dnn(net) = workloads::lookup("transformer").unwrap() else {
+            panic!("transformer is a DNN workload")
+        };
+        let err = simulate_dnn(&arch, &r.backend, Enablement::Gf12, &net).unwrap_err();
+        assert!(err.to_string().contains("not a DNN platform"), "{err}");
+
+        let varch = mid(Platform::Vta);
+        let vr = flow.run(&varch, BackendConfig::new(0.8, 0.45)).unwrap();
+        let wl = NonDnnWorkload::standard(crate::workloads::NonDnnAlgo::Svm, 55);
+        let err = simulate_nondnn(&varch, &vr.backend, Enablement::Gf12, &wl).unwrap_err();
+        assert!(err.to_string().contains("not a non-DNN platform"), "{err}");
     }
 
     #[test]

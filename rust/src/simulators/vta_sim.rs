@@ -30,7 +30,7 @@ pub fn simulate_vta(
 
     for layer in &net.layers {
         match layer {
-            Layer::Conv { .. } | Layer::Dense { .. } => {
+            Layer::Conv { .. } | Layer::Dense { .. } | Layer::MatMul { .. } => {
                 let (m, k, n) = layer.as_gemm().unwrap();
                 // single shared off-chip bus: all three streams use it
                 let c = gemm_cost(

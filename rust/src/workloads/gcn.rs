@@ -1,0 +1,43 @@
+//! Two-layer GCN inference workload (Kipf-&-Welling shape over a
+//! Cora-scale citation graph). This is the *workload-side* mirror of
+//! the GCN surrogate in `models/gcn.rs`: the same
+//! transform-then-aggregate structure that `GcnModel` runs over LHG
+//! module graphs, expressed as a layer table the systolic simulators
+//! can cost.
+//!
+//! Each GCN layer is two matmuls: the dense feature transform
+//! `X · W` (N x Fin by Fin x Fout) and the sparse neighborhood
+//! aggregation `Â · (XW)`, costed at one MAC per (edge, feature) —
+//! i.e. a `MatMul` whose reduction depth is the mean degree — plus an
+//! activation epilogue (ReLU after layer 1, softmax after layer 2).
+
+use super::{DnnWorkload, Layer};
+
+/// Graph nodes (Cora scale).
+pub const NODES: usize = 2708;
+/// Mean in-degree used to cost the sparse aggregation matmul.
+pub const MEAN_DEGREE: usize = 4;
+/// Input feature dimension.
+pub const F_IN: usize = 1433;
+/// Hidden dimension (matches the 2-layer GCN in `models/gcn.rs`).
+pub const F_HIDDEN: usize = 16;
+/// Output classes.
+pub const F_OUT: usize = 7;
+
+fn gcn_layer(layers: &mut Vec<Layer>, f_in: usize, f_out: usize) {
+    // dense feature transform X · W
+    layers.push(Layer::MatMul { m: NODES, k: f_in, n: f_out });
+    // normalized-adjacency aggregation Â · (XW): one MAC per
+    // (edge, output feature)
+    layers.push(Layer::MatMul { m: NODES, k: MEAN_DEGREE, n: f_out });
+    // ReLU / softmax epilogue
+    layers.push(Layer::Act { n: NODES * f_out });
+}
+
+/// The `gcn` registry workload.
+pub fn gcn_two_layer() -> DnnWorkload {
+    let mut layers = Vec::new();
+    gcn_layer(&mut layers, F_IN, F_HIDDEN);
+    gcn_layer(&mut layers, F_HIDDEN, F_OUT);
+    DnnWorkload { name: "gcn", layers }
+}

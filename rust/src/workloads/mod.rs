@@ -1,13 +1,25 @@
 //! Workload descriptions (paper §3: cost metrics depend on network
-//! topology, not input data). ResNet-50 and MobileNet-v1 layer tables
-//! drive the DNN simulators (GeneSys, VTA); the non-DNN algorithm specs
-//! drive TABLA and Axiline.
+//! topology, not input data). DNN layer tables (ResNet-50,
+//! MobileNet-v1, a transformer encoder, a GCN) drive the DNN
+//! simulators (GeneSys, VTA); the non-DNN algorithm specs drive TABLA
+//! and Axiline.
+//!
+//! Every runnable workload is addressable by name through the
+//! [`lookup`] registry — the single home of workload-name resolution
+//! (the `--workload` CLI axis); unknown names error with the full
+//! list instead of silently defaulting.
 
+pub mod gcn;
 pub mod mobilenet;
 pub mod resnet50;
+pub mod transformer;
 
+pub use gcn::gcn_two_layer;
 pub use mobilenet::mobilenet_v1;
 pub use resnet50::resnet50;
+pub use transformer::transformer_encoder;
+
+use anyhow::{bail, Result};
 
 /// One DNN layer as the simulators see it.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,6 +34,12 @@ pub enum Layer {
     Pool { h: usize, w: usize, c: usize, k: usize, stride: usize },
     /// Elementwise activation over N values (ReLU etc.).
     Act { n: usize },
+    /// Plain matrix multiply (M x K) · (K x N) — the attention /
+    /// transformer building block. The right-hand operand is treated
+    /// as resident weights (exact for projection/FFN matmuls; for
+    /// activation-activation products like QKᵀ the K·N "weights" term
+    /// is negligible next to the M·K input traffic).
+    MatMul { m: usize, k: usize, n: usize },
 }
 
 impl Layer {
@@ -42,6 +60,7 @@ impl Layer {
                 (oh * ow) as u64 * (k * k) as u64 * c as u64
             }
             Layer::Dense { cin, cout } => (cin * cout) as u64,
+            Layer::MatMul { m, k, n } => (m * k) as u64 * n as u64,
             Layer::Pool { .. } | Layer::Act { .. } => 0,
         }
     }
@@ -64,6 +83,8 @@ impl Layer {
                 (oh * ow * c) as u64
             }
             Layer::Dense { cout, .. } => cout as u64,
+            // fused bias/residual epilogue on outputs (Conv convention)
+            Layer::MatMul { m, n, .. } => (m * n) as u64,
         }
     }
 
@@ -73,6 +94,7 @@ impl Layer {
             Layer::Conv { cin, cout, k, .. } => (k * k * cin * cout) as u64,
             Layer::DwConv { c, k, .. } => (k * k * c) as u64,
             Layer::Dense { cin, cout } => (cin * cout) as u64,
+            Layer::MatMul { k, n, .. } => (k * n) as u64,
             Layer::Pool { .. } | Layer::Act { .. } => 0,
         }
     }
@@ -83,6 +105,7 @@ impl Layer {
             Layer::Conv { h, w, cin, .. } => (h * w * cin) as u64,
             Layer::DwConv { h, w, c, .. } => (h * w * c) as u64,
             Layer::Dense { cin, .. } => cin as u64,
+            Layer::MatMul { m, k, .. } => (m * k) as u64,
             Layer::Pool { h, w, c, .. } => (h * w * c) as u64,
             Layer::Act { n } => n as u64,
         }
@@ -100,6 +123,7 @@ impl Layer {
                 (oh * ow * c) as u64
             }
             Layer::Dense { cout, .. } => cout as u64,
+            Layer::MatMul { m, n, .. } => (m * n) as u64,
             Layer::Pool { h, w, c, k: _, stride } => {
                 let (oh, ow) = Self::out_hw(h, w, stride);
                 (oh * ow * c) as u64
@@ -116,6 +140,7 @@ impl Layer {
                 Some(((oh * ow) as u64, (k * k * cin) as u64, cout as u64))
             }
             Layer::Dense { cin, cout } => Some((1, cin as u64, cout as u64)),
+            Layer::MatMul { m, k, n } => Some((m as u64, k as u64, n as u64)),
             _ => None,
         }
     }
@@ -136,6 +161,10 @@ impl DnnWorkload {
     pub fn total_weights(&self) -> u64 {
         self.layers.iter().map(|l| l.weights()).sum()
     }
+
+    pub fn total_vector_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.vector_ops()).sum()
+    }
 }
 
 /// Non-DNN statistical ML algorithms (paper Table 1 benchmarks).
@@ -149,6 +178,14 @@ pub enum NonDnnAlgo {
 }
 
 impl NonDnnAlgo {
+    pub const ALL: [NonDnnAlgo; 5] = [
+        NonDnnAlgo::Svm,
+        NonDnnAlgo::LinearRegression,
+        NonDnnAlgo::LogisticRegression,
+        NonDnnAlgo::Recsys,
+        NonDnnAlgo::Backprop,
+    ];
+
     pub fn from_name(s: &str) -> Option<NonDnnAlgo> {
         Some(match s {
             "svm" => NonDnnAlgo::Svm,
@@ -158,6 +195,18 @@ impl NonDnnAlgo {
             "backprop" => NonDnnAlgo::Backprop,
             _ => return None,
         })
+    }
+
+    /// Registry name (inverse of `from_name`; matches the `benchmark`
+    /// categorical values of the Tabla/Axiline param spaces).
+    pub fn name(self) -> &'static str {
+        match self {
+            NonDnnAlgo::Svm => "svm",
+            NonDnnAlgo::LinearRegression => "linear_regression",
+            NonDnnAlgo::LogisticRegression => "logistic_regression",
+            NonDnnAlgo::Recsys => "recsys",
+            NonDnnAlgo::Backprop => "backprop",
+        }
     }
 }
 
@@ -206,6 +255,68 @@ impl NonDnnWorkload {
     }
 }
 
+/// A registry entry: what the oracle simulators should run. DNN specs
+/// bind to the systolic simulators (GeneSys, VTA); non-DNN specs bind
+/// to the training-accelerator simulators (TABLA, Axiline).
+#[derive(Debug, Clone)]
+pub enum WorkloadSpec {
+    Dnn(DnnWorkload),
+    NonDnn(NonDnnWorkload),
+}
+
+impl WorkloadSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadSpec::Dnn(net) => net.name,
+            WorkloadSpec::NonDnn(wl) => wl.algo.name(),
+        }
+    }
+
+    pub fn is_dnn(&self) -> bool {
+        matches!(self, WorkloadSpec::Dnn(_))
+    }
+}
+
+/// Every name the [`lookup`] registry resolves (the `--workload` axis).
+pub const NAMES: [&str; 9] = [
+    "mobilenet",
+    "resnet50",
+    "transformer",
+    "gcn",
+    "svm",
+    "linear_regression",
+    "logistic_regression",
+    "recsys",
+    "backprop",
+];
+
+/// Resolve a workload name with non-DNN specs at their per-platform
+/// default sizing (`features` — e.g. 55 for Axiline, 64 for Tabla).
+/// Unknown names error with the full registry listing; nothing in the
+/// stack silently falls back to a default workload.
+pub fn lookup_with_features(name: &str, features: usize) -> Result<WorkloadSpec> {
+    Ok(match name {
+        "mobilenet" | "mobilenet_v1" => WorkloadSpec::Dnn(mobilenet_v1()),
+        "resnet50" => WorkloadSpec::Dnn(resnet50()),
+        "transformer" => WorkloadSpec::Dnn(transformer_encoder()),
+        "gcn" => WorkloadSpec::Dnn(gcn_two_layer()),
+        other => match NonDnnAlgo::from_name(other) {
+            Some(algo) => WorkloadSpec::NonDnn(NonDnnWorkload::standard(algo, features)),
+            None => bail!(
+                "unknown workload {:?} (available: {})",
+                other,
+                NAMES.join(", ")
+            ),
+        },
+    })
+}
+
+/// [`lookup_with_features`] at the paper's Axiline sizing (55 model
+/// features) — the default for callers without a platform context.
+pub fn lookup(name: &str) -> Result<WorkloadSpec> {
+    lookup_with_features(name, 55)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +357,79 @@ mod tests {
         let l = Layer::Conv { h: 56, w: 56, cin: 64, cout: 64, k: 3, stride: 1 };
         let (m, k, n) = l.as_gemm().unwrap();
         assert_eq!(m * k * n, l.macs());
+    }
+
+    #[test]
+    fn matmul_accounting_is_consistent() {
+        let l = Layer::MatMul { m: 128, k: 768, n: 3072 };
+        assert_eq!(l.macs(), 128 * 768 * 3072);
+        let (m, k, n) = l.as_gemm().unwrap();
+        assert_eq!(m * k * n, l.macs());
+        assert_eq!(l.weights(), 768 * 3072);
+        assert_eq!(l.input_elems(), 128 * 768);
+        assert_eq!(l.output_elems(), 128 * 3072);
+        // fused epilogue on outputs, matching the Conv convention
+        assert_eq!(l.vector_ops(), l.output_elems());
+    }
+
+    #[test]
+    fn transformer_op_counts_are_pinned() {
+        let net = transformer_encoder();
+        // 12-layer / seq-128 / d768 / ffn3072 encoder + 1000-way head:
+        // exact totals pinned so any table edit is a conscious choice
+        assert_eq!(net.total_macs(), 11_174_393_856);
+        assert_eq!(net.total_vector_ops(), 23_593_960);
+        assert_eq!(net.total_weights(), 85_899_264);
+        // attention/matmul-heavy: MatMul layers carry ~all the MACs
+        let mm_macs: u64 = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::MatMul { .. }))
+            .map(|l| l.macs())
+            .sum();
+        assert!(mm_macs as f64 / net.total_macs() as f64 > 0.999);
+    }
+
+    #[test]
+    fn gcn_op_counts_are_pinned() {
+        let net = gcn_two_layer();
+        assert_eq!(net.total_macs(), 62_641_456);
+        assert_eq!(net.total_vector_ops(), 186_852);
+        assert_eq!(net.total_weights(), 23_132);
+        // transform dominates aggregation at Cora scale
+        let transform = net.layers[0].macs();
+        assert!(transform as f64 / net.total_macs() as f64 > 0.9);
+    }
+
+    #[test]
+    fn registry_resolves_every_name() {
+        for name in NAMES {
+            let spec = lookup(name).unwrap();
+            // "mobilenet" is an alias for the mobilenet_v1 layer table
+            assert!(
+                spec.name() == name || (name == "mobilenet" && spec.name() == "mobilenet_v1"),
+                "{name} resolved to {}",
+                spec.name()
+            );
+        }
+        assert!(lookup("mobilenet").unwrap().is_dnn());
+        assert!(!lookup("svm").unwrap().is_dnn());
+        match lookup_with_features("backprop", 64).unwrap() {
+            WorkloadSpec::NonDnn(wl) => {
+                assert_eq!(wl.algo, NonDnnAlgo::Backprop);
+                assert_eq!(wl.features, 64);
+            }
+            other => panic!("backprop resolved to {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_workload_error_lists_available() {
+        let err = lookup("lenet").unwrap_err().to_string();
+        assert!(err.contains("lenet"));
+        for name in NAMES {
+            assert!(err.contains(name), "error should list {name}: {err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,60 @@
+//! Transformer encoder workload (BERT-base-shaped): the
+//! attention/matmul-heavy layer mix the paper's DNN scope implies but
+//! the seed repo never exercised. Every projection, attention product,
+//! and FFN stage is a [`Layer::MatMul`]; softmax/GELU/layer-norm
+//! epilogues are [`Layer::Act`] vector work; the classifier head is a
+//! plain [`Layer::Dense`].
+//!
+//! Shape: 12 layers, sequence 128, d_model 768, 12 heads (head dim
+//! 64), FFN 3072 — ~11.2 GMACs and ~86M parameters (BERT-base sans
+//! embedding tables), pinned exactly by the tests in `workloads/mod.rs`.
+
+use super::{DnnWorkload, Layer};
+
+/// Sequence length the encoder is profiled at.
+pub const SEQ: usize = 128;
+/// Model (hidden) dimension.
+pub const D_MODEL: usize = 768;
+/// Attention heads; head dimension is `D_MODEL / HEADS`.
+pub const HEADS: usize = 12;
+/// FFN inner dimension.
+pub const D_FFN: usize = 3072;
+/// Encoder layer count.
+pub const LAYERS: usize = 12;
+
+/// One encoder layer: QKV projections, per-head QKᵀ and A·V products
+/// (batched over heads in the M dimension), output projection, and the
+/// two FFN matmuls, with Act layers for softmax / residual+LN / GELU.
+fn encoder_layer(layers: &mut Vec<Layer>) {
+    let dh = D_MODEL / HEADS;
+    // Q, K, V projections: (SEQ x D_MODEL) · (D_MODEL x D_MODEL)
+    for _ in 0..3 {
+        layers.push(Layer::MatMul { m: SEQ, k: D_MODEL, n: D_MODEL });
+    }
+    // attention scores QKᵀ: per head (SEQ x dh) · (dh x SEQ), heads
+    // folded into M
+    layers.push(Layer::MatMul { m: SEQ * HEADS, k: dh, n: SEQ });
+    // softmax over every score
+    layers.push(Layer::Act { n: HEADS * SEQ * SEQ });
+    // A·V: per head (SEQ x SEQ) · (SEQ x dh)
+    layers.push(Layer::MatMul { m: SEQ * HEADS, k: SEQ, n: dh });
+    // output projection + residual/layer-norm epilogue
+    layers.push(Layer::MatMul { m: SEQ, k: D_MODEL, n: D_MODEL });
+    layers.push(Layer::Act { n: SEQ * D_MODEL });
+    // FFN up / GELU / FFN down + residual/layer-norm epilogue
+    layers.push(Layer::MatMul { m: SEQ, k: D_MODEL, n: D_FFN });
+    layers.push(Layer::Act { n: SEQ * D_FFN });
+    layers.push(Layer::MatMul { m: SEQ, k: D_FFN, n: D_MODEL });
+    layers.push(Layer::Act { n: SEQ * D_MODEL });
+}
+
+/// The `transformer` registry workload.
+pub fn transformer_encoder() -> DnnWorkload {
+    let mut layers = Vec::new();
+    for _ in 0..LAYERS {
+        encoder_layer(&mut layers);
+    }
+    // classifier head over the pooled token
+    layers.push(Layer::Dense { cin: D_MODEL, cout: 1000 });
+    DnnWorkload { name: "transformer", layers }
+}

@@ -1,0 +1,229 @@
+//! Strategy zoo x workload matrix (ISSUE 8): every cell of the
+//! (strategy, workload, enablement) grid must honor the determinism
+//! contract — a fixed seed yields byte-identical trajectories, Eq.-3
+//! winners, and Pareto fronts across the strict and pipelined cadences,
+//! repeat runs, and warm `--cache-dir` starts — and MOTPE must beat
+//! random search on the same budget through the full `DseDriver` path.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fso::backend::Enablement;
+use fso::coordinator::dse_driver::{
+    axiline_svm_problem, vta_backend_problem, DseDriver, DseOutcome, SurrogateBundle,
+};
+use fso::coordinator::{datagen, CacheStore, DatagenConfig, DseProblem, EvalService, GeneratedData};
+use fso::data::Metric;
+use fso::dse::{MotpeConfig, StrategyKind};
+use fso::generators::{ArchConfig, Platform};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fso-strategy-matrix-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+// sizes mirror tests/e2e_small.rs / warm_start.rs, known to yield a
+// non-empty feasible front on Axiline
+fn gen_data(platform: Platform, enablement: Enablement, workload: Option<&str>) -> GeneratedData {
+    datagen::generate(&DatagenConfig {
+        n_arch: 6,
+        n_backend_train: 10,
+        n_backend_test: 4,
+        workload: workload.map(String::from),
+        ..DatagenConfig::small(platform, enablement)
+    })
+    .unwrap()
+}
+
+/// The paper's problem shape for the dataset's platform, with the
+/// cell's workload override routed into the oracle simulators.
+fn problem_for(g: &GeneratedData, workload: Option<&str>) -> DseProblem {
+    let mut runtimes: Vec<f64> = g.dataset.rows.iter().map(|r| r.runtime_s).collect();
+    runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r_max = runtimes[runtimes.len() * 3 / 4];
+    let p_max = g.dataset.rows.iter().map(|r| r.power_w).fold(0.0, f64::max) * 2.0;
+    match g.dataset.platform {
+        Platform::Axiline => axiline_svm_problem(p_max, r_max),
+        Platform::Vta => {
+            let base = ArchConfig::new(
+                Platform::Vta,
+                Platform::Vta.param_space().iter().map(|s| s.kind.from_unit(0.5)).collect(),
+            );
+            let mut problem = vta_backend_problem(base, p_max, r_max);
+            problem.workload = workload.map(|n| fso::workloads::lookup(n).unwrap());
+            problem
+        }
+        p => panic!("no DSE problem shape for {p}"),
+    }
+}
+
+fn mk_driver(g: &GeneratedData) -> DseDriver {
+    let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 1).unwrap();
+    DseDriver::new(g.dataset.enablement, bundle, 2023).with_workers(2)
+}
+
+fn strategy_cfg() -> MotpeConfig {
+    MotpeConfig { n_startup: 16, seed: 5, ..Default::default() }
+}
+
+fn run_strict(
+    g: &GeneratedData,
+    problem: &DseProblem,
+    kind: StrategyKind,
+    iters: usize,
+) -> DseOutcome {
+    let driver = mk_driver(g);
+    let strategy = kind.build(problem.space(), &strategy_cfg());
+    driver.run_batched_with(problem, strategy, iters, 2, 12).unwrap()
+}
+
+fn run_pipelined(
+    g: &GeneratedData,
+    problem: &DseProblem,
+    kind: StrategyKind,
+    iters: usize,
+) -> DseOutcome {
+    let driver = mk_driver(g);
+    let strategy = kind.build(problem.space(), &strategy_cfg());
+    driver.run_pipelined_with(problem, strategy, iters, 2, 12, 3).unwrap()
+}
+
+fn assert_same(a: &DseOutcome, b: &DseOutcome, label: &str) {
+    assert_eq!(a.points, b.points, "{label}: trajectory diverged");
+    assert_eq!(a.best, b.best, "{label}: Eq. 3 winners diverged");
+    assert_eq!(a.ground_truth_errors, b.ground_truth_errors, "{label}: ground truth diverged");
+    assert_eq!(a.pareto_front(), b.pareto_front(), "{label}: Pareto front diverged");
+}
+
+#[test]
+fn every_strategy_workload_cell_is_deterministic_across_cadences_and_reruns() {
+    let cells = [
+        (Platform::Axiline, None),
+        (Platform::Vta, Some("transformer")),
+    ];
+    for (platform, workload) in cells {
+        let g = gen_data(platform, Enablement::Gf12, workload);
+        let problem = problem_for(&g, workload);
+        for kind in StrategyKind::ALL {
+            let label = format!("{}/{:?}/{}", platform, workload, kind.name());
+            let strict = run_strict(&g, &problem, kind, 40);
+            assert_eq!(strict.points.len(), 40, "{label}: truncated trajectory");
+            let rerun = run_strict(&g, &problem, kind, 40);
+            assert_same(&strict, &rerun, &format!("{label} rerun"));
+            let piped = run_pipelined(&g, &problem, kind, 40);
+            assert_same(&strict, &piped, &format!("{label} pipelined"));
+        }
+    }
+}
+
+#[test]
+fn ng45_enablement_cell_is_deterministic_too() {
+    // the enablement axis of the grid: same contract on NG45
+    let g = gen_data(Platform::Axiline, Enablement::Ng45, None);
+    let problem = problem_for(&g, None);
+    let strict = run_strict(&g, &problem, StrategyKind::Evo, 40);
+    let rerun = run_strict(&g, &problem, StrategyKind::Evo, 40);
+    assert_same(&strict, &rerun, "ng45/evo rerun");
+    let piped = run_pipelined(&g, &problem, StrategyKind::Evo, 40);
+    assert_same(&strict, &piped, "ng45/evo pipelined");
+}
+
+#[test]
+fn warm_cache_rerun_of_a_matrix_cell_is_byte_identical() {
+    let dir = tmp_dir("warm-cell");
+    // a thoroughly non-default cell: LHS strategy, GCN workload on VTA
+    let g = gen_data(Platform::Vta, Enablement::Gf12, Some("gcn"));
+    let problem = problem_for(&g, Some("gcn"));
+
+    let run = |store: &Arc<CacheStore>| {
+        let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 1).unwrap();
+        let service = EvalService::new(Enablement::Gf12, 2023)
+            .with_workers(2)
+            .with_surrogate(bundle)
+            .with_cache_store(Arc::clone(store));
+        let driver = DseDriver { service };
+        let strategy = StrategyKind::Lhs.build(problem.space(), &strategy_cfg());
+        let out = driver.run_batched_with(&problem, strategy, 40, 2, 12).unwrap();
+        let stats = driver.stats();
+        driver.service.flush_cache().unwrap();
+        (out, stats)
+    };
+
+    let (cold, cold_stats) = {
+        let store = Arc::new(CacheStore::open(&dir).unwrap());
+        run(&store)
+    };
+    let store = Arc::new(CacheStore::open(&dir).unwrap());
+    let (warm, warm_stats) = run(&store);
+
+    assert_same(&cold, &warm, "vta-gcn/lhs warm cache");
+    assert!(cold_stats.oracle_misses > 0, "cold run must hit the oracle");
+    assert_eq!(cold_stats.disk_hits, 0);
+    assert!(warm_stats.disk_hits > 0, "warm run saw no disk hits: {warm_stats}");
+    assert_eq!(
+        warm_stats.oracle_misses, 0,
+        "warm run re-ran the oracle: {warm_stats}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// 2D hypervolume (minimization) against `reference`: the area weakly
+/// dominated by the front and bounded by the reference point.
+fn hypervolume(points: &[(f64, f64)], reference: (f64, f64)) -> f64 {
+    let mut pts: Vec<(f64, f64)> = points
+        .iter()
+        .copied()
+        .filter(|&(x, y)| x < reference.0 && y < reference.1)
+        .collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.partial_cmp(&b.1).unwrap()));
+    let mut hv = 0.0;
+    let mut best_y = reference.1;
+    for (x, y) in pts {
+        if y < best_y {
+            hv += (reference.0 - x) * (best_y - y);
+            best_y = y;
+        }
+    }
+    hv
+}
+
+#[test]
+fn motpe_beats_random_search_on_the_same_budget_through_the_driver() {
+    // generalizes the in-crate `motpe_beats_random_on_same_budget` unit
+    // test to the full DseDriver path: same budget, same seed, same
+    // surrogate — MOTPE's feasible predicted-(energy, area) front must
+    // dominate more hypervolume than seeded random search
+    let g = gen_data(Platform::Axiline, Enablement::Gf12, None);
+    let problem = problem_for(&g, None);
+    let motpe = run_strict(&g, &problem, StrategyKind::Motpe, 160);
+    let random = run_strict(&g, &problem, StrategyKind::Random, 160);
+
+    let objs = |o: &DseOutcome| -> Vec<(f64, f64)> {
+        o.points
+            .iter()
+            .filter(|p| p.feasible)
+            .map(|p| (p.predicted[&Metric::Energy], p.predicted[&Metric::Area]))
+            .collect()
+    };
+    let (mo, ro) = (objs(&motpe), objs(&random));
+    assert!(!mo.is_empty(), "MOTPE found no feasible points");
+    assert!(!ro.is_empty(), "random search found no feasible points");
+
+    // reference point: componentwise worst over both runs, padded so
+    // boundary points still contribute volume
+    let worst = mo
+        .iter()
+        .chain(&ro)
+        .fold((f64::MIN, f64::MIN), |acc, &(x, y)| (acc.0.max(x), acc.1.max(y)));
+    let reference = (worst.0 * 1.1, worst.1 * 1.1);
+    let hv_motpe = hypervolume(&mo, reference);
+    let hv_random = hypervolume(&ro, reference);
+    assert!(
+        hv_motpe > hv_random,
+        "MOTPE hypervolume {hv_motpe:.4e} must beat random search {hv_random:.4e} \
+         on the same {}-evaluation budget",
+        motpe.points.len()
+    );
+}

@@ -13,7 +13,7 @@ use fso::coordinator::{
 };
 use fso::dse::MotpeConfig;
 use fso::generators::{ArchConfig, Platform};
-use fso::workloads::{NonDnnAlgo, NonDnnWorkload};
+use fso::workloads::{NonDnnAlgo, NonDnnWorkload, WorkloadSpec};
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir()
@@ -313,7 +313,7 @@ fn flow_results_are_shared_across_workloads_through_disk() {
 
     let store = Arc::new(CacheStore::open(&dir).unwrap());
     let svc = EvalService::new(Enablement::Gf12, 7).with_cache_store(store);
-    let wl = NonDnnWorkload::standard(NonDnnAlgo::Svm, 55);
+    let wl = WorkloadSpec::NonDnn(NonDnnWorkload::standard(NonDnnAlgo::Svm, 55));
     let ev = svc.evaluate(&arch, bcfg, Some(&wl)).unwrap();
     let s = svc.stats();
     assert_eq!(ev.flow.backend, cold_flow.backend, "flow PPA must match the cold run");
