@@ -319,8 +319,12 @@ impl RouterClient {
 /// generic sibling of `PredictServer` for tree-family surrogate
 /// traffic. Drop shuts the service thread down; requests still queued
 /// at shutdown receive replies or a disconnect error — never a hang.
+///
+/// `Sync` by construction (the submit channel sits behind a mutex), so
+/// the serve daemon can hold one router in an `Arc` and mint a
+/// [`RouterClient`] per connection thread.
 pub struct EvalRouter {
-    tx: mpsc::Sender<RouterMsg>,
+    tx: Mutex<mpsc::Sender<RouterMsg>>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -330,17 +334,17 @@ impl EvalRouter {
     pub fn start(service: Arc<EvalService>) -> EvalRouter {
         let (tx, rx) = mpsc::channel();
         let handle = std::thread::spawn(move || serve(&service, &rx));
-        EvalRouter { tx, handle: Some(handle) }
+        EvalRouter { tx: Mutex::new(tx), handle: Some(handle) }
     }
 
     pub fn client(&self) -> RouterClient {
-        RouterClient { tx: self.tx.clone() }
+        RouterClient { tx: self.tx.lock().unwrap().clone() }
     }
 }
 
 impl Drop for EvalRouter {
     fn drop(&mut self) {
-        let _ = self.tx.send(RouterMsg::Shutdown);
+        let _ = self.tx.lock().unwrap().send(RouterMsg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }

@@ -60,6 +60,7 @@ use crate::coordinator::predict_server::PredictClient;
 use crate::data::{Dataset, Metric, Split};
 use crate::generators::{unified_features, ArchConfig, DesignAggregates, FEAT_DIM};
 use crate::simulators::{simulate, simulate_spec, SystemMetrics};
+use crate::util::json::Json;
 use crate::util::pool::par_map;
 use crate::util::rng::{hash_bytes, Rng};
 use crate::workloads::{NonDnnAlgo, WorkloadSpec};
@@ -212,6 +213,40 @@ impl EvalStats {
         } else {
             self.router_rows as f64 / self.router_batches as f64
         }
+    }
+
+    /// The full counter set as a JSON object — what the serve daemon's
+    /// `stats` endpoint returns. `Json::obj` sorts the keys, so the
+    /// serialization is deterministic for byte-diffing clients.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("oracle_hits", Json::from(self.oracle_hits)),
+            ("oracle_misses", Json::from(self.oracle_misses)),
+            ("agg_hits", Json::from(self.agg_hits)),
+            ("agg_misses", Json::from(self.agg_misses)),
+            ("surrogate_rows", Json::from(self.surrogate_rows)),
+            ("surrogate_batches", Json::from(self.surrogate_batches)),
+            ("ann_rows", Json::from(self.ann_rows)),
+            ("ann_batches", Json::from(self.ann_batches)),
+            ("disk_hits", Json::from(self.disk_hits)),
+            ("shard_loads", Json::from(self.shard_loads)),
+            ("flushes", Json::from(self.flushes)),
+            ("model_hits", Json::from(self.model_hits)),
+            ("model_misses", Json::from(self.model_misses)),
+            ("store_evictions", Json::from(self.store_evictions)),
+            ("store_compactions", Json::from(self.store_compactions)),
+            ("lazy_skips", Json::from(self.lazy_skips)),
+            ("sidecar_hits", Json::from(self.sidecar_hits)),
+            ("sidecar_rebuilds", Json::from(self.sidecar_rebuilds)),
+            ("transcoded_records", Json::from(self.transcoded_records)),
+            ("oracle_runs", Json::from(self.oracle_runs)),
+            ("flow_runs", Json::from(self.flow_runs)),
+            ("coalesced_hits", Json::from(self.coalesced_hits)),
+            ("inflight_peak", Json::from(self.inflight_peak)),
+            ("router_requests", Json::from(self.router_requests)),
+            ("router_rows", Json::from(self.router_rows)),
+            ("router_batches", Json::from(self.router_batches)),
+        ])
     }
 }
 

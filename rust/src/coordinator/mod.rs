@@ -14,6 +14,7 @@ pub mod eval_service;
 pub mod experiments;
 pub mod model_store;
 pub mod predict_server;
+pub mod server;
 pub mod store;
 pub mod trainer;
 
@@ -24,5 +25,6 @@ pub use dse_driver::{DseDriver, DseProblem, SurrogateBundle};
 pub use eval_service::{EvalService, EvalStats, Evaluation, SurrogatePoint};
 pub use model_store::{ModelKey, ModelStore, ModelStoreStats};
 pub use predict_server::{PredictClient, PredictServer, ServerStats};
+pub use server::{run_daemon, ServeOptions, ServeStats};
 pub use store::{Codec, CompactReport, StorePolicy, StoreStats};
 pub use trainer::{EvalReport, ModelCacheStats, ModelMenu, TrainOptions, Trainer};

@@ -1,0 +1,76 @@
+//! Fault injection for the daemon's request path (ISSUE 9 satellite,
+//! mirroring `store::fault`): tests arm a one-shot fault and the next
+//! request line the daemon reads is damaged *after* framing but
+//! *before* decode — emulating a client torn mid-line by a crash or a
+//! proxy truncation. The contract under test: the damaged request gets
+//! a per-connection error response and the daemon keeps serving; it
+//! never panics and never wedges the connection.
+//!
+//! The hook is process-global and one-shot, armed either in-process
+//! (unit tests) or over the wire through the test-gated `hook` op
+//! (`FSO_SERVE_TEST_HOOKS=1` child daemons in `tests/serve_daemon.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How the next framed request line is damaged before decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeFault {
+    /// Truncate the line midway and append a non-UTF8 byte: a torn,
+    /// invalid request that must yield a 400 response, not a panic.
+    TornRequest,
+}
+
+// 0 = disarmed, 1 = TornRequest
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+fn code(fault: ServeFault) -> usize {
+    match fault {
+        ServeFault::TornRequest => 1,
+    }
+}
+
+/// Arm a one-shot request fault; the next request line consumes it.
+pub fn arm(fault: ServeFault) {
+    ARMED.store(code(fault), Ordering::SeqCst);
+}
+
+/// Cancel a pending fault (test cleanup).
+pub fn disarm() {
+    ARMED.store(0, Ordering::SeqCst);
+}
+
+/// True exactly once after `arm(point)` — the connection loop calls
+/// this per framed line and damages the line when it fires.
+pub(crate) fn trip(point: ServeFault) -> bool {
+    ARMED
+        .compare_exchange(code(point), 0, Ordering::SeqCst, Ordering::SeqCst)
+        .is_ok()
+}
+
+/// The injected damage: keep the first half of the line and append a
+/// byte that is valid in no UTF-8 sequence, so the decode *must* take
+/// its torn-line path.
+pub(crate) fn tear_line(line: &mut Vec<u8>) {
+    line.truncate(line.len() / 2);
+    line.push(0xFF);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::protocol::{decode_request, CODE_BAD_REQUEST};
+
+    #[test]
+    fn torn_fault_is_one_shot_and_decode_survives_the_damage() {
+        disarm();
+        assert!(!trip(ServeFault::TornRequest), "disarmed hook never fires");
+        arm(ServeFault::TornRequest);
+        assert!(trip(ServeFault::TornRequest), "armed hook fires once");
+        assert!(!trip(ServeFault::TornRequest), "and only once");
+
+        let mut line = br#"{"body":{"rows":[[1.0]]},"id":5,"op":"predict"}"#.to_vec();
+        tear_line(&mut line);
+        let e = decode_request(&line).expect_err("torn line must fail decode");
+        assert_eq!(e.code, CODE_BAD_REQUEST);
+    }
+}

@@ -1,0 +1,331 @@
+//! Accept loop and per-connection serving threads for the evaluation
+//! daemon (ISSUE 9 tentpole). One thread per connection over a
+//! nonblocking accept poll; each connection frames request lines with
+//! [`LineReader`], pays one token per request to its
+//! [`TokenBucket`], and dispatches through the shared
+//! [`ServerState`]. The drain flag (SIGTERM / `shutdown` op) stops the
+//! accept loop, lets every connection finish its already-received
+//! lines via [`LineReader::poll_buffered`], joins the threads, and
+//! flushes the stores — the identical path for both triggers, so the
+//! flushed shard bytes cannot depend on *how* the daemon was stopped.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::coalesce::EvalRouter;
+use crate::coordinator::eval_service::EvalService;
+use crate::coordinator::{CacheStore, ModelStore};
+
+use super::fault::{self, ServeFault};
+use super::protocol::{
+    decode_request, encode_err, encode_ok, salvage_id, LineEvent, LineReader, ProtoError,
+    CODE_QUOTA, CODE_TOO_LARGE, MAX_LINE,
+};
+use super::quota::TokenBucket;
+use super::router::{dispatch, ServerState};
+use super::{drain, ServeStats};
+
+/// How often idle loops wake to poll the drain flag.
+const POLL_MS: u64 = 15;
+
+/// Daemon configuration, filled in by `fso serve --listen`.
+pub struct ServeOptions {
+    /// `HOST:PORT` to bind; port 0 picks an ephemeral port (the bound
+    /// address is printed to stdout as `listening on ADDR`).
+    pub listen: String,
+    /// Per-connection admission burst; `None` = unlimited.
+    pub quota_burst: Option<usize>,
+    /// Token refill rate per second. 0 with a finite burst gives the
+    /// deterministic "first B admitted, rest rejected" mode.
+    pub quota_rate: f64,
+    /// Feature width of the attached surrogate (what `predict` rows
+    /// must carry; advertised via `health`).
+    pub feat_dim: usize,
+    /// `FSO_SERVE_TEST_HOOKS=1`: expose the `hook` op to clients.
+    pub test_hooks: bool,
+}
+
+/// Run the daemon until drained. Returns after all connection threads
+/// have exited and the stores (when attached) have flushed.
+pub fn run_daemon(
+    service: Arc<EvalService>,
+    cache: Option<Arc<CacheStore>>,
+    models: Option<Arc<ModelStore>>,
+    opts: &ServeOptions,
+) -> Result<()> {
+    drain::reset();
+    drain::install_signal_handlers();
+    let listener = TcpListener::bind(opts.listen.as_str())
+        .with_context(|| format!("binding serve listener on {}", opts.listen))?;
+    let local = listener.local_addr()?;
+    // the one stdout line: clients (and tests) parse the bound address
+    // from it, which is what makes `--listen 127.0.0.1:0` usable
+    println!("listening on {local}");
+    std::io::stdout().flush().ok();
+    listener.set_nonblocking(true)?;
+
+    let stats = Arc::new(ServeStats::default());
+    let state = Arc::new(ServerState {
+        service: Arc::clone(&service),
+        router: Arc::new(EvalRouter::start(Arc::clone(&service))),
+        stats: Arc::clone(&stats),
+        feat_dim: opts.feat_dim,
+        test_hooks: opts.test_hooks,
+    });
+    eprintln!(
+        "[serve] up addr={local} seed={} quota_burst={} quota_rate={}",
+        service.seed(),
+        opts.quota_burst.map_or_else(|| "unlimited".to_string(), |b| b.to_string()),
+        opts.quota_rate,
+    );
+
+    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut next_conn: u64 = 0;
+    while !drain::requested() {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                next_conn += 1;
+                let cid = next_conn;
+                stats.connections.fetch_add(1, Ordering::Relaxed);
+                let st = Arc::clone(&state);
+                let bucket = match opts.quota_burst {
+                    Some(b) => TokenBucket::new(b, opts.quota_rate),
+                    None => TokenBucket::unlimited(),
+                };
+                workers.push(std::thread::spawn(move || {
+                    serve_connection(stream, peer, cid, st, bucket)
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                workers.retain(|h| !h.is_finished());
+                std::thread::sleep(Duration::from_millis(POLL_MS));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("accepting serve connection"),
+        }
+    }
+
+    // drain: stop accepting, let in-flight requests finish, then flush
+    drop(listener);
+    let inflight = workers.len();
+    eprintln!("[serve] draining: joining {inflight} connection thread(s)");
+    for h in workers {
+        let _ = h.join();
+    }
+    // the router thread quiesces before the stores flush so late
+    // coalesced work cannot race the final render
+    drop(state);
+    if let Some(c) = &cache {
+        let n = c.flush().context("flushing cache store at drain")?;
+        eprintln!("[serve] drained: cache store flushed {n} record(s)");
+    }
+    if let Some(m) = &models {
+        let n = m.flush().context("flushing model store at drain")?;
+        eprintln!("[serve] drained: model store flushed {n} record(s)");
+    }
+    eprintln!(
+        "[serve] down requests_served={} requests_err={} quota_rejects={}",
+        stats.requests_ok.load(Ordering::Relaxed),
+        stats.requests_err.load(Ordering::Relaxed),
+        stats.quota_rejects.load(Ordering::Relaxed),
+    );
+    Ok(())
+}
+
+/// One response, plus what the request log line needs to say about it.
+struct Outcome {
+    text: String,
+    id: u64,
+    op: String,
+    ok: bool,
+    code: u16,
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    peer: SocketAddr,
+    cid: u64,
+    state: Arc<ServerState>,
+    mut bucket: TokenBucket,
+) {
+    if stream.set_read_timeout(Some(Duration::from_millis(POLL_MS))).is_err() {
+        return;
+    }
+    let mut reader = LineReader::new();
+    loop {
+        // once draining, serve only bytes that already arrived: every
+        // acknowledged request completes, nothing new is admitted
+        let ev = if drain::requested() {
+            match reader.poll_buffered() {
+                Some(ev) => Ok(ev),
+                None => break,
+            }
+        } else {
+            reader.poll_line(&mut stream)
+        };
+        match ev {
+            Ok(LineEvent::Line(mut line)) => {
+                if fault::trip(ServeFault::TornRequest) {
+                    fault::tear_line(&mut line);
+                }
+                let t0 = Instant::now();
+                let out = respond(&state, &mut bucket, &line);
+                let wrote = stream.write_all(out.text.as_bytes()).is_ok();
+                let us = t0.elapsed().as_micros();
+                eprintln!(
+                    "[serve] conn={cid} id={} op={} ok={} code={} bytes={} us={us}{}",
+                    out.id,
+                    out.op,
+                    out.ok,
+                    out.code,
+                    out.text.len(),
+                    if wrote { "" } else { " write=failed" },
+                );
+                if !wrote {
+                    break;
+                }
+            }
+            Ok(LineEvent::Oversized) => {
+                state.stats.oversized_lines.fetch_add(1, Ordering::Relaxed);
+                state.stats.requests_err.fetch_add(1, Ordering::Relaxed);
+                let e = ProtoError {
+                    code: CODE_TOO_LARGE,
+                    msg: format!("request line exceeds {MAX_LINE} bytes"),
+                };
+                eprintln!("[serve] conn={cid} oversized line rejected code={CODE_TOO_LARGE}");
+                if stream.write_all(encode_err(0, &e).as_bytes()).is_err() {
+                    break;
+                }
+            }
+            Ok(LineEvent::TimedOut) => {
+                if drain::requested() {
+                    // loop once more through poll_buffered to flush
+                    // any complete lines framed before the drain tick
+                    continue;
+                }
+            }
+            Ok(LineEvent::Eof) | Err(_) => break,
+        }
+    }
+    eprintln!("[serve] conn={cid} peer={peer} closed");
+}
+
+/// Admission, decode, dispatch, encode — the per-request pipeline.
+/// Infallible by construction: every failure mode is an error
+/// *response*, so a bad request can never take down its connection,
+/// let alone the daemon.
+fn respond(state: &ServerState, bucket: &mut TokenBucket, line: &[u8]) -> Outcome {
+    if !bucket.try_take() {
+        state.stats.quota_rejects.fetch_add(1, Ordering::Relaxed);
+        state.stats.requests_err.fetch_add(1, Ordering::Relaxed);
+        let id = salvage_id(line);
+        let e = ProtoError {
+            code: CODE_QUOTA,
+            msg: "per-connection quota exhausted; retry later".to_string(),
+        };
+        return Outcome { text: encode_err(id, &e), id, op: "?".to_string(), ok: false, code: e.code };
+    }
+    match decode_request(line) {
+        Ok(req) => match dispatch(state, &req) {
+            Ok(body) => {
+                state.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
+                Outcome {
+                    text: encode_ok(req.id, body),
+                    id: req.id,
+                    op: req.op,
+                    ok: true,
+                    code: 0,
+                }
+            }
+            Err(e) => {
+                state.stats.requests_err.fetch_add(1, Ordering::Relaxed);
+                Outcome {
+                    text: encode_err(req.id, &e),
+                    id: req.id,
+                    op: req.op,
+                    ok: false,
+                    code: e.code,
+                }
+            }
+        },
+        Err(e) => {
+            state.stats.requests_err.fetch_add(1, Ordering::Relaxed);
+            let id = salvage_id(line);
+            Outcome { text: encode_err(id, &e), id, op: "?".to_string(), ok: false, code: e.code }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Enablement;
+    use crate::util::json::Json;
+
+    fn state() -> ServerState {
+        let service = Arc::new(EvalService::new(Enablement::Gf12, 11).with_coalescing(true));
+        let router = Arc::new(EvalRouter::start(Arc::clone(&service)));
+        ServerState {
+            service,
+            router,
+            stats: Arc::new(ServeStats::default()),
+            feat_dim: 4,
+            test_hooks: false,
+        }
+    }
+
+    #[test]
+    fn respond_turns_every_failure_into_an_error_line() {
+        let st = state();
+        let mut bucket = TokenBucket::unlimited();
+        // torn line → 400 response carrying the salvaged id
+        let out = respond(&st, &mut bucket, br#"{"id":7,"op":"ev"#);
+        assert!(!out.ok);
+        assert_eq!(out.id, 7);
+        assert!(out.text.ends_with('\n'));
+        assert!(out.text.contains("\"code\":400"));
+        // non-UTF8 junk → 400, id 0
+        let out = respond(&st, &mut bucket, &[0xFF, 0xFE, 0x01]);
+        assert!(!out.ok);
+        assert_eq!(out.id, 0);
+        // a healthy request still round-trips through the same path
+        let out = respond(&st, &mut bucket, br#"{"id":1,"op":"health"}"#);
+        assert!(out.ok);
+        assert_eq!(out.code, 0);
+        assert_eq!(st.stats.requests_ok.load(Ordering::Relaxed), 1);
+        assert_eq!(st.stats.requests_err.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn quota_rejects_are_429_responses_not_hangs() {
+        let st = state();
+        let mut bucket = TokenBucket::new(2, 0.0);
+        let line = br#"{"id":3,"op":"health"}"#;
+        assert!(respond(&st, &mut bucket, line).ok);
+        assert!(respond(&st, &mut bucket, line).ok);
+        let out = respond(&st, &mut bucket, line);
+        assert!(!out.ok);
+        assert_eq!(out.code, CODE_QUOTA);
+        assert_eq!(out.id, 3, "the reject echoes the salvaged request id");
+        assert_eq!(st.stats.quota_rejects.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stats_handler_merges_serve_counters() {
+        let st = state();
+        let mut bucket = TokenBucket::unlimited();
+        respond(&st, &mut bucket, br#"{"id":1,"op":"health"}"#);
+        let out = respond(&st, &mut bucket, br#"{"id":2,"op":"stats"}"#);
+        assert!(out.ok);
+        let doc = Json::parse(out.text.trim()).unwrap();
+        let body = doc.get("body");
+        assert_eq!(body.get("requests_served").as_usize(), Some(1));
+        assert_eq!(body.get("connections").as_usize(), Some(0));
+        assert_eq!(body.get("oracle_runs").as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,82 @@
+//! The multi-tenant evaluation daemon behind `fso serve --listen`
+//! (ISSUE 9 tentpole): a long-lived process speaking newline-delimited
+//! JSON over plain `std::net::TcpListener` — no async runtime, fully
+//! offline — that puts the whole coordinator stack (memoized
+//! [`EvalService`](crate::coordinator::EvalService), single-flight
+//! oracle dedup, the [`EvalRouter`](crate::coordinator::EvalRouter)
+//! mega-batching window, DirLock-guarded sharded stores) behind one
+//! socket shared by many client processes.
+//!
+//! Protocol (one JSON document per line, both directions):
+//!
+//! ```text
+//! request:   {"body":{...},"id":N,"op":"predict"}
+//! ok:        {"body":{...},"id":N,"ok":true}
+//! error:     {"code":429,"error":"...","id":N,"ok":false}
+//! ```
+//!
+//! Module layout:
+//! - [`protocol`]: line framing (torn-read tolerant, `MAX_LINE`
+//!   bounded), tokenizer-based request decode, deterministic response
+//!   encoding, error codes.
+//! - [`router`]: the `routes!` op table and typed handlers
+//!   (`health` / `stats` / `predict` / `eval` / `shutdown`, plus the
+//!   test-gated `hook`).
+//! - [`quota`]: per-connection token-bucket admission (reject, never
+//!   hang).
+//! - [`drain`]: SIGTERM/`shutdown`-op graceful drain — one shared
+//!   path, so flushed store bytes are identical either way.
+//! - [`fault`]: one-shot torn-request injection for the lifecycle
+//!   tests.
+//! - [`listener`]: the accept loop and per-connection serving threads.
+//!
+//! Determinism contract: with a fixed daemon seed, any interleaving of
+//! any number of clients yields byte-identical response lines per
+//! request and byte-identical flushed shard files, while the
+//! single-flight/coalescing counters prove cross-client dedup
+//! (`oracle_runs == unique keys`, `coalesced_hits > 0`).
+
+pub mod drain;
+pub mod fault;
+pub mod listener;
+pub mod protocol;
+pub mod quota;
+pub mod router;
+
+pub use fault::ServeFault;
+pub use listener::{run_daemon, ServeOptions};
+pub use router::ServerState;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::json::Json;
+
+/// Daemon-level request counters, merged into the `stats` op's
+/// response next to the evaluation-stack counters.
+#[derive(Default)]
+pub struct ServeStats {
+    /// Connections accepted over the daemon's lifetime.
+    pub connections: AtomicUsize,
+    /// Requests answered `ok:true`.
+    pub requests_ok: AtomicUsize,
+    /// Requests answered `ok:false` (any error code).
+    pub requests_err: AtomicUsize,
+    /// Requests rejected with code 429 by a connection's token bucket.
+    pub quota_rejects: AtomicUsize,
+    /// Request lines dropped for exceeding [`protocol::MAX_LINE`].
+    pub oversized_lines: AtomicUsize,
+}
+
+impl ServeStats {
+    /// Stable-keyed entries for the `stats` response (sorted into the
+    /// response object's BTreeMap, so byte-deterministic).
+    pub fn to_entries(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("connections", Json::from(self.connections.load(Ordering::Relaxed))),
+            ("oversized_lines", Json::from(self.oversized_lines.load(Ordering::Relaxed))),
+            ("quota_rejects", Json::from(self.quota_rejects.load(Ordering::Relaxed))),
+            ("requests_err", Json::from(self.requests_err.load(Ordering::Relaxed))),
+            ("requests_served", Json::from(self.requests_ok.load(Ordering::Relaxed))),
+        ]
+    }
+}

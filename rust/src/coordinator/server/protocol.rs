@@ -1,0 +1,386 @@
+//! Wire protocol for the serve daemon (ISSUE 9): newline-delimited
+//! JSON over TCP. One request per line, one response line per request,
+//! in order:
+//!
+//! ```text
+//! -> {"id":1,"op":"eval","body":{"platform":"axiline","arch":[...],"f":0.8,"util":0.5}}
+//! <- {"body":{"metrics":{...}},"id":1,"ok":true}
+//! -> {"id":2,"op":"nope"}
+//! <- {"code":404,"error":"unknown op \"nope\"","id":2,"ok":false}
+//! ```
+//!
+//! Responses serialize through `Json` (`BTreeMap` keys + deterministic
+//! float formatting), so a fixed request sequence yields byte-identical
+//! response bytes — the socket boundary preserves the repo's
+//! determinism contract.
+//!
+//! Request decode rides the PR 7 streaming tokenizer: the envelope
+//! (`id`, `op`) is pulled token-by-token and the `body` span is
+//! tree-parsed only after the envelope proves well-formed. A torn,
+//! oversized, or non-UTF8 line is a *per-connection* [`ProtoError`]
+//! (the client gets a `code`/`error` response and the connection keeps
+//! serving) — never a daemon panic.
+
+use crate::util::json::{Json, JsonToken, JsonTokenizer};
+
+/// Hard cap on one request line. Oversized lines are rejected with
+/// [`CODE_TOO_LARGE`] and drained, keeping the connection usable.
+pub const MAX_LINE: usize = 1 << 20;
+
+pub const CODE_BAD_REQUEST: u16 = 400;
+pub const CODE_UNKNOWN_OP: u16 = 404;
+pub const CODE_TOO_LARGE: u16 = 413;
+pub const CODE_QUOTA: u16 = 429;
+pub const CODE_INTERNAL: u16 = 500;
+pub const CODE_DRAINING: u16 = 503;
+
+/// One decoded request line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed on the response (0 when
+    /// the line was too damaged to carry one).
+    pub id: u64,
+    pub op: String,
+    /// The `body` value (`Json::Null` when absent).
+    pub body: Json,
+}
+
+/// A request-level failure, rendered as an error response line. `code`
+/// follows HTTP semantics (400 parse, 404 route, 413 size, 429 quota,
+/// 500 handler, 503 draining).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProtoError {
+    pub code: u16,
+    pub msg: String,
+}
+
+impl ProtoError {
+    pub fn bad_request(msg: impl Into<String>) -> ProtoError {
+        ProtoError { code: CODE_BAD_REQUEST, msg: msg.into() }
+    }
+
+    pub fn internal(msg: impl Into<String>) -> ProtoError {
+        ProtoError { code: CODE_INTERNAL, msg: msg.into() }
+    }
+}
+
+/// Render a success response line (newline included).
+pub fn encode_ok(id: u64, body: Json) -> String {
+    let mut line = Json::obj(vec![
+        ("body", body),
+        ("id", Json::from(id as usize)),
+        ("ok", Json::from(true)),
+    ])
+    .to_string();
+    line.push('\n');
+    line
+}
+
+/// Render an error response line (newline included).
+pub fn encode_err(id: u64, e: &ProtoError) -> String {
+    let mut line = Json::obj(vec![
+        ("code", Json::from(e.code as usize)),
+        ("error", Json::from(e.msg.as_str())),
+        ("id", Json::from(id as usize)),
+        ("ok", Json::from(false)),
+    ])
+    .to_string();
+    line.push('\n');
+    line
+}
+
+/// Decode one request line. Streaming envelope extraction first (the
+/// tokenizer rejects torn docs, trailing garbage, and non-UTF8 string
+/// bytes without panicking), then a tree parse of just the `body` span.
+pub fn decode_request(line: &[u8]) -> Result<Request, ProtoError> {
+    let mut t = JsonTokenizer::new(line);
+    let proto = |e: &crate::util::json::JsonError| ProtoError::bad_request(format!("{e}"));
+    match t.next().map_err(|e| proto(&e))? {
+        Some(JsonToken::ObjBegin) => {}
+        _ => return Err(ProtoError::bad_request("request line is not a JSON object")),
+    }
+    let mut id: u64 = 0;
+    let mut op: Option<String> = None;
+    let mut body_span: Option<(usize, usize)> = None;
+    loop {
+        match t.next().map_err(|e| proto(&e))? {
+            Some(JsonToken::Key(k)) => match k.as_ref() {
+                "id" => match t.next().map_err(|e| proto(&e))? {
+                    Some(JsonToken::Num(n)) if n.is_finite() && n >= 0.0 => {
+                        id = n as u64;
+                    }
+                    _ => return Err(ProtoError::bad_request("\"id\" must be a number")),
+                },
+                "op" => match t.next().map_err(|e| proto(&e))? {
+                    Some(JsonToken::Str(s)) => op = Some(s.into_owned()),
+                    _ => return Err(ProtoError::bad_request("\"op\" must be a string")),
+                },
+                "body" => {
+                    body_span = Some(t.value_span().map_err(|e| proto(&e))?);
+                }
+                _ => {
+                    // unknown envelope field: validate + skip
+                    t.value_span().map_err(|e| proto(&e))?;
+                }
+            },
+            Some(JsonToken::ObjEnd) => break,
+            _ => return Err(ProtoError::bad_request("torn request object")),
+        }
+    }
+    // trailing-garbage check: a second document on the line is torn
+    if t.next().map_err(|e| proto(&e))?.is_some() {
+        return Err(ProtoError::bad_request("trailing bytes after request object"));
+    }
+    let op = op.ok_or_else(|| ProtoError::bad_request("request is missing \"op\""))?;
+    let body = match body_span {
+        None => Json::Null,
+        Some((s, e)) => {
+            // the span was tokenizer-validated, so it is valid UTF-8
+            // and a well-formed value; the tree parse cannot fail
+            let text = std::str::from_utf8(&line[s..e])
+                .map_err(|_| ProtoError::bad_request("body is not UTF-8"))?;
+            Json::parse(text).map_err(|e| proto(&e))?
+        }
+    };
+    Ok(Request { id, op, body })
+}
+
+/// Salvage a correlation id from a line that failed full decode, so
+/// the error response still routes to the right in-flight request on a
+/// pipelining client. Best-effort: stops at the first readable `id`
+/// (the tail may be torn past it); 0 when the id is unreadable.
+pub fn salvage_id(line: &[u8]) -> u64 {
+    let mut t = JsonTokenizer::new(line);
+    if !matches!(t.next(), Ok(Some(JsonToken::ObjBegin))) {
+        return 0;
+    }
+    loop {
+        match t.next() {
+            Ok(Some(JsonToken::Key(k))) if k.as_ref() == "id" => {
+                return match t.next() {
+                    Ok(Some(JsonToken::Num(n))) if n.is_finite() && n >= 0.0 => n as u64,
+                    _ => 0,
+                };
+            }
+            Ok(Some(JsonToken::Key(_))) => {
+                if t.value_span().is_err() {
+                    return 0;
+                }
+            }
+            _ => return 0,
+        }
+    }
+}
+
+/// What one poll of a connection's read buffer yielded.
+#[derive(Debug, PartialEq)]
+pub enum LineEvent {
+    /// One complete request line (newline stripped).
+    Line(Vec<u8>),
+    /// The read timed out — the caller checks the drain flag and polls
+    /// again.
+    TimedOut,
+    /// Peer closed the connection (any unterminated tail bytes are a
+    /// torn final request with nobody left to answer — dropped).
+    Eof,
+    /// The current line exceeded [`MAX_LINE`]; its bytes are being
+    /// drained. Reported once per oversized line.
+    Oversized,
+}
+
+/// Incremental newline framing over a blocking-with-timeout stream.
+/// Tolerates torn reads (partial lines buffer until the newline
+/// arrives) and bounds memory via [`MAX_LINE`].
+pub struct LineReader {
+    buf: Vec<u8>,
+    /// Draining an oversized line: discard until the next newline.
+    skipping: bool,
+}
+
+impl Default for LineReader {
+    fn default() -> Self {
+        LineReader::new()
+    }
+}
+
+impl LineReader {
+    pub fn new() -> LineReader {
+        LineReader { buf: Vec::new(), skipping: false }
+    }
+
+    /// Pull the next event, reading from `stream` only when the buffer
+    /// holds no complete line.
+    pub fn poll_line(&mut self, stream: &mut dyn std::io::Read) -> std::io::Result<LineEvent> {
+        loop {
+            if let Some(ev) = self.event_from_buffer() {
+                return Ok(ev);
+            }
+            let mut chunk = [0u8; 4096];
+            match stream.read(&mut chunk) {
+                Ok(0) => return Ok(LineEvent::Eof),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(LineEvent::TimedOut)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Like [`LineReader::poll_line`] but never touches the socket:
+    /// only lines whose bytes already arrived come out. The drain path
+    /// uses this so every *acknowledged* (received) request completes
+    /// while nothing new is admitted.
+    pub fn poll_buffered(&mut self) -> Option<LineEvent> {
+        self.event_from_buffer()
+    }
+
+    fn event_from_buffer(&mut self) -> Option<LineEvent> {
+        loop {
+            let nl = self.buf.iter().position(|&b| b == b'\n');
+            if self.skipping {
+                // still draining an oversized line
+                match nl {
+                    Some(i) => {
+                        self.buf.drain(..=i);
+                        self.skipping = false;
+                        continue;
+                    }
+                    None => {
+                        self.buf.clear();
+                        return None;
+                    }
+                }
+            }
+            return match nl {
+                Some(i) => {
+                    let mut line: Vec<u8> = self.buf.drain(..=i).collect();
+                    line.pop(); // newline
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    if line.len() > MAX_LINE {
+                        Some(LineEvent::Oversized)
+                    } else if line.is_empty() {
+                        continue; // blank keep-alive line
+                    } else {
+                        Some(LineEvent::Line(line))
+                    }
+                }
+                None if self.buf.len() > MAX_LINE => {
+                    self.buf.clear();
+                    self.skipping = true;
+                    Some(LineEvent::Oversized)
+                }
+                None => None,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn well_formed_requests_decode() {
+        let r = decode_request(br#"{"id":3,"op":"health"}"#).unwrap();
+        assert_eq!(r, Request { id: 3, op: "health".into(), body: Json::Null });
+        let r = decode_request(br#"{"body":{"rows":[[1.5,2]]},"id":9,"op":"predict"}"#).unwrap();
+        assert_eq!(r.id, 9);
+        assert_eq!(r.op, "predict");
+        assert_eq!(r.body.get("rows").idx(0).idx(1).as_f64(), Some(2.0));
+        // missing id defaults to 0; unknown envelope fields are skipped
+        let r = decode_request(br#"{"op":"stats","x":{"deep":[1,{"k":"}"}]}}"#).unwrap();
+        assert_eq!((r.id, r.op.as_str()), (0, "stats"));
+    }
+
+    #[test]
+    fn torn_oversized_and_non_utf8_lines_are_errors_not_panics() {
+        // torn tails at every cut of a valid request: always a 400,
+        // never a panic (the crash-injection contract of satellite 3)
+        let full = br#"{"body":{"rows":[[1.0,2.0]]},"id":7,"op":"predict"}"#;
+        for cut in 1..full.len() - 1 {
+            let e = decode_request(&full[..cut]).expect_err("torn line must error");
+            assert_eq!(e.code, CODE_BAD_REQUEST, "cut {cut}");
+        }
+        // non-UTF8 bytes inside a string
+        let mut bad = full.to_vec();
+        let q = bad.iter().position(|&b| b == b'p').unwrap();
+        bad[q] = 0xFF;
+        assert_eq!(decode_request(&bad).unwrap_err().code, CODE_BAD_REQUEST);
+        // structurally foreign lines
+        for junk in [&b"null"[..], b"[1,2]", b"{\"op\":7}", b"{} trailing", b"\xF5\x01\x02"] {
+            assert!(decode_request(junk).is_err(), "{junk:?} must not decode");
+        }
+        // the id is still salvaged from a torn line when readable
+        assert_eq!(salvage_id(br#"{"id":42,"op":"eval","body":{"#), 42);
+        assert_eq!(salvage_id(b"garbage"), 0);
+    }
+
+    #[test]
+    fn responses_are_deterministic_lines() {
+        let ok = encode_ok(5, Json::obj(vec![("z", Json::from(1usize)), ("a", Json::from(2usize))]));
+        // sorted keys at both levels, one trailing newline
+        assert_eq!(ok, "{\"body\":{\"a\":2,\"z\":1},\"id\":5,\"ok\":true}\n");
+        let err = encode_err(2, &ProtoError { code: CODE_QUOTA, msg: "slow down".into() });
+        assert_eq!(err, "{\"code\":429,\"error\":\"slow down\",\"id\":2,\"ok\":false}\n");
+    }
+
+    #[test]
+    fn line_reader_frames_torn_reads_and_bounds_lines() {
+        // feed a line in two torn chunks through a scripted reader
+        struct Script(Vec<Vec<u8>>);
+        impl std::io::Read for Script {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.0.is_empty() {
+                    return Ok(0);
+                }
+                let mut chunk = self.0.remove(0);
+                if chunk.is_empty() {
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                let n = chunk.len().min(out.len());
+                out[..n].copy_from_slice(&chunk[..n]);
+                if n < chunk.len() {
+                    chunk.drain(..n);
+                    self.0.insert(0, chunk);
+                }
+                Ok(n)
+            }
+        }
+        let mut r = LineReader::new();
+        let mut s = Script(vec![
+            b"{\"op\":\"he".to_vec(),
+            Vec::new(), // torn: timeout between the halves
+            b"alth\"}\r\n{\"op\":\"stats\"}\n".to_vec(),
+        ]);
+        assert_eq!(r.poll_line(&mut s).unwrap(), LineEvent::TimedOut);
+        assert_eq!(
+            r.poll_line(&mut s).unwrap(),
+            LineEvent::Line(b"{\"op\":\"health\"}".to_vec())
+        );
+        assert_eq!(
+            r.poll_line(&mut s).unwrap(),
+            LineEvent::Line(b"{\"op\":\"stats\"}".to_vec())
+        );
+        assert_eq!(r.poll_line(&mut s).unwrap(), LineEvent::Eof);
+
+        // an oversized line reports once, drains, and the next line
+        // still parses (the connection survives)
+        let mut r = LineReader::new();
+        let mut big = vec![b'x'; MAX_LINE + 10];
+        big.push(b'\n');
+        big.extend_from_slice(b"{\"op\":\"health\"}\n");
+        let mut s = Script(vec![big]);
+        assert_eq!(r.poll_line(&mut s).unwrap(), LineEvent::Oversized);
+        assert_eq!(
+            r.poll_line(&mut s).unwrap(),
+            LineEvent::Line(b"{\"op\":\"health\"}".to_vec())
+        );
+    }
+}

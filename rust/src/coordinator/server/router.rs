@@ -1,0 +1,353 @@
+//! Typed request routing for the serve daemon (ISSUE 9): the
+//! `routes!` table maps op names onto handler functions (the mik-sdk
+//! handler-table pattern), and the extractor helpers pull typed fields
+//! out of request bodies with field-named 400s instead of panics or
+//! silent defaults.
+//!
+//! Every handler is a pure function of `(state, body)` → `Json`, so
+//! responses inherit the determinism of the underlying service: fixed
+//! seed + fixed request ⇒ byte-identical response line, no matter
+//! which client or connection issued it.
+
+use std::sync::Arc;
+
+use crate::backend::BackendConfig;
+use crate::coordinator::coalesce::{self, EvalRouter};
+use crate::coordinator::eval_service::EvalService;
+use crate::generators::{ArchConfig, Platform};
+use crate::util::json::Json;
+use crate::workloads::{self, WorkloadSpec};
+
+use super::fault::{self, ServeFault};
+use super::protocol::{ProtoError, Request, CODE_UNKNOWN_OP};
+use super::{drain, ServeStats};
+
+/// Shared daemon state, one per process, `Arc`-cloned into every
+/// connection thread.
+pub struct ServerState {
+    pub service: Arc<EvalService>,
+    pub router: Arc<EvalRouter>,
+    pub stats: Arc<ServeStats>,
+    /// Feature width the surrogate was fit on; `predict` rows of any
+    /// other length are a 400 (tree inference indexes features by
+    /// position and must never see a short row). Advertised by
+    /// `health` so clients can size their rows.
+    pub feat_dim: usize,
+    /// `FSO_SERVE_TEST_HOOKS=1`: expose the `hook` op (barrier/fault
+    /// arming for the lifecycle tests). Off in any real deployment.
+    pub test_hooks: bool,
+}
+
+/// Route table: `(op name, handler)` pairs compile into the dispatch
+/// match plus the introspectable [`OPS`] list `health` reports.
+macro_rules! routes {
+    ($(($op:literal, $handler:path)),* $(,)?) => {
+        /// Every routable op name, in route-table order.
+        pub const OPS: &[&str] = &[$($op),*];
+
+        /// Dispatch one decoded request to its handler.
+        pub fn dispatch(state: &ServerState, req: &Request) -> Result<Json, ProtoError> {
+            match req.op.as_str() {
+                $($op => $handler(state, &req.body),)*
+                other => Err(ProtoError {
+                    code: CODE_UNKNOWN_OP,
+                    msg: format!("unknown op {other:?} (have: {})", OPS.join(", ")),
+                }),
+            }
+        }
+    };
+}
+
+routes![
+    ("health", h_health),
+    ("stats", h_stats),
+    ("predict", h_predict),
+    ("eval", h_eval),
+    ("shutdown", h_shutdown),
+    ("hook", h_hook),
+];
+
+// ---- typed body extractors -----------------------------------------
+
+fn want_str<'a>(body: &'a Json, key: &str) -> Result<&'a str, ProtoError> {
+    body.get(key)
+        .as_str()
+        .ok_or_else(|| ProtoError::bad_request(format!("\"{key}\" must be a string")))
+}
+
+fn want_f64(body: &Json, key: &str) -> Result<f64, ProtoError> {
+    body.get(key)
+        .as_f64()
+        .ok_or_else(|| ProtoError::bad_request(format!("\"{key}\" must be a number")))
+}
+
+fn want_f64_arr(body: &Json, key: &str) -> Result<Vec<f64>, ProtoError> {
+    let arr = body
+        .get(key)
+        .as_arr()
+        .ok_or_else(|| ProtoError::bad_request(format!("\"{key}\" must be an array")))?;
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| ProtoError::bad_request(format!("\"{key}\" must hold only numbers")))
+        })
+        .collect()
+}
+
+fn want_rows(body: &Json, key: &str) -> Result<Vec<Vec<f64>>, ProtoError> {
+    let arr = body
+        .get(key)
+        .as_arr()
+        .ok_or_else(|| ProtoError::bad_request(format!("\"{key}\" must be an array of rows")))?;
+    arr.iter()
+        .map(|row| {
+            row.as_arr()
+                .ok_or_else(|| {
+                    ProtoError::bad_request(format!("\"{key}\" rows must be number arrays"))
+                })?
+                .iter()
+                .map(|v| {
+                    v.as_f64().ok_or_else(|| {
+                        ProtoError::bad_request(format!("\"{key}\" rows must hold only numbers"))
+                    })
+                })
+                .collect()
+        })
+        .collect()
+}
+
+// ---- handlers ------------------------------------------------------
+
+fn h_health(state: &ServerState, _body: &Json) -> Result<Json, ProtoError> {
+    let ops: Vec<String> = OPS.iter().map(|s| s.to_string()).collect();
+    Ok(Json::obj(vec![
+        ("feat_dim", Json::from(state.feat_dim)),
+        ("ops", Json::arr_str(&ops)),
+        ("seed", Json::from(state.service.seed() as usize)),
+        ("status", Json::from("ok")),
+    ]))
+}
+
+fn h_stats(state: &ServerState, _body: &Json) -> Result<Json, ProtoError> {
+    let mut j = state.service.stats().to_json();
+    if let Json::Obj(o) = &mut j {
+        for (k, v) in state.stats.to_entries() {
+            o.insert(k.to_string(), v);
+        }
+    }
+    Ok(j)
+}
+
+/// `{"rows": [[f64; FEAT_DIM], ...]}` → surrogate scores through the
+/// shared cross-client mega-batching router.
+fn h_predict(state: &ServerState, body: &Json) -> Result<Json, ProtoError> {
+    let rows = want_rows(body, "rows")?;
+    if let Some(bad) = rows.iter().find(|r| r.len() != state.feat_dim) {
+        return Err(ProtoError::bad_request(format!(
+            "\"rows\" entries must carry {} features, got {}",
+            state.feat_dim,
+            bad.len()
+        )));
+    }
+    let points = state
+        .router
+        .client()
+        .predict(rows)
+        .map_err(|e| ProtoError::internal(format!("{e:#}")))?;
+    let points: Vec<Json> = points
+        .into_iter()
+        .map(|p| {
+            let predicted: Vec<(&str, Json)> =
+                p.predicted.iter().map(|(m, v)| (m.name(), Json::from(*v))).collect();
+            Json::obj(vec![
+                ("in_roi", Json::from(p.in_roi)),
+                ("predicted", Json::obj(predicted)),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![("points", Json::Arr(points))]))
+}
+
+/// `{"platform": "axiline", "arch": [..], "f": GHz, "util": frac,
+/// "workload"?: name, "trial"?: n}` → ground-truth evaluation through
+/// the full memo/coalesce/store stack.
+fn h_eval(state: &ServerState, body: &Json) -> Result<Json, ProtoError> {
+    let platform = Platform::from_name(want_str(body, "platform")?)
+        .map_err(|e| ProtoError::bad_request(format!("{e:#}")))?;
+    let arch = ArchConfig::new(platform, want_f64_arr(body, "arch")?);
+    arch.validate().map_err(|e| ProtoError::bad_request(format!("{e:#}")))?;
+    let bcfg = BackendConfig::new(want_f64(body, "f")?, want_f64(body, "util")?);
+    let wl: Option<WorkloadSpec> = match body.get("workload") {
+        Json::Null => None,
+        j => {
+            let name = j
+                .as_str()
+                .ok_or_else(|| ProtoError::bad_request("\"workload\" must be a string"))?;
+            Some(
+                workloads::lookup(name)
+                    .map_err(|e| ProtoError::bad_request(format!("{e:#}")))?,
+            )
+        }
+    };
+    let trial = match body.get("trial") {
+        Json::Null => 0,
+        j => j
+            .as_f64()
+            .filter(|n| n.is_finite() && *n >= 0.0)
+            .ok_or_else(|| ProtoError::bad_request("\"trial\" must be a non-negative number"))?
+            as u64,
+    };
+    let ev = state
+        .service
+        .evaluate_trial(&arch, bcfg, wl.as_ref(), trial)
+        .map_err(|e| ProtoError::internal(format!("{e:#}")))?;
+    let metrics: Vec<(&str, Json)> =
+        ev.metrics().iter().map(|(m, v)| (m.name(), Json::from(*v))).collect();
+    Ok(Json::obj(vec![
+        ("arch_id", Json::from(crate::coordinator::store::hex_key(arch.id_hash()).as_str())),
+        ("metrics", Json::obj(metrics)),
+    ]))
+}
+
+/// Begin a graceful drain, exactly as SIGTERM does: the response is
+/// written, in-flight requests on other connections complete, the
+/// listener stops accepting, and the stores flush before exit.
+fn h_shutdown(_state: &ServerState, _body: &Json) -> Result<Json, ProtoError> {
+    drain::request();
+    Ok(Json::obj(vec![("draining", Json::from(true))]))
+}
+
+/// Test-only (`FSO_SERVE_TEST_HOOKS=1`): arm the process-global
+/// interleaving/fault hooks from a test client, so the lifecycle tests
+/// can force exact coalescing windows and torn-request reads inside
+/// the daemon process.
+fn h_hook(state: &ServerState, body: &Json) -> Result<Json, ProtoError> {
+    if !state.test_hooks {
+        return Err(ProtoError {
+            code: CODE_UNKNOWN_OP,
+            msg: "unknown op \"hook\" (test hooks are not enabled)".to_string(),
+        });
+    }
+    let kind = want_str(body, "kind")?;
+    match kind {
+        "leader_barrier" => {
+            let n = want_f64(body, "n")? as usize;
+            coalesce::hook::arm_leader_barrier(n);
+        }
+        "router_barrier" => {
+            let n = want_f64(body, "n")? as usize;
+            coalesce::hook::arm_router_barrier(n);
+        }
+        "torn_request" => fault::arm(ServeFault::TornRequest),
+        "disarm" => {
+            coalesce::hook::disarm();
+            fault::disarm();
+        }
+        other => {
+            return Err(ProtoError::bad_request(format!(
+                "unknown hook kind {other:?} (leader_barrier|router_barrier|torn_request|disarm)"
+            )))
+        }
+    }
+    Ok(Json::obj(vec![("armed", Json::from(kind))]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Enablement;
+    use crate::coordinator::server::protocol::{CODE_BAD_REQUEST, CODE_INTERNAL};
+
+    fn state() -> ServerState {
+        let service = Arc::new(EvalService::new(Enablement::Gf12, 2023).with_coalescing(true));
+        let router = Arc::new(EvalRouter::start(Arc::clone(&service)));
+        ServerState {
+            service,
+            router,
+            stats: Arc::new(ServeStats::default()),
+            feat_dim: 4,
+            test_hooks: false,
+        }
+    }
+
+    fn req(op: &str, body: Json) -> Request {
+        Request { id: 1, op: op.to_string(), body }
+    }
+
+    #[test]
+    fn health_stats_and_unknown_ops_route() {
+        let st = state();
+        let h = dispatch(&st, &req("health", Json::Null)).unwrap();
+        assert_eq!(h.get("status").as_str(), Some("ok"));
+        assert_eq!(h.get("ops").as_arr().unwrap().len(), OPS.len());
+        let s = dispatch(&st, &req("stats", Json::Null)).unwrap();
+        assert_eq!(s.get("oracle_runs").as_usize(), Some(0));
+        assert_eq!(s.get("requests_served").as_usize(), Some(0));
+        let e = dispatch(&st, &req("bogus", Json::Null)).unwrap_err();
+        assert_eq!(e.code, CODE_UNKNOWN_OP);
+        // the hook op is routable only under FSO_SERVE_TEST_HOOKS
+        let e = dispatch(&st, &req("hook", Json::obj(vec![("kind", Json::from("disarm"))])))
+            .unwrap_err();
+        assert_eq!(e.code, CODE_UNKNOWN_OP);
+    }
+
+    #[test]
+    fn eval_round_trips_and_matches_local_service() {
+        let st = state();
+        let space = Platform::Axiline.param_space();
+        let values: Vec<f64> = space.iter().map(|p| p.kind.from_unit(0.4)).collect();
+        let body = Json::obj(vec![
+            ("platform", Json::from("axiline")),
+            ("arch", Json::arr_f64(&values)),
+            ("f", Json::from(0.8)),
+            ("util", Json::from(0.5)),
+        ]);
+        let out = dispatch(&st, &req("eval", body)).unwrap();
+        // byte-determinism root: the daemon's numbers are the local
+        // service's numbers, bit for bit
+        let arch = ArchConfig::new(Platform::Axiline, values);
+        let local = st
+            .service
+            .evaluate(&arch, BackendConfig::new(0.8, 0.5), None)
+            .unwrap();
+        for (m, v) in local.metrics() {
+            assert_eq!(out.get("metrics").get(m.name()).as_f64(), Some(v), "{}", m.name());
+        }
+
+        // typed extraction failures are field-named 400s
+        for bad in [
+            Json::obj(vec![("platform", Json::from("axiline"))]),
+            Json::obj(vec![
+                ("platform", Json::from("nope")),
+                ("arch", Json::arr_f64(&[1.0])),
+                ("f", Json::from(0.8)),
+                ("util", Json::from(0.5)),
+            ]),
+            Json::obj(vec![
+                ("platform", Json::from("axiline")),
+                ("arch", Json::arr_f64(&[1.0])), // wrong length
+                ("f", Json::from(0.8)),
+                ("util", Json::from(0.5)),
+            ]),
+        ] {
+            let e = dispatch(&st, &req("eval", bad)).unwrap_err();
+            assert_eq!(e.code, CODE_BAD_REQUEST);
+        }
+    }
+
+    #[test]
+    fn predict_without_surrogate_is_a_handler_error_not_a_panic() {
+        let st = state();
+        let body = Json::obj(vec![("rows", Json::Arr(vec![Json::arr_f64(&[0.0; 4])]))]);
+        let e = dispatch(&st, &req("predict", body)).unwrap_err();
+        assert_eq!(e.code, CODE_INTERNAL);
+        let e = dispatch(&st, &req("predict", Json::obj(vec![("rows", Json::from(3.0))])))
+            .unwrap_err();
+        assert_eq!(e.code, CODE_BAD_REQUEST);
+        // wrong feature width is a 400 at the edge, not an index panic
+        // deep inside tree inference
+        let body = Json::obj(vec![("rows", Json::Arr(vec![Json::arr_f64(&[0.0; 3])]))]);
+        let e = dispatch(&st, &req("predict", body)).unwrap_err();
+        assert_eq!(e.code, CODE_BAD_REQUEST);
+    }
+}

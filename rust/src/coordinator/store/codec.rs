@@ -38,6 +38,44 @@ const TAG_STR: u8 = 0x04;
 const TAG_ARR: u8 = 0x05;
 const TAG_OBJ: u8 = 0x06;
 
+/// A frame field too large for its fixed-width length prefix. Raised
+/// instead of silently truncating the prefix (a bare `as u32`/`as u8`
+/// cast would corrupt the shard: the written length would wrap and the
+/// decoder would mis-frame everything after it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EncodeError {
+    /// Which field overflowed its prefix (`"kind"`, `"payload"`,
+    /// `"str"`, `"arr"`, `"obj"`, `"obj key"`).
+    pub what: &'static str,
+    /// The offending length.
+    pub len: usize,
+    /// The prefix's maximum representable length.
+    pub max: usize,
+}
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "record {} length {} exceeds frame prefix limit {}",
+            self.what, self.len, self.max
+        )
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
+/// Checked u32 length prefix: the only path from a `usize` length to
+/// frame bytes. Errors instead of wrapping.
+fn len_u32(len: usize, what: &'static str) -> Result<u32, EncodeError> {
+    u32::try_from(len).map_err(|_| EncodeError { what, len, max: u32::MAX as usize })
+}
+
+/// Checked u8 length prefix (the v2 kind byte).
+fn len_u8(len: usize, what: &'static str) -> Result<u8, EncodeError> {
+    u8::try_from(len).map_err(|_| EncodeError { what, len, max: u8::MAX as usize })
+}
+
 /// Which frame format a store writes (reads auto-detect both).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Codec {
@@ -123,7 +161,9 @@ pub struct ScanStats {
 /// inputs produce identical bytes on every run and machine.
 pub trait RecordCodec: Sync {
     /// Append one frame (terminator included for line-oriented codecs)
-    /// and return the frame-span length (terminator excluded).
+    /// and return the frame-span length (terminator excluded). Errors
+    /// (leaving `out` possibly extended with a partial frame the caller
+    /// must discard) when a field overflows its length prefix.
     fn append_frame(
         &self,
         out: &mut Vec<u8>,
@@ -132,7 +172,7 @@ pub trait RecordCodec: Sync {
         used: u64,
         kind: &str,
         payload: Vec<(&'static str, Json)>,
-    ) -> usize;
+    ) -> Result<usize, EncodeError>;
 
     /// Stream every frame in `bytes`, emitting the envelope + raw span
     /// per readable frame. Bodies are never tree-parsed here.
@@ -164,7 +204,7 @@ impl RecordCodec for V1Jsonl {
         used: u64,
         kind: &str,
         payload: Vec<(&'static str, Json)>,
-    ) -> usize {
+    ) -> Result<usize, EncodeError> {
         // identical field set + `Json::obj` key sort as the PR 6
         // writer: v1 output stays byte-compatible with existing dirs
         let mut fields: Vec<(&str, Json)> = vec![
@@ -179,7 +219,7 @@ impl RecordCodec for V1Jsonl {
         let line = Json::obj(fields).to_string();
         out.extend_from_slice(line.as_bytes());
         out.push(b'\n');
-        line.len()
+        Ok(line.len())
     }
 
     fn scan(&self, bytes: &[u8], schema: u64, emit: &mut dyn FnMut(Frame<'_>)) -> ScanStats {
@@ -319,23 +359,22 @@ impl RecordCodec for V2Binary {
         used: u64,
         kind: &str,
         payload: Vec<(&'static str, Json)>,
-    ) -> usize {
+    ) -> Result<usize, EncodeError> {
         let start = out.len();
         out.push(V2_MAGIC);
         out.extend_from_slice(&schema.to_le_bytes());
         out.extend_from_slice(&key.to_le_bytes());
         out.extend_from_slice(&used.to_le_bytes());
-        assert!(kind.len() <= u8::MAX as usize, "record kind too long: {kind}");
-        out.push(kind.len() as u8);
+        out.push(len_u8(kind.len(), "kind")?);
         out.extend_from_slice(kind.as_bytes());
         let len_at = out.len();
         out.extend_from_slice(&0u32.to_le_bytes());
         // Json::obj sorts the fields (BTreeMap) — identical logical
         // record to the v1 rendering of the same payload
-        encode_value(out, &Json::obj(payload));
-        let plen = (out.len() - len_at - 4) as u32;
+        encode_value(out, &Json::obj(payload))?;
+        let plen = len_u32(out.len() - len_at - 4, "payload")?;
         out[len_at..len_at + 4].copy_from_slice(&plen.to_le_bytes());
-        out.len() - start
+        Ok(out.len() - start)
     }
 
     fn scan(&self, bytes: &[u8], schema: u64, emit: &mut dyn FnMut(Frame<'_>)) -> ScanStats {
@@ -412,7 +451,7 @@ fn v2_header(b: &[u8]) -> Option<(usize, u64, u64, u64, std::ops::Range<usize>)>
     Some((total, schema, key, used, V2_HEAD..plen_at))
 }
 
-fn encode_value(out: &mut Vec<u8>, v: &Json) {
+fn encode_value(out: &mut Vec<u8>, v: &Json) -> Result<(), EncodeError> {
     match v {
         Json::Null => out.push(TAG_NULL),
         Json::Bool(false) => out.push(TAG_FALSE),
@@ -430,26 +469,27 @@ fn encode_value(out: &mut Vec<u8>, v: &Json) {
         }
         Json::Str(s) => {
             out.push(TAG_STR);
-            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            out.extend_from_slice(&len_u32(s.len(), "str")?.to_le_bytes());
             out.extend_from_slice(s.as_bytes());
         }
         Json::Arr(a) => {
             out.push(TAG_ARR);
-            out.extend_from_slice(&(a.len() as u32).to_le_bytes());
+            out.extend_from_slice(&len_u32(a.len(), "arr")?.to_le_bytes());
             for x in a {
-                encode_value(out, x);
+                encode_value(out, x)?;
             }
         }
         Json::Obj(o) => {
             out.push(TAG_OBJ);
-            out.extend_from_slice(&(o.len() as u32).to_le_bytes());
+            out.extend_from_slice(&len_u32(o.len(), "obj")?.to_le_bytes());
             for (k, x) in o {
-                out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+                out.extend_from_slice(&len_u32(k.len(), "obj key")?.to_le_bytes());
                 out.extend_from_slice(k.as_bytes());
-                encode_value(out, x);
+                encode_value(out, x)?;
             }
         }
     }
+    Ok(())
 }
 
 fn take<'a>(b: &'a [u8], pos: &mut usize, n: usize) -> Option<&'a [u8]> {
@@ -521,7 +561,7 @@ mod tests {
         for codec in Codec::ALL {
             let imp = codec.imp();
             let mut buf = Vec::new();
-            let flen = imp.append_frame(&mut buf, 7, 0xabcd, 3, "eval", payload(0.1));
+            let flen = imp.append_frame(&mut buf, 7, 0xabcd, 3, "eval", payload(0.1)).unwrap();
             assert_eq!(flen + codec.frame_overhead(), buf.len());
             let (frames, st) = collect(codec, &buf, 7);
             assert_eq!(st, ScanStats { frames: 1, dead: 0 });
@@ -546,9 +586,9 @@ mod tests {
             ]
         };
         let mut b1 = Vec::new();
-        let l1 = V1Jsonl.append_frame(&mut b1, 7, 9, 1, "eval", p());
+        let l1 = V1Jsonl.append_frame(&mut b1, 7, 9, 1, "eval", p()).unwrap();
         let mut b2 = Vec::new();
-        let l2 = V2Binary.append_frame(&mut b2, 7, 9, 1, "eval", p());
+        let l2 = V2Binary.append_frame(&mut b2, 7, 9, 1, "eval", p()).unwrap();
         let r1 = V1Jsonl.decode_payload(&b1[..l1], 7).unwrap();
         let r2 = V2Binary.decode_payload(&b2[..l2], 7).unwrap();
         for f in ["a", "b", "c", "d"] {
@@ -563,9 +603,9 @@ mod tests {
         let nums: Vec<f64> = (0..64).map(|i| 1.0 / (i as f64 + 3.0)).collect();
         let p = || vec![("w", Json::arr_f64(&nums))];
         let mut b1 = Vec::new();
-        V1Jsonl.append_frame(&mut b1, 7, 1, 1, "m", p());
+        V1Jsonl.append_frame(&mut b1, 7, 1, 1, "m", p()).unwrap();
         let mut b2 = Vec::new();
-        V2Binary.append_frame(&mut b2, 7, 1, 1, "m", p());
+        V2Binary.append_frame(&mut b2, 7, 1, 1, "m", p()).unwrap();
         assert!(
             b1.len() as f64 / b2.len() as f64 > 1.5,
             "v1 {} B vs v2 {} B",
@@ -579,9 +619,9 @@ mod tests {
         for codec in Codec::ALL {
             let imp = codec.imp();
             let mut buf = Vec::new();
-            imp.append_frame(&mut buf, 7, 1, 1, "a", payload(1.0));
+            imp.append_frame(&mut buf, 7, 1, 1, "a", payload(1.0)).unwrap();
             let keep = buf.len();
-            imp.append_frame(&mut buf, 7, 2, 1, "a", payload(2.0));
+            imp.append_frame(&mut buf, 7, 2, 1, "a", payload(2.0)).unwrap();
             for cut in keep + 1..buf.len() {
                 let (frames, st) = collect(codec, &buf[..cut], 7);
                 assert_eq!(
@@ -600,8 +640,8 @@ mod tests {
         for codec in Codec::ALL {
             let imp = codec.imp();
             let mut buf = Vec::new();
-            imp.append_frame(&mut buf, 99, 5, 1, "a", payload(5.0)); // foreign schema
-            imp.append_frame(&mut buf, 7, 6, 1, "a", payload(6.0));
+            imp.append_frame(&mut buf, 99, 5, 1, "a", payload(5.0)).unwrap(); // foreign schema
+            imp.append_frame(&mut buf, 7, 6, 1, "a", payload(6.0)).unwrap();
             let (frames, st) = collect(codec, &buf, 7);
             // both codecs skip a foreign-schema frame (its framing is
             // intact) and keep reading the rest of the file
@@ -653,7 +693,7 @@ mod tests {
             let imp = codec.imp();
             let mut buf = Vec::new();
             for i in 0..5u64 {
-                imp.append_frame(&mut buf, 7, i, i, "a", payload(i as f64));
+                imp.append_frame(&mut buf, 7, i, i, "a", payload(i as f64)).unwrap();
             }
             let mut spans: Vec<(u64, usize, usize)> = Vec::new();
             imp.scan(&buf, 7, &mut |f: Frame<'_>| {
@@ -670,5 +710,64 @@ mod tests {
                 assert_eq!(rec.get("val").as_f64(), Some(key as f64));
             }
         }
+    }
+
+    #[test]
+    fn oversized_lengths_are_typed_encode_errors_not_truncation() {
+        // the length-prefix guard itself, probed directly so the test
+        // never allocates a >4 GiB payload
+        assert_eq!(len_u32(u32::MAX as usize, "payload").unwrap(), u32::MAX);
+        let e = len_u32(u32::MAX as usize + 1, "payload").unwrap_err();
+        assert_eq!(e, EncodeError { what: "payload", len: u32::MAX as usize + 1, max: u32::MAX as usize });
+        assert!(e.to_string().contains("payload"), "error names the field: {e}");
+
+        // the kind byte is the reachable small-prefix case: >255 bytes
+        // must error (the old cast wrote kind.len() % 256 and
+        // mis-framed every later frame)
+        let long_kind = "k".repeat(300);
+        let mut out = Vec::new();
+        let e = V2Binary
+            .append_frame(&mut out, 7, 1, 1, &long_kind, Vec::new())
+            .unwrap_err();
+        assert_eq!(e.what, "kind");
+        assert_eq!(e.len, 300);
+        assert_eq!(e.max, u8::MAX as usize);
+        // v1 has no kind prefix; the same record encodes fine there
+        let mut b1 = Vec::new();
+        V1Jsonl.append_frame(&mut b1, 7, 1, 1, &long_kind, Vec::new()).unwrap();
+    }
+
+    #[test]
+    fn v2_decoder_rejects_overrunning_length_prefixes_without_panic() {
+        let mut buf = Vec::new();
+        let flen = V2Binary.append_frame(&mut buf, 7, 3, 1, "eval", payload(3.0)).unwrap();
+        let klen = buf[25] as usize;
+        let plen_at = V2_HEAD + klen;
+
+        // corrupt the frame-level payload length to overrun the buffer:
+        // the scan must mark a torn frame dead, decode must refuse, and
+        // neither may panic or read out of bounds
+        let mut torn = buf.clone();
+        torn[plen_at..plen_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let (frames, st) = collect(Codec::V2Binary, &torn, 7);
+        assert!(frames.is_empty());
+        assert_eq!(st, ScanStats { frames: 1, dead: 1 });
+        assert_eq!(V2Binary.decode_payload(&torn[..flen], 7), None);
+
+        // corrupt an *inner* value prefix: framing stays intact so the
+        // scan still serves the envelope, but the deferred body decode
+        // must return None. Payload `{"s":"hello"}` encodes as
+        // TAG_OBJ + count u32 + keylen u32 + "s" + TAG_STR + len u32,
+        // so the string length sits 11 bytes into the body.
+        let mut b = Vec::new();
+        let flen =
+            V2Binary.append_frame(&mut b, 7, 4, 1, "eval", vec![("s", Json::from("hello"))]).unwrap();
+        let body_at = V2_HEAD + 4 + 4; // kind "eval" + payload-len u32
+        assert_eq!(b[body_at + 10], TAG_STR);
+        b[body_at + 11..body_at + 15].copy_from_slice(&u32::MAX.to_le_bytes());
+        let (frames, st) = collect(Codec::V2Binary, &b, 7);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(st, ScanStats { frames: 1, dead: 0 });
+        assert_eq!(V2Binary.decode_payload(&b[..flen], 7), None);
     }
 }

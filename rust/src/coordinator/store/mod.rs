@@ -17,7 +17,7 @@ pub(crate) mod lock;
 pub mod sharded;
 pub mod sidecar;
 
-pub use codec::Codec;
+pub use codec::{Codec, EncodeError};
 pub use sharded::{
     hex_key, parse_hex_key, CompactReport, Record, ShardedStore, StoreConfig, StorePolicy,
     StoreStats, TOMB_KIND,

@@ -92,7 +92,7 @@ use anyhow::{Context, Result};
 use crate::util::json::Json;
 use crate::util::rng::hash_bytes;
 
-use super::codec::{Codec, Frame};
+use super::codec::{Codec, EncodeError, Frame};
 use super::fault::{self, FlushFault};
 use super::lock::{tmp_path, write_atomic, DirLock};
 use super::sidecar::{idx_path, SidecarIndex};
@@ -499,7 +499,13 @@ impl<R: Record> ShardedStore<R> {
     // (sorted object keys), so a rendered frame is a pure function of
     // its fields.
 
-    fn append_live(&self, out: &mut Vec<u8>, key: u64, rec: &R, used: u64) -> usize {
+    fn append_live(
+        &self,
+        out: &mut Vec<u8>,
+        key: u64,
+        rec: &R,
+        used: u64,
+    ) -> Result<usize, EncodeError> {
         let mut payload: Vec<(&'static str, Json)> = Vec::new();
         rec.encode(&mut payload);
         let kind = rec.kind();
@@ -513,7 +519,7 @@ impl<R: Record> ShardedStore<R> {
         )
     }
 
-    fn append_tomb(&self, out: &mut Vec<u8>, key: u64, used: u64) -> usize {
+    fn append_tomb(&self, out: &mut Vec<u8>, key: u64, used: u64) -> Result<usize, EncodeError> {
         self.cfg.codec.imp().append_frame(
             out,
             self.cfg.schema_version,
@@ -895,9 +901,11 @@ impl<R: Record> ShardedStore<R> {
             // work for the common unbounded store (flush's render pass
             // refreshes `bytes` to the exact length either way)
             let bytes = if self.cfg.policy.max_bytes.is_some() {
+                // an unencodable record sizes as 0 here; the flush
+                // render pass surfaces the EncodeError to the caller
                 let mut scratch = Vec::new();
                 self.append_live(&mut scratch, key, &rec, epoch)
-                    + self.cfg.codec.frame_overhead()
+                    .map_or(0, |n| n + self.cfg.codec.frame_overhead())
             } else {
                 0
             };
@@ -933,8 +941,11 @@ impl<R: Record> ShardedStore<R> {
     fn tombstone(&self, inner: &mut Inner<R>, key: u64) {
         let epoch = self.epoch;
         let bytes = {
+            // tombstones carry no payload, so this cannot overflow a
+            // length prefix in practice; size as 0 if it somehow does
             let mut scratch = Vec::new();
-            self.append_tomb(&mut scratch, key, epoch) + self.cfg.codec.frame_overhead()
+            self.append_tomb(&mut scratch, key, epoch)
+                .map_or(0, |n| n + self.cfg.codec.frame_overhead())
         };
         inner
             .slots
@@ -999,7 +1010,11 @@ impl<R: Record> ShardedStore<R> {
     /// lazy frames first. Refreshes each written slot's byte size to
     /// the exact rendered length and returns the live-frame table the
     /// sidecar is built from.
-    fn render_shard(&self, inner: &mut Inner<R>, shard: usize) -> RenderedShard {
+    fn render_shard(
+        &self,
+        inner: &mut Inner<R>,
+        shard: usize,
+    ) -> Result<RenderedShard, EncodeError> {
         // a rewrite re-encodes every record: lazy frames decode here,
         // and frames written under the other codec count as transcoded
         let lazy: Vec<(u64, bool)> = inner
@@ -1043,8 +1058,8 @@ impl<R: Record> ShardedStore<R> {
             let flen = {
                 let slot = &inner.slots[key];
                 match &slot.state {
-                    SlotState::Live(r) => self.append_live(&mut body, *key, r, slot.used),
-                    SlotState::Tomb => self.append_tomb(&mut body, *key, slot.used),
+                    SlotState::Live(r) => self.append_live(&mut body, *key, r, slot.used)?,
+                    SlotState::Tomb => self.append_tomb(&mut body, *key, slot.used)?,
                     SlotState::Lazy { .. } => unreachable!("lazy slots materialized above"),
                 }
             };
@@ -1055,7 +1070,7 @@ impl<R: Record> ShardedStore<R> {
                 entries.push((*key, off, flen as u64));
             }
         }
-        RenderedShard { body, entries, frames, tombs }
+        Ok(RenderedShard { body, entries, frames, tombs })
     }
 
     fn clear_slot_dirty(&self, inner: &mut Inner<R>, shard: usize) {
@@ -1129,7 +1144,7 @@ impl<R: Record> ShardedStore<R> {
                 self.scan_shard(&mut inner, shard);
                 inner.shards[shard].loaded = true;
             }
-            let r = self.render_shard(&mut inner, shard);
+            let r = self.render_shard(&mut inner, shard)?;
             let path = self.shard_path(shard);
             if fault::trip(FlushFault::BeforeRename) {
                 // emulate a kill after the temp write, before the
@@ -1222,7 +1237,7 @@ impl<R: Record> ShardedStore<R> {
             let active_before = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
             let other_before = fs::metadata(&other).map(|m| m.len()).unwrap_or(0);
             rep.bytes_before += active_before + other_before;
-            let r = self.render_shard(&mut inner, shard);
+            let r = self.render_shard(&mut inner, shard)?;
             if r.body.is_empty() {
                 if active_before > 0 || other_before > 0 {
                     let _ = fs::remove_file(&path);

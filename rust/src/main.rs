@@ -6,7 +6,8 @@
 //!   fso dse       --target axiline-svm|vta [--strategy motpe|random|lhs|evo] [--workload NAME]
 //!   fso experiment <fig1b|fig3|fig4|fig6|fig8|fig9|fig10|fig11|fig12|tab3|tab4|tab5|all>
 //!   fso store     <compact|stats> --cache-dir DIR   (persistent-store maintenance)
-//!   fso serve     --demo      (dynamic-batching predict server demo)
+//!   fso serve     [--tree-router] | --listen HOST:PORT   (demos / evaluation daemon)
+//!   fso client    --connect HOST:PORT   (newline-JSON client for the daemon)
 //!   fso bench     <run|compare|list> --suite NAME   (perf-gate suites)
 //!
 //! Global: --seed N, --quick, --out-dir DIR, --artifacts DIR
@@ -55,6 +56,7 @@ fn run(args: &Args) -> Result<()> {
         "experiment" => cmd_experiment(args),
         "store" => cmd_store(args),
         "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
         "bench" => cmd_bench(args),
         _ => {
             println!("{}", HELP.trim());
@@ -83,6 +85,9 @@ USAGE:
   fso store <compact|stats> --cache-dir DIR [--store-codec v1|v2]
             [--store-max-bytes N] [--store-max-records N] [--store-max-age N]
   fso serve [--clients N] [--rows N] [--tree-router]
+  fso serve --listen HOST:PORT [--seed N] [--enablement gf12|ng45]
+            [--cache-dir DIR] [--quota-burst N] [--quota-rate R]
+  fso client --connect HOST:PORT
   fso bench run     --suite NAME [--quick] [--out FILE]
   fso bench compare --suite NAME --baseline FILE [--candidate FILE]
                     [--threshold 0.15] [--derived-only] [--quick] [--out FILE]
@@ -131,6 +136,23 @@ scoring pipeline depth, default 4). Results are byte-identical to the
 serial path at the same seed — only wall-clock and CPU time change.
 `fso serve --tree-router` demos the cross-client router on the
 tree-family surrogate (no PJRT artifacts needed).
+
+`fso serve --listen HOST:PORT` runs the multi-tenant evaluation daemon:
+a long-lived process speaking newline-delimited JSON over plain TCP
+(one request document per line; see the README "Evaluation daemon"
+section for the protocol grammar and endpoint table). Ops: health,
+stats, predict (surrogate scores through the shared mega-batching
+router), eval (ground truth through the memoized single-flight oracle),
+shutdown (graceful drain). Port 0 binds an ephemeral port; the daemon
+prints `listening on ADDR` to stdout. --cache-dir persists oracle
+results across daemon restarts exactly as it does for batch runs.
+--quota-burst/--quota-rate set the per-connection token bucket: an
+exhausted bucket answers code 429 immediately — never a hang. SIGTERM
+and the shutdown op share one drain path: received requests complete,
+the listener stops accepting, the stores flush. With a fixed --seed,
+any number of concurrent clients get byte-identical response lines and
+flushed shard files. `fso client --connect ADDR` bridges stdin request
+lines to response lines on stdout.
 
 --strategy picks the optimizer driving `fso dse` and the DSE
 experiments: motpe (the default, the paper's MO-TPE), random (seeded
@@ -529,6 +551,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_daemon(args);
+    }
     if args.flag("tree-router") {
         return cmd_serve_tree_router(args);
     }
@@ -569,7 +594,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.rows,
         stats.requests,
         dt,
-        stats.rows as f64 / dt
+        fso::util::rate::per_sec(stats.rows, dt)
     );
     println!(
         "batches issued: {} (mean occupancy {:.1}/{})",
@@ -577,6 +602,83 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.mean_occupancy,
         engine.manifest.batch
     );
+    Ok(())
+}
+
+/// `fso serve --listen HOST:PORT`: the multi-tenant evaluation daemon
+/// (ISSUE 9). One `EvalService` (memoized, single-flight, coalescing
+/// on) plus one `EvalRouter` mega-batching window serve every client
+/// behind a newline-JSON TCP socket; `--cache-dir` attaches the
+/// DirLock-guarded persistent stores, flushed at graceful drain.
+fn cmd_serve_daemon(args: &Args) -> Result<()> {
+    let listen = args.get("listen").expect("checked by cmd_serve").to_string();
+    let enablement = Enablement::from_name(args.get_or("enablement", "gf12"))?;
+    let seed = args.u64_or("seed", 2023)?;
+    // the predict op needs a surrogate bundle: fit the same small
+    // Axiline tree family the --tree-router demo uses (offline, no
+    // PJRT artifacts), deterministic in --seed
+    let mut cfg = DatagenConfig::small(Platform::Axiline, enablement);
+    cfg.n_arch = 6;
+    cfg.n_backend_train = 8;
+    cfg.n_backend_test = 2;
+    cfg.seed = seed;
+    eprintln!("[serve] fitting the tree surrogate bundle for the predict op...");
+    let g = datagen::generate(&cfg)?;
+    let bundle = SurrogateBundle::fit(&g.dataset, &g.backend_split, 7)?;
+    let cache = cache_store(args)?;
+    let models = model_store(args)?;
+    let service = Arc::new(
+        EvalService::new(enablement, seed)
+            .with_coalescing(true)
+            .with_surrogate(bundle)
+            .with_cache_store_opt(cache.clone())
+            .with_model_store_opt(models.clone()),
+    );
+    let opts = fso::coordinator::ServeOptions {
+        listen,
+        quota_burst: args
+            .get("quota-burst")
+            .map(|v| {
+                v.parse()
+                    .with_context(|| format!("--quota-burst wants a count, got {v:?}"))
+            })
+            .transpose()?,
+        quota_rate: args.f64_or("quota-rate", 0.0)?,
+        feat_dim: g.dataset.rows.first().map_or(0, |r| r.features_vec().len()),
+        test_hooks: std::env::var("FSO_SERVE_TEST_HOOKS").as_deref() == Ok("1"),
+    };
+    fso::coordinator::run_daemon(service, cache, models, &opts)
+}
+
+/// `fso client --connect HOST:PORT`: bridge stdin request lines to the
+/// daemon and its response lines to stdout, one round trip per line —
+/// the scriptable client the smoke tests and CI drive.
+fn cmd_client(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args
+        .get("connect")
+        .context("--connect HOST:PORT required for `fso client`")?;
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to daemon at {addr}"))?;
+    let mut from_server = BufReader::new(stream.try_clone()?);
+    let mut to_server = stream;
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        to_server.write_all(line.as_bytes())?;
+        to_server.write_all(b"\n")?;
+        let mut resp = String::new();
+        if from_server.read_line(&mut resp)? == 0 {
+            bail!("daemon closed the connection mid-conversation");
+        }
+        out.write_all(resp.as_bytes())?;
+    }
+    out.flush()?;
     Ok(())
 }
 
@@ -622,7 +724,7 @@ fn cmd_serve_tree_router(args: &Args) -> Result<()> {
         s.router_rows,
         s.router_requests,
         dt,
-        s.router_rows as f64 / dt.max(1e-9)
+        fso::util::rate::per_sec(s.router_rows, dt)
     );
     println!(
         "mega-batches issued: {} (mean occupancy {:.1})",

@@ -6,5 +6,6 @@ pub mod cli;
 pub mod json;
 pub mod pool;
 pub mod prop;
+pub mod rate;
 pub mod rng;
 pub mod tensor;

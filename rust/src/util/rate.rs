@@ -1,0 +1,32 @@
+//! Guarded throughput formatting for CLI status lines (ISSUE 9
+//! satellite). Every "N rows/s" print in the binary goes through
+//! [`per_sec`], so an instant run or a zero-row run can never emit
+//! `NaN` or `inf` into a line a script might parse.
+
+/// `count / dt` with the denominator clamped away from zero. `--rows 0`
+/// on a fast machine yields `0` (not `NaN`), and a sub-nanosecond run
+/// yields a huge-but-finite rate (not `inf`).
+pub fn per_sec(count: usize, dt_secs: f64) -> f64 {
+    count as f64 / dt_secs.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::per_sec;
+
+    #[test]
+    fn guarded_rate_is_always_finite() {
+        // the two demo-bug inputs: zero rows in zero time, and rows in
+        // zero time (the unguarded form printed NaN / inf)
+        assert_eq!(per_sec(0, 0.0), 0.0);
+        assert!(per_sec(100, 0.0).is_finite());
+        assert!(per_sec(100, 0.0) > 0.0);
+        // and the ordinary case is an ordinary division
+        assert_eq!(per_sec(500, 2.0), 250.0);
+        // formatted the way the status lines print it, no NaN/inf text
+        for (n, dt) in [(0usize, 0.0f64), (7, 0.0), (0, 1.5), (123, 0.25)] {
+            let line = format!("{:.0} rows/s", per_sec(n, dt));
+            assert!(!line.contains("NaN") && !line.contains("inf"), "bad line: {line}");
+        }
+    }
+}
