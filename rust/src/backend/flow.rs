@@ -43,7 +43,7 @@ pub struct SpnrFlow {
 
 /// Full flow output: both stages, so experiments can correlate
 /// post-synthesis vs post-route (Fig. 1b).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FlowResult {
     pub synth: SynthResult,
     pub backend: BackendResult,

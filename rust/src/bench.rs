@@ -36,7 +36,7 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 
 /// Registered suite names (`fso bench list`).
-pub const SUITES: &[&str] = &["flat_tree", "store_v2", "dse_strategies"];
+pub const SUITES: &[&str] = &["flat_tree", "store_v2", "dse_strategies", "fleet"];
 
 /// One timed row: the median of `reps` timed runs and the median
 /// absolute deviation around it.
@@ -199,6 +199,7 @@ pub fn run_suite(suite: &str, quick: bool) -> Result<SuiteReport> {
         "flat_tree" => flat_tree(quick),
         "store_v2" => store_v2(quick),
         "dse_strategies" => dse_strategies(quick),
+        "fleet" => fleet(quick),
         other => bail!("unknown bench suite {other:?} (available: {})", SUITES.join(", ")),
     }
 }
@@ -245,6 +246,20 @@ pub fn check_invariants(report: &SuiteReport) -> Result<()> {
         anyhow::ensure!(
             v >= 1.0,
             "pipelined DSE cadence is slower than strict alternation ({v:.3}x < 1.0x)"
+        );
+    }
+    if report.suite == "fleet" {
+        // parked waiters idle while one flight leader runs; stealing
+        // waiters drain the rest of the batch instead — the scale-out
+        // claim of the work-stealing single-flight (ISSUE 10)
+        let v = report
+            .derived
+            .get("steal_vs_park")
+            .copied()
+            .context("fleet report is missing derived steal_vs_park")?;
+        anyhow::ensure!(
+            v >= 1.0,
+            "work-stealing single-flight is slower than parked waiters ({v:.3}x < 1.0x)"
         );
     }
     Ok(())
@@ -611,6 +626,76 @@ fn dse_strategies(quick: bool) -> Result<SuiteReport> {
     derived.insert("pipelined_vs_strict".to_string(), strict_motpe_ms / pmed.max(1e-9));
 
     Ok(SuiteReport { suite: "dse_strategies".to_string(), quick, rows: rows_out, derived })
+}
+
+/// The `fleet` suite (ISSUE 10): a duplicate-heavy oracle sweep under
+/// a 16-worker single-flight pool, parked waiters vs work-stealing
+/// waiters. Jobs are grouped by key — every worker piles onto the same
+/// fresh key at once, the pattern that parks a coalesced pool hardest.
+/// The differential check rides along on every run: both modes must
+/// agree bit for bit, run the oracle exactly once per unique key, and
+/// the stealing pool must actually steal.
+fn fleet(quick: bool) -> Result<SuiteReport> {
+    use crate::backend::{BackendConfig, Enablement};
+    use crate::coordinator::{datagen, EvalService};
+    use crate::generators::{ArchConfig, Platform};
+    use crate::sampling::SamplerKind;
+
+    let t = Timer::new(quick);
+    let uniques = datagen::sample_archs(Platform::Axiline, 6, SamplerKind::Lhs, 21);
+    let bcfg = BackendConfig::new(0.9, 0.45);
+    let dup = 16usize;
+    let jobs: Vec<(ArchConfig, BackendConfig)> = uniques
+        .iter()
+        .flat_map(|a| std::iter::repeat(a.clone()).take(dup).map(|a| (a, bcfg)))
+        .collect();
+    let workers = 16usize;
+    let parked_svc = || {
+        EvalService::new(Enablement::Gf12, 7).with_workers(workers).with_coalescing(true)
+    };
+    let stealing_svc = || parked_svc().with_work_stealing(true);
+
+    // differential pass before any timing
+    let parked = parked_svc();
+    let p_out = parked.evaluate_many(&jobs, None)?;
+    let stealing = stealing_svc();
+    let s_out = stealing.evaluate_many(&jobs, None)?;
+    anyhow::ensure!(p_out == s_out, "work-stealing changed evaluation results");
+    let (p, s) = (parked.stats(), stealing.stats());
+    anyhow::ensure!(
+        p.oracle_runs == uniques.len() && s.oracle_runs == uniques.len(),
+        "single-flight must run the oracle once per unique key \
+         (parked {} / stealing {} != {})",
+        p.oracle_runs,
+        s.oracle_runs,
+        uniques.len()
+    );
+    anyhow::ensure!(
+        s.steals > 0,
+        "{workers} workers piling onto duplicate keys must steal at least once"
+    );
+
+    let mut rows_out: Vec<BenchRow> = Vec::new();
+    let mut derived = BTreeMap::new();
+    // fresh service per rep — the oracle memo would otherwise turn
+    // every rep after the first into a pure cache sweep
+    let (pmed, pmad) = t.measure(|| parked_svc().evaluate_many(&jobs, None).unwrap());
+    rows_out.push(BenchRow {
+        name: format!("fleet/parked_{}keys_x{dup}dups_w{workers}", uniques.len()),
+        median_ms: pmed,
+        mad_ms: pmad,
+        reps: t.reps,
+    });
+    let (smed, smad) = t.measure(|| stealing_svc().evaluate_many(&jobs, None).unwrap());
+    rows_out.push(BenchRow {
+        name: format!("fleet/stealing_{}keys_x{dup}dups_w{workers}", uniques.len()),
+        median_ms: smed,
+        mad_ms: smad,
+        reps: t.reps,
+    });
+    derived.insert("steal_vs_park".to_string(), pmed / smed.max(1e-9));
+
+    Ok(SuiteReport { suite: "fleet".to_string(), quick, rows: rows_out, derived })
 }
 
 /// Comparison outcome: printable lines plus the regressions that

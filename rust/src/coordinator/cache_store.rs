@@ -397,7 +397,7 @@ impl CacheStore {
 // and parses it back bit-identically; non-finite values round-trip
 // through the `null` sentinel (becoming NaN on re-load).
 
-fn synth_to_json(s: &SynthResult) -> Json {
+pub(crate) fn synth_to_json(s: &SynthResult) -> Json {
     Json::obj(vec![
         ("cell_area_um2", s.cell_area_um2.into()),
         ("macro_area_um2", s.macro_area_um2.into()),
@@ -427,7 +427,7 @@ fn synth_from_json(j: &Json) -> Option<SynthResult> {
     })
 }
 
-fn backend_to_json(b: &BackendResult) -> Json {
+pub(crate) fn backend_to_json(b: &BackendResult) -> Json {
     Json::obj(vec![
         ("f_effective_ghz", b.f_effective_ghz.into()),
         ("f_max_ghz", b.f_max_ghz.into()),
@@ -459,7 +459,7 @@ fn backend_from_json(j: &Json) -> Option<BackendResult> {
     })
 }
 
-fn system_to_json(s: &SystemMetrics) -> Json {
+pub(crate) fn system_to_json(s: &SystemMetrics) -> Json {
     Json::obj(vec![
         ("runtime_s", s.runtime_s.into()),
         ("energy_j", s.energy_j.into()),
@@ -479,14 +479,14 @@ fn system_from_json(j: &Json) -> Option<SystemMetrics> {
     })
 }
 
-fn flow_from_json(rec: &Json) -> Option<FlowResult> {
+pub(crate) fn flow_from_json(rec: &Json) -> Option<FlowResult> {
     Some(FlowResult {
         synth: synth_from_json(rec.get("synth"))?,
         backend: backend_from_json(rec.get("backend"))?,
     })
 }
 
-fn eval_from_json(rec: &Json) -> Option<Evaluation> {
+pub(crate) fn eval_from_json(rec: &Json) -> Option<Evaluation> {
     Some(Evaluation {
         flow: flow_from_json(rec)?,
         system: system_from_json(rec.get("system"))?,

@@ -115,9 +115,34 @@ pub enum Joined<T> {
     Coalesced(T),
 }
 
+/// A leader error crosses the flight as its full anyhow context chain
+/// (outermost context first, root cause last), not a flattened string:
+/// waiters rebuild a real error whose `{e:#}` rendering matches the
+/// leader's, so cache/store context (`"loading shard 3: ..."`)
+/// survives coalescing.
+type ErrorChain = Vec<String>;
+
+fn error_chain(e: &anyhow::Error) -> ErrorChain {
+    e.chain().map(|c| c.to_string()).collect()
+}
+
+/// Rebuild an anyhow error from a leader's captured chain, wrapping it
+/// in the waiter-side `coalesced leader failed` marker.
+fn rebuild_error(chain: &[String]) -> anyhow::Error {
+    let mut segments = chain.iter().rev();
+    let mut err = match segments.next() {
+        Some(root) => anyhow::anyhow!("{root}"),
+        None => anyhow::anyhow!("unknown error"),
+    };
+    for ctx in segments {
+        err = err.context(ctx.clone());
+    }
+    err.context("coalesced leader failed")
+}
+
 enum FlightState<T> {
     Running,
-    Done(Result<T, String>),
+    Done(Result<T, ErrorChain>),
     Panicked(String),
 }
 
@@ -171,9 +196,9 @@ impl<T: Clone> Flight<T> {
     }
 
     /// Wait for the leader's result. `Err` carries the leader's error
-    /// message; a leader panic re-panics here so no waiter silently
+    /// chain; a leader panic re-panics here so no waiter silently
     /// continues past a dead flight.
-    fn join(&self) -> Result<T, String> {
+    fn join(&self) -> Result<T, ErrorChain> {
         self.waiters.fetch_add(1, Ordering::SeqCst);
         let mut guard = self.lock_state();
         // wake a leader blocked on the waiter barrier
@@ -190,6 +215,43 @@ impl<T: Clone> Flight<T> {
                     let msg = msg.clone();
                     drop(guard);
                     panic!("coalesced leader panicked: {msg}");
+                }
+            }
+        }
+    }
+
+    /// Work-stealing flavor of [`Flight::join`]: instead of parking
+    /// until the leader publishes, the waiter repeatedly offers itself
+    /// to `steal` — which pulls one queued unit of *other* work off a
+    /// shared queue and runs it to completion — and only parks (in
+    /// short, re-checkable slices) once the queue is dry. Values are
+    /// identical to the parked path; only idle time moves.
+    fn join_stealing(&self, steal: &dyn Fn() -> bool) -> Result<T, ErrorChain> {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        loop {
+            {
+                let guard = self.lock_state();
+                // wake a leader blocked on the waiter barrier
+                self.cv.notify_all();
+                match &*guard {
+                    FlightState::Running => {}
+                    FlightState::Done(r) => return r.clone(),
+                    FlightState::Panicked(msg) => {
+                        let msg = msg.clone();
+                        drop(guard);
+                        panic!("coalesced leader panicked: {msg}");
+                    }
+                }
+            }
+            // lock released: pull one queued key and run it; if the
+            // queue is dry, park briefly so a publish is seen promptly
+            if !steal() {
+                let guard = self.lock_state();
+                if matches!(&*guard, FlightState::Running) {
+                    let _ = self
+                        .cv
+                        .wait_timeout(guard, Duration::from_millis(1))
+                        .unwrap_or_else(|p| p.into_inner());
                 }
             }
         }
@@ -229,8 +291,27 @@ impl<T: Clone> SingleFlight<T> {
     /// Run `compute` for `key`, or wait on another caller already
     /// running it. Exactly one caller (the leader) executes `compute`
     /// per in-flight window; waiters receive the leader's cloned
-    /// value, error message, or propagated panic.
+    /// value, full error context chain, or propagated panic.
     pub fn run<F>(&self, key: u64, compute: F) -> Result<Joined<T>>
+    where
+        F: FnOnce() -> Result<T>,
+    {
+        self.run_with_steal(key, compute, None)
+    }
+
+    /// [`SingleFlight::run`] with an optional work-stealing hook: when
+    /// `steal` is supplied, a caller that loses the flight election
+    /// pulls other queued work through it instead of idling until the
+    /// leader publishes (see [`Flight::join_stealing`]). `steal`
+    /// returns whether it ran a unit of work; it must never run the
+    /// *waited-on* key (the flight table already guarantees one leader
+    /// per key).
+    pub fn run_with_steal<F>(
+        &self,
+        key: u64,
+        compute: F,
+        steal: Option<&dyn Fn() -> bool>,
+    ) -> Result<Joined<T>>
     where
         F: FnOnce() -> Result<T>,
     {
@@ -246,9 +327,13 @@ impl<T: Clone> SingleFlight<T> {
             }
         };
         if !leads {
-            return match flight.join() {
+            let joined = match steal {
+                Some(steal) => flight.join_stealing(steal),
+                None => flight.join(),
+            };
+            return match joined {
                 Ok(v) => Ok(Joined::Coalesced(v)),
-                Err(msg) => Err(anyhow::anyhow!("coalesced leader failed: {msg}")),
+                Err(chain) => Err(rebuild_error(&chain)),
             };
         }
         let depth = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
@@ -268,7 +353,7 @@ impl<T: Clone> SingleFlight<T> {
                 Ok(Joined::Led(v))
             }
             Ok(Err(e)) => {
-                flight.publish(FlightState::Done(Err(format!("{e:#}"))));
+                flight.publish(FlightState::Done(Err(error_chain(&e))));
                 Err(e)
             }
             Err(payload) => {
@@ -493,6 +578,52 @@ mod tests {
             Joined::Led(v) | Joined::Coalesced(v) => v,
         };
         assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn waiter_error_rebuild_preserves_context_chain() {
+        // unit-test the chain capture + rebuild round trip directly;
+        // the cross-thread pin lives in tests/coalesce.rs
+        let e = anyhow::anyhow!("disk exploded")
+            .context("loading shard 3")
+            .context("oracle cache read");
+        let rebuilt = rebuild_error(&error_chain(&e));
+        assert_eq!(
+            format!("{rebuilt:#}"),
+            "coalesced leader failed: oracle cache read: loading shard 3: disk exploded"
+        );
+    }
+
+    #[test]
+    fn stealing_waiter_pulls_queued_work_and_still_coalesces() {
+        use std::sync::atomic::AtomicBool;
+        let sf: SingleFlight<u64> = SingleFlight::new();
+        let leading = AtomicBool::new(false);
+        let stolen = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let sf = &sf;
+            let leading = &leading;
+            let stolen = &stolen;
+            scope.spawn(move || {
+                sf.run(1, || {
+                    leading.store(true, Ordering::SeqCst);
+                    // hold the flight open until the waiter has stolen
+                    while stolen.load(Ordering::SeqCst) == 0 {
+                        std::thread::yield_now();
+                    }
+                    Ok(42)
+                })
+                .unwrap()
+            });
+            while !leading.load(Ordering::SeqCst) {
+                std::thread::yield_now();
+            }
+            // the "queue" holds exactly one unit of other work
+            let steal = || stolen.fetch_add(1, Ordering::SeqCst) == 0;
+            let got = sf.run_with_steal(1, || Ok(0), Some(&steal)).unwrap();
+            assert_eq!(got, Joined::Coalesced(42), "stealer still gets the leader's value");
+        });
+        assert!(stolen.load(Ordering::SeqCst) >= 1, "parked waiter pulled queued work");
     }
 
     #[test]

@@ -66,7 +66,7 @@ use crate::util::rng::{hash_bytes, Rng};
 use crate::workloads::{NonDnnAlgo, WorkloadSpec};
 
 /// One fully ground-truthed point: SP&R flow output + system metrics.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Evaluation {
     pub flow: FlowResult,
     pub system: SystemMetrics,
@@ -91,6 +91,33 @@ impl Evaluation {
 pub struct SurrogatePoint {
     pub in_roi: bool,
     pub predicted: BTreeMap<Metric, f64>,
+}
+
+/// Everything a remote worker needs to ground-truth one point without
+/// sharing any state with the leader: the pre-computed content-hash
+/// keys (so the fleet queue can dedup) plus the full evaluation spec
+/// (so the worker recomputes the bit-identical result from scratch).
+pub struct RemoteTask<'a> {
+    pub key: u64,
+    pub flow_key: u64,
+    pub arch: &'a ArchConfig,
+    pub bcfg: BackendConfig,
+    pub wl: Option<&'a WorkloadSpec>,
+    pub trial: u64,
+    pub enablement: Enablement,
+    pub seed: u64,
+}
+
+/// Fleet dispatch seam (ISSUE 10): when attached via
+/// [`EvalService::with_remote_oracle`], full oracle misses — memo and
+/// store both cold — are shipped to worker processes instead of
+/// running the SP&R flow + simulator locally. Implementations must be
+/// deterministic: the same task always yields the bit-identical
+/// [`Evaluation`] a local run would produce (workers run the same
+/// seeded flow), so attaching a remote oracle never changes results,
+/// record sets, or shard bytes — only where the CPU time is spent.
+pub trait RemoteOracle: Send + Sync {
+    fn evaluate_remote(&self, task: &RemoteTask<'_>) -> Result<Evaluation>;
 }
 
 /// Snapshot of the service counters (`ServerStats` analogue).
@@ -171,6 +198,10 @@ pub struct EvalStats {
     /// Mega-batches the router issued (cross-client coalescing
     /// efficiency denominator).
     pub router_batches: usize,
+    /// Queued evaluations pulled and run by parked single-flight
+    /// waiters (work-stealing mode, ISSUE 10); stays 0 unless
+    /// `with_work_stealing` is enabled.
+    pub steals: usize,
 }
 
 impl EvalStats {
@@ -246,6 +277,7 @@ impl EvalStats {
             ("router_requests", Json::from(self.router_requests)),
             ("router_rows", Json::from(self.router_rows)),
             ("router_batches", Json::from(self.router_batches)),
+            ("steals", Json::from(self.steals)),
         ])
     }
 }
@@ -289,8 +321,8 @@ impl std::fmt::Display for EvalStats {
         )?;
         write!(
             f,
-            " | coalesce {} waits ({} oracle runs, peak {} in flight)",
-            self.coalesced_hits, self.oracle_runs, self.inflight_peak
+            " | coalesce {} waits ({} oracle runs, {} steals, peak {} in flight)",
+            self.coalesced_hits, self.oracle_runs, self.steals, self.inflight_peak
         )?;
         write!(
             f,
@@ -320,6 +352,7 @@ struct Counters {
     router_requests: AtomicUsize,
     router_rows: AtomicUsize,
     router_batches: AtomicUsize,
+    steals: AtomicUsize,
 }
 
 /// Optional PJRT path: a `PredictServer` client plus the (variant,
@@ -360,6 +393,14 @@ pub struct EvalService {
     coalesce: bool,
     oracle_flights: SingleFlight<Evaluation>,
     flow_flights: SingleFlight<FlowResult>,
+    /// Work-stealing single flight (ISSUE 10, `with_work_stealing`):
+    /// when enabled, `evaluate_many` waiters that lose a flight
+    /// election pull other queued jobs off the shared batch instead of
+    /// idling until their leader publishes.
+    steal: bool,
+    /// Fleet dispatch seam (ISSUE 10, `with_remote_oracle`): full
+    /// oracle misses are shipped to worker processes when attached.
+    remote: Option<Arc<dyn RemoteOracle>>,
     counters: Counters,
 }
 
@@ -382,6 +423,8 @@ impl EvalService {
             coalesce: false,
             oracle_flights: SingleFlight::new(),
             flow_flights: SingleFlight::new(),
+            steal: false,
+            remote: None,
             counters: Counters::default(),
         }
     }
@@ -402,6 +445,46 @@ impl EvalService {
     /// Whether single-flight coalescing is enabled.
     pub fn coalescing(&self) -> bool {
         self.coalesce
+    }
+
+    /// Enable the work-stealing flavor of single-flight (ISSUE 10):
+    /// an `evaluate_many` worker that loses a flight election pulls
+    /// other queued jobs off the shared batch and runs them instead of
+    /// idling until its leader publishes, lifting the wall-clock floor
+    /// on grouped-duplicate workloads. Requires `with_coalescing(true)`
+    /// to have any effect. Never changes results or counter totals
+    /// other than `steals` — values are schedule-independent and
+    /// `oracle_runs` stays at one per unique key.
+    pub fn with_work_stealing(mut self, on: bool) -> EvalService {
+        self.steal = on;
+        self
+    }
+
+    /// Whether work-stealing single-flight is enabled.
+    pub fn work_stealing(&self) -> bool {
+        self.steal
+    }
+
+    /// Attach a fleet dispatch seam (ISSUE 10): full oracle misses —
+    /// in-memory memo and persistent store both cold — are shipped
+    /// through `remote` (normally a `fleet::FleetOracle` fronting
+    /// worker processes) instead of running the SP&R flow + simulator
+    /// on this thread. The returned evaluation is recorded through the
+    /// same double-checked memo insert and write-behind puts as a
+    /// local run, so record sets and flushed shard bytes stay
+    /// byte-identical to a single-process run.
+    pub fn with_remote_oracle(mut self, remote: Arc<dyn RemoteOracle>) -> EvalService {
+        self.remote = Some(remote);
+        self
+    }
+
+    /// `with_remote_oracle` for plumbing that may not have a fleet:
+    /// attaches when given, no-op otherwise.
+    pub fn with_remote_oracle_opt(self, remote: Option<Arc<dyn RemoteOracle>>) -> EvalService {
+        match remote {
+            Some(r) => self.with_remote_oracle(r),
+            None => self,
+        }
     }
 
     /// Worker threads for `evaluate_many` / `predict_batch` fan-out;
@@ -550,6 +633,7 @@ impl EvalService {
             router_requests: self.counters.router_requests.load(Ordering::Relaxed),
             router_rows: self.counters.router_rows.load(Ordering::Relaxed),
             router_batches: self.counters.router_batches.load(Ordering::Relaxed),
+            steals: self.counters.steals.load(Ordering::Relaxed),
         }
     }
 
@@ -687,6 +771,21 @@ impl EvalService {
         wl: Option<&WorkloadSpec>,
         trial: u64,
     ) -> Result<Evaluation> {
+        self.evaluate_trial_with_steal(arch, bcfg, wl, trial, None)
+    }
+
+    /// `evaluate_trial` with an optional work-stealing hook: when this
+    /// call loses the flight election, `steal` pulls one queued job
+    /// off the shared batch per invocation (see `evaluate_many`'s
+    /// stealing fan-out). Values are identical either way.
+    fn evaluate_trial_with_steal(
+        &self,
+        arch: &ArchConfig,
+        bcfg: BackendConfig,
+        wl: Option<&WorkloadSpec>,
+        trial: u64,
+        steal: Option<&dyn Fn() -> bool>,
+    ) -> Result<Evaluation> {
         let flow_key = self.flow_key(arch, bcfg, trial);
         let key = self.oracle_key(flow_key, wl);
         if !self.coalesce {
@@ -702,10 +801,11 @@ impl EvalService {
         // that leads *after* a previous flight published simply hits
         // the memo inside `evaluate_keyed`, so `oracle_runs` stays at
         // exactly one per unique key under any schedule.
-        match self
-            .oracle_flights
-            .run(key, || self.evaluate_keyed(arch, bcfg, wl, trial, flow_key, key))?
-        {
+        match self.oracle_flights.run_with_steal(
+            key,
+            || self.evaluate_keyed(arch, bcfg, wl, trial, flow_key, key),
+            steal,
+        )? {
             Joined::Led(ev) => Ok(ev),
             Joined::Coalesced(ev) => {
                 self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
@@ -747,6 +847,45 @@ impl EvalService {
                 }
                 return Ok(ev);
             }
+        }
+        // fleet mode (ISSUE 10): a leader process ships full misses to
+        // worker processes instead of computing locally. The worker
+        // recomputes the bit-identical evaluation from the task spec;
+        // the result is recorded through the same double-checked memo
+        // inserts and write-behind puts as a local run, so record sets
+        // and flushed shard bytes match the single-process run.
+        if let Some(remote) = &self.remote {
+            let ev = remote.evaluate_remote(&RemoteTask {
+                key,
+                flow_key,
+                arch,
+                bcfg,
+                wl,
+                trial,
+                enablement: self.enablement,
+                seed: self.seed,
+            })?;
+            self.counters.oracle_runs.fetch_add(1, Ordering::Relaxed);
+            {
+                let mut flows = self.flow_cache.lock().unwrap();
+                if !flows.contains_key(&flow_key) {
+                    flows.insert(flow_key, ev.flow);
+                    if let Some(store) = &self.store {
+                        store.put_flow(flow_key, ev.flow); // write-behind
+                    }
+                }
+            }
+            let mut cache = self.oracle_cache.lock().unwrap();
+            if cache.contains_key(&key) {
+                self.counters.oracle_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.counters.oracle_misses.fetch_add(1, Ordering::Relaxed);
+                cache.insert(key, ev);
+                if let Some(store) = &self.store {
+                    store.put_eval(key, ev); // write-behind
+                }
+            }
+            return Ok(ev);
         }
         // the flow is workload-independent: reuse it across workloads
         // (datagen's default binding vs. a DSE problem's explicit one)
@@ -856,11 +995,72 @@ impl EvalService {
         jobs: &[(ArchConfig, BackendConfig)],
         wl: Option<&WorkloadSpec>,
     ) -> Result<Vec<Evaluation>> {
+        if self.steal && self.coalesce && self.workers > 1 && jobs.len() > 1 {
+            return self.evaluate_many_stealing(jobs, wl);
+        }
         let results: Vec<Result<Evaluation>> = par_map(jobs.len(), self.workers, |i| {
             let (arch, bcfg) = &jobs[i];
             self.evaluate(arch, *bcfg, wl)
         });
         results.into_iter().collect()
+    }
+
+    /// Work-stealing fan-out (ISSUE 10): jobs are claimed off a shared
+    /// atomic cursor exactly once each; a worker whose claim loses a
+    /// flight election steals further jobs through the same cursor
+    /// while it waits, so grouped duplicates no longer serialize the
+    /// pool. Output order matches input order and every value is
+    /// bit-identical to the parked path — only idle time moves.
+    fn evaluate_many_stealing(
+        &self,
+        jobs: &[(ArchConfig, BackendConfig)],
+        wl: Option<&WorkloadSpec>,
+    ) -> Result<Vec<Evaluation>> {
+        struct StealCtx<'a> {
+            svc: &'a EvalService,
+            jobs: &'a [(ArchConfig, BackendConfig)],
+            wl: Option<&'a WorkloadSpec>,
+            next: AtomicUsize,
+            slots: Vec<Mutex<Option<Result<Evaluation>>>>,
+        }
+        /// Claim one job off the cursor and run it to completion
+        /// (recursively stealing while parked); false once the batch
+        /// is exhausted.
+        fn claim_and_run(ctx: &StealCtx<'_>, stolen: bool) -> bool {
+            let i = ctx.next.fetch_add(1, Ordering::SeqCst);
+            if i >= ctx.jobs.len() {
+                return false;
+            }
+            if stolen {
+                ctx.svc.counters.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            let (arch, bcfg) = &ctx.jobs[i];
+            let steal = || claim_and_run(ctx, true);
+            let r = ctx.svc.evaluate_trial_with_steal(arch, *bcfg, ctx.wl, 0, Some(&steal));
+            *ctx.slots[i].lock().unwrap() = Some(r);
+            true
+        }
+        let ctx = StealCtx {
+            svc: self,
+            jobs,
+            wl,
+            next: AtomicUsize::new(0),
+            slots: (0..jobs.len()).map(|_| Mutex::new(None)).collect(),
+        };
+        let threads = self.workers.min(jobs.len()).max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| while claim_and_run(&ctx, false) {});
+            }
+        });
+        ctx.slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .expect("every claimed job fills its slot")
+            })
+            .collect()
     }
 
     /// Score a batch of feature rows through the two-stage surrogate:
@@ -1137,6 +1337,72 @@ mod tests {
         let s = svc.stats();
         assert_eq!(s.oracle_runs, 4);
         assert_eq!(s.flow_runs, 3, "the SP&R flow is shared across workloads");
+    }
+
+    #[test]
+    fn work_stealing_matches_parked_values_and_counters() {
+        // grouped duplicates so waiters actually park on flights
+        let arch = mid_arch(Platform::Axiline);
+        let mut jobs = Vec::new();
+        for f in [0.6, 0.9, 1.2] {
+            for _ in 0..4 {
+                jobs.push((arch.clone(), BackendConfig::new(f, 0.5)));
+            }
+        }
+        let parked = EvalService::new(Enablement::Gf12, 5).with_workers(4).with_coalescing(true);
+        let stealing = EvalService::new(Enablement::Gf12, 5)
+            .with_workers(4)
+            .with_coalescing(true)
+            .with_work_stealing(true);
+        assert!(stealing.work_stealing() && !parked.work_stealing());
+        let a = parked.evaluate_many(&jobs, None).unwrap();
+        let b = stealing.evaluate_many(&jobs, None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.flow.backend, y.flow.backend);
+            assert_eq!(x.system, y.system);
+        }
+        let (p, s) = (parked.stats(), stealing.stats());
+        assert_eq!(p.oracle_runs, 3, "one run per unique key");
+        assert_eq!(s.oracle_runs, 3, "stealing keeps one run per unique key");
+        assert_eq!(p.steals, 0, "parked mode never steals");
+        // `s.steals` is schedule-dependent (waiters only steal while a
+        // flight is actually open) — any value is valid here; the
+        // bench suite pins the wall-clock benefit
+    }
+
+    #[test]
+    fn remote_oracle_seam_matches_local_run_and_counters() {
+        struct LocalRemote {
+            inner: EvalService,
+            calls: AtomicUsize,
+        }
+        impl RemoteOracle for LocalRemote {
+            fn evaluate_remote(&self, t: &RemoteTask<'_>) -> Result<Evaluation> {
+                self.calls.fetch_add(1, Ordering::SeqCst);
+                self.inner.evaluate_trial(t.arch, t.bcfg, t.wl, t.trial)
+            }
+        }
+        let arch = mid_arch(Platform::Vta);
+        let bcfg = BackendConfig::new(1.0, 0.4);
+        let local = EvalService::new(Enablement::Gf12, 9);
+        let want = local.evaluate(&arch, bcfg, None).unwrap();
+        let remote = Arc::new(LocalRemote {
+            inner: EvalService::new(Enablement::Gf12, 9),
+            calls: AtomicUsize::new(0),
+        });
+        let svc = EvalService::new(Enablement::Gf12, 9).with_remote_oracle(remote.clone());
+        let got = svc.evaluate(&arch, bcfg, None).unwrap();
+        assert_eq!(got.flow.backend, want.flow.backend);
+        assert_eq!(got.flow.synth, want.flow.synth);
+        assert_eq!(got.system, want.system);
+        // memo hit on repeat: no second dispatch
+        svc.evaluate(&arch, bcfg, None).unwrap();
+        assert_eq!(remote.calls.load(Ordering::SeqCst), 1);
+        let s = svc.stats();
+        assert_eq!(s.oracle_misses, 1);
+        assert_eq!(s.oracle_hits, 1);
+        assert_eq!(s.oracle_runs, 1);
+        assert_eq!(s.flow_runs, 0, "the flow ran on the remote side");
     }
 
     #[test]

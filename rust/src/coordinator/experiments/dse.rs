@@ -3,11 +3,14 @@
 //! against the full SP&R oracle + simulator. The paper's check: top-3
 //! predictions within 7% (Axiline-SVM/NG45) and 6% (VTA/GF12).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::backend::Enablement;
 use crate::coordinator::datagen::{self, DatagenConfig};
 use crate::coordinator::dse_driver::{axiline_nondnn_problem, vta_backend_problem, DseDriver};
+use crate::coordinator::eval_service::RemoteOracle;
 use crate::coordinator::EvalService;
 use crate::data::Metric;
 use crate::dse::MotpeConfig;
@@ -64,6 +67,17 @@ fn report(
 /// num_cycles 5-21, f_target 0.3-1.3 GHz, util 0.4-0.8; alpha=1,
 /// beta=0.001.
 pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
+    fig11_axiline_svm_with(opts, None)
+}
+
+/// [`fig11_axiline_svm`] with an optional remote oracle: when `Some`,
+/// every full oracle miss is dispatched to the evaluation fleet
+/// (ISSUE 10) instead of running in-process. Byte-identical output
+/// either way — the fleet ships back bit-exact evaluations.
+pub fn fig11_axiline_svm_with(
+    opts: &ExpOptions,
+    remote: Option<Arc<dyn RemoteOracle>>,
+) -> Result<()> {
     let enablement = Enablement::Ng45;
     // `--workload` picks any non-DNN registry entry for the Axiline
     // search; the default stays the paper's SVM-55
@@ -85,6 +99,9 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
         cfg.n_backend_train = 12;
         cfg.n_backend_test = 4;
     }
+    if let Some(n) = opts.archs {
+        cfg.n_arch = n;
+    }
     println!("[fig11] generating Axiline/NG45 training data ({} archs)...", cfg.n_arch);
     // one service carries datagen and the DSE ground-truth checks, so
     // the oracle memo is shared; --cache-dir makes both the oracle
@@ -95,7 +112,8 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
         .with_workers(crate::util::pool::default_workers())
         .with_coalescing(opts.coalesce)
         .with_cache_store_opt(store.clone())
-        .with_model_store_opt(mstore.clone());
+        .with_model_store_opt(mstore.clone())
+        .with_remote_oracle_opt(remote);
     let g = datagen::generate_with(&service, &cfg)?;
     let cached = service.fit_surrogate(&g.dataset, &g.backend_split, opts.seed)?;
     println!(
@@ -122,7 +140,7 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
     // with no override this is exactly `axiline_svm_problem(p_max, r_max)`
     let problem = axiline_nondnn_problem(p_max, r_max, wl);
 
-    let iters = if opts.quick { 120 } else { 400 };
+    let iters = opts.iters.unwrap_or(if opts.quick { 120 } else { 400 });
     println!(
         "[fig11] {} x {iters} over (dimension, num_cycles, f_target, util)",
         opts.strategy.name()
@@ -156,6 +174,12 @@ pub fn fig11_axiline_svm(opts: &ExpOptions) -> Result<()> {
 /// Fig. 12: backend-only DSE of a fixed VTA design on GF12; f_target
 /// 0.3-1.3 GHz, util 0.25-0.55; alpha=beta=1.
 pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
+    fig12_vta_with(opts, None)
+}
+
+/// [`fig12_vta`] with an optional remote oracle (see
+/// [`fig11_axiline_svm_with`]).
+pub fn fig12_vta_with(opts: &ExpOptions, remote: Option<Arc<dyn RemoteOracle>>) -> Result<()> {
     let enablement = Enablement::Gf12;
     // `--workload` swaps the layer table the VTA search prices; the
     // default stays the paper's MobileNet-v1 binding
@@ -178,6 +202,9 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
         cfg.n_backend_train = 12;
         cfg.n_backend_test = 4;
     }
+    if let Some(n) = opts.archs {
+        cfg.n_arch = n;
+    }
     println!("[fig12] generating VTA/GF12 training data ({} archs)...", cfg.n_arch);
     let store = opts.open_cache()?;
     let mstore = opts.open_model_store()?;
@@ -185,7 +212,8 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
         .with_workers(crate::util::pool::default_workers())
         .with_coalescing(opts.coalesce)
         .with_cache_store_opt(store.clone())
-        .with_model_store_opt(mstore.clone());
+        .with_model_store_opt(mstore.clone())
+        .with_remote_oracle_opt(remote);
     let g = datagen::generate_with(&service, &cfg)?;
     let cached = service.fit_surrogate(&g.dataset, &g.backend_split, opts.seed)?;
     println!(
@@ -215,7 +243,7 @@ pub fn fig12_vta(opts: &ExpOptions) -> Result<()> {
     let mut problem = vta_backend_problem(base, p_max, r_max);
     problem.workload = wl_override; // None keeps the default binding
 
-    let iters = if opts.quick { 100 } else { 300 };
+    let iters = opts.iters.unwrap_or(if opts.quick { 100 } else { 300 });
     println!("[fig12] {} x {iters} over (f_target, util)", opts.strategy.name());
     let scfg = MotpeConfig { seed: opts.seed, ..Default::default() };
     let strategy = opts.strategy.build(problem.space(), &scfg);

@@ -44,6 +44,13 @@ pub struct ExpOptions {
     /// that price system metrics. `None` keeps each platform's default
     /// binding (paper §7.1).
     pub workload: Option<String>,
+    /// `--archs N`: override the datagen architecture count of the DSE
+    /// experiments (fleet smoke tests shrink runs below `--quick`).
+    /// `None` keeps the historical sizes, byte for byte.
+    pub archs: Option<usize>,
+    /// `--iters N`: override the DSE iteration budget. `None` keeps
+    /// the historical budgets.
+    pub iters: Option<usize>,
 }
 
 impl Default for ExpOptions {
@@ -59,6 +66,8 @@ impl Default for ExpOptions {
             inflight: 4,
             strategy: crate::dse::StrategyKind::Motpe,
             workload: None,
+            archs: None,
+            iters: None,
         }
     }
 }

@@ -1,0 +1,845 @@
+//! Distributed evaluation fleet (ISSUE 10 tentpole): a leader process
+//! (`fso fleet lead`) owns the MOTPE/strategy loop, the single-flight
+//! table, and the sharded stores, while N worker processes
+//! (`fso fleet work --connect`) run the SP&R-oracle + simulator
+//! evaluations and ship the results back over the PR 9 newline-JSON
+//! protocol (`claim` / `result` / `heartbeat` ops in the route table).
+//!
+//! Topology:
+//!
+//! ```text
+//!   fso fleet lead ──(TcpListener, serve_loop)──┬── fso fleet work #1
+//!     │  MOTPE loop → EvalService               ├── fso fleet work #2
+//!     │    └─ RemoteOracle = FleetOracle        └── fso fleet work #N
+//!     │         └─ FleetQueue (lease + requeue)
+//!     └─ ShardedStore (leader-only writer)
+//! ```
+//!
+//! Claim/lease protocol: the leader enqueues one task per *full* cache
+//! miss (memo and store hits never leave the leader); a worker `claim`
+//! takes the oldest queued key under a lease; `heartbeat` renews every
+//! lease the worker holds; a lease that expires without a `result`
+//! requeues the key so another worker picks it up. The first `result`
+//! per key wins — late duplicates from a slow-but-alive worker are
+//! counted and dropped, never double-applied.
+//!
+//! Determinism contract (the repo's spine, now at fleet scale): a fixed
+//! seed and *any* worker count produce byte-identical CSV rows, Pareto
+//! fronts, and flushed shard files. The leader is the only store
+//! writer, workers recompute the deterministic oracle from
+//! `(enablement, seed)` shipped in each task, and the wire codec
+//! reuses the store's bit-exact f64 JSON round-trip — so a remote
+//! evaluation is bit-for-bit the evaluation the leader would have
+//! computed itself.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::{BackendConfig, Enablement};
+use crate::generators::{ArchConfig, Platform};
+use crate::util::json::Json;
+use crate::workloads::{self, NonDnnAlgo, NonDnnWorkload, WorkloadSpec};
+
+use super::cache_store;
+use super::coalesce::EvalRouter;
+use super::eval_service::{EvalService, Evaluation, RemoteOracle, RemoteTask};
+use super::server::listener::serve_loop;
+use super::server::protocol::{LineEvent, LineReader};
+use super::server::router::ServerState;
+use super::server::{drain, ServeStats};
+use super::store::{hex_key, parse_hex_key};
+
+/// Default lease on a claimed task before the leader assumes the
+/// worker died and requeues the key.
+pub const DEFAULT_LEASE_MS: u64 = 3_000;
+
+/// Worker heartbeat period. Comfortably inside both the default lease
+/// and the shortened leases the recovery tests use (500 ms).
+const HEARTBEAT_MS: u64 = 150;
+
+/// How long an idle worker sleeps between empty `claim` polls.
+const IDLE_POLL_MS: u64 = 10;
+
+// ---- task wire format ----------------------------------------------
+
+/// Everything a worker needs to recompute one evaluation, plus the
+/// leader-side keys that correlate the result back to its waiter.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Full oracle cache key (arch × backend × workload × trial) — the
+    /// correlation id for `result`.
+    pub key: u64,
+    /// Flow-level key (arch × backend), carried for log correlation.
+    pub flow_key: u64,
+    pub arch: ArchConfig,
+    pub f_target_ghz: f64,
+    pub util: f64,
+    pub workload: Option<WorkloadSpec>,
+    pub trial: u64,
+    pub enablement: Enablement,
+    pub seed: u64,
+}
+
+impl TaskSpec {
+    pub fn from_remote(task: &RemoteTask<'_>) -> TaskSpec {
+        TaskSpec {
+            key: task.key,
+            flow_key: task.flow_key,
+            arch: task.arch.clone(),
+            f_target_ghz: task.bcfg.f_target_ghz,
+            util: task.bcfg.util,
+            workload: task.wl.cloned(),
+            trial: task.trial,
+            enablement: task.enablement,
+            seed: task.seed,
+        }
+    }
+
+    /// Wire encoding. Keys and the seed ride as 16-digit hex strings:
+    /// request ids decode through f64 and a u64 above 2^53 would lose
+    /// bits as a JSON number.
+    pub fn to_json(&self) -> Json {
+        let workload = match &self.workload {
+            None => Json::Null,
+            Some(WorkloadSpec::Dnn(net)) => Json::obj(vec![
+                ("kind", Json::from("dnn")),
+                ("name", Json::from(net.name)),
+            ]),
+            Some(WorkloadSpec::NonDnn(wl)) => Json::obj(vec![
+                ("algo", Json::from(wl.algo.name())),
+                ("epochs", Json::from(wl.epochs)),
+                ("features", Json::from(wl.features)),
+                ("kind", Json::from("nondnn")),
+                ("samples", Json::from(wl.samples)),
+            ]),
+        };
+        Json::obj(vec![
+            ("arch", Json::arr_f64(&self.arch.values)),
+            ("enablement", Json::from(self.enablement.name())),
+            ("f", Json::from(self.f_target_ghz)),
+            ("flow_key", Json::from(hex_key(self.flow_key).as_str())),
+            ("key", Json::from(hex_key(self.key).as_str())),
+            ("platform", Json::from(self.arch.platform.name())),
+            ("seed", Json::from(hex_key(self.seed).as_str())),
+            ("trial", Json::from(self.trial as usize)),
+            ("util", Json::from(self.util)),
+            ("workload", workload),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TaskSpec> {
+        let hex = |field: &str| -> Result<u64> {
+            j.get(field)
+                .as_str()
+                .and_then(parse_hex_key)
+                .ok_or_else(|| anyhow!("task field {field:?} must be a hex key string"))
+        };
+        let num = |field: &str| -> Result<f64> {
+            j.get(field).as_f64().ok_or_else(|| anyhow!("task field {field:?} must be a number"))
+        };
+        let platform = Platform::from_name(
+            j.get("platform").as_str().ok_or_else(|| anyhow!("task field \"platform\" missing"))?,
+        )?;
+        let values = j
+            .get("arch")
+            .as_arr()
+            .ok_or_else(|| anyhow!("task field \"arch\" must be an array"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("task \"arch\" must hold numbers")))
+            .collect::<Result<Vec<f64>>>()?;
+        let workload = match j.get("workload") {
+            Json::Null => None,
+            w => Some(workload_from_json(w)?),
+        };
+        Ok(TaskSpec {
+            key: hex("key")?,
+            flow_key: hex("flow_key")?,
+            arch: ArchConfig::new(platform, values),
+            f_target_ghz: num("f")?,
+            util: num("util")?,
+            workload,
+            trial: num("trial")? as u64,
+            enablement: Enablement::from_name(
+                j.get("enablement")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("task field \"enablement\" missing"))?,
+            )?,
+            seed: hex("seed")?,
+        })
+    }
+}
+
+fn workload_from_json(w: &Json) -> Result<WorkloadSpec> {
+    match w.get("kind").as_str() {
+        Some("dnn") => {
+            let name =
+                w.get("name").as_str().ok_or_else(|| anyhow!("dnn workload needs \"name\""))?;
+            let spec = workloads::lookup(name)?;
+            if !spec.is_dnn() {
+                bail!("workload {name:?} is not a DNN");
+            }
+            Ok(spec)
+        }
+        Some("nondnn") => {
+            let algo_name =
+                w.get("algo").as_str().ok_or_else(|| anyhow!("nondnn workload needs \"algo\""))?;
+            let algo = NonDnnAlgo::from_name(algo_name)
+                .ok_or_else(|| anyhow!("unknown nondnn algo {algo_name:?}"))?;
+            let usz = |field: &str| -> Result<usize> {
+                w.get(field)
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("nondnn workload field {field:?} must be a count"))
+            };
+            Ok(WorkloadSpec::NonDnn(NonDnnWorkload {
+                algo,
+                features: usz("features")?,
+                samples: usz("samples")?,
+                epochs: usz("epochs")?,
+            }))
+        }
+        other => bail!("unknown workload kind {other:?} (dnn|nondnn)"),
+    }
+}
+
+/// Encode a computed evaluation in the cache store's record shape
+/// (`synth` / `backend` / `system` sub-objects), so the decode side is
+/// the store's own bit-exact `eval_from_json` — one f64 codec for disk
+/// and wire.
+pub fn eval_to_json(ev: &Evaluation) -> Json {
+    Json::obj(vec![
+        ("backend", cache_store::backend_to_json(&ev.flow.backend)),
+        ("synth", cache_store::synth_to_json(&ev.flow.synth)),
+        ("system", cache_store::system_to_json(&ev.system)),
+    ])
+}
+
+/// Decode a worker's evaluation payload (inverse of [`eval_to_json`]).
+pub fn eval_from_wire(j: &Json) -> Result<Evaluation> {
+    cache_store::eval_from_json(j)
+        .ok_or_else(|| anyhow!("malformed evaluation payload (need synth/backend/system)"))
+}
+
+// ---- the leader's task queue ---------------------------------------
+
+enum TaskState {
+    Queued,
+    Claimed { worker: u64, deadline: Instant },
+    Done,
+}
+
+struct TaskEntry {
+    spec: TaskSpec,
+    state: TaskState,
+}
+
+#[derive(Default)]
+struct QueueInner {
+    /// Every live task by key (BTreeMap: deterministic iteration for
+    /// lease-expiry sweeps and the summary line).
+    tasks: BTreeMap<u64, TaskEntry>,
+    /// Claim order: oldest enqueued key first. May hold stale keys
+    /// (completed while requeued); `claim` skips anything not Queued.
+    pending: VecDeque<u64>,
+    /// First-result-wins result slots, consumed by `await_result`.
+    results: BTreeMap<u64, Result<Evaluation, String>>,
+    draining: bool,
+    tasks_enqueued: usize,
+    claims: usize,
+    completions: usize,
+    requeues: usize,
+    duplicate_results: usize,
+}
+
+/// Leader-side work queue shared between the experiment loop (producer
+/// via [`FleetOracle`]) and the `claim`/`result`/`heartbeat` handlers
+/// (consumers, one per worker connection thread).
+pub struct FleetQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    lease: Duration,
+}
+
+/// Counter snapshot for the leader's exit summary (and the recovery
+/// test's `requeues >= 1` assertion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetCounters {
+    pub tasks_enqueued: usize,
+    pub claims: usize,
+    pub completions: usize,
+    pub requeues: usize,
+    pub duplicate_results: usize,
+}
+
+impl FleetQueue {
+    pub fn new(lease_ms: u64) -> FleetQueue {
+        FleetQueue {
+            inner: Mutex::new(QueueInner::default()),
+            cv: Condvar::new(),
+            lease: Duration::from_millis(lease_ms.max(1)),
+        }
+    }
+
+    pub fn lease_ms(&self) -> u64 {
+        self.lease.as_millis() as u64
+    }
+
+    /// Requeue every claimed task whose lease has expired (worker died
+    /// or wedged). Caller holds the lock.
+    fn requeue_expired_locked(inner: &mut QueueInner, now: Instant) {
+        let mut expired: Vec<u64> = Vec::new();
+        for (key, entry) in &inner.tasks {
+            if let TaskState::Claimed { deadline, .. } = entry.state {
+                if deadline <= now {
+                    expired.push(*key);
+                }
+            }
+        }
+        for key in expired {
+            if let Some(entry) = inner.tasks.get_mut(&key) {
+                entry.state = TaskState::Queued;
+                inner.pending.push_back(key);
+                inner.requeues += 1;
+            }
+        }
+    }
+
+    /// Queue a task for the fleet. Returns `false` (and does nothing)
+    /// if the key is already queued, claimed, or completed-unconsumed —
+    /// the leader's single-flight table makes that unreachable in
+    /// practice, but the queue stays safe without it.
+    pub fn enqueue(&self, spec: TaskSpec) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.tasks.contains_key(&spec.key) {
+            return false;
+        }
+        let key = spec.key;
+        inner.tasks.insert(key, TaskEntry { spec, state: TaskState::Queued });
+        inner.pending.push_back(key);
+        inner.tasks_enqueued += 1;
+        self.cv.notify_all();
+        true
+    }
+
+    /// Worker claim: oldest queued task, under a fresh lease. `None`
+    /// when the queue is dry (the worker sleeps and re-polls).
+    pub fn claim(&self, worker: u64) -> Option<TaskSpec> {
+        let now = Instant::now();
+        let mut inner = self.inner.lock().unwrap();
+        Self::requeue_expired_locked(&mut inner, now);
+        while let Some(key) = inner.pending.pop_front() {
+            let lease = self.lease;
+            if let Some(entry) = inner.tasks.get_mut(&key) {
+                if matches!(entry.state, TaskState::Queued) {
+                    entry.state = TaskState::Claimed { worker, deadline: now + lease };
+                    inner.claims += 1;
+                    return Some(entry.spec.clone());
+                }
+            }
+            // stale pending entry (completed or re-claimed): skip
+        }
+        None
+    }
+
+    /// Renew every lease the worker holds; returns how many.
+    pub fn heartbeat(&self, worker: u64) -> usize {
+        let deadline = Instant::now() + self.lease;
+        let mut inner = self.inner.lock().unwrap();
+        let mut renewed = 0;
+        for entry in inner.tasks.values_mut() {
+            if let TaskState::Claimed { worker: w, deadline: d } = &mut entry.state {
+                if *w == worker {
+                    *d = deadline;
+                    renewed += 1;
+                }
+            }
+        }
+        renewed
+    }
+
+    /// Record a worker's result. First result per key wins; duplicates
+    /// (a requeued key completed twice, or a result for an already
+    /// consumed key) are counted and dropped. Returns whether the
+    /// result was fresh.
+    pub fn complete(&self, key: u64, result: Result<Evaluation, String>) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.tasks.get_mut(&key) {
+            Some(entry) if !matches!(entry.state, TaskState::Done) => {
+                entry.state = TaskState::Done;
+                inner.results.insert(key, result);
+                inner.completions += 1;
+                self.cv.notify_all();
+                true
+            }
+            _ => {
+                inner.duplicate_results += 1;
+                false
+            }
+        }
+    }
+
+    /// Block the experiment loop until some worker completes `key`.
+    /// Wakes periodically to requeue expired leases, so a worker dying
+    /// mid-task delays the result by one lease instead of hanging the
+    /// run.
+    pub fn await_result(&self, key: u64) -> Result<Evaluation> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            Self::requeue_expired_locked(&mut inner, Instant::now());
+            if let Some(result) = inner.results.remove(&key) {
+                inner.tasks.remove(&key);
+                return result.map_err(|msg| {
+                    anyhow!("{msg}").context("fleet worker evaluation failed")
+                });
+            }
+            let (guard, _) = self.cv.wait_timeout(inner, Duration::from_millis(50)).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Tell claiming workers to exit (`drain: true` on the next claim).
+    pub fn drain(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.draining = true;
+        self.cv.notify_all();
+    }
+
+    pub fn draining(&self) -> bool {
+        self.inner.lock().unwrap().draining
+    }
+
+    pub fn counters(&self) -> FleetCounters {
+        let inner = self.inner.lock().unwrap();
+        FleetCounters {
+            tasks_enqueued: inner.tasks_enqueued,
+            claims: inner.claims,
+            completions: inner.completions,
+            requeues: inner.requeues,
+            duplicate_results: inner.duplicate_results,
+        }
+    }
+}
+
+/// The leader's [`RemoteOracle`]: ship each full cache miss to the
+/// fleet and block the calling (single-flight leader) thread on the
+/// result.
+pub struct FleetOracle {
+    queue: Arc<FleetQueue>,
+}
+
+impl FleetOracle {
+    pub fn new(queue: Arc<FleetQueue>) -> FleetOracle {
+        FleetOracle { queue }
+    }
+}
+
+impl RemoteOracle for FleetOracle {
+    fn evaluate_remote(&self, task: &RemoteTask<'_>) -> Result<Evaluation> {
+        self.queue.enqueue(TaskSpec::from_remote(task));
+        self.queue.await_result(task.key)
+    }
+}
+
+// ---- the worker's client loop --------------------------------------
+
+/// A blocking newline-JSON client connection to the leader.
+pub struct FleetConn {
+    stream: TcpStream,
+    reader: LineReader,
+    next_id: u64,
+}
+
+impl FleetConn {
+    pub fn connect(addr: &str) -> Result<FleetConn> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to fleet leader at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(FleetConn { stream, reader: LineReader::new(), next_id: 0 })
+    }
+
+    /// One request/response round-trip. Any transport or protocol
+    /// error is terminal for the connection.
+    pub fn request(&mut self, op: &str, body: Json) -> Result<Json> {
+        self.next_id += 1;
+        let mut line = Json::obj(vec![
+            ("body", body),
+            ("id", Json::from(self.next_id as usize)),
+            ("op", Json::from(op)),
+        ])
+        .to_string();
+        line.push('\n');
+        self.stream
+            .write_all(line.as_bytes())
+            .with_context(|| format!("sending {op:?} to fleet leader"))?;
+        loop {
+            match self.reader.poll_line(&mut self.stream)? {
+                LineEvent::Line(bytes) => {
+                    let text = std::str::from_utf8(&bytes)
+                        .map_err(|_| anyhow!("non-UTF8 response line from leader"))?;
+                    let doc = Json::parse(text.trim())
+                        .map_err(|e| anyhow!("malformed response line from leader: {e}"))?;
+                    if doc.get("ok").as_bool() == Some(true) {
+                        return Ok(doc.get("body").clone());
+                    }
+                    bail!(
+                        "fleet {op:?} request failed (code {}): {}",
+                        doc.get("code").as_usize().unwrap_or(0),
+                        doc.get("error").as_str().unwrap_or("unknown error"),
+                    );
+                }
+                LineEvent::TimedOut => continue,
+                LineEvent::Eof => bail!("fleet leader closed the connection"),
+                LineEvent::Oversized => bail!("oversized response line from leader"),
+            }
+        }
+    }
+}
+
+fn heartbeat_loop(addr: &str, worker: u64, stop: &AtomicBool) {
+    let mut conn = match FleetConn::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let body = || Json::obj(vec![("worker", Json::from(worker as usize))]);
+    while !stop.load(Ordering::SeqCst) {
+        // HEARTBEAT_MS period in small slices so stop is prompt
+        for _ in 0..(HEARTBEAT_MS / IDLE_POLL_MS) {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(IDLE_POLL_MS));
+        }
+        if conn.request("heartbeat", body()).is_err() {
+            return;
+        }
+    }
+}
+
+/// `fso fleet work --connect ADDR`: claim → evaluate → result until
+/// the leader drains (or the connection drops). `exit_after` is the
+/// recovery tests' deterministic kill switch: the process dies right
+/// after its Nth claim, *before* the result ships, so the leader must
+/// requeue exactly that key.
+pub fn run_worker(connect: &str, exit_after: Option<usize>) -> Result<()> {
+    let worker = std::process::id() as u64;
+    let mut conn = FleetConn::connect(connect)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let stop = Arc::clone(&stop);
+        let addr = connect.to_string();
+        std::thread::spawn(move || heartbeat_loop(&addr, worker, &stop))
+    };
+    eprintln!("[fleet] worker {worker} connected to {connect}");
+
+    // one deterministic evaluation stack per (enablement, seed) the
+    // leader ships — storeless: the leader is the only store writer
+    let mut services: HashMap<(&'static str, u64), EvalService> = HashMap::new();
+    let mut claimed = 0usize;
+    let mut completed = 0usize;
+    let claim_body = Json::obj(vec![("worker", Json::from(worker as usize))]);
+    loop {
+        let resp = match conn.request("claim", claim_body.clone()) {
+            Ok(r) => r,
+            // leader drained and closed the socket: a clean exit
+            Err(_) => break,
+        };
+        if resp.get("drain").as_bool() == Some(true) {
+            break;
+        }
+        let task = resp.get("task");
+        if matches!(task, Json::Null) {
+            std::thread::sleep(Duration::from_millis(IDLE_POLL_MS));
+            continue;
+        }
+        let spec = TaskSpec::from_json(task).context("decoding claimed task")?;
+        claimed += 1;
+        if exit_after == Some(claimed) {
+            eprintln!("[fleet] worker {worker} dying after claim #{claimed} (--exit-after)");
+            std::process::exit(17);
+        }
+        let svc = services
+            .entry((spec.enablement.name(), spec.seed))
+            .or_insert_with(|| EvalService::new(spec.enablement, spec.seed));
+        let bcfg = BackendConfig::new(spec.f_target_ghz, spec.util);
+        let key_json = Json::from(hex_key(spec.key).as_str());
+        let body = match svc.evaluate_trial(&spec.arch, bcfg, spec.workload.as_ref(), spec.trial) {
+            Ok(ev) => Json::obj(vec![("eval", eval_to_json(&ev)), ("key", key_json)]),
+            Err(e) => {
+                Json::obj(vec![("error", Json::from(format!("{e:#}").as_str())), ("key", key_json)])
+            }
+        };
+        match conn.request("result", body) {
+            Ok(_) => completed += 1,
+            Err(_) => break,
+        }
+    }
+    stop.store(true, Ordering::SeqCst);
+    let _ = hb.join();
+    eprintln!("[fleet] worker {worker} done claimed={claimed} completed={completed}");
+    Ok(())
+}
+
+// ---- the leader ----------------------------------------------------
+
+/// Configuration for [`run_leader`].
+pub struct LeaderOptions {
+    /// `HOST:PORT` to bind; port 0 picks an ephemeral port (the bound
+    /// address is printed to stdout as `listening on ADDR`, same as
+    /// `fso serve`).
+    pub listen: String,
+    /// Claim lease in milliseconds before a silent worker's task is
+    /// requeued.
+    pub lease_ms: u64,
+}
+
+impl Default for LeaderOptions {
+    fn default() -> LeaderOptions {
+        LeaderOptions { listen: "127.0.0.1:0".to_string(), lease_ms: DEFAULT_LEASE_MS }
+    }
+}
+
+/// Run an experiment as the fleet leader: bind the claim/result
+/// listener, hand the experiment closure the shared [`FleetQueue`] (it
+/// wires a [`FleetOracle`] into its `EvalService`), and drain the
+/// fleet when the experiment returns. The leader's listener state uses
+/// a storeless service — the experiment owns the real stores, exactly
+/// as a single-process run does, which is what keeps flushed shard
+/// bytes identical across worker counts.
+pub fn run_leader<T>(
+    enablement: Enablement,
+    seed: u64,
+    opts: &LeaderOptions,
+    experiment: impl FnOnce(Arc<FleetQueue>) -> Result<T>,
+) -> Result<T> {
+    drain::reset();
+    drain::install_signal_handlers();
+    let listener = TcpListener::bind(opts.listen.as_str())
+        .with_context(|| format!("binding fleet leader on {}", opts.listen))?;
+    let local = listener.local_addr()?;
+    println!("listening on {local}");
+    std::io::stdout().flush().ok();
+    listener.set_nonblocking(true)?;
+
+    let queue = Arc::new(FleetQueue::new(opts.lease_ms));
+    let service = Arc::new(EvalService::new(enablement, seed));
+    let state = Arc::new(ServerState {
+        service: Arc::clone(&service),
+        router: Arc::new(EvalRouter::start(Arc::clone(&service))),
+        stats: Arc::new(ServeStats::default()),
+        feat_dim: 0,
+        test_hooks: false,
+        fleet: Some(Arc::clone(&queue)),
+    });
+    eprintln!(
+        "[fleet] leader up addr={local} seed={seed} enablement={} lease_ms={}",
+        enablement.name(),
+        queue.lease_ms(),
+    );
+    let serve = {
+        let state = Arc::clone(&state);
+        std::thread::spawn(move || serve_loop(listener, state, None, 0.0))
+    };
+
+    let result = experiment(Arc::clone(&queue));
+
+    // drain in both orders of visibility: claims answered before the
+    // accept loop stops get `drain: true`; everything else sees the
+    // socket close when the connection threads are joined
+    queue.drain();
+    drain::request();
+    match serve.join() {
+        Ok(r) => r.context("fleet leader serve loop")?,
+        Err(_) => bail!("fleet leader serve loop panicked"),
+    }
+    drop(state);
+    let c = queue.counters();
+    eprintln!(
+        "[fleet] leader down tasks={} claims={} completions={} requeues={} duplicate_results={}",
+        c.tasks_enqueued, c.claims, c.completions, c.requeues, c.duplicate_results,
+    );
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::flow::FlowResult;
+    use crate::backend::pnr::{BackendResult, PowerBreakdown};
+    use crate::backend::synthesis::SynthResult;
+    use crate::simulators::SystemMetrics;
+
+    fn sample_eval(tag: f64) -> Evaluation {
+        Evaluation {
+            flow: FlowResult {
+                synth: SynthResult {
+                    cell_area_um2: 100.0 + tag,
+                    macro_area_um2: 50.0,
+                    upsize: 1.25,
+                    syn_power_w: 0.5,
+                    syn_fmax_ghz: 1.5,
+                    logic_delay_ps: 333.0 + tag / 7.0,
+                },
+                backend: BackendResult {
+                    f_effective_ghz: 0.9,
+                    f_max_ghz: 1.1,
+                    power: PowerBreakdown {
+                        internal_w: 0.1,
+                        switching_w: 0.2 + tag / 13.0,
+                        leakage_w: 0.05,
+                    },
+                    chip_area_mm2: 2.5,
+                    cell_area_um2: 120.0,
+                    macro_area_um2: 50.0,
+                },
+            },
+            system: SystemMetrics {
+                runtime_s: 1e-3 + tag / 1e6,
+                energy_j: 2e-3,
+                cycles: 1e6,
+                busy_frac: 0.75,
+                dram_bytes: 1e7,
+            },
+        }
+    }
+
+    fn sample_spec(key: u64) -> TaskSpec {
+        let space = Platform::Axiline.param_space();
+        let values: Vec<f64> = space.iter().map(|p| p.kind.from_unit(0.4)).collect();
+        TaskSpec {
+            key,
+            flow_key: key ^ 0xabcd,
+            arch: ArchConfig::new(Platform::Axiline, values),
+            f_target_ghz: 0.8,
+            util: 0.55,
+            workload: Some(WorkloadSpec::NonDnn(NonDnnWorkload {
+                algo: NonDnnAlgo::Svm,
+                features: 55,
+                samples: 512,
+                epochs: 3,
+            })),
+            trial: 2,
+            enablement: Enablement::Gf12,
+            seed: 0xdead_beef_cafe_f00d,
+        }
+    }
+
+    #[test]
+    fn task_spec_round_trips_through_the_wire_including_big_keys() {
+        // keys above 2^53 are exactly where a JSON-number encoding
+        // would silently corrupt: pin the hex-string path
+        let spec = sample_spec(0xffff_ffff_ffff_fff7);
+        let j = spec.to_json();
+        let line = j.to_string();
+        let back = TaskSpec::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.key, spec.key);
+        assert_eq!(back.flow_key, spec.flow_key);
+        assert_eq!(back.seed, spec.seed);
+        assert_eq!(back.trial, spec.trial);
+        assert_eq!(back.arch.platform, spec.arch.platform);
+        assert_eq!(back.arch.values, spec.arch.values);
+        assert_eq!(back.f_target_ghz.to_bits(), spec.f_target_ghz.to_bits());
+        assert_eq!(back.util.to_bits(), spec.util.to_bits());
+        assert_eq!(back.enablement, spec.enablement);
+        match (&back.workload, &spec.workload) {
+            (Some(WorkloadSpec::NonDnn(a)), Some(WorkloadSpec::NonDnn(b))) => {
+                assert_eq!(a.algo, b.algo);
+                assert_eq!(a.features, b.features);
+                assert_eq!(a.samples, b.samples);
+                assert_eq!(a.epochs, b.epochs);
+            }
+            other => panic!("workload did not round-trip: {other:?}"),
+        }
+
+        // DNN and no-workload variants round-trip through their tags
+        let mut dnn = sample_spec(7);
+        dnn.workload = Some(workloads::lookup("mobilenet").unwrap());
+        let back = TaskSpec::from_json(&dnn.to_json()).unwrap();
+        assert!(matches!(back.workload, Some(WorkloadSpec::Dnn(ref net)) if net.name == "mobilenet_v1"));
+        let mut none = sample_spec(8);
+        none.workload = None;
+        let back = TaskSpec::from_json(&none.to_json()).unwrap();
+        assert!(back.workload.is_none());
+    }
+
+    #[test]
+    fn evaluation_wire_codec_is_bit_exact() {
+        let ev = sample_eval(3.0);
+        let line = eval_to_json(&ev).to_string();
+        let back = eval_from_wire(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, ev);
+        let rendered_again = eval_to_json(&back).to_string();
+        assert_eq!(rendered_again, line, "decode→re-encode is byte-stable");
+        assert!(eval_from_wire(&Json::Null).is_err(), "junk payload is an error, not a panic");
+    }
+
+    #[test]
+    fn queue_claims_in_fifo_order_and_first_result_wins() {
+        let q = FleetQueue::new(60_000);
+        assert!(q.enqueue(sample_spec(1)));
+        assert!(q.enqueue(sample_spec(2)));
+        assert!(!q.enqueue(sample_spec(1)), "double-enqueue of a live key is refused");
+
+        assert_eq!(q.claim(10).map(|t| t.key), Some(1));
+        assert_eq!(q.claim(11).map(|t| t.key), Some(2));
+        assert_eq!(q.claim(12).map(|t| t.key), None, "dry queue claims nothing");
+
+        assert!(q.complete(1, Ok(sample_eval(1.0))));
+        assert!(!q.complete(1, Ok(sample_eval(9.0))), "late duplicate is dropped");
+        assert_eq!(q.await_result(1).unwrap(), sample_eval(1.0), "first result won");
+
+        assert!(q.complete(2, Err("flow exploded".to_string())));
+        let e = q.await_result(2).unwrap_err();
+        assert_eq!(format!("{e:#}"), "fleet worker evaluation failed: flow exploded");
+
+        let c = q.counters();
+        assert_eq!(
+            (c.tasks_enqueued, c.claims, c.completions, c.requeues, c.duplicate_results),
+            (2, 2, 2, 0, 1)
+        );
+    }
+
+    #[test]
+    fn expired_lease_requeues_and_heartbeat_prevents_it() {
+        let q = FleetQueue::new(40);
+        q.enqueue(sample_spec(1));
+        q.enqueue(sample_spec(2));
+        let a = q.claim(10).unwrap();
+        let b = q.claim(11).unwrap();
+        assert_eq!((a.key, b.key), (1, 2));
+
+        // worker 11 heartbeats through the lease window; worker 10 is
+        // silent, so only key 1 comes back up for grabs
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(15));
+            assert_eq!(q.heartbeat(11), 1);
+        }
+        let re = q.claim(12).expect("expired lease must requeue");
+        assert_eq!(re.key, 1);
+        assert_eq!(q.claim(12).map(|t| t.key), None, "heartbeated task stays claimed");
+        assert!(q.counters().requeues >= 1);
+
+        // the dead worker's result arriving *after* the requeue is the
+        // duplicate-hazard moment: first result (from anyone) wins
+        assert!(q.complete(1, Ok(sample_eval(1.0))));
+        assert!(!q.complete(1, Ok(sample_eval(2.0))));
+        assert_eq!(q.await_result(1).unwrap(), sample_eval(1.0));
+    }
+
+    #[test]
+    fn await_result_unblocks_across_threads() {
+        let q = Arc::new(FleetQueue::new(60_000));
+        q.enqueue(sample_spec(42));
+        let qc = Arc::clone(&q);
+        let waiter = std::thread::spawn(move || qc.await_result(42).unwrap());
+        let t = q.claim(7).unwrap();
+        assert_eq!(t.key, 42);
+        q.complete(42, Ok(sample_eval(5.0)));
+        assert_eq!(waiter.join().unwrap(), sample_eval(5.0));
+        assert!(q.enqueue(sample_spec(42)), "consumed key can be enqueued again");
+    }
+}

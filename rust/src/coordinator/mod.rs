@@ -12,6 +12,7 @@ pub mod datagen;
 pub mod dse_driver;
 pub mod eval_service;
 pub mod experiments;
+pub mod fleet;
 pub mod model_store;
 pub mod predict_server;
 pub mod server;
@@ -22,7 +23,8 @@ pub use cache_store::{CacheStore, CacheStoreStats};
 pub use coalesce::{EvalRouter, RouterClient, SingleFlight};
 pub use datagen::{generate, generate_sweep, generate_with, DatagenConfig, GeneratedData};
 pub use dse_driver::{DseDriver, DseProblem, SurrogateBundle};
-pub use eval_service::{EvalService, EvalStats, Evaluation, SurrogatePoint};
+pub use eval_service::{EvalService, EvalStats, Evaluation, RemoteOracle, SurrogatePoint};
+pub use fleet::{run_leader, run_worker, FleetOracle, FleetQueue, LeaderOptions};
 pub use model_store::{ModelKey, ModelStore, ModelStoreStats};
 pub use predict_server::{PredictClient, PredictServer, ServerStats};
 pub use server::{run_daemon, ServeOptions, ServeStats};

@@ -18,14 +18,20 @@ pub enum ServeFault {
     /// Truncate the line midway and append a non-UTF8 byte: a torn,
     /// invalid request that must yield a 400 response, not a panic.
     TornRequest,
+    /// Panic the connection thread that reads the next request line
+    /// (ISSUE 10 satellite): the accept loop must *join* the dead
+    /// handle and count it in `ServeStats::connection_panics` instead
+    /// of silently dropping it, and the daemon must keep serving.
+    PanicConnection,
 }
 
-// 0 = disarmed, 1 = TornRequest
+// 0 = disarmed, 1 = TornRequest, 2 = PanicConnection
 static ARMED: AtomicUsize = AtomicUsize::new(0);
 
 fn code(fault: ServeFault) -> usize {
     match fault {
         ServeFault::TornRequest => 1,
+        ServeFault::PanicConnection => 2,
     }
 }
 

@@ -76,6 +76,7 @@ pub fn run_daemon(
         stats: Arc::clone(&stats),
         feat_dim: opts.feat_dim,
         test_hooks: opts.test_hooks,
+        fleet: None,
     });
     eprintln!(
         "[serve] up addr={local} seed={} quota_burst={} quota_rate={}",
@@ -84,39 +85,7 @@ pub fn run_daemon(
         opts.quota_rate,
     );
 
-    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    let mut next_conn: u64 = 0;
-    while !drain::requested() {
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                next_conn += 1;
-                let cid = next_conn;
-                stats.connections.fetch_add(1, Ordering::Relaxed);
-                let st = Arc::clone(&state);
-                let bucket = match opts.quota_burst {
-                    Some(b) => TokenBucket::new(b, opts.quota_rate),
-                    None => TokenBucket::unlimited(),
-                };
-                workers.push(std::thread::spawn(move || {
-                    serve_connection(stream, peer, cid, st, bucket)
-                }));
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                workers.retain(|h| !h.is_finished());
-                std::thread::sleep(Duration::from_millis(POLL_MS));
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(e) => return Err(e).context("accepting serve connection"),
-        }
-    }
-
-    // drain: stop accepting, let in-flight requests finish, then flush
-    drop(listener);
-    let inflight = workers.len();
-    eprintln!("[serve] draining: joining {inflight} connection thread(s)");
-    for h in workers {
-        let _ = h.join();
-    }
+    serve_loop(listener, Arc::clone(&state), opts.quota_burst, opts.quota_rate)?;
     // the router thread quiesces before the stores flush so late
     // coalesced work cannot race the final render
     drop(state);
@@ -135,6 +104,76 @@ pub fn run_daemon(
         stats.quota_rejects.load(Ordering::Relaxed),
     );
     Ok(())
+}
+
+/// Accept/serve until the drain flag trips, then join every connection
+/// thread. Shared by `run_daemon` and the fleet leader
+/// ([`crate::coordinator::fleet::run_leader`]), whose listener must
+/// behave byte-for-byte like the plain daemon's.
+pub(crate) fn serve_loop(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    quota_burst: Option<usize>,
+    quota_rate: f64,
+) -> Result<()> {
+    let stats = Arc::clone(&state.stats);
+    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut next_conn: u64 = 0;
+    while !drain::requested() {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                next_conn += 1;
+                let cid = next_conn;
+                stats.connections.fetch_add(1, Ordering::Relaxed);
+                let st = Arc::clone(&state);
+                let bucket = match quota_burst {
+                    Some(b) => TokenBucket::new(b, quota_rate),
+                    None => TokenBucket::unlimited(),
+                };
+                workers.push(std::thread::spawn(move || {
+                    serve_connection(stream, peer, cid, st, bucket)
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                reap_finished(&mut workers, &stats);
+                std::thread::sleep(Duration::from_millis(POLL_MS));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("accepting serve connection"),
+        }
+    }
+
+    // drain: stop accepting, let in-flight requests finish
+    drop(listener);
+    let inflight = workers.len();
+    eprintln!("[serve] draining: joining {inflight} connection thread(s)");
+    for h in workers {
+        join_counting_panics(h, &stats);
+    }
+    Ok(())
+}
+
+/// Join (never just drop) every finished connection handle, so a
+/// connection-thread panic is counted instead of vanishing — and so
+/// the drain-time `inflight` log counts only live threads. The old
+/// `retain(|h| !h.is_finished())` discarded the `JoinHandle` and with
+/// it the panic payload.
+fn reap_finished(workers: &mut Vec<std::thread::JoinHandle<()>>, stats: &ServeStats) {
+    let mut i = 0;
+    while i < workers.len() {
+        if workers[i].is_finished() {
+            join_counting_panics(workers.swap_remove(i), stats);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn join_counting_panics(h: std::thread::JoinHandle<()>, stats: &ServeStats) {
+    if h.join().is_err() {
+        stats.connection_panics.fetch_add(1, Ordering::Relaxed);
+        eprintln!("[serve] connection thread panicked (counted in connection_panics)");
+    }
 }
 
 /// One response, plus what the request log line needs to say about it.
@@ -170,6 +209,9 @@ fn serve_connection(
         };
         match ev {
             Ok(LineEvent::Line(mut line)) => {
+                if fault::trip(ServeFault::PanicConnection) {
+                    panic!("injected connection-thread panic (server::fault test hook)");
+                }
                 if fault::trip(ServeFault::TornRequest) {
                     fault::tear_line(&mut line);
                 }
@@ -276,7 +318,30 @@ mod tests {
             stats: Arc::new(ServeStats::default()),
             feat_dim: 4,
             test_hooks: false,
+            fleet: None,
         }
+    }
+
+    #[test]
+    fn reap_finished_joins_and_counts_panicking_connection_threads() {
+        let stats = ServeStats::default();
+        let mut workers = vec![
+            std::thread::spawn(|| {}),
+            std::thread::spawn(|| panic!("boom")),
+            std::thread::spawn(|| std::thread::sleep(Duration::from_millis(400))),
+        ];
+        // wait for the first two to finish so the reap sees them
+        while !(workers[0].is_finished() && workers[1].is_finished()) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        reap_finished(&mut workers, &stats);
+        assert_eq!(workers.len(), 1, "only the live thread stays tracked");
+        assert_eq!(stats.connection_panics.load(Ordering::Relaxed), 1);
+        // drain-time joins run through the same panic accounting
+        for h in workers {
+            join_counting_panics(h, &stats);
+        }
+        assert_eq!(stats.connection_panics.load(Ordering::Relaxed), 1);
     }
 
     #[test]

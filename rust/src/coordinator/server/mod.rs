@@ -57,6 +57,10 @@ use crate::util::json::Json;
 pub struct ServeStats {
     /// Connections accepted over the daemon's lifetime.
     pub connections: AtomicUsize,
+    /// Connection threads that ended in a panic. Finished handles are
+    /// *joined* (not just dropped) so a panicking connection is
+    /// surfaced here instead of vanishing silently.
+    pub connection_panics: AtomicUsize,
     /// Requests answered `ok:true`.
     pub requests_ok: AtomicUsize,
     /// Requests answered `ok:false` (any error code).
@@ -72,6 +76,7 @@ impl ServeStats {
     /// response object's BTreeMap, so byte-deterministic).
     pub fn to_entries(&self) -> Vec<(&'static str, Json)> {
         vec![
+            ("connection_panics", Json::from(self.connection_panics.load(Ordering::Relaxed))),
             ("connections", Json::from(self.connections.load(Ordering::Relaxed))),
             ("oversized_lines", Json::from(self.oversized_lines.load(Ordering::Relaxed))),
             ("quota_rejects", Json::from(self.quota_rejects.load(Ordering::Relaxed))),

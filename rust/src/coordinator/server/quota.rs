@@ -67,6 +67,20 @@ mod tests {
     }
 
     #[test]
+    fn zero_burst_with_positive_rate_blackholes_every_request() {
+        // degenerate config (ISSUE 10 satellite): refill is capped at
+        // `burst`, so `burst = 0` with any positive rate admits
+        // *nothing*, ever — the daemon would answer only 429s. The CLI
+        // rejects `--quota-burst 0` with a positive rate up front
+        // (`fso serve`); this pins the behavior that makes it wrong.
+        let mut b = TokenBucket::new(0, 1e9);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        for _ in 0..3 {
+            assert!(!b.try_take(), "burst 0 blackholes regardless of refill rate");
+        }
+    }
+
+    #[test]
     fn refill_restores_admission_and_caps_at_burst() {
         let mut b = TokenBucket::new(2, 1e9); // effectively instant refill
         for _ in 0..50 {

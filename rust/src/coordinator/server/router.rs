@@ -14,6 +14,8 @@ use std::sync::Arc;
 use crate::backend::BackendConfig;
 use crate::coordinator::coalesce::{self, EvalRouter};
 use crate::coordinator::eval_service::EvalService;
+use crate::coordinator::fleet::{self, FleetQueue};
+use crate::coordinator::store::parse_hex_key;
 use crate::generators::{ArchConfig, Platform};
 use crate::util::json::Json;
 use crate::workloads::{self, WorkloadSpec};
@@ -36,6 +38,11 @@ pub struct ServerState {
     /// `FSO_SERVE_TEST_HOOKS=1`: expose the `hook` op (barrier/fault
     /// arming for the lifecycle tests). Off in any real deployment.
     pub test_hooks: bool,
+    /// Present when this daemon is a fleet leader (`fso fleet lead`):
+    /// the shared task queue behind the `claim`/`result`/`heartbeat`
+    /// ops. `None` in a plain `fso serve` daemon, where those ops
+    /// answer 404.
+    pub fleet: Option<Arc<FleetQueue>>,
 }
 
 /// Route table: `(op name, handler)` pairs compile into the dispatch
@@ -63,6 +70,9 @@ routes![
     ("stats", h_stats),
     ("predict", h_predict),
     ("eval", h_eval),
+    ("claim", h_claim),
+    ("result", h_result),
+    ("heartbeat", h_heartbeat),
     ("shutdown", h_shutdown),
     ("hook", h_hook),
 ];
@@ -209,6 +219,58 @@ fn h_eval(state: &ServerState, body: &Json) -> Result<Json, ProtoError> {
     ]))
 }
 
+// ---- fleet ops (ISSUE 10): leader side of the claim/lease protocol --
+
+fn want_fleet(state: &ServerState) -> Result<&Arc<FleetQueue>, ProtoError> {
+    state.fleet.as_ref().ok_or_else(|| ProtoError {
+        code: CODE_UNKNOWN_OP,
+        msg: "this daemon is not a fleet leader (start one with `fso fleet lead`)".to_string(),
+    })
+}
+
+fn want_worker_id(body: &Json) -> Result<u64, ProtoError> {
+    Ok(want_f64(body, "worker")?.max(0.0) as u64)
+}
+
+/// `{"worker": id}` → `{"drain": bool, "lease_ms": n, "task": spec|null}`.
+/// A dry queue answers `task: null` (the worker sleeps and re-polls);
+/// `drain: true` tells the worker to exit cleanly.
+fn h_claim(state: &ServerState, body: &Json) -> Result<Json, ProtoError> {
+    let q = want_fleet(state)?;
+    let worker = want_worker_id(body)?;
+    let draining = q.draining();
+    let task = if draining { None } else { q.claim(worker) };
+    Ok(Json::obj(vec![
+        ("drain", Json::from(draining)),
+        ("lease_ms", Json::from(q.lease_ms() as usize)),
+        ("task", task.map_or(Json::Null, |t| t.to_json())),
+    ]))
+}
+
+/// `{"key": hex, "eval": {...}}` on success, `{"key": hex, "error":
+/// msg}` on worker-side failure. First result per key wins; a late
+/// duplicate answers `recorded: false`.
+fn h_result(state: &ServerState, body: &Json) -> Result<Json, ProtoError> {
+    let q = want_fleet(state)?;
+    let key = want_str(body, "key")?;
+    let key = parse_hex_key(key)
+        .ok_or_else(|| ProtoError::bad_request("\"key\" must be a hex task key"))?;
+    let result = match body.get("error") {
+        Json::Null => Ok(fleet::eval_from_wire(body.get("eval"))
+            .map_err(|e| ProtoError::bad_request(format!("{e:#}")))?),
+        e => Err(e.as_str().unwrap_or("unknown worker error").to_string()),
+    };
+    Ok(Json::obj(vec![("recorded", Json::from(q.complete(key, result)))]))
+}
+
+/// `{"worker": id}` → `{"renewed": n}`: push every lease the worker
+/// holds out by one lease window.
+fn h_heartbeat(state: &ServerState, body: &Json) -> Result<Json, ProtoError> {
+    let q = want_fleet(state)?;
+    let worker = want_worker_id(body)?;
+    Ok(Json::obj(vec![("renewed", Json::from(q.heartbeat(worker)))]))
+}
+
 /// Begin a graceful drain, exactly as SIGTERM does: the response is
 /// written, in-flight requests on other connections complete, the
 /// listener stops accepting, and the stores flush before exit.
@@ -239,13 +301,15 @@ fn h_hook(state: &ServerState, body: &Json) -> Result<Json, ProtoError> {
             coalesce::hook::arm_router_barrier(n);
         }
         "torn_request" => fault::arm(ServeFault::TornRequest),
+        "panic_connection" => fault::arm(ServeFault::PanicConnection),
         "disarm" => {
             coalesce::hook::disarm();
             fault::disarm();
         }
         other => {
             return Err(ProtoError::bad_request(format!(
-                "unknown hook kind {other:?} (leader_barrier|router_barrier|torn_request|disarm)"
+                "unknown hook kind {other:?} \
+                 (leader_barrier|router_barrier|torn_request|panic_connection|disarm)"
             )))
         }
     }
@@ -267,6 +331,7 @@ mod tests {
             stats: Arc::new(ServeStats::default()),
             feat_dim: 4,
             test_hooks: false,
+            fleet: None,
         }
     }
 
@@ -333,6 +398,70 @@ mod tests {
             let e = dispatch(&st, &req("eval", bad)).unwrap_err();
             assert_eq!(e.code, CODE_BAD_REQUEST);
         }
+    }
+
+    #[test]
+    fn fleet_ops_route_only_on_a_leader_and_round_trip_a_task() {
+        // plain daemon: fleet ops are 404s, like any unknown op
+        let st = state();
+        for op in ["claim", "result", "heartbeat"] {
+            let e = dispatch(&st, &req(op, Json::obj(vec![("worker", Json::from(1.0))])))
+                .unwrap_err();
+            assert_eq!(e.code, CODE_UNKNOWN_OP, "{op} without a fleet queue");
+        }
+
+        // leader: claim hands out the queued task under a lease, the
+        // result op records it exactly once
+        let mut st = state();
+        let queue = Arc::new(FleetQueue::new(60_000));
+        st.fleet = Some(Arc::clone(&queue));
+        let space = Platform::Axiline.param_space();
+        let values: Vec<f64> = space.iter().map(|p| p.kind.from_unit(0.3)).collect();
+        queue.enqueue(crate::coordinator::fleet::TaskSpec {
+            key: 0xfff7_0000_0000_0001, // > 2^53: exercises the hex path
+            flow_key: 9,
+            arch: ArchConfig::new(Platform::Axiline, values),
+            f_target_ghz: 0.8,
+            util: 0.5,
+            workload: None,
+            trial: 0,
+            enablement: Enablement::Gf12,
+            seed: 11,
+        });
+        let worker = Json::obj(vec![("worker", Json::from(7.0))]);
+        let out = dispatch(&st, &req("claim", worker.clone())).unwrap();
+        assert_eq!(out.get("drain").as_bool(), Some(false));
+        let task = out.get("task");
+        assert_eq!(task.get("key").as_str(), Some("fff7000000000001"));
+        assert_eq!(dispatch(&st, &req("heartbeat", worker.clone())).unwrap()
+            .get("renewed").as_usize(), Some(1));
+        // dry queue: task null, still not draining
+        let out = dispatch(&st, &req("claim", worker)).unwrap();
+        assert!(matches!(out.get("task"), Json::Null));
+
+        let spec = crate::coordinator::fleet::TaskSpec::from_json(task).unwrap();
+        let ev = st.service
+            .evaluate_trial(&spec.arch, BackendConfig::new(spec.f_target_ghz, spec.util),
+                spec.workload.as_ref(), spec.trial)
+            .unwrap();
+        let body = Json::obj(vec![
+            ("eval", crate::coordinator::fleet::eval_to_json(&ev)),
+            ("key", Json::from("fff7000000000001")),
+        ]);
+        let out = dispatch(&st, &req("result", body.clone())).unwrap();
+        assert_eq!(out.get("recorded").as_bool(), Some(true));
+        let out = dispatch(&st, &req("result", body)).unwrap();
+        assert_eq!(out.get("recorded").as_bool(), Some(false), "late duplicate is dropped");
+        assert_eq!(queue.await_result(0xfff7_0000_0000_0001).unwrap(), ev);
+
+        // malformed payloads are 400s, not panics
+        let e = dispatch(&st, &req("result", Json::obj(vec![("key", Json::from("zz"))])))
+            .unwrap_err();
+        assert_eq!(e.code, CODE_BAD_REQUEST);
+        let e = dispatch(&st, &req("result",
+            Json::obj(vec![("key", Json::from("0f")), ("eval", Json::from(1.0))])))
+            .unwrap_err();
+        assert_eq!(e.code, CODE_BAD_REQUEST);
     }
 
     #[test]

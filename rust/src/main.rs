@@ -8,6 +8,7 @@
 //!   fso store     <compact|stats> --cache-dir DIR   (persistent-store maintenance)
 //!   fso serve     [--tree-router] | --listen HOST:PORT   (demos / evaluation daemon)
 //!   fso client    --connect HOST:PORT   (newline-JSON client for the daemon)
+//!   fso fleet     lead --target T --listen ADDR | work --connect ADDR   (distributed DSE)
 //!   fso bench     <run|compare|list> --suite NAME   (perf-gate suites)
 //!
 //! Global: --seed N, --quick, --out-dir DIR, --artifacts DIR
@@ -57,6 +58,7 @@ fn run(args: &Args) -> Result<()> {
         "store" => cmd_store(args),
         "serve" => cmd_serve(args),
         "client" => cmd_client(args),
+        "fleet" => cmd_fleet(args),
         "bench" => cmd_bench(args),
         _ => {
             println!("{}", HELP.trim());
@@ -88,6 +90,10 @@ USAGE:
   fso serve --listen HOST:PORT [--seed N] [--enablement gf12|ng45]
             [--cache-dir DIR] [--quota-burst N] [--quota-rate R]
   fso client --connect HOST:PORT
+  fso fleet lead --target <axiline-svm|vta> --listen HOST:PORT [--lease-ms N]
+                 [--quick] [--archs N] [--iters N] [--seed N] [--out-dir DIR]
+                 [--cache-dir DIR] [--strategy ...] [--workload NAME]
+  fso fleet work --connect HOST:PORT [--exit-after N]
   fso bench run     --suite NAME [--quick] [--out FILE]
   fso bench compare --suite NAME --baseline FILE [--candidate FILE]
                     [--threshold 0.15] [--derived-only] [--quick] [--out FILE]
@@ -165,6 +171,19 @@ experiments; unknown names list the registry. Every (strategy,
 workload, enablement) cell keeps the determinism contract: a fixed
 --seed yields byte-identical rows and Pareto fronts at any worker
 count, with or without --coalesce, cold or warm --cache-dir.
+
+`fso fleet` scales a DSE run across processes (ISSUE 10): `fso fleet
+lead` runs the full experiment (same targets as `fso dse`) but ships
+every full oracle miss — memo cold AND store cold — to worker
+processes over the daemon protocol's claim/result/heartbeat ops, while
+keeping the strategy loop, single-flight table, and stores (--cache-dir)
+leader-side. `fso fleet work --connect ADDR` claims tasks under a
+lease (--lease-ms on the leader), heartbeats while evaluating, and
+streams back bit-exact evaluations; a worker that dies mid-task simply
+has its key requeued when the lease expires. Fixed --seed + any worker
+count (1, 2, 4, ...) = byte-identical CSV rows, Pareto fronts, and
+flushed shard files — the single-process `fso dse` bytes. --exit-after
+N makes a worker die right after its Nth claim (recovery testing).
 
 `fso bench` drives the named perf-gate suites (see `fso bench list`):
 `run` executes a suite and writes its BENCH_<suite>.json trajectory
@@ -454,7 +473,17 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
         inflight: args.usize_or("inflight", 4)?,
         strategy: StrategyKind::from_name(args.get_or("strategy", "motpe"))?,
         workload: args.get("workload").map(String::from),
+        archs: opt_usize(args, "archs")?,
+        iters: opt_usize(args, "iters")?,
     })
+}
+
+/// Optional integer-valued option: `None` when absent, an error when
+/// present but unparseable.
+fn opt_usize(args: &Args, name: &str) -> Result<Option<usize>> {
+    args.get(name)
+        .map(|v| v.parse().with_context(|| format!("--{name} wants an integer, got {v:?}")))
+        .transpose()
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -614,6 +643,24 @@ fn cmd_serve_daemon(args: &Args) -> Result<()> {
     let listen = args.get("listen").expect("checked by cmd_serve").to_string();
     let enablement = Enablement::from_name(args.get_or("enablement", "gf12"))?;
     let seed = args.u64_or("seed", 2023)?;
+    let quota_burst: Option<usize> = args
+        .get("quota-burst")
+        .map(|v| {
+            v.parse()
+                .with_context(|| format!("--quota-burst wants a count, got {v:?}"))
+        })
+        .transpose()?;
+    let quota_rate = args.f64_or("quota-rate", 0.0)?;
+    // degenerate config guard (ISSUE 10 satellite): the token bucket
+    // caps refill at `burst`, so burst 0 admits nothing forever — any
+    // positive rate would silently turn the daemon into a 429 machine.
+    // Reject up front, before the surrogate fitting below does work.
+    if quota_burst == Some(0) && quota_rate > 0.0 {
+        bail!(
+            "--quota-burst 0 with --quota-rate {quota_rate} admits no requests ever \
+             (refill is capped at the burst); raise --quota-burst or drop --quota-rate"
+        );
+    }
     // the predict op needs a surrogate bundle: fit the same small
     // Axiline tree family the --tree-router demo uses (offline, no
     // PJRT artifacts), deterministic in --seed
@@ -636,14 +683,8 @@ fn cmd_serve_daemon(args: &Args) -> Result<()> {
     );
     let opts = fso::coordinator::ServeOptions {
         listen,
-        quota_burst: args
-            .get("quota-burst")
-            .map(|v| {
-                v.parse()
-                    .with_context(|| format!("--quota-burst wants a count, got {v:?}"))
-            })
-            .transpose()?,
-        quota_rate: args.f64_or("quota-rate", 0.0)?,
+        quota_burst,
+        quota_rate,
         feat_dim: g.dataset.rows.first().map_or(0, |r| r.features_vec().len()),
         test_hooks: std::env::var("FSO_SERVE_TEST_HOOKS").as_deref() == Ok("1"),
     };
@@ -680,6 +721,63 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
     out.flush()?;
     Ok(())
+}
+
+/// `fso fleet lead|work`: the distributed evaluation fleet (ISSUE 10).
+/// The leader runs a DSE experiment (same targets as `fso dse`) with
+/// every full oracle miss dispatched to connected workers; workers
+/// claim, evaluate, and stream back bit-exact results under a
+/// heartbeat-renewed lease.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use fso::coordinator::fleet::{self, FleetOracle, LeaderOptions};
+    let action = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("fleet action required (`fso fleet lead` or `fso fleet work`)")?;
+    match action {
+        "lead" => {
+            let listen = args
+                .get("listen")
+                .context("--listen HOST:PORT required for `fso fleet lead`")?
+                .to_string();
+            let lease_ms = args.u64_or("lease-ms", fleet::DEFAULT_LEASE_MS)?;
+            anyhow::ensure!(lease_ms > 0, "--lease-ms must be positive");
+            let opts = exp_options(args)?;
+            opts.ensure_out_dir()?;
+            let target = args.get_or("target", "axiline-svm").to_string();
+            // display enablement mirrors the target's experiment
+            // (fig11 explores NG45, fig12 GF12); workers get the real
+            // enablement/seed inside every task
+            let enablement = match target.as_str() {
+                "axiline-svm" => Enablement::Ng45,
+                "vta" => Enablement::Gf12,
+                other => bail!("unknown fleet target {other:?} (axiline-svm|vta)"),
+            };
+            let lopts = LeaderOptions { listen, lease_ms };
+            fleet::run_leader(enablement, opts.seed, &lopts, |queue| {
+                let remote = Some(Arc::new(FleetOracle::new(queue)) as Arc<dyn fso::coordinator::RemoteOracle>);
+                match target.as_str() {
+                    "axiline-svm" => experiments::dse::fig11_axiline_svm_with(&opts, remote),
+                    _ => experiments::dse::fig12_vta_with(&opts, remote),
+                }
+            })
+        }
+        "work" => {
+            let connect = args
+                .get("connect")
+                .context("--connect HOST:PORT required for `fso fleet work`")?;
+            let exit_after = match args.get("exit-after") {
+                None => None,
+                Some(v) => Some(
+                    v.parse::<usize>()
+                        .with_context(|| format!("--exit-after wants a count, got {v:?}"))?,
+                ),
+            };
+            fleet::run_worker(connect, exit_after)
+        }
+        other => bail!("unknown fleet action {other:?} (lead|work)"),
+    }
 }
 
 /// `fso serve --tree-router`: demo the generic `EvalRouter` (ISSUE 5)

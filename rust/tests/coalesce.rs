@@ -155,6 +155,53 @@ fn leader_panic_propagates_to_every_waiter_and_table_stays_clean() {
 }
 
 #[test]
+fn waiters_receive_the_leaders_full_error_context_chain() {
+    let _g = lock_hooks();
+    // ISSUE 10 satellite: a leader failure used to cross the flight as
+    // one flattened string, so waiters lost the anyhow context chain
+    // (`"loading shard 3"` and friends). Pin the full waiter-side
+    // rendering: every layer of the leader's chain, in order, behind
+    // the `coalesced leader failed` marker.
+    let sf: SingleFlight<u64> = SingleFlight::new();
+    const WAITERS: usize = 2;
+    hook::arm_leader_barrier(WAITERS);
+    let msgs: Vec<(bool, String)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..WAITERS + 1)
+            .map(|_| {
+                let sf = &sf;
+                scope.spawn(move || {
+                    let err = sf
+                        .run(0xE44, || -> anyhow::Result<u64> {
+                            Err(anyhow::anyhow!("disk exploded")
+                                .context("loading shard 3")
+                                .context("oracle cache read"))
+                        })
+                        .expect_err("every caller must observe the failure");
+                    let msg = format!("{err:#}");
+                    (msg.starts_with("coalesced leader failed"), msg)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    hook::disarm();
+    let (coalesced, led): (Vec<_>, Vec<_>) = msgs.into_iter().partition(|(c, _)| *c);
+    assert_eq!(led.len(), 1, "exactly one caller led the failing flight");
+    assert_eq!(
+        led[0].1, "oracle cache read: loading shard 3: disk exploded",
+        "the leader keeps its original error"
+    );
+    assert_eq!(coalesced.len(), WAITERS);
+    for (_, msg) in &coalesced {
+        assert_eq!(
+            msg,
+            "coalesced leader failed: oracle cache read: loading shard 3: disk exploded",
+            "waiter lost part of the leader's context chain"
+        );
+    }
+}
+
+#[test]
 fn coalesced_evaluate_runs_oracle_once_and_writes_store_once() {
     let _g = lock_hooks();
     let dir = tmp_dir("evaluate");

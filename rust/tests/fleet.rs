@@ -1,0 +1,288 @@
+//! Distributed evaluation fleet tests (ISSUE 10): a real `fso fleet
+//! lead` child process driving real `fso fleet work` child processes
+//! over TCP, proving the fleet's two headline contracts:
+//!
+//! * determinism — a fixed seed produces byte-identical experiment
+//!   CSVs and flushed store shards whether the oracle runs in-process
+//!   (`fso dse`) or across 1, 2, or 4 workers;
+//! * recovery — a worker killed between claim and result has its
+//!   lease expire and its key requeued, and the run still matches the
+//!   single-process bytes.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shared experiment knobs: the smallest fig11 run that still sweeps
+/// datagen + surrogate fit + DSE ground-truthing through the oracle.
+const KNOBS: [&str; 9] = [
+    "--target",
+    "axiline-svm",
+    "--quick",
+    "--archs",
+    "4",
+    "--iters",
+    "24",
+    "--seed",
+    "2023",
+];
+
+fn fso() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_fso"))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fso-fleet-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The single-process reference run: `fso dse` with the exact knobs
+/// the leader gets.
+fn run_single(out: &Path, cache: &Path) {
+    let o = fso()
+        .arg("dse")
+        .args(KNOBS)
+        .arg("--out-dir")
+        .arg(out)
+        .arg("--cache-dir")
+        .arg(cache)
+        .stdin(Stdio::null())
+        .output()
+        .expect("run fso dse");
+    assert!(
+        o.status.success(),
+        "single-process dse failed:\n{}",
+        String::from_utf8_lossy(&o.stderr)
+    );
+}
+
+struct Leader {
+    child: Child,
+    addr: String,
+    stderr: Arc<Mutex<String>>,
+    stderr_drain: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Leader {
+    /// Spawn `fso fleet lead --listen 127.0.0.1:0 <knobs>`, parse the
+    /// bound address off the first stdout line, and park reader
+    /// threads on both pipes so the experiment's prints can never fill
+    /// a pipe and stall the leader.
+    fn start(out: &Path, cache: &Path, lease_ms: Option<&str>) -> Leader {
+        let mut cmd = fso();
+        cmd.args(["fleet", "lead", "--listen", "127.0.0.1:0"]);
+        cmd.args(KNOBS);
+        cmd.arg("--out-dir").arg(out).arg("--cache-dir").arg(cache);
+        if let Some(ms) = lease_ms {
+            cmd.args(["--lease-ms", ms]);
+        }
+        cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::piped());
+        let mut child = cmd.spawn().expect("spawn fso fleet lead");
+        let mut rdr = BufReader::new(child.stdout.take().expect("leader stdout"));
+        let mut line = String::new();
+        rdr.read_line(&mut line).expect("leader bind line");
+        let addr = line
+            .trim()
+            .strip_prefix("listening on ")
+            .unwrap_or_else(|| panic!("unexpected leader banner: {line:?}"))
+            .to_string();
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            let _ = rdr.read_to_string(&mut sink);
+        });
+        let stderr = Arc::new(Mutex::new(String::new()));
+        let pipe = child.stderr.take().expect("leader stderr");
+        let stderr_drain = {
+            let stderr = Arc::clone(&stderr);
+            std::thread::spawn(move || {
+                let mut text = String::new();
+                let _ = BufReader::new(pipe).read_to_string(&mut text);
+                stderr.lock().unwrap().push_str(&text);
+            })
+        };
+        Leader { child, addr, stderr, stderr_drain: Some(stderr_drain) }
+    }
+
+    fn wait_success(&mut self, limit: Duration) {
+        let t0 = Instant::now();
+        loop {
+            if let Some(status) = self.child.try_wait().expect("try_wait leader") {
+                // the pipe EOFs once the process is gone — join the
+                // drain thread so `stderr` holds the complete log
+                // before any assertion reads it
+                if let Some(h) = self.stderr_drain.take() {
+                    let _ = h.join();
+                }
+                assert!(
+                    status.success(),
+                    "leader failed ({status}):\n{}",
+                    self.stderr.lock().unwrap()
+                );
+                return;
+            }
+            assert!(
+                t0.elapsed() < limit,
+                "leader did not finish within {limit:?}:\n{}",
+                self.stderr.lock().unwrap()
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    fn stderr_text(&self) -> String {
+        self.stderr.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Leader {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_worker(addr: &str, exit_after: Option<&str>) -> Child {
+    let mut cmd = fso();
+    cmd.args(["fleet", "work", "--connect", addr]);
+    if let Some(n) = exit_after {
+        cmd.args(["--exit-after", n]);
+    }
+    cmd.stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn fso fleet work")
+}
+
+fn wait_exit(mut child: Child, limit: Duration) -> ExitStatus {
+    let t0 = Instant::now();
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait worker") {
+            return status;
+        }
+        if t0.elapsed() >= limit {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("worker did not exit within {limit:?}");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Every file under a store directory (recursive), keyed by relative
+/// path — minus the lock files, whose content is the owning process id
+/// and legitimately differs.
+fn store_files(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        let Ok(rd) = std::fs::read_dir(dir) else { return };
+        for entry in rd.flatten() {
+            let path = entry.path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                if rel.ends_with(".lock") {
+                    continue;
+                }
+                out.insert(rel, std::fs::read(&path).expect("read store file"));
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+#[test]
+fn fleet_matches_the_single_process_run_byte_for_byte_at_any_worker_count() {
+    let base_out = tmp_dir("base-out");
+    let base_cache = tmp_dir("base-cache");
+    run_single(&base_out, &base_cache);
+    let want_csv = std::fs::read(base_out.join("fig11.csv")).expect("baseline fig11.csv");
+    let want_store = store_files(&base_cache);
+    assert!(!want_store.is_empty(), "baseline run must flush a store");
+
+    for n in [1usize, 2, 4] {
+        let out = tmp_dir(&format!("w{n}-out"));
+        let cache = tmp_dir(&format!("w{n}-cache"));
+        let mut leader = Leader::start(&out, &cache, None);
+        let workers: Vec<Child> =
+            (0..n).map(|_| spawn_worker(&leader.addr, None)).collect();
+        leader.wait_success(Duration::from_secs(300));
+        // workers see the drain (claim answered with drain:true, or
+        // EOF once the listener joins) and exit clean on their own
+        for w in workers {
+            let status = wait_exit(w, Duration::from_secs(30));
+            assert!(status.success(), "worker must exit clean after drain: {status}");
+        }
+        let got_csv = std::fs::read(out.join("fig11.csv")).expect("fleet fig11.csv");
+        assert_eq!(
+            got_csv, want_csv,
+            "fig11.csv must be byte-identical with {n} worker(s)"
+        );
+        assert_eq!(
+            store_files(&cache),
+            want_store,
+            "flushed store shards must be byte-identical with {n} worker(s)"
+        );
+        let _ = std::fs::remove_dir_all(&out);
+        let _ = std::fs::remove_dir_all(&cache);
+    }
+    let _ = std::fs::remove_dir_all(&base_out);
+    let _ = std::fs::remove_dir_all(&base_cache);
+}
+
+#[test]
+fn a_killed_workers_lease_expires_requeues_and_the_run_still_matches() {
+    let base_out = tmp_dir("kill-base-out");
+    let base_cache = tmp_dir("kill-base-cache");
+    run_single(&base_out, &base_cache);
+    let want_csv = std::fs::read(base_out.join("fig11.csv")).expect("baseline fig11.csv");
+    let want_store = store_files(&base_cache);
+
+    let out = tmp_dir("kill-out");
+    let cache = tmp_dir("kill-cache");
+    // short lease so the casualty's abandoned claim requeues fast
+    let mut leader = Leader::start(&out, &cache, Some("300"));
+    let casualty = spawn_worker(&leader.addr, Some("1"));
+    let survivor = spawn_worker(&leader.addr, None);
+    leader.wait_success(Duration::from_secs(300));
+
+    let died = wait_exit(casualty, Duration::from_secs(30));
+    assert_eq!(
+        died.code(),
+        Some(17),
+        "--exit-after worker must die with its marker code, got {died}"
+    );
+    let status = wait_exit(survivor, Duration::from_secs(30));
+    assert!(status.success(), "surviving worker must exit clean: {status}");
+
+    let stderr = leader.stderr_text();
+    let summary = stderr
+        .lines()
+        .find(|l| l.contains("[fleet] leader down"))
+        .unwrap_or_else(|| panic!("no leader summary in stderr:\n{stderr}"));
+    let requeues: usize = summary
+        .split("requeues=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable leader summary: {summary}"));
+    assert!(requeues >= 1, "the abandoned claim must be requeued: {summary}");
+
+    let got_csv = std::fs::read(out.join("fig11.csv")).expect("fleet fig11.csv");
+    assert_eq!(got_csv, want_csv, "fig11.csv must survive a worker death byte-for-byte");
+    assert_eq!(
+        store_files(&cache),
+        want_store,
+        "flushed store shards must survive a worker death byte-for-byte"
+    );
+
+    for d in [&base_out, &base_cache, &out, &cache] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

@@ -319,6 +319,75 @@ fn torn_and_oversized_requests_get_error_responses_daemon_survives() {
     assert_eq!(parse_line(health.trim()).get("ok").as_bool(), Some(true));
 }
 
+#[test]
+fn connection_thread_panic_is_joined_counted_and_daemon_survives() {
+    // ISSUE 10 satellite: the accept loop used to drop finished
+    // connection `JoinHandle`s via `retain(|h| !h.is_finished())`, so
+    // a panicked connection thread vanished — payload, accounting and
+    // all. Now every handle is joined and panics land in the
+    // `connection_panics` counter while the daemon keeps serving.
+    let daemon = Daemon::start(&[], true);
+    let armed = daemon.run_client(&request(
+        1,
+        "hook",
+        Json::obj(vec![("kind", Json::from("panic_connection"))]),
+    ));
+    assert_eq!(parse_line(armed.trim()).get("ok").as_bool(), Some(true));
+
+    // the next request line trips the one-shot fault: its connection
+    // thread panics before writing a response, so the socket sees EOF
+    let mut raw = std::net::TcpStream::connect(&daemon.addr).expect("raw connect");
+    raw.write_all(request(2, "health", Json::Null).as_bytes()).expect("write request");
+    let mut resp = String::new();
+    let n = BufReader::new(raw.try_clone().expect("clone"))
+        .read_line(&mut resp)
+        .expect("read from killed connection");
+    assert_eq!(n, 0, "the panicking connection must die responseless, got {resp:?}");
+    drop(raw);
+
+    // the accept loop reaps the dead thread on its idle poll tick and
+    // counts the panic; poll the daemon's own stats until it lands
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = daemon.run_client(&request(3, "stats", Json::Null));
+        let body = parse_line(stats.trim());
+        let panics = body.get("body").get("connection_panics").as_usize().unwrap_or(0);
+        if panics == 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "connection_panics never reached 1 (last saw {panics})"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // one dead connection thread, zero collateral damage
+    let health = daemon.run_client(&request(4, "health", Json::Null));
+    assert_eq!(parse_line(health.trim()).get("ok").as_bool(), Some(true));
+}
+
+#[test]
+fn serve_cli_rejects_the_blackhole_quota_config() {
+    // ISSUE 10 satellite: the token bucket caps refill at `burst`, so
+    // `--quota-burst 0` with a positive `--quota-rate` admits nothing,
+    // ever — a daemon that only answers 429s. The CLI must refuse to
+    // boot it instead of silently blackholing every client.
+    let out = Command::new(env!("CARGO_BIN_EXE_fso"))
+        .args([
+            "serve", "--listen", "127.0.0.1:0", "--quota-burst", "0", "--quota-rate", "5",
+        ])
+        .stdin(Stdio::null())
+        .output()
+        .expect("run fso serve");
+    assert!(!out.status.success(), "blackhole quota config must be rejected: {out:?}");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("admits no requests"),
+        "rejection must explain the blackhole: {err}"
+    );
+}
+
 fn tmp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("fso-serve-{}-{tag}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
